@@ -1,0 +1,47 @@
+//! §IV footnote 3: the multiplication pipeline.
+//!
+//! Places a regular adder in partition `p_{N+1}` so that the multiplier
+//! partitions start product `i+1` while the adder finishes product `i`.
+//! Prints the exact schedule for the first jobs and the steady-state
+//! throughput gain over unpipelined MultPIM.
+//!
+//! ```sh
+//! cargo run --release --example pipeline_throughput
+//! ```
+
+use multpim::algorithms::costmodel;
+use multpim::coordinator::PipelineModel;
+
+fn main() {
+    for n in [8u32, 16, 32] {
+        let p = PipelineModel::new(n);
+        println!("=== N = {n} ===");
+        println!(
+            "  stage M (init + first N stages): {} cycles",
+            p.mul_stage_cycles()
+        );
+        println!("  stage A (ripple add in p_N+1):   {} cycles", p.add_stage_cycles());
+        println!("  initiation interval:              {} cycles", p.initiation_interval());
+        println!(
+            "  unpipelined MultPIM (Table I):    {} cycles",
+            costmodel::multpim_latency(n as u64)
+        );
+        println!(
+            "  steady-state speedup:             {:.2}x",
+            p.steady_state_speedup()
+        );
+        let sched = p.schedule(4);
+        for (i, j) in sched.iter().enumerate() {
+            println!(
+                "  job {i}: mul [{:>5}, {:>5})  add [{:>5}, {:>5})",
+                j.mul_start, j.mul_end, j.add_start, j.add_end
+            );
+        }
+        let k = 1000;
+        println!(
+            "  1000 products: {} cycles pipelined vs {} unpipelined\n",
+            p.total_cycles(k),
+            costmodel::multpim_latency(n as u64) * k as u64
+        );
+    }
+}

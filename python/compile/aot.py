@@ -1,0 +1,101 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+
+Artifacts (shapes chosen to cover the repo's examples and benches; the
+manifest records them for the Rust side):
+
+* ``gate_trace_c{C}_w{W}_t{T}.hlo.txt`` — the crossbar hardware golden
+  model: fixed-size trace executor.
+* ``matvec_m{M}_n{n}_b{N}.hlo.txt`` — fixed-point matvec golden model.
+* ``mul_m{M}_b{N}.hlo.txt`` — elementwise product golden model.
+* ``manifest.txt`` — one line per artifact: ``name kind shape...``.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Default artifact shapes. gate_trace: C columns, W uint32 words (32 rows
+# each), T ops. Sized for the 16-bit MultPIM multiplier over 256 rows.
+GATE_TRACE_SHAPES = [
+    (256, 8, 6144),
+]
+# matvec: (m rows, n elements, N bits).
+MATVEC_SHAPES = [
+    (32, 8, 32),
+]
+# elementwise mul: (m pairs, N bits).
+MUL_SHAPES = [
+    (256, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir, name, text):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):9d} chars  {path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    for c, w, t in GATE_TRACE_SHAPES:
+        state = jax.ShapeDtypeStruct((c, w), jnp.uint32)
+        ops = jax.ShapeDtypeStruct((t, 6), jnp.int32)
+        lowered = jax.jit(model.gate_trace_model).lower(state, ops)
+        name = f"gate_trace_c{c}_w{w}_t{t}.hlo.txt"
+        write(args.out_dir, name, to_hlo_text(lowered))
+        manifest.append({"file": name, "kind": "gate_trace", "c": c, "w": w, "t": t})
+
+    for m, n, nb in MATVEC_SHAPES:
+        a = jax.ShapeDtypeStruct((m, n), jnp.uint64)
+        x = jax.ShapeDtypeStruct((n,), jnp.uint64)
+        fn = functools.partial(model.matvec_model, n_bits=nb)
+        lowered = jax.jit(fn).lower(a, x)
+        name = f"matvec_m{m}_n{n}_b{nb}.hlo.txt"
+        write(args.out_dir, name, to_hlo_text(lowered))
+        manifest.append({"file": name, "kind": "matvec", "m": m, "n": n, "bits": nb})
+
+    for m, nb in MUL_SHAPES:
+        a = jax.ShapeDtypeStruct((m,), jnp.uint64)
+        lowered = jax.jit(model.mul_model).lower(a, a)
+        name = f"mul_m{m}_b{nb}.hlo.txt"
+        write(args.out_dir, name, to_hlo_text(lowered))
+        manifest.append({"file": name, "kind": "mul", "m": m, "bits": nb})
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: bit-packed stateful-logic gate-trace executor.
+
+This is the *hardware golden model* of the memristive crossbar: the same
+semantics as the Rust cycle-accurate simulator, vectorized over 32 crossbar
+rows per uint32 word. The Rust runtime executes the AOT-compiled artifact
+and cross-checks it bit-exactly against the native simulator (triple
+agreement with the arithmetic golden model closes the loop).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the crossbar's
+row-parallelism maps to the word dimension (VPU lanes), and the whole
+``[C, W]`` state block stays resident in VMEM (e.g. 192x8x4 B = 6 KiB),
+so each trace op is a handful of on-chip vector ops with no HBM traffic.
+``interpret=True`` keeps the kernel executable on the CPU PJRT plugin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import opcodes as oc
+from .ref import gate_eval
+
+
+def _gate_trace_kernel(ops_ref, state_ref, out_ref):
+    # The state block lives in the output ref (aliasing the input copy) so
+    # every op reads its operands from the freshest values.
+    out_ref[...] = state_ref[...]
+    num_ops = ops_ref.shape[0]
+
+    def body(t, carry):
+        op = ops_ref[t]
+        opcode, no_init = op[0], op[5]
+        # Under jax_enable_x64, dynamic-slice starts must share one index
+        # type; widen the packed int32 columns.
+        i1, i2, i3, dst = (op[k].astype(jnp.int64) for k in (1, 2, 3, 4))
+        a = pl.load(out_ref, (pl.dslice(i1, 1), slice(None)))
+        b = pl.load(out_ref, (pl.dslice(i2, 1), slice(None)))
+        c = pl.load(out_ref, (pl.dslice(i3, 1), slice(None)))
+        old = pl.load(out_ref, (pl.dslice(dst, 1), slice(None)))
+        res = gate_eval(opcode, a, b, c)
+        new = jnp.where(no_init != 0, old & res, res)
+        new = jnp.where(opcode == oc.NOP, old, new)
+        pl.store(out_ref, (pl.dslice(dst, 1), slice(None)), new)
+        return carry
+
+    jax.lax.fori_loop(0, num_ops, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gate_trace(state, ops):
+    """Execute ``ops`` (int32[T, 6]) over ``state`` (uint32[C, W])."""
+    return pl.pallas_call(
+        _gate_trace_kernel,
+        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+        interpret=True,
+    )(ops, state)

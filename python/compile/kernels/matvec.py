@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: fixed-point matrix-vector golden model.
+
+The *arithmetic* golden model for the §VI engine: exact N-bit fixed-point
+inner products with 2N-bit wrapping accumulation, matching
+``fixedpoint::inner_product_mod`` in the Rust crate bit-for-bit.
+
+TPU adaptation: rows tile into VMEM blocks; the integer multiply-accumulate
+runs on the VPU (the MXU path applies to the bf16 variant only, which this
+reproduction does not need — the paper's arithmetic is exact fixed point).
+``interpret=True`` keeps it executable on the CPU PJRT plugin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(mask_ref, a_ref, x_ref, o_ref):
+    a = a_ref[...]
+    x = x_ref[...]
+    acc = jnp.sum(a * x[None, :], axis=1, dtype=jnp.uint64)
+    o_ref[...] = acc & mask_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def matvec_fixed(a, x, n_bits: int):
+    """``(A @ x) mod 2^(2*n_bits)`` for uint64 inputs (n_bits <= 32)."""
+    assert 2 <= n_bits <= 32
+    mask = jnp.uint64(0xFFFFFFFFFFFFFFFF if n_bits == 32 else (1 << (2 * n_bits)) - 1)
+    m = a.shape[0]
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint64),
+        interpret=True,
+    )(mask[None], a, x)
+
+
+def _mul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] * b_ref[...]
+
+
+@jax.jit
+def mul_exact(a, b):
+    """Elementwise exact uint64 product (verifies multiplier batches)."""
+    return pl.pallas_call(
+        _mul_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.uint64),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,23 @@
+"""Shared gate-trace opcode table.
+
+This is the wire format between the Rust coordinator and the JAX/Pallas
+hardware golden model. It MUST stay in sync with
+``rust/src/runtime/trace.rs`` (a Rust unit test pins the same values).
+
+A trace is an ``int32[T, 6]`` array of rows ``(opcode, in1, in2, in3, out,
+no_init)``. The crossbar state is ``uint32[C, W]``: column ``c`` packs 32
+crossbar rows per word. Unused inputs must be 0. ``NOP`` rows pad traces to
+the artifact's fixed ``T``.
+"""
+
+NOP = 0
+NOT = 1
+NOR2 = 2
+NOR3 = 3
+OR2 = 4
+NAND2 = 5
+MIN3 = 6
+INIT0 = 7
+INIT1 = 8
+
+ALL = [NOP, NOT, NOR2, NOR3, OR2, NAND2, MIN3, INIT0, INIT1]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: ``pytest`` asserts the Pallas kernels
+(under ``interpret=True``) agree bit-exactly, and the Rust integration tests
+assert the cycle-accurate simulator agrees with the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import opcodes as oc
+
+
+def gate_eval(opcode, a, b, c):
+    """Evaluate one stateful-logic gate on bit-packed uint32 words."""
+    full = jnp.uint32(0xFFFFFFFF)
+    results = [
+        a,  # NOP placeholder (never selected for writes)
+        ~a,  # NOT
+        ~(a | b),  # NOR2
+        ~(a | b | c),  # NOR3
+        a | b,  # OR2
+        ~(a & b),  # NAND2
+        ~((a & b) | (a & c) | (b & c)),  # MIN3
+        jnp.zeros_like(a),  # INIT0
+        jnp.broadcast_to(full, a.shape),  # INIT1
+    ]
+    out = results[0]
+    for code, res in enumerate(results[1:], start=1):
+        out = jnp.where(opcode == code, res, out)
+    return out
+
+
+def gate_trace_ref(state, ops):
+    """Execute a gate trace over bit-packed state; the oracle for
+    ``kernels.gate_trace``.
+
+    state: uint32[C, W]; ops: int32[T, 6]. Returns the final state.
+    """
+
+    def step(st, op):
+        opcode, no_init = op[0], op[5]
+        # Widen indices so dynamic_update_slice sees one index type whether
+        # or not jax_enable_x64 is active.
+        i1, i2, i3, out = (op[k].astype(jnp.int64) for k in (1, 2, 3, 4))
+        a = jnp.take(st, i1, axis=0, mode="clip")
+        b = jnp.take(st, i2, axis=0, mode="clip")
+        c = jnp.take(st, i3, axis=0, mode="clip")
+        old = jnp.take(st, out, axis=0, mode="clip")
+        res = gate_eval(opcode, a, b, c)
+        new = jnp.where(no_init != 0, old & res, res)
+        new = jnp.where(opcode == oc.NOP, old, new)
+        st = jax.lax.dynamic_update_slice(st, new[None, :], (out, 0))
+        return st, None
+
+    final, _ = jax.lax.scan(step, state, ops)
+    return final
+
+
+def matvec_ref(a, x, n_bits):
+    """Fixed-point matvec oracle: ``(A @ x) mod 2^(2N)``.
+
+    a: uint64[m, n]; x: uint64[n]. All arithmetic wraps mod 2^64, then the
+    result is masked to 2N bits (wrapping semantics shared with
+    ``fixedpoint::inner_product_mod`` on the Rust side).
+    """
+    acc = jnp.sum(a * x[None, :], axis=1, dtype=jnp.uint64)
+    if 2 * n_bits < 64:
+        acc = acc & jnp.uint64((1 << (2 * n_bits)) - 1)
+    return acc
+
+
+def mul_ref(a, b, n_bits):
+    """Elementwise exact product oracle: uint64 ``a*b`` (2N <= 64 bits)."""
+    del n_bits
+    return a * b

@@ -1,0 +1,30 @@
+"""L2: the JAX compute graphs exported to the Rust runtime.
+
+Each public function here is a jit-able graph composed from the L1 Pallas
+kernels; ``aot.py`` lowers them once to HLO text artifacts. Python never
+runs on the request path — the Rust coordinator executes the compiled
+artifacts through PJRT.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.gate_trace import gate_trace  # noqa: E402
+from .kernels.matvec import matvec_fixed, mul_exact  # noqa: E402
+
+
+def gate_trace_model(state, ops):
+    """Hardware golden model: run a stateful-logic trace over the packed
+    crossbar state (uint32[C, W], int32[T, 6])."""
+    return (gate_trace(state, ops),)
+
+
+def matvec_model(a, x, n_bits: int):
+    """Arithmetic golden model: fixed-point ``A @ x`` mod ``2^(2N)``."""
+    return (matvec_fixed(a, x, n_bits),)
+
+
+def mul_model(a, b):
+    """Elementwise exact product golden model."""
+    return (mul_exact(a, b),)

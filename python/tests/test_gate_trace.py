@@ -1,0 +1,92 @@
+"""Pallas gate-trace kernel vs the pure-jnp oracle (and hand semantics)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import opcodes as oc
+from compile.kernels.gate_trace import gate_trace
+from compile.kernels.ref import gate_trace_ref
+
+GATES = [oc.NOT, oc.NOR2, oc.NOR3, oc.OR2, oc.NAND2, oc.MIN3, oc.INIT0, oc.INIT1]
+
+
+def run_both(state, ops):
+    state = np.asarray(state, dtype=np.uint32)
+    ops = np.asarray(ops, dtype=np.int32)
+    got = np.asarray(gate_trace(state, ops))
+    want = np.asarray(gate_trace_ref(state, ops))
+    return got, want
+
+
+def test_not_gate_semantics():
+    state = np.zeros((4, 2), dtype=np.uint32)
+    state[0] = [0xDEADBEEF, 0x12345678]
+    ops = [[oc.INIT1, 0, 0, 0, 1, 0], [oc.NOT, 0, 0, 0, 1, 0]]
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got[1], [~np.uint32(0xDEADBEEF), ~np.uint32(0x12345678)])
+
+
+def test_no_init_and_trick():
+    # X-MAGIC: NOT(a) onto a cell holding b leaves b AND NOT(a).
+    state = np.zeros((3, 1), dtype=np.uint32)
+    state[0] = [0b1100]
+    state[1] = [0b1010]
+    ops = [[oc.NOT, 0, 0, 0, 1, 1]]
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, want)
+    assert got[1][0] == (0b1010 & ~np.uint32(0b1100))
+
+
+def test_nop_is_identity():
+    state = np.random.default_rng(0).integers(0, 2**32, (5, 3), dtype=np.uint32)
+    ops = [[oc.NOP, 0, 0, 0, 2, 0]] * 4
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, state)
+    np.testing.assert_array_equal(want, state)
+
+
+def test_min3_full_adder_column():
+    # One full-adder over packed bits: cout' = MIN3(a, b, cin).
+    rng = np.random.default_rng(1)
+    state = np.zeros((5, 2), dtype=np.uint32)
+    state[0:3] = rng.integers(0, 2**32, (3, 2), dtype=np.uint32)
+    ops = [
+        [oc.INIT1, 0, 0, 0, 3, 0],
+        [oc.MIN3, 0, 1, 2, 3, 0],
+        [oc.INIT1, 0, 0, 0, 4, 0],
+        [oc.NOT, 3, 0, 0, 4, 0],
+    ]
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, want)
+    a, b, c = state[0], state[1], state[2]
+    maj = (a & b) | (a & c) | (b & c)
+    np.testing.assert_array_equal(got[4], maj)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_random_traces_match_ref(data):
+    c = data.draw(st.integers(2, 10), label="cols")
+    w = data.draw(st.integers(1, 3), label="words")
+    t = data.draw(st.integers(1, 24), label="ops")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31), label="seed"))
+    state = rng.integers(0, 2**32, (c, w), dtype=np.uint32)
+    ops = np.zeros((t, 6), dtype=np.int32)
+    for i in range(t):
+        ops[i, 0] = rng.choice(GATES + [oc.NOP])
+        ops[i, 1:4] = rng.integers(0, c, 3)
+        ops[i, 4] = rng.integers(0, c)
+        ops[i, 5] = rng.integers(0, 2)
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("gate", GATES)
+def test_each_gate_matches_ref(gate):
+    rng = np.random.default_rng(gate)
+    state = rng.integers(0, 2**32, (4, 2), dtype=np.uint32)
+    ops = [[gate, 0, 1, 2, 3, 0]]
+    got, want = run_both(state, ops)
+    np.testing.assert_array_equal(got, want)

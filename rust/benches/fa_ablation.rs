@@ -1,0 +1,60 @@
+//! §IV-B1 ablation: full-adder designs and the N-bit adders built on them.
+
+use multpim::algorithms::adders::RippleAdder;
+use multpim::algorithms::costmodel as cm;
+use multpim::algorithms::fulladder::{fa_program, FaVariant};
+use multpim::sim::Simulator;
+
+fn main() {
+    println!("=== Full adders (§IV-B1) ===");
+    println!("{:<36}{:>8}{:>15}", "design", "cycles", "intermediates");
+    println!("{:<36}{:>8}{:>15}", "FELIX [12] (quoted)", cm::FELIX_FA_CYCLES, 2);
+    println!("{:<36}{:>8}{:>15}", "RIME [22] (quoted)", cm::RIME_FA_CYCLES, "-");
+    for v in [FaVariant::FiveCycle, FaVariant::FourCycle, FaVariant::SixCycleReuse] {
+        let (p, cells) = fa_program(v);
+        // Execute over all 8 input rows as a sanity run.
+        let mut sim = Simulator::new(8, 8);
+        for row in 0..8u64 {
+            sim.write_bits(row as usize, 0, 3, row);
+            if v == FaVariant::FourCycle {
+                sim.write_bits(row as usize, cells.cin_n, 1, !(row >> 2) & 1);
+            }
+        }
+        sim.run(&p).unwrap();
+        println!(
+            "{:<36}{:>8}{:>15}",
+            format!("MultPIM {v:?} (measured)"),
+            p.cycle_count() - 1,
+            v.intermediates()
+        );
+    }
+    println!(
+        "\nimprovement over FELIX: {}%",
+        ((cm::FELIX_FA_CYCLES - cm::MULTPIM_FA_CYCLES_WITH_COMPLEMENT) * 100
+            / cm::FELIX_FA_CYCLES)
+    );
+
+    println!("\n=== N-bit ripple adders (footnote 6) [quoted | measured] ===");
+    println!("{:<8}{:>26}{:>26}", "N", "MultPIM-FA adder", "FELIX-FA adder (quoted)");
+    for n in [8u32, 16, 32, 64] {
+        let adder = RippleAdder::new(n);
+        let (sum, carry) = adder.add_batch(&[(123, 99)]).unwrap()[0];
+        assert_eq!(sum, 222);
+        assert!(!carry);
+        println!(
+            "{n:<8}{:>26}{:>26}",
+            format!(
+                "{}cy/{}cells | {}cy/{}cells",
+                cm::multpim_adder_latency(n as u64),
+                cm::multpim_adder_area(n as u64),
+                adder.program().cycle_count(),
+                adder.program().area_memristors
+            ),
+            format!(
+                "{}cy/{}cells",
+                cm::felix_adder_latency(n as u64),
+                cm::felix_adder_area(n as u64)
+            ),
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! L3 performance bench: simulator throughput on the hot path.
+//!
+//! Measures gate-applications/second and products/second for row-parallel
+//! MultPIM batches — the numbers tracked by EXPERIMENTS.md §Perf.
+
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::Multiplier;
+use multpim::runtime::trace::program_to_trace;
+use multpim::sim::Simulator;
+use multpim::util::{SplitMix64, Stopwatch};
+
+fn main() {
+    println!("=== simulator performance (hot path) ===");
+    for (n, rows) in [(16u32, 1024usize), (32, 1024), (32, 4096), (32, 16384)] {
+        let mult = MultPim::new(n);
+        let program = mult.program();
+        let layout = mult.layout();
+        let ops = program_to_trace(program).len() as u64;
+
+        // Pre-validate once; the timed loop uses the unchecked hot path,
+        // exactly like the coordinator's workers.
+        multpim::sim::validate(program, &mult.input_cols()).unwrap();
+
+        let mut rng = SplitMix64::new(n as u64);
+        let mut sim = Simulator::new_single_row_batch(program, rows);
+        for row in 0..rows {
+            sim.write_input(row, &layout, rng.bits(n), rng.bits(n));
+        }
+
+        let mut sw = Stopwatch::new();
+        let iters = 5;
+        sw.run(iters, || {
+            sim.run_unchecked(program);
+        });
+        let secs = sw.median().as_secs_f64();
+        let gate_apps = ops * rows as u64; // one op touches every row
+
+        // Optimized path: program pre-lowered to flat word-offset ops.
+        let compiled =
+            multpim::sim::CompiledProgram::lower(program, sim.crossbar().words_per_col());
+        let mut sw2 = Stopwatch::new();
+        sw2.run(iters, || compiled.execute(&mut sim));
+        let secs2 = sw2.median().as_secs_f64();
+        println!(
+            "N={n:<3} rows={rows:<6} {:>7} ops  interpreted {:>9.3?} ({:.2e} apps/s)  compiled {:>9.3?} ({:.2e} apps/s, {:.2}x)  {:>9.0} products/s",
+            ops,
+            sw.median(),
+            gate_apps as f64 / secs,
+            sw2.median(),
+            gate_apps as f64 / secs2,
+            secs / secs2,
+            rows as f64 / secs2,
+        );
+    }
+}

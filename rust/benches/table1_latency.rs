@@ -1,0 +1,40 @@
+//! Regenerates **Table I** (multiplier latency in clock cycles) by
+//! compiling every algorithm and counting its cycles in the simulator,
+//! and also reports host wall-time per row-parallel batch.
+
+use multpim::algorithms::hajali::HajAli;
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::multpim_area::MultPimArea;
+use multpim::algorithms::rime::Rime;
+use multpim::algorithms::{costmodel as cm, Multiplier};
+use multpim::util::{SplitMix64, Stopwatch};
+
+fn bench_row(name: &str, mult: &dyn Multiplier, paper: u64) {
+    let n = mult.n_bits();
+    let mut rng = SplitMix64::new(n as u64);
+    let pairs: Vec<(u64, u64)> = (0..256).map(|_| (rng.bits(n), rng.bits(n))).collect();
+    let mut sw = Stopwatch::new();
+    let out = sw.run(5, || mult.multiply_batch(&pairs).unwrap()).unwrap();
+    for (&(a, b), &p) in pairs.iter().zip(&out) {
+        assert_eq!(p, a * b);
+    }
+    println!(
+        "{name:<18} N={n:<3} paper={paper:>6}  measured={:>6} cycles   {:>9.3?} host/256-row batch",
+        mult.program().cycle_count(),
+        sw.median(),
+    );
+}
+
+fn main() {
+    println!("=== Table I: single-row N-bit multiplication latency ===");
+    for n in [8u32, 16, 32] {
+        bench_row("Haj-Ali et al.", &HajAli::new(n), cm::hajali_latency(n as u64));
+        bench_row("RIME", &Rime::new(n), cm::rime_latency(n as u64));
+        bench_row("MultPIM", &MultPim::new(n), cm::multpim_latency(n as u64));
+        bench_row("MultPIM-Area", &MultPimArea::new(n), cm::multpim_area_latency(n as u64));
+        println!();
+    }
+    let speedup = Rime::new(32).program().cycle_count() as f64
+        / MultPim::new(32).program().cycle_count() as f64;
+    println!("measured MultPIM-vs-RIME speedup at N=32: {speedup:.2}x (paper: 4.2x)");
+}

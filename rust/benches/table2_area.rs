@@ -1,0 +1,36 @@
+//! Regenerates **Table II** (area in memristors) from the compiled
+//! programs' audited cell allocations.
+
+use multpim::algorithms::hajali::HajAli;
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::multpim_area::MultPimArea;
+use multpim::algorithms::rime::Rime;
+use multpim::algorithms::{costmodel as cm, Multiplier};
+
+fn main() {
+    println!("=== Table II: area (# memristors) [paper | measured] ===");
+    println!("{:<18}{:>16}{:>16}{:>16}", "Algorithm", "N=8", "N=16", "N=32");
+    let rows: Vec<(&str, fn(u64) -> u64, fn(u32) -> u64)> = vec![
+        ("Haj-Ali et al.", cm::hajali_area, |n| {
+            HajAli::new(n).program().area_memristors as u64
+        }),
+        ("RIME", cm::rime_area, |n| Rime::new(n).program().area_memristors as u64),
+        ("MultPIM", cm::multpim_area, |n| MultPim::new(n).program().area_memristors as u64),
+        ("MultPIM-Area", cm::multpim_area_area, |n| {
+            MultPimArea::new(n).program().area_memristors as u64
+        }),
+    ];
+    for (name, paper, measured) in rows {
+        print!("{name:<18}");
+        for n in [8u32, 16, 32] {
+            print!("{:>16}", format!("{} | {}", paper(n as u64), measured(n)));
+        }
+        println!();
+    }
+    println!(
+        "\npartitions at N=32: MultPIM {} (paper N-1 = {}), MultPIM-Area {}",
+        MultPim::new(32).program().partition_count(),
+        cm::multpim_partitions(32),
+        MultPimArea::new(32).program().partition_count(),
+    );
+}

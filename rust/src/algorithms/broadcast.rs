@@ -1,0 +1,222 @@
+//! §III-A — the recursive partition **broadcast** technique.
+//!
+//! Transfers one bit from a source partition to `k-1` other partitions in
+//! `ceil(log2 k)` cycles instead of the naive `k-1`, by recursively halving:
+//! copy from the segment head to the segment middle, isolate the two halves
+//! with the partition transistor between them, and recurse in parallel
+//! (Fig. 3(a)/(b)).
+//!
+//! Two forms are provided:
+//!
+//! * [`emit_broadcast_not`] — the *production* form used inside MultPIM:
+//!   copies are MAGIC NOT gates, so each destination receives the bit or
+//!   its complement depending on its depth parity in the broadcast tree
+//!   (§IV-B2 exploits both polarities for free partial products).
+//! * [`broadcast_program`] — standalone demonstration programs (naive and
+//!   recursive, with an idealized copy gate as in the paper's §III
+//!   exposition) used to regenerate Fig. 3's cycle counts.
+
+use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+use crate::util::ceil_log2;
+
+/// Plan the recursive broadcast over `k` participants (index 0 = source).
+///
+/// Returns one entry per cycle; each entry lists parallel `(src, dst)`
+/// copies between participant indices. The plan only depends on `k`.
+pub fn plan_broadcast(k: usize) -> Vec<Vec<(usize, usize)>> {
+    assert!(k >= 1);
+    let mut levels: Vec<Vec<(usize, usize)>> = Vec::new();
+    // Active segments [lo, hi] whose head (lo) holds the value.
+    let mut segments = vec![(0usize, k - 1)];
+    while segments.iter().any(|&(lo, hi)| lo < hi) {
+        let mut level = Vec::new();
+        let mut next = Vec::new();
+        for (lo, hi) in segments {
+            if lo == hi {
+                continue;
+            }
+            let size = hi - lo + 1;
+            // Head copies to the first cell of the upper half; both halves
+            // then proceed independently (transistor between them opens).
+            let dst = lo + size / 2;
+            level.push((lo, dst));
+            next.push((lo, dst - 1));
+            next.push((dst, hi));
+        }
+        levels.push(level);
+        segments = next;
+    }
+    levels
+}
+
+/// Emit the broadcast into `builder` using MAGIC NOT as the copy gate.
+///
+/// `cells[i]` is the bit cell of participant `i`, one participant per
+/// partition, ordered left to right. `cells[0]` must hold the value
+/// (positive polarity); all other cells must be initialized to 1.
+///
+/// Returns the polarity of each participant after the broadcast:
+/// `false` = holds the original bit, `true` = holds its complement.
+pub fn emit_broadcast_not(builder: &mut ProgramBuilder, cells: &[Col]) -> Vec<bool> {
+    let plan = plan_broadcast(cells.len());
+    let mut polarity = vec![false; cells.len()];
+    for level in &plan {
+        for &(src, dst) in level {
+            builder.stage(GateOp::new(Gate::Not, &[cells[src]], cells[dst]));
+            polarity[dst] = !polarity[src];
+        }
+        builder.commit();
+    }
+    polarity
+}
+
+/// Theoretical cycle count of the recursive broadcast over `k` participants.
+pub fn broadcast_cycles(k: usize) -> u64 {
+    ceil_log2(k as u64) as u64
+}
+
+/// Cycle count of the naive serial broadcast (Fig. 3(a)).
+pub fn naive_broadcast_cycles(k: usize) -> u64 {
+    (k - 1) as u64
+}
+
+/// Build a standalone broadcast program over `k` single-cell partitions,
+/// using the paper's idealized copy gate (realized as `OR(x, x)`), either
+/// `naive` (serial, `k-1` cycles) or recursive (`ceil(log2 k)` cycles).
+pub fn broadcast_program(k: usize, naive: bool) -> Program {
+    assert!(k >= 2, "broadcast needs at least 2 partitions");
+    let partitions = PartitionMap::new((0..k as Col).collect(), k as Col);
+    let mut b = ProgramBuilder::new(
+        format!("broadcast-{}-k{}", if naive { "naive" } else { "recursive" }, k),
+        partitions,
+        GateSet::Full,
+    );
+    b.init(true, (1..k as Col).collect());
+    if naive {
+        for dst in 1..k as Col {
+            b.gate(Gate::Or2, &[0, 0], dst);
+        }
+    } else {
+        for level in plan_broadcast(k) {
+            for (src, dst) in level {
+                b.stage(GateOp::new(Gate::Or2, &[src as Col, src as Col], dst as Col));
+            }
+            b.commit();
+        }
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn plan_depth_is_ceil_log2() {
+        for k in 1..=130 {
+            let plan = plan_broadcast(k);
+            assert_eq!(plan.len() as u64, broadcast_cycles(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn plan_reaches_every_participant_once() {
+        for k in 1..=64 {
+            let plan = plan_broadcast(k);
+            let mut received = vec![false; k];
+            received[0] = true;
+            for level in &plan {
+                for &(src, dst) in level {
+                    assert!(received[src], "k={k}: src {src} used before it has the bit");
+                    assert!(!received[dst], "k={k}: dst {dst} written twice");
+                    received[dst] = true;
+                }
+            }
+            assert!(received.iter().all(|&r| r), "k={k}: not everyone reached");
+        }
+    }
+
+    #[test]
+    fn plan_levels_are_parallel_safe() {
+        // Within a level, the inclusive [src, dst] partition intervals of the
+        // copies must be pairwise disjoint (they share no partition).
+        for k in 2..=64 {
+            for level in plan_broadcast(k) {
+                let mut spans: Vec<(usize, usize)> =
+                    level.iter().map(|&(s, d)| (s.min(d), s.max(d))).collect();
+                spans.sort_unstable();
+                for w in spans.windows(2) {
+                    assert!(w[1].0 > w[0].1, "k={k}: spans {w:?} overlap");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn demo_programs_match_paper_cycle_counts() {
+        // Fig. 3: naive = k-1 cycles, proposed = ceil(log2 k) cycles
+        // (+1 shared init cycle in both programs).
+        for k in [2usize, 4, 8, 16, 32, 64] {
+            let naive = broadcast_program(k, true);
+            let fast = broadcast_program(k, false);
+            assert_eq!(naive.cycle_count() as u64, 1 + naive_broadcast_cycles(k));
+            assert_eq!(fast.cycle_count() as u64, 1 + broadcast_cycles(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn demo_programs_deliver_the_bit() {
+        for k in [2usize, 3, 7, 8, 16, 31] {
+            for naive in [true, false] {
+                let p = broadcast_program(k, naive);
+                let mut sim = Simulator::new(2, k);
+                sim.write_bits(0, 0, 1, 1);
+                sim.write_bits(1, 0, 1, 0);
+                sim.run_with_inputs(&p, &[0]).unwrap();
+                for c in 0..k as Col {
+                    assert_eq!(sim.read_bits(0, c, 1), 1, "k={k} naive={naive} col {c}");
+                    assert_eq!(sim.read_bits(1, c, 1), 0, "k={k} naive={naive} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn not_broadcast_polarities_verified_in_sim() {
+        // Build a one-cell-per-partition program with NOT copies and verify
+        // each destination holds bit XOR polarity.
+        for k in [2usize, 5, 8, 16, 33] {
+            let partitions = PartitionMap::new((0..k as Col).collect(), k as Col);
+            let mut b = ProgramBuilder::new("bcast-not", partitions, GateSet::NotMin3);
+            b.init(true, (1..k as Col).collect());
+            let cells: Vec<Col> = (0..k as Col).collect();
+            let polarity = emit_broadcast_not(&mut b, &cells);
+            let p = b.finish();
+            assert_eq!(p.cycle_count() as u64, 1 + broadcast_cycles(k));
+
+            for bit in [0u64, 1] {
+                let mut sim = Simulator::new(1, k);
+                sim.write_bits(0, 0, 1, bit);
+                sim.run_with_inputs(&p, &[0]).unwrap();
+                for i in 0..k {
+                    let expect = if polarity[i] { bit ^ 1 } else { bit };
+                    assert_eq!(sim.read_bits(0, i as Col, 1), expect, "k={k} i={i} bit={bit}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn source_polarity_is_positive() {
+        for k in 2..=40 {
+            let partitions = PartitionMap::new((0..k as Col).collect(), k as Col);
+            let mut b = ProgramBuilder::new("t", partitions, GateSet::NotMin3);
+            b.init(true, (1..k as Col).collect());
+            let cells: Vec<Col> = (0..k as Col).collect();
+            let polarity = emit_broadcast_not(&mut b, &cells);
+            assert!(!polarity[0]);
+            let _ = b.finish();
+        }
+    }
+}

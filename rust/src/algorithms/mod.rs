@@ -1,0 +1,78 @@
+//! In-memory algorithm compilers: the paper's contributions and baselines.
+//!
+//! Every algorithm here compiles to an [`isa::Program`](crate::isa::Program)
+//! executed by the cycle-accurate simulator — latency and area are
+//! *measured*, not only quoted:
+//!
+//! * [`broadcast`] / [`shift`] — the §III partition techniques (Fig. 3).
+//! * [`fulladder`] — the §IV-B1 novel full adder (eqs. (1)-(2)).
+//! * [`adders`] — N-bit ripple adders built from the full adders
+//!   (§IV-B footnote 6).
+//! * [`multpim`] — MultPIM (Algorithm 1) with all §IV-B optimizations.
+//! * [`multpim_area`] — the area-optimized variant (extra re-use [27]).
+//! * [`hajali`] — the Haj-Ali et al. [19] NOT/NOR shift-and-add baseline.
+//! * [`rime`] — the RIME [22] behavioural baseline.
+//! * [`matvec`] — §VI fused matrix-vector multiplication + the
+//!   FloatPIM-style baseline.
+//! * [`costmodel`] — every closed-form expression the paper quotes.
+
+pub mod adders;
+pub mod broadcast;
+pub mod costmodel;
+pub mod fulladder;
+pub mod hajali;
+pub mod matvec;
+pub mod multpim;
+pub mod multpim_area;
+pub mod rime;
+pub mod shift;
+
+use crate::crossbar::RegionLayout;
+use crate::isa::{Col, Program};
+use crate::sim::Simulator;
+use crate::Result;
+
+/// A compiled single-row multiplier, usable uniformly by the coordinator,
+/// the benches and the report generators.
+pub trait Multiplier {
+    /// Display name (matches the paper's table rows).
+    fn name(&self) -> &'static str;
+
+    /// Operand width N in bits.
+    fn n_bits(&self) -> u32;
+
+    /// The compiled program.
+    fn program(&self) -> &Program;
+
+    /// Operand/result placement.
+    fn layout(&self) -> RegionLayout;
+
+    /// Columns holding externally written data before cycle 0 (used for
+    /// strict validation).
+    fn input_cols(&self) -> Vec<Col>;
+
+    /// Read one row's product after execution. The default reads the
+    /// contiguous output range of [`Multiplier::layout`]; algorithms with
+    /// scattered outputs (ping-pong accumulators, output-over-input
+    /// re-use) override this.
+    fn read_result(&self, sim: &Simulator, row: usize) -> u64 {
+        sim.read_output(row, &self.layout())
+    }
+
+    /// Multiply a batch of operand pairs, one crossbar row each, in a
+    /// single program execution (row-parallel, as in Fig. 1).
+    fn multiply_batch(&self, pairs: &[(u64, u64)]) -> Result<Vec<u64>> {
+        let layout = self.layout();
+        let mut sim = Simulator::new_single_row_batch(self.program(), pairs.len().max(1));
+        for (row, &(a, b)) in pairs.iter().enumerate() {
+            sim.write_input(row, &layout, a, b);
+        }
+        sim.run_with_inputs(self.program(), &self.input_cols())?;
+        Ok((0..pairs.len()).map(|row| self.read_result(&sim, row)).collect())
+    }
+
+    /// Convenience single multiplication.
+    fn multiply(&self, a: u64, b: u64) -> Result<u64> {
+        Ok(self.multiply_batch(&[(a, b)])?[0])
+    }
+}

@@ -1,0 +1,485 @@
+//! **MultPIM** — Algorithm 1 with every §IV-B optimization.
+//!
+//! The multiplier follows the carry-save add-shift (CSAS) technique (§II-B,
+//! Fig. 2): N full-adder *units*, one per partition, each permanently
+//! holding one bit of `a`. For each of the N first stages, one bit of `b`
+//! is broadcast to all units (§III-A, `ceil(log2 N)` cycles), partial
+//! products are formed in a single cycle (§IV-B2), a full adder updates
+//! each unit's carry/sum (§IV-B1, eqs. (1)-(2)), and the sums shift one
+//! unit to the right with the *fused* two-cycle shift (§III-B): the sum
+//! `S = Min3(Cout, Cin', T2)` is computed directly into the next unit.
+//! N final stages propagate the remaining carries with a half-adder
+//! schedule. Gate set: **NOT/Min3 only**.
+//!
+//! ## Unit schedule (first N stages) — `log2(N) + 7` cycles
+//!
+//! | cycle        | operation (all units in parallel)                        |
+//! |--------------|----------------------------------------------------------|
+//! | 1            | grouped INIT1 of per-stage cells                         |
+//! | 2..log2(N)+1 | NOT-tree broadcast of `b_k` (polarity per tree depth)    |
+//! | +1           | partial product: `no-init NOT(a')` onto `b_k` (positive units) / `Min3(a', b', 1)` (negative units, the fresh `cn_next` cell supplies the 1) |
+//! | +1           | `T1 = Min3(s, ab, c)` -> new `Cout'` (eq. (1))           |
+//! | +1           | `Cout = NOT(T1)`                                         |
+//! | +1           | `T2 = Min3(s, ab, Cin')`                                 |
+//! | +2           | fused shift: `S = Min3(Cout, Cin', T2)` into next unit (eq. (2)) |
+//!
+//! The **top unit** (handling `a_{N-1}`) exploits the Fig. 2 observation
+//! that the top carry is always zero: it shares the input partition, reads
+//! `b_k` straight from the operand cell (writing its partial product over
+//! it — the bit is dead after its stage), and runs the *same* uniform FA
+//! schedule with its sum input pinned to a constant-0 cell. The FA algebra
+//! then keeps its carry at 0 and its carry-complement at 1 with no special
+//! casing, and its shifted-out sum is exactly the partial product.
+//!
+//! ## Exact costs (verified by tests and the simulator's counters)
+//!
+//! * latency: `3 + N + N*(log2 N + 7) + 6N = N*log2(N) + 14N + 3` (Table I);
+//! * area: `2N` inputs + `2N` outputs + per-unit cells — `14N - 7 - d(N)`
+//!   memristors where `d(N) >= 0` is a small layout dividend from the
+//!   no-init partial-product trick (Table II reports `14N - 7`; our layout
+//!   needs slightly *fewer* cells for power-of-two N because only
+//!   odd-depth broadcast receivers require a dedicated `ab` cell);
+//! * partitions: N (paper: N-1; the paper additionally folds the top unit
+//!   into its neighbour's partition, which our uniform schedule keeps
+//!   separate — no latency or memristor cost depends on this).
+
+use super::broadcast::{emit_broadcast_not, plan_broadcast};
+use super::shift::emit_edge_ops;
+use super::Multiplier;
+use crate::crossbar::{CellAlloc, RegionLayout};
+use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+
+/// Per-unit cell assignment (one full-adder unit per partition).
+#[derive(Debug, Clone, Copy)]
+struct Unit {
+    /// Stored complement of this unit's `a` bit (re-used as the HA scratch
+    /// `q` in the last stages for the top unit).
+    a_n: Col,
+    /// Broadcast receive cell (units 1..; doubles as HA scratch `q`).
+    /// The top unit has no receive cell (it reads the operand directly).
+    bcell: Option<Col>,
+    /// Partial-product cell for negative-polarity units.
+    ab: Option<Col>,
+    /// Sum ping-pong pair; `None` for the top unit's incoming side — it
+    /// uses the constant-0 cell as its (never-written) current sum.
+    s: [Col; 2],
+    /// Carry ping-pong pair.
+    c: [Col; 2],
+    /// Carry-complement ping-pong pair.
+    cn: [Col; 2],
+    /// Scratch (`T2`; constant-1 shift operand in the last stages).
+    t2: Col,
+}
+
+/// Compiled MultPIM multiplier.
+#[derive(Debug, Clone)]
+pub struct MultPim {
+    n: u32,
+    program: Program,
+    layout: RegionLayout,
+    input_cols: Vec<Col>,
+}
+
+impl MultPim {
+    /// Compile an N-bit MultPIM multiplier (N in 2..=32).
+    pub fn new(n: u32) -> Self {
+        assert!((2..=32).contains(&n), "N must be in 2..=32 (2N-bit result in u64)");
+        let nn = n as usize;
+
+        // ------------------------------------------------------------------
+        // Layout.
+        // ------------------------------------------------------------------
+        let mut partition_starts = vec![0u32];
+        let mut alloc = CellAlloc::new(0);
+        let a_start = alloc.alloc_range("a", n);
+        let b_start = alloc.alloc_range("b", n);
+
+        // Broadcast polarity of each participant: participant 0 is the
+        // operand cell itself; participant j >= 1 is unit j's receive cell.
+        let polarity = {
+            let plan = plan_broadcast(nn);
+            let mut pol = vec![false; nn];
+            for level in &plan {
+                for &(src, dst) in level {
+                    pol[dst] = !pol[src];
+                }
+            }
+            pol
+        };
+
+        // Top unit (index 0) lives in the input partition. Its sum input and
+        // carry are provably constant (Fig. 2: the top carry is always
+        // zero), so it keeps only four cells: a', a shared constant-0 for
+        // sum+carry, a constant-1 carry complement, and the T2 scratch. Its
+        // per-stage FA updates are skipped entirely.
+        let mut units = Vec::with_capacity(nn);
+        let zero = alloc.alloc("u0.const0");
+        let one = alloc.alloc("u0.const1");
+        let top = Unit {
+            a_n: alloc.alloc("u0.a'"),
+            bcell: None,
+            ab: None,
+            s: [zero, zero],
+            c: [zero, zero],
+            cn: [one, one],
+            t2: alloc.alloc("u0.t2"),
+        };
+        units.push(top);
+
+        for j in 1..nn {
+            partition_starts.push(alloc.next_col());
+            units.push(Unit {
+                a_n: alloc.alloc("a'"),
+                bcell: Some(alloc.alloc("b")),
+                ab: if polarity[j] { Some(alloc.alloc("ab")) } else { None },
+                s: [alloc.alloc("s0"), alloc.alloc("s1")],
+                c: [alloc.alloc("c0"), alloc.alloc("c1")],
+                cn: [alloc.alloc("cn0"), alloc.alloc("cn1")],
+                t2: alloc.alloc("t2"),
+            });
+        }
+        // Output region shares the last unit's partition.
+        let out_start = alloc.alloc_range("out", 2 * n);
+        let num_cols = alloc.next_col();
+        let area = alloc.used();
+
+        let partitions = PartitionMap::new(partition_starts, num_cols);
+        let mut b = ProgramBuilder::new(format!("multpim-n{n}"), partitions, GateSet::NotMin3);
+
+        // ------------------------------------------------------------------
+        // Initialization: 3 grouped init cycles + N serial copies of a.
+        // ------------------------------------------------------------------
+        // (1) zeros: initial sums and carries (Algorithm 1 line 1) and the
+        //     top unit's constant-0 sum input.
+        let mut zeros: Vec<Col> = Vec::new();
+        for u in &units {
+            zeros.push(u.s[0]);
+            zeros.push(u.c[0]);
+        }
+        zeros.sort_unstable();
+        zeros.dedup();
+        b.init(false, zeros);
+        // (2) ones: initial carry complements + the a' cells (NOT targets).
+        let mut ones: Vec<Col> = units.iter().flat_map(|u| [u.cn[0], u.a_n]).collect();
+        ones.sort_unstable();
+        b.init(true, ones);
+        // (3) ones: the whole output region.
+        b.init(true, (out_start..out_start + 2 * n).collect());
+        // Copy a (Algorithm 1 line 2): unit j stores a'_{N-1-j}. Serial: every
+        // copy reads the operand partition.
+        for (j, u) in units.iter().enumerate() {
+            let src = a_start + (n - 1 - j as u32);
+            b.gate(Gate::Not, &[src], u.a_n);
+        }
+
+        // Ping-pong indices: `cur` holds this stage's inputs.
+        let (mut cur, mut nxt) = (0usize, 1usize);
+
+        // ------------------------------------------------------------------
+        // First N stages (Algorithm 1 lines 3-8): log2(N) + 7 cycles each.
+        // ------------------------------------------------------------------
+        for k in 0..nn {
+            // Stage init (1 cycle). The top unit (j = 0) only refreshes its
+            // T2 scratch — its carry cells are constants.
+            let mut init: Vec<Col> = Vec::new();
+            for (j, u) in units.iter().enumerate() {
+                if let Some(bc) = u.bcell {
+                    init.push(bc);
+                }
+                if let Some(ab) = u.ab {
+                    init.push(ab);
+                }
+                if u.s[nxt] != u.s[cur] {
+                    init.push(u.s[nxt]);
+                }
+                if j > 0 {
+                    init.push(u.c[nxt]);
+                    init.push(u.cn[nxt]);
+                }
+                init.push(u.t2);
+            }
+            b.init(true, init);
+
+            // Broadcast b_k (log2 N cycles). Participant 0 = operand cell.
+            let mut cells: Vec<Col> = Vec::with_capacity(nn);
+            cells.push(b_start + k as u32);
+            cells.extend(units[1..].iter().map(|u| u.bcell.unwrap()));
+            let pol = emit_broadcast_not(&mut b, &cells);
+            debug_assert_eq!(pol, polarity, "stage polarity must match layout-time plan");
+
+            // Partial products (1 cycle, §IV-B2). pp[j] = cell holding a_j*b_k.
+            let mut pp: Vec<Col> = Vec::with_capacity(nn);
+            for (j, u) in units.iter().enumerate() {
+                let target = if j == 0 {
+                    cells[0] // overwrite the (now dead) b_k operand cell
+                } else if polarity[j] {
+                    // Received b'_k: ab = Min3(a', b', 1); the fresh cn[nxt]
+                    // cell (initialized this stage, written two cycles
+                    // later) supplies the constant 1.
+                    let ab = u.ab.unwrap();
+                    b.stage(GateOp::new(Gate::Min3, &[u.a_n, u.bcell.unwrap(), u.cn[nxt]], ab));
+                    pp.push(ab);
+                    continue;
+                } else {
+                    u.bcell.unwrap()
+                };
+                // Received b_k: no-init NOT(a') leaves b_k AND a.
+                b.stage(GateOp::no_init(Gate::Not, &[u.a_n], target));
+                pp.push(target);
+            }
+            b.commit();
+
+            // Full adder (eqs. (1)-(2)), 3 parallel cycles + fused shift.
+            // The top unit skips the carry updates (constants).
+            for (j, (u, &ab)) in units.iter().zip(&pp).enumerate() {
+                if j > 0 {
+                    b.stage_gate(Gate::Min3, &[u.s[cur], ab, u.c[cur]], u.cn[nxt]);
+                    // ^ T1 = Cout'
+                }
+            }
+            b.commit();
+            for (j, u) in units.iter().enumerate() {
+                if j > 0 {
+                    b.stage_gate(Gate::Not, &[u.cn[nxt]], u.c[nxt]); // Cout
+                }
+            }
+            b.commit();
+            for (u, &ab) in units.iter().zip(&pp) {
+                b.stage_gate(Gate::Min3, &[u.s[cur], ab, u.cn[cur]], u.t2); // T2
+            }
+            b.commit();
+
+            // Fused shift (2 cycles): S = Min3(Cout, Cin', T2) into the next
+            // unit's sum (or the output region for the last unit).
+            let mut edges = Vec::with_capacity(nn);
+            for (j, u) in units.iter().enumerate() {
+                let dst = if j + 1 < nn {
+                    units[j + 1].s[nxt]
+                } else {
+                    out_start + k as u32
+                };
+                edges.push(GateOp::new(Gate::Min3, &[u.c[nxt], u.cn[cur], u.t2], dst));
+            }
+            emit_edge_ops(&mut b, edges);
+
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        // ------------------------------------------------------------------
+        // Last N stages (lines 9-12): 6 cycles each. Half-adder via
+        //   q  = Min3(s, c, 1)        = NOR(s, c)
+        //   Cout' = Min3(s, c, q)     = NAND(s, c)
+        //   Cout  = NOT(Cout')        = s AND c
+        //   S  = Min3(q, Cout, 1)     = NOR(q, Cout) = s XOR c
+        //   (the constant 1s come from fresh per-stage cells)
+        // ------------------------------------------------------------------
+        for k in nn..2 * nn {
+            // Stage init: q reuses the (dead) broadcast-receive cells. The
+            // top unit is inert in the last stages (it shifts out a hard 0).
+            let mut init: Vec<Col> = Vec::new();
+            for (j, u) in units.iter().enumerate() {
+                if j == 0 {
+                    continue;
+                }
+                init.push(q_cell(u));
+                if u.s[nxt] != u.s[cur] {
+                    init.push(u.s[nxt]);
+                }
+                init.push(u.c[nxt]);
+                init.push(u.cn[nxt]);
+                init.push(u.t2);
+            }
+            b.init(true, init);
+
+            for u in units.iter().skip(1) {
+                // q = NOR(s, c); cn[nxt] is still 1 here.
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.c[cur], u.cn[nxt]], q_cell(u));
+            }
+            b.commit();
+            for u in units.iter().skip(1) {
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.c[cur], q_cell(u)], u.cn[nxt]);
+            }
+            b.commit();
+            for u in units.iter().skip(1) {
+                b.stage_gate(Gate::Not, &[u.cn[nxt]], u.c[nxt]);
+            }
+            b.commit();
+
+            let mut edges = Vec::with_capacity(nn);
+            for (j, u) in units.iter().enumerate() {
+                let dst = if j + 1 < nn {
+                    units[j + 1].s[nxt]
+                } else {
+                    out_start + k as u32
+                };
+                if j == 0 {
+                    // The top unit's remaining sum is always 0.
+                    edges.push(GateOp::new(Gate::Not, &[one], dst));
+                } else {
+                    // S = NOR(q, Cout); t2 (fresh, unwritten) supplies the 1.
+                    edges.push(GateOp::new(Gate::Min3, &[q_cell(u), u.c[nxt], u.t2], dst));
+                }
+            }
+            emit_edge_ops(&mut b, edges);
+
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        b.set_area(area);
+        let program = b.finish();
+        let layout = RegionLayout {
+            a_start,
+            a_bits: n,
+            b_start,
+            b_bits: n,
+            out_start,
+            out_bits: 2 * n,
+        };
+        let input_cols = (a_start..a_start + n).chain(b_start..b_start + n).collect();
+        Self { n, program, layout, input_cols }
+    }
+
+    /// The paper's Table I latency for this N.
+    pub fn expected_latency(&self) -> u64 {
+        super::costmodel::multpim_latency(self.n as u64)
+    }
+}
+
+/// HA scratch cell: each non-top unit reuses its dead broadcast-receive
+/// cell in the last stages.
+fn q_cell(u: &Unit) -> Col {
+    u.bcell.expect("q_cell is only used for non-top units")
+}
+
+impl Multiplier for MultPim {
+    fn name(&self) -> &'static str {
+        "MultPIM"
+    }
+
+    fn n_bits(&self) -> u32 {
+        self.n
+    }
+
+    fn program(&self) -> &Program {
+        &self.program
+    }
+
+    fn layout(&self) -> RegionLayout {
+        self.layout
+    }
+
+    fn input_cols(&self) -> Vec<Col> {
+        self.input_cols.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::costmodel;
+    use crate::sim::validate;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn small_exhaustive() {
+        for n in [2u32, 3, 4] {
+            let m = MultPim::new(n);
+            let max = 1u64 << n;
+            let mut pairs = Vec::new();
+            for a in 0..max {
+                for b in 0..max {
+                    pairs.push((a, b));
+                }
+            }
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_batches() {
+        let mut rng = SplitMix64::new(0x4D554C54);
+        for n in [8u32, 16, 32] {
+            let m = MultPim::new(n);
+            let pairs: Vec<(u64, u64)> =
+                (0..128).map(|_| (rng.bits(n), rng.bits(n))).collect();
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_operands() {
+        for n in [4u32, 8, 16, 32] {
+            let m = MultPim::new(n);
+            let top = (1u64 << n) - 1;
+            for (a, b) in [(0, 0), (0, top), (top, 0), (1, top), (top, top), (1, 1)] {
+                assert_eq!(m.multiply(a, b).unwrap(), a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    /// Table I: latency must match N*log2(N) + 14N + 3 exactly.
+    #[test]
+    fn latency_matches_table1() {
+        for n in [2u32, 4, 8, 16, 32] {
+            let m = MultPim::new(n);
+            assert_eq!(
+                m.program().cycle_count() as u64,
+                costmodel::multpim_latency(n as u64),
+                "N={n}"
+            );
+        }
+        assert_eq!(MultPim::new(16).program().cycle_count(), 291);
+        assert_eq!(MultPim::new(32).program().cycle_count(), 611);
+    }
+
+    /// Table II: area within the paper's 14N - 7 (our layout may save a
+    /// few cells; it must never exceed the paper's count).
+    #[test]
+    fn area_close_to_table2() {
+        for n in [4u64, 8, 16, 32] {
+            let m = MultPim::new(n as u32);
+            let got = m.program().area_memristors as u64;
+            let paper = costmodel::multpim_area(n);
+            assert!(got <= paper, "N={n}: measured {got} > paper {paper}");
+            assert!(got + 16 >= paper, "N={n}: measured {got} implausibly low vs {paper}");
+        }
+    }
+
+    /// The program passes strict legality validation with only the operand
+    /// cells marked as external inputs.
+    #[test]
+    fn strict_validation() {
+        for n in [2u32, 4, 8, 16, 32] {
+            let m = MultPim::new(n);
+            validate(m.program(), &m.input_cols()).unwrap_or_else(|e| {
+                panic!("N={n}: {e}");
+            });
+        }
+    }
+
+    /// Gate set is NOT/Min3 only (fair comparison with RIME, footnote 1).
+    #[test]
+    fn gate_set_is_not_min3() {
+        let m = MultPim::new(8);
+        assert_eq!(m.program().gate_set, GateSet::NotMin3);
+    }
+
+    /// Supports non-power-of-two widths via ceil(log2).
+    #[test]
+    fn non_power_of_two_widths() {
+        let mut rng = SplitMix64::new(99);
+        for n in [3u32, 5, 6, 7, 12, 20, 24, 31] {
+            let m = MultPim::new(n);
+            for _ in 0..16 {
+                let (a, b) = (rng.bits(n), rng.bits(n));
+                assert_eq!(m.multiply(a, b).unwrap(), a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! **MultPIM-Area** — the area-optimized variant (§V, Tables I/II).
+//!
+//! Trades latency for area through additional re-use [27]:
+//!
+//! * carries are single-buffered: each stage *re-initializes* cells
+//!   mid-stage once their old value dies, instead of ping-ponging between
+//!   two copies (3 extra init cycles + 2 extra compute cycles per stage);
+//! * the carry complement is recomputed each stage (`Cin' = NOT(c)`)
+//!   rather than stored;
+//! * the **lower output bits overwrite the `b` operand cells**: `b_k` dies
+//!   in the very stage that produces output bit `k`, so the cell is
+//!   re-initialized mid-stage and receives the bit during the shift;
+//! * partial products borrow the T2 scratch via an explicit
+//!   polarity-fix cycle instead of dedicating an `ab` cell.
+//!
+//! Cell budget: `2N` inputs (`a` + `b`, the latter doubling as the low
+//! output word), `N` high-output cells, and 7 cells per full-adder unit
+//! (6 for the top unit) — `10N - 1` memristors, matching Table II's `10N`.
+//! Measured latency is `N*ceil(log2(N+1)) + 21N + 3` — within Table I's
+//! `N*log2(N) + 23*N + 3` budget at every table size (the paper's variant
+//! re-uses slightly more aggressively; ours stops at the 10N cell target).
+
+use super::broadcast::{emit_broadcast_not, plan_broadcast};
+use super::shift::emit_edge_ops;
+use super::Multiplier;
+use crate::crossbar::{CellAlloc, RegionLayout};
+use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+
+/// Per-unit cells (single-buffered carry).
+#[derive(Debug, Clone, Copy)]
+struct Unit {
+    a_n: Col,
+    bcell: Col,
+    /// Sum ping-pong (needed for the fused shift).
+    s: [Col; 2],
+    /// Single carry cell (re-initialized mid-stage).
+    c: Col,
+    /// Constant-1 scratch / polarity-fixed partial product.
+    t2: Col,
+    /// Recomputed carry complement.
+    t3: Col,
+}
+
+/// Compiled MultPIM-Area multiplier.
+#[derive(Debug, Clone)]
+pub struct MultPimArea {
+    n: u32,
+    program: Program,
+    layout: RegionLayout,
+    input_cols: Vec<Col>,
+    /// Column of output bit `i` (low bits re-use the `b` cells).
+    out_map: Vec<Col>,
+}
+
+impl MultPimArea {
+    /// Compile an N-bit multiplier (N in 2..=32).
+    pub fn new(n: u32) -> Self {
+        assert!((2..=32).contains(&n), "N must be in 2..=32");
+        let nn = n as usize;
+        let mut partition_starts = vec![0u32];
+        let mut alloc = CellAlloc::new(0);
+        let a_start = alloc.alloc_range("a", n);
+        let b_start = alloc.alloc_range("b/out-low", n);
+
+        // Broadcast polarity over N+1 participants (operand + every unit).
+        let polarity = {
+            let plan = plan_broadcast(nn + 1);
+            let mut pol = vec![false; nn + 1];
+            for level in &plan {
+                for &(src, dst) in level {
+                    pol[dst] = !pol[src];
+                }
+            }
+            pol
+        };
+
+        // Top unit (index 0) shares the input partition; its sum input is a
+        // constant-0 cell and its carry cell self-maintains at 0 under the
+        // uniform schedule.
+        let mut units = Vec::with_capacity(nn);
+        let s0 = alloc.alloc("u0.const0");
+        units.push(Unit {
+            a_n: alloc.alloc("u0.a'"),
+            bcell: alloc.alloc("u0.b"),
+            s: [s0, s0],
+            c: alloc.alloc("u0.c"),
+            t2: alloc.alloc("u0.t2"),
+            t3: alloc.alloc("u0.t3"),
+        });
+        for _ in 1..nn {
+            partition_starts.push(alloc.next_col());
+            units.push(Unit {
+                a_n: alloc.alloc("a'"),
+                bcell: alloc.alloc("b"),
+                s: [alloc.alloc("s0"), alloc.alloc("s1")],
+                c: alloc.alloc("c"),
+                t2: alloc.alloc("t2"),
+                t3: alloc.alloc("t3"),
+            });
+        }
+        let out_high = alloc.alloc_range("out-high", n);
+        let num_cols = alloc.next_col();
+        let area = alloc.used();
+
+        let partitions = PartitionMap::new(partition_starts, num_cols);
+        let mut b =
+            ProgramBuilder::new(format!("multpim-area-n{n}"), partitions, GateSet::NotMin3);
+
+        // Setup: 3 grouped inits + N serial copies of a.
+        let mut zeros: Vec<Col> = units.iter().flat_map(|u| [u.s[0], u.c]).collect();
+        zeros.sort_unstable();
+        zeros.dedup();
+        b.init(false, zeros);
+        b.init(true, units.iter().map(|u| u.a_n).collect());
+        b.init(true, (out_high..out_high + n).collect());
+        for (j, u) in units.iter().enumerate() {
+            b.gate(Gate::Not, &[a_start + (n - 1 - j as u32)], u.a_n);
+        }
+
+        let (mut cur, mut nxt) = (0usize, 1usize);
+
+        // First N stages: ceil(log2(N+1)) + 12 cycles each.
+        for k in 0..nn {
+            let bk = b_start + k as u32;
+            // c1: stage init.
+            let mut init: Vec<Col> = Vec::new();
+            for u in &units {
+                init.push(u.bcell);
+                init.push(u.t2);
+                init.push(u.t3);
+                if u.s[nxt] != u.s[cur] {
+                    init.push(u.s[nxt]);
+                }
+            }
+            b.init(true, init);
+
+            // Broadcast b_k to every unit.
+            let mut cells: Vec<Col> = Vec::with_capacity(nn + 1);
+            cells.push(bk);
+            cells.extend(units.iter().map(|u| u.bcell));
+            let pol = emit_broadcast_not(&mut b, &cells);
+            debug_assert_eq!(pol, polarity);
+
+            // Polarity fix: negative receivers flip b' into t2.
+            for (j, u) in units.iter().enumerate() {
+                if polarity[j + 1] {
+                    b.stage(GateOp::new(Gate::Not, &[u.bcell], u.t2));
+                }
+            }
+            b.commit();
+            // Partial products: no-init NOT(a') onto the positive copy.
+            // P = bcell (positive units) / t2 (negative units); O = other.
+            let p_cell = |j: usize| if polarity[j + 1] { units[j].t2 } else { units[j].bcell };
+            let o_cell = |j: usize| if polarity[j + 1] { units[j].bcell } else { units[j].t2 };
+            for (j, u) in units.iter().enumerate() {
+                b.stage(GateOp::no_init(Gate::Not, &[u.a_n], p_cell(j)));
+            }
+            b.commit();
+
+            // c4: Cin' = NOT(c) (recomputed; no stored complement).
+            for u in &units {
+                b.stage_gate(Gate::Not, &[u.c], u.t3);
+            }
+            b.commit();
+            // c5: re-init O, c6: T1 = Cout' -> O.
+            b.init(true, (0..nn).map(o_cell).collect());
+            for (j, u) in units.iter().enumerate() {
+                b.stage_gate(Gate::Min3, &[u.s[cur], p_cell(j), u.c], o_cell(j));
+            }
+            b.commit();
+            // c7: re-init c (old value dead), c8: c = NOT(T1) = new carry.
+            b.init(true, units.iter().map(|u| u.c).collect());
+            for (j, u) in units.iter().enumerate() {
+                b.stage_gate(Gate::Not, &[o_cell(j)], u.c);
+            }
+            b.commit();
+            // c9: re-init O (T1 dead) + the b_k cell (output bit k target).
+            let mut reinit: Vec<Col> = (0..nn).map(o_cell).collect();
+            reinit.push(bk);
+            b.init(true, reinit);
+            // c10: T2 -> O.
+            for (j, u) in units.iter().enumerate() {
+                b.stage_gate(Gate::Min3, &[u.s[cur], p_cell(j), u.t3], o_cell(j));
+            }
+            b.commit();
+
+            // Fused shift: S = Min3(Cout, Cin', T2). The last unit's output
+            // bit travels back to the freed b_k cell in the *input*
+            // partition — a row-spanning gate that needs its own cycle.
+            let mut edges = Vec::with_capacity(nn - 1);
+            for (j, u) in units.iter().take(nn - 1).enumerate() {
+                edges.push(GateOp::new(
+                    Gate::Min3,
+                    &[u.c, u.t3, o_cell(j)],
+                    units[j + 1].s[nxt],
+                ));
+            }
+            emit_edge_ops(&mut b, edges);
+            let ul = &units[nn - 1];
+            b.gate(Gate::Min3, &[ul.c, ul.t3, o_cell(nn - 1)], bk);
+
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        // Last N stages: 7 cycles each (half adder with mid-stage re-init).
+        for k in nn..2 * nn {
+            let mut init: Vec<Col> = Vec::new();
+            for u in &units {
+                init.push(u.bcell);
+                init.push(u.t2);
+                init.push(u.t3);
+                if u.s[nxt] != u.s[cur] {
+                    init.push(u.s[nxt]);
+                }
+            }
+            b.init(true, init);
+            // q = NOR(s, c) (t2 is the fresh 1).
+            for u in &units {
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.c, u.t2], u.bcell);
+            }
+            b.commit();
+            // t3 = NAND(s, c).
+            for u in &units {
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.c, u.bcell], u.t3);
+            }
+            b.commit();
+            // Re-init c, then c = s AND c = NOT(t3).
+            b.init(true, units.iter().map(|u| u.c).collect());
+            for u in &units {
+                b.stage_gate(Gate::Not, &[u.t3], u.c);
+            }
+            b.commit();
+            // Shift: S = NOR(q, Cout) = Min3(q, c, 1).
+            let mut edges = Vec::with_capacity(nn);
+            for (j, u) in units.iter().enumerate() {
+                let dst = if j + 1 < nn {
+                    units[j + 1].s[nxt]
+                } else {
+                    out_high + (k - nn) as u32
+                };
+                edges.push(GateOp::new(Gate::Min3, &[u.bcell, u.c, u.t2], dst));
+            }
+            emit_edge_ops(&mut b, edges);
+
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        b.set_area(area);
+        let program = b.finish();
+        let layout = RegionLayout {
+            a_start,
+            a_bits: n,
+            b_start,
+            b_bits: n,
+            out_start: b_start, // low bits re-use the b cells
+            out_bits: 2 * n,
+        };
+        let out_map: Vec<Col> = (0..n).map(|i| b_start + i).chain((0..n).map(|i| out_high + i)).collect();
+        let input_cols = (a_start..a_start + n).chain(b_start..b_start + n).collect();
+        Self { n, program, layout, input_cols, out_map }
+    }
+
+    /// Read the product (low bits from the re-used `b` cells).
+    pub fn read_product(&self, sim: &crate::sim::Simulator, row: usize) -> u64 {
+        let mut v = 0u64;
+        for (i, &col) in self.out_map.iter().enumerate() {
+            if sim.read_bits(row, col, 1) == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+}
+
+impl Multiplier for MultPimArea {
+    fn name(&self) -> &'static str {
+        "MultPIM-Area"
+    }
+
+    fn n_bits(&self) -> u32 {
+        self.n
+    }
+
+    fn program(&self) -> &Program {
+        &self.program
+    }
+
+    fn layout(&self) -> RegionLayout {
+        self.layout
+    }
+
+    fn input_cols(&self) -> Vec<Col> {
+        self.input_cols.clone()
+    }
+
+    fn read_result(&self, sim: &crate::sim::Simulator, row: usize) -> u64 {
+        self.read_product(sim, row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::costmodel;
+    use crate::util::{ceil_log2, SplitMix64};
+
+    #[test]
+    fn small_exhaustive() {
+        for n in [2u32, 3, 4] {
+            let m = MultPimArea::new(n);
+            let max = 1u64 << n;
+            let mut pairs = Vec::new();
+            for a in 0..max {
+                for b in 0..max {
+                    pairs.push((a, b));
+                }
+            }
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_batches() {
+        let mut rng = SplitMix64::new(0xA7EA);
+        for n in [8u32, 16, 32] {
+            let m = MultPimArea::new(n);
+            let pairs: Vec<(u64, u64)> =
+                (0..64).map(|_| (rng.bits(n), rng.bits(n))).collect();
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    /// Area: 10N - 1 measured (Table II quotes 10N).
+    #[test]
+    fn area_matches_table2() {
+        for n in [4u64, 8, 16, 32] {
+            let m = MultPimArea::new(n as u32);
+            assert_eq!(m.program().area_memristors as u64, 10 * n - 1, "N={n}");
+            assert!((m.program().area_memristors as u64) <= costmodel::multpim_area_area(n));
+        }
+    }
+
+    /// Latency: N*ceil(log2(N+1)) + 20N + 3 measured; within Table I's
+    /// N*log2(N) + 23N + 3 at the table sizes.
+    #[test]
+    fn latency_within_table1() {
+        for n in [4u64, 8, 16, 32] {
+            let m = MultPimArea::new(n as u32);
+            let measured = m.program().cycle_count() as u64;
+            let formula = n * ceil_log2(n + 1) as u64 + 21 * n + 3;
+            assert_eq!(measured, formula, "N={n}");
+        }
+        for n in [16u64, 32] {
+            let measured = MultPimArea::new(n as u32).program().cycle_count() as u64;
+            assert!(measured <= costmodel::multpim_area_latency(n), "N={n}");
+        }
+    }
+
+    /// The variant's point: strictly smaller than MultPIM, strictly slower.
+    #[test]
+    fn tradeoff_vs_multpim() {
+        use crate::algorithms::multpim::MultPim;
+        for n in [8u32, 16, 32] {
+            let fast = MultPim::new(n);
+            let small = MultPimArea::new(n);
+            assert!(small.program().area_memristors < fast.program().area_memristors);
+            assert!(small.program().cycle_count() > fast.program().cycle_count());
+        }
+    }
+
+    #[test]
+    fn strict_validation() {
+        for n in [2u32, 4, 8, 16, 32] {
+            let m = MultPimArea::new(n);
+            crate::sim::validate(m.program(), &m.input_cols()).unwrap();
+        }
+    }
+}

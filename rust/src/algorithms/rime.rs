@@ -1,0 +1,330 @@
+//! RIME [22] — the partition-based state-of-the-art before MultPIM.
+//!
+//! RIME performs single-row multiplication with N-1 partitions, each
+//! hosting a full-adder unit (7-cycle FA, footnote 4), assuming
+//! NOT/NOR/NAND/Min3. Its bottleneck — 81% of latency — is that the
+//! partial-product distribution and the inter-partition sum transfers are
+//! *serial* (one partition per cycle), which is exactly what MultPIM's
+//! §III techniques eliminate.
+//!
+//! RIME's exact schedule is not public; the paper quotes its cost as
+//! `2*N^2 + 16*N - 19` cycles and `15*N - 12` memristors (Tables I/II).
+//! This module is a *behavioural* reconstruction: a carry-save multiplier
+//! with the same partition structure whose per-stage serial transfers
+//! reproduce the `2*N^2` term (one serial `b`-distribution pass + one
+//! serial sum-shift pass per stage) and whose FA follows RIME's 7-cycle
+//! budget. Our measured total is `2*N^2 + 12*N - 1` cycles — within ~4.5%
+//! of the quoted expression at N=32 (slightly *favourable* to the
+//! baseline, i.e. conservative for MultPIM's speedup) — and the report
+//! generators print both. See DESIGN.md §Substitutions.
+//!
+//! Structure per stage (serial parts dominate):
+//!
+//! 1. serial distribution of `b_k` to every unit (`N-1` cycles, the naive
+//!    Fig. 3(a) pattern);
+//! 2. parallel partial products (1 cycle; NAND/Min3 polarity handling);
+//! 3. parallel 7-cycle full adder (6 compute + 1 init);
+//! 4. serial sum shift (`N-1` cycles, the naive Fig. 3(c) pattern).
+
+use super::Multiplier;
+use crate::crossbar::{CellAlloc, RegionLayout};
+use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+
+/// One RIME full-adder unit.
+#[derive(Debug, Clone, Copy)]
+struct Unit {
+    a_n: Col,
+    bcell: Col,
+    /// Sum ping-pong.
+    s: [Col; 2],
+    /// Carry ping-pong.
+    c: [Col; 2],
+    /// Carry-complement ping-pong.
+    cn: [Col; 2],
+    /// Scratch (T2 of the 7-cycle FA).
+    t2: Col,
+}
+
+/// Compiled behavioural RIME multiplier.
+#[derive(Debug, Clone)]
+pub struct Rime {
+    n: u32,
+    program: Program,
+    layout: RegionLayout,
+    input_cols: Vec<Col>,
+}
+
+impl Rime {
+    /// Compile an N-bit multiplier (N in 2..=32).
+    pub fn new(n: u32) -> Self {
+        assert!((2..=32).contains(&n), "N must be in 2..=32");
+        let nn = n as usize;
+        let mut partition_starts = vec![0u32];
+        let mut alloc = CellAlloc::new(0);
+        let a_start = alloc.alloc_range("a", n);
+        let b_start = alloc.alloc_range("b", n);
+
+        // Top unit shares the input partition (carry provably zero — same
+        // merge as MultPIM, giving RIME its quoted N-1 partitions for the
+        // N-1 real FA units below).
+        let zero = alloc.alloc("u0.const0");
+        let one = alloc.alloc("u0.const1");
+        let top = Unit {
+            a_n: alloc.alloc("u0.a'"),
+            bcell: alloc.alloc("u0.b"),
+            s: [zero, zero],
+            c: [zero, zero],
+            cn: [one, one],
+            t2: alloc.alloc("u0.t2"),
+        };
+        let mut units = vec![top];
+        for _ in 1..nn {
+            partition_starts.push(alloc.next_col());
+            units.push(Unit {
+                a_n: alloc.alloc("a'"),
+                bcell: alloc.alloc("b"),
+                s: [alloc.alloc("s0"), alloc.alloc("s1")],
+                c: [alloc.alloc("c0"), alloc.alloc("c1")],
+                cn: [alloc.alloc("cn0"), alloc.alloc("cn1")],
+                t2: alloc.alloc("t2"),
+            });
+        }
+        let out_start = alloc.alloc_range("out", 2 * n);
+        let num_cols = alloc.next_col();
+        let area = alloc.used();
+
+        let partitions = PartitionMap::new(partition_starts, num_cols);
+        let mut b = ProgramBuilder::new(format!("rime-n{n}"), partitions, GateSet::Rime);
+
+        // Setup (mirrors MultPIM's: 3 grouped inits + N serial a-copies).
+        let mut zeros: Vec<Col> = units.iter().flat_map(|u| [u.s[0], u.c[0]]).collect();
+        zeros.sort_unstable();
+        zeros.dedup();
+        b.init(false, zeros);
+        let mut ones: Vec<Col> = units.iter().flat_map(|u| [u.cn[0], u.a_n]).collect();
+        ones.sort_unstable();
+        b.init(true, ones);
+        b.init(true, (out_start..out_start + 2 * n).collect());
+        for (j, u) in units.iter().enumerate() {
+            b.gate(Gate::Not, &[a_start + (n - 1 - j as u32)], u.a_n);
+        }
+
+        let (mut cur, mut nxt) = (0usize, 1usize);
+
+        // First N stages.
+        for k in 0..nn {
+            // Stage init.
+            let mut init: Vec<Col> = Vec::new();
+            for (j, u) in units.iter().enumerate() {
+                init.push(u.bcell);
+                if u.s[nxt] != u.s[cur] {
+                    init.push(u.s[nxt]);
+                }
+                if j > 0 {
+                    init.push(u.c[nxt]);
+                    init.push(u.cn[nxt]);
+                }
+                init.push(u.t2);
+            }
+            b.init(true, init);
+
+            // 1. Serial b_k distribution: one NOT per unit, one unit per
+            //    cycle (every copy reads the operand partition — RIME's
+            //    bottleneck). Every unit receives b_k'.
+            let bk = b_start + k as u32;
+            for u in &units {
+                b.gate(Gate::Not, &[bk], u.bcell);
+            }
+
+            // 2. Parallel partial products: ab = Min3(a', b', 1) = a AND b_k,
+            //    written over the received b' (NAND-free polarity fix using
+            //    the no-init trick is MultPIM's; RIME recomputes).
+            for (j, u) in units.iter().enumerate() {
+                let fresh_one = if j == 0 { one } else { u.cn[nxt] };
+                b.stage(GateOp::new(Gate::Min3, &[u.a_n, u.bcell, fresh_one], u.t2));
+            }
+            b.commit();
+
+            // 3. Full adder, 7-cycle budget (T1, Cout, bcell re-init, T2 —
+            //    plus the sum gates folded into the serial transfer below);
+            //    the top unit's carry cells are constants.
+            for u in units.iter().skip(1) {
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.t2, u.c[cur]], u.cn[nxt]); // T1
+            }
+            b.commit();
+            for u in units.iter().skip(1) {
+                b.stage_gate(Gate::Not, &[u.cn[nxt]], u.c[nxt]); // Cout
+            }
+            b.commit();
+            // Re-init bcell as FA scratch (the extra cycle of the 7-cycle FA).
+            b.init(true, units.iter().map(|u| u.bcell).collect());
+            for u in &units {
+                b.stage_gate(Gate::Min3, &[u.s[cur], u.t2, u.cn[cur]], u.bcell); // T2
+            }
+            b.commit();
+
+            // 4. Serial sum transfer (RIME's second bottleneck): the sum
+            //    S = Min3(Cout, Cin', T2) of unit j is written into unit
+            //    j+1 one unit per cycle (no §III-B parity trick).
+            b.gate(
+                Gate::Min3,
+                &[units[nn - 1].c[nxt], units[nn - 1].cn[cur], units[nn - 1].bcell],
+                out_start + k as u32,
+            );
+            for j in (0..nn - 1).rev() {
+                let u = &units[j];
+                b.gate(Gate::Min3, &[u.c[nxt], u.cn[cur], u.bcell], units[j + 1].s[nxt]);
+            }
+
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        // Final phase: the upper N product bits are S + C (the residual
+        // carry-save pair, bit i coming from unit N-1-i), computed with a
+        // serial ripple-carry adder — the "regular adder" option of §II-B.
+        // 5 cycles per bit; carries chain through each unit's idle
+        // ping-pong slots, and bit 0 borrows the top unit's constants.
+        for i in 0..nn {
+            let u = units[nn - 1 - i];
+            let (z, zn) = if i == 0 {
+                (zero, one) // carry-in = 0
+            } else {
+                let prev = units[nn - i];
+                (prev.c[nxt], prev.cn[nxt])
+            };
+            if nn - 1 - i == 0 {
+                // Top unit: its sum and carry are constant zero, so the
+                // final (most significant) bit is just the incoming carry.
+                b.gate(Gate::Not, &[zn], out_start + (n + i as u32));
+                continue;
+            }
+            b.init(true, vec![u.c[nxt], u.cn[nxt], u.t2]);
+            b.gate(Gate::Min3, &[u.s[cur], u.c[cur], z], u.cn[nxt]); // Cout'
+            b.gate(Gate::Not, &[u.cn[nxt]], u.c[nxt]); // Cout
+            b.gate(Gate::Min3, &[u.s[cur], u.c[cur], zn], u.t2); // T2
+            b.gate(Gate::Min3, &[u.c[nxt], zn, u.t2], out_start + (n + i as u32)); // S
+        }
+
+        b.set_area(area);
+        let program = b.finish();
+        let layout = RegionLayout {
+            a_start,
+            a_bits: n,
+            b_start,
+            b_bits: n,
+            out_start,
+            out_bits: 2 * n,
+        };
+        let input_cols = (a_start..a_start + n).chain(b_start..b_start + n).collect();
+        Self { n, program, layout, input_cols }
+    }
+}
+
+impl Multiplier for Rime {
+    fn name(&self) -> &'static str {
+        "RIME"
+    }
+
+    fn n_bits(&self) -> u32 {
+        self.n
+    }
+
+    fn program(&self) -> &Program {
+        &self.program
+    }
+
+    fn layout(&self) -> RegionLayout {
+        self.layout
+    }
+
+    fn input_cols(&self) -> Vec<Col> {
+        self.input_cols.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::costmodel;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn small_exhaustive() {
+        for n in [2u32, 3, 4] {
+            let m = Rime::new(n);
+            let max = 1u64 << n;
+            let mut pairs = Vec::new();
+            for a in 0..max {
+                for b in 0..max {
+                    pairs.push((a, b));
+                }
+            }
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_batches() {
+        let mut rng = SplitMix64::new(0x52494D45);
+        for n in [8u32, 16, 32] {
+            let m = Rime::new(n);
+            let pairs: Vec<(u64, u64)> =
+                (0..64).map(|_| (rng.bits(n), rng.bits(n))).collect();
+            let out = m.multiply_batch(&pairs).unwrap();
+            for (&(a, b), &got) in pairs.iter().zip(&out) {
+                assert_eq!(got, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    /// Measured latency: 2N^2 + 13N - 1 (our reconstruction), which stays
+    /// within the paper's quoted 2N^2 + 16N - 19 at the table sizes and
+    /// preserves the quadratic shape.
+    #[test]
+    fn latency_shape() {
+        for n in [8u64, 16, 32] {
+            let m = Rime::new(n as u32);
+            let measured = m.program().cycle_count() as u64;
+            assert_eq!(measured, 2 * n * n + 12 * n - 1, "N={n}");
+        }
+        for n in [16u64, 32] {
+            let measured = Rime::new(n as u32).program().cycle_count() as u64;
+            assert!(measured <= costmodel::rime_latency(n), "N={n}");
+            // Within 7% of the quoted expression.
+            let quoted = costmodel::rime_latency(n) as f64;
+            assert!((quoted - measured as f64) / quoted < 0.07, "N={n}");
+        }
+    }
+
+    /// The serial transfers dominate (the paper attributes 81% of RIME's
+    /// latency to partial-product distribution + transfers).
+    #[test]
+    fn serial_transfers_dominate() {
+        let n = 32u64;
+        let total = Rime::new(n as u32).program().cycle_count() as u64;
+        let serial_per_stage = 2 * n; // distribution + transfer
+        let share = (n * serial_per_stage) as f64 / total as f64;
+        assert!(share > 0.75, "serial share {share}");
+    }
+
+    #[test]
+    fn gate_set_and_area() {
+        let m = Rime::new(16);
+        assert_eq!(m.program().gate_set, GateSet::Rime);
+        // Our reconstruction uses 13N - 4 memristors, under the quoted
+        // 15N - 12 (see module docs).
+        assert_eq!(m.program().area_memristors as u64, 13 * 16 - 4);
+        assert!((m.program().area_memristors as u64) < costmodel::rime_area(16));
+    }
+
+    #[test]
+    fn strict_validation() {
+        for n in [2u32, 4, 8, 16, 32] {
+            let m = Rime::new(n);
+            crate::sim::validate(m.program(), &m.input_cols()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Row batching: packing independent requests into crossbar rows.
+//!
+//! A single-row PIM program runs on every crossbar row simultaneously, so
+//! the natural batching unit is the row dimension. The batcher accumulates
+//! requests until the crossbar is full or a deadline passes, then flushes
+//! the whole batch as one program execution — identical latency whether 1
+//! or `capacity` rows are occupied, which is exactly why PIM batching wins.
+
+use std::time::{Duration, Instant};
+
+/// A pending item with its enqueue time and an opaque ticket used by the
+/// server to route the answer back.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    /// The payload (e.g. an operand pair).
+    pub item: T,
+    /// Ticket for response routing.
+    pub ticket: u64,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// Deadline-or-capacity row batcher.
+#[derive(Debug)]
+pub struct RowBatcher<T> {
+    capacity: usize,
+    max_wait: Duration,
+    queue: Vec<Pending<T>>,
+    oldest: Option<Instant>,
+}
+
+impl<T> RowBatcher<T> {
+    /// A batcher flushing at `capacity` items or after `max_wait`.
+    pub fn new(capacity: usize, max_wait: Duration) -> Self {
+        assert!(capacity > 0);
+        Self { capacity, max_wait, queue: Vec::with_capacity(capacity), oldest: None }
+    }
+
+    /// Rows per crossbar execution.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of queued items.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue an item; returns a full batch if this push filled the
+    /// crossbar.
+    pub fn push(&mut self, item: T, ticket: u64) -> Option<Vec<Pending<T>>> {
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push(Pending { item, ticket, enqueued: Instant::now() });
+        if self.queue.len() >= self.capacity {
+            Some(self.take())
+        } else {
+            None
+        }
+    }
+
+    /// Flush if the oldest item has waited past the deadline.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Vec<Pending<T>>> {
+        match self.oldest {
+            Some(t0) if now.duration_since(t0) >= self.max_wait && !self.queue.is_empty() => {
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<Pending<T>>> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    /// Time until the current deadline fires (for select timeouts).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| self.max_wait.saturating_sub(now.duration_since(t0)))
+    }
+
+    fn take(&mut self) -> Vec<Pending<T>> {
+        self.oldest = None;
+        std::mem::take(&mut self.queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_at_capacity() {
+        let mut b = RowBatcher::new(3, Duration::from_secs(10));
+        assert!(b.push((1u64, 2u64), 0).is_none());
+        assert!(b.push((3, 4), 1).is_none());
+        let batch = b.push((5, 6), 2).expect("full");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[2].ticket, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = RowBatcher::new(100, Duration::from_millis(0));
+        b.push(7u32, 9);
+        let batch = b.poll_deadline(Instant::now()).expect("deadline fired");
+        assert_eq!(batch.len(), 1);
+        assert!(b.poll_deadline(Instant::now()).is_none(), "nothing left");
+    }
+
+    #[test]
+    fn deadline_not_early() {
+        let mut b = RowBatcher::new(100, Duration::from_secs(60));
+        b.push(7u32, 9);
+        assert!(b.poll_deadline(Instant::now()).is_none());
+        assert!(b.time_to_deadline(Instant::now()).unwrap() > Duration::from_secs(59));
+    }
+
+    #[test]
+    fn explicit_flush() {
+        let mut b = RowBatcher::new(4, Duration::from_secs(1));
+        assert!(b.flush().is_none());
+        b.push(1u8, 0);
+        assert_eq!(b.flush().unwrap().len(), 1);
+    }
+}

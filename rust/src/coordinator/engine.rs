@@ -1,0 +1,171 @@
+//! Execution engines: compiled PIM programs + simulators + verification.
+
+use crate::algorithms::matvec::MultPimMatVec;
+use crate::algorithms::multpim::MultPim;
+use crate::algorithms::multpim_area::MultPimArea;
+use crate::algorithms::Multiplier;
+use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
+use crate::sim::{validate, CompiledProgram, Simulator};
+use crate::Result;
+use std::time::Instant;
+
+/// Which multiplier implementation an engine deploys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineConfig {
+    /// Latency-optimized MultPIM (the default).
+    MultPim,
+    /// Area-optimized variant.
+    MultPimArea,
+}
+
+/// A multiply engine for one operand width: owns the compiled program
+/// (validated once) and executes row-batches.
+pub struct MultiplyEngine {
+    multiplier: Box<dyn Multiplier + Send + Sync>,
+    rows: usize,
+    /// Program pre-lowered for this crossbar geometry (hot path; see
+    /// EXPERIMENTS.md §Perf).
+    compiled: CompiledProgram,
+}
+
+impl MultiplyEngine {
+    /// Build and statically validate an engine.
+    pub fn new(config: EngineConfig, n_bits: u32, rows: usize) -> Result<Self> {
+        let multiplier: Box<dyn Multiplier + Send + Sync> = match config {
+            EngineConfig::MultPim => Box::new(MultPim::new(n_bits)),
+            EngineConfig::MultPimArea => Box::new(MultPimArea::new(n_bits)),
+        };
+        validate(multiplier.program(), &multiplier.input_cols())?;
+        let words = Simulator::new_single_row_batch(multiplier.program(), rows)
+            .crossbar()
+            .words_per_col();
+        let compiled = CompiledProgram::lower(multiplier.program(), words);
+        Ok(Self { multiplier, rows, compiled })
+    }
+
+    /// Operand width.
+    pub fn n_bits(&self) -> u32 {
+        self.multiplier.n_bits()
+    }
+
+    /// Rows per execution (batch capacity).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Cycles one batch costs (independent of occupancy).
+    pub fn cycles_per_batch(&self) -> u64 {
+        self.multiplier.program().cycle_count() as u64
+    }
+
+    /// Execute a batch (up to `rows` pairs); returns products and the
+    /// simulated cycle count.
+    pub fn execute(&self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, u64, std::time::Duration)> {
+        assert!(pairs.len() <= self.rows, "batch exceeds crossbar rows");
+        let t0 = Instant::now();
+        // Hot path: fixed-geometry simulator + pre-lowered program (the
+        // program was strictly validated once at construction).
+        let layout = self.multiplier.layout();
+        let mut sim = Simulator::new(self.rows, self.multiplier.program().partitions.num_cols() as usize);
+        for (row, &(a, b)) in pairs.iter().enumerate() {
+            sim.write_input(row, &layout, a, b);
+        }
+        self.compiled.execute(&mut sim);
+        let out = (0..pairs.len()).map(|r| self.multiplier.read_result(&sim, r)).collect();
+        Ok((out, self.cycles_per_batch(), t0.elapsed()))
+    }
+
+    /// Verify a deterministic batch against the arithmetic golden model.
+    pub fn verify(
+        &self,
+        runtime: &PjrtRuntime,
+        artifacts: &ArtifactSet,
+        batch: usize,
+        seed: u64,
+    ) -> Result<()> {
+        golden::verify_multiplier(runtime, artifacts, self.multiplier.as_ref(), batch, seed)
+            .map(|_| ())
+    }
+
+    /// Access the underlying multiplier (reports, traces).
+    pub fn multiplier(&self) -> &dyn Multiplier {
+        self.multiplier.as_ref()
+    }
+}
+
+/// A matvec engine wrapping the §VI fused accumulator for a fixed
+/// `(n_bits, n_elems)` shape.
+pub struct MatVecEngine {
+    engine: MultPimMatVec,
+    n_bits: u32,
+    n_elems: u32,
+}
+
+impl MatVecEngine {
+    /// Build the fused engine.
+    pub fn new(n_bits: u32, n_elems: u32) -> Self {
+        Self { engine: MultPimMatVec::new(n_bits, n_elems), n_bits, n_elems }
+    }
+
+    /// Inner dimension.
+    pub fn n_elems(&self) -> u32 {
+        self.n_elems
+    }
+
+    /// Operand width.
+    pub fn n_bits(&self) -> u32 {
+        self.n_bits
+    }
+
+    /// Simulated cycles per matvec (all rows in parallel).
+    pub fn cycles(&self) -> u64 {
+        self.engine.latency_cycles()
+    }
+
+    /// Compute `A x` for `m` rows.
+    pub fn compute(&self, rows: &[Vec<u64>], x: &[u64]) -> Result<Vec<u64>> {
+        self.engine.compute(rows, x)
+    }
+
+    /// The wrapped algorithm engine.
+    pub fn inner(&self) -> &MultPimMatVec {
+        &self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn engine_executes_batches() {
+        let engine = MultiplyEngine::new(EngineConfig::MultPim, 16, 64).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let pairs: Vec<(u64, u64)> =
+            (0..64).map(|_| (rng.bits(16), rng.bits(16))).collect();
+        let (out, cycles, _) = engine.execute(&pairs).unwrap();
+        assert_eq!(cycles, 291); // Table I, N = 16
+        for (&(a, b), &p) in pairs.iter().zip(&out) {
+            assert_eq!(p, a * b);
+        }
+    }
+
+    #[test]
+    fn area_variant_engine() {
+        let engine = MultiplyEngine::new(EngineConfig::MultPimArea, 8, 8).unwrap();
+        let (out, _, _) = engine.execute(&[(200, 19)]).unwrap();
+        assert_eq!(out[0], 3800);
+    }
+
+    #[test]
+    fn matvec_engine() {
+        let engine = MatVecEngine::new(8, 4);
+        let rows = vec![vec![1u64, 2, 3, 4], vec![255, 255, 255, 255]];
+        let x = vec![10u64, 20, 30, 40];
+        let out = engine.compute(&rows, &x).unwrap();
+        assert_eq!(out[0], 10 + 40 + 90 + 160);
+        assert_eq!(out[1], 255 * 100);
+        assert!(engine.cycles() > 0);
+    }
+}

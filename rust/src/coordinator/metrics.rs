@@ -1,0 +1,73 @@
+//! Lock-free service metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Aggregate counters exposed by the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Individual products computed (a batch of k counts k).
+    pub products: AtomicU64,
+    /// Program executions (one per flushed batch).
+    pub batches: AtomicU64,
+    /// Simulated PIM clock cycles spent.
+    pub sim_cycles: AtomicU64,
+    /// Wall-clock nanoseconds in simulation.
+    pub sim_wall_ns: AtomicU64,
+    /// Golden verifications run.
+    pub verifications: AtomicU64,
+}
+
+impl Metrics {
+    /// Record a flushed batch.
+    pub fn record_batch(&self, products: u64, cycles: u64, wall: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.products.fetch_add(products, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.sim_wall_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Human-readable snapshot.
+    pub fn snapshot(&self) -> String {
+        let products = self.products.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let cycles = self.sim_cycles.load(Ordering::Relaxed);
+        let wall_ns = self.sim_wall_ns.load(Ordering::Relaxed);
+        let thr = if wall_ns > 0 {
+            products as f64 / (wall_ns as f64 / 1e9)
+        } else {
+            0.0
+        };
+        format!(
+            "requests={} products={} batches={} avg_batch={:.1} sim_cycles={} \
+             sim_wall={:.3}s throughput={:.0} products/s",
+            self.requests.load(Ordering::Relaxed),
+            products,
+            batches,
+            if batches > 0 { products as f64 / batches as f64 } else { 0.0 },
+            cycles,
+            wall_ns as f64 / 1e9,
+            thr,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(64, 611, Duration::from_millis(2));
+        m.record_batch(64, 611, Duration::from_millis(2));
+        assert_eq!(m.products.load(Ordering::Relaxed), 128);
+        assert_eq!(m.sim_cycles.load(Ordering::Relaxed), 1222);
+        let s = m.snapshot();
+        assert!(s.contains("products=128"), "{s}");
+        assert!(s.contains("avg_batch=64.0"), "{s}");
+    }
+}

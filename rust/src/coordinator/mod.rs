@@ -1,0 +1,31 @@
+//! L3 coordinator: the serving layer over the PIM substrate.
+//!
+//! A deployment exposes fixed-point **multiply** and **matvec** operations
+//! backed by simulated memristive crossbars. The coordinator's job mirrors
+//! a serving framework's:
+//!
+//! * [`batcher`] — requests are *row-batched*: a single-row PIM program
+//!   executes identically across every crossbar row (Fig. 1), so up to
+//!   `rows` independent requests share one program execution;
+//! * [`engine`] — per-width multiplier engines and the §VI matvec engine,
+//!   with optional golden-model verification through the PJRT runtime;
+//! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model:
+//!   while partition `p_{N+1}` runs the final addition of one product, the
+//!   other partitions start the next product;
+//! * [`server`] — a thread-per-crossbar work loop with a routing front
+//!   door and metrics.
+//!
+//! The offline dependency set has no tokio, so the event loop is built on
+//! `std::thread` + `std::sync::mpsc` — same architecture, no async runtime.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::RowBatcher;
+pub use engine::{EngineConfig, MatVecEngine, MultiplyEngine};
+pub use metrics::Metrics;
+pub use pipeline::PipelineModel;
+pub use server::{Coordinator, Request, Response};

@@ -1,0 +1,297 @@
+//! The serving front door: router + worker threads + response plumbing.
+//!
+//! Architecture (thread-based; the offline dependency set has no tokio):
+//!
+//! ```text
+//!  clients ---> Coordinator::submit --- route by (op, width) ---> worker queue
+//!                                                                    |
+//!  worker thread: RowBatcher (capacity = crossbar rows, deadline) ---+
+//!      flush -> MultiplyEngine::execute (one row-parallel program run)
+//!      reply -> per-request mpsc Sender
+//! ```
+
+use super::batcher::RowBatcher;
+use super::engine::{EngineConfig, MatVecEngine, MultiplyEngine};
+use super::metrics::Metrics;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A client request.
+#[derive(Debug)]
+pub enum Request {
+    /// `a * b` for N-bit operands.
+    Multiply {
+        /// Operand width (an engine for this width must be deployed).
+        n_bits: u32,
+        /// Left operand.
+        a: u64,
+        /// Right operand.
+        b: u64,
+    },
+    /// Inner products of each row of `a` with `x` (N-bit fixed point).
+    MatVec {
+        /// Operand width.
+        n_bits: u32,
+        /// Matrix rows.
+        rows: Vec<Vec<u64>>,
+        /// Vector.
+        x: Vec<u64>,
+    },
+}
+
+/// A completed response.
+#[derive(Debug)]
+pub enum Response {
+    /// Product of a [`Request::Multiply`].
+    Product(u64),
+    /// Inner products of a [`Request::MatVec`].
+    InnerProducts(Vec<u64>),
+}
+
+enum WorkerMsg {
+    Job { a: u64, b: u64, reply: mpsc::Sender<Result<Response>> },
+    Shutdown,
+}
+
+/// The deployment: routes requests to per-width multiply workers and the
+/// matvec engines.
+pub struct Coordinator {
+    multiply_tx: HashMap<u32, mpsc::Sender<WorkerMsg>>,
+    matvec: HashMap<(u32, u32), MatVecEngine>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    tickets: AtomicU64,
+}
+
+/// Configuration for one deployed multiply width.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiplyDeployment {
+    /// Operand width in bits.
+    pub n_bits: u32,
+    /// Crossbar rows (batch capacity).
+    pub rows: usize,
+    /// Batching deadline.
+    pub max_wait: Duration,
+    /// Engine variant.
+    pub config: EngineConfig,
+}
+
+impl Coordinator {
+    /// Launch workers for the given multiply widths and build matvec
+    /// engines for the given `(n_bits, n_elems)` shapes.
+    pub fn launch(
+        multiplies: &[MultiplyDeployment],
+        matvecs: &[(u32, u32)],
+    ) -> Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+        let mut multiply_tx = HashMap::new();
+        let mut workers = Vec::new();
+        for dep in multiplies {
+            let engine = MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?;
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let metrics = Arc::clone(&metrics);
+            let dep = *dep;
+            workers.push(std::thread::spawn(move || worker_loop(engine, dep, rx, metrics)));
+            multiply_tx.insert(dep.n_bits, tx);
+        }
+        let mut matvec = HashMap::new();
+        for &(n_bits, n_elems) in matvecs {
+            matvec.insert((n_bits, n_elems), MatVecEngine::new(n_bits, n_elems));
+        }
+        Ok(Self { multiply_tx, matvec, workers, metrics, tickets: AtomicU64::new(0) })
+    }
+
+    /// Service metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.tickets.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        match request {
+            Request::Multiply { n_bits, a, b } => {
+                let tx = self.multiply_tx.get(&n_bits).ok_or_else(|| {
+                    Error::BadParameter(format!("no multiply engine deployed for N={n_bits}"))
+                })?;
+                tx.send(WorkerMsg::Job { a, b, reply: reply_tx })
+                    .map_err(|_| Error::Runtime("worker gone".into()))?;
+            }
+            Request::MatVec { n_bits, rows, x } => {
+                let engine =
+                    self.matvec.get(&(n_bits, x.len() as u32)).ok_or_else(|| {
+                        Error::BadParameter(format!(
+                            "no matvec engine for N={n_bits}, n={}",
+                            x.len()
+                        ))
+                    })?;
+                // Matvec runs synchronously on the caller thread: the whole
+                // matrix already batches across rows.
+                let t0 = Instant::now();
+                let out = engine.compute(&rows, &x);
+                self.metrics.record_batch(
+                    (rows.len() * x.len()) as u64,
+                    engine.cycles(),
+                    t0.elapsed(),
+                );
+                let _ = reply_tx.send(out.map(Response::InnerProducts));
+            }
+        }
+        Ok(reply_rx)
+    }
+
+    /// Convenience: synchronous multiply.
+    pub fn multiply(&self, n_bits: u32, a: u64, b: u64) -> Result<u64> {
+        let rx = self.submit(Request::Multiply { n_bits, a, b })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::Product(p) => Ok(p),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Convenience: synchronous matvec.
+    pub fn matvec(&self, n_bits: u32, rows: Vec<Vec<u64>>, x: Vec<u64>) -> Result<Vec<u64>> {
+        let rx = self.submit(Request::MatVec { n_bits, rows, x })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::InnerProducts(v) => Ok(v),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Graceful shutdown: flush batches and join workers.
+    pub fn shutdown(mut self) {
+        for tx in self.multiply_tx.values() {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        self.multiply_tx.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: MultiplyEngine,
+    dep: MultiplyDeployment,
+    rx: mpsc::Receiver<WorkerMsg>,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher: RowBatcher<(u64, u64, mpsc::Sender<Result<Response>>)> =
+        RowBatcher::new(dep.rows, dep.max_wait);
+    let mut ticket = 0u64;
+    loop {
+        // Wait for work, bounded by the batching deadline.
+        let timeout =
+            batcher.time_to_deadline(Instant::now()).unwrap_or(Duration::from_secs(3600));
+        let msg = rx.recv_timeout(timeout);
+        let mut shutdown = false;
+        let ready;
+        match msg {
+            Ok(WorkerMsg::Job { a, b, reply }) => {
+                ticket += 1;
+                ready = batcher.push((a, b, reply), ticket);
+            }
+            Ok(WorkerMsg::Shutdown) => {
+                shutdown = true;
+                ready = batcher.flush();
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                ready = batcher.poll_deadline(Instant::now());
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                shutdown = true;
+                ready = batcher.flush();
+            }
+        }
+        if let Some(batch) = ready {
+            let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
+            let t0 = Instant::now();
+            match engine.execute(&pairs) {
+                Ok((products, cycles, _)) => {
+                    metrics.record_batch(pairs.len() as u64, cycles, t0.elapsed());
+                    for (pending, product) in batch.into_iter().zip(products) {
+                        let _ = pending.item.2.send(Ok(Response::Product(product)));
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for pending in batch {
+                        let _ = pending.item.2.send(Err(Error::Runtime(msg.clone())));
+                    }
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deployment(n_bits: u32, rows: usize, wait_ms: u64) -> MultiplyDeployment {
+        MultiplyDeployment {
+            n_bits,
+            rows,
+            max_wait: Duration::from_millis(wait_ms),
+            config: EngineConfig::MultPim,
+        }
+    }
+
+    #[test]
+    fn multiply_roundtrip() {
+        let coord = Coordinator::launch(&[deployment(16, 4, 1)], &[]).unwrap();
+        assert_eq!(coord.multiply(16, 1234, 567).unwrap(), 1234 * 567);
+        assert!(coord.multiply(8, 1, 1).is_err(), "undeployed width rejected");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_fills_rows() {
+        let coord = Coordinator::launch(&[deployment(8, 8, 50)], &[]).unwrap();
+        let receivers: Vec<_> = (0..8u64)
+            .map(|i| {
+                coord
+                    .submit(Request::Multiply { n_bits: 8, a: i + 1, b: 17 })
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            match rx.recv().unwrap().unwrap() {
+                Response::Product(p) => assert_eq!(p, (i as u64 + 1) * 17),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // One full batch of 8 products through a single program run.
+        assert_eq!(coord.metrics().batches.load(Ordering::Relaxed), 1);
+        assert_eq!(coord.metrics().products.load(Ordering::Relaxed), 8);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_partial_batch() {
+        let coord = Coordinator::launch(&[deployment(8, 1024, 5)], &[]).unwrap();
+        let p = coord.multiply(8, 3, 5).unwrap(); // waits for the deadline
+        assert_eq!(p, 15);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn matvec_route() {
+        let coord = Coordinator::launch(&[], &[(8, 3)]).unwrap();
+        let out = coord
+            .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![7, 8, 9])
+            .unwrap();
+        assert_eq!(out, vec![7 + 16 + 27, 28 + 40 + 54]);
+        assert!(coord.matvec(8, vec![vec![1, 2]], vec![1, 2]).is_err());
+        coord.shutdown();
+    }
+}

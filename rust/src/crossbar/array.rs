@@ -1,0 +1,261 @@
+//! The crossbar state container.
+
+use crate::isa::Col;
+
+const WORD_BITS: usize = 64;
+
+/// A crossbar array of `rows x cols` memristors, bit-packed by column.
+///
+/// Storage layout: for column `c`, words `c*W .. (c+1)*W` hold the bits of
+/// all rows (row `r` lives in word `r / 64`, bit `r % 64`). Contiguous words
+/// per column make the per-gate inner loop a straight-line word scan, which
+/// the compiler auto-vectorizes.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    rows: usize,
+    cols: usize,
+    words_per_col: usize,
+    /// Mask of valid row bits in the final word of each column.
+    tail_mask: u64,
+    data: Vec<u64>,
+}
+
+impl Crossbar {
+    /// Create a crossbar with all memristors at logical 0 (HRS).
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0, "empty crossbar");
+        let words_per_col = (rows + WORD_BITS - 1) / WORD_BITS;
+        let rem = rows % WORD_BITS;
+        let tail_mask = if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 };
+        Self { rows, cols, words_per_col, tail_mask, data: vec![0; words_per_col * cols] }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Words used to store one column.
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+
+    /// Mask of valid row bits in the final word of each column.
+    pub fn tail_mask(&self) -> u64 {
+        self.tail_mask
+    }
+
+    /// Raw packed storage (column-major word blocks) — the compiled
+    /// execution path writes through this directly.
+    pub fn data_mut(&mut self) -> &mut [u64] {
+        &mut self.data
+    }
+
+    #[inline]
+    fn col_range(&self, col: Col) -> std::ops::Range<usize> {
+        let c = col as usize;
+        debug_assert!(c < self.cols, "column {c} out of bounds ({})", self.cols);
+        c * self.words_per_col..(c + 1) * self.words_per_col
+    }
+
+    /// Immutable word slice of a column.
+    #[inline]
+    pub fn col(&self, col: Col) -> &[u64] {
+        &self.data[self.col_range(col)]
+    }
+
+    /// Mutable word slice of a column.
+    #[inline]
+    pub fn col_mut(&mut self, col: Col) -> &mut [u64] {
+        let r = self.col_range(col);
+        &mut self.data[r]
+    }
+
+    /// Read a single bit.
+    pub fn get(&self, row: usize, col: Col) -> bool {
+        assert!(row < self.rows, "row {row} out of bounds");
+        let w = self.col(col)[row / WORD_BITS];
+        w >> (row % WORD_BITS) & 1 == 1
+    }
+
+    /// Write a single bit.
+    pub fn set(&mut self, row: usize, col: Col, value: bool) {
+        assert!(row < self.rows, "row {row} out of bounds");
+        let word = &mut self.col_mut(col)[row / WORD_BITS];
+        let mask = 1u64 << (row % WORD_BITS);
+        if value {
+            *word |= mask;
+        } else {
+            *word &= !mask;
+        }
+    }
+
+    /// Set every row of `col` to `value` (an initialization micro-op).
+    pub fn fill_col(&mut self, col: Col, value: bool) {
+        let tail_mask = self.tail_mask;
+        let n = self.words_per_col;
+        let words = self.col_mut(col);
+        let fill = if value { u64::MAX } else { 0 };
+        for w in words.iter_mut().take(n) {
+            *w = fill;
+        }
+        if value {
+            words[n - 1] &= tail_mask;
+        }
+    }
+
+    /// Write an N-bit little-endian unsigned value into consecutive columns
+    /// `start..start+n` of `row` (bit `i` of `value` goes to `start + i`).
+    pub fn write_bits(&mut self, row: usize, start: Col, n: u32, value: u64) {
+        assert!(n <= 64);
+        for i in 0..n {
+            self.set(row, start + i, value >> i & 1 == 1);
+        }
+    }
+
+    /// Read an N-bit little-endian unsigned value from consecutive columns.
+    pub fn read_bits(&self, row: usize, start: Col, n: u32) -> u64 {
+        assert!(n <= 64);
+        let mut v = 0u64;
+        for i in 0..n {
+            if self.get(row, start + i) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// Apply a word-wise unary function from column `a` into `out`:
+    /// `out[w] = out[w] AND f(a[w])` when `no_init` is set,
+    /// `out[w] = f(a[w])` otherwise (the output is assumed initialized).
+    ///
+    /// The simulator uses [`Self::apply3`] for everything; this specialized
+    /// path exists for the hot single-input NOT.
+    #[inline]
+    pub fn apply1(&mut self, a: Col, out: Col, f: impl Fn(u64) -> u64, no_init: bool) {
+        let (a_ptr, o_range) = (self.col_range(a), self.col_range(out));
+        debug_assert_ne!(a, out, "in-place gate");
+        let (n, tail) = (self.words_per_col, self.tail_mask);
+        // Split borrows: columns never alias (checked above).
+        let data = &mut self.data;
+        for i in 0..n {
+            let av = data[a_ptr.start + i];
+            let r = f(av) & if i + 1 == n { tail } else { u64::MAX };
+            let o = &mut data[o_range.start + i];
+            *o = if no_init { *o & r } else { r };
+        }
+    }
+
+    /// Apply a word-wise ternary function, same init semantics as `apply1`.
+    #[inline]
+    pub fn apply3(
+        &mut self,
+        a: Col,
+        b: Col,
+        c: Col,
+        out: Col,
+        f: impl Fn(u64, u64, u64) -> u64,
+        no_init: bool,
+    ) {
+        debug_assert!(a != out && b != out && c != out, "in-place gate");
+        let (ar, br, cr, or) =
+            (self.col_range(a), self.col_range(b), self.col_range(c), self.col_range(out));
+        let (n, tail) = (self.words_per_col, self.tail_mask);
+        let data = &mut self.data;
+        for i in 0..n {
+            let (av, bv, cv) = (data[ar.start + i], data[br.start + i], data[cr.start + i]);
+            let r = f(av, bv, cv) & if i + 1 == n { tail } else { u64::MAX };
+            let o = &mut data[or.start + i];
+            *o = if no_init { *o & r } else { r };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut xb = Crossbar::new(100, 8);
+        xb.set(63, 3, true);
+        xb.set(64, 3, true);
+        xb.set(99, 7, true);
+        assert!(xb.get(63, 3));
+        assert!(xb.get(64, 3));
+        assert!(xb.get(99, 7));
+        assert!(!xb.get(0, 3));
+        xb.set(63, 3, false);
+        assert!(!xb.get(63, 3));
+    }
+
+    #[test]
+    fn value_roundtrip() {
+        let mut xb = Crossbar::new(3, 70);
+        xb.write_bits(1, 2, 64, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(xb.read_bits(1, 2, 64), 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(xb.read_bits(0, 2, 64), 0);
+        xb.write_bits(2, 0, 16, 0xABCD);
+        assert_eq!(xb.read_bits(2, 0, 16), 0xABCD);
+    }
+
+    #[test]
+    fn fill_respects_tail_mask() {
+        let mut xb = Crossbar::new(65, 2);
+        xb.fill_col(1, true);
+        for r in 0..65 {
+            assert!(xb.get(r, 1));
+        }
+        // The packed representation must not set bits beyond `rows`.
+        assert_eq!(xb.col(1)[1], 1, "only bit 0 of the tail word is a real row");
+        xb.fill_col(1, false);
+        assert_eq!(xb.col(1), &[0, 0]);
+    }
+
+    #[test]
+    fn apply1_not_with_init_semantics() {
+        let mut xb = Crossbar::new(70, 3);
+        xb.set(0, 0, true);
+        xb.set(69, 0, false);
+        // Initialized output: plain NOT.
+        xb.fill_col(1, true);
+        xb.apply1(0, 1, |a| !a, false);
+        assert!(!xb.get(0, 1));
+        assert!(xb.get(69, 1));
+        // No-init over a zero column: stays zero (0 AND x = 0).
+        xb.apply1(0, 2, |a| !a, true);
+        for r in 0..70 {
+            assert!(!xb.get(r, 2));
+        }
+    }
+
+    #[test]
+    fn apply3_min3() {
+        let mut xb = Crossbar::new(8, 5);
+        // rows: a=0b00001111, b=0b00110011, c=0b01010101 across rows 0..8
+        for r in 0..8 {
+            xb.set(r, 0, r & 4 == 0); // a
+            xb.set(r, 1, r & 2 == 0); // b
+            xb.set(r, 2, r & 1 == 0); // c
+        }
+        xb.fill_col(3, true);
+        xb.apply3(0, 1, 2, 3, |a, b, c| !((a & b) | (a & c) | (b & c)), false);
+        for r in 0..8 {
+            let (a, b, c) = (r & 4 == 0, r & 2 == 0, r & 1 == 0);
+            let maj = (a & b) | (a & c) | (b & c);
+            assert_eq!(xb.get(r, 3), !maj, "row {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn row_bounds_checked() {
+        let xb = Crossbar::new(4, 4);
+        let _ = xb.get(4, 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Column allocation and I/O layout for compiled algorithms.
+
+use crate::isa::Col;
+
+/// A sequential named-cell allocator used by algorithm compilers to lay out
+/// the memristors of a row region (e.g. one full-adder partition).
+///
+/// Every allocation is recorded with a name so that the area accounting in
+/// Table II can be audited cell-by-cell (`repro report table2 --audit`).
+#[derive(Debug, Clone)]
+pub struct CellAlloc {
+    start: Col,
+    next: Col,
+    named: Vec<(&'static str, Col, u32)>,
+}
+
+impl CellAlloc {
+    /// Start allocating at `start`.
+    pub fn new(start: Col) -> Self {
+        Self { start, next: start, named: Vec::new() }
+    }
+
+    /// Allocate one cell.
+    pub fn alloc(&mut self, name: &'static str) -> Col {
+        let c = self.next;
+        self.next += 1;
+        self.named.push((name, c, 1));
+        c
+    }
+
+    /// Allocate `n` contiguous cells; returns the first column.
+    pub fn alloc_range(&mut self, name: &'static str, n: u32) -> Col {
+        assert!(n > 0);
+        let c = self.next;
+        self.next += n;
+        self.named.push((name, c, n));
+        c
+    }
+
+    /// Number of cells allocated so far.
+    pub fn used(&self) -> u32 {
+        self.next - self.start
+    }
+
+    /// The next free column (also the exclusive end of the region).
+    pub fn next_col(&self) -> Col {
+        self.next
+    }
+
+    /// Audit listing: `(name, first_col, count)` per allocation.
+    pub fn audit(&self) -> &[(&'static str, Col, u32)] {
+        &self.named
+    }
+}
+
+/// Where a single-row algorithm expects its operands and leaves its result.
+///
+/// All ranges are little-endian: bit `i` of the value lives at
+/// `start + i`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionLayout {
+    /// First column and width of operand `a`.
+    pub a_start: Col,
+    /// Bit width of `a`.
+    pub a_bits: u32,
+    /// First column and width of operand `b`.
+    pub b_start: Col,
+    /// Bit width of `b`.
+    pub b_bits: u32,
+    /// First column and width of the result.
+    pub out_start: Col,
+    /// Bit width of the result.
+    pub out_bits: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_allocation() {
+        let mut a = CellAlloc::new(10);
+        assert_eq!(a.alloc("x"), 10);
+        assert_eq!(a.alloc_range("v", 4), 11);
+        assert_eq!(a.alloc("y"), 15);
+        assert_eq!(a.used(), 6);
+        assert_eq!(a.next_col(), 16);
+        assert_eq!(a.audit(), &[("x", 10, 1), ("v", 11, 4), ("y", 15, 1)]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Bit-parallel model of a memristive crossbar array.
+//!
+//! The array stores one bit per memristor. Because stateful logic applies
+//! the *same* gate across every row in a single cycle (Fig. 1 of the paper),
+//! the simulator packs rows into 64-bit words per column: a gate becomes a
+//! handful of word-wide boolean operations per 64 rows — this is the L3 hot
+//! path and the reason single-row algorithms scale to full-array workloads.
+
+mod array;
+mod layout;
+
+pub use array::Crossbar;
+pub use layout::{CellAlloc, RegionLayout};

@@ -1,0 +1,97 @@
+//! Fixed-point arithmetic semantics shared by the PIM algorithms, the
+//! coordinator, and the golden models.
+//!
+//! The paper's multipliers operate on N-bit unsigned fixed-point operands
+//! and produce exact 2N-bit products. The matrix-vector engine (§VI)
+//! accumulates in a 2N-bit carry-save representation, i.e. arithmetic is
+//! modulo `2^(2N)`. These helpers centralize that semantics so the Rust
+//! simulator, the JAX/Pallas golden kernels, and the tests can never
+//! disagree about rounding or overflow.
+
+/// Exact full product of two N-bit unsigned values (N <= 32), as the
+/// 2N-bit value the PIM multipliers produce.
+pub fn widening_mul(n_bits: u32, a: u64, b: u64) -> u64 {
+    assert!(n_bits <= 32, "widening_mul supports N <= 32 (2N must fit u64)");
+    debug_assert!(fits(n_bits, a) && fits(n_bits, b), "operands must be N-bit");
+    a * b
+}
+
+/// `x (mod 2^bits)` — the wrap applied by 2N-bit carry-save accumulation.
+pub fn wrap(bits: u32, x: u128) -> u64 {
+    assert!(bits >= 1 && bits <= 64);
+    if bits == 64 {
+        x as u64
+    } else {
+        (x as u64) & ((1u64 << bits) - 1)
+    }
+}
+
+/// Whether `x` fits in `bits` bits.
+pub fn fits(bits: u32, x: u64) -> bool {
+    bits >= 64 || x < (1u64 << bits)
+}
+
+/// Reference inner product modulo `2^(2N)`: what one crossbar row of the §VI
+/// matrix-vector engine computes for an n-element row of A against x.
+pub fn inner_product_mod(n_bits: u32, row: &[u64], x: &[u64]) -> u64 {
+    assert_eq!(row.len(), x.len());
+    let mut acc: u128 = 0;
+    for (&a, &b) in row.iter().zip(x) {
+        acc += widening_mul(n_bits, a, b) as u128;
+    }
+    wrap(2 * n_bits, acc)
+}
+
+/// Split a 2N-bit value into (low N bits, high N bits).
+pub fn split(n_bits: u32, v: u64) -> (u64, u64) {
+    assert!(n_bits <= 32);
+    let mask = (1u64 << n_bits) - 1;
+    (v & mask, (v >> n_bits) & mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn widening_mul_exact() {
+        assert_eq!(widening_mul(32, u32::MAX as u64, u32::MAX as u64), 0xFFFF_FFFE_0000_0001);
+        assert_eq!(widening_mul(16, 0xFFFF, 0xFFFF), 0xFFFE_0001);
+        assert_eq!(widening_mul(4, 15, 15), 225);
+    }
+
+    #[test]
+    fn wrap_behaviour() {
+        assert_eq!(wrap(8, 0x1FF), 0xFF);
+        assert_eq!(wrap(64, u128::MAX), u64::MAX);
+        assert_eq!(wrap(1, 3), 1);
+    }
+
+    #[test]
+    fn inner_product_matches_naive() {
+        let mut rng = SplitMix64::new(77);
+        for n_bits in [4u32, 8, 16, 32] {
+            for _ in 0..50 {
+                let len = 1 + rng.below(8) as usize;
+                let row: Vec<u64> = (0..len).map(|_| rng.bits(n_bits)).collect();
+                let x: Vec<u64> = (0..len).map(|_| rng.bits(n_bits)).collect();
+                let naive = row
+                    .iter()
+                    .zip(&x)
+                    .fold(0u128, |acc, (&a, &b)| acc + (a as u128) * (b as u128));
+                assert_eq!(inner_product_mod(n_bits, &row, &x), wrap(2 * n_bits, naive));
+            }
+        }
+    }
+
+    #[test]
+    fn split_roundtrip() {
+        let (lo, hi) = split(16, 0xABCD_1234);
+        assert_eq!(lo, 0x1234);
+        assert_eq!(hi, 0xABCD);
+        let (lo, hi) = split(32, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(lo, 0xCAFE_F00D);
+        assert_eq!(hi, 0xDEAD_BEEF);
+    }
+}

@@ -1,0 +1,187 @@
+//! Stateful-logic gate types and gate-set restrictions.
+
+use std::fmt;
+
+/// A stateful logic gate computable within a memristive crossbar row.
+///
+/// Truth tables operate on 64 rows at a time in the simulator (bit-packed
+/// words), so each variant documents its word-level evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// `out = NOT a` — MAGIC NOT [11].
+    Not,
+    /// `out = NOT (a OR b)` — MAGIC NOR [11].
+    Nor2,
+    /// `out = NOT (a OR b OR c)` — MAGIC 3-input NOR.
+    Nor3,
+    /// `out = a OR b` — FELIX OR [12].
+    Or2,
+    /// `out = NOT (a AND b)` — FELIX NAND [12].
+    Nand2,
+    /// `out = NOT majority(a, b, c)` — FELIX Minority3 [12].
+    Min3,
+}
+
+impl Gate {
+    /// Number of input operands.
+    pub fn arity(self) -> usize {
+        match self {
+            Gate::Not => 1,
+            Gate::Nor2 | Gate::Or2 | Gate::Nand2 => 2,
+            Gate::Nor3 | Gate::Min3 => 3,
+        }
+    }
+
+    /// Evaluate the gate over bit-packed words (one bit per crossbar row).
+    ///
+    /// Unused operands must be passed as zero; they are ignored.
+    #[inline]
+    pub fn eval_words(self, a: u64, b: u64, c: u64) -> u64 {
+        match self {
+            Gate::Not => !a,
+            Gate::Nor2 => !(a | b),
+            Gate::Nor3 => !(a | b | c),
+            Gate::Or2 => a | b,
+            Gate::Nand2 => !(a & b),
+            Gate::Min3 => !((a & b) | (a & c) | (b & c)),
+        }
+    }
+
+    /// Evaluate on single bits (used by tests and the trace printer).
+    pub fn eval_bits(self, a: bool, b: bool, c: bool) -> bool {
+        let w = self.eval_words(a as u64, b as u64, c as u64);
+        w & 1 == 1
+    }
+}
+
+impl fmt::Display for Gate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Gate::Not => "NOT",
+            Gate::Nor2 => "NOR2",
+            Gate::Nor3 => "NOR3",
+            Gate::Or2 => "OR2",
+            Gate::Nand2 => "NAND2",
+            Gate::Min3 => "MIN3",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A restriction on which gates an algorithm may emit.
+///
+/// The paper compares algorithms under explicit gate-set assumptions
+/// (footnote 1): Haj-Ali et al. assume NOT/NOR, RIME assumes
+/// NOT/NOR/NAND/Min3, and MultPIM assumes NOT/Min3 only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateSet {
+    /// MAGIC-only: NOT, NOR2, NOR3 (Haj-Ali et al. [19]).
+    Magic,
+    /// RIME's assumption: NOT, NOR, NAND, Min3 [22].
+    Rime,
+    /// MultPIM's assumption: NOT, Min3 only (fair comparison to RIME).
+    NotMin3,
+    /// Everything this simulator knows (FELIX superset, used by ablations).
+    Full,
+}
+
+impl GateSet {
+    /// Whether `gate` is a member of this set.
+    pub fn allows(self, gate: Gate) -> bool {
+        match self {
+            GateSet::Magic => matches!(gate, Gate::Not | Gate::Nor2 | Gate::Nor3),
+            GateSet::Rime => matches!(
+                gate,
+                Gate::Not | Gate::Nor2 | Gate::Nor3 | Gate::Nand2 | Gate::Min3
+            ),
+            GateSet::NotMin3 => matches!(gate, Gate::Not | Gate::Min3),
+            GateSet::Full => true,
+        }
+    }
+
+    /// Human-readable name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            GateSet::Magic => "NOT/NOR",
+            GateSet::Rime => "NOT/NOR/NAND/Min3",
+            GateSet::NotMin3 => "NOT/Min3",
+            GateSet::Full => "full FELIX",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive truth-table check of every gate against a naive
+    /// bit-level reference.
+    #[test]
+    fn truth_tables() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    assert_eq!(Gate::Not.eval_bits(a, b, c), !a);
+                    assert_eq!(Gate::Nor2.eval_bits(a, b, c), !(a | b));
+                    assert_eq!(Gate::Nor3.eval_bits(a, b, c), !(a | b | c));
+                    assert_eq!(Gate::Or2.eval_bits(a, b, c), a | b);
+                    assert_eq!(Gate::Nand2.eval_bits(a, b, c), !(a & b));
+                    let maj = (a & b) | (a & c) | (b & c);
+                    assert_eq!(Gate::Min3.eval_bits(a, b, c), !maj);
+                }
+            }
+        }
+    }
+
+    /// Word-level evaluation must equal 64 independent bit evaluations.
+    #[test]
+    fn word_eval_is_bitwise() {
+        let mut rng = crate::util::SplitMix64::new(0xDEAD);
+        for gate in [Gate::Not, Gate::Nor2, Gate::Nor3, Gate::Or2, Gate::Nand2, Gate::Min3] {
+            for _ in 0..50 {
+                let (a, b, c) = (rng.next_u64(), rng.next_u64(), rng.next_u64());
+                let w = gate.eval_words(a, b, c);
+                for bit in 0..64 {
+                    let expect = gate.eval_bits(
+                        a >> bit & 1 == 1,
+                        b >> bit & 1 == 1,
+                        c >> bit & 1 == 1,
+                    );
+                    assert_eq!(w >> bit & 1 == 1, expect, "{gate} bit {bit}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min3_is_inverted_majority() {
+        // With a constant third input: Min3(a, b, 1) == NOR(a, b) (the §IV-B2
+        // partial-product trick uses Min3(a', b', 1) = a AND b) and
+        // Min3(a, b, 0) == NAND(a, b).
+        for a in [false, true] {
+            for b in [false, true] {
+                assert_eq!(Gate::Min3.eval_bits(a, b, true), !(a | b));
+                assert_eq!(Gate::Min3.eval_bits(a, b, false), !(a & b));
+            }
+        }
+    }
+
+    #[test]
+    fn gate_sets() {
+        assert!(GateSet::Magic.allows(Gate::Nor2));
+        assert!(!GateSet::Magic.allows(Gate::Min3));
+        assert!(GateSet::NotMin3.allows(Gate::Min3));
+        assert!(GateSet::NotMin3.allows(Gate::Not));
+        assert!(!GateSet::NotMin3.allows(Gate::Nor2));
+        assert!(GateSet::Rime.allows(Gate::Nand2));
+        assert!(!GateSet::Rime.allows(Gate::Or2));
+        assert!(GateSet::Full.allows(Gate::Or2));
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(Gate::Not.arity(), 1);
+        assert_eq!(Gate::Nand2.arity(), 2);
+        assert_eq!(Gate::Min3.arity(), 3);
+    }
+}

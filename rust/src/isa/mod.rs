@@ -1,0 +1,37 @@
+//! The stateful-logic instruction set architecture.
+//!
+//! In-memory algorithms (MultPIM, RIME, Haj-Ali, adders...) are *compiled*
+//! to [`Program`]s: sequences of [`Cycle`]s, each containing the micro-ops
+//! that execute simultaneously in one crossbar clock cycle. The
+//! cycle-accurate simulator ([`crate::sim`]) executes programs and the
+//! legality checker enforces the physical constraints of stateful logic
+//! (partition isolation, output initialization, gate-set restrictions).
+//!
+//! ## Execution model (matching the paper's assumptions, §II-A)
+//!
+//! * A gate reads 1-3 input cells and conditionally switches one output cell
+//!   within the same row. The same gate is applied in *all* rows of the
+//!   crossbar simultaneously (row parallelism, Fig. 1).
+//! * A MAGIC/FELIX-style gate requires its output cell to be initialized to
+//!   logical 1; execution computes `out = out_old AND g(inputs)`. For an
+//!   initialized cell this equals `g(inputs)`; skipping initialization
+//!   implements the X-MAGIC "AND with previous value" trick ([26], §II-A).
+//! * Initialization cycles set any set of cells to a constant; one cycle per
+//!   constant value (the paper counts one init cycle per multiplier stage).
+//! * Column partitions [12] isolate crossbar segments; micro-ops in the same
+//!   cycle must occupy pairwise-disjoint partition *intervals* — a gate that
+//!   spans partitions `i..j` requires all transistors between them to
+//!   conduct, so nothing else may execute in `i..j`.
+
+mod gate;
+mod op;
+mod program;
+mod stats;
+
+pub use gate::{Gate, GateSet};
+pub use op::{Cycle, GateOp, Op};
+pub use program::{Program, ProgramBuilder};
+pub use stats::{OpStats, PartitionMap};
+
+/// A column index within a crossbar row.
+pub type Col = u32;

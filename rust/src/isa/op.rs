@@ -1,0 +1,155 @@
+//! Micro-operations and cycles.
+
+use super::{Col, Gate};
+use std::fmt;
+
+/// A single stateful-logic gate application within one cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GateOp {
+    /// The gate to apply.
+    pub gate: Gate,
+    /// Input columns; only the first `gate.arity()` entries are used.
+    pub inputs: [Col; 3],
+    /// Output column.
+    pub output: Col,
+    /// Skip output initialization: the output keeps
+    /// `old AND g(inputs)` (X-MAGIC no-init trick [26]).
+    ///
+    /// When `false` the legality checker (strict mode) requires the output
+    /// cell to have been initialized to 1 since it was last written.
+    pub no_init: bool,
+}
+
+impl GateOp {
+    /// Convenience constructor for an ordinary (initialized-output) gate.
+    pub fn new(gate: Gate, inputs: &[Col], output: Col) -> Self {
+        Self::build(gate, inputs, output, false)
+    }
+
+    /// Convenience constructor for a no-init gate.
+    pub fn no_init(gate: Gate, inputs: &[Col], output: Col) -> Self {
+        Self::build(gate, inputs, output, true)
+    }
+
+    fn build(gate: Gate, inputs: &[Col], output: Col, no_init: bool) -> Self {
+        assert_eq!(
+            inputs.len(),
+            gate.arity(),
+            "{gate} takes {} inputs, got {}",
+            gate.arity(),
+            inputs.len()
+        );
+        let mut padded = [0; 3];
+        padded[..inputs.len()].copy_from_slice(inputs);
+        GateOp { gate, inputs: padded, output, no_init }
+    }
+
+    /// The columns this op touches (inputs then output).
+    pub fn columns(&self) -> impl Iterator<Item = Col> + '_ {
+        self.inputs[..self.gate.arity()].iter().copied().chain(std::iter::once(self.output))
+    }
+
+    /// Inclusive column span `[min, max]` this op occupies.
+    pub fn span(&self) -> (Col, Col) {
+        let mut lo = self.output;
+        let mut hi = self.output;
+        for c in self.columns() {
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        (lo, hi)
+    }
+}
+
+impl fmt::Display for GateOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ins: Vec<String> =
+            self.inputs[..self.gate.arity()].iter().map(|c| c.to_string()).collect();
+        write!(
+            f,
+            "{}({}) -> {}{}",
+            self.gate,
+            ins.join(","),
+            self.output,
+            if self.no_init { " [no-init]" } else { "" }
+        )
+    }
+}
+
+/// One crossbar clock cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Cycle {
+    /// An initialization cycle: set every listed cell to `value`.
+    ///
+    /// Matches the paper's cycle accounting: one init cycle per constant,
+    /// initializing any set of cells (the same voltage is applied to every
+    /// listed bitline).
+    Init { value: bool, outputs: Vec<Col> },
+    /// A compute cycle: a set of gates executing simultaneously in
+    /// pairwise-disjoint partition intervals.
+    Gates(Vec<GateOp>),
+}
+
+impl Cycle {
+    /// Number of individual micro-ops in this cycle.
+    pub fn op_count(&self) -> usize {
+        match self {
+            Cycle::Init { outputs, .. } => outputs.len(),
+            Cycle::Gates(g) => g.len(),
+        }
+    }
+
+    /// Largest column referenced, or `None` for an empty cycle.
+    pub fn max_col(&self) -> Option<Col> {
+        match self {
+            Cycle::Init { outputs, .. } => outputs.iter().copied().max(),
+            Cycle::Gates(g) => g.iter().map(|op| op.span().1).max(),
+        }
+    }
+}
+
+/// A generic micro-op view used by trace printers.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Initialization of one cell.
+    Init { value: bool, output: Col },
+    /// A gate application.
+    Gate(GateOp),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_covers_inputs_and_output() {
+        let op = GateOp::new(Gate::Min3, &[10, 3, 7], 5);
+        assert_eq!(op.span(), (3, 10));
+        let op = GateOp::new(Gate::Not, &[2], 9);
+        assert_eq!(op.span(), (2, 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "takes 2 inputs")]
+    fn arity_checked() {
+        let _ = GateOp::new(Gate::Nor2, &[1, 2, 3], 4);
+    }
+
+    #[test]
+    fn cycle_max_col() {
+        let c = Cycle::Gates(vec![
+            GateOp::new(Gate::Not, &[1], 2),
+            GateOp::new(Gate::Nor2, &[5, 6], 40),
+        ]);
+        assert_eq!(c.max_col(), Some(40));
+        let i = Cycle::Init { value: true, outputs: vec![3, 99, 7] };
+        assert_eq!(i.max_col(), Some(99));
+        assert_eq!(Cycle::Gates(vec![]).max_col(), None);
+    }
+
+    #[test]
+    fn display_format() {
+        let op = GateOp::no_init(Gate::Not, &[4], 8);
+        assert_eq!(op.to_string(), "NOT(4) -> 8 [no-init]");
+    }
+}

@@ -1,0 +1,246 @@
+//! Programs: compiled stateful-logic schedules.
+
+use super::{Col, Cycle, Gate, GateOp, GateSet, OpStats, PartitionMap};
+
+/// A compiled in-memory program: the cycle-by-cycle schedule an algorithm
+/// executes on a crossbar row (replicated across all rows).
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Human-readable name (used in traces and reports).
+    pub name: String,
+    /// The cycle schedule.
+    pub cycles: Vec<Cycle>,
+    /// Partition geometry the schedule assumes.
+    pub partitions: PartitionMap,
+    /// Gate set the algorithm claims to use (checked by the simulator).
+    pub gate_set: GateSet,
+    /// Number of memristors (columns) the algorithm accounts for; this is
+    /// the paper's *area* metric. It may be smaller than
+    /// `partitions.num_cols()` when the layout leaves alignment gaps.
+    pub area_memristors: u32,
+}
+
+impl Program {
+    /// Total clock cycles (the paper's latency metric).
+    pub fn cycle_count(&self) -> usize {
+        self.cycles.len()
+    }
+
+    /// Statistics of the schedule (without executing it).
+    pub fn stats(&self) -> OpStats {
+        let mut s = OpStats::default();
+        for c in &self.cycles {
+            s.record(c);
+        }
+        s
+    }
+
+    /// Number of partitions used.
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Largest column referenced by any cycle.
+    pub fn max_col(&self) -> Option<Col> {
+        self.cycles.iter().filter_map(|c| c.max_col()).max()
+    }
+
+    /// Render the first `limit` cycles as a human-readable trace.
+    pub fn trace(&self, limit: usize) -> String {
+        let mut out = String::new();
+        for (i, cycle) in self.cycles.iter().take(limit).enumerate() {
+            match cycle {
+                Cycle::Init { value, outputs } => {
+                    out.push_str(&format!(
+                        "cycle {i:5}: INIT{} x{} {:?}\n",
+                        *value as u8,
+                        outputs.len(),
+                        &outputs[..outputs.len().min(8)]
+                    ));
+                }
+                Cycle::Gates(g) => {
+                    let ops: Vec<String> = g.iter().take(6).map(|o| o.to_string()).collect();
+                    out.push_str(&format!("cycle {i:5}: {}\n", ops.join(" | ")));
+                }
+            }
+        }
+        if self.cycles.len() > limit {
+            out.push_str(&format!("... ({} more cycles)\n", self.cycles.len() - limit));
+        }
+        out
+    }
+}
+
+/// Incremental builder used by the algorithm compilers.
+///
+/// The builder collects cycles and can *stage* parallel gates: ops added to
+/// the pending cycle are emitted together (and must be legal together —
+/// the simulator validates on execution, and `debug_assert`s catch obvious
+/// mistakes early).
+#[derive(Debug)]
+pub struct ProgramBuilder {
+    name: String,
+    cycles: Vec<Cycle>,
+    partitions: PartitionMap,
+    gate_set: GateSet,
+    pending: Vec<GateOp>,
+    area_memristors: u32,
+}
+
+impl ProgramBuilder {
+    /// Start building a program.
+    pub fn new(name: impl Into<String>, partitions: PartitionMap, gate_set: GateSet) -> Self {
+        Self {
+            name: name.into(),
+            cycles: Vec::new(),
+            partitions,
+            gate_set,
+            pending: Vec::new(),
+            area_memristors: 0,
+        }
+    }
+
+    /// Set the accounted memristor count (area metric).
+    pub fn set_area(&mut self, memristors: u32) {
+        self.area_memristors = memristors;
+    }
+
+    /// Add a gate to the pending (parallel) cycle.
+    pub fn stage(&mut self, op: GateOp) -> &mut Self {
+        debug_assert!(
+            self.gate_set.allows(op.gate),
+            "gate {} not in set {}",
+            op.gate,
+            self.gate_set.name()
+        );
+        self.pending.push(op);
+        self
+    }
+
+    /// Shorthand: stage a gate from parts.
+    pub fn stage_gate(&mut self, gate: Gate, inputs: &[Col], output: Col) -> &mut Self {
+        self.stage(GateOp::new(gate, inputs, output))
+    }
+
+    /// Shorthand: stage a no-init gate from parts.
+    pub fn stage_no_init(&mut self, gate: Gate, inputs: &[Col], output: Col) -> &mut Self {
+        self.stage(GateOp::no_init(gate, inputs, output))
+    }
+
+    /// Emit the pending gates as one cycle. Panics if nothing is pending
+    /// (empty cycles are always a compiler bug).
+    pub fn commit(&mut self) -> &mut Self {
+        assert!(!self.pending.is_empty(), "committing an empty cycle");
+        let ops = std::mem::take(&mut self.pending);
+        self.cycles.push(Cycle::Gates(ops));
+        self
+    }
+
+    /// Emit a single-gate cycle.
+    pub fn gate(&mut self, gate: Gate, inputs: &[Col], output: Col) -> &mut Self {
+        assert!(self.pending.is_empty(), "pending ops exist; commit first");
+        self.stage_gate(gate, inputs, output);
+        self.commit()
+    }
+
+    /// Emit an initialization cycle over `outputs`.
+    pub fn init(&mut self, value: bool, outputs: Vec<Col>) -> &mut Self {
+        assert!(self.pending.is_empty(), "pending ops exist; commit first");
+        assert!(!outputs.is_empty(), "empty init cycle");
+        self.cycles.push(Cycle::Init { value, outputs });
+        self
+    }
+
+    /// Number of cycles emitted so far.
+    pub fn cycle_count(&self) -> usize {
+        self.cycles.len()
+    }
+
+    /// Finish and produce the [`Program`].
+    pub fn finish(mut self) -> Program {
+        assert!(self.pending.is_empty(), "unfinished pending cycle");
+        if self.area_memristors == 0 {
+            // Default area accounting: every column ever referenced.
+            let mut seen = std::collections::BTreeSet::new();
+            for c in &self.cycles {
+                match c {
+                    Cycle::Init { outputs, .. } => seen.extend(outputs.iter().copied()),
+                    Cycle::Gates(g) => {
+                        for op in g {
+                            seen.extend(op.columns());
+                        }
+                    }
+                }
+            }
+            self.area_memristors = seen.len() as u32;
+        }
+        Program {
+            name: self.name,
+            cycles: self.cycles,
+            partitions: self.partitions,
+            gate_set: self.gate_set,
+            area_memristors: self.area_memristors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pmap() -> PartitionMap {
+        PartitionMap::new(vec![0, 8], 16)
+    }
+
+    #[test]
+    fn build_simple_program() {
+        let mut b = ProgramBuilder::new("t", pmap(), GateSet::Full);
+        b.init(true, vec![1, 2]);
+        b.gate(Gate::Not, &[0], 1);
+        b.stage_gate(Gate::Not, &[2], 3).stage_gate(Gate::Not, &[8], 9).commit();
+        let p = b.finish();
+        assert_eq!(p.cycle_count(), 3);
+        let s = p.stats();
+        assert_eq!(s.cycles, 3);
+        assert_eq!(s.init_cycles, 1);
+        assert_eq!(s.gate_ops, 3);
+        assert_eq!(s.max_parallel_ops, 2);
+        // Default area: columns {0,1,2,3,8,9}.
+        assert_eq!(p.area_memristors, 6);
+        assert_eq!(p.max_col(), Some(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "unfinished pending cycle")]
+    fn pending_must_commit() {
+        let mut b = ProgramBuilder::new("t", pmap(), GateSet::Full);
+        b.stage_gate(Gate::Not, &[0], 1);
+        let _ = b.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "empty cycle")]
+    fn no_empty_commit() {
+        let mut b = ProgramBuilder::new("t", pmap(), GateSet::Full);
+        b.commit();
+    }
+
+    #[test]
+    fn explicit_area_overrides() {
+        let mut b = ProgramBuilder::new("t", pmap(), GateSet::Full);
+        b.gate(Gate::Not, &[0], 1);
+        b.set_area(42);
+        assert_eq!(b.finish().area_memristors, 42);
+    }
+
+    #[test]
+    fn trace_renders() {
+        let mut b = ProgramBuilder::new("t", pmap(), GateSet::Full);
+        b.init(false, vec![5]);
+        b.gate(Gate::Nor2, &[0, 1], 5);
+        let p = b.finish();
+        let t = p.trace(10);
+        assert!(t.contains("INIT0"));
+        assert!(t.contains("NOR2(0,1) -> 5"));
+    }
+}

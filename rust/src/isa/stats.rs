@@ -1,0 +1,150 @@
+//! Partition geometry and operation statistics.
+
+use super::{Col, Cycle};
+
+/// The column-partition geometry of a crossbar row.
+///
+/// Partitions are contiguous column ranges separated by isolation
+/// transistors [12]. `starts[i]` is the first column of partition `i`;
+/// partition `i` covers `starts[i] .. starts[i+1]` (or to `num_cols`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionMap {
+    starts: Vec<Col>,
+    num_cols: Col,
+}
+
+impl PartitionMap {
+    /// Build from partition start columns (must begin at 0, strictly
+    /// increasing) and the total column count.
+    pub fn new(starts: Vec<Col>, num_cols: Col) -> Self {
+        assert!(!starts.is_empty(), "at least one partition");
+        assert_eq!(starts[0], 0, "first partition starts at column 0");
+        assert!(
+            starts.windows(2).all(|w| w[0] < w[1]),
+            "partition starts must be strictly increasing"
+        );
+        assert!(*starts.last().unwrap() < num_cols, "last partition must be non-empty");
+        Self { starts, num_cols }
+    }
+
+    /// A single partition covering the whole row (no isolation transistors).
+    pub fn single(num_cols: Col) -> Self {
+        Self::new(vec![0], num_cols)
+    }
+
+    /// Number of partitions.
+    pub fn len(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// True if the row is a single partition.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Total number of columns.
+    pub fn num_cols(&self) -> Col {
+        self.num_cols
+    }
+
+    /// Index of the partition containing `col`.
+    pub fn partition_of(&self, col: Col) -> usize {
+        assert!(col < self.num_cols, "column {col} out of range");
+        match self.starts.binary_search(&col) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// The inclusive partition interval `[lo, hi]` spanned by a column span.
+    ///
+    /// A gate spanning this interval requires every isolation transistor
+    /// inside it to conduct, so the entire interval is busy for the cycle.
+    pub fn interval_of_span(&self, span: (Col, Col)) -> (usize, usize) {
+        (self.partition_of(span.0), self.partition_of(span.1))
+    }
+
+    /// Column range of partition `i` as `start..end`.
+    pub fn columns_of(&self, i: usize) -> std::ops::Range<Col> {
+        let start = self.starts[i];
+        let end = if i + 1 < self.starts.len() { self.starts[i + 1] } else { self.num_cols };
+        start..end
+    }
+}
+
+/// Aggregate statistics over a program, produced by the simulator and used
+/// by the report generators (latency = cycles, area = memristors touched).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OpStats {
+    /// Total clock cycles (the paper's latency metric).
+    pub cycles: u64,
+    /// Initialization cycles (subset of `cycles`).
+    pub init_cycles: u64,
+    /// Individual gate applications (across all cycles).
+    pub gate_ops: u64,
+    /// Individual cell initializations.
+    pub init_ops: u64,
+    /// Peak simultaneous micro-ops in one cycle (parallelism achieved).
+    pub max_parallel_ops: u64,
+}
+
+impl OpStats {
+    /// Accumulate a cycle into the stats.
+    pub fn record(&mut self, cycle: &Cycle) {
+        self.cycles += 1;
+        match cycle {
+            Cycle::Init { outputs, .. } => {
+                self.init_cycles += 1;
+                self.init_ops += outputs.len() as u64;
+                self.max_parallel_ops = self.max_parallel_ops.max(outputs.len() as u64);
+            }
+            Cycle::Gates(g) => {
+                self.gate_ops += g.len() as u64;
+                self.max_parallel_ops = self.max_parallel_ops.max(g.len() as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Gate, GateOp};
+
+    #[test]
+    fn partition_lookup() {
+        let p = PartitionMap::new(vec![0, 4, 10], 16);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.partition_of(0), 0);
+        assert_eq!(p.partition_of(3), 0);
+        assert_eq!(p.partition_of(4), 1);
+        assert_eq!(p.partition_of(9), 1);
+        assert_eq!(p.partition_of(10), 2);
+        assert_eq!(p.partition_of(15), 2);
+        assert_eq!(p.columns_of(1), 4..10);
+        assert_eq!(p.columns_of(2), 10..16);
+        assert_eq!(p.interval_of_span((3, 10)), (0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn partition_oob() {
+        let p = PartitionMap::new(vec![0, 4], 8);
+        let _ = p.partition_of(8);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = OpStats::default();
+        s.record(&Cycle::Init { value: true, outputs: vec![1, 2, 3] });
+        s.record(&Cycle::Gates(vec![
+            GateOp::new(Gate::Not, &[0], 1),
+            GateOp::new(Gate::Not, &[4], 5),
+        ]));
+        assert_eq!(s.cycles, 2);
+        assert_eq!(s.init_cycles, 1);
+        assert_eq!(s.init_ops, 3);
+        assert_eq!(s.gate_ops, 2);
+        assert_eq!(s.max_parallel_ops, 3);
+    }
+}

@@ -1,0 +1,67 @@
+//! # MultPIM — Fast Stateful Multiplication for Processing-in-Memory
+//!
+//! A production-grade reproduction of *MultPIM: Fast Stateful Multiplication
+//! for Processing-in-Memory* (Leitersdorf, Ronen, Kvatinsky, 2021) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains:
+//!
+//! * [`isa`] — the stateful-logic instruction set (MAGIC / FELIX gates,
+//!   micro-ops, cycles, programs) that in-memory algorithms are compiled to.
+//! * [`crossbar`] — a bit-parallel model of a memristive crossbar array with
+//!   column partitions (rows are packed 64/word, so one simulated gate
+//!   applies to 64 crossbar rows per CPU word operation).
+//! * [`sim`] — the cycle-accurate executor and legality checker (the paper's
+//!   §V-C "custom cycle-accurate simulator").
+//! * [`fixedpoint`] — N-bit fixed-point semantics shared by the PIM
+//!   algorithms and the golden models.
+//! * [`algorithms`] — the paper's contributions and all baselines:
+//!   partition broadcast/shift (§III), the novel full adder (§IV-B1),
+//!   MultPIM / MultPIM-Area (Algorithm 1), Haj-Ali et al. and RIME
+//!   multipliers, ripple adders, and the fused matrix-vector engine (§VI).
+//! * [`coordinator`] — the L3 serving layer: request router, row batcher,
+//!   multiplication pipeline, matvec engine and metrics.
+//! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
+//!   (built once from `python/compile`) and is used as the golden model on
+//!   the verification path.
+//! * [`report`] — renderers for every table and figure in the paper's
+//!   evaluation (Tables I-III, Fig. 3, full-adder ablation).
+
+pub mod algorithms;
+pub mod coordinator;
+pub mod crossbar;
+pub mod fixedpoint;
+pub mod isa;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use sim::Simulator;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A micro-op violated the stateful-logic legality rules
+    /// (overlapping partition spans, uninitialized output, illegal gate...).
+    #[error("illegal operation at cycle {cycle}: {reason}")]
+    IllegalOp { cycle: usize, reason: String },
+    /// A program referenced a column outside the allocated crossbar.
+    #[error("column {col} out of bounds (crossbar has {cols} columns)")]
+    ColumnOutOfBounds { col: u32, cols: u32 },
+    /// An algorithm was instantiated with unsupported parameters.
+    #[error("bad parameter: {0}")]
+    BadParameter(String),
+    /// PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Golden-model mismatch during verification.
+    #[error("verification mismatch: {0}")]
+    VerificationFailed(String),
+    /// I/O error (artifact files, reports).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,193 @@
+//! `multpim` — command-line front end.
+//!
+//! ```text
+//! multpim multiply --n 32 --a 123456 --b 654321 [--area]
+//! multpim matvec   --n 32 --elems 8 --rows 16 [--seed 1]
+//! multpim report   [table1|table2|table3|fig3|fa|headline|all]
+//! multpim verify   [--rows 64]        # triple golden agreement via PJRT
+//! multpim serve    [--requests 4096]  # batching demo with metrics
+//! multpim trace    --n 8 [--limit 40] # dump a compiled program
+//! ```
+
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::multpim_area::MultPimArea;
+use multpim::algorithms::Multiplier;
+use multpim::coordinator::server::MultiplyDeployment;
+use multpim::coordinator::{Coordinator, EngineConfig, Request, Response};
+use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
+use multpim::util::SplitMix64;
+use multpim::{report, Result};
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn opt_u64(args: &[String], name: &str, default: u64) -> u64 {
+    opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("multiply") => {
+            let n = opt_u64(args, "--n", 32) as u32;
+            let a = opt_u64(args, "--a", 123_456);
+            let b = opt_u64(args, "--b", 654_321);
+            let (product, cycles, name) = if flag(args, "--area") {
+                let m = MultPimArea::new(n);
+                (m.multiply(a, b)?, m.program().cycle_count(), "MultPIM-Area")
+            } else {
+                let m = MultPim::new(n);
+                (m.multiply(a, b)?, m.program().cycle_count(), "MultPIM")
+            };
+            println!("{name}: {a} * {b} = {product}   ({cycles} PIM cycles, N={n})");
+            assert_eq!(product, a * b, "self-check");
+            Ok(())
+        }
+        Some("matvec") => {
+            let n = opt_u64(args, "--n", 32) as u32;
+            let elems = opt_u64(args, "--elems", 8) as u32;
+            let m = opt_u64(args, "--rows", 16) as usize;
+            let seed = opt_u64(args, "--seed", 1);
+            let mut rng = SplitMix64::new(seed);
+            let rows: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
+            let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
+            let engine = multpim::coordinator::MatVecEngine::new(n, elems);
+            let out = engine.compute(&rows, &x)?;
+            println!(
+                "matvec: {m} rows x {elems} elems, N={n}: {} PIM cycles (all rows parallel)",
+                engine.cycles()
+            );
+            for (i, v) in out.iter().take(4).enumerate() {
+                println!("  row {i}: {v}");
+            }
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    out[i],
+                    multpim::fixedpoint::inner_product_mod(n, row, &x),
+                    "self-check row {i}"
+                );
+            }
+            println!("  ... all {m} rows verified against fixedpoint reference");
+            Ok(())
+        }
+        Some("report") => {
+            let what = args.get(1).map(String::as_str).unwrap_or("all");
+            let text = match what {
+                "table1" => report::table1(&[8, 16, 32]),
+                "table2" => report::table2(&[8, 16, 32]),
+                "table3" => report::table3(8, 32),
+                "fig3" => report::fig3(&[4, 8, 16, 32, 64]),
+                "fa" => report::fa_ablation(),
+                "headline" => report::headline(),
+                _ => report::all(),
+            };
+            print!("{text}");
+            Ok(())
+        }
+        Some("verify") => {
+            let rows = opt_u64(args, "--rows", 64) as usize;
+            let runtime = PjrtRuntime::new()?;
+            let artifacts = ArtifactSet::discover_default()?;
+            println!("PJRT platform: {}", runtime.platform());
+            for n in [4u32, 8] {
+                let m = MultPim::new(n);
+                let layout = m.layout();
+                let rep = golden::verify_program(
+                    &runtime,
+                    &artifacts,
+                    m.program(),
+                    |sim, rows| {
+                        let mut rng = SplitMix64::new(n as u64);
+                        for r in 0..rows {
+                            sim.write_input(r, &layout, rng.bits(n), rng.bits(n));
+                        }
+                    },
+                    rows,
+                )?;
+                println!(
+                    "hardware golden agreement  (MultPIM N={n}, {rows} rows): {} cells OK",
+                    rep.cells_compared
+                );
+            }
+            let m = MultPim::new(32);
+            let rep = golden::verify_multiplier(&runtime, &artifacts, &m, 256, 7)?;
+            println!("arithmetic golden agreement (N=32): {} products OK", rep.products_compared);
+            let engine = multpim::algorithms::matvec::MultPimMatVec::new(32, 8);
+            golden::verify_matvec(&runtime, &artifacts, &engine, 32, 8, 9)?;
+            println!("matvec golden agreement     (n=8, N=32): OK");
+            Ok(())
+        }
+        Some("serve") => {
+            let requests = opt_u64(args, "--requests", 4096);
+            let coord = Coordinator::launch(
+                &[MultiplyDeployment {
+                    n_bits: 32,
+                    rows: 256,
+                    max_wait: Duration::from_millis(2),
+                    config: EngineConfig::MultPim,
+                }],
+                &[(32, 8)],
+            )?;
+            let mut rng = SplitMix64::new(0xE0);
+            let mut rxs = Vec::with_capacity(requests as usize);
+            let mut expected = Vec::with_capacity(requests as usize);
+            for _ in 0..requests {
+                let (a, b) = (rng.bits(32), rng.bits(32));
+                expected.push(a * b);
+                rxs.push(coord.submit(Request::Multiply { n_bits: 32, a, b })?);
+            }
+            for (rx, want) in rxs.into_iter().zip(expected) {
+                match rx
+                    .recv()
+                    .map_err(|_| multpim::Error::Runtime("worker dropped".into()))??
+                {
+                    Response::Product(p) => assert_eq!(p, want),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            println!("served {requests} multiply requests");
+            println!("metrics: {}", coord.metrics().snapshot());
+            coord.shutdown();
+            Ok(())
+        }
+        Some("trace") => {
+            let n = opt_u64(args, "--n", 8) as u32;
+            let limit = opt_u64(args, "--limit", 40) as usize;
+            let m = MultPim::new(n);
+            println!(
+                "{}: {} cycles, {} memristors, {} partitions",
+                m.program().name,
+                m.program().cycle_count(),
+                m.program().area_memristors,
+                m.program().partition_count()
+            );
+            print!("{}", m.program().trace(limit));
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: multpim <multiply|matvec|report|verify|serve|trace> [options]\n\
+                 see `rust/src/main.rs` docs for details"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Golden-model verification: native simulator vs compiled artifacts.
+//!
+//! Two independent checks close the loop on every layer of the stack:
+//!
+//! 1. **hardware agreement** — the Rust cycle-accurate simulator and the
+//!    AOT-compiled Pallas gate-trace executor produce bit-identical final
+//!    states for the same program and initial data;
+//! 2. **arithmetic agreement** — multiplier/matvec outputs equal the
+//!    AOT-compiled arithmetic golden kernels.
+
+use super::trace::{pack_state, packed_bit, pad_trace, program_to_trace};
+use super::{ArtifactSet, PjrtRuntime};
+use crate::algorithms::Multiplier;
+use crate::isa::Program;
+use crate::sim::Simulator;
+use crate::util::SplitMix64;
+use crate::{Error, Result};
+
+/// Outcome of a verification pass.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    /// Cells compared in the hardware-agreement check.
+    pub cells_compared: u64,
+    /// Products compared in the arithmetic check.
+    pub products_compared: u64,
+}
+
+/// Run `program` on both the native simulator and the PJRT gate-trace
+/// golden model, starting from the same random operand data, and require
+/// bit-exact agreement over every cell the program can touch.
+pub fn verify_program(
+    runtime: &PjrtRuntime,
+    artifacts: &ArtifactSet,
+    program: &Program,
+    write_rows: impl Fn(&mut Simulator, usize),
+    rows: usize,
+) -> Result<VerifyReport> {
+    let cols = program.partitions.num_cols() as usize;
+    let trace = program_to_trace(program);
+    let (path, c, w, t) = artifacts
+        .gate_trace_for(cols, rows, trace.len())
+        .ok_or_else(|| {
+            Error::Runtime(format!(
+                "no gate-trace artifact fits cols={cols} rows={rows} ops={} — run `make artifacts`",
+                trace.len()
+            ))
+        })?
+        .clone();
+    let model = runtime.load_gate_trace(&path, c, w, t)?;
+
+    // Native side.
+    let mut sim = Simulator::new(rows, cols);
+    write_rows(&mut sim, rows);
+    let packed_in = pack_state(sim.crossbar(), c, w)?;
+    sim.run(program)?;
+
+    // Golden side.
+    let padded = pad_trace(trace, t)?;
+    let packed_out = model.run(&packed_in, &padded)?;
+
+    let mut report = VerifyReport::default();
+    for col in 0..cols {
+        for row in 0..rows {
+            let native = sim.crossbar().get(row, col as u32);
+            let golden = packed_bit(&packed_out, w, row, col);
+            if native != golden {
+                return Err(Error::VerificationFailed(format!(
+                    "hardware golden mismatch at row {row} col {col}: native={native} golden={golden}"
+                )));
+            }
+            report.cells_compared += 1;
+        }
+    }
+    Ok(report)
+}
+
+/// Verify a multiplier's outputs against the arithmetic golden model for a
+/// batch of deterministic pseudo-random operands.
+pub fn verify_multiplier(
+    runtime: &PjrtRuntime,
+    artifacts: &ArtifactSet,
+    multiplier: &dyn Multiplier,
+    batch: usize,
+    seed: u64,
+) -> Result<VerifyReport> {
+    let (path, m) = artifacts
+        .muls
+        .iter()
+        .find(|(_, m)| *m >= batch)
+        .ok_or_else(|| Error::Runtime("no mul artifact large enough".into()))?
+        .clone();
+    let model = runtime.load_mul(&path, m)?;
+
+    let n = multiplier.n_bits();
+    let mut rng = SplitMix64::new(seed);
+    let pairs: Vec<(u64, u64)> = (0..batch).map(|_| (rng.bits(n), rng.bits(n))).collect();
+    let native = multiplier.multiply_batch(&pairs)?;
+
+    let mut a: Vec<u64> = pairs.iter().map(|p| p.0).collect();
+    let mut b: Vec<u64> = pairs.iter().map(|p| p.1).collect();
+    a.resize(m, 0);
+    b.resize(m, 0);
+    let golden = model.run(&a, &b)?;
+
+    for (i, (&got, &want)) in native.iter().zip(&golden).enumerate() {
+        if got != want {
+            return Err(Error::VerificationFailed(format!(
+                "arithmetic golden mismatch at pair {i}: {} * {} = {want}, PIM produced {got}",
+                pairs[i].0, pairs[i].1
+            )));
+        }
+    }
+    Ok(VerifyReport { products_compared: batch as u64, ..Default::default() })
+}
+
+/// Verify the fused matvec engine against the matvec golden artifact.
+pub fn verify_matvec(
+    runtime: &PjrtRuntime,
+    artifacts: &ArtifactSet,
+    engine: &crate::algorithms::matvec::MultPimMatVec,
+    n_bits: u32,
+    n_elems: usize,
+    seed: u64,
+) -> Result<VerifyReport> {
+    let (path, m, n, bits) = artifacts
+        .matvecs
+        .iter()
+        .find(|(_, _, n, bits)| *n == n_elems && *bits == n_bits)
+        .ok_or_else(|| {
+            Error::Runtime(format!("no matvec artifact for n={n_elems} N={n_bits}"))
+        })?
+        .clone();
+    let model = runtime.load_matvec(&path, m, n, bits)?;
+
+    let mut rng = SplitMix64::new(seed);
+    let rows: Vec<Vec<u64>> =
+        (0..m).map(|_| (0..n).map(|_| rng.bits(n_bits)).collect()).collect();
+    let x: Vec<u64> = (0..n).map(|_| rng.bits(n_bits)).collect();
+
+    let native = engine.compute(&rows, &x)?;
+    let a_flat: Vec<u64> = rows.iter().flatten().copied().collect();
+    let golden = model.run(&a_flat, &x)?;
+
+    for (i, (&got, &want)) in native.iter().zip(&golden).enumerate() {
+        if got != want {
+            return Err(Error::VerificationFailed(format!(
+                "matvec golden mismatch at row {i}: golden {want}, PIM {got}"
+            )));
+        }
+    }
+    Ok(VerifyReport { products_compared: (m * n) as u64, ..Default::default() })
+}

@@ -1,0 +1,19 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas golden models.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the Rust
+//! binary is self-contained: this module loads the HLO-text artifacts from
+//! `artifacts/`, compiles them on the PJRT CPU client, and executes them
+//! on the verification path. Three golden models exist:
+//!
+//! * **gate-trace** — the crossbar *hardware* golden model: the same
+//!   stateful-logic semantics as the native simulator, executed through
+//!   XLA. [`golden::verify_program`] checks bit-exact agreement.
+//! * **matvec** — the *arithmetic* golden model for the §VI engine.
+//! * **mul** — elementwise exact products for verifying multiplier batches.
+
+mod pjrt;
+pub mod trace;
+
+pub use pjrt::{ArtifactSet, GateTraceModel, MatVecModel, MulModel, PjrtRuntime};
+
+pub mod golden;

@@ -1,0 +1,244 @@
+//! PJRT CPU client wrapper and artifact registry.
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// A live PJRT CPU client with compiled golden models.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn new() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform string (for logs/metrics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Load a gate-trace golden model artifact.
+    pub fn load_gate_trace(&self, path: &Path, c: usize, w: usize, t: usize) -> Result<GateTraceModel> {
+        Ok(GateTraceModel { exe: self.compile(path)?, c, w, t })
+    }
+
+    /// Load a fixed-point matvec golden model artifact.
+    pub fn load_matvec(&self, path: &Path, m: usize, n: usize, bits: u32) -> Result<MatVecModel> {
+        Ok(MatVecModel { exe: self.compile(path)?, m, n, bits })
+    }
+
+    /// Load an elementwise-product golden model artifact.
+    pub fn load_mul(&self, path: &Path, m: usize) -> Result<MulModel> {
+        Ok(MulModel { exe: self.compile(path)?, m })
+    }
+}
+
+fn run_tuple1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let result = exe.execute::<xla::Literal>(args)?;
+    let lit = result[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple1()?)
+}
+
+/// Compiled crossbar hardware golden model (`uint32[C, W]` state,
+/// `int32[T, 6]` trace).
+pub struct GateTraceModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// State columns.
+    pub c: usize,
+    /// uint32 words per column (32 crossbar rows each).
+    pub w: usize,
+    /// Fixed trace length.
+    pub t: usize,
+}
+
+impl GateTraceModel {
+    /// Execute a (padded) trace over a packed state; returns the final
+    /// packed state.
+    pub fn run(&self, state: &[u32], trace: &[[i32; 6]]) -> Result<Vec<u32>> {
+        if state.len() != self.c * self.w {
+            return Err(Error::BadParameter(format!(
+                "state len {} != {}x{}",
+                state.len(),
+                self.c,
+                self.w
+            )));
+        }
+        if trace.len() != self.t {
+            return Err(Error::BadParameter(format!(
+                "trace len {} != artifact t {}",
+                trace.len(),
+                self.t
+            )));
+        }
+        let flat: Vec<i32> = trace.iter().flatten().copied().collect();
+        let state_lit =
+            xla::Literal::vec1(state).reshape(&[self.c as i64, self.w as i64])?;
+        let ops_lit = xla::Literal::vec1(&flat).reshape(&[self.t as i64, 6])?;
+        let out = run_tuple1(&self.exe, &[state_lit, ops_lit])?;
+        Ok(out.to_vec::<u32>()?)
+    }
+}
+
+/// Compiled fixed-point matvec golden model.
+pub struct MatVecModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Rows per execution.
+    pub m: usize,
+    /// Elements per row.
+    pub n: usize,
+    /// Operand bit width N.
+    pub bits: u32,
+}
+
+impl MatVecModel {
+    /// `A x` for `a` flattened row-major `[m, n]`; wraps mod `2^(2N)`.
+    pub fn run(&self, a: &[u64], x: &[u64]) -> Result<Vec<u64>> {
+        if a.len() != self.m * self.n || x.len() != self.n {
+            return Err(Error::BadParameter(format!(
+                "matvec shapes: a={} x={} vs artifact {}x{}",
+                a.len(),
+                x.len(),
+                self.m,
+                self.n
+            )));
+        }
+        let a_lit = xla::Literal::vec1(a).reshape(&[self.m as i64, self.n as i64])?;
+        let x_lit = xla::Literal::vec1(x);
+        let out = run_tuple1(&self.exe, &[a_lit, x_lit])?;
+        Ok(out.to_vec::<u64>()?)
+    }
+}
+
+/// Compiled elementwise exact-product golden model.
+pub struct MulModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Pairs per execution.
+    pub m: usize,
+}
+
+impl MulModel {
+    /// Elementwise `a * b` (uint64 wrap).
+    pub fn run(&self, a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+        if a.len() != self.m || b.len() != self.m {
+            return Err(Error::BadParameter(format!(
+                "mul shapes: {}/{} vs artifact m {}",
+                a.len(),
+                b.len(),
+                self.m
+            )));
+        }
+        let a_lit = xla::Literal::vec1(a);
+        let b_lit = xla::Literal::vec1(b);
+        let out = run_tuple1(&self.exe, &[a_lit, b_lit])?;
+        Ok(out.to_vec::<u64>()?)
+    }
+}
+
+/// Artifact discovery: parses the `artifacts/` directory produced by
+/// `make artifacts` (file-name encoded shapes; no JSON dependency).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactSet {
+    /// `(path, c, w, t)` gate-trace artifacts.
+    pub gate_traces: Vec<(PathBuf, usize, usize, usize)>,
+    /// `(path, m, n, bits)` matvec artifacts.
+    pub matvecs: Vec<(PathBuf, usize, usize, u32)>,
+    /// `(path, m)` mul artifacts.
+    pub muls: Vec<(PathBuf, usize)>,
+}
+
+impl ArtifactSet {
+    /// Scan a directory for artifacts.
+    pub fn discover(dir: &Path) -> Result<Self> {
+        let mut set = ArtifactSet::default();
+        if !dir.is_dir() {
+            return Ok(set);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            if let Some(rest) = stem.strip_prefix("gate_trace_") {
+                if let Some([c, w, t]) = parse_fields(rest, &["c", "w", "t"]) {
+                    set.gate_traces.push((path, c, w, t));
+                }
+            } else if let Some(rest) = stem.strip_prefix("matvec_") {
+                if let Some([m, n, b]) = parse_fields(rest, &["m", "n", "b"]) {
+                    set.matvecs.push((path, m, n, b as u32));
+                }
+            } else if let Some(rest) = stem.strip_prefix("mul_") {
+                if let Some([m, _b]) = parse_fields(rest, &["m", "b"]) {
+                    set.muls.push((path, m));
+                }
+            }
+        }
+        Ok(set)
+    }
+
+    /// Discover from the conventional `artifacts/` directory next to the
+    /// crate root (or `$MULTPIM_ARTIFACTS`).
+    pub fn discover_default() -> Result<Self> {
+        let dir = std::env::var("MULTPIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")));
+        Self::discover(&dir)
+    }
+
+    /// Smallest gate-trace artifact that fits `(cols, rows, ops)`.
+    pub fn gate_trace_for(
+        &self,
+        cols: usize,
+        rows: usize,
+        ops: usize,
+    ) -> Option<&(PathBuf, usize, usize, usize)> {
+        self.gate_traces
+            .iter()
+            .filter(|(_, c, w, t)| *c >= cols && *w * 32 >= rows && *t >= ops)
+            .min_by_key(|(_, c, w, t)| c * w + t)
+    }
+}
+
+fn parse_fields<const K: usize>(s: &str, keys: &[&str; K]) -> Option<[usize; K]> {
+    let parts: Vec<&str> = s.split('_').collect();
+    if parts.len() != K {
+        return None;
+    }
+    let mut out = [0usize; K];
+    for (i, (part, key)) in parts.iter().zip(keys).enumerate() {
+        out[i] = part.strip_prefix(key)?.parse().ok()?;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_parsing() {
+        assert_eq!(parse_fields("c256_w8_t6144", &["c", "w", "t"]), Some([256, 8, 6144]));
+        assert_eq!(parse_fields("m32_n8_b32", &["m", "n", "b"]), Some([32, 8, 32]));
+        assert_eq!(parse_fields("bogus", &["c", "w", "t"]), None);
+    }
+
+    #[test]
+    fn discovery_handles_missing_dir() {
+        let set = ArtifactSet::discover(Path::new("/nonexistent-dir")).unwrap();
+        assert!(set.gate_traces.is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! Program -> gate-trace wire format (shared with `python/compile`).
+//!
+//! The trace is an `int32[T, 6]` array of `(opcode, in1, in2, in3, out,
+//! no_init)` rows; the state is `uint32[C, W]`, 32 crossbar rows per word.
+//! The opcode table MUST match `python/compile/kernels/opcodes.py` — a
+//! test below pins the values.
+
+use crate::crossbar::Crossbar;
+use crate::isa::{Cycle, Gate, Program};
+
+/// Opcodes of the wire format (see `opcodes.py`).
+pub mod opcode {
+    /// Padding row; leaves the state untouched.
+    pub const NOP: i32 = 0;
+    /// MAGIC NOT.
+    pub const NOT: i32 = 1;
+    /// MAGIC NOR (2-input).
+    pub const NOR2: i32 = 2;
+    /// MAGIC NOR (3-input).
+    pub const NOR3: i32 = 3;
+    /// FELIX OR.
+    pub const OR2: i32 = 4;
+    /// FELIX NAND.
+    pub const NAND2: i32 = 5;
+    /// FELIX Minority3.
+    pub const MIN3: i32 = 6;
+    /// Initialize to 0.
+    pub const INIT0: i32 = 7;
+    /// Initialize to 1.
+    pub const INIT1: i32 = 8;
+}
+
+fn gate_opcode(g: Gate) -> i32 {
+    match g {
+        Gate::Not => opcode::NOT,
+        Gate::Nor2 => opcode::NOR2,
+        Gate::Nor3 => opcode::NOR3,
+        Gate::Or2 => opcode::OR2,
+        Gate::Nand2 => opcode::NAND2,
+        Gate::Min3 => opcode::MIN3,
+    }
+}
+
+/// Flatten a program into serial trace rows (cycle grouping does not affect
+/// function: simultaneous gates touch disjoint cells by legality).
+pub fn program_to_trace(program: &Program) -> Vec<[i32; 6]> {
+    let mut rows = Vec::new();
+    for cycle in &program.cycles {
+        match cycle {
+            Cycle::Init { value, outputs } => {
+                let code = if *value { opcode::INIT1 } else { opcode::INIT0 };
+                for &c in outputs {
+                    rows.push([code, 0, 0, 0, c as i32, 0]);
+                }
+            }
+            Cycle::Gates(ops) => {
+                for op in ops {
+                    let [a, b, c] = op.inputs;
+                    let (b, c) = match op.gate.arity() {
+                        1 => (0, 0),
+                        2 => (b, 0),
+                        _ => (b, c),
+                    };
+                    rows.push([
+                        gate_opcode(op.gate),
+                        a as i32,
+                        b as i32,
+                        c as i32,
+                        op.output as i32,
+                        op.no_init as i32,
+                    ]);
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Pad a trace with NOPs to a fixed artifact length. Errors if too long.
+pub fn pad_trace(mut rows: Vec<[i32; 6]>, t: usize) -> crate::Result<Vec<[i32; 6]>> {
+    if rows.len() > t {
+        return Err(crate::Error::BadParameter(format!(
+            "trace has {} ops, artifact holds {t}",
+            rows.len()
+        )));
+    }
+    rows.resize(t, [opcode::NOP, 0, 0, 0, 0, 0]);
+    Ok(rows)
+}
+
+/// Pack a crossbar into the artifact state layout `uint32[C, W]`
+/// (row-major: column c at `c*w .. (c+1)*w`), for `rows <= 32*w`.
+pub fn pack_state(xb: &Crossbar, c: usize, w: usize) -> crate::Result<Vec<u32>> {
+    if xb.cols() > c || xb.rows() > 32 * w {
+        return Err(crate::Error::BadParameter(format!(
+            "crossbar {}x{} does not fit artifact state {c}x{}",
+            xb.rows(),
+            xb.cols(),
+            32 * w
+        )));
+    }
+    let mut out = vec![0u32; c * w];
+    for col in 0..xb.cols() {
+        let words = xb.col(col as u32);
+        for i in 0..w {
+            let w64 = words.get(i / 2).copied().unwrap_or(0);
+            out[col * w + i] = (w64 >> (32 * (i % 2))) as u32;
+        }
+    }
+    Ok(out)
+}
+
+/// Read one bit out of a packed state vector.
+pub fn packed_bit(state: &[u32], w: usize, row: usize, col: usize) -> bool {
+    state[col * w + row / 32] >> (row % 32) & 1 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{GateOp, GateSet, PartitionMap, ProgramBuilder};
+
+    /// Pin the opcode table against opcodes.py.
+    #[test]
+    fn opcode_table_matches_python() {
+        let py = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/python/compile/kernels/opcodes.py"
+        ))
+        .expect("opcodes.py readable");
+        for (name, value) in [
+            ("NOP", opcode::NOP),
+            ("NOT", opcode::NOT),
+            ("NOR2", opcode::NOR2),
+            ("NOR3", opcode::NOR3),
+            ("OR2", opcode::OR2),
+            ("NAND2", opcode::NAND2),
+            ("MIN3", opcode::MIN3),
+            ("INIT0", opcode::INIT0),
+            ("INIT1", opcode::INIT1),
+        ] {
+            let needle = format!("{name} = {value}");
+            assert!(py.contains(&needle), "opcodes.py missing `{needle}`");
+        }
+    }
+
+    #[test]
+    fn trace_flattening() {
+        let mut b = ProgramBuilder::new("t", PartitionMap::new(vec![0, 2], 4), GateSet::Full);
+        b.init(true, vec![1, 3]);
+        b.stage(GateOp::new(Gate::Not, &[0], 1))
+            .stage(GateOp::no_init(Gate::Nor2, &[2, 0], 3))
+            .commit();
+        let rows = program_to_trace(&b.finish());
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0], [opcode::INIT1, 0, 0, 0, 1, 0]);
+        assert_eq!(rows[1], [opcode::INIT1, 0, 0, 0, 3, 0]);
+        assert_eq!(rows[2], [opcode::NOT, 0, 0, 0, 1, 0]);
+        assert_eq!(rows[3], [opcode::NOR2, 2, 0, 0, 3, 1]);
+    }
+
+    #[test]
+    fn pad_and_bounds() {
+        let rows = vec![[opcode::NOT, 0, 0, 0, 1, 0]];
+        let padded = pad_trace(rows.clone(), 4).unwrap();
+        assert_eq!(padded.len(), 4);
+        assert_eq!(padded[3][0], opcode::NOP);
+        assert!(pad_trace(padded, 2).is_err());
+    }
+
+    #[test]
+    fn state_packing_roundtrip() {
+        let mut xb = Crossbar::new(70, 3);
+        xb.set(0, 0, true);
+        xb.set(33, 1, true);
+        xb.set(69, 2, true);
+        let packed = pack_state(&xb, 4, 3).unwrap(); // 96 rows capacity
+        assert!(packed_bit(&packed, 3, 0, 0));
+        assert!(packed_bit(&packed, 3, 33, 1));
+        assert!(packed_bit(&packed, 3, 69, 2));
+        assert!(!packed_bit(&packed, 3, 1, 0));
+        // Column 3 (unused) must be zero.
+        assert!(packed[9..12].iter().all(|&v| v == 0));
+    }
+}

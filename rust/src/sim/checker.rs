@@ -1,0 +1,278 @@
+//! Static legality validation of compiled programs.
+//!
+//! All constraints checked here are data-independent, so a program is
+//! validated once and may then be executed arbitrarily many times (and
+//! across arbitrarily many rows) without re-checking.
+
+use crate::isa::{Col, Cycle, Program};
+use crate::{Error, Result};
+
+/// Initialization tracking state of one column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CellState {
+    /// Never initialized or written by this program (external input cells
+    /// are marked `Written` before validation via [`CheckReport::inputs`]).
+    Unknown,
+    /// Initialized to a constant and not yet overwritten.
+    Init(bool),
+    /// Holds the result of a gate (or external data).
+    Written,
+}
+
+/// Summary of a successful validation.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// Number of cycles validated.
+    pub cycles: usize,
+    /// Peak number of simultaneously busy partitions in any cycle.
+    pub peak_busy_partitions: usize,
+    /// Number of no-init (X-MAGIC) gate applications.
+    pub no_init_gates: usize,
+}
+
+/// Validate a program. `input_cols` lists the columns that hold externally
+/// written data before cycle 0 (operand regions).
+///
+/// Checks, per cycle:
+/// * every referenced column is inside the partition map's column range;
+/// * gates belong to the program's declared [`GateSet`](crate::isa::GateSet);
+/// * the partition intervals spanned by simultaneous gates are pairwise
+///   disjoint (isolation transistors can only be non-conducting *between*
+///   gates, and a gate spanning partitions `i..=j` needs all transistors
+///   within `i..=j` conducting);
+/// * an initialized-output gate writes only to a cell that is currently
+///   initialized to 1 (MAGIC precondition); a no-init gate may write to any
+///   previously-valued cell;
+/// * gate inputs read cells that hold data (initialized or written).
+pub fn validate(program: &Program, input_cols: &[Col]) -> Result<CheckReport> {
+    let num_cols = program.partitions.num_cols();
+    let mut state = vec![CellState::Unknown; num_cols as usize];
+    for &c in input_cols {
+        bounds(c, num_cols, 0)?;
+        state[c as usize] = CellState::Written;
+    }
+
+    let mut report = CheckReport { cycles: program.cycles.len(), ..Default::default() };
+
+    for (idx, cycle) in program.cycles.iter().enumerate() {
+        match cycle {
+            Cycle::Init { value, outputs } => {
+                let mut seen = std::collections::BTreeSet::new();
+                for &c in outputs {
+                    bounds(c, num_cols, idx)?;
+                    if !seen.insert(c) {
+                        return Err(Error::IllegalOp {
+                            cycle: idx,
+                            reason: format!("column {c} initialized twice in one cycle"),
+                        });
+                    }
+                    state[c as usize] = CellState::Init(*value);
+                }
+            }
+            Cycle::Gates(ops) => {
+                if ops.is_empty() {
+                    return Err(Error::IllegalOp {
+                        cycle: idx,
+                        reason: "empty compute cycle".into(),
+                    });
+                }
+                let mut intervals: Vec<(usize, usize)> = Vec::with_capacity(ops.len());
+                for op in ops {
+                    if !program.gate_set.allows(op.gate) {
+                        return Err(Error::IllegalOp {
+                            cycle: idx,
+                            reason: format!(
+                                "gate {} outside declared set {}",
+                                op.gate,
+                                program.gate_set.name()
+                            ),
+                        });
+                    }
+                    for c in op.columns() {
+                        bounds(c, num_cols, idx)?;
+                    }
+                    for &c in &op.inputs[..op.gate.arity()] {
+                        if c == op.output {
+                            return Err(Error::IllegalOp {
+                                cycle: idx,
+                                reason: format!("gate reads and writes column {c}"),
+                            });
+                        }
+                        if state[c as usize] == CellState::Unknown {
+                            return Err(Error::IllegalOp {
+                                cycle: idx,
+                                reason: format!("gate {op} reads undefined column {c}"),
+                            });
+                        }
+                    }
+                    // Output precondition.
+                    let out_state = state[op.output as usize];
+                    if op.no_init {
+                        report.no_init_gates += 1;
+                        if out_state == CellState::Unknown {
+                            return Err(Error::IllegalOp {
+                                cycle: idx,
+                                reason: format!(
+                                    "no-init gate {op} writes undefined column {}",
+                                    op.output
+                                ),
+                            });
+                        }
+                    } else if out_state != CellState::Init(true) {
+                        return Err(Error::IllegalOp {
+                            cycle: idx,
+                            reason: format!(
+                                "gate {op} writes column {} which is not initialized to 1 \
+                                 (state: {out_state:?})",
+                                op.output
+                            ),
+                        });
+                    }
+                    intervals.push(program.partitions.interval_of_span(op.span()));
+                }
+                // Partition isolation: intervals pairwise disjoint.
+                intervals.sort_unstable();
+                for w in intervals.windows(2) {
+                    if w[1].0 <= w[0].1 {
+                        return Err(Error::IllegalOp {
+                            cycle: idx,
+                            reason: format!(
+                                "partition intervals {:?} and {:?} overlap",
+                                w[0], w[1]
+                            ),
+                        });
+                    }
+                }
+                let busy: usize = intervals.iter().map(|(lo, hi)| hi - lo + 1).sum();
+                report.peak_busy_partitions = report.peak_busy_partitions.max(busy);
+                // Commit writes after all reads (parallel semantics).
+                for op in ops {
+                    state[op.output as usize] = CellState::Written;
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+fn bounds(c: Col, num_cols: Col, _cycle: usize) -> Result<()> {
+    if c >= num_cols {
+        Err(Error::ColumnOutOfBounds { col: c, cols: num_cols })
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Gate, GateOp, GateSet, PartitionMap, ProgramBuilder};
+
+    fn builder(parts: Vec<Col>, cols: Col, set: GateSet) -> ProgramBuilder {
+        ProgramBuilder::new("t", PartitionMap::new(parts, cols), set)
+    }
+
+    #[test]
+    fn valid_program_passes() {
+        let mut b = builder(vec![0, 4], 8, GateSet::Full);
+        b.init(true, vec![1, 5]);
+        b.stage_gate(Gate::Not, &[0], 1).stage_gate(Gate::Not, &[4], 5).commit();
+        let p = b.finish();
+        let r = validate(&p, &[0, 4]).unwrap();
+        assert_eq!(r.cycles, 2);
+        assert_eq!(r.peak_busy_partitions, 2);
+    }
+
+    #[test]
+    fn uninitialized_output_rejected() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.gate(Gate::Not, &[0], 1); // col 1 never initialized
+        let p = b.finish();
+        let err = validate(&p, &[0]).unwrap_err();
+        assert!(err.to_string().contains("not initialized"), "{err}");
+    }
+
+    #[test]
+    fn overlapping_partitions_rejected() {
+        let mut b = builder(vec![0, 4], 8, GateSet::Full);
+        b.init(true, vec![1, 2]);
+        // Both gates live entirely in partition 0 -> same interval -> illegal.
+        b.stage_gate(Gate::Not, &[0], 1).stage_gate(Gate::Not, &[3], 2).commit();
+        let p = b.finish();
+        let err = validate(&p, &[0, 3]).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn spanning_gate_blocks_whole_interval() {
+        let mut b = builder(vec![0, 2, 4, 6], 8, GateSet::Full);
+        b.init(true, vec![1, 7]);
+        // Gate A spans partitions 0..=2 (cols 1..5); gate B in partition 3.
+        b.stage_gate(Gate::Nor2, &[0, 5], 1).stage_gate(Gate::Not, &[6], 7).commit();
+        let p = b.finish();
+        assert!(validate(&p, &[0, 5, 6]).is_ok());
+
+        // Now gate B inside the spanned interval -> illegal.
+        let mut b = builder(vec![0, 2, 4, 6], 8, GateSet::Full);
+        b.init(true, vec![1, 3]);
+        b.stage_gate(Gate::Nor2, &[0, 5], 1).stage_gate(Gate::Not, &[2], 3).commit();
+        let p = b.finish();
+        assert!(validate(&p, &[0, 5, 2]).is_err());
+    }
+
+    #[test]
+    fn gate_set_enforced() {
+        // Builder debug-asserts, so construct the program manually.
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![2]);
+        b.gate(Gate::Min3, &[0, 1, 3], 2);
+        let mut p = b.finish();
+        p.gate_set = GateSet::Magic; // Min3 not allowed in MAGIC
+        assert!(validate(&p, &[0, 1, 3]).is_err());
+    }
+
+    #[test]
+    fn read_of_undefined_rejected() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![1]);
+        b.gate(Gate::Not, &[2], 1); // col 2 never written
+        let p = b.finish();
+        assert!(validate(&p, &[0]).is_err());
+    }
+
+    #[test]
+    fn no_init_requires_prior_value() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        let op = GateOp::no_init(Gate::Not, &[0], 3);
+        b.stage(op).commit();
+        let p = b.finish();
+        assert!(validate(&p, &[0]).is_err(), "no-init onto undefined cell");
+
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![3]);
+        b.stage(GateOp::no_init(Gate::Not, &[0], 3)).commit();
+        let p = b.finish();
+        let r = validate(&p, &[0]).unwrap();
+        assert_eq!(r.no_init_gates, 1);
+    }
+
+    #[test]
+    fn in_place_gate_rejected() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![1]);
+        b.gate(Gate::Nor2, &[0, 1], 1);
+        let p = b.finish();
+        assert!(validate(&p, &[0]).is_err());
+    }
+
+    #[test]
+    fn column_bounds() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![9]);
+        let p = b.finish();
+        assert!(matches!(
+            validate(&p, &[]),
+            Err(crate::Error::ColumnOutOfBounds { col: 9, cols: 4 })
+        ));
+    }
+}

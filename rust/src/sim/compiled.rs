@@ -1,0 +1,207 @@
+//! The optimized hot path: programs pre-lowered to flat word-offset ops.
+//!
+//! `Simulator::run_unchecked` walks the `Cycle` structure and recomputes
+//! column word ranges per gate. For the serving hot loop (validated
+//! programs executed thousands of times) [`CompiledProgram`] flattens the
+//! schedule once into word-offset ops with a branch-light interpreter —
+//! see EXPERIMENTS.md §Perf for the measured gain (~1.5-1.9x at 1-4k rows).
+
+use super::Simulator;
+use crate::isa::{Cycle, Gate, OpStats, Program};
+
+#[derive(Debug, Clone, Copy)]
+enum Lowered {
+    /// `out = [old &] f(a, b, c)` word-wise. Offsets are word offsets of
+    /// the column start.
+    Gate { code: u8, a: u32, b: u32, c: u32, out: u32, no_init: bool },
+    /// Fill the column at `out` with zeros/ones.
+    Fill { out: u32, value: bool },
+}
+
+const OP_NOT: u8 = 0;
+const OP_NOR2: u8 = 1;
+const OP_NOR3: u8 = 2;
+const OP_OR2: u8 = 3;
+const OP_NAND2: u8 = 4;
+const OP_MIN3: u8 = 5;
+
+/// A program lowered for the tight execution loop of one crossbar
+/// geometry (fixed words-per-column).
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    ops: Vec<Lowered>,
+    words_per_col: u32,
+    stats: OpStats,
+}
+
+impl CompiledProgram {
+    /// Lower `program` for a crossbar with `words_per_col` 64-bit words
+    /// per column (i.e. `64 * words_per_col` rows).
+    pub fn lower(program: &Program, words_per_col: usize) -> Self {
+        let w = words_per_col as u32;
+        let mut ops = Vec::new();
+        for cycle in &program.cycles {
+            match cycle {
+                Cycle::Init { value, outputs } => {
+                    for &col in outputs {
+                        ops.push(Lowered::Fill { out: col * w, value: *value });
+                    }
+                }
+                Cycle::Gates(gates) => {
+                    for g in gates {
+                        let [a, b, c] = g.inputs;
+                        let code = match g.gate {
+                            Gate::Not => OP_NOT,
+                            Gate::Nor2 => OP_NOR2,
+                            Gate::Nor3 => OP_NOR3,
+                            Gate::Or2 => OP_OR2,
+                            Gate::Nand2 => OP_NAND2,
+                            Gate::Min3 => OP_MIN3,
+                        };
+                        ops.push(Lowered::Gate {
+                            code,
+                            a: a * w,
+                            b: b * w,
+                            c: c * w,
+                            out: g.output * w,
+                            no_init: g.no_init,
+                        });
+                    }
+                }
+            }
+        }
+        Self { ops, words_per_col: w, stats: program.stats() }
+    }
+
+    /// Number of lowered micro-ops.
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The cycle/op statistics of one execution.
+    pub fn stats(&self) -> &OpStats {
+        &self.stats
+    }
+
+    /// Execute over the simulator's crossbar (must have the same
+    /// words-per-column the program was lowered for). No validation — use
+    /// after `sim::validate`.
+    pub fn execute(&self, sim: &mut Simulator) {
+        let xb = sim.crossbar_mut();
+        assert_eq!(
+            xb.words_per_col() as u32,
+            self.words_per_col,
+            "crossbar geometry differs from lowering"
+        );
+        let w = self.words_per_col as usize;
+        let tail = xb.tail_mask();
+        let data = xb.data_mut();
+        for op in &self.ops {
+            match *op {
+                Lowered::Fill { out, value } => {
+                    let fill = if value { u64::MAX } else { 0 };
+                    let o = out as usize;
+                    for i in 0..w {
+                        data[o + i] = fill;
+                    }
+                    if value {
+                        data[o + w - 1] &= tail;
+                    }
+                }
+                Lowered::Gate { code, a, b, c, out, no_init } => {
+                    let (a, b, c, o) = (a as usize, b as usize, c as usize, out as usize);
+                    // Dispatch once per op, then run a branch-free word
+                    // loop the compiler can unroll/vectorize. Bits beyond
+                    // the last real row are masked only on `Fill` — gate
+                    // results in the tail slack are never read back.
+                    macro_rules! gate_loop {
+                        ($f:expr) => {{
+                            if no_init {
+                                for i in 0..w {
+                                    let r = $f(data[a + i], data[b + i], data[c + i]);
+                                    data[o + i] &= r;
+                                }
+                            } else {
+                                for i in 0..w {
+                                    data[o + i] = $f(data[a + i], data[b + i], data[c + i]);
+                                }
+                            }
+                        }};
+                    }
+                    match code {
+                        OP_NOT => gate_loop!(|x: u64, _y: u64, _z: u64| !x),
+                        OP_NOR2 => gate_loop!(|x: u64, y: u64, _z: u64| !(x | y)),
+                        OP_NOR3 => gate_loop!(|x: u64, y: u64, z: u64| !(x | y | z)),
+                        OP_OR2 => gate_loop!(|x: u64, y: u64, _z: u64| x | y),
+                        OP_NAND2 => gate_loop!(|x: u64, y: u64, _z: u64| !(x & y)),
+                        _ => gate_loop!(|x: u64, y: u64, z: u64| !((x & y)
+                            | (x & z)
+                            | (y & z))),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::multpim::MultPim;
+    use crate::algorithms::Multiplier;
+    use crate::util::SplitMix64;
+
+    /// The compiled path must agree exactly with the interpreted path.
+    #[test]
+    fn compiled_matches_interpreted() {
+        let mut rng = SplitMix64::new(0xC0117);
+        for n in [4u32, 8, 16] {
+            let mult = MultPim::new(n);
+            let rows = 130; // 3 words, exercises the tail mask
+            let layout = mult.layout();
+            let mut sim_a = Simulator::new_single_row_batch(mult.program(), rows);
+            let mut sim_b = Simulator::new_single_row_batch(mult.program(), rows);
+            let pairs: Vec<(u64, u64)> =
+                (0..rows).map(|_| (rng.bits(n), rng.bits(n))).collect();
+            for (row, &(a, b)) in pairs.iter().enumerate() {
+                sim_a.write_input(row, &layout, a, b);
+                sim_b.write_input(row, &layout, a, b);
+            }
+            sim_a.run_unchecked(mult.program());
+            let compiled =
+                CompiledProgram::lower(mult.program(), sim_b.crossbar().words_per_col());
+            compiled.execute(&mut sim_b);
+            for (row, &(a, b)) in pairs.iter().enumerate() {
+                assert_eq!(sim_a.read_output(row, &layout), a * b);
+                assert_eq!(sim_b.read_output(row, &layout), a * b, "compiled N={n} row={row}");
+            }
+            // Full state agreement, not just outputs.
+            for col in 0..mult.program().partitions.num_cols() {
+                for row in 0..rows {
+                    assert_eq!(
+                        sim_a.crossbar().get(row, col),
+                        sim_b.crossbar().get(row, col),
+                        "col={col} row={row}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_count_matches_trace() {
+        let mult = MultPim::new(8);
+        let compiled = CompiledProgram::lower(mult.program(), 1);
+        let trace = crate::runtime::trace::program_to_trace(mult.program());
+        assert_eq!(compiled.op_count(), trace.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry differs")]
+    fn geometry_mismatch_caught() {
+        let mult = MultPim::new(4);
+        let compiled = CompiledProgram::lower(mult.program(), 2);
+        let mut sim = Simulator::new_single_row_batch(mult.program(), 64); // 1 word
+        compiled.execute(&mut sim);
+    }
+}

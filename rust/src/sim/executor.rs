@@ -1,0 +1,241 @@
+//! Program execution over a crossbar.
+
+use super::checker::validate;
+use crate::crossbar::{Crossbar, RegionLayout};
+use crate::isa::{Col, Cycle, Gate, OpStats, Program};
+use crate::Result;
+
+/// Executes compiled programs on a bit-parallel crossbar.
+///
+/// One `Simulator` owns one crossbar array. The usual flow is:
+///
+/// 1. build from a program with [`Simulator::new_single_row_batch`] (the
+///    crossbar gets as many columns as the program addresses and as many
+///    rows as independent problem instances you want to solve in parallel);
+/// 2. write operands with [`Simulator::write_input`] /
+///    [`Simulator::write_bits`];
+/// 3. [`Simulator::run`] (validates, then executes) or
+///    [`Simulator::run_unchecked`] on the hot path;
+/// 4. read results with [`Simulator::read_output`] / [`Simulator::read_bits`].
+pub struct Simulator {
+    xb: Crossbar,
+    stats: OpStats,
+}
+
+impl Simulator {
+    /// Simulator over an explicit crossbar geometry.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { xb: Crossbar::new(rows, cols), stats: OpStats::default() }
+    }
+
+    /// Simulator sized for `rows` parallel executions of `program`
+    /// (single-row algorithms repeat identically along rows — Fig. 1).
+    pub fn new_single_row_batch(program: &Program, rows: usize) -> Self {
+        let cols = program.partitions.num_cols() as usize;
+        Self::new(rows, cols)
+    }
+
+    /// The underlying crossbar (read access for custom inspection).
+    pub fn crossbar(&self) -> &Crossbar {
+        &self.xb
+    }
+
+    /// Mutable crossbar access (custom data staging, e.g. matvec layouts).
+    pub fn crossbar_mut(&mut self) -> &mut Crossbar {
+        &mut self.xb
+    }
+
+    /// Execution statistics accumulated so far.
+    pub fn stats(&self) -> &OpStats {
+        &self.stats
+    }
+
+    /// Write the two operands of a single-row multiplier instance.
+    pub fn write_input(&mut self, row: usize, layout: &RegionLayout, a: u64, b: u64) {
+        self.xb.write_bits(row, layout.a_start, layout.a_bits, a);
+        self.xb.write_bits(row, layout.b_start, layout.b_bits, b);
+    }
+
+    /// Read the result of a single-row instance.
+    pub fn read_output(&self, row: usize, layout: &RegionLayout) -> u64 {
+        self.xb.read_bits(row, layout.out_start, layout.out_bits)
+    }
+
+    /// Raw bit-range write (custom layouts).
+    pub fn write_bits(&mut self, row: usize, start: Col, n: u32, value: u64) {
+        self.xb.write_bits(row, start, n, value);
+    }
+
+    /// Raw bit-range read (custom layouts).
+    pub fn read_bits(&self, row: usize, start: Col, n: u32) -> u64 {
+        self.xb.read_bits(row, start, n)
+    }
+
+    /// Validate `program` (treating the operand regions in `input_cols` as
+    /// externally written) and execute it.
+    pub fn run_with_inputs(&mut self, program: &Program, input_cols: &[Col]) -> Result<OpStats> {
+        validate(program, input_cols)?;
+        Ok(self.run_unchecked(program))
+    }
+
+    /// Validate and execute, deriving the external-input set from the
+    /// program's partition map (every column is allowed as input; use
+    /// [`Simulator::run_with_inputs`] for strict input tracking).
+    pub fn run(&mut self, program: &Program) -> Result<OpStats> {
+        let all: Vec<Col> = (0..program.partitions.num_cols()).collect();
+        validate(program, &all)?;
+        Ok(self.run_unchecked(program))
+    }
+
+    /// Execute without validation — the hot path for programs already
+    /// validated once (validation is data-independent).
+    pub fn run_unchecked(&mut self, program: &Program) -> OpStats {
+        let mut run_stats = OpStats::default();
+        for cycle in &program.cycles {
+            run_stats.record(cycle);
+            self.execute_cycle(cycle);
+        }
+        self.stats.cycles += run_stats.cycles;
+        self.stats.init_cycles += run_stats.init_cycles;
+        self.stats.gate_ops += run_stats.gate_ops;
+        self.stats.init_ops += run_stats.init_ops;
+        self.stats.max_parallel_ops = self.stats.max_parallel_ops.max(run_stats.max_parallel_ops);
+        run_stats
+    }
+
+    #[inline]
+    fn execute_cycle(&mut self, cycle: &Cycle) {
+        match cycle {
+            Cycle::Init { value, outputs } => {
+                for &c in outputs {
+                    self.xb.fill_col(c, *value);
+                }
+            }
+            Cycle::Gates(ops) => {
+                // Legal cycles have disjoint spans, so sequential application
+                // is equivalent to simultaneous application.
+                for op in ops {
+                    let [a, b, c] = op.inputs;
+                    match op.gate {
+                        Gate::Not => self.xb.apply1(a, op.output, |x| !x, op.no_init),
+                        Gate::Nor2 => {
+                            self.xb.apply3(a, b, a, op.output, |x, y, _| !(x | y), op.no_init)
+                        }
+                        Gate::Nor3 => self.xb.apply3(
+                            a,
+                            b,
+                            c,
+                            op.output,
+                            |x, y, z| !(x | y | z),
+                            op.no_init,
+                        ),
+                        Gate::Or2 => {
+                            self.xb.apply3(a, b, a, op.output, |x, y, _| x | y, op.no_init)
+                        }
+                        Gate::Nand2 => {
+                            self.xb.apply3(a, b, a, op.output, |x, y, _| !(x & y), op.no_init)
+                        }
+                        Gate::Min3 => self.xb.apply3(
+                            a,
+                            b,
+                            c,
+                            op.output,
+                            |x, y, z| !((x & y) | (x & z) | (y & z)),
+                            op.no_init,
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{GateSet, PartitionMap, ProgramBuilder};
+
+    /// A hand-built 1-bit full adder out of NOT/Min3 (eqs. (1)-(2) of the
+    /// paper), executed over all 8 input combinations in parallel rows.
+    #[test]
+    fn hand_built_full_adder() {
+        // Columns: 0=a 1=b 2=cin 3=cin' 4=cout' 5=cout 6=t2 7=sum
+        let parts = PartitionMap::single(8);
+        let mut b = ProgramBuilder::new("fa", parts, GateSet::NotMin3);
+        b.init(true, vec![3, 4, 5, 6, 7]);
+        b.gate(Gate::Not, &[2], 3); // cin'
+        b.gate(Gate::Min3, &[0, 1, 2], 4); // cout' = Min3(a,b,cin)
+        b.gate(Gate::Not, &[4], 5); // cout
+        b.gate(Gate::Min3, &[0, 1, 3], 6); // t2 = Min3(a,b,cin')
+        b.gate(Gate::Min3, &[5, 3, 6], 7); // sum = Min3(cout, cin', t2)
+        let p = b.finish();
+
+        let mut sim = Simulator::new(8, 8);
+        for row in 0..8 {
+            sim.write_bits(row, 0, 3, row as u64); // a,b,cin = bits of row
+        }
+        sim.run_with_inputs(&p, &[0, 1, 2]).unwrap();
+        for row in 0..8 {
+            let a = row & 1;
+            let b_ = row >> 1 & 1;
+            let cin = row >> 2 & 1;
+            let total = a + b_ + cin;
+            assert_eq!(sim.read_bits(row, 7, 1), (total & 1) as u64, "sum row {row}");
+            assert_eq!(sim.read_bits(row, 5, 1), (total >> 1) as u64, "cout row {row}");
+        }
+    }
+
+    #[test]
+    fn no_init_and_trick() {
+        // X-MAGIC: writing NOT(a) onto a cell holding b (without init)
+        // leaves b AND NOT(a).
+        let parts = PartitionMap::single(4);
+        let mut b = ProgramBuilder::new("t", parts, GateSet::Full);
+        b.stage_no_init(Gate::Not, &[0], 1).commit();
+        let p = b.finish();
+
+        let mut sim = Simulator::new(4, 4);
+        for row in 0..4 {
+            sim.write_bits(row, 0, 1, (row & 1) as u64); // a
+            sim.write_bits(row, 1, 1, (row >> 1 & 1) as u64); // b (target)
+        }
+        sim.run_with_inputs(&p, &[0, 1]).unwrap();
+        for row in 0..4 {
+            let a = row & 1 == 1;
+            let bv = row >> 1 & 1 == 1;
+            assert_eq!(sim.read_bits(row, 1, 1) == 1, bv & !a, "row {row}");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_across_runs() {
+        let parts = PartitionMap::single(4);
+        let mut b = ProgramBuilder::new("t", parts, GateSet::Full);
+        b.init(true, vec![1]);
+        b.gate(Gate::Not, &[0], 1);
+        let p = b.finish();
+        let mut sim = Simulator::new(1, 4);
+        sim.run(&p).unwrap();
+        sim.run(&p).unwrap();
+        assert_eq!(sim.stats().cycles, 4);
+        assert_eq!(sim.stats().gate_ops, 2);
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        // NOT over 1000 rows with mixed data.
+        let parts = PartitionMap::single(2);
+        let mut b = ProgramBuilder::new("t", parts, GateSet::Full);
+        b.init(true, vec![1]);
+        b.gate(Gate::Not, &[0], 1);
+        let p = b.finish();
+        let mut sim = Simulator::new(1000, 2);
+        for row in 0..1000 {
+            sim.write_bits(row, 0, 1, (row % 3 == 0) as u64);
+        }
+        sim.run(&p).unwrap();
+        for row in 0..1000 {
+            assert_eq!(sim.read_bits(row, 1, 1) == 1, row % 3 != 0, "row {row}");
+        }
+    }
+}

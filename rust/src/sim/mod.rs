@@ -1,0 +1,20 @@
+//! The cycle-accurate stateful-logic simulator (paper §V-C).
+//!
+//! Responsibilities:
+//!
+//! 1. **Legality** ([`checker`]): statically validate that a compiled
+//!    [`Program`](crate::isa::Program) respects the physics of stateful
+//!    logic — partition-interval isolation, output initialization, gate-set
+//!    restrictions, column bounds. Validation is data-independent, so it
+//!    runs once per program, not once per execution.
+//! 2. **Execution** ([`Simulator`]): apply the program to a crossbar,
+//!    bit-parallel across rows, counting exact cycles and micro-ops. This is
+//!    how Tables I-III are *measured* rather than just quoted.
+
+mod checker;
+pub mod compiled;
+mod executor;
+
+pub use checker::{validate, CheckReport};
+pub use compiled::CompiledProgram;
+pub use executor::Simulator;

@@ -1,0 +1,65 @@
+//! Small utilities shared across the crate.
+//!
+//! The offline build environment only ships the `xla` dependency closure, so
+//! we provide our own deterministic PRNG (used by tests, benches and workload
+//! generators) instead of pulling in `rand`.
+
+mod rng;
+mod timing;
+
+pub use rng::SplitMix64;
+pub use timing::Stopwatch;
+
+/// Ceiling of `log2(x)` for `x >= 1`. `ceil_log2(1) == 0`.
+pub fn ceil_log2(x: u64) -> u32 {
+    assert!(x >= 1, "ceil_log2 of zero");
+    if x == 1 {
+        0
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+/// Ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_matches_reference() {
+        for x in 1u64..10_000 {
+            let expect = (x as f64).log2().ceil() as u32;
+            // Guard against float edge cases with an exact check.
+            let exact = {
+                let mut k = 0;
+                while (1u64 << k) < x {
+                    k += 1;
+                }
+                k
+            };
+            assert_eq!(ceil_log2(x), exact, "x={x} (float said {expect})");
+        }
+    }
+
+    #[test]
+    fn ceil_log2_powers_of_two() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(16), 4);
+        assert_eq!(ceil_log2(17), 5);
+        assert_eq!(ceil_log2(32), 5);
+        assert_eq!(ceil_log2(64), 6);
+    }
+
+    #[test]
+    fn div_ceil_works() {
+        assert_eq!(div_ceil(0, 64), 0);
+        assert_eq!(div_ceil(1, 64), 1);
+        assert_eq!(div_ceil(64, 64), 1);
+        assert_eq!(div_ceil(65, 64), 2);
+    }
+}

@@ -1,0 +1,94 @@
+//! SplitMix64 — a tiny, fast, deterministic PRNG.
+//!
+//! Used for workload generation and property-style tests. Deterministic
+//! seeding keeps every experiment in EXPERIMENTS.md exactly reproducible.
+
+/// SplitMix64 PRNG (public-domain algorithm by Sebastiano Vigna).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform value in `[0, bound)`. `bound` must be non-zero.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Multiply-shift bounded generation (Lemire); bias is negligible for
+        // simulation workloads and determinism is what we care about.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// A random N-bit unsigned value (N in 1..=64).
+    pub fn bits(&mut self, n: u32) -> u64 {
+        assert!((1..=64).contains(&n));
+        if n == 64 {
+            self.next_u64()
+        } else {
+            self.next_u64() & ((1u64 << n) - 1)
+        }
+    }
+
+    /// Random boolean.
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn bits_masked() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert!(r.bits(16) < (1 << 16));
+            assert!(r.bits(1) < 2);
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        // Not a statistical test battery — just a sanity guard that each of
+        // 16 buckets receives a plausible share of 16k draws.
+        let mut r = SplitMix64::new(1234);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16384 {
+            buckets[r.below(16) as usize] += 1;
+        }
+        for (i, &b) in buckets.iter().enumerate() {
+            assert!((700..=1400).contains(&b), "bucket {i} has {b}");
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Wall-clock measurement helper used by the bench harnesses.
+//!
+//! criterion is not available in the offline dependency set, so the benches
+//! under `rust/benches/` use this small stopwatch with median-of-runs
+//! reporting instead.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch that collects per-iteration samples and reports robust
+/// aggregate statistics.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    samples: Vec<Duration>,
+}
+
+impl Stopwatch {
+    /// New, empty stopwatch.
+    pub fn new() -> Self {
+        Self { samples: Vec::new() }
+    }
+
+    /// Time a single closure invocation and record the sample.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let out = f();
+        self.samples.push(start.elapsed());
+        out
+    }
+
+    /// Run `f` `iters` times, recording each sample; returns the last result.
+    pub fn run<R>(&mut self, iters: usize, mut f: impl FnMut() -> R) -> Option<R> {
+        let mut last = None;
+        for _ in 0..iters {
+            last = Some(self.time(&mut f));
+        }
+        last
+    }
+
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        assert!(!self.samples.is_empty());
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    /// Minimum sample (best-case, least-noise estimate).
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().expect("no samples")
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        assert!(!self.samples.is_empty());
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples() {
+        let mut sw = Stopwatch::new();
+        let out = sw.run(5, || 2 + 2);
+        assert_eq!(out, Some(4));
+        assert_eq!(sw.len(), 5);
+        assert!(sw.min() <= sw.median());
+    }
+}

@@ -1,0 +1,106 @@
+//! Coordinator integration: concurrent clients, batching behaviour,
+//! routing errors, metrics accounting, and graceful shutdown.
+
+use multpim::coordinator::server::MultiplyDeployment;
+use multpim::coordinator::{Coordinator, EngineConfig, PipelineModel, Request, Response};
+use multpim::util::SplitMix64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn deployment(n_bits: u32, rows: usize, wait_ms: u64) -> MultiplyDeployment {
+    MultiplyDeployment {
+        n_bits,
+        rows,
+        max_wait: Duration::from_millis(wait_ms),
+        config: EngineConfig::MultPim,
+    }
+}
+
+#[test]
+fn concurrent_clients_share_batches() {
+    let coord = Arc::new(
+        Coordinator::launch(&[deployment(32, 64, 5)], &[]).unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(t);
+            for _ in 0..32 {
+                let (a, b) = (rng.bits(32), rng.bits(32));
+                let p = coord.multiply(32, a, b).unwrap();
+                assert_eq!(p, a * b);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.products.load(Ordering::Relaxed), 8 * 32);
+    // Batching must have merged requests: fewer executions than products.
+    let batches = m.batches.load(Ordering::Relaxed);
+    assert!(batches < 8 * 32, "batches={batches}");
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+#[test]
+fn mixed_width_routing() {
+    let coord =
+        Coordinator::launch(&[deployment(8, 16, 2), deployment(16, 16, 2)], &[(16, 4)])
+            .unwrap();
+    assert_eq!(coord.multiply(8, 200, 200).unwrap(), 40_000);
+    assert_eq!(coord.multiply(16, 40_000, 2).unwrap(), 80_000);
+    assert!(coord.multiply(32, 1, 1).is_err());
+    let out = coord
+        .matvec(16, vec![vec![1, 2, 3, 4]], vec![5, 6, 7, 8])
+        .unwrap();
+    assert_eq!(out, vec![5 + 12 + 21 + 32]);
+    coord.shutdown();
+}
+
+#[test]
+fn submit_api_is_asynchronous() {
+    let coord = Coordinator::launch(&[deployment(8, 256, 20)], &[]).unwrap();
+    // Fire 100 requests without awaiting; they should coalesce into one or
+    // two deadline batches.
+    let rxs: Vec<_> = (1..=100u64)
+        .map(|i| coord.submit(Request::Multiply { n_bits: 8, a: i % 200, b: 3 }).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().unwrap().unwrap() {
+            Response::Product(p) => assert_eq!(p, ((i as u64 + 1) % 200) * 3),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(coord.metrics().batches.load(Ordering::Relaxed) <= 3);
+    coord.shutdown();
+}
+
+#[test]
+fn pipeline_model_consistency_with_engine() {
+    // The pipeline's multiply stage must equal the real compiled program's
+    // Init + First-N-Stages prefix cost.
+    use multpim::algorithms::costmodel;
+    for n in [8u32, 16, 32] {
+        let p = PipelineModel::new(n);
+        let full = costmodel::multpim_latency(n as u64);
+        // Last stages cost exactly 6N; the pipeline replaces them.
+        assert_eq!(p.mul_stage_cycles() + 6 * n as u64, full);
+        assert!(p.initiation_interval() < full);
+    }
+}
+
+#[test]
+fn metrics_cycle_accounting() {
+    let coord = Coordinator::launch(&[deployment(16, 4, 1)], &[]).unwrap();
+    for i in 0..4u64 {
+        coord.multiply(16, i + 1, 7).unwrap();
+    }
+    let cycles = coord.metrics().sim_cycles.load(Ordering::Relaxed);
+    // Each flushed batch costs exactly the Table-I latency (291 at N=16).
+    assert_eq!(cycles % 291, 0, "cycles={cycles}");
+    assert!(cycles >= 291);
+    coord.shutdown();
+}

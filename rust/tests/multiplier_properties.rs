@@ -1,0 +1,156 @@
+//! Property-style cross-algorithm tests (hand-rolled generators; proptest
+//! is not in the offline dependency set).
+//!
+//! Invariants:
+//! * every multiplier agrees with native `u64` multiplication and with
+//!   every *other* multiplier;
+//! * batch results are independent of batch composition;
+//! * latency and area monotonically favour MultPIM, at every width;
+//! * compiled programs stay legal under strict validation for all widths.
+
+use multpim::algorithms::hajali::HajAli;
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::multpim_area::MultPimArea;
+use multpim::algorithms::rime::Rime;
+use multpim::algorithms::Multiplier;
+use multpim::util::SplitMix64;
+
+fn all_multipliers(n: u32) -> Vec<Box<dyn Multiplier>> {
+    vec![
+        Box::new(MultPim::new(n)),
+        Box::new(MultPimArea::new(n)),
+        Box::new(Rime::new(n)),
+        Box::new(HajAli::new(n)),
+    ]
+}
+
+#[test]
+fn cross_algorithm_agreement() {
+    let mut rng = SplitMix64::new(0x1234_5678);
+    for n in [2u32, 3, 5, 8, 13, 16, 21, 32] {
+        let mults = all_multipliers(n);
+        let pairs: Vec<(u64, u64)> = (0..24).map(|_| (rng.bits(n), rng.bits(n))).collect();
+        let mut results = Vec::new();
+        for m in &mults {
+            results.push((m.name(), m.multiply_batch(&pairs).unwrap()));
+        }
+        for (&(a, b), i) in pairs.iter().zip(0..) {
+            let want = a * b;
+            for (name, out) in &results {
+                assert_eq!(out[i], want, "{name} N={n}: {a}*{b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_composition_independence() {
+    // A pair's product must not depend on its row position or neighbours.
+    let mut rng = SplitMix64::new(0x9E37);
+    let m = MultPim::new(16);
+    let pairs: Vec<(u64, u64)> = (0..64).map(|_| (rng.bits(16), rng.bits(16))).collect();
+    let full = m.multiply_batch(&pairs).unwrap();
+    // Singleton runs.
+    for (i, &(a, b)) in pairs.iter().enumerate().step_by(17) {
+        assert_eq!(m.multiply(a, b).unwrap(), full[i]);
+    }
+    // Reversed batch.
+    let rev: Vec<(u64, u64)> = pairs.iter().rev().copied().collect();
+    let rev_out = m.multiply_batch(&rev).unwrap();
+    for i in 0..pairs.len() {
+        assert_eq!(full[i], rev_out[pairs.len() - 1 - i]);
+    }
+}
+
+#[test]
+fn identity_and_annihilator_properties() {
+    for n in [4u32, 8, 16, 32] {
+        let mults = all_multipliers(n);
+        let max = (1u64 << n) - 1;
+        let mut rng = SplitMix64::new(n as u64);
+        for m in &mults {
+            for _ in 0..8 {
+                let v = rng.bits(n);
+                assert_eq!(m.multiply(v, 1).unwrap(), v, "{} x*1", m.name());
+                assert_eq!(m.multiply(1, v).unwrap(), v, "{} 1*x", m.name());
+                assert_eq!(m.multiply(v, 0).unwrap(), 0, "{} x*0", m.name());
+                let w = rng.bits(n);
+                assert_eq!(
+                    m.multiply(v, w).unwrap(),
+                    m.multiply(w, v).unwrap(),
+                    "{} commutativity",
+                    m.name()
+                );
+            }
+            assert_eq!(m.multiply(max, max).unwrap(), max * max, "{} max*max", m.name());
+        }
+    }
+}
+
+#[test]
+fn latency_and_area_ordering() {
+    for n in [8u64, 16, 32] {
+        let multpim = MultPim::new(n as u32);
+        let area = MultPimArea::new(n as u32);
+        let rime = Rime::new(n as u32);
+        let hajali = HajAli::new(n as u32);
+        // Latency: MultPIM < MultPIM-Area < RIME < Haj-Ali.
+        assert!(multpim.program().cycle_count() < area.program().cycle_count());
+        assert!(area.program().cycle_count() < rime.program().cycle_count());
+        assert!(rime.program().cycle_count() < hajali.program().cycle_count());
+        // Area: MultPIM-Area < MultPIM (measured); MultPIM < RIME holds on
+        // the paper's quoted expressions (our RIME reconstruction is leaner
+        // than the real RIME — see rime.rs module docs).
+        assert!(area.program().area_memristors < multpim.program().area_memristors);
+        use multpim::algorithms::costmodel;
+        assert!(costmodel::multpim_area(n) < costmodel::rime_area(n));
+        assert!(
+            (multpim.program().area_memristors as u64) <= costmodel::multpim_area(n),
+            "measured MultPIM area must not exceed Table II"
+        );
+    }
+}
+
+#[test]
+fn strict_validation_sweep() {
+    for n in 2..=32u32 {
+        for m in all_multipliers(n) {
+            multpim::sim::validate(m.program(), &m.input_cols())
+                .unwrap_or_else(|e| panic!("{} N={n}: {e}", m.name()));
+        }
+    }
+}
+
+#[test]
+fn gate_set_restrictions_hold() {
+    use multpim::isa::GateSet;
+    assert_eq!(MultPim::new(8).program().gate_set, GateSet::NotMin3);
+    assert_eq!(MultPimArea::new(8).program().gate_set, GateSet::NotMin3);
+    assert_eq!(Rime::new(8).program().gate_set, GateSet::Rime);
+    assert_eq!(HajAli::new(8).program().gate_set, GateSet::Magic);
+}
+
+#[test]
+fn matvec_random_shapes() {
+    use multpim::algorithms::matvec::MultPimMatVec;
+    use multpim::fixedpoint::inner_product_mod;
+    let mut rng = SplitMix64::new(0xABCD);
+    for _ in 0..6 {
+        let n_bits = [4u32, 8, 12, 16][rng.below(4) as usize];
+        let n_elems = 1 + rng.below(6) as u32;
+        let m = 1 + rng.below(12) as usize;
+        let engine = MultPimMatVec::new(n_bits, n_elems);
+        let rows: Vec<Vec<u64>> = (0..m)
+            .map(|_| (0..n_elems).map(|_| rng.bits(n_bits)).collect())
+            .collect();
+        let x: Vec<u64> = (0..n_elems).map(|_| rng.bits(n_bits)).collect();
+        let out = engine.compute(&rows, &x).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(
+                out[r],
+                inner_product_mod(n_bits, row, &x),
+                "N={n_bits} n={n_elems} m={m} row={r}"
+            );
+        }
+    }
+}
