@@ -1,18 +1,26 @@
-//! §IV footnote 3: the multiplication pipeline.
+//! §IV footnote 3: the multiplication pipeline — plus the L3 shard pool.
 //!
-//! Places a regular adder in partition `p_{N+1}` so that the multiplier
-//! partitions start product `i+1` while the adder finishes product `i`.
-//! Prints the exact schedule for the first jobs and the steady-state
-//! throughput gain over unpipelined MultPIM.
+//! Part 1 prints the analytic two-stage pipeline model: a regular adder in
+//! partition `p_{N+1}` lets the multiplier partitions start product `i+1`
+//! while the adder finishes product `i`.
+//!
+//! Part 2 drives the *real* serving stack: a `Coordinator` deployment with
+//! a pool of crossbar shards executing the compiled hot path, fed by the
+//! row batcher, with per-shard occupancy and queue-wait metrics — the
+//! knobs the batching deadline is tuned with.
 //!
 //! ```sh
 //! cargo run --release --example pipeline_throughput
 //! ```
 
 use multpim::algorithms::costmodel;
-use multpim::coordinator::PipelineModel;
+use multpim::coordinator::{
+    Coordinator, EngineConfig, MultiplyDeployment, PipelineModel, Request, Response,
+};
+use multpim::util::SplitMix64;
+use std::time::{Duration, Instant};
 
-fn main() {
+fn main() -> multpim::Result<()> {
     for n in [8u32, 16, 32] {
         let p = PipelineModel::new(n);
         println!("=== N = {n} ===");
@@ -44,4 +52,44 @@ fn main() {
             costmodel::multpim_latency(n as u64) * k as u64
         );
     }
+
+    // ------------------------------------------------------------------
+    // The serving stack for real: 4 shards, 1024-row batches, 1ms
+    // deadline, 16k async requests.
+    // ------------------------------------------------------------------
+    const REQUESTS: usize = 16_384;
+    println!("=== shard-pool serving (N=32, 4 shards x 1024 rows, 1ms deadline) ===");
+    let coord = Coordinator::launch(
+        &[MultiplyDeployment {
+            n_bits: 32,
+            rows: 1024,
+            max_wait: Duration::from_millis(1),
+            config: EngineConfig::MultPim,
+            shards: 4,
+        }],
+        &[],
+    )?;
+    let mut rng = SplitMix64::new(0xF007);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(REQUESTS);
+    let mut expected = Vec::with_capacity(REQUESTS);
+    for _ in 0..REQUESTS {
+        let (a, b) = (rng.bits(32), rng.bits(32));
+        expected.push(a * b);
+        rxs.push(coord.submit(Request::Multiply { n_bits: 32, a, b })?);
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        match rx.recv().map_err(|_| multpim::Error::Runtime("worker dropped".into()))?? {
+            Response::Product(p) => assert_eq!(p, want),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "  {REQUESTS} products in {elapsed:.2?} ({:.0} products/s end-to-end)",
+        REQUESTS as f64 / elapsed.as_secs_f64()
+    );
+    println!("  metrics: {}", coord.metrics().snapshot());
+    coord.shutdown();
+    Ok(())
 }

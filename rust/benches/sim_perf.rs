@@ -1,10 +1,16 @@
 //! L3 performance bench: simulator throughput on the hot path.
 //!
-//! Measures gate-applications/second and products/second for row-parallel
-//! MultPIM batches — the numbers tracked by EXPERIMENTS.md §Perf.
+//! Measures gate-applications/second for row-parallel MultPIM batches —
+//! interpreted vs compiled — plus the **end-to-end serving path**: the
+//! seed's per-batch flow (fresh simulator + per-bit staging + interpreted
+//! run) against the shard flow (resident crossbar + word-transposed
+//! restage + `CompiledProgram`). These are the numbers tracked by
+//! EXPERIMENTS.md §Perf; the acceptance bar for the shard path is
+//! >= 1.5x products/sec over the interpreted path at N=32, 4096 rows.
 
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
+use multpim::coordinator::{EngineConfig, MultiplyEngine};
 use multpim::runtime::trace::program_to_trace;
 use multpim::sim::Simulator;
 use multpim::util::{SplitMix64, Stopwatch};
@@ -52,4 +58,67 @@ fn main() {
             rows as f64 / secs2,
         );
     }
+
+    // ----------------------------------------------------------------
+    // End-to-end serving path: seed flow vs shard flow, per batch.
+    // ----------------------------------------------------------------
+    println!("\n=== serving path: interpreted seed flow vs compiled shard flow ===");
+    let mut headline_speedup = None;
+    for (n, rows) in [(32u32, 1024usize), (32, 4096)] {
+        let mult = MultPim::new(n);
+        let program = mult.program();
+        let layout = mult.layout();
+        multpim::sim::validate(program, &mult.input_cols()).unwrap();
+
+        let mut rng = SplitMix64::new(0x5E21 + rows as u64);
+        let pairs: Vec<(u64, u64)> = (0..rows).map(|_| (rng.bits(n), rng.bits(n))).collect();
+        let iters = 5;
+
+        // Seed serving flow: allocate a simulator per batch, stage each
+        // operand bit individually, walk the Cycle tree.
+        let mut sw_seed = Stopwatch::new();
+        let out_seed = sw_seed
+            .run(iters, || {
+                let mut sim = Simulator::new_single_row_batch(program, rows);
+                for (row, &(a, b)) in pairs.iter().enumerate() {
+                    sim.write_input(row, &layout, a, b);
+                }
+                sim.run_unchecked(program);
+                (0..rows).map(|r| mult.read_result(&sim, r)).collect::<Vec<u64>>()
+            })
+            .unwrap();
+
+        // Shard serving flow: resident crossbar, transposed restage,
+        // pre-lowered program.
+        let engine = MultiplyEngine::new(EngineConfig::MultPim, n, rows).unwrap();
+        let mut shard = engine.shard();
+        let mut sw_shard = Stopwatch::new();
+        let out_shard = sw_shard.run(iters, || shard.execute(&pairs)).unwrap();
+        assert_eq!(out_seed, out_shard, "paths must agree");
+        for (&(a, b), &p) in pairs.iter().zip(&out_shard) {
+            assert_eq!(p, a * b);
+        }
+
+        let (s_seed, s_shard) = (sw_seed.median().as_secs_f64(), sw_shard.median().as_secs_f64());
+        let speedup = s_seed / s_shard;
+        println!(
+            "N={n:<3} rows={rows:<6} seed {:>9.3?} ({:>9.0} products/s)  shard {:>9.3?} ({:>9.0} products/s)  {:.2}x",
+            sw_seed.median(),
+            rows as f64 / s_seed,
+            sw_shard.median(),
+            rows as f64 / s_shard,
+            speedup,
+        );
+        if rows == 4096 {
+            headline_speedup = Some(speedup);
+        }
+    }
+    let headline = headline_speedup.expect("4096-row config measured");
+    println!(
+        "\nshard-path speedup at N=32, 4096 rows: {headline:.2}x (acceptance bar: >= 1.5x)"
+    );
+    assert!(
+        headline >= 1.5,
+        "serving speedup regressed below the 1.5x acceptance bar: {headline:.2}x"
+    );
 }

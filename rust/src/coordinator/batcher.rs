@@ -6,6 +6,8 @@
 //! the whole batch as one program execution — identical latency whether 1
 //! or `capacity` rows are occupied, which is exactly why PIM batching wins.
 
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// A pending item with its enqueue time and an opaque ticket used by the
@@ -54,10 +56,17 @@ impl<T> RowBatcher<T> {
     /// Enqueue an item; returns a full batch if this push filled the
     /// crossbar.
     pub fn push(&mut self, item: T, ticket: u64) -> Option<Vec<Pending<T>>> {
+        self.push_at(item, ticket, Instant::now())
+    }
+
+    /// Enqueue an item that was admitted at `enqueued` (possibly earlier
+    /// than now — e.g. time already spent in the server's submit channel
+    /// counts toward its queue-wait latency).
+    pub fn push_at(&mut self, item: T, ticket: u64, enqueued: Instant) -> Option<Vec<Pending<T>>> {
         if self.queue.is_empty() {
             self.oldest = Some(Instant::now());
         }
-        self.queue.push(Pending { item, ticket, enqueued: Instant::now() });
+        self.queue.push(Pending { item, ticket, enqueued });
         if self.queue.len() >= self.capacity {
             Some(self.take())
         } else {
@@ -92,6 +101,78 @@ impl<T> RowBatcher<T> {
     fn take(&mut self) -> Vec<Pending<T>> {
         self.oldest = None;
         std::mem::take(&mut self.queue)
+    }
+}
+
+/// A multi-consumer work queue feeding a shard pool: the width's batcher
+/// thread pushes flushed batches, `S` shard workers block on [`pop`]
+/// (`std::sync::mpsc` receivers are single-consumer, so the pool shares a
+/// `Mutex<VecDeque>` + `Condvar` instead).
+///
+/// [`pop`]: BatchQueue::pop
+#[derive(Debug)]
+pub struct BatchQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BatchQueue<T> {
+    /// A new, open queue.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Enqueue an item and wake one consumer. Returns `false` (dropping
+    /// the item) if the queue is already closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut state = self.state.lock().unwrap();
+        if state.closed {
+            return false;
+        }
+        state.items.push_back(item);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Close the queue: consumers drain the remaining items, then every
+    /// [`BatchQueue::pop`] returns `None`.
+    pub fn close(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                return Some(item);
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.ready.wait(state).unwrap();
+        }
+    }
+
+    /// Items currently waiting.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// True when nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -133,5 +214,53 @@ mod tests {
         assert!(b.flush().is_none());
         b.push(1u8, 0);
         assert_eq!(b.flush().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn queue_drains_after_close() {
+        let q = BatchQueue::new();
+        assert!(q.push(1u32));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "closed queue rejects pushes");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "stays terminated");
+    }
+
+    #[test]
+    fn queue_feeds_multiple_consumers() {
+        let q = BatchQueue::new();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..100u32 {
+            assert!(q.push(i));
+        }
+        q.close();
+        let mut all: Vec<u32> =
+            consumers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>(), "every item consumed exactly once");
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Arc<BatchQueue<u8>> = BatchQueue::new();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
     }
 }

@@ -1,12 +1,25 @@
 //! Execution engines: compiled PIM programs + simulators + verification.
+//!
+//! A [`MultiplyEngine`] is built once per deployed width at
+//! `Coordinator::launch`: the multiplier program is strictly validated
+//! **once** (validation is data-independent) and lowered **once** to a
+//! [`CompiledProgram`] for the deployment's crossbar geometry. The engine
+//! itself holds only shared immutable state (`Arc`s); each worker in the
+//! shard pool materializes a [`ShardExecutor`] via [`MultiplyEngine::shard`]
+//! — a resident crossbar that is *reused* across batches (clear-and-restage,
+//! never reallocated) and staged through the word-transposed bulk write.
+//! See EXPERIMENTS.md §Perf for the measured gains of the compiled +
+//! transposed-staging path over the seed's interpreted per-bit path.
 
 use crate::algorithms::matvec::MultPimMatVec;
 use crate::algorithms::multpim::MultPim;
 use crate::algorithms::multpim_area::MultPimArea;
 use crate::algorithms::Multiplier;
+use crate::crossbar::RegionLayout;
 use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
 use crate::sim::{validate, CompiledProgram, Simulator};
-use crate::Result;
+use crate::{Error, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which multiplier implementation an engine deploys.
@@ -18,29 +31,31 @@ pub enum EngineConfig {
     MultPimArea,
 }
 
-/// A multiply engine for one operand width: owns the compiled program
-/// (validated once) and executes row-batches.
+/// A multiply engine for one operand width: owns the program (validated
+/// once) and its compiled lowering (lowered once), shared by every shard.
 pub struct MultiplyEngine {
-    multiplier: Box<dyn Multiplier + Send + Sync>,
+    multiplier: Arc<dyn Multiplier + Send + Sync>,
     rows: usize,
-    /// Program pre-lowered for this crossbar geometry (hot path; see
-    /// EXPERIMENTS.md §Perf).
-    compiled: CompiledProgram,
+    cols: usize,
+    compiled: Arc<CompiledProgram>,
 }
 
 impl MultiplyEngine {
-    /// Build and statically validate an engine.
+    /// Build and statically validate an engine, lowering the program for
+    /// a `rows`-row crossbar.
     pub fn new(config: EngineConfig, n_bits: u32, rows: usize) -> Result<Self> {
-        let multiplier: Box<dyn Multiplier + Send + Sync> = match config {
-            EngineConfig::MultPim => Box::new(MultPim::new(n_bits)),
-            EngineConfig::MultPimArea => Box::new(MultPimArea::new(n_bits)),
+        if rows == 0 {
+            return Err(Error::BadParameter("engine needs at least one crossbar row".into()));
+        }
+        let multiplier: Arc<dyn Multiplier + Send + Sync> = match config {
+            EngineConfig::MultPim => Arc::new(MultPim::new(n_bits)),
+            EngineConfig::MultPimArea => Arc::new(MultPimArea::new(n_bits)),
         };
         validate(multiplier.program(), &multiplier.input_cols())?;
-        let words = Simulator::new_single_row_batch(multiplier.program(), rows)
-            .crossbar()
-            .words_per_col();
-        let compiled = CompiledProgram::lower(multiplier.program(), words);
-        Ok(Self { multiplier, rows, compiled })
+        let cols = multiplier.program().partitions.num_cols() as usize;
+        let words = Simulator::new(rows, cols).crossbar().words_per_col();
+        let compiled = Arc::new(CompiledProgram::lower(multiplier.program(), words));
+        Ok(Self { multiplier, rows, cols, compiled })
     }
 
     /// Operand width.
@@ -58,20 +73,28 @@ impl MultiplyEngine {
         self.multiplier.program().cycle_count() as u64
     }
 
-    /// Execute a batch (up to `rows` pairs); returns products and the
-    /// simulated cycle count.
-    pub fn execute(&self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, u64, std::time::Duration)> {
-        assert!(pairs.len() <= self.rows, "batch exceeds crossbar rows");
-        let t0 = Instant::now();
-        // Hot path: fixed-geometry simulator + pre-lowered program (the
-        // program was strictly validated once at construction).
-        let layout = self.multiplier.layout();
-        let mut sim = Simulator::new(self.rows, self.multiplier.program().partitions.num_cols() as usize);
-        for (row, &(a, b)) in pairs.iter().enumerate() {
-            sim.write_input(row, &layout, a, b);
+    /// Materialize one shard: a worker-resident crossbar executing this
+    /// engine's compiled program. Cheap shared state (`Arc` clones) plus
+    /// one crossbar allocation that the shard then reuses for its entire
+    /// lifetime.
+    pub fn shard(&self) -> ShardExecutor {
+        ShardExecutor {
+            multiplier: Arc::clone(&self.multiplier),
+            compiled: Arc::clone(&self.compiled),
+            layout: self.multiplier.layout(),
+            rows: self.rows,
+            sim: Simulator::new(self.rows, self.cols),
+            stage_a: Vec::with_capacity(self.rows),
+            stage_b: Vec::with_capacity(self.rows),
         }
-        self.compiled.execute(&mut sim);
-        let out = (0..pairs.len()).map(|r| self.multiplier.read_result(&sim, r)).collect();
+    }
+
+    /// Execute a batch (up to `rows` pairs); returns products and the
+    /// simulated cycle count. One-shot convenience — the serving path
+    /// keeps long-lived [`ShardExecutor`]s instead.
+    pub fn execute(&self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, u64, std::time::Duration)> {
+        let t0 = Instant::now();
+        let out = self.shard().execute(pairs);
         Ok((out, self.cycles_per_batch(), t0.elapsed()))
     }
 
@@ -90,6 +113,57 @@ impl MultiplyEngine {
     /// Access the underlying multiplier (reports, traces).
     pub fn multiplier(&self) -> &dyn Multiplier {
         self.multiplier.as_ref()
+    }
+}
+
+/// One shard of a multiply deployment: the hot-path executor owned by a
+/// single worker thread.
+///
+/// The crossbar is allocated once and **reused across batches**: a legal
+/// program initializes every non-operand cell it reads before reading it
+/// (enforced by the strict checker at engine construction), so re-running
+/// only requires restaging the operand columns of the occupied rows —
+/// done with the word-transposed bulk write rather than per-bit stores.
+pub struct ShardExecutor {
+    multiplier: Arc<dyn Multiplier + Send + Sync>,
+    compiled: Arc<CompiledProgram>,
+    layout: RegionLayout,
+    rows: usize,
+    sim: Simulator,
+    stage_a: Vec<u64>,
+    stage_b: Vec<u64>,
+}
+
+impl ShardExecutor {
+    /// Batch capacity (crossbar rows).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Cycles one batch costs.
+    pub fn cycles_per_batch(&self) -> u64 {
+        self.multiplier.program().cycle_count() as u64
+    }
+
+    /// The resident simulator (tests compare its full state against the
+    /// interpreted reference path).
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// Execute a batch on the resident crossbar: transposed restage of
+    /// the occupied rows, one compiled program run, result readback.
+    pub fn execute(&mut self, pairs: &[(u64, u64)]) -> Vec<u64> {
+        assert!(pairs.len() <= self.rows, "batch exceeds crossbar rows");
+        self.stage_a.clear();
+        self.stage_b.clear();
+        for &(a, b) in pairs {
+            self.stage_a.push(a);
+            self.stage_b.push(b);
+        }
+        self.sim.write_inputs_transposed(&self.layout, &self.stage_a, &self.stage_b);
+        self.compiled.execute(&mut self.sim);
+        (0..pairs.len()).map(|row| self.multiplier.read_result(&self.sim, row)).collect()
     }
 }
 
@@ -156,6 +230,43 @@ mod tests {
         let engine = MultiplyEngine::new(EngineConfig::MultPimArea, 8, 8).unwrap();
         let (out, _, _) = engine.execute(&[(200, 19)]).unwrap();
         assert_eq!(out[0], 3800);
+    }
+
+    /// The clear-and-restage reuse: one shard, many batches of varying
+    /// occupancy, each must be exact despite the stale state of earlier
+    /// batches still sitting in the crossbar.
+    #[test]
+    fn shard_reuse_across_batches() {
+        let engine = MultiplyEngine::new(EngineConfig::MultPim, 16, 64).unwrap();
+        let mut shard = engine.shard();
+        let mut rng = SplitMix64::new(0x5A5A);
+        for batch_len in [64usize, 1, 17, 64, 3] {
+            let pairs: Vec<(u64, u64)> =
+                (0..batch_len).map(|_| (rng.bits(16), rng.bits(16))).collect();
+            let out = shard.execute(&pairs);
+            for (&(a, b), &p) in pairs.iter().zip(&out) {
+                assert_eq!(p, a * b, "batch_len={batch_len}");
+            }
+        }
+    }
+
+    /// Shards of one engine are independent executors over shared
+    /// immutable program state.
+    #[test]
+    fn shards_are_independent() {
+        let engine = MultiplyEngine::new(EngineConfig::MultPim, 8, 16).unwrap();
+        let mut s0 = engine.shard();
+        let mut s1 = engine.shard();
+        assert_eq!(s0.execute(&[(200, 200)]), vec![40_000]);
+        assert_eq!(s1.execute(&[(255, 255)]), vec![65_025]);
+        assert_eq!(s0.execute(&[(3, 5)]), vec![15]);
+        assert_eq!(s0.rows(), 16);
+        assert_eq!(s0.cycles_per_batch(), engine.cycles_per_batch());
+    }
+
+    #[test]
+    fn zero_rows_rejected() {
+        assert!(MultiplyEngine::new(EngineConfig::MultPim, 8, 0).is_err());
     }
 
     #[test]

@@ -1,14 +1,30 @@
-//! Lock-free service metrics.
+//! Service metrics: lock-free global counters plus coarse per-shard
+//! occupancy (one mutex acquisition per flushed batch, never on the
+//! per-request path).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Per-shard execution counters (keyed by `(width, shard index)`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Batches this shard executed.
+    pub batches: u64,
+    /// Products this shard computed.
+    pub products: u64,
+    /// Wall-clock nanoseconds this shard spent executing batches.
+    pub busy_ns: u64,
+}
 
 /// Aggregate counters exposed by the coordinator.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Requests accepted.
     pub requests: AtomicU64,
-    /// Individual products computed (a batch of k counts k).
+    /// Individual products computed (a batch of k counts k; a matvec of
+    /// m rows counts m inner products).
     pub products: AtomicU64,
     /// Program executions (one per flushed batch).
     pub batches: AtomicU64,
@@ -18,10 +34,38 @@ pub struct Metrics {
     pub sim_wall_ns: AtomicU64,
     /// Golden verifications run.
     pub verifications: AtomicU64,
+    /// Total nanoseconds requests spent waiting in batcher + shard queues
+    /// (summed over requests; divide by [`Metrics::queued_products`] for
+    /// the mean — the number the batching deadline is tuned against).
+    pub queue_wait_ns: AtomicU64,
+    /// Requests whose queue wait has been recorded.
+    pub queued_products: AtomicU64,
+    /// When this metrics registry was created (occupancy baseline).
+    started: Instant,
+    /// Per-shard occupancy, keyed by `(width, shard index)`.
+    shards: Mutex<BTreeMap<(u32, usize), ShardStats>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            products: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            sim_wall_ns: AtomicU64::new(0),
+            verifications: AtomicU64::new(0),
+            queue_wait_ns: AtomicU64::new(0),
+            queued_products: AtomicU64::new(0),
+            started: Instant::now(),
+            shards: Mutex::new(BTreeMap::new()),
+        }
+    }
 }
 
 impl Metrics {
-    /// Record a flushed batch.
+    /// Record a flushed batch (global counters only; shard workers use
+    /// [`Metrics::record_shard_batch`]).
     pub fn record_batch(&self, products: u64, cycles: u64, wall: Duration) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.products.fetch_add(products, Ordering::Relaxed);
@@ -29,20 +73,61 @@ impl Metrics {
         self.sim_wall_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// Record a batch executed by a specific shard, including the summed
+    /// queue-wait latency of its requests.
+    pub fn record_shard_batch(
+        &self,
+        width: u32,
+        shard: usize,
+        products: u64,
+        cycles: u64,
+        wall: Duration,
+        queue_wait: Duration,
+    ) {
+        self.record_batch(products, cycles, wall);
+        self.queue_wait_ns.fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
+        self.queued_products.fetch_add(products, Ordering::Relaxed);
+        let mut shards = self.shards.lock().unwrap();
+        let stats = shards.entry((width, shard)).or_default();
+        stats.batches += 1;
+        stats.products += products;
+        stats.busy_ns += wall.as_nanos() as u64;
+    }
+
+    /// Mean per-request queue wait so far.
+    pub fn avg_queue_wait(&self) -> Duration {
+        let n = self.queued_products.load(Ordering::Relaxed);
+        if n == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed) / n)
+        }
+    }
+
+    /// Snapshot of the per-shard counters, sorted by `(width, shard)`.
+    pub fn shard_stats(&self) -> Vec<((u32, usize), ShardStats)> {
+        self.shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
+    }
+
     /// Human-readable snapshot.
+    ///
+    /// `sim_wall` is the *summed* busy time across shards (it exceeds
+    /// elapsed time when shards run concurrently); `throughput` is
+    /// therefore computed against service uptime, not `sim_wall`.
     pub fn snapshot(&self) -> String {
         let products = self.products.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let cycles = self.sim_cycles.load(Ordering::Relaxed);
         let wall_ns = self.sim_wall_ns.load(Ordering::Relaxed);
-        let thr = if wall_ns > 0 {
-            products as f64 / (wall_ns as f64 / 1e9)
+        let uptime_ns = self.started.elapsed().as_nanos().max(1) as u64;
+        let thr = if products > 0 {
+            products as f64 / (uptime_ns as f64 / 1e9)
         } else {
             0.0
         };
-        format!(
+        let mut out = format!(
             "requests={} products={} batches={} avg_batch={:.1} sim_cycles={} \
-             sim_wall={:.3}s throughput={:.0} products/s",
+             sim_wall={:.3}s throughput={:.0} products/s avg_queue_wait={:.3?}",
             self.requests.load(Ordering::Relaxed),
             products,
             batches,
@@ -50,7 +135,18 @@ impl Metrics {
             cycles,
             wall_ns as f64 / 1e9,
             thr,
-        )
+            self.avg_queue_wait(),
+        );
+        for ((width, shard), s) in self.shard_stats() {
+            out.push_str(&format!(
+                "\n  shard[N={width}:{shard}] batches={} products={} busy={:.3}s occupancy={:.1}%",
+                s.batches,
+                s.products,
+                s.busy_ns as f64 / 1e9,
+                100.0 * s.busy_ns as f64 / uptime_ns as f64,
+            ));
+        }
+        out
     }
 }
 
@@ -69,5 +165,29 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("products=128"), "{s}");
         assert!(s.contains("avg_batch=64.0"), "{s}");
+    }
+
+    #[test]
+    fn shard_accounting() {
+        let m = Metrics::default();
+        m.record_shard_batch(32, 0, 100, 611, Duration::from_millis(3), Duration::from_millis(5));
+        m.record_shard_batch(32, 1, 50, 611, Duration::from_millis(1), Duration::from_millis(1));
+        m.record_shard_batch(32, 0, 10, 611, Duration::from_millis(1), Duration::ZERO);
+        // Globals fold in every shard batch.
+        assert_eq!(m.products.load(Ordering::Relaxed), 160);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 3);
+        // Per-shard split.
+        let stats = m.shard_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, (32, 0));
+        assert_eq!(stats[0].1.batches, 2);
+        assert_eq!(stats[0].1.products, 110);
+        assert_eq!(stats[1].1.products, 50);
+        // Queue-wait average: 6ms over 160 products.
+        assert_eq!(m.queued_products.load(Ordering::Relaxed), 160);
+        assert_eq!(m.avg_queue_wait(), Duration::from_nanos(6_000_000 / 160));
+        let s = m.snapshot();
+        assert!(s.contains("shard[N=32:0]"), "{s}");
+        assert!(s.contains("shard[N=32:1]"), "{s}");
     }
 }

@@ -6,17 +6,41 @@
 //!
 //! * [`batcher`] — requests are *row-batched*: a single-row PIM program
 //!   executes identically across every crossbar row (Fig. 1), so up to
-//!   `rows` independent requests share one program execution;
-//! * [`engine`] — per-width multiplier engines and the §VI matvec engine,
-//!   with optional golden-model verification through the PJRT runtime;
-//! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model:
-//!   while partition `p_{N+1}` runs the final addition of one product, the
-//!   other partitions start the next product;
-//! * [`server`] — a thread-per-crossbar work loop with a routing front
-//!   door and metrics.
+//!   `rows` independent requests share one program execution. The module
+//!   also provides the [`batcher::BatchQueue`] feeding each width's shard
+//!   pool;
+//! * [`engine`] — per-width multiplier engines (validated and compiled
+//!   **once** at launch) plus the §VI matvec engine, with optional
+//!   golden-model verification;
+//! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model;
+//! * [`server`] — the shard-pool work loop with a routing front door and
+//!   metrics.
+//!
+//! ## Shard-pool serving architecture
+//!
+//! Every deployed multiply width runs as a small pipeline:
+//!
+//! 1. **admission** — `Coordinator::submit` stamps the request with a
+//!    ticket from the global admission counter and an enqueue timestamp,
+//!    then routes it to the width's batcher thread;
+//! 2. **batching** — one thread per width owns a [`RowBatcher`]
+//!    (capacity = crossbar rows, deadline = `max_wait`) and flushes full
+//!    or expired batches into the width's shared [`batcher::BatchQueue`];
+//! 3. **execution** — `S` shard workers (one OS thread each) pop batches
+//!    from that queue. Each shard owns a **resident crossbar** created at
+//!    launch and reused for every batch (clear-and-restage — operands are
+//!    bulk-staged through the word-transposed
+//!    [`Crossbar::write_rows_transposed`](crate::crossbar::Crossbar::write_rows_transposed)
+//!    path) and executes the width's pre-lowered
+//!    [`CompiledProgram`](crate::sim::CompiledProgram) — the program is
+//!    validated and lowered exactly once, at launch, never per batch;
+//! 4. **observability** — [`Metrics`] aggregates global counters plus
+//!    per-shard occupancy and the per-request queue-wait latency that the
+//!    batching deadline is tuned against.
 //!
 //! The offline dependency set has no tokio, so the event loop is built on
-//! `std::thread` + `std::sync::mpsc` — same architecture, no async runtime.
+//! `std::thread` + `std::sync::mpsc` (+ a `Mutex`/`Condvar` queue for the
+//! multi-consumer shard stage) — same architecture, no async runtime.
 
 pub mod batcher;
 pub mod engine;
@@ -25,7 +49,7 @@ pub mod pipeline;
 pub mod server;
 
 pub use batcher::RowBatcher;
-pub use engine::{EngineConfig, MatVecEngine, MultiplyEngine};
+pub use engine::{EngineConfig, MatVecEngine, MultiplyEngine, ShardExecutor};
 pub use metrics::Metrics;
 pub use pipeline::PipelineModel;
-pub use server::{Coordinator, Request, Response};
+pub use server::{Coordinator, MultiplyDeployment, Request, Response};

@@ -1,17 +1,29 @@
-//! The serving front door: router + worker threads + response plumbing.
+//! The serving front door: router + per-width shard pools + response
+//! plumbing.
 //!
 //! Architecture (thread-based; the offline dependency set has no tokio):
 //!
 //! ```text
-//!  clients ---> Coordinator::submit --- route by (op, width) ---> worker queue
-//!                                                                    |
-//!  worker thread: RowBatcher (capacity = crossbar rows, deadline) ---+
-//!      flush -> MultiplyEngine::execute (one row-parallel program run)
-//!      reply -> per-request mpsc Sender
+//!  clients ---> Coordinator::submit --- route by (op, width) ---> batcher thread
+//!                                                                      |
+//!  batcher thread: RowBatcher (capacity = crossbar rows, deadline)     |
+//!      flush -> shared per-width BatchQueue ----+----------+----------+
+//!                                               |          |          |
+//!                                          shard 0     shard 1 ... shard S-1
+//!      (each shard: resident crossbar, transposed restage, one
+//!       CompiledProgram run, per-request reply via mpsc Sender)
 //! ```
+//!
+//! Programs are validated and lowered exactly once, at
+//! [`Coordinator::launch`] (inside [`MultiplyEngine::new`]); the shard
+//! workers only ever run the pre-lowered hot path. Every accepted multiply
+//! request is stamped with a ticket from a global admission counter and an
+//! enqueue timestamp; the shard that executes it feeds the measured
+//! queue-wait into [`Metrics`], which is how the batching deadline is
+//! tuned (see the `serve` subcommand's snapshot output).
 
-use super::batcher::RowBatcher;
-use super::engine::{EngineConfig, MatVecEngine, MultiplyEngine};
+use super::batcher::{BatchQueue, Pending, RowBatcher};
+use super::engine::{EngineConfig, MatVecEngine, MultiplyEngine, ShardExecutor};
 use super::metrics::Metrics;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -52,18 +64,23 @@ pub enum Response {
     InnerProducts(Vec<u64>),
 }
 
+/// An operand pair plus its reply channel (the batcher's queue payload).
+type MultiplyJob = (u64, u64, mpsc::Sender<Result<Response>>);
+
 enum WorkerMsg {
-    Job { a: u64, b: u64, reply: mpsc::Sender<Result<Response>> },
+    Job { job: MultiplyJob, ticket: u64, enqueued: Instant },
     Shutdown,
 }
 
-/// The deployment: routes requests to per-width multiply workers and the
-/// matvec engines.
+/// The deployment: routes requests to per-width multiply shard pools and
+/// the matvec engines.
 pub struct Coordinator {
     multiply_tx: HashMap<u32, mpsc::Sender<WorkerMsg>>,
     matvec: HashMap<(u32, u32), MatVecEngine>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    /// Global admission counter; its value rides on every multiply job as
+    /// the batcher ticket (stable routing/debugging identity).
     tickets: AtomicU64,
 }
 
@@ -72,17 +89,23 @@ pub struct Coordinator {
 pub struct MultiplyDeployment {
     /// Operand width in bits.
     pub n_bits: u32,
-    /// Crossbar rows (batch capacity).
+    /// Crossbar rows (batch capacity) per shard.
     pub rows: usize,
     /// Batching deadline.
     pub max_wait: Duration,
     /// Engine variant.
     pub config: EngineConfig,
+    /// Crossbar shards (worker threads) sharing this width's batch queue.
+    pub shards: usize,
 }
 
 impl Coordinator {
-    /// Launch workers for the given multiply widths and build matvec
-    /// engines for the given `(n_bits, n_elems)` shapes.
+    /// Launch the shard pools for the given multiply widths and build
+    /// matvec engines for the given `(n_bits, n_elems)` shapes.
+    ///
+    /// Each width's program is strictly validated and lowered to its
+    /// [`crate::sim::CompiledProgram`] exactly once, here; the per-shard
+    /// workers reuse their crossbar allocation for the process lifetime.
     pub fn launch(
         multiplies: &[MultiplyDeployment],
         matvecs: &[(u32, u32)],
@@ -91,11 +114,33 @@ impl Coordinator {
         let mut multiply_tx = HashMap::new();
         let mut workers = Vec::new();
         for dep in multiplies {
+            if dep.shards == 0 {
+                return Err(Error::BadParameter(format!(
+                    "deployment N={} needs at least one shard",
+                    dep.n_bits
+                )));
+            }
+            if multiply_tx.contains_key(&dep.n_bits) {
+                return Err(Error::BadParameter(format!(
+                    "width N={} deployed twice",
+                    dep.n_bits
+                )));
+            }
+            // Validate + lower once; shards share the immutable program.
             let engine = MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?;
+            let queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>> = BatchQueue::new();
+            for shard_idx in 0..dep.shards {
+                let shard = engine.shard();
+                let queue = Arc::clone(&queue);
+                let metrics = Arc::clone(&metrics);
+                let width = dep.n_bits;
+                workers.push(std::thread::spawn(move || {
+                    shard_loop(shard, width, shard_idx, queue, metrics)
+                }));
+            }
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            let metrics = Arc::clone(&metrics);
             let dep = *dep;
-            workers.push(std::thread::spawn(move || worker_loop(engine, dep, rx, metrics)));
+            workers.push(std::thread::spawn(move || batcher_loop(dep, rx, queue)));
             multiply_tx.insert(dep.n_bits, tx);
         }
         let mut matvec = HashMap::new();
@@ -113,14 +158,17 @@ impl Coordinator {
     /// Submit a request; returns a receiver for the response.
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tickets.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         match request {
             Request::Multiply { n_bits, a, b } => {
                 let tx = self.multiply_tx.get(&n_bits).ok_or_else(|| {
                     Error::BadParameter(format!("no multiply engine deployed for N={n_bits}"))
                 })?;
-                tx.send(WorkerMsg::Job { a, b, reply: reply_tx })
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                // Stamp admission time here so the queue-wait metric also
+                // covers time spent in the submit->batcher channel.
+                let enqueued = Instant::now();
+                tx.send(WorkerMsg::Job { job: (a, b, reply_tx), ticket, enqueued })
                     .map_err(|_| Error::Runtime("worker gone".into()))?;
             }
             Request::MatVec { n_bits, rows, x } => {
@@ -132,14 +180,15 @@ impl Coordinator {
                         ))
                     })?;
                 // Matvec runs synchronously on the caller thread: the whole
-                // matrix already batches across rows.
+                // matrix already batches across rows. One inner product per
+                // matrix row (the multiply path likewise counts one product
+                // per operand pair).
+                let inner_products = rows.len() as u64;
                 let t0 = Instant::now();
                 let out = engine.compute(&rows, &x);
-                self.metrics.record_batch(
-                    (rows.len() * x.len()) as u64,
-                    engine.cycles(),
-                    t0.elapsed(),
-                );
+                if out.is_ok() {
+                    self.metrics.record_batch(inner_products, engine.cycles(), t0.elapsed());
+                }
                 let _ = reply_tx.send(out.map(Response::InnerProducts));
             }
         }
@@ -164,7 +213,8 @@ impl Coordinator {
         }
     }
 
-    /// Graceful shutdown: flush batches and join workers.
+    /// Graceful shutdown: flush pending batches through the shard pools
+    /// and join every worker. No accepted request is dropped.
     pub fn shutdown(mut self) {
         for tx in self.multiply_tx.values() {
             let _ = tx.send(WorkerMsg::Shutdown);
@@ -176,59 +226,65 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
-    engine: MultiplyEngine,
+/// Per-width batching stage: accumulates jobs until the crossbar is full
+/// or the deadline fires, then hands the whole batch to the shard pool.
+fn batcher_loop(
     dep: MultiplyDeployment,
     rx: mpsc::Receiver<WorkerMsg>,
-    metrics: Arc<Metrics>,
+    queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>>,
 ) {
-    let mut batcher: RowBatcher<(u64, u64, mpsc::Sender<Result<Response>>)> =
-        RowBatcher::new(dep.rows, dep.max_wait);
-    let mut ticket = 0u64;
+    let mut batcher: RowBatcher<MultiplyJob> = RowBatcher::new(dep.rows, dep.max_wait);
     loop {
         // Wait for work, bounded by the batching deadline.
         let timeout =
             batcher.time_to_deadline(Instant::now()).unwrap_or(Duration::from_secs(3600));
-        let msg = rx.recv_timeout(timeout);
-        let mut shutdown = false;
-        let ready;
-        match msg {
-            Ok(WorkerMsg::Job { a, b, reply }) => {
-                ticket += 1;
-                ready = batcher.push((a, b, reply), ticket);
+        let (ready, shutdown) = match rx.recv_timeout(timeout) {
+            Ok(WorkerMsg::Job { job, ticket, enqueued }) => {
+                (batcher.push_at(job, ticket, enqueued), false)
             }
-            Ok(WorkerMsg::Shutdown) => {
-                shutdown = true;
-                ready = batcher.flush();
+            Ok(WorkerMsg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                (batcher.flush(), true)
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                ready = batcher.poll_deadline(Instant::now());
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                shutdown = true;
-                ready = batcher.flush();
-            }
-        }
+            Err(mpsc::RecvTimeoutError::Timeout) => (batcher.poll_deadline(Instant::now()), false),
+        };
         if let Some(batch) = ready {
-            let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
-            let t0 = Instant::now();
-            match engine.execute(&pairs) {
-                Ok((products, cycles, _)) => {
-                    metrics.record_batch(pairs.len() as u64, cycles, t0.elapsed());
-                    for (pending, product) in batch.into_iter().zip(products) {
-                        let _ = pending.item.2.send(Ok(Response::Product(product)));
-                    }
-                }
-                Err(e) => {
-                    let msg = e.to_string();
-                    for pending in batch {
-                        let _ = pending.item.2.send(Err(Error::Runtime(msg.clone())));
-                    }
-                }
-            }
+            queue.push(batch);
         }
         if shutdown {
+            // Shards drain whatever is still queued, then exit.
+            queue.close();
             return;
+        }
+    }
+}
+
+/// One shard worker: pops batches off the width's shared queue and runs
+/// them on its resident crossbar.
+fn shard_loop(
+    mut shard: ShardExecutor,
+    width: u32,
+    shard_idx: usize,
+    queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>>,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(batch) = queue.pop() {
+        let t0 = Instant::now();
+        let mut queue_wait = Duration::ZERO;
+        for pending in &batch {
+            queue_wait += t0.saturating_duration_since(pending.enqueued);
+        }
+        let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
+        let products = shard.execute(&pairs);
+        metrics.record_shard_batch(
+            width,
+            shard_idx,
+            pairs.len() as u64,
+            shard.cycles_per_batch(),
+            t0.elapsed(),
+            queue_wait,
+        );
+        for (pending, product) in batch.into_iter().zip(products) {
+            let _ = pending.item.2.send(Ok(Response::Product(product)));
         }
     }
 }
@@ -237,18 +293,19 @@ fn worker_loop(
 mod tests {
     use super::*;
 
-    fn deployment(n_bits: u32, rows: usize, wait_ms: u64) -> MultiplyDeployment {
+    fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> MultiplyDeployment {
         MultiplyDeployment {
             n_bits,
             rows,
             max_wait: Duration::from_millis(wait_ms),
             config: EngineConfig::MultPim,
+            shards,
         }
     }
 
     #[test]
     fn multiply_roundtrip() {
-        let coord = Coordinator::launch(&[deployment(16, 4, 1)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(16, 4, 1, 1)], &[]).unwrap();
         assert_eq!(coord.multiply(16, 1234, 567).unwrap(), 1234 * 567);
         assert!(coord.multiply(8, 1, 1).is_err(), "undeployed width rejected");
         coord.shutdown();
@@ -256,7 +313,7 @@ mod tests {
 
     #[test]
     fn batching_fills_rows() {
-        let coord = Coordinator::launch(&[deployment(8, 8, 50)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 8, 50, 2)], &[]).unwrap();
         let receivers: Vec<_> = (0..8u64)
             .map(|i| {
                 coord
@@ -278,7 +335,7 @@ mod tests {
 
     #[test]
     fn deadline_flush_partial_batch() {
-        let coord = Coordinator::launch(&[deployment(8, 1024, 5)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 1024, 5, 1)], &[]).unwrap();
         let p = coord.multiply(8, 3, 5).unwrap(); // waits for the deadline
         assert_eq!(p, 15);
         coord.shutdown();
@@ -293,5 +350,55 @@ mod tests {
         assert_eq!(out, vec![7 + 16 + 27, 28 + 40 + 54]);
         assert!(coord.matvec(8, vec![vec![1, 2]], vec![1, 2]).is_err());
         coord.shutdown();
+    }
+
+    /// Regression (metrics inflation): a matvec of `m` rows against an
+    /// `n`-element vector counts `m` inner products — NOT `m * n` — so the
+    /// products counter is comparable with the multiply path's
+    /// one-product-per-pair accounting.
+    #[test]
+    fn products_counter_counts_inner_products() {
+        let coord = Coordinator::launch(&[deployment(8, 4, 1, 1)], &[(8, 3)]).unwrap();
+        coord
+            .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![1, 1, 1])
+            .unwrap();
+        // 2 rows x 3 elems: exactly 2 inner products, 1 batch.
+        assert_eq!(coord.metrics().products.load(Ordering::Relaxed), 2);
+        assert_eq!(coord.metrics().batches.load(Ordering::Relaxed), 1);
+        for i in 0..4u64 {
+            coord.multiply(8, i + 1, 2).unwrap();
+        }
+        // 4 multiply pairs add exactly 4 products.
+        assert_eq!(coord.metrics().products.load(Ordering::Relaxed), 6);
+        coord.shutdown();
+    }
+
+    /// The dead latency plumbing is alive: every multiply's batcher+queue
+    /// wait lands in the queue-latency counters.
+    #[test]
+    fn queue_wait_is_recorded() {
+        let coord = Coordinator::launch(&[deployment(8, 64, 2, 2)], &[]).unwrap();
+        for i in 0..5u64 {
+            coord.multiply(8, i + 1, 3).unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.queued_products.load(Ordering::Relaxed), 5);
+        // Every request waited at least the 2ms deadline (it was alone in
+        // its batch), so the recorded average cannot be zero.
+        assert!(m.avg_queue_wait() > Duration::ZERO);
+        // Per-shard occupancy is tracked for this width.
+        let shard_products: u64 =
+            m.shard_stats().iter().map(|((w, _), s)| if *w == 8 { s.products } else { 0 }).sum();
+        assert_eq!(shard_products, 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_deployments_rejected() {
+        assert!(Coordinator::launch(&[deployment(8, 4, 1, 0)], &[]).is_err(), "0 shards");
+        assert!(
+            Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[]).is_err(),
+            "duplicate width"
+        );
     }
 }

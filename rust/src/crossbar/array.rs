@@ -118,6 +118,41 @@ impl Crossbar {
         }
     }
 
+    /// Bulk-stage one N-bit little-endian value per row: `values[r]` is
+    /// written into columns `start..start+n` of row `r`, for all rows
+    /// `0..values.len()` at once.
+    ///
+    /// This is the word-transposed serving-path staging primitive: instead
+    /// of `values.len() * n` single-bit read-modify-write operations (the
+    /// [`Self::write_bits`] path), each 64-row chunk is transposed in
+    /// registers and lands as **one whole-word store per column** — `n`
+    /// word ops per 64 rows. Rows beyond `values.len()` keep their
+    /// previous contents (a shard restages only the occupied rows of a
+    /// batch).
+    pub fn write_rows_transposed(&mut self, start: Col, n: u32, values: &[u64]) {
+        assert!(n <= 64);
+        assert!(
+            (start as usize) + (n as usize) <= self.cols,
+            "columns {start}..{} out of bounds ({} columns)",
+            start + n,
+            self.cols
+        );
+        assert!(values.len() <= self.rows, "{} values exceed {} rows", values.len(), self.rows);
+        let wpc = self.words_per_col;
+        for (w, chunk) in values.chunks(WORD_BITS).enumerate() {
+            let full = chunk.len() == WORD_BITS;
+            let keep_mask = if full { 0 } else { !((1u64 << chunk.len()) - 1) };
+            for i in 0..n {
+                let mut word = 0u64;
+                for (r, &v) in chunk.iter().enumerate() {
+                    word |= (v >> i & 1) << r;
+                }
+                let idx = (start + i) as usize * wpc + w;
+                self.data[idx] = (self.data[idx] & keep_mask) | word;
+            }
+        }
+    }
+
     /// Read an N-bit little-endian unsigned value from consecutive columns.
     pub fn read_bits(&self, row: usize, start: Col, n: u32) -> u64 {
         assert!(n <= 64);
@@ -257,5 +292,45 @@ mod tests {
     fn row_bounds_checked() {
         let xb = Crossbar::new(4, 4);
         let _ = xb.get(4, 0);
+    }
+
+    /// The transposed bulk write must agree bit-for-bit with the per-bit
+    /// path at every word boundary (1 / 63 / 64 / 65 / 130 rows).
+    #[test]
+    fn transposed_write_matches_per_bit_path() {
+        let mut rng = crate::util::SplitMix64::new(0x7777);
+        for rows in [1usize, 63, 64, 65, 130] {
+            let n = 16u32;
+            let values: Vec<u64> = (0..rows).map(|_| rng.bits(n)).collect();
+            let mut a = Crossbar::new(rows, 20);
+            let mut b = Crossbar::new(rows, 20);
+            for (r, &v) in values.iter().enumerate() {
+                a.write_bits(r, 2, n, v);
+            }
+            b.write_rows_transposed(2, n, &values);
+            for r in 0..rows {
+                assert_eq!(a.read_bits(r, 2, n), b.read_bits(r, 2, n), "rows={rows} r={r}");
+            }
+            for c in 0..20u32 {
+                assert_eq!(a.col(c), b.col(c), "rows={rows} col={c}");
+            }
+        }
+    }
+
+    /// A partial restage (fewer values than rows) must leave the
+    /// untouched rows' bits intact.
+    #[test]
+    fn transposed_write_preserves_unstaged_rows() {
+        let mut xb = Crossbar::new(100, 8);
+        let first: Vec<u64> = (0..100).map(|r| (r as u64) & 0xF).collect();
+        xb.write_rows_transposed(0, 4, &first);
+        // Restage only 10 rows.
+        xb.write_rows_transposed(0, 4, &vec![0xAu64; 10]);
+        for r in 0..10 {
+            assert_eq!(xb.read_bits(r, 0, 4), 0xA, "restaged row {r}");
+        }
+        for r in 10..100 {
+            assert_eq!(xb.read_bits(r, 0, 4), (r as u64) & 0xF, "stale row {r}");
+        }
     }
 }

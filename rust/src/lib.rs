@@ -40,27 +40,66 @@ pub mod util;
 pub use sim::Simulator;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Implemented by hand (no `thiserror`): the offline build environment
+/// resolves no external crates, so the dependency set must stay empty.
+#[derive(Debug)]
 pub enum Error {
     /// A micro-op violated the stateful-logic legality rules
     /// (overlapping partition spans, uninitialized output, illegal gate...).
-    #[error("illegal operation at cycle {cycle}: {reason}")]
-    IllegalOp { cycle: usize, reason: String },
+    IllegalOp {
+        /// Cycle index of the offending micro-op.
+        cycle: usize,
+        /// Human-readable description of the violation.
+        reason: String,
+    },
     /// A program referenced a column outside the allocated crossbar.
-    #[error("column {col} out of bounds (crossbar has {cols} columns)")]
-    ColumnOutOfBounds { col: u32, cols: u32 },
+    ColumnOutOfBounds {
+        /// The out-of-range column.
+        col: u32,
+        /// Number of columns the crossbar actually has.
+        cols: u32,
+    },
     /// An algorithm was instantiated with unsupported parameters.
-    #[error("bad parameter: {0}")]
     BadParameter(String),
-    /// PJRT runtime failure.
-    #[error("runtime error: {0}")]
+    /// Runtime (golden-model executor) failure.
     Runtime(String),
     /// Golden-model mismatch during verification.
-    #[error("verification mismatch: {0}")]
     VerificationFailed(String),
     /// I/O error (artifact files, reports).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::IllegalOp { cycle, reason } => {
+                write!(f, "illegal operation at cycle {cycle}: {reason}")
+            }
+            Error::ColumnOutOfBounds { col, cols } => {
+                write!(f, "column {col} out of bounds (crossbar has {cols} columns)")
+            }
+            Error::BadParameter(msg) => write!(f, "bad parameter: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::VerificationFailed(msg) => write!(f, "verification mismatch: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

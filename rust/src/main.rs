@@ -5,7 +5,7 @@
 //! multpim matvec   --n 32 --elems 8 --rows 16 [--seed 1]
 //! multpim report   [table1|table2|table3|fig3|fa|headline|all]
 //! multpim verify   [--rows 64]        # triple golden agreement via PJRT
-//! multpim serve    [--requests 4096]  # batching demo with metrics
+//! multpim serve    [--requests 4096] [--shards 4]  # shard-pool demo with metrics
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
 //! ```
 
@@ -137,12 +137,14 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("serve") => {
             let requests = opt_u64(args, "--requests", 4096);
+            let shards = opt_u64(args, "--shards", 4) as usize;
             let coord = Coordinator::launch(
                 &[MultiplyDeployment {
                     n_bits: 32,
                     rows: 256,
                     max_wait: Duration::from_millis(2),
                     config: EngineConfig::MultPim,
+                    shards,
                 }],
                 &[(32, 8)],
             )?;

@@ -1,15 +1,23 @@
-//! The PJRT runtime: loads the AOT-compiled JAX/Pallas golden models.
+//! The golden-model runtime (native fallback for the PJRT/XLA client).
 //!
-//! Python runs once at build time (`make artifacts`); afterwards the Rust
-//! binary is self-contained: this module loads the HLO-text artifacts from
-//! `artifacts/`, compiles them on the PJRT CPU client, and executes them
-//! on the verification path. Three golden models exist:
+//! The verification path runs every program twice — once on the native
+//! cycle-accurate simulator, once through a golden model speaking the
+//! shared wire format of [`trace`] (pinned against
+//! `python/compile/kernels/opcodes.py`) — and requires bit-exact
+//! agreement. Three golden models exist:
 //!
 //! * **gate-trace** — the crossbar *hardware* golden model: the same
-//!   stateful-logic semantics as the native simulator, executed through
-//!   XLA. [`golden::verify_program`] checks bit-exact agreement.
+//!   stateful-logic semantics, executed as a serial flattened trace over
+//!   u32-packed state (an independent code path from both the cycle-tree
+//!   interpreter and the compiled word-offset path).
+//!   [`golden::verify_program`] checks bit-exact agreement.
 //! * **matvec** — the *arithmetic* golden model for the §VI engine.
 //! * **mul** — elementwise exact products for verifying multiplier batches.
+//!
+//! The offline dependency set cannot ship the `xla` crate, so the models
+//! are interpreted natively (see `pjrt.rs`'s module docs). AOT-compiled
+//! HLO artifacts under `artifacts/` (from `make artifacts`) are still
+//! discovered and take priority when present.
 
 mod pjrt;
 pub mod trace;

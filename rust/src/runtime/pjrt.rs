@@ -1,62 +1,87 @@
-//! PJRT CPU client wrapper and artifact registry.
+//! Golden-model runtime and artifact registry.
+//!
+//! The original design loads AOT-compiled HLO artifacts (built once from
+//! `python/compile`) onto a PJRT CPU client through the `xla` crate. The
+//! offline build environment cannot resolve that dependency closure, so
+//! this module ships a **native fallback executor**: the same wire formats
+//! (the `int32[T, 6]` gate trace and `uint32[C, W]` packed state of
+//! `runtime::trace`, pinned against `python/compile/kernels/opcodes.py`)
+//! are interpreted by an independent pure-Rust implementation.
+//!
+//! The verification value is preserved: the fallback executes the *serial
+//! flattened trace* over u32-packed words — a different code path from
+//! both the cycle-tree interpreter ([`crate::sim::Simulator`]) and the
+//! word-offset compiled path ([`crate::sim::CompiledProgram`]) — so
+//! bit-exact agreement still cross-checks the simulator's semantics.
+//! When real `.hlo.txt` artifacts are present under `artifacts/` they are
+//! still discovered (shape metadata comes from the file names), and a
+//! future `xla`-enabled build can swap the executors back without touching
+//! any caller: the public API below is unchanged.
 
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
-    }
-}
+/// Scheme prefix marking the always-available built-in native models
+/// (used when no compiled artifacts exist on disk).
+const BUILTIN_PREFIX: &str = "builtin:";
 
-/// A live PJRT CPU client with compiled golden models.
+/// The golden-model runtime (native fallback for the PJRT CPU client).
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+    platform: &'static str,
 }
 
 impl PjrtRuntime {
-    /// Create the CPU client.
+    /// Create the runtime. Never fails in the native fallback; the
+    /// signature keeps parity with the PJRT-client version.
     pub fn new() -> Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()? })
+        Ok(Self { platform: "native-fallback-cpu" })
     }
 
     /// Platform string (for logs/metrics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.to_string()
     }
 
-    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
+    /// For file-backed artifacts, check the artifact exists; built-in
+    /// models need no file.
+    fn check_artifact(path: &Path) -> Result<()> {
+        if path.to_str().is_some_and(|s| s.starts_with(BUILTIN_PREFIX)) {
+            return Ok(());
+        }
+        if !path.is_file() {
+            return Err(Error::Runtime(format!("artifact {} not readable", path.display())));
+        }
+        Ok(())
     }
 
     /// Load a gate-trace golden model artifact.
-    pub fn load_gate_trace(&self, path: &Path, c: usize, w: usize, t: usize) -> Result<GateTraceModel> {
-        Ok(GateTraceModel { exe: self.compile(path)?, c, w, t })
+    pub fn load_gate_trace(
+        &self,
+        path: &Path,
+        c: usize,
+        w: usize,
+        t: usize,
+    ) -> Result<GateTraceModel> {
+        Self::check_artifact(path)?;
+        Ok(GateTraceModel { c, w, t })
     }
 
     /// Load a fixed-point matvec golden model artifact.
     pub fn load_matvec(&self, path: &Path, m: usize, n: usize, bits: u32) -> Result<MatVecModel> {
-        Ok(MatVecModel { exe: self.compile(path)?, m, n, bits })
+        Self::check_artifact(path)?;
+        Ok(MatVecModel { m, n, bits })
     }
 
     /// Load an elementwise-product golden model artifact.
     pub fn load_mul(&self, path: &Path, m: usize) -> Result<MulModel> {
-        Ok(MulModel { exe: self.compile(path)?, m })
+        Self::check_artifact(path)?;
+        Ok(MulModel { m })
     }
 }
 
-fn run_tuple1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
-    let result = exe.execute::<xla::Literal>(args)?;
-    let lit = result[0][0].to_literal_sync()?;
-    Ok(lit.to_tuple1()?)
-}
-
-/// Compiled crossbar hardware golden model (`uint32[C, W]` state,
-/// `int32[T, 6]` trace).
+/// Gate-trace hardware golden model (`uint32[C, W]` state, `int32[T, 6]`
+/// trace) — the native executor of the shared wire format.
 pub struct GateTraceModel {
-    exe: xla::PjRtLoadedExecutable,
     /// State columns.
     pub c: usize,
     /// uint32 words per column (32 crossbar rows each).
@@ -67,8 +92,11 @@ pub struct GateTraceModel {
 
 impl GateTraceModel {
     /// Execute a (padded) trace over a packed state; returns the final
-    /// packed state.
+    /// packed state. Semantics follow `python/compile/kernels/ref.py`:
+    /// serial op application, `no_init` rows AND their result onto the
+    /// previous cell value, INIT0/INIT1 fill the whole column word range.
     pub fn run(&self, state: &[u32], trace: &[[i32; 6]]) -> Result<Vec<u32>> {
+        use super::trace::opcode;
         if state.len() != self.c * self.w {
             return Err(Error::BadParameter(format!(
                 "state len {} != {}x{}",
@@ -84,18 +112,75 @@ impl GateTraceModel {
                 self.t
             )));
         }
-        let flat: Vec<i32> = trace.iter().flatten().copied().collect();
-        let state_lit =
-            xla::Literal::vec1(state).reshape(&[self.c as i64, self.w as i64])?;
-        let ops_lit = xla::Literal::vec1(&flat).reshape(&[self.t as i64, 6])?;
-        let out = run_tuple1(&self.exe, &[state_lit, ops_lit])?;
-        Ok(out.to_vec::<u32>()?)
+        let w = self.w;
+        let mut out = state.to_vec();
+        let col = |c: i32| -> Result<usize> {
+            let c = c as usize;
+            if c >= self.c {
+                return Err(Error::BadParameter(format!(
+                    "trace column {c} outside state ({} columns)",
+                    self.c
+                )));
+            }
+            Ok(c * w)
+        };
+        for row in trace {
+            let [code, in1, in2, in3, dst, no_init] = *row;
+            match code {
+                opcode::NOP => {}
+                opcode::INIT0 | opcode::INIT1 => {
+                    let fill = if code == opcode::INIT1 { u32::MAX } else { 0 };
+                    let o = col(dst)?;
+                    for word in &mut out[o..o + w] {
+                        *word = fill;
+                    }
+                }
+                opcode::NOT | opcode::NOR2 | opcode::NOR3 | opcode::OR2 | opcode::NAND2
+                | opcode::MIN3 => {
+                    let a = col(in1)?;
+                    // Unused operands are encoded as 0 in the wire format;
+                    // they must never be dereferenced (column 0 is real
+                    // data), so resolve only the arity the opcode needs.
+                    let b = if matches!(
+                        code,
+                        opcode::NOR2 | opcode::NOR3 | opcode::OR2 | opcode::NAND2 | opcode::MIN3
+                    ) {
+                        col(in2)?
+                    } else {
+                        0
+                    };
+                    let c3 = if matches!(code, opcode::NOR3 | opcode::MIN3) {
+                        col(in3)?
+                    } else {
+                        0
+                    };
+                    let o = col(dst)?;
+                    for i in 0..w {
+                        let av = out[a + i];
+                        let bv = out[b + i];
+                        let cv = out[c3 + i];
+                        let r = match code {
+                            opcode::NOT => !av,
+                            opcode::NOR2 => !(av | bv),
+                            opcode::NOR3 => !(av | bv | cv),
+                            opcode::OR2 => av | bv,
+                            opcode::NAND2 => !(av & bv),
+                            _ => !((av & bv) | (av & cv) | (bv & cv)),
+                        };
+                        out[o + i] = if no_init != 0 { out[o + i] & r } else { r };
+                    }
+                }
+                other => {
+                    return Err(Error::BadParameter(format!("unknown trace opcode {other}")));
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
-/// Compiled fixed-point matvec golden model.
+/// Fixed-point matvec golden model (`A x` modulo `2^(2N)`).
 pub struct MatVecModel {
-    exe: xla::PjRtLoadedExecutable,
     /// Rows per execution.
     pub m: usize,
     /// Elements per row.
@@ -116,16 +201,14 @@ impl MatVecModel {
                 self.n
             )));
         }
-        let a_lit = xla::Literal::vec1(a).reshape(&[self.m as i64, self.n as i64])?;
-        let x_lit = xla::Literal::vec1(x);
-        let out = run_tuple1(&self.exe, &[a_lit, x_lit])?;
-        Ok(out.to_vec::<u64>()?)
+        Ok(a.chunks(self.n)
+            .map(|row| crate::fixedpoint::inner_product_mod(self.bits, row, x))
+            .collect())
     }
 }
 
-/// Compiled elementwise exact-product golden model.
+/// Elementwise exact-product golden model.
 pub struct MulModel {
-    exe: xla::PjRtLoadedExecutable,
     /// Pairs per execution.
     pub m: usize,
 }
@@ -141,10 +224,7 @@ impl MulModel {
                 self.m
             )));
         }
-        let a_lit = xla::Literal::vec1(a);
-        let b_lit = xla::Literal::vec1(b);
-        let out = run_tuple1(&self.exe, &[a_lit, b_lit])?;
-        Ok(out.to_vec::<u64>()?)
+        Ok(a.iter().zip(b).map(|(&x, &y)| x.wrapping_mul(y)).collect())
     }
 }
 
@@ -190,13 +270,35 @@ impl ArtifactSet {
         Ok(set)
     }
 
+    /// The built-in native models, always available: generous gate-trace
+    /// geometry for every multiplier this crate compiles (N <= 32), the
+    /// Table III matvec configuration, and a large mul batch.
+    pub fn builtin() -> Self {
+        ArtifactSet {
+            gate_traces: vec![(
+                PathBuf::from("builtin:gate_trace_c2048_w8_t65536"),
+                2048,
+                8,
+                65536,
+            )],
+            matvecs: vec![(PathBuf::from("builtin:matvec_m32_n8_b32"), 32, 8, 32)],
+            muls: vec![(PathBuf::from("builtin:mul_m4096_b32"), 4096)],
+        }
+    }
+
     /// Discover from the conventional `artifacts/` directory next to the
-    /// crate root (or `$MULTPIM_ARTIFACTS`).
+    /// crate root (or `$MULTPIM_ARTIFACTS`). When no compiled artifacts
+    /// exist, fall back to the built-in native models so the verification
+    /// path always has a golden executor to run against.
     pub fn discover_default() -> Result<Self> {
         let dir = std::env::var("MULTPIM_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")));
-        Self::discover(&dir)
+        let set = Self::discover(&dir)?;
+        if set.gate_traces.is_empty() && set.matvecs.is_empty() && set.muls.is_empty() {
+            return Ok(Self::builtin());
+        }
+        Ok(set)
     }
 
     /// Smallest gate-trace artifact that fits `(cols, rows, ops)`.
@@ -228,6 +330,7 @@ fn parse_fields<const K: usize>(s: &str, keys: &[&str; K]) -> Option<[usize; K]>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::trace::opcode;
 
     #[test]
     fn field_parsing() {
@@ -240,5 +343,48 @@ mod tests {
     fn discovery_handles_missing_dir() {
         let set = ArtifactSet::discover(Path::new("/nonexistent-dir")).unwrap();
         assert!(set.gate_traces.is_empty());
+    }
+
+    #[test]
+    fn builtin_models_always_load() {
+        let set = ArtifactSet::builtin();
+        assert!(!set.gate_traces.is_empty());
+        let rt = PjrtRuntime::new().unwrap();
+        let (path, c, w, t) = set.gate_trace_for(100, 64, 1000).unwrap().clone();
+        let model = rt.load_gate_trace(&path, c, w, t).unwrap();
+        assert_eq!(model.c * model.w, c * w);
+        assert!(rt.load_mul(&set.muls[0].0, set.muls[0].1).is_ok());
+    }
+
+    #[test]
+    fn gate_trace_executor_semantics() {
+        // 4 columns, 1 word each; exercise INIT, NOT, MIN3 and no-init AND.
+        let rt = PjrtRuntime::new().unwrap();
+        let model = rt.load_gate_trace(Path::new("builtin:t"), 4, 1, 6).unwrap();
+        let state = vec![0b1010u32, 0, 0, 0];
+        let trace = vec![
+            [opcode::INIT1, 0, 0, 0, 1, 0],
+            [opcode::NOT, 0, 0, 0, 1, 0],            // col1 = !col0
+            [opcode::INIT1, 0, 0, 0, 2, 0],
+            [opcode::MIN3, 0, 1, 1, 2, 0],           // col2 = !maj(c0, c1, c1) = !c1
+            [opcode::INIT0, 0, 0, 0, 3, 0],
+            [opcode::NOT, 0, 0, 0, 3, 1],            // no-init onto 0 stays 0
+        ];
+        let out = model.run(&state, &trace).unwrap();
+        assert_eq!(out[0], 0b1010);
+        assert_eq!(out[1], !0b1010u32);
+        assert_eq!(out[2], 0b1010);
+        assert_eq!(out[3], 0);
+    }
+
+    #[test]
+    fn mul_and_matvec_models() {
+        let mul = MulModel { m: 3 };
+        assert_eq!(mul.run(&[2, 3, u64::MAX], &[5, 7, 2]).unwrap(), vec![10, 21, u64::MAX - 1]);
+        assert!(mul.run(&[1], &[1]).is_err());
+        let mv = MatVecModel { m: 2, n: 2, bits: 8 };
+        let out = mv.run(&[1, 2, 3, 4], &[10, 20]).unwrap();
+        assert_eq!(out, vec![50, 110]);
+        assert!(mv.run(&[1, 2, 3], &[10, 20]).is_err());
     }
 }

@@ -3,8 +3,13 @@
 //! `Simulator::run_unchecked` walks the `Cycle` structure and recomputes
 //! column word ranges per gate. For the serving hot loop (validated
 //! programs executed thousands of times) [`CompiledProgram`] flattens the
-//! schedule once into word-offset ops with a branch-light interpreter —
-//! see EXPERIMENTS.md §Perf for the measured gain (~1.5-1.9x at 1-4k rows).
+//! schedule once into word-offset ops with a branch-light interpreter.
+//! This is the default production path: every `Coordinator::launch`
+//! lowers its deployed programs here and the shard workers only execute
+//! the lowered form. See `EXPERIMENTS.md` §Perf (repository root) for the
+//! measured gain (~1.5-1.9x over the interpreted walk at 1-4k rows, and
+//! more end-to-end once transposed operand staging is counted), and
+//! `benches/sim_perf.rs` to regenerate the numbers.
 
 use super::Simulator;
 use crate::isa::{Cycle, Gate, OpStats, Program};

@@ -56,6 +56,21 @@ impl Simulator {
         self.xb.write_bits(row, layout.b_start, layout.b_bits, b);
     }
 
+    /// Bulk-stage operands for rows `0..a_vals.len()` through the
+    /// word-transposed path ([`Crossbar::write_rows_transposed`]): the
+    /// serving hot loop stages a whole batch in `a_bits + b_bits` word ops
+    /// per 64 rows instead of one read-modify-write per bit.
+    pub fn write_inputs_transposed(
+        &mut self,
+        layout: &RegionLayout,
+        a_vals: &[u64],
+        b_vals: &[u64],
+    ) {
+        assert_eq!(a_vals.len(), b_vals.len(), "operand batches must pair up");
+        self.xb.write_rows_transposed(layout.a_start, layout.a_bits, a_vals);
+        self.xb.write_rows_transposed(layout.b_start, layout.b_bits, b_vals);
+    }
+
     /// Read the result of a single-row instance.
     pub fn read_output(&self, row: usize, layout: &RegionLayout) -> u64 {
         self.xb.read_bits(row, layout.out_start, layout.out_bits)

@@ -1,8 +1,9 @@
 //! Small utilities shared across the crate.
 //!
-//! The offline build environment only ships the `xla` dependency closure, so
-//! we provide our own deterministic PRNG (used by tests, benches and workload
-//! generators) instead of pulling in `rand`.
+//! The offline build environment resolves no external crates, so we provide
+//! our own deterministic PRNG (used by tests, benches and workload
+//! generators) instead of pulling in `rand`, and a stopwatch instead of
+//! `criterion`.
 
 mod rng;
 mod timing;

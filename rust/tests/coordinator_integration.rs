@@ -8,19 +8,20 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-fn deployment(n_bits: u32, rows: usize, wait_ms: u64) -> MultiplyDeployment {
+fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> MultiplyDeployment {
     MultiplyDeployment {
         n_bits,
         rows,
         max_wait: Duration::from_millis(wait_ms),
         config: EngineConfig::MultPim,
+        shards,
     }
 }
 
 #[test]
 fn concurrent_clients_share_batches() {
     let coord = Arc::new(
-        Coordinator::launch(&[deployment(32, 64, 5)], &[]).unwrap(),
+        Coordinator::launch(&[deployment(32, 64, 5, 2)], &[]).unwrap(),
     );
     let mut handles = Vec::new();
     for t in 0..8u64 {
@@ -48,7 +49,7 @@ fn concurrent_clients_share_batches() {
 #[test]
 fn mixed_width_routing() {
     let coord =
-        Coordinator::launch(&[deployment(8, 16, 2), deployment(16, 16, 2)], &[(16, 4)])
+        Coordinator::launch(&[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)], &[(16, 4)])
             .unwrap();
     assert_eq!(coord.multiply(8, 200, 200).unwrap(), 40_000);
     assert_eq!(coord.multiply(16, 40_000, 2).unwrap(), 80_000);
@@ -62,7 +63,7 @@ fn mixed_width_routing() {
 
 #[test]
 fn submit_api_is_asynchronous() {
-    let coord = Coordinator::launch(&[deployment(8, 256, 20)], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(8, 256, 20, 2)], &[]).unwrap();
     // Fire 100 requests without awaiting; they should coalesce into one or
     // two deadline batches.
     let rxs: Vec<_> = (1..=100u64)
@@ -94,7 +95,7 @@ fn pipeline_model_consistency_with_engine() {
 
 #[test]
 fn metrics_cycle_accounting() {
-    let coord = Coordinator::launch(&[deployment(16, 4, 1)], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(16, 4, 1, 2)], &[]).unwrap();
     for i in 0..4u64 {
         coord.multiply(16, i + 1, 7).unwrap();
     }
@@ -103,4 +104,55 @@ fn metrics_cycle_accounting() {
     assert_eq!(cycles % 291, 0, "cycles={cycles}");
     assert!(cycles >= 291);
     coord.shutdown();
+}
+
+/// Shutdown with a still-pending partial batch: the batcher flushes it
+/// through the shard pool before the workers exit — no accepted request
+/// is ever dropped.
+#[test]
+fn shutdown_flushes_pending_batch() {
+    // 10s deadline + 1024-row capacity: nothing would flush on its own.
+    let coord = Coordinator::launch(&[deployment(16, 1024, 10_000, 2)], &[]).unwrap();
+    let rxs: Vec<_> = (0..37u64)
+        .map(|i| {
+            coord
+                .submit(Request::Multiply { n_bits: 16, a: i + 1, b: 3 })
+                .unwrap()
+        })
+        .collect();
+    coord.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().expect("reply survives shutdown").expect("request served") {
+            Response::Product(p) => assert_eq!(p, (i as u64 + 1) * 3),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+/// Under sustained concurrent load the shard pool stays consistent: the
+/// per-shard product counts add up exactly to the global counter and
+/// every request's queue wait is accounted.
+#[test]
+fn shard_pool_splits_work() {
+    let coord = Arc::new(Coordinator::launch(&[deployment(8, 8, 2, 4)], &[]).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xF0 + t);
+            for _ in 0..64 {
+                let (a, b) = (rng.bits(8), rng.bits(8));
+                assert_eq!(coord.multiply(8, a, b).unwrap(), a * b);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics();
+    let shard_products: u64 = m.shard_stats().iter().map(|(_, s)| s.products).sum();
+    assert_eq!(shard_products, 4 * 64, "shard counters add up to the total");
+    assert_eq!(m.products.load(Ordering::Relaxed), 4 * 64);
+    assert_eq!(m.queued_products.load(Ordering::Relaxed), 4 * 64);
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
 }

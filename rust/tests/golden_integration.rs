@@ -1,9 +1,10 @@
-//! End-to-end integration: native cycle-accurate simulator vs the
-//! AOT-compiled JAX/Pallas golden models through PJRT.
+//! End-to-end integration: native cycle-accurate simulator vs the golden
+//! models speaking the shared gate-trace wire format.
 //!
-//! Requires `make artifacts` to have produced `artifacts/` (these tests
-//! fail with a clear message otherwise — artifact builds are part of
-//! `make test`).
+//! When `make artifacts` has produced `artifacts/`, the compiled
+//! JAX/Pallas models are used; otherwise the always-available built-in
+//! native executors take over (see `runtime/pjrt.rs`), so these tests run
+//! in the offline environment too.
 
 use multpim::algorithms::matvec::MultPimMatVec;
 use multpim::algorithms::multpim::MultPim;
@@ -16,9 +17,9 @@ fn runtime_and_artifacts() -> (PjrtRuntime, ArtifactSet) {
     let artifacts = ArtifactSet::discover_default().expect("artifact discovery");
     assert!(
         !artifacts.gate_traces.is_empty(),
-        "no artifacts found — run `make artifacts` first"
+        "no artifacts found (even the built-in fallback is missing)"
     );
-    (PjrtRuntime::new().expect("PJRT CPU client"), artifacts)
+    (PjrtRuntime::new().expect("golden runtime"), artifacts)
 }
 
 /// The crown jewel: the Rust simulator and the compiled Pallas gate-trace
