@@ -1,16 +1,20 @@
 //! L3 performance bench: simulator throughput on the hot path.
 //!
 //! Measures gate-applications/second for row-parallel MultPIM batches —
-//! interpreted vs compiled — plus the **end-to-end serving path**: the
+//! interpreted vs compiled — plus the **end-to-end serving paths**: the
 //! seed's per-batch flow (fresh simulator + per-bit staging + interpreted
 //! run) against the shard flow (resident crossbar + word-transposed
-//! restage + `CompiledProgram`). These are the numbers tracked by
-//! EXPERIMENTS.md §Perf; the acceptance bar for the shard path is
-//! >= 1.5x products/sec over the interpreted path at N=32, 4096 rows.
+//! restage + `CompiledProgram`), and the §VI matvec direct flow against
+//! its compiled shard flow (`CompiledPipeline` + transposed/broadcast
+//! restage). These are the numbers tracked by EXPERIMENTS.md §Perf and
+//! §Matvec-Serving; the acceptance bars are >= 1.5x products/sec for the
+//! multiply shard path at N=32, 4096 rows and >= 1.5x products/sec for
+//! served matvec at N=16, 64x64.
 
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::{EngineConfig, MultiplyEngine};
+use multpim::coordinator::{EngineConfig, MatVecEngine, MultiplyEngine};
+use multpim::fixedpoint::inner_product_mod;
 use multpim::runtime::trace::program_to_trace;
 use multpim::sim::Simulator;
 use multpim::util::{SplitMix64, Stopwatch};
@@ -120,5 +124,61 @@ fn main() {
     assert!(
         headline >= 1.5,
         "serving speedup regressed below the 1.5x acceptance bar: {headline:.2}x"
+    );
+
+    // ----------------------------------------------------------------
+    // §VI matvec: direct engine flow vs served shard flow, per request.
+    // ----------------------------------------------------------------
+    println!("\n=== matvec serving path: direct engine flow vs compiled shard flow ===");
+    let mut matvec_headline = None;
+    for (n, elems, m) in [(16u32, 16u32, 64usize), (16, 64, 64)] {
+        let engine = MatVecEngine::new(n, elems, m).unwrap();
+        let mut rng = SplitMix64::new(0x6D76 + elems as u64);
+        let rows: Vec<Vec<u64>> =
+            (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
+        let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
+        let iters = 5;
+
+        // Direct flow (the seed's matvec serving path): fresh simulator
+        // per request, per-bit operand staging, first-program validation,
+        // interpreted walk of the whole chain.
+        let mut sw_direct = Stopwatch::new();
+        let out_direct =
+            sw_direct.run(iters, || engine.compute(&rows, &x).unwrap()).unwrap();
+
+        // Served shard flow: resident crossbar, word-transposed matrix
+        // restage + whole-word broadcast vector restage, pre-lowered
+        // `CompiledPipeline`, zero per-request validation or lowering.
+        let mut shard = engine.shard();
+        let mut sw_served = Stopwatch::new();
+        let out_served = sw_served.run(iters, || shard.execute(&rows, &x)).unwrap();
+
+        assert_eq!(out_direct, out_served, "paths must agree");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out_served[r], inner_product_mod(n, row, &x), "row {r}");
+        }
+
+        let (s_direct, s_served) =
+            (sw_direct.median().as_secs_f64(), sw_served.median().as_secs_f64());
+        let speedup = s_direct / s_served;
+        println!(
+            "N={n:<3} {m}x{elems:<4} direct {:>9.3?} ({:>9.0} products/s)  served {:>9.3?} ({:>9.0} products/s)  {:.2}x",
+            sw_direct.median(),
+            m as f64 / s_direct,
+            sw_served.median(),
+            m as f64 / s_served,
+            speedup,
+        );
+        if elems == 64 {
+            matvec_headline = Some(speedup);
+        }
+    }
+    let mv_headline = matvec_headline.expect("64x64 config measured");
+    println!(
+        "\nserved matvec speedup at N=16, 64x64: {mv_headline:.2}x (acceptance bar: >= 1.5x)"
+    );
+    assert!(
+        mv_headline >= 1.5,
+        "served matvec speedup regressed below the 1.5x acceptance bar: {mv_headline:.2}x"
     );
 }

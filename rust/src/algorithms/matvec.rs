@@ -438,6 +438,60 @@ impl MultPimMatVec {
         self.programs.iter().map(|p| p.cycle_count() as u64).sum()
     }
 
+    /// Operand width N.
+    pub fn n_bits(&self) -> u32 {
+        self.n_bits
+    }
+
+    /// Inner dimension n.
+    pub fn n_elems(&self) -> u32 {
+        self.n_elems
+    }
+
+    /// The program chain: one fused multiply-accumulate program per vector
+    /// element, then the ripple drain. Executed back-to-back over one
+    /// crossbar; lower with
+    /// [`CompiledPipeline`](crate::sim::CompiledPipeline) for the serving
+    /// hot path.
+    pub fn programs(&self) -> &[Program] {
+        &self.programs
+    }
+
+    /// Columns holding externally staged operand bits before the chain
+    /// runs (every matrix element and every duplicated vector element).
+    pub fn input_cols(&self) -> &[Col] {
+        &self.input_cols
+    }
+
+    /// First column of matrix element `t` (occupies `a_col(t)..+N`).
+    pub fn a_col(&self, t: usize) -> Col {
+        self.a_cols[t]
+    }
+
+    /// First column of duplicated vector element `t`.
+    pub fn x_col(&self, t: usize) -> Col {
+        self.x_cols[t]
+    }
+
+    /// Statically validate the whole program chain once (state threads
+    /// across program boundaries, exactly as execution does). Data
+    /// independent: a deployment validates here at launch and never again.
+    pub fn validate(&self) -> Result<crate::sim::CheckReport> {
+        crate::sim::validate_chain(&self.programs, &self.input_cols)
+    }
+
+    /// Read row `r`'s 2N-bit inner product (modulo `2^(2N)`, the
+    /// carry-save wrap of [`crate::fixedpoint::wrap`]) after the chain ran.
+    pub fn read_row(&self, sim: &Simulator, row: usize) -> u64 {
+        let mut v = 0u64;
+        for (i, &col) in self.out_map.iter().enumerate() {
+            if sim.read_bits(row, col, 1) == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
     /// Crossbar width (minimum columns — Table III's area metric).
     pub fn width(&self) -> u32 {
         self.num_cols
@@ -488,17 +542,7 @@ impl MultPimMatVec {
                 sim.run_unchecked(p);
             }
         }
-        Ok((0..rows.len())
-            .map(|r| {
-                let mut v = 0u64;
-                for (i, &col) in self.out_map.iter().enumerate() {
-                    if sim.read_bits(r, col, 1) == 1 {
-                        v |= 1 << i;
-                    }
-                }
-                v
-            })
-            .collect())
+        Ok((0..rows.len()).map(|r| self.read_row(&sim, r)).collect())
     }
 }
 
@@ -631,6 +675,24 @@ mod tests {
         let quoted = costmodel::multpim_matvec_width(8, 32);
         let rel = (engine.width() as f64 - quoted as f64).abs() / quoted as f64;
         assert!(rel < 0.05, "width {} vs quoted {quoted}", engine.width());
+    }
+
+    /// The whole program chain must pass static legality validation as
+    /// one unit (state threading across program boundaries) — this is the
+    /// once-at-launch check the serving layer relies on.
+    #[test]
+    fn fused_chain_validates_once() {
+        for (n_bits, n_elems) in [(2u32, 1u32), (4, 3), (8, 4), (16, 2)] {
+            let engine = MultPimMatVec::new(n_bits, n_elems);
+            let report = engine.validate().unwrap_or_else(|e| {
+                panic!("N={n_bits} n={n_elems} chain rejected: {e}")
+            });
+            assert_eq!(
+                report.cycles as u64,
+                engine.latency_cycles(),
+                "N={n_bits} n={n_elems}: every cycle validated"
+            );
+        }
     }
 
     #[test]

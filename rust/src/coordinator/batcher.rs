@@ -7,6 +7,7 @@
 //! or `capacity` rows are occupied, which is exactly why PIM batching wins.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -101,6 +102,47 @@ impl<T> RowBatcher<T> {
     fn take(&mut self) -> Vec<Pending<T>> {
         self.oldest = None;
         std::mem::take(&mut self.queue)
+    }
+}
+
+/// Completion tracker for a scattered matvec request: the request's matrix
+/// rows are tiled row-wise across the shape's shard pool, each shard
+/// completes its tile's slice of the result vector, and the **last** tile
+/// completion — whichever shard it lands on — yields the fully assembled
+/// result exactly once. The server sends the response from that completion
+/// path, so a multi-tile matvec finishes as soon as its slowest tile does,
+/// with no dedicated gather thread.
+#[derive(Debug)]
+pub struct MatVecPending<T> {
+    out: Mutex<Vec<T>>,
+    remaining: AtomicUsize,
+}
+
+impl<T: Clone + Default> MatVecPending<T> {
+    /// A pending result of `len` entries awaiting `tiles` tile completions.
+    pub fn new(len: usize, tiles: usize) -> Self {
+        assert!(tiles > 0, "a matvec needs at least one tile");
+        Self { out: Mutex::new(vec![T::default(); len]), remaining: AtomicUsize::new(tiles) }
+    }
+
+    /// Tiles still outstanding.
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::Acquire)
+    }
+
+    /// Record one tile's slice (`start..start + slice.len()` of the result
+    /// vector). Returns the assembled full result iff this was the last
+    /// outstanding tile — exactly one caller ever receives `Some`.
+    pub fn complete(&self, start: usize, slice: &[T]) -> Option<Vec<T>> {
+        {
+            let mut out = self.out.lock().unwrap();
+            out[start..start + slice.len()].clone_from_slice(slice);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            Some(std::mem::take(&mut *self.out.lock().unwrap()))
+        } else {
+            None
+        }
     }
 }
 
@@ -252,6 +294,39 @@ mod tests {
             consumers.into_iter().flat_map(|h| h.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..100).collect::<Vec<_>>(), "every item consumed exactly once");
+    }
+
+    #[test]
+    fn pending_single_tile_completes_immediately() {
+        let p: MatVecPending<u64> = MatVecPending::new(3, 1);
+        assert_eq!(p.remaining(), 1);
+        let out = p.complete(0, &[7, 8, 9]).expect("last tile assembles");
+        assert_eq!(out, vec![7, 8, 9]);
+        assert_eq!(p.remaining(), 0);
+    }
+
+    /// Concurrent tile completions: slices land at their offsets and
+    /// exactly one completer receives the assembled result.
+    #[test]
+    fn pending_assembles_scattered_tiles_once() {
+        let tiles = 8usize;
+        let per = 5usize;
+        let p: Arc<MatVecPending<u64>> = Arc::new(MatVecPending::new(tiles * per, tiles));
+        let handles: Vec<_> = (0..tiles)
+            .map(|t| {
+                let p = Arc::clone(&p);
+                std::thread::spawn(move || {
+                    let slice: Vec<u64> =
+                        (0..per).map(|i| (t * per + i) as u64 * 10).collect();
+                    p.complete(t * per, &slice)
+                })
+            })
+            .collect();
+        let finals: Vec<Vec<u64>> =
+            handles.into_iter().filter_map(|h| h.join().unwrap()).collect();
+        assert_eq!(finals.len(), 1, "exactly one completion wins");
+        let expected: Vec<u64> = (0..(tiles * per) as u64).map(|i| i * 10).collect();
+        assert_eq!(finals[0], expected);
     }
 
     #[test]

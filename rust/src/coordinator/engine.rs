@@ -15,9 +15,9 @@ use crate::algorithms::matvec::MultPimMatVec;
 use crate::algorithms::multpim::MultPim;
 use crate::algorithms::multpim_area::MultPimArea;
 use crate::algorithms::Multiplier;
-use crate::crossbar::RegionLayout;
+use crate::crossbar::{Crossbar, RegionLayout};
 use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
-use crate::sim::{validate, CompiledProgram, Simulator};
+use crate::sim::{validate, CompiledPipeline, CompiledProgram, Simulator};
 use crate::{Error, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -53,7 +53,7 @@ impl MultiplyEngine {
         };
         validate(multiplier.program(), &multiplier.input_cols())?;
         let cols = multiplier.program().partitions.num_cols() as usize;
-        let words = Simulator::new(rows, cols).crossbar().words_per_col();
+        let words = Crossbar::words_for_rows(rows);
         let compiled = Arc::new(CompiledProgram::lower(multiplier.program(), words));
         Ok(Self { multiplier, rows, cols, compiled })
     }
@@ -167,18 +167,45 @@ impl ShardExecutor {
     }
 }
 
-/// A matvec engine wrapping the §VI fused accumulator for a fixed
-/// `(n_bits, n_elems)` shape.
+/// A matvec engine for one §VI `(n_bits, n_elems)` shape: the program
+/// chain is chain-validated **once** and lowered **once** (to a
+/// [`CompiledPipeline`] for the deployment's `shard_rows` crossbar
+/// geometry) at construction — i.e. at `Coordinator::launch`. Shards
+/// materialized via [`MatVecEngine::shard`] share the immutable chain and
+/// each own a resident crossbar that large matrices are tiled across
+/// row-wise.
 pub struct MatVecEngine {
-    engine: MultPimMatVec,
+    engine: Arc<MultPimMatVec>,
+    compiled: Arc<CompiledPipeline>,
     n_bits: u32,
     n_elems: u32,
+    shard_rows: usize,
 }
 
 impl MatVecEngine {
-    /// Build the fused engine.
-    pub fn new(n_bits: u32, n_elems: u32) -> Self {
-        Self { engine: MultPimMatVec::new(n_bits, n_elems), n_bits, n_elems }
+    /// Build, chain-validate, and lower the fused engine for shards of
+    /// `shard_rows` crossbar rows (the row-tiling height).
+    pub fn new(n_bits: u32, n_elems: u32, shard_rows: usize) -> Result<Self> {
+        if !(2..=32).contains(&n_bits) {
+            return Err(Error::BadParameter(format!(
+                "matvec engine needs N in 2..=32, got {n_bits}"
+            )));
+        }
+        if n_elems == 0 {
+            return Err(Error::BadParameter("matvec engine needs at least one element".into()));
+        }
+        if shard_rows == 0 {
+            return Err(Error::BadParameter(
+                "matvec engine needs at least one crossbar row per shard".into(),
+            ));
+        }
+        let engine = Arc::new(MultPimMatVec::new(n_bits, n_elems));
+        // Validate the whole chain exactly once (state threads across the
+        // per-element programs and the drain), then lower it exactly once.
+        engine.validate()?;
+        let words = Crossbar::words_for_rows(shard_rows);
+        let compiled = Arc::new(CompiledPipeline::lower(engine.programs(), words));
+        Ok(Self { engine, compiled, n_bits, n_elems, shard_rows })
     }
 
     /// Inner dimension.
@@ -191,12 +218,32 @@ impl MatVecEngine {
         self.n_bits
     }
 
-    /// Simulated cycles per matvec (all rows in parallel).
-    pub fn cycles(&self) -> u64 {
-        self.engine.latency_cycles()
+    /// Rows per shard (the row-tiling height).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
     }
 
-    /// Compute `A x` for `m` rows.
+    /// Simulated cycles per chain execution (all tile rows in parallel).
+    pub fn cycles(&self) -> u64 {
+        self.compiled.cycles()
+    }
+
+    /// Materialize one shard: a worker-resident crossbar executing the
+    /// pre-lowered chain. Cheap shared state plus one crossbar allocation
+    /// the shard reuses for its entire lifetime.
+    pub fn shard(&self) -> MatVecShardExecutor {
+        MatVecShardExecutor {
+            engine: Arc::clone(&self.engine),
+            compiled: Arc::clone(&self.compiled),
+            shard_rows: self.shard_rows,
+            sim: Simulator::new(self.shard_rows, self.engine.width() as usize),
+            stage: Vec::with_capacity(self.shard_rows),
+        }
+    }
+
+    /// Direct (unserved) path: fresh simulator, per-bit staging,
+    /// interpreted walk — the seed-flow reference the serving bench
+    /// compares the shard flow against.
     pub fn compute(&self, rows: &[Vec<u64>], x: &[u64]) -> Result<Vec<u64>> {
         self.engine.compute(rows, x)
     }
@@ -204,6 +251,63 @@ impl MatVecEngine {
     /// The wrapped algorithm engine.
     pub fn inner(&self) -> &MultPimMatVec {
         &self.engine
+    }
+}
+
+/// One shard of a matvec deployment: the hot-path executor owned by a
+/// single worker thread. Executes one row tile (up to `shard_rows` matrix
+/// rows) per call on a resident crossbar — word-transposed restage of the
+/// matrix elements, whole-word broadcast restage of the duplicated vector,
+/// one pre-lowered chain run, per-row 2N-bit readback. No validation and
+/// no lowering ever happen here.
+pub struct MatVecShardExecutor {
+    engine: Arc<MultPimMatVec>,
+    compiled: Arc<CompiledPipeline>,
+    shard_rows: usize,
+    sim: Simulator,
+    stage: Vec<u64>,
+}
+
+impl MatVecShardExecutor {
+    /// Tile capacity (crossbar rows).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Cycles one chain execution costs.
+    pub fn cycles(&self) -> u64 {
+        self.compiled.cycles()
+    }
+
+    /// Execute one tile: `rows` holds up to `shard_rows` matrix rows of
+    /// `n_elems` elements each. Returns the tile's inner products modulo
+    /// `2^(2N)` (the [`crate::fixedpoint::wrap`] carry-save semantics).
+    pub fn execute(&mut self, rows: &[Vec<u64>], x: &[u64]) -> Vec<u64> {
+        assert!(rows.len() <= self.shard_rows, "tile exceeds shard rows");
+        assert_eq!(
+            x.len(),
+            self.engine.n_elems() as usize,
+            "vector length differs from engine shape"
+        );
+        let n = self.engine.n_bits();
+        for (t, &xv) in x.iter().enumerate() {
+            self.stage.clear();
+            for row in rows {
+                debug_assert_eq!(row.len(), x.len(), "row length differs from engine shape");
+                self.stage.push(row[t]);
+            }
+            let xb = self.sim.crossbar_mut();
+            xb.write_rows_transposed(self.engine.a_col(t), n, &self.stage);
+            xb.write_rows_broadcast(self.engine.x_col(t), n, xv, rows.len());
+        }
+        self.compiled.execute(&mut self.sim);
+        (0..rows.len()).map(|r| self.engine.read_row(&self.sim, r)).collect()
+    }
+
+    /// The resident simulator (tests compare its state against the
+    /// interpreted reference path).
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
     }
 }
 
@@ -271,12 +375,48 @@ mod tests {
 
     #[test]
     fn matvec_engine() {
-        let engine = MatVecEngine::new(8, 4);
+        let engine = MatVecEngine::new(8, 4, 8).unwrap();
         let rows = vec![vec![1u64, 2, 3, 4], vec![255, 255, 255, 255]];
         let x = vec![10u64, 20, 30, 40];
         let out = engine.compute(&rows, &x).unwrap();
         assert_eq!(out[0], 10 + 40 + 90 + 160);
         assert_eq!(out[1], 255 * 100);
         assert!(engine.cycles() > 0);
+        // The served shard path agrees with the direct path.
+        let mut shard = engine.shard();
+        assert_eq!(shard.execute(&rows, &x), out);
+        assert_eq!(shard.cycles(), engine.cycles());
+        assert_eq!(shard.shard_rows(), 8);
+    }
+
+    /// Tile reuse: a matvec shard's resident crossbar serves many tiles of
+    /// varying occupancy, each exact despite stale earlier-tile state.
+    #[test]
+    fn matvec_shard_reuse_across_tiles() {
+        let engine = MatVecEngine::new(8, 3, 16).unwrap();
+        let mut shard = engine.shard();
+        let mut rng = SplitMix64::new(0x711E);
+        for occupancy in [16usize, 1, 7, 16, 2] {
+            let rows: Vec<Vec<u64>> = (0..occupancy)
+                .map(|_| (0..3).map(|_| rng.bits(8)).collect())
+                .collect();
+            let x: Vec<u64> = (0..3).map(|_| rng.bits(8)).collect();
+            let out = shard.execute(&rows, &x);
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    out[r],
+                    crate::fixedpoint::inner_product_mod(8, row, &x),
+                    "occupancy={occupancy} row={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_engine_rejects_bad_shapes() {
+        assert!(MatVecEngine::new(1, 4, 8).is_err(), "N too small");
+        assert!(MatVecEngine::new(33, 4, 8).is_err(), "N too large");
+        assert!(MatVecEngine::new(8, 0, 8).is_err(), "no elements");
+        assert!(MatVecEngine::new(8, 4, 0).is_err(), "no rows");
     }
 }

@@ -40,10 +40,25 @@ pub struct Metrics {
     pub queue_wait_ns: AtomicU64,
     /// Requests whose queue wait has been recorded.
     pub queued_products: AtomicU64,
+    /// MatVec requests admitted (each may scatter into several tiles).
+    pub matvec_requests: AtomicU64,
+    /// Matrix rows (inner products) admitted across matvec requests.
+    pub matvec_rows: AtomicU64,
+    /// Row tiles executed by matvec shards (one chain run each).
+    pub matvec_tiles: AtomicU64,
+    /// Total nanoseconds matvec *rows* spent waiting in tile queues
+    /// (row-weighted: a tile of `k` rows that waited `w` contributes
+    /// `k * w`; divide by [`Metrics::matvec_queued_rows`] for the mean).
+    pub matvec_queue_wait_ns: AtomicU64,
+    /// Rows whose queue wait has been recorded.
+    pub matvec_queued_rows: AtomicU64,
     /// When this metrics registry was created (occupancy baseline).
     started: Instant,
     /// Per-shard occupancy, keyed by `(width, shard index)`.
     shards: Mutex<BTreeMap<(u32, usize), ShardStats>>,
+    /// Per-matvec-shard occupancy, keyed by `(width, n_elems, shard index)`
+    /// (`products` counts inner products, i.e. matrix rows served).
+    matvec_shards: Mutex<BTreeMap<(u32, u32, usize), ShardStats>>,
 }
 
 impl Default for Metrics {
@@ -57,8 +72,14 @@ impl Default for Metrics {
             verifications: AtomicU64::new(0),
             queue_wait_ns: AtomicU64::new(0),
             queued_products: AtomicU64::new(0),
+            matvec_requests: AtomicU64::new(0),
+            matvec_rows: AtomicU64::new(0),
+            matvec_tiles: AtomicU64::new(0),
+            matvec_queue_wait_ns: AtomicU64::new(0),
+            matvec_queued_rows: AtomicU64::new(0),
             started: Instant::now(),
             shards: Mutex::new(BTreeMap::new()),
+            matvec_shards: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -92,6 +113,49 @@ impl Metrics {
         stats.batches += 1;
         stats.products += products;
         stats.busy_ns += wall.as_nanos() as u64;
+    }
+
+    /// Record one matvec tile executed by a specific shard of the
+    /// `shape = (width, n_elems)` deployment. `rows` is the tile's
+    /// matrix-row count (inner products); `queue_wait` the tile's time from admission
+    /// to execution start, charged to each of its rows. Folds into the
+    /// global batch/product counters so matvec and multiply throughput are
+    /// directly comparable.
+    pub fn record_matvec_tile(
+        &self,
+        shape: (u32, u32),
+        shard: usize,
+        rows: u64,
+        cycles: u64,
+        wall: Duration,
+        queue_wait: Duration,
+    ) {
+        self.record_batch(rows, cycles, wall);
+        self.matvec_tiles.fetch_add(1, Ordering::Relaxed);
+        self.matvec_queue_wait_ns
+            .fetch_add(queue_wait.as_nanos() as u64 * rows, Ordering::Relaxed);
+        self.matvec_queued_rows.fetch_add(rows, Ordering::Relaxed);
+        let mut shards = self.matvec_shards.lock().unwrap();
+        let stats = shards.entry((shape.0, shape.1, shard)).or_default();
+        stats.batches += 1;
+        stats.products += rows;
+        stats.busy_ns += wall.as_nanos() as u64;
+    }
+
+    /// Mean per-row matvec queue wait so far.
+    pub fn avg_matvec_queue_wait(&self) -> Duration {
+        let n = self.matvec_queued_rows.load(Ordering::Relaxed);
+        if n == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.matvec_queue_wait_ns.load(Ordering::Relaxed) / n)
+        }
+    }
+
+    /// Snapshot of the per-matvec-shard counters, sorted by
+    /// `(width, n_elems, shard)`.
+    pub fn matvec_shard_stats(&self) -> Vec<((u32, u32, usize), ShardStats)> {
+        self.matvec_shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
     }
 
     /// Mean per-request queue wait so far.
@@ -146,6 +210,24 @@ impl Metrics {
                 100.0 * s.busy_ns as f64 / uptime_ns as f64,
             ));
         }
+        let mv_requests = self.matvec_requests.load(Ordering::Relaxed);
+        if mv_requests > 0 {
+            out.push_str(&format!(
+                "\n  matvec: requests={mv_requests} rows={} tiles={} avg_queue_wait={:.3?}",
+                self.matvec_rows.load(Ordering::Relaxed),
+                self.matvec_tiles.load(Ordering::Relaxed),
+                self.avg_matvec_queue_wait(),
+            ));
+        }
+        for ((width, n_elems, shard), s) in self.matvec_shard_stats() {
+            out.push_str(&format!(
+                "\n  mv-shard[N={width} n={n_elems}:{shard}] tiles={} rows={} busy={:.3}s occupancy={:.1}%",
+                s.batches,
+                s.products,
+                s.busy_ns as f64 / 1e9,
+                100.0 * s.busy_ns as f64 / uptime_ns as f64,
+            ));
+        }
         out
     }
 }
@@ -165,6 +247,36 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("products=128"), "{s}");
         assert!(s.contains("avg_batch=64.0"), "{s}");
+    }
+
+    #[test]
+    fn matvec_tile_accounting() {
+        let m = Metrics::default();
+        m.matvec_requests.fetch_add(1, Ordering::Relaxed);
+        m.matvec_rows.fetch_add(100, Ordering::Relaxed);
+        let (ms1, ms2) = (Duration::from_millis(1), Duration::from_millis(2));
+        m.record_matvec_tile((32, 8), 0, 64, 4304, ms2, ms1);
+        m.record_matvec_tile((32, 8), 1, 36, 4304, ms1, 3 * ms1);
+        // Globals fold in the tiles (products == inner products == rows).
+        assert_eq!(m.products.load(Ordering::Relaxed), 100);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.matvec_tiles.load(Ordering::Relaxed), 2);
+        assert_eq!(m.matvec_queued_rows.load(Ordering::Relaxed), 100);
+        // Row-weighted wait: 64 rows x 1ms + 36 rows x 3ms over 100 rows.
+        assert_eq!(
+            m.avg_matvec_queue_wait(),
+            Duration::from_nanos((64 * 1_000_000 + 36 * 3_000_000) / 100)
+        );
+        let stats = m.matvec_shard_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, (32, 8, 0));
+        assert_eq!(stats[0].1.products, 64);
+        assert_eq!(stats[1].1.products, 36);
+        // Multiply per-shard map stays untouched.
+        assert!(m.shard_stats().is_empty());
+        let s = m.snapshot();
+        assert!(s.contains("matvec: requests=1 rows=100 tiles=2"), "{s}");
+        assert!(s.contains("mv-shard[N=32 n=8:0]"), "{s}");
     }
 
     #[test]

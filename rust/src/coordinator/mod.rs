@@ -7,13 +7,13 @@
 //! * [`batcher`] — requests are *row-batched*: a single-row PIM program
 //!   executes identically across every crossbar row (Fig. 1), so up to
 //!   `rows` independent requests share one program execution. The module
-//!   also provides the [`batcher::BatchQueue`] feeding each width's shard
-//!   pool;
-//! * [`engine`] — per-width multiplier engines (validated and compiled
-//!   **once** at launch) plus the §VI matvec engine, with optional
-//!   golden-model verification;
+//!   also provides the [`batcher::BatchQueue`] feeding each shard pool and
+//!   the [`batcher::MatVecPending`] scatter/gather completion state;
+//! * [`engine`] — per-width multiplier engines and per-shape §VI matvec
+//!   engines (both validated and compiled **once** at launch), with
+//!   optional golden-model verification;
 //! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model;
-//! * [`server`] — the shard-pool work loop with a routing front door and
+//! * [`server`] — the shard-pool work loops with a routing front door and
 //!   metrics.
 //!
 //! ## Shard-pool serving architecture
@@ -38,9 +38,40 @@
 //!    per-shard occupancy and the per-request queue-wait latency that the
 //!    batching deadline is tuned against.
 //!
+//! ## Matvec shard path (§VI)
+//!
+//! The paper's flagship workload is served by the same machinery with the
+//! batching stage replaced by **row tiling** — a matvec request arrives
+//! already batch-shaped (its matrix rows), so there is nothing to
+//! accumulate, only to split:
+//!
+//! 1. **admission** — `submit` resolves the `(n_bits, n_elems)` shape to
+//!    its deployment, rejects ragged rows, draws a ticket, and stamps the
+//!    enqueue time;
+//! 2. **tiling** — the matrix is split row-wise into tiles of up to
+//!    `shard_rows` rows, pushed straight onto the shape's shared
+//!    [`batcher::BatchQueue`]; a [`batcher::MatVecPending`] tracks the
+//!    scatter;
+//! 3. **execution** — each matvec shard owns a resident crossbar sized
+//!    `shard_rows x engine width` and the shape's pre-lowered
+//!    [`CompiledPipeline`](crate::sim::CompiledPipeline) (the per-element
+//!    fused multiply-accumulate programs plus the ripple drain,
+//!    chain-validated once at launch via
+//!    [`validate_chain`](crate::sim::validate_chain)). Tiles restage the
+//!    matrix elements through the word-transposed bulk write and the
+//!    duplicated vector through the whole-word
+//!    [`Crossbar::write_rows_broadcast`](crate::crossbar::Crossbar::write_rows_broadcast)
+//!    path, run the chain, and read back 2N-bit inner products (the
+//!    [`fixedpoint::wrap`](crate::fixedpoint::wrap) carry-save semantics);
+//! 4. **gather** — each tile writes its row slice into the request's
+//!    `MatVecPending`; whichever shard completes the **last** tile sends
+//!    the assembled response. [`Metrics`] tracks matvec admission, tile,
+//!    row-weighted queue-wait, and per-shard occupancy counters alongside
+//!    the multiply counters.
+//!
 //! The offline dependency set has no tokio, so the event loop is built on
 //! `std::thread` + `std::sync::mpsc` (+ a `Mutex`/`Condvar` queue for the
-//! multi-consumer shard stage) — same architecture, no async runtime.
+//! multi-consumer shard stages) — same architecture, no async runtime.
 
 pub mod batcher;
 pub mod engine;
@@ -48,8 +79,10 @@ pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
-pub use batcher::RowBatcher;
-pub use engine::{EngineConfig, MatVecEngine, MultiplyEngine, ShardExecutor};
+pub use batcher::{MatVecPending, RowBatcher};
+pub use engine::{
+    EngineConfig, MatVecEngine, MatVecShardExecutor, MultiplyEngine, ShardExecutor,
+};
 pub use metrics::Metrics;
 pub use pipeline::PipelineModel;
-pub use server::{Coordinator, MultiplyDeployment, Request, Response};
+pub use server::{Coordinator, MatVecDeployment, MultiplyDeployment, Request, Response};

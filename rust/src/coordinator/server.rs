@@ -1,29 +1,41 @@
-//! The serving front door: router + per-width shard pools + response
-//! plumbing.
+//! The serving front door: router + per-width multiply shard pools +
+//! per-shape matvec shard pools + response plumbing.
 //!
 //! Architecture (thread-based; the offline dependency set has no tokio):
 //!
 //! ```text
 //!  clients ---> Coordinator::submit --- route by (op, width) ---> batcher thread
-//!                                                                      |
-//!  batcher thread: RowBatcher (capacity = crossbar rows, deadline)     |
-//!      flush -> shared per-width BatchQueue ----+----------+----------+
-//!                                               |          |          |
-//!                                          shard 0     shard 1 ... shard S-1
-//!      (each shard: resident crossbar, transposed restage, one
-//!       CompiledProgram run, per-request reply via mpsc Sender)
+//!                                |                                     |
+//!                                |  batcher: RowBatcher (rows, deadline)
+//!                                |      flush -> per-width BatchQueue --+-----+
+//!                                |                                      |     |
+//!                                |                                 shard 0 .. S-1
+//!                                |   (resident crossbar, transposed restage,
+//!                                |    one CompiledProgram run, per-request reply)
+//!                                |
+//!                                +-- MatVec: row-tile split (shard_rows) ---+
+//!                                        tiles -> per-shape BatchQueue --+--+
+//!                                                                        |  |
+//!                                                                   mv-shard 0 .. S-1
+//!                                    (resident crossbar, transposed matrix
+//!                                     restage + broadcast vector restage, one
+//!                                     CompiledPipeline run, MatVecPending
+//!                                     gather; last tile sends the reply)
 //! ```
 //!
 //! Programs are validated and lowered exactly once, at
-//! [`Coordinator::launch`] (inside [`MultiplyEngine::new`]); the shard
-//! workers only ever run the pre-lowered hot path. Every accepted multiply
-//! request is stamped with a ticket from a global admission counter and an
-//! enqueue timestamp; the shard that executes it feeds the measured
-//! queue-wait into [`Metrics`], which is how the batching deadline is
-//! tuned (see the `serve` subcommand's snapshot output).
+//! [`Coordinator::launch`] (inside [`MultiplyEngine::new`] /
+//! [`MatVecEngine::new`]); the shard workers only ever run the pre-lowered
+//! hot path. Every accepted request is stamped with a ticket from a global
+//! admission counter and an enqueue timestamp; the shard that executes it
+//! feeds the measured queue-wait into [`Metrics`], which is how the
+//! batching deadline and tile height are tuned (see the `serve`
+//! subcommand's snapshot output).
 
-use super::batcher::{BatchQueue, Pending, RowBatcher};
-use super::engine::{EngineConfig, MatVecEngine, MultiplyEngine, ShardExecutor};
+use super::batcher::{BatchQueue, MatVecPending, Pending, RowBatcher};
+use super::engine::{
+    EngineConfig, MatVecEngine, MatVecShardExecutor, MultiplyEngine, ShardExecutor,
+};
 use super::metrics::Metrics;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -72,15 +84,37 @@ enum WorkerMsg {
     Shutdown,
 }
 
+/// One row tile of a scattered matvec request (the matvec shard pool's
+/// queue payload): up to `shard_rows` matrix rows, the shared vector, and
+/// the request's completion state.
+struct MatVecTile {
+    rows: Vec<Vec<u64>>,
+    /// Index of `rows[0]` in the original matrix (result placement).
+    start: usize,
+    x: Arc<Vec<u64>>,
+    pending: Arc<MatVecPending<u64>>,
+    reply: mpsc::Sender<Result<Response>>,
+    /// Admission timestamp of the parent request (queue-wait accounting).
+    enqueued: Instant,
+}
+
+/// One deployed matvec shape's serving state: the tile queue feeding its
+/// shard pool, plus the tiling height.
+struct MatVecService {
+    shard_rows: usize,
+    queue: Arc<BatchQueue<MatVecTile>>,
+}
+
 /// The deployment: routes requests to per-width multiply shard pools and
-/// the matvec engines.
+/// per-shape matvec shard pools.
 pub struct Coordinator {
     multiply_tx: HashMap<u32, mpsc::Sender<WorkerMsg>>,
-    matvec: HashMap<(u32, u32), MatVecEngine>,
+    matvec: HashMap<(u32, u32), MatVecService>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     /// Global admission counter; its value rides on every multiply job as
-    /// the batcher ticket (stable routing/debugging identity).
+    /// the batcher ticket (stable routing/debugging identity). MatVec
+    /// requests draw from the same counter at admission.
     tickets: AtomicU64,
 }
 
@@ -99,20 +133,42 @@ pub struct MultiplyDeployment {
     pub shards: usize,
 }
 
+/// Configuration for one deployed §VI matvec shape.
+#[derive(Debug, Clone, Copy)]
+pub struct MatVecDeployment {
+    /// Operand width in bits.
+    pub n_bits: u32,
+    /// Inner dimension (vector length).
+    pub n_elems: u32,
+    /// Crossbar rows per shard — the row-tiling height: a request's matrix
+    /// is split into tiles of up to this many rows, scattered across the
+    /// shard pool, and gathered through the [`MatVecPending`] completion
+    /// path.
+    pub shard_rows: usize,
+    /// Crossbar shards (worker threads) sharing this shape's tile queue.
+    pub shards: usize,
+}
+
 impl Coordinator {
-    /// Launch the shard pools for the given multiply widths and build
-    /// matvec engines for the given `(n_bits, n_elems)` shapes.
+    /// Launch the shard pools for the given multiply widths and matvec
+    /// shapes.
     ///
-    /// Each width's program is strictly validated and lowered to its
-    /// [`crate::sim::CompiledProgram`] exactly once, here; the per-shard
-    /// workers reuse their crossbar allocation for the process lifetime.
+    /// Each width's multiply program is strictly validated and lowered to
+    /// its [`crate::sim::CompiledProgram`] exactly once, here. Each matvec
+    /// shape's program *chain* is likewise chain-validated and lowered to
+    /// a [`crate::sim::CompiledPipeline`] exactly once, here — no request
+    /// ever validates or lowers anything. Per-shard workers reuse their
+    /// crossbar allocation for the process lifetime.
     pub fn launch(
         multiplies: &[MultiplyDeployment],
-        matvecs: &[(u32, u32)],
+        matvecs: &[MatVecDeployment],
     ) -> Result<Self> {
-        let metrics = Arc::new(Metrics::default());
-        let mut multiply_tx = HashMap::new();
-        let mut workers = Vec::new();
+        // Phase 1: validate every deployment and build every engine
+        // *before* spawning any worker. A failure here must leave no
+        // thread behind — a worker blocked on a queue nothing will ever
+        // close would leak for the process lifetime.
+        let mut multiply_engines: Vec<(MultiplyDeployment, MultiplyEngine)> =
+            Vec::with_capacity(multiplies.len());
         for dep in multiplies {
             if dep.shards == 0 {
                 return Err(Error::BadParameter(format!(
@@ -120,14 +176,43 @@ impl Coordinator {
                     dep.n_bits
                 )));
             }
-            if multiply_tx.contains_key(&dep.n_bits) {
+            if multiply_engines.iter().any(|(d, _)| d.n_bits == dep.n_bits) {
                 return Err(Error::BadParameter(format!(
                     "width N={} deployed twice",
                     dep.n_bits
                 )));
             }
             // Validate + lower once; shards share the immutable program.
-            let engine = MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?;
+            multiply_engines.push((*dep, MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?));
+        }
+        let mut matvec_engines: Vec<(MatVecDeployment, MatVecEngine)> =
+            Vec::with_capacity(matvecs.len());
+        for dep in matvecs {
+            if dep.shards == 0 {
+                return Err(Error::BadParameter(format!(
+                    "matvec deployment N={} n={} needs at least one shard",
+                    dep.n_bits, dep.n_elems
+                )));
+            }
+            if matvec_engines
+                .iter()
+                .any(|(d, _)| (d.n_bits, d.n_elems) == (dep.n_bits, dep.n_elems))
+            {
+                return Err(Error::BadParameter(format!(
+                    "matvec shape N={} n={} deployed twice",
+                    dep.n_bits, dep.n_elems
+                )));
+            }
+            // Chain-validate + lower once; shards share the immutable
+            // compiled pipeline.
+            matvec_engines.push((*dep, MatVecEngine::new(dep.n_bits, dep.n_elems, dep.shard_rows)?));
+        }
+
+        // Phase 2: everything validated — spawn the pools (infallible).
+        let metrics = Arc::new(Metrics::default());
+        let mut multiply_tx = HashMap::new();
+        let mut workers = Vec::new();
+        for (dep, engine) in multiply_engines {
             let queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>> = BatchQueue::new();
             for shard_idx in 0..dep.shards {
                 let shard = engine.shard();
@@ -139,13 +224,22 @@ impl Coordinator {
                 }));
             }
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            let dep = *dep;
             workers.push(std::thread::spawn(move || batcher_loop(dep, rx, queue)));
             multiply_tx.insert(dep.n_bits, tx);
         }
         let mut matvec = HashMap::new();
-        for &(n_bits, n_elems) in matvecs {
-            matvec.insert((n_bits, n_elems), MatVecEngine::new(n_bits, n_elems));
+        for (dep, engine) in matvec_engines {
+            let shape = (dep.n_bits, dep.n_elems);
+            let queue: Arc<BatchQueue<MatVecTile>> = BatchQueue::new();
+            for shard_idx in 0..dep.shards {
+                let shard = engine.shard();
+                let queue = Arc::clone(&queue);
+                let metrics = Arc::clone(&metrics);
+                workers.push(std::thread::spawn(move || {
+                    matvec_shard_loop(shard, shape, shard_idx, queue, metrics)
+                }));
+            }
+            matvec.insert(shape, MatVecService { shard_rows: dep.shard_rows, queue });
         }
         Ok(Self { multiply_tx, matvec, workers, metrics, tickets: AtomicU64::new(0) })
     }
@@ -172,24 +266,58 @@ impl Coordinator {
                     .map_err(|_| Error::Runtime("worker gone".into()))?;
             }
             Request::MatVec { n_bits, rows, x } => {
-                let engine =
+                let service =
                     self.matvec.get(&(n_bits, x.len() as u32)).ok_or_else(|| {
                         Error::BadParameter(format!(
-                            "no matvec engine for N={n_bits}, n={}",
+                            "no matvec deployment for N={n_bits}, n={}",
                             x.len()
                         ))
                     })?;
-                // Matvec runs synchronously on the caller thread: the whole
-                // matrix already batches across rows. One inner product per
-                // matrix row (the multiply path likewise counts one product
-                // per operand pair).
-                let inner_products = rows.len() as u64;
-                let t0 = Instant::now();
-                let out = engine.compute(&rows, &x);
-                if out.is_ok() {
-                    self.metrics.record_batch(inner_products, engine.cycles(), t0.elapsed());
+                for (r, row) in rows.iter().enumerate() {
+                    if row.len() != x.len() {
+                        return Err(Error::BadParameter(format!(
+                            "matvec row {r} has {} elements, expected {}",
+                            row.len(),
+                            x.len()
+                        )));
+                    }
                 }
-                let _ = reply_tx.send(out.map(Response::InnerProducts));
+                // Admission: draw a ticket and stamp the enqueue time the
+                // tile queue-wait metric measures from.
+                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.matvec_requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.matvec_rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+                if rows.is_empty() {
+                    let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // Row-wise tiling: ceil(m / shard_rows) tiles scattered
+                // over the shard pool, gathered by MatVecPending (one
+                // inner product per matrix row, as the products counter
+                // expects).
+                let m = rows.len();
+                let tiles = m / service.shard_rows + usize::from(m % service.shard_rows != 0);
+                let pending = Arc::new(MatVecPending::new(m, tiles));
+                let x = Arc::new(x);
+                let mut row_iter = rows.into_iter();
+                let mut start = 0usize;
+                while start < m {
+                    let take = (m - start).min(service.shard_rows);
+                    let tile_rows: Vec<Vec<u64>> = row_iter.by_ref().take(take).collect();
+                    let tile = MatVecTile {
+                        rows: tile_rows,
+                        start,
+                        x: Arc::clone(&x),
+                        pending: Arc::clone(&pending),
+                        reply: reply_tx.clone(),
+                        enqueued,
+                    };
+                    if !service.queue.push(tile) {
+                        return Err(Error::Runtime("matvec shard pool shut down".into()));
+                    }
+                    start += take;
+                }
             }
         }
         Ok(reply_rx)
@@ -213,13 +341,20 @@ impl Coordinator {
         }
     }
 
-    /// Graceful shutdown: flush pending batches through the shard pools
-    /// and join every worker. No accepted request is dropped.
+    /// Graceful shutdown: flush pending multiply batches through the shard
+    /// pools, drain queued matvec tiles, and join every worker. No
+    /// accepted request is dropped.
     pub fn shutdown(mut self) {
         for tx in self.multiply_tx.values() {
             let _ = tx.send(WorkerMsg::Shutdown);
         }
         self.multiply_tx.clear();
+        // Matvec tiles are queued directly (no batcher stage): closing the
+        // queue lets the shard workers drain what is already accepted and
+        // then exit.
+        for service in self.matvec.values() {
+            service.queue.close();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -289,6 +424,35 @@ fn shard_loop(
     }
 }
 
+/// One matvec shard worker: pops row tiles off the shape's shared queue,
+/// runs the pre-lowered chain on its resident crossbar, and completes the
+/// parent request's scatter/gather state — the worker that finishes the
+/// last tile sends the assembled response.
+fn matvec_shard_loop(
+    mut shard: MatVecShardExecutor,
+    shape: (u32, u32),
+    shard_idx: usize,
+    queue: Arc<BatchQueue<MatVecTile>>,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(tile) = queue.pop() {
+        let t0 = Instant::now();
+        let queue_wait = t0.saturating_duration_since(tile.enqueued);
+        let out = shard.execute(&tile.rows, &tile.x);
+        metrics.record_matvec_tile(
+            shape,
+            shard_idx,
+            tile.rows.len() as u64,
+            shard.cycles(),
+            t0.elapsed(),
+            queue_wait,
+        );
+        if let Some(full) = tile.pending.complete(tile.start, &out) {
+            let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +465,15 @@ mod tests {
             config: EngineConfig::MultPim,
             shards,
         }
+    }
+
+    fn mv_deployment(
+        n_bits: u32,
+        n_elems: u32,
+        shard_rows: usize,
+        shards: usize,
+    ) -> MatVecDeployment {
+        MatVecDeployment { n_bits, n_elems, shard_rows, shards }
     }
 
     #[test]
@@ -343,12 +516,43 @@ mod tests {
 
     #[test]
     fn matvec_route() {
-        let coord = Coordinator::launch(&[], &[(8, 3)]).unwrap();
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1)]).unwrap();
         let out = coord
             .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![7, 8, 9])
             .unwrap();
         assert_eq!(out, vec![7 + 16 + 27, 28 + 40 + 54]);
-        assert!(coord.matvec(8, vec![vec![1, 2]], vec![1, 2]).is_err());
+        assert!(coord.matvec(8, vec![vec![1, 2]], vec![1, 2]).is_err(), "undeployed shape");
+        assert!(
+            coord.matvec(8, vec![vec![1, 2]], vec![1, 2, 3]).is_err(),
+            "ragged row rejected at admission"
+        );
+        // Empty matrices complete immediately with an empty result.
+        assert_eq!(coord.matvec(8, vec![], vec![1, 2, 3]).unwrap(), Vec::<u64>::new());
+        coord.shutdown();
+    }
+
+    /// A matrix taller than `shard_rows` is tiled across the pool and the
+    /// gathered result preserves row order.
+    #[test]
+    fn matvec_tiles_across_shards() {
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 2, 4, 3)]).unwrap();
+        let m = 4usize * 4 + 3; // 5 tiles: 4 full + 1 partial
+        let rows: Vec<Vec<u64>> =
+            (0..m).map(|r| vec![r as u64 % 251, (r as u64 * 7) % 251]).collect();
+        let x = vec![3u64, 5];
+        let out = coord.matvec(8, rows.clone(), x.clone()).unwrap();
+        assert_eq!(out.len(), m);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(
+                out[r],
+                crate::fixedpoint::inner_product_mod(8, row, &x),
+                "row {r}"
+            );
+        }
+        let metrics = coord.metrics();
+        assert_eq!(metrics.matvec_tiles.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.matvec_rows.load(Ordering::Relaxed), m as u64);
+        assert_eq!(metrics.matvec_queued_rows.load(Ordering::Relaxed), m as u64);
         coord.shutdown();
     }
 
@@ -358,7 +562,8 @@ mod tests {
     /// one-product-per-pair accounting.
     #[test]
     fn products_counter_counts_inner_products() {
-        let coord = Coordinator::launch(&[deployment(8, 4, 1, 1)], &[(8, 3)]).unwrap();
+        let coord =
+            Coordinator::launch(&[deployment(8, 4, 1, 1)], &[mv_deployment(8, 3, 8, 1)]).unwrap();
         coord
             .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![1, 1, 1])
             .unwrap();
@@ -399,6 +604,19 @@ mod tests {
         assert!(
             Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[]).is_err(),
             "duplicate width"
+        );
+        assert!(
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 0)]).is_err(),
+            "0 matvec shards"
+        );
+        assert!(
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 0, 1)]).is_err(),
+            "0 matvec shard rows"
+        );
+        assert!(
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1), mv_deployment(8, 3, 8, 1)])
+                .is_err(),
+            "duplicate matvec shape"
         );
     }
 }

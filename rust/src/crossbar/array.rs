@@ -21,10 +21,17 @@ pub struct Crossbar {
 }
 
 impl Crossbar {
+    /// Words needed to store one column of `rows` rows (64 rows per word)
+    /// — the geometry parameter program lowering keys on, computable
+    /// without allocating a crossbar.
+    pub fn words_for_rows(rows: usize) -> usize {
+        (rows + WORD_BITS - 1) / WORD_BITS
+    }
+
     /// Create a crossbar with all memristors at logical 0 (HRS).
     pub fn new(rows: usize, cols: usize) -> Self {
         assert!(rows > 0 && cols > 0, "empty crossbar");
-        let words_per_col = (rows + WORD_BITS - 1) / WORD_BITS;
+        let words_per_col = Self::words_for_rows(rows);
         let rem = rows % WORD_BITS;
         let tail_mask = if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 };
         Self { rows, cols, words_per_col, tail_mask, data: vec![0; words_per_col * cols] }
@@ -153,6 +160,39 @@ impl Crossbar {
         }
     }
 
+    /// Bulk-stage the *same* N-bit value into columns `start..start+n` of
+    /// rows `0..num_rows` — the matvec serving path's staging primitive for
+    /// the duplicated vector operand (Fig. 5: every crossbar row holds its
+    /// own copy of `x`). Each column bit lands as one whole-word store per
+    /// 64 rows (no per-row transpose work at all, since all rows agree);
+    /// rows beyond `num_rows` keep their previous contents.
+    pub fn write_rows_broadcast(&mut self, start: Col, n: u32, value: u64, num_rows: usize) {
+        assert!(n <= 64);
+        assert!(
+            (start as usize) + (n as usize) <= self.cols,
+            "columns {start}..{} out of bounds ({} columns)",
+            start + n,
+            self.cols
+        );
+        assert!(num_rows <= self.rows, "{num_rows} rows exceed {} rows", self.rows);
+        let wpc = self.words_per_col;
+        let full_words = num_rows / WORD_BITS;
+        let rem = num_rows % WORD_BITS;
+        for i in 0..n {
+            let bit = value >> i & 1 == 1;
+            let col_base = (start + i) as usize * wpc;
+            let fill = if bit { u64::MAX } else { 0 };
+            for w in 0..full_words {
+                self.data[col_base + w] = fill;
+            }
+            if rem > 0 {
+                let mask = (1u64 << rem) - 1;
+                let idx = col_base + full_words;
+                self.data[idx] = (self.data[idx] & !mask) | (fill & mask);
+            }
+        }
+    }
+
     /// Read an N-bit little-endian unsigned value from consecutive columns.
     pub fn read_bits(&self, row: usize, start: Col, n: u32) -> u64 {
         assert!(n <= 64);
@@ -214,6 +254,19 @@ impl Crossbar {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The allocation-free geometry helper agrees with the allocated
+    /// crossbar at every word boundary.
+    #[test]
+    fn words_for_rows_matches_allocation() {
+        for rows in [1usize, 63, 64, 65, 128, 130, 4096] {
+            assert_eq!(
+                Crossbar::words_for_rows(rows),
+                Crossbar::new(rows, 1).words_per_col(),
+                "rows={rows}"
+            );
+        }
+    }
 
     #[test]
     fn bit_roundtrip() {
@@ -313,6 +366,34 @@ mod tests {
             }
             for c in 0..20u32 {
                 assert_eq!(a.col(c), b.col(c), "rows={rows} col={c}");
+            }
+        }
+    }
+
+    /// The broadcast write must agree with staging the duplicated value
+    /// per row, at every word boundary, and must not disturb rows beyond
+    /// `num_rows`.
+    #[test]
+    fn broadcast_write_matches_per_row_path() {
+        for rows in [1usize, 63, 64, 65, 130] {
+            for occupied in [1usize, rows / 2 + 1, rows] {
+                let n = 12u32;
+                let value = 0xA53u64;
+                let mut a = Crossbar::new(rows, 16);
+                let mut b = Crossbar::new(rows, 16);
+                // Pre-dirty both arrays identically so preserved rows are
+                // visible.
+                for r in 0..rows {
+                    a.write_bits(r, 1, n, (r as u64).wrapping_mul(0x2F) & 0xFFF);
+                    b.write_bits(r, 1, n, (r as u64).wrapping_mul(0x2F) & 0xFFF);
+                }
+                for r in 0..occupied {
+                    a.write_bits(r, 1, n, value);
+                }
+                b.write_rows_broadcast(1, n, value, occupied);
+                for c in 0..16u32 {
+                    assert_eq!(a.col(c), b.col(c), "rows={rows} occ={occupied} col={c}");
+                }
             }
         }
     }

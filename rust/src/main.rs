@@ -5,14 +5,15 @@
 //! multpim matvec   --n 32 --elems 8 --rows 16 [--seed 1]
 //! multpim report   [table1|table2|table3|fig3|fa|headline|all]
 //! multpim verify   [--rows 64]        # triple golden agreement via PJRT
-//! multpim serve    [--requests 4096] [--shards 4]  # shard-pool demo with metrics
+//! multpim serve    [--requests 4096] [--shards 4] [--mv-requests 8] [--mv-rows 256]
+//!                                     # multiply + matvec shard-pool demo with metrics
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
 //! ```
 
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::multpim_area::MultPimArea;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::server::MultiplyDeployment;
+use multpim::coordinator::server::{MatVecDeployment, MultiplyDeployment};
 use multpim::coordinator::{Coordinator, EngineConfig, Request, Response};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::util::SplitMix64;
@@ -69,8 +70,10 @@ fn run(args: &[String]) -> Result<()> {
             let rows: Vec<Vec<u64>> =
                 (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
             let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
-            let engine = multpim::coordinator::MatVecEngine::new(n, elems);
-            let out = engine.compute(&rows, &x)?;
+            // The serving hot path: chain validated + lowered once, then
+            // executed on a resident crossbar shard.
+            let engine = multpim::coordinator::MatVecEngine::new(n, elems, m.max(1))?;
+            let out = engine.shard().execute(&rows, &x);
             println!(
                 "matvec: {m} rows x {elems} elems, N={n}: {} PIM cycles (all rows parallel)",
                 engine.cycles()
@@ -138,6 +141,8 @@ fn run(args: &[String]) -> Result<()> {
         Some("serve") => {
             let requests = opt_u64(args, "--requests", 4096);
             let shards = opt_u64(args, "--shards", 4) as usize;
+            let mv_requests = opt_u64(args, "--mv-requests", 8);
+            let mv_rows = opt_u64(args, "--mv-rows", 256) as usize;
             let coord = Coordinator::launch(
                 &[MultiplyDeployment {
                     n_bits: 32,
@@ -146,7 +151,12 @@ fn run(args: &[String]) -> Result<()> {
                     config: EngineConfig::MultPim,
                     shards,
                 }],
-                &[(32, 8)],
+                &[MatVecDeployment {
+                    n_bits: 32,
+                    n_elems: 8,
+                    shard_rows: 64,
+                    shards: shards.max(1),
+                }],
             )?;
             let mut rng = SplitMix64::new(0xE0);
             let mut rxs = Vec::with_capacity(requests as usize);
@@ -155,6 +165,22 @@ fn run(args: &[String]) -> Result<()> {
                 let (a, b) = (rng.bits(32), rng.bits(32));
                 expected.push(a * b);
                 rxs.push(coord.submit(Request::Multiply { n_bits: 32, a, b })?);
+            }
+            // §VI traffic rides the same deployment: each request's matrix
+            // tiles across the matvec shard pool.
+            let mut mv_rxs = Vec::with_capacity(mv_requests as usize);
+            let mut mv_expected = Vec::with_capacity(mv_requests as usize);
+            for _ in 0..mv_requests {
+                let rows: Vec<Vec<u64>> = (0..mv_rows)
+                    .map(|_| (0..8).map(|_| rng.bits(32)).collect())
+                    .collect();
+                let x: Vec<u64> = (0..8).map(|_| rng.bits(32)).collect();
+                mv_expected.push(
+                    rows.iter()
+                        .map(|row| multpim::fixedpoint::inner_product_mod(32, row, &x))
+                        .collect::<Vec<u64>>(),
+                );
+                mv_rxs.push(coord.submit(Request::MatVec { n_bits: 32, rows, x })?);
             }
             for (rx, want) in rxs.into_iter().zip(expected) {
                 match rx
@@ -165,7 +191,19 @@ fn run(args: &[String]) -> Result<()> {
                     other => panic!("unexpected {other:?}"),
                 }
             }
-            println!("served {requests} multiply requests");
+            for (rx, want) in mv_rxs.into_iter().zip(mv_expected) {
+                match rx
+                    .recv()
+                    .map_err(|_| multpim::Error::Runtime("worker dropped".into()))??
+                {
+                    Response::InnerProducts(v) => assert_eq!(v, want),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            println!(
+                "served {requests} multiply requests + {mv_requests} matvec requests \
+                 ({mv_rows} rows x 8 elems each)"
+            );
             println!("metrics: {}", coord.metrics().snapshot());
             coord.shutdown();
             Ok(())

@@ -45,13 +45,54 @@ pub struct CheckReport {
 ///   previously-valued cell;
 /// * gate inputs read cells that hold data (initialized or written).
 pub fn validate(program: &Program, input_cols: &[Col]) -> Result<CheckReport> {
-    let num_cols = program.partitions.num_cols();
+    let mut state = initial_state(program.partitions.num_cols(), input_cols)?;
+    check_program(program, &mut state)
+}
+
+/// Validate a *sequence* of programs executed back-to-back over one
+/// crossbar, threading cell state across program boundaries: a cell a
+/// later program reads is legal if an earlier program (or the external
+/// operand staging in `input_cols`) defined it. This is how multi-program
+/// engines — the §VI matvec chain of per-element programs plus the drain —
+/// are validated exactly once at deployment launch, rather than strictly
+/// checking only the first program on every request.
+///
+/// All programs must address the same column count (one crossbar).
+pub fn validate_chain(programs: &[Program], input_cols: &[Col]) -> Result<CheckReport> {
+    let first = programs.first().ok_or_else(|| {
+        crate::Error::BadParameter("validate_chain needs at least one program".into())
+    })?;
+    let num_cols = first.partitions.num_cols();
+    let mut state = initial_state(num_cols, input_cols)?;
+    let mut total = CheckReport::default();
+    for program in programs {
+        if program.partitions.num_cols() != num_cols {
+            return Err(crate::Error::BadParameter(format!(
+                "chained program `{}` addresses {} columns, chain started with {}",
+                program.name,
+                program.partitions.num_cols(),
+                num_cols
+            )));
+        }
+        let report = check_program(program, &mut state)?;
+        total.cycles += report.cycles;
+        total.peak_busy_partitions = total.peak_busy_partitions.max(report.peak_busy_partitions);
+        total.no_init_gates += report.no_init_gates;
+    }
+    Ok(total)
+}
+
+fn initial_state(num_cols: Col, input_cols: &[Col]) -> Result<Vec<CellState>> {
     let mut state = vec![CellState::Unknown; num_cols as usize];
     for &c in input_cols {
         bounds(c, num_cols, 0)?;
         state[c as usize] = CellState::Written;
     }
+    Ok(state)
+}
 
+fn check_program(program: &Program, state: &mut [CellState]) -> Result<CheckReport> {
+    let num_cols = program.partitions.num_cols();
     let mut report = CheckReport { cycles: program.cycles.len(), ..Default::default() };
 
     for (idx, cycle) in program.cycles.iter().enumerate() {
@@ -263,6 +304,59 @@ mod tests {
         b.gate(Gate::Nor2, &[0, 1], 1);
         let p = b.finish();
         assert!(validate(&p, &[0]).is_err());
+    }
+
+    /// State threads across chained programs: a second program may read
+    /// (and no-init-write) cells the first one defined, and a read of a
+    /// column no program in the chain ever defines is rejected.
+    #[test]
+    fn chain_threads_state_across_programs() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![1]);
+        b.gate(Gate::Not, &[0], 1); // program A defines col 1
+        let a = b.finish();
+
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![2]);
+        b.gate(Gate::Not, &[1], 2); // program B reads col 1 (defined by A)
+        let good = b.finish();
+
+        // Standalone, B is illegal (col 1 undefined)...
+        assert!(matches!(
+            validate(&good, &[0]),
+            Err(crate::Error::IllegalOp { .. })
+        ));
+        // ...but chained after A it is legal, and the report aggregates.
+        let r = validate_chain(&[a.clone(), good], &[0]).unwrap();
+        assert_eq!(r.cycles, 4);
+
+        // A chained read of a column nothing defines still fails.
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![2]);
+        b.gate(Gate::Not, &[3], 2); // col 3: never an input, never written
+        let bad = b.finish();
+        assert!(matches!(
+            validate_chain(&[a, bad], &[0]),
+            Err(crate::Error::IllegalOp { .. })
+        ));
+    }
+
+    #[test]
+    fn chain_rejects_mismatched_geometry_and_empty() {
+        let mut b = builder(vec![0], 4, GateSet::Full);
+        b.init(true, vec![1]);
+        let four = b.finish();
+        let mut b = builder(vec![0], 8, GateSet::Full);
+        b.init(true, vec![1]);
+        let eight = b.finish();
+        assert!(matches!(
+            validate_chain(&[four, eight], &[0]),
+            Err(crate::Error::BadParameter(_))
+        ));
+        assert!(matches!(
+            validate_chain(&[], &[0]),
+            Err(crate::Error::BadParameter(_))
+        ));
     }
 
     #[test]

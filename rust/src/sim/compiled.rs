@@ -149,6 +149,58 @@ impl CompiledProgram {
     }
 }
 
+/// A *sequence* of programs lowered as one unit for one crossbar geometry:
+/// the execution shape of multi-program engines such as the §VI matvec
+/// chain (one fused multiply-accumulate program per vector element, then
+/// the final ripple drain). Lowered once at deployment launch — the shard
+/// hot loop runs the whole chain with zero per-request validation or
+/// lowering.
+#[derive(Debug, Clone)]
+pub struct CompiledPipeline {
+    programs: Vec<CompiledProgram>,
+    cycles: u64,
+}
+
+impl CompiledPipeline {
+    /// Lower every program in `programs` for a crossbar with
+    /// `words_per_col` 64-bit words per column.
+    pub fn lower(programs: &[Program], words_per_col: usize) -> Self {
+        let cycles = programs.iter().map(|p| p.cycle_count() as u64).sum();
+        Self {
+            programs: programs.iter().map(|p| CompiledProgram::lower(p, words_per_col)).collect(),
+            cycles,
+        }
+    }
+
+    /// Number of chained programs.
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    /// True when the pipeline contains no programs.
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    /// Total lowered micro-ops across the chain.
+    pub fn op_count(&self) -> usize {
+        self.programs.iter().map(CompiledProgram::op_count).sum()
+    }
+
+    /// Total simulated PIM cycles one execution of the chain costs.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Execute the whole chain back-to-back over the simulator's crossbar.
+    /// No validation — use after [`super::validate_chain`].
+    pub fn execute(&self, sim: &mut Simulator) {
+        for p in &self.programs {
+            p.execute(sim);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +251,53 @@ mod tests {
         let compiled = CompiledProgram::lower(mult.program(), 1);
         let trace = crate::runtime::trace::program_to_trace(mult.program());
         assert_eq!(compiled.op_count(), trace.len());
+    }
+
+    /// The chained lowering must agree with running each program's
+    /// interpreted walk in sequence — the §VI matvec engine is the
+    /// production user of this path.
+    #[test]
+    fn pipeline_matches_sequential_interpretation() {
+        use crate::algorithms::matvec::MultPimMatVec;
+        let engine = MultPimMatVec::new(4, 3);
+        let rows = 70; // two words, tail-masked second word
+        let mut rng = SplitMix64::new(0x9192);
+        let mat: Vec<Vec<u64>> =
+            (0..rows).map(|_| (0..3).map(|_| rng.bits(4)).collect()).collect();
+        let x: Vec<u64> = (0..3).map(|_| rng.bits(4)).collect();
+
+        let mut sim_a = Simulator::new(rows, engine.width() as usize);
+        let mut sim_b = Simulator::new(rows, engine.width() as usize);
+        for (r, row) in mat.iter().enumerate() {
+            for (t, &v) in row.iter().enumerate() {
+                sim_a.write_bits(r, engine.a_col(t), 4, v);
+                sim_b.write_bits(r, engine.a_col(t), 4, v);
+            }
+            for (t, &v) in x.iter().enumerate() {
+                sim_a.write_bits(r, engine.x_col(t), 4, v);
+                sim_b.write_bits(r, engine.x_col(t), 4, v);
+            }
+        }
+        for p in engine.programs() {
+            sim_a.run_unchecked(p);
+        }
+        let pipeline =
+            CompiledPipeline::lower(engine.programs(), sim_b.crossbar().words_per_col());
+        assert_eq!(pipeline.len(), engine.programs().len());
+        assert_eq!(
+            pipeline.cycles(),
+            engine.latency_cycles(),
+            "lowering preserves the cycle count"
+        );
+        pipeline.execute(&mut sim_b);
+        for r in 0..rows {
+            assert_eq!(engine.read_row(&sim_a, r), engine.read_row(&sim_b, r), "row {r}");
+            assert_eq!(
+                engine.read_row(&sim_b, r),
+                crate::fixedpoint::inner_product_mod(4, &mat[r], &x),
+                "row {r}"
+            );
+        }
     }
 
     #[test]

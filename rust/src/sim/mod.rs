@@ -15,6 +15,6 @@ mod checker;
 pub mod compiled;
 mod executor;
 
-pub use checker::{validate, CheckReport};
-pub use compiled::CompiledProgram;
+pub use checker::{validate, validate_chain, CheckReport};
+pub use compiled::{CompiledPipeline, CompiledProgram};
 pub use executor::Simulator;

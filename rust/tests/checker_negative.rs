@@ -1,0 +1,165 @@
+//! Negative tests for the static legality checker (`sim/checker.rs`):
+//! every class of illegal program must be *rejected with the specific
+//! [`Error`] variant* — never a panic, and never silently accepted. These
+//! pin the error contract the serving layer's launch-time validation
+//! relies on.
+
+use multpim::isa::{Col, Gate, GateOp, GateSet, PartitionMap, ProgramBuilder};
+use multpim::sim::{validate, validate_chain};
+use multpim::Error;
+
+fn builder(parts: Vec<Col>, cols: Col, set: GateSet) -> ProgramBuilder {
+    ProgramBuilder::new("neg", PartitionMap::new(parts, cols), set)
+}
+
+/// A gate reading a column no init, no gate, and no input ever defined
+/// must be an `IllegalOp` naming the undefined column.
+#[test]
+fn read_of_unknown_column_is_illegal_op() {
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.init(true, vec![1]);
+    b.gate(Gate::Not, &[5], 1); // col 5: never staged, never written
+    let p = b.finish();
+    let err = validate(&p, &[0]).unwrap_err();
+    match err {
+        Error::IllegalOp { cycle, ref reason } => {
+            assert_eq!(cycle, 1, "the offending gate cycle is named");
+            assert!(reason.contains("undefined column 5"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// A gate outside the program's declared `GateSet` must be an
+/// `IllegalOp` naming the set. (The builder debug-asserts set membership
+/// at construction, so the program is built under `Full` and the set is
+/// narrowed afterwards — exactly the hole the checker must close.)
+#[test]
+fn gate_outside_declared_set_is_illegal_op() {
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.init(true, vec![4]);
+    b.gate(Gate::Min3, &[0, 1, 2], 4);
+    let mut p = b.finish();
+    p.gate_set = GateSet::Magic; // Min3 is not a MAGIC gate
+    let err = validate(&p, &[0, 1, 2]).unwrap_err();
+    match err {
+        Error::IllegalOp { cycle, ref reason } => {
+            assert_eq!(cycle, 1);
+            assert!(reason.contains("outside declared set"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// Two gates whose partition intervals overlap in the same cycle must be
+/// an `IllegalOp` — the isolation transistors cannot serve both.
+#[test]
+fn overlapping_partition_intervals_are_illegal_op() {
+    // Two partitions (cols 0..4 and 4..8); both gates land entirely in
+    // partition 0, so their intervals collide.
+    let mut b = builder(vec![0, 4], 8, GateSet::Full);
+    b.init(true, vec![1, 2]);
+    b.stage_gate(Gate::Not, &[0], 1).stage_gate(Gate::Not, &[3], 2).commit();
+    let p = b.finish();
+    let err = validate(&p, &[0, 3]).unwrap_err();
+    match err {
+        Error::IllegalOp { cycle, ref reason } => {
+            assert_eq!(cycle, 1);
+            assert!(reason.contains("overlap"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+
+    // A long-span gate crossing partitions 0..=1 blocks a same-cycle gate
+    // inside that interval even though their columns are disjoint.
+    let mut b = builder(vec![0, 4], 8, GateSet::Full);
+    b.init(true, vec![1, 5]);
+    b.stage_gate(Gate::Nor2, &[0, 6], 1).stage_gate(Gate::Not, &[4], 5).commit();
+    let p = b.finish();
+    assert!(
+        matches!(validate(&p, &[0, 4, 6]), Err(Error::IllegalOp { .. })),
+        "spanning gate must block the whole interval"
+    );
+}
+
+/// A MAGIC-precondition violation (gate output not initialized to 1) must
+/// be an `IllegalOp`, including when the stale state is `Init(false)`.
+#[test]
+fn uninitialized_output_is_illegal_op() {
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.gate(Gate::Not, &[0], 1); // col 1 never initialized at all
+    let p = b.finish();
+    assert!(matches!(validate(&p, &[0]), Err(Error::IllegalOp { .. })));
+
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.init(false, vec![1]); // initialized, but to 0 — still illegal
+    b.gate(Gate::Not, &[0], 1);
+    let p = b.finish();
+    let err = validate(&p, &[0]).unwrap_err();
+    match err {
+        Error::IllegalOp { ref reason, .. } => {
+            assert!(reason.contains("not initialized to 1"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// Out-of-range column references must be `ColumnOutOfBounds` carrying
+/// both the column and the crossbar width.
+#[test]
+fn out_of_bounds_column_is_specific_variant() {
+    let mut b = builder(vec![0], 4, GateSet::Full);
+    b.init(true, vec![9]);
+    let p = b.finish();
+    assert!(matches!(
+        validate(&p, &[]),
+        Err(Error::ColumnOutOfBounds { col: 9, cols: 4 })
+    ));
+
+    // Input column out of range is caught before any cycle runs.
+    let mut b = builder(vec![0], 4, GateSet::Full);
+    b.init(true, vec![1]);
+    let p = b.finish();
+    assert!(matches!(
+        validate(&p, &[77]),
+        Err(Error::ColumnOutOfBounds { col: 77, cols: 4 })
+    ));
+}
+
+/// A no-init (X-MAGIC) gate onto a never-valued cell must be an
+/// `IllegalOp` — the AND-with-old-state semantics need an old state.
+#[test]
+fn no_init_gate_onto_unknown_cell_is_illegal_op() {
+    let mut b = builder(vec![0], 4, GateSet::Full);
+    b.stage(GateOp::no_init(Gate::Not, &[0], 3)).commit();
+    let p = b.finish();
+    match validate(&p, &[0]).unwrap_err() {
+        Error::IllegalOp { cycle, ref reason } => {
+            assert_eq!(cycle, 0);
+            assert!(reason.contains("undefined column 3"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// The same contracts hold through the chained validator: a violation in
+/// a *later* program of the chain surfaces as the same specific variant.
+#[test]
+fn chain_propagates_specific_errors() {
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.init(true, vec![1]);
+    b.gate(Gate::Not, &[0], 1);
+    let ok = b.finish();
+
+    let mut b = builder(vec![0], 8, GateSet::Full);
+    b.init(true, vec![2]);
+    b.gate(Gate::Not, &[6], 2); // col 6 never defined anywhere in the chain
+    let bad = b.finish();
+
+    match validate_chain(&[ok, bad], &[0]).unwrap_err() {
+        Error::IllegalOp { ref reason, .. } => {
+            assert!(reason.contains("undefined column 6"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}

@@ -1,7 +1,7 @@
 //! Coordinator integration: concurrent clients, batching behaviour,
 //! routing errors, metrics accounting, and graceful shutdown.
 
-use multpim::coordinator::server::MultiplyDeployment;
+use multpim::coordinator::server::{MatVecDeployment, MultiplyDeployment};
 use multpim::coordinator::{Coordinator, EngineConfig, PipelineModel, Request, Response};
 use multpim::util::SplitMix64;
 use std::sync::atomic::Ordering;
@@ -48,9 +48,11 @@ fn concurrent_clients_share_batches() {
 
 #[test]
 fn mixed_width_routing() {
-    let coord =
-        Coordinator::launch(&[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)], &[(16, 4)])
-            .unwrap();
+    let coord = Coordinator::launch(
+        &[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)],
+        &[MatVecDeployment { n_bits: 16, n_elems: 4, shard_rows: 8, shards: 2 }],
+    )
+    .unwrap();
     assert_eq!(coord.multiply(8, 200, 200).unwrap(), 40_000);
     assert_eq!(coord.multiply(16, 40_000, 2).unwrap(), 80_000);
     assert!(coord.multiply(32, 1, 1).is_err());

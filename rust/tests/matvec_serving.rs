@@ -1,0 +1,156 @@
+//! §VI matvec through the serving layer: the shard-pool path (launch-time
+//! chain validation + `CompiledPipeline` lowering + resident crossbars +
+//! row tiling + `MatVecPending` gather) must agree with the direct
+//! interpreted engine and with the golden `fixedpoint` semantics at every
+//! tile boundary — and its metrics must account for exactly the submitted
+//! work under concurrent load.
+
+use multpim::coordinator::server::MatVecDeployment;
+use multpim::coordinator::{Coordinator, MatVecEngine};
+use multpim::fixedpoint::inner_product_mod;
+use multpim::util::SplitMix64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+const N_BITS: u32 = 8;
+const N_ELEMS: u32 = 4;
+const SHARD_ROWS: usize = 16;
+
+fn random_matrix(rng: &mut SplitMix64, m: usize) -> (Vec<Vec<u64>>, Vec<u64>) {
+    let rows = (0..m)
+        .map(|_| (0..N_ELEMS).map(|_| rng.bits(N_BITS)).collect())
+        .collect();
+    let x = (0..N_ELEMS).map(|_| rng.bits(N_BITS)).collect();
+    (rows, x)
+}
+
+/// Tile-boundary equivalence: matrices of 1, shard_rows-1, shard_rows,
+/// shard_rows+1, and 4*shard_rows rows — covering the single-partial-tile,
+/// just-under, exactly-full, one-row-spill, and multi-tile shapes — all
+/// agree with the direct `MatVecEngine::compute` path and the golden
+/// semantics.
+#[test]
+fn served_matches_direct_at_tile_boundaries() {
+    let coord = Coordinator::launch(
+        &[],
+        &[MatVecDeployment {
+            n_bits: N_BITS,
+            n_elems: N_ELEMS,
+            shard_rows: SHARD_ROWS,
+            shards: 3,
+        }],
+    )
+    .unwrap();
+    let direct = MatVecEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
+    let mut rng = SplitMix64::new(0x7113_B0D5);
+    for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 4 * SHARD_ROWS] {
+        let (rows, x) = random_matrix(&mut rng, m);
+        let served = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+        let direct_out = direct.compute(&rows, &x).unwrap();
+        assert_eq!(served, direct_out, "m={m}: served vs direct");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(
+                served[r],
+                inner_product_mod(N_BITS, row, &x),
+                "m={m} row={r}: served vs fixedpoint golden"
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// The 2N-bit carry-save wrap: all-max operands overflow the accumulator
+/// into exactly the `fixedpoint::wrap` semantics, on both paths, at a
+/// boundary row count.
+#[test]
+fn served_wraps_mod_2n_like_fixedpoint() {
+    let n_bits = 8u32;
+    let n_elems = 8u32; // 8 * 255^2 > 2^16: the accumulator must wrap
+    let coord = Coordinator::launch(
+        &[],
+        &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2 }],
+    )
+    .unwrap();
+    let max = (1u64 << n_bits) - 1;
+    let m = 5; // one full tile + one partial
+    let rows: Vec<Vec<u64>> = (0..m).map(|_| vec![max; n_elems as usize]).collect();
+    let x = vec![max; n_elems as usize];
+    let served = coord.matvec(n_bits, rows.clone(), x.clone()).unwrap();
+    let expected = multpim::fixedpoint::wrap(2 * n_bits, 8u128 * (max as u128) * (max as u128));
+    for (r, &v) in served.iter().enumerate() {
+        assert_eq!(v, expected, "row {r}");
+        assert_eq!(v, inner_product_mod(n_bits, &rows[r], &x), "row {r}");
+    }
+    coord.shutdown();
+}
+
+/// Concurrent-load metrics regression: >= 4 submitting threads, and every
+/// counter must add up exactly — no double counting, no lost work.
+#[test]
+fn concurrent_matvec_metrics_account_exactly() {
+    const THREADS: u64 = 4;
+    const REQUESTS_PER_THREAD: usize = 8;
+    const ROWS_PER_REQUEST: usize = 2 * SHARD_ROWS + 3; // 3 tiles each
+
+    let coord = Arc::new(
+        Coordinator::launch(
+            &[],
+            &[MatVecDeployment {
+                n_bits: N_BITS,
+                n_elems: N_ELEMS,
+                shard_rows: SHARD_ROWS,
+                shards: 4,
+            }],
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xC0DE + t);
+            for _ in 0..REQUESTS_PER_THREAD {
+                let (rows, x) = random_matrix(&mut rng, ROWS_PER_REQUEST);
+                let out = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(out[r], inner_product_mod(N_BITS, row, &x), "row {r}");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total_requests = THREADS * REQUESTS_PER_THREAD as u64;
+    let total_rows = total_requests * ROWS_PER_REQUEST as u64;
+    let tiles_per_request = 3u64; // 2 full tiles + 1 partial (3 rows)
+    let m = coord.metrics();
+
+    // Admission counters: exactly the submitted work.
+    assert_eq!(m.matvec_requests.load(Ordering::Relaxed), total_requests);
+    assert_eq!(m.matvec_rows.load(Ordering::Relaxed), total_rows);
+    // Execution counters: every row served exactly once, every tile
+    // executed exactly once.
+    assert_eq!(m.matvec_tiles.load(Ordering::Relaxed), total_requests * tiles_per_request);
+    assert_eq!(m.matvec_queued_rows.load(Ordering::Relaxed), total_rows);
+    assert_eq!(m.products.load(Ordering::Relaxed), total_rows);
+    assert_eq!(m.batches.load(Ordering::Relaxed), total_requests * tiles_per_request);
+    // Queue wait was measured (tiles inevitably waited a nonzero time).
+    assert!(m.avg_matvec_queue_wait() > std::time::Duration::ZERO);
+    // Per-shard occupancy splits the same totals — no double count.
+    let stats = m.matvec_shard_stats();
+    let shard_rows_total: u64 = stats.iter().map(|(_, s)| s.products).sum();
+    let shard_tiles_total: u64 = stats.iter().map(|(_, s)| s.batches).sum();
+    assert_eq!(shard_rows_total, total_rows, "shard row counters add up");
+    assert_eq!(shard_tiles_total, total_requests * tiles_per_request);
+    for ((w, n, _), _) in &stats {
+        assert_eq!((*w, *n), (N_BITS, N_ELEMS), "only the deployed shape appears");
+    }
+    // Simulated cycle accounting: whole multiples of one chain execution.
+    let engine = MatVecEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
+    let cycles = m.sim_cycles.load(Ordering::Relaxed);
+    assert_eq!(cycles, engine.cycles() * total_requests * tiles_per_request);
+
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
