@@ -68,6 +68,7 @@ fn main() -> multpim::Result<()> {
             shards: 4,
         }],
         &[],
+        &[],
     )?;
     let mut rng = SplitMix64::new(0xF007);
     let t0 = Instant::now();

@@ -4,16 +4,19 @@
 //! interpreted vs compiled — plus the **end-to-end serving paths**: the
 //! seed's per-batch flow (fresh simulator + per-bit staging + interpreted
 //! run) against the shard flow (resident crossbar + word-transposed
-//! restage + `CompiledProgram`), and the §VI matvec direct flow against
-//! its compiled shard flow (`CompiledPipeline` + transposed/broadcast
-//! restage). These are the numbers tracked by EXPERIMENTS.md §Perf and
-//! §Matvec-Serving; the acceptance bars are >= 1.5x products/sec for the
-//! multiply shard path at N=32, 4096 rows and >= 1.5x products/sec for
-//! served matvec at N=16, 64x64.
+//! restage + `CompiledProgram`), the §VI matvec direct flow against its
+//! compiled shard flow (`CompiledPipeline` + transposed/broadcast
+//! restage), and served GEMM (2-D tiled panel flow) against per-request
+//! matvec composition. These are the numbers tracked by EXPERIMENTS.md
+//! §Perf, §Matvec-Serving, and §GEMM; the acceptance bars are >= 1.5x
+//! products/sec for the multiply shard path at N=32, 4096 rows, >= 1.5x
+//! for served matvec at N=16, 64x64, and >= 1.5x for served GEMM at
+//! N=16, 64x64x64.
 
+use multpim::algorithms::matmul::{plan_tiles, MultPimMatMul};
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::{EngineConfig, MatVecEngine, MultiplyEngine};
+use multpim::coordinator::{ChainEngine, EngineConfig, MultiplyEngine};
 use multpim::fixedpoint::inner_product_mod;
 use multpim::runtime::trace::program_to_trace;
 use multpim::sim::Simulator;
@@ -132,7 +135,7 @@ fn main() {
     println!("\n=== matvec serving path: direct engine flow vs compiled shard flow ===");
     let mut matvec_headline = None;
     for (n, elems, m) in [(16u32, 16u32, 64usize), (16, 64, 64)] {
-        let engine = MatVecEngine::new(n, elems, m).unwrap();
+        let engine = ChainEngine::new(n, elems, m).unwrap();
         let mut rng = SplitMix64::new(0x6D76 + elems as u64);
         let rows: Vec<Vec<u64>> =
             (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
@@ -180,5 +183,84 @@ fn main() {
     assert!(
         mv_headline >= 1.5,
         "served matvec speedup regressed below the 1.5x acceptance bar: {mv_headline:.2}x"
+    );
+
+    // ----------------------------------------------------------------
+    // GEMM: per-request matvec composition vs the served 2-D panel flow.
+    // ----------------------------------------------------------------
+    println!("\n=== GEMM serving path: per-request matvec composition vs served panel flow ===");
+    let (n, k, m, p) = (16u32, 64u32, 64usize, 64usize);
+    let panel_cols = 16usize;
+    let gemm = MultPimMatMul::new(n, k);
+    let mut rng = SplitMix64::new(0x47454D);
+    let a: Vec<Vec<u64>> =
+        (0..m).map(|_| (0..k).map(|_| rng.bits(n)).collect()).collect();
+    let b: Vec<Vec<u64>> =
+        (0..k).map(|_| (0..p).map(|_| rng.bits(n)).collect()).collect();
+    let iters = 3;
+
+    // Baseline (the flow GEMM traffic had before the matmul tenant): one
+    // matvec request per output column — fresh simulator, per-bit operand
+    // staging, first-program validation, interpreted chain walk, and a
+    // full restage of A for every single column of B.
+    let mut sw_composed = Stopwatch::new();
+    let out_composed = sw_composed
+        .run(iters, || gemm.compute(&a, &b).unwrap())
+        .unwrap();
+
+    // Served flow: the matmul tenant's 2-D tiling on a resident shard —
+    // each row-tile x column-panel tile stages its rows of A once
+    // (word-transposed), then reruns the pre-lowered `CompiledPipeline`
+    // per panel column with only a whole-word vector broadcast between
+    // runs.
+    let engine = ChainEngine::new(n, k, m).unwrap();
+    let mut shard = engine.shard();
+    let rects = plan_tiles(m, p, m, panel_cols);
+    let mut sw_served = Stopwatch::new();
+    let out_served = sw_served
+        .run(iters, || {
+            let mut c = vec![vec![0u64; p]; m];
+            for rect in &rects {
+                let rows = &a[rect.row0..rect.row0 + rect.rows];
+                let xs: Vec<Vec<u64>> = (rect.col0..rect.col0 + rect.cols)
+                    .map(|col| b.iter().map(|b_row| b_row[col]).collect())
+                    .collect();
+                let panel = shard.execute_panel(rows, &xs);
+                for (c_off, col) in panel.iter().enumerate() {
+                    for (r_off, &v) in col.iter().enumerate() {
+                        c[rect.row0 + r_off][rect.col0 + c_off] = v;
+                    }
+                }
+            }
+            c
+        })
+        .unwrap();
+
+    assert_eq!(out_composed, out_served, "paths must agree");
+    for j in 0..p {
+        let col: Vec<u64> = b.iter().map(|b_row| b_row[j]).collect();
+        for (r, row) in out_served.iter().enumerate() {
+            assert_eq!(row[j], inner_product_mod(n, &a[r], &col), "C[{r}][{j}]");
+        }
+    }
+
+    let (s_composed, s_served) =
+        (sw_composed.median().as_secs_f64(), sw_served.median().as_secs_f64());
+    let products = (m * p) as f64;
+    let gemm_speedup = s_composed / s_served;
+    println!(
+        "N={n:<3} {m}x{k}x{p} composed {:>9.3?} ({:>9.0} products/s)  served {:>9.3?} ({:>9.0} products/s)  {:.2}x",
+        sw_composed.median(),
+        products / s_composed,
+        sw_served.median(),
+        products / s_served,
+        gemm_speedup,
+    );
+    println!(
+        "\nserved GEMM speedup at N=16, 64x64x64: {gemm_speedup:.2}x (acceptance bar: >= 1.5x)"
+    );
+    assert!(
+        gemm_speedup >= 1.5,
+        "served GEMM speedup regressed below the 1.5x acceptance bar: {gemm_speedup:.2}x"
     );
 }

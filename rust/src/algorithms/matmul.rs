@@ -1,0 +1,232 @@
+//! GEMM over the §VI fused engine: matrix-matrix products by
+//! column-of-B composition.
+//!
+//! `C = A * B` for an `m x k` matrix A and a `k x p` matrix B of N-bit
+//! fixed-point elements reduces to `p` fused matrix-vector products:
+//! column `j` of C is exactly `A * B[:, j]`, each element accumulated in
+//! the 2N-bit carry-save representation (arithmetic modulo `2^(2N)`, the
+//! [`wrap`](crate::fixedpoint::wrap) semantics shared with matvec). The
+//! crossbar mapping follows directly from Fig. 5: the row tile of A stays
+//! resident while successive columns of B are broadcast into the
+//! duplicated-vector cells — the chain never *writes* the operand
+//! columns, and its first program re-initializes every state cell, so
+//! re-running it per column needs only a fresh vector broadcast, not a
+//! matrix restage.
+//!
+//! This module holds the substrate-independent pieces:
+//!
+//! * [`MultPimMatMul`] — the direct reference engine (per-column
+//!   [`MultPimMatVec::compute`] composition: fresh simulator, per-bit
+//!   staging, interpreted walk — the seed-style flow the served shard
+//!   path is benchmarked against in `benches/sim_perf.rs`);
+//! * [`plan_tiles`] — the 2-D (row-tile x output-column-panel) tiling the
+//!   serving layer scatters a request across its shard pool with.
+
+use super::matvec::MultPimMatVec;
+use crate::{Error, Result};
+
+/// Direct GEMM engine for one `(n_bits, k)` shape, composed from the
+/// fused §VI matvec engine.
+#[derive(Debug, Clone)]
+pub struct MultPimMatMul {
+    mv: MultPimMatVec,
+}
+
+impl MultPimMatMul {
+    /// Build the engine for inner dimension `k` at `n_bits` bits.
+    pub fn new(n_bits: u32, k: u32) -> Self {
+        Self { mv: MultPimMatVec::new(n_bits, k) }
+    }
+
+    /// Operand width N.
+    pub fn n_bits(&self) -> u32 {
+        self.mv.n_bits()
+    }
+
+    /// Inner dimension k.
+    pub fn k(&self) -> u32 {
+        self.mv.n_elems()
+    }
+
+    /// The underlying fused matvec engine.
+    pub fn engine(&self) -> &MultPimMatVec {
+        &self.mv
+    }
+
+    /// Latency in PIM cycles of one `m x k x p` product: `p` chain
+    /// executions (every row tile of A runs in row-parallel, so `m` does
+    /// not appear).
+    pub fn latency_cycles(&self, p: u64) -> u64 {
+        self.mv.latency_cycles() * p
+    }
+
+    /// Compute `C = A * B` through per-column matvec composition. `a` is
+    /// row-major `m x k`, `b` row-major `k x p`; the result is row-major
+    /// `m x p`, each element modulo `2^(2N)`.
+    pub fn compute(&self, a: &[Vec<u64>], b: &[Vec<u64>]) -> Result<Vec<Vec<u64>>> {
+        let k = self.mv.n_elems() as usize;
+        if b.len() != k {
+            return Err(Error::BadParameter(format!(
+                "B has {} rows, engine built for k={k}",
+                b.len()
+            )));
+        }
+        let p = b.first().map_or(0, Vec::len);
+        for (t, row) in b.iter().enumerate() {
+            if row.len() != p {
+                return Err(Error::BadParameter(format!(
+                    "B row {t} has {} elements, expected {p}",
+                    row.len()
+                )));
+            }
+        }
+        for (r, row) in a.iter().enumerate() {
+            if row.len() != k {
+                return Err(Error::BadParameter(format!(
+                    "A row {r} has {} elements, engine built for k={k}",
+                    row.len()
+                )));
+            }
+        }
+        let mut out = vec![vec![0u64; p]; a.len()];
+        for j in 0..p {
+            let x: Vec<u64> = b.iter().map(|row| row[j]).collect();
+            let col = self.mv.compute(a, &x)?;
+            for (row, v) in out.iter_mut().zip(col) {
+                row[j] = v;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One rectangle of a 2-D GEMM tile plan: output rows
+/// `row0..row0 + rows` x output columns `col0..col0 + cols`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRect {
+    /// First output row covered.
+    pub row0: usize,
+    /// Output rows covered (at most the plan's `tile_rows`).
+    pub rows: usize,
+    /// First output column covered.
+    pub col0: usize,
+    /// Output columns covered (at most the plan's `panel_cols`).
+    pub cols: usize,
+}
+
+/// Plan the 2-D tiling of an `m x p` output into rectangles of up to
+/// `tile_rows` rows (the shard crossbar height) by `panel_cols` columns
+/// (the per-tile chain-rerun budget). Rectangles cover the output exactly
+/// once, row-tile-major.
+pub fn plan_tiles(m: usize, p: usize, tile_rows: usize, panel_cols: usize) -> Vec<TileRect> {
+    assert!(tile_rows > 0, "tile height must be positive");
+    assert!(panel_cols > 0, "panel width must be positive");
+    let mut rects = Vec::new();
+    let mut row0 = 0usize;
+    while row0 < m {
+        let rows = (m - row0).min(tile_rows);
+        let mut col0 = 0usize;
+        while col0 < p {
+            let cols = (p - col0).min(panel_cols);
+            rects.push(TileRect { row0, rows, col0, cols });
+            col0 += cols;
+        }
+        row0 += rows;
+    }
+    rects
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{widening_mul, wrap};
+    use crate::util::SplitMix64;
+
+    fn random_matrix(rng: &mut SplitMix64, n_bits: u32, rows: usize, cols: usize) -> Vec<Vec<u64>> {
+        (0..rows).map(|_| (0..cols).map(|_| rng.bits(n_bits)).collect()).collect()
+    }
+
+    /// Element-by-element agreement with the widening-mul composition the
+    /// coordinator's acceptance bar is stated in.
+    #[test]
+    fn matmul_matches_widening_mul_composition() {
+        let mut rng = SplitMix64::new(0x6D6D);
+        for (n_bits, k) in [(2u32, 1u32), (4, 3), (8, 4)] {
+            let engine = MultPimMatMul::new(n_bits, k);
+            let (m, p) = (5usize, 4usize);
+            let a = random_matrix(&mut rng, n_bits, m, k as usize);
+            let b = random_matrix(&mut rng, n_bits, k as usize, p);
+            let c = engine.compute(&a, &b).unwrap();
+            assert_eq!(c.len(), m);
+            for (r, row) in c.iter().enumerate() {
+                assert_eq!(row.len(), p);
+                for (j, &v) in row.iter().enumerate() {
+                    let acc: u128 = (0..k as usize)
+                        .map(|t| widening_mul(n_bits, a[r][t], b[t][j]) as u128)
+                        .sum();
+                    assert_eq!(v, wrap(2 * n_bits, acc), "N={n_bits} k={k} C[{r}][{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rejects_ragged_shapes() {
+        let engine = MultPimMatMul::new(8, 3);
+        let a = vec![vec![1u64, 2, 3]];
+        let b = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
+        assert!(engine.compute(&a, &b).is_ok());
+        // Wrong inner dimension of B.
+        assert!(engine.compute(&a, &b[..2]).is_err());
+        // Ragged B row.
+        let ragged_b = vec![vec![1u64, 2], vec![3], vec![5, 6]];
+        assert!(engine.compute(&a, &ragged_b).is_err());
+        // Ragged A row.
+        let ragged_a = vec![vec![1u64, 2]];
+        assert!(engine.compute(&ragged_a, &b).is_err());
+    }
+
+    /// Degenerate shapes: no rows of A, or no columns of B.
+    #[test]
+    fn matmul_degenerate_shapes() {
+        let engine = MultPimMatMul::new(8, 2);
+        let b = vec![vec![1u64, 2], vec![3, 4]];
+        assert_eq!(engine.compute(&[], &b).unwrap(), Vec::<Vec<u64>>::new());
+        let empty_b = vec![Vec::new(), Vec::new()];
+        assert_eq!(
+            engine.compute(&[vec![1, 2], vec![3, 4]], &empty_b).unwrap(),
+            vec![Vec::<u64>::new(), Vec::new()]
+        );
+    }
+
+    /// The plan covers the output exactly once at every boundary shape.
+    #[test]
+    fn plan_covers_output_exactly_once() {
+        for m in [1usize, 7, 8, 9, 32] {
+            for p in [1usize, 3, 4, 5, 16] {
+                let rects = plan_tiles(m, p, 8, 4);
+                let mut seen = vec![0u32; m * p];
+                for rect in &rects {
+                    assert!(rect.rows >= 1 && rect.rows <= 8);
+                    assert!(rect.cols >= 1 && rect.cols <= 4);
+                    // Tiles stay grid-aligned: the serving layer indexes
+                    // its pre-extracted panels by `col0 / panel_cols`.
+                    assert_eq!(rect.row0 % 8, 0, "row tiles start tile_rows-aligned");
+                    assert_eq!(rect.col0 % 4, 0, "panels start panel_cols-aligned");
+                    assert!(rect.row0 + rect.rows <= m);
+                    assert!(rect.col0 + rect.cols <= p);
+                    for r in rect.row0..rect.row0 + rect.rows {
+                        for c in rect.col0..rect.col0 + rect.cols {
+                            seen[r * p + c] += 1;
+                        }
+                    }
+                }
+                assert!(seen.iter().all(|&n| n == 1), "m={m} p={p}: exact cover");
+                let row_tiles = m / 8 + usize::from(m % 8 != 0);
+                let col_panels = p / 4 + usize::from(p % 4 != 0);
+                assert_eq!(rects.len(), row_tiles * col_panels, "m={m} p={p}");
+            }
+        }
+        assert!(plan_tiles(0, 5, 8, 4).is_empty(), "empty output plans no tiles");
+    }
+}

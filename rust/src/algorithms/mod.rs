@@ -14,6 +14,8 @@
 //! * [`rime`] — the RIME [22] behavioural baseline.
 //! * [`matvec`] — §VI fused matrix-vector multiplication + the
 //!   FloatPIM-style baseline.
+//! * [`matmul`] — GEMM by column composition over the fused engine, plus
+//!   the 2-D tile planner the serving layer scatters requests with.
 //! * [`costmodel`] — every closed-form expression the paper quotes.
 
 pub mod adders;
@@ -21,6 +23,7 @@ pub mod broadcast;
 pub mod costmodel;
 pub mod fulladder;
 pub mod hajali;
+pub mod matmul;
 pub mod matvec;
 pub mod multpim;
 pub mod multpim_area;

@@ -105,23 +105,24 @@ impl<T> RowBatcher<T> {
     }
 }
 
-/// Completion tracker for a scattered matvec request: the request's matrix
-/// rows are tiled row-wise across the shape's shard pool, each shard
-/// completes its tile's slice of the result vector, and the **last** tile
+/// Generic scatter-gather completion for a request split into tiles: the
+/// request's output cells are scattered across its workload's shard pool
+/// (row-wise slices for matvec, row-tile x column-panel rectangles for
+/// matmul), each shard writes its tile's cells, and the **last** tile
 /// completion — whichever shard it lands on — yields the fully assembled
-/// result exactly once. The server sends the response from that completion
-/// path, so a multi-tile matvec finishes as soon as its slowest tile does,
-/// with no dedicated gather thread.
+/// result exactly once. The workload sends the response from that
+/// completion path, so a multi-tile request finishes as soon as its
+/// slowest tile does, with no dedicated gather thread.
 #[derive(Debug)]
-pub struct MatVecPending<T> {
+pub struct ScatterGather<T> {
     out: Mutex<Vec<T>>,
     remaining: AtomicUsize,
 }
 
-impl<T: Clone + Default> MatVecPending<T> {
-    /// A pending result of `len` entries awaiting `tiles` tile completions.
+impl<T: Clone + Default> ScatterGather<T> {
+    /// A pending result of `len` cells awaiting `tiles` tile completions.
     pub fn new(len: usize, tiles: usize) -> Self {
-        assert!(tiles > 0, "a matvec needs at least one tile");
+        assert!(tiles > 0, "a scattered request needs at least one tile");
         Self { out: Mutex::new(vec![T::default(); len]), remaining: AtomicUsize::new(tiles) }
     }
 
@@ -130,13 +131,23 @@ impl<T: Clone + Default> MatVecPending<T> {
         self.remaining.load(Ordering::Acquire)
     }
 
-    /// Record one tile's slice (`start..start + slice.len()` of the result
-    /// vector). Returns the assembled full result iff this was the last
-    /// outstanding tile — exactly one caller ever receives `Some`.
+    /// Record one tile's contiguous slice (`start..start + slice.len()` of
+    /// the result cells). Returns the assembled full result iff this was
+    /// the last outstanding tile — exactly one caller ever receives
+    /// `Some`.
     pub fn complete(&self, start: usize, slice: &[T]) -> Option<Vec<T>> {
+        self.complete_with(|out| out[start..start + slice.len()].clone_from_slice(slice))
+    }
+
+    /// Record one tile whose cells are *not* contiguous (e.g. a matmul
+    /// row-tile x column-panel rectangle in a row-major output): `place`
+    /// writes the tile's cells anywhere in the output buffer under the
+    /// gather lock. Completion semantics match
+    /// [`ScatterGather::complete`].
+    pub fn complete_with(&self, place: impl FnOnce(&mut [T])) -> Option<Vec<T>> {
         {
             let mut out = self.out.lock().unwrap();
-            out[start..start + slice.len()].clone_from_slice(slice);
+            place(&mut out);
         }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             Some(std::mem::take(&mut *self.out.lock().unwrap()))
@@ -146,8 +157,9 @@ impl<T: Clone + Default> MatVecPending<T> {
     }
 }
 
-/// A multi-consumer work queue feeding a shard pool: the width's batcher
-/// thread pushes flushed batches, `S` shard workers block on [`pop`]
+/// A multi-consumer work queue feeding a shard pool: tiles are pushed at
+/// admission (or by a width's batcher thread), `S` shard workers block on
+/// [`pop`]
 /// (`std::sync::mpsc` receivers are single-consumer, so the pool shares a
 /// `Mutex<VecDeque>` + `Condvar` instead).
 ///
@@ -297,8 +309,8 @@ mod tests {
     }
 
     #[test]
-    fn pending_single_tile_completes_immediately() {
-        let p: MatVecPending<u64> = MatVecPending::new(3, 1);
+    fn gather_single_tile_completes_immediately() {
+        let p: ScatterGather<u64> = ScatterGather::new(3, 1);
         assert_eq!(p.remaining(), 1);
         let out = p.complete(0, &[7, 8, 9]).expect("last tile assembles");
         assert_eq!(out, vec![7, 8, 9]);
@@ -308,10 +320,10 @@ mod tests {
     /// Concurrent tile completions: slices land at their offsets and
     /// exactly one completer receives the assembled result.
     #[test]
-    fn pending_assembles_scattered_tiles_once() {
+    fn gather_assembles_scattered_tiles_once() {
         let tiles = 8usize;
         let per = 5usize;
-        let p: Arc<MatVecPending<u64>> = Arc::new(MatVecPending::new(tiles * per, tiles));
+        let p: Arc<ScatterGather<u64>> = Arc::new(ScatterGather::new(tiles * per, tiles));
         let handles: Vec<_> = (0..tiles)
             .map(|t| {
                 let p = Arc::clone(&p);
@@ -327,6 +339,44 @@ mod tests {
         assert_eq!(finals.len(), 1, "exactly one completion wins");
         let expected: Vec<u64> = (0..(tiles * per) as u64).map(|i| i * 10).collect();
         assert_eq!(finals[0], expected);
+    }
+
+    /// Non-contiguous completions (the matmul 2-D tiling): each tile
+    /// writes one rectangle of a row-major 4x6 output; cells land at
+    /// their 2-D offsets and exactly one completer wins.
+    #[test]
+    fn gather_assembles_rectangles_once() {
+        let (m, p) = (4usize, 6usize);
+        let (tile_rows, panel_cols) = (2usize, 3usize);
+        let g: Arc<ScatterGather<u64>> = Arc::new(ScatterGather::new(m * p, 4));
+        let mut rects = Vec::new();
+        for row0 in (0..m).step_by(tile_rows) {
+            for col0 in (0..p).step_by(panel_cols) {
+                rects.push((row0, col0));
+            }
+        }
+        let handles: Vec<_> = rects
+            .into_iter()
+            .map(|(row0, col0)| {
+                let g = Arc::clone(&g);
+                std::thread::spawn(move || {
+                    g.complete_with(|out| {
+                        for r in 0..tile_rows {
+                            for c in 0..panel_cols {
+                                let (gr, gc) = (row0 + r, col0 + c);
+                                out[gr * p + gc] = (gr * 10 + gc) as u64;
+                            }
+                        }
+                    })
+                })
+            })
+            .collect();
+        let finals: Vec<Vec<u64>> =
+            handles.into_iter().filter_map(|h| h.join().unwrap()).collect();
+        assert_eq!(finals.len(), 1, "exactly one completion wins");
+        for (i, &v) in finals[0].iter().enumerate() {
+            assert_eq!(v, ((i / p) * 10 + i % p) as u64, "cell {i}");
+        }
     }
 
     #[test]

@@ -167,14 +167,18 @@ impl ShardExecutor {
     }
 }
 
-/// A matvec engine for one §VI `(n_bits, n_elems)` shape: the program
+/// A chain engine for one §VI `(n_bits, n_elems)` shape: the program
 /// chain is chain-validated **once** and lowered **once** (to a
 /// [`CompiledPipeline`] for the deployment's `shard_rows` crossbar
 /// geometry) at construction — i.e. at `Coordinator::launch`. Shards
-/// materialized via [`MatVecEngine::shard`] share the immutable chain and
+/// materialized via [`ChainEngine::shard`] share the immutable chain and
 /// each own a resident crossbar that large matrices are tiled across
 /// row-wise.
-pub struct MatVecEngine {
+///
+/// Two workloads ride this engine: **matvec** (one vector per tile) and
+/// **matmul** (GEMM — a panel of output-column vectors per tile, sharing
+/// one matrix staging; see [`ChainShard::execute_panel`]).
+pub struct ChainEngine {
     engine: Arc<MultPimMatVec>,
     compiled: Arc<CompiledPipeline>,
     n_bits: u32,
@@ -182,21 +186,21 @@ pub struct MatVecEngine {
     shard_rows: usize,
 }
 
-impl MatVecEngine {
+impl ChainEngine {
     /// Build, chain-validate, and lower the fused engine for shards of
     /// `shard_rows` crossbar rows (the row-tiling height).
     pub fn new(n_bits: u32, n_elems: u32, shard_rows: usize) -> Result<Self> {
         if !(2..=32).contains(&n_bits) {
             return Err(Error::BadParameter(format!(
-                "matvec engine needs N in 2..=32, got {n_bits}"
+                "chain engine needs N in 2..=32, got {n_bits}"
             )));
         }
         if n_elems == 0 {
-            return Err(Error::BadParameter("matvec engine needs at least one element".into()));
+            return Err(Error::BadParameter("chain engine needs at least one element".into()));
         }
         if shard_rows == 0 {
             return Err(Error::BadParameter(
-                "matvec engine needs at least one crossbar row per shard".into(),
+                "chain engine needs at least one crossbar row per shard".into(),
             ));
         }
         let engine = Arc::new(MultPimMatVec::new(n_bits, n_elems));
@@ -231,8 +235,8 @@ impl MatVecEngine {
     /// Materialize one shard: a worker-resident crossbar executing the
     /// pre-lowered chain. Cheap shared state plus one crossbar allocation
     /// the shard reuses for its entire lifetime.
-    pub fn shard(&self) -> MatVecShardExecutor {
-        MatVecShardExecutor {
+    pub fn shard(&self) -> ChainShard {
+        ChainShard {
             engine: Arc::clone(&self.engine),
             compiled: Arc::clone(&self.compiled),
             shard_rows: self.shard_rows,
@@ -254,13 +258,14 @@ impl MatVecEngine {
     }
 }
 
-/// One shard of a matvec deployment: the hot-path executor owned by a
-/// single worker thread. Executes one row tile (up to `shard_rows` matrix
-/// rows) per call on a resident crossbar — word-transposed restage of the
-/// matrix elements, whole-word broadcast restage of the duplicated vector,
-/// one pre-lowered chain run, per-row 2N-bit readback. No validation and
-/// no lowering ever happen here.
-pub struct MatVecShardExecutor {
+/// One shard of a chain (matvec/matmul) deployment: the hot-path executor
+/// owned by a single worker thread. Executes one row tile (up to
+/// `shard_rows` matrix rows) per call on a resident crossbar —
+/// word-transposed restage of the matrix elements, whole-word broadcast
+/// restage of the duplicated vector, one pre-lowered chain run per
+/// vector, per-row 2N-bit readback. No validation and no lowering ever
+/// happen here.
+pub struct ChainShard {
     engine: Arc<MultPimMatVec>,
     compiled: Arc<CompiledPipeline>,
     shard_rows: usize,
@@ -268,7 +273,7 @@ pub struct MatVecShardExecutor {
     stage: Vec<u64>,
 }
 
-impl MatVecShardExecutor {
+impl ChainShard {
     /// Tile capacity (crossbar rows).
     pub fn shard_rows(&self) -> usize {
         self.shard_rows
@@ -279,11 +284,45 @@ impl MatVecShardExecutor {
         self.compiled.cycles()
     }
 
-    /// Execute one tile: `rows` holds up to `shard_rows` matrix rows of
-    /// `n_elems` elements each. Returns the tile's inner products modulo
-    /// `2^(2N)` (the [`crate::fixedpoint::wrap`] carry-save semantics).
+    /// Execute one matvec tile: `rows` holds up to `shard_rows` matrix
+    /// rows of `n_elems` elements each. Returns the tile's inner products
+    /// modulo `2^(2N)` (the [`crate::fixedpoint::wrap`] carry-save
+    /// semantics).
     pub fn execute(&mut self, rows: &[Vec<u64>], x: &[u64]) -> Vec<u64> {
+        self.stage_rows(rows);
+        self.run_with(rows.len(), x)
+    }
+
+    /// Execute one matmul tile: the matrix rows are staged **once**, then
+    /// the chain runs once per vector in `xs` (the tile's panel of output
+    /// columns). Legal because the chain only *reads* the operand columns
+    /// and its first program re-initializes every state cell, so a fresh
+    /// broadcast of the next vector is all a rerun needs. Returns one
+    /// inner-product vector per `xs` entry (`out[c][r]` = row `r` of
+    /// `rows` against `xs[c]`).
+    pub fn execute_panel(&mut self, rows: &[Vec<u64>], xs: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        self.stage_rows(rows);
+        xs.iter().map(|x| self.run_with(rows.len(), x)).collect()
+    }
+
+    /// Word-transposed restage of the tile's matrix rows.
+    fn stage_rows(&mut self, rows: &[Vec<u64>]) {
         assert!(rows.len() <= self.shard_rows, "tile exceeds shard rows");
+        let n = self.engine.n_bits();
+        let n_elems = self.engine.n_elems() as usize;
+        for t in 0..n_elems {
+            self.stage.clear();
+            for row in rows {
+                debug_assert_eq!(row.len(), n_elems, "row length differs from engine shape");
+                self.stage.push(row[t]);
+            }
+            self.sim.crossbar_mut().write_rows_transposed(self.engine.a_col(t), n, &self.stage);
+        }
+    }
+
+    /// Broadcast-stage one duplicated vector over the tile's `m` occupied
+    /// rows, run the pre-lowered chain, read the inner products back.
+    fn run_with(&mut self, m: usize, x: &[u64]) -> Vec<u64> {
         assert_eq!(
             x.len(),
             self.engine.n_elems() as usize,
@@ -291,17 +330,10 @@ impl MatVecShardExecutor {
         );
         let n = self.engine.n_bits();
         for (t, &xv) in x.iter().enumerate() {
-            self.stage.clear();
-            for row in rows {
-                debug_assert_eq!(row.len(), x.len(), "row length differs from engine shape");
-                self.stage.push(row[t]);
-            }
-            let xb = self.sim.crossbar_mut();
-            xb.write_rows_transposed(self.engine.a_col(t), n, &self.stage);
-            xb.write_rows_broadcast(self.engine.x_col(t), n, xv, rows.len());
+            self.sim.crossbar_mut().write_rows_broadcast(self.engine.x_col(t), n, xv, m);
         }
         self.compiled.execute(&mut self.sim);
-        (0..rows.len()).map(|r| self.engine.read_row(&self.sim, r)).collect()
+        (0..m).map(|r| self.engine.read_row(&self.sim, r)).collect()
     }
 
     /// The resident simulator (tests compare its state against the
@@ -375,7 +407,7 @@ mod tests {
 
     #[test]
     fn matvec_engine() {
-        let engine = MatVecEngine::new(8, 4, 8).unwrap();
+        let engine = ChainEngine::new(8, 4, 8).unwrap();
         let rows = vec![vec![1u64, 2, 3, 4], vec![255, 255, 255, 255]];
         let x = vec![10u64, 20, 30, 40];
         let out = engine.compute(&rows, &x).unwrap();
@@ -393,7 +425,7 @@ mod tests {
     /// varying occupancy, each exact despite stale earlier-tile state.
     #[test]
     fn matvec_shard_reuse_across_tiles() {
-        let engine = MatVecEngine::new(8, 3, 16).unwrap();
+        let engine = ChainEngine::new(8, 3, 16).unwrap();
         let mut shard = engine.shard();
         let mut rng = SplitMix64::new(0x711E);
         for occupancy in [16usize, 1, 7, 16, 2] {
@@ -413,10 +445,44 @@ mod tests {
     }
 
     #[test]
-    fn matvec_engine_rejects_bad_shapes() {
-        assert!(MatVecEngine::new(1, 4, 8).is_err(), "N too small");
-        assert!(MatVecEngine::new(33, 4, 8).is_err(), "N too large");
-        assert!(MatVecEngine::new(8, 0, 8).is_err(), "no elements");
-        assert!(MatVecEngine::new(8, 4, 0).is_err(), "no rows");
+    fn chain_engine_rejects_bad_shapes() {
+        assert!(ChainEngine::new(1, 4, 8).is_err(), "N too small");
+        assert!(ChainEngine::new(33, 4, 8).is_err(), "N too large");
+        assert!(ChainEngine::new(8, 0, 8).is_err(), "no elements");
+        assert!(ChainEngine::new(8, 4, 0).is_err(), "no rows");
+    }
+
+    /// Panel execution (the GEMM tile shape): staging the matrix once and
+    /// re-running the chain per vector must agree with executing each
+    /// vector as its own tile — including on a dirty resident crossbar.
+    #[test]
+    fn panel_matches_per_vector_execution() {
+        let engine = ChainEngine::new(8, 4, 8).unwrap();
+        let mut panel_shard = engine.shard();
+        let mut single_shard = engine.shard();
+        let mut rng = SplitMix64::new(0x6E37);
+        for occupancy in [8usize, 3, 8, 1] {
+            let rows: Vec<Vec<u64>> = (0..occupancy)
+                .map(|_| (0..4).map(|_| rng.bits(8)).collect())
+                .collect();
+            let xs: Vec<Vec<u64>> =
+                (0..5).map(|_| (0..4).map(|_| rng.bits(8)).collect()).collect();
+            let panel = panel_shard.execute_panel(&rows, &xs);
+            assert_eq!(panel.len(), xs.len());
+            for (c, x) in xs.iter().enumerate() {
+                assert_eq!(
+                    panel[c],
+                    single_shard.execute(&rows, x),
+                    "occupancy={occupancy} col={c}"
+                );
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        panel[c][r],
+                        crate::fixedpoint::inner_product_mod(8, row, x),
+                        "occupancy={occupancy} col={c} row={r}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,32 +1,92 @@
-//! Service metrics: lock-free global counters plus coarse per-shard
-//! occupancy (one mutex acquisition per flushed batch, never on the
-//! per-request path).
+//! Service metrics: lock-free global counters plus per-workload labeled
+//! counters (each with coarse per-shard occupancy — one mutex acquisition
+//! per executed tile, never on the per-request path).
+//!
+//! The old multiply-specific vs matvec-specific counter families are gone:
+//! every deployed scenario registers one [`WorkloadCounters`] entry under
+//! its [`WorkloadKey`] at launch, and pool workers record executed tiles
+//! uniformly through [`Metrics::record_tile`]. Work is measured in
+//! *units* — one unit is one inner-product-equivalent (a multiply product,
+//! a matvec row, a matmul output element) — so throughput is directly
+//! comparable across workloads.
 
+use super::pool::{TileCost, WorkloadKey};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Per-shard execution counters (keyed by `(width, shard index)`).
+/// Per-shard execution counters within one workload's pool.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ShardStats {
-    /// Batches this shard executed.
-    pub batches: u64,
-    /// Products this shard computed.
-    pub products: u64,
-    /// Wall-clock nanoseconds this shard spent executing batches.
+    /// Tiles (program/chain executions) this shard ran.
+    pub tiles: u64,
+    /// Work units this shard completed.
+    pub units: u64,
+    /// Wall-clock nanoseconds this shard spent executing tiles.
     pub busy_ns: u64,
+}
+
+/// Labeled counters for one deployed workload.
+#[derive(Debug, Default)]
+pub struct WorkloadCounters {
+    /// Requests admitted for this workload.
+    pub requests: AtomicU64,
+    /// Work units admitted (each request may admit many: a matvec of `m`
+    /// rows admits `m`, a matmul of an `m x p` output admits `m * p`).
+    pub admitted_units: AtomicU64,
+    /// Tiles executed (one compiled program/pipeline run each).
+    pub tiles: AtomicU64,
+    /// Work units completed by executed tiles.
+    pub units: AtomicU64,
+    /// Simulated PIM cycles spent by this workload's tiles.
+    pub sim_cycles: AtomicU64,
+    /// Unit-weighted queue wait total in nanoseconds (a tile of `k` units
+    /// that waited `w` contributes `k * w`; divide by
+    /// [`WorkloadCounters::queued_units`] for the mean).
+    pub queue_wait_ns: AtomicU64,
+    /// Units whose queue wait has been recorded.
+    pub queued_units: AtomicU64,
+    /// Per-shard occupancy, keyed by shard index within the pool.
+    shards: Mutex<BTreeMap<usize, ShardStats>>,
+}
+
+impl WorkloadCounters {
+    /// Record one admitted request carrying `units` work units.
+    pub fn record_admission(&self, units: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.admitted_units.fetch_add(units, Ordering::Relaxed);
+    }
+
+    /// Mean per-unit queue wait so far.
+    pub fn avg_queue_wait(&self) -> Duration {
+        let n = self.queued_units.load(Ordering::Relaxed);
+        if n == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed) / n)
+        }
+    }
+
+    /// Snapshot of this workload's per-shard counters, sorted by shard
+    /// index.
+    pub fn shard_stats(&self) -> Vec<(usize, ShardStats)> {
+        self.shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
+    }
 }
 
 /// Aggregate counters exposed by the coordinator.
 #[derive(Debug)]
 pub struct Metrics {
-    /// Requests accepted.
+    /// Requests accepted, all workloads (rejected submissions — unknown
+    /// deployments, ragged shapes — are not counted, so this equals the
+    /// sum of the per-workload `requests` counters).
     pub requests: AtomicU64,
-    /// Individual products computed (a batch of k counts k; a matvec of
-    /// m rows counts m inner products).
+    /// Work units completed (a multiply batch of `k` counts `k`; a matvec
+    /// of `m` rows counts `m` inner products; a matmul of an `m x p`
+    /// output counts `m * p` elements).
     pub products: AtomicU64,
-    /// Program executions (one per flushed batch).
+    /// Program/pipeline executions (one per executed tile).
     pub batches: AtomicU64,
     /// Simulated PIM clock cycles spent.
     pub sim_cycles: AtomicU64,
@@ -34,31 +94,17 @@ pub struct Metrics {
     pub sim_wall_ns: AtomicU64,
     /// Golden verifications run.
     pub verifications: AtomicU64,
-    /// Total nanoseconds requests spent waiting in batcher + shard queues
-    /// (summed over requests; divide by [`Metrics::queued_products`] for
-    /// the mean — the number the batching deadline is tuned against).
+    /// Total nanoseconds work units spent waiting in batcher + tile
+    /// queues (unit-weighted; divide by [`Metrics::queued_units`] for the
+    /// mean — the number batching deadlines and tile heights are tuned
+    /// against).
     pub queue_wait_ns: AtomicU64,
-    /// Requests whose queue wait has been recorded.
-    pub queued_products: AtomicU64,
-    /// MatVec requests admitted (each may scatter into several tiles).
-    pub matvec_requests: AtomicU64,
-    /// Matrix rows (inner products) admitted across matvec requests.
-    pub matvec_rows: AtomicU64,
-    /// Row tiles executed by matvec shards (one chain run each).
-    pub matvec_tiles: AtomicU64,
-    /// Total nanoseconds matvec *rows* spent waiting in tile queues
-    /// (row-weighted: a tile of `k` rows that waited `w` contributes
-    /// `k * w`; divide by [`Metrics::matvec_queued_rows`] for the mean).
-    pub matvec_queue_wait_ns: AtomicU64,
-    /// Rows whose queue wait has been recorded.
-    pub matvec_queued_rows: AtomicU64,
+    /// Units whose queue wait has been recorded.
+    pub queued_units: AtomicU64,
     /// When this metrics registry was created (occupancy baseline).
     started: Instant,
-    /// Per-shard occupancy, keyed by `(width, shard index)`.
-    shards: Mutex<BTreeMap<(u32, usize), ShardStats>>,
-    /// Per-matvec-shard occupancy, keyed by `(width, n_elems, shard index)`
-    /// (`products` counts inner products, i.e. matrix rows served).
-    matvec_shards: Mutex<BTreeMap<(u32, u32, usize), ShardStats>>,
+    /// Per-workload labeled counters, registered at launch.
+    workloads: Mutex<BTreeMap<WorkloadKey, Arc<WorkloadCounters>>>,
 }
 
 impl Default for Metrics {
@@ -71,106 +117,73 @@ impl Default for Metrics {
             sim_wall_ns: AtomicU64::new(0),
             verifications: AtomicU64::new(0),
             queue_wait_ns: AtomicU64::new(0),
-            queued_products: AtomicU64::new(0),
-            matvec_requests: AtomicU64::new(0),
-            matvec_rows: AtomicU64::new(0),
-            matvec_tiles: AtomicU64::new(0),
-            matvec_queue_wait_ns: AtomicU64::new(0),
-            matvec_queued_rows: AtomicU64::new(0),
+            queued_units: AtomicU64::new(0),
             started: Instant::now(),
-            shards: Mutex::new(BTreeMap::new()),
-            matvec_shards: Mutex::new(BTreeMap::new()),
+            workloads: Mutex::new(BTreeMap::new()),
         }
     }
 }
 
 impl Metrics {
-    /// Record a flushed batch (global counters only; shard workers use
-    /// [`Metrics::record_shard_batch`]).
-    pub fn record_batch(&self, products: u64, cycles: u64, wall: Duration) {
+    /// Register (or fetch) the labeled counter entry for `key`. Called at
+    /// pool launch; the returned handle is then used lock-free.
+    pub fn register(&self, key: WorkloadKey) -> Arc<WorkloadCounters> {
+        Arc::clone(self.workloads.lock().unwrap().entry(key).or_default())
+    }
+
+    /// The labeled counters for `key`, if that workload was launched.
+    pub fn workload(&self, key: WorkloadKey) -> Option<Arc<WorkloadCounters>> {
+        self.workloads.lock().unwrap().get(&key).map(Arc::clone)
+    }
+
+    /// Snapshot of every registered workload, sorted by key.
+    pub fn workloads(&self) -> Vec<(WorkloadKey, Arc<WorkloadCounters>)> {
+        self.workloads.lock().unwrap().iter().map(|(&k, v)| (k, Arc::clone(v))).collect()
+    }
+
+    /// Fold one execution into the global counters only (the pool workers
+    /// use [`Metrics::record_tile`], which also feeds the labeled entry).
+    pub fn record_batch(&self, units: u64, cycles: u64, wall: Duration) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.products.fetch_add(products, Ordering::Relaxed);
+        self.products.fetch_add(units, Ordering::Relaxed);
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         self.sim_wall_ns.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
     }
 
-    /// Record a batch executed by a specific shard, including the summed
-    /// queue-wait latency of its requests.
-    pub fn record_shard_batch(
+    /// Record one tile executed by shard `shard_idx` of the workload
+    /// owning `counters`: folds into the global counters and the
+    /// workload's labeled entry.
+    pub fn record_tile(
         &self,
-        width: u32,
-        shard: usize,
-        products: u64,
-        cycles: u64,
+        counters: &WorkloadCounters,
+        shard_idx: usize,
+        cost: &TileCost,
         wall: Duration,
-        queue_wait: Duration,
     ) {
-        self.record_batch(products, cycles, wall);
-        self.queue_wait_ns.fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
-        self.queued_products.fetch_add(products, Ordering::Relaxed);
-        let mut shards = self.shards.lock().unwrap();
-        let stats = shards.entry((width, shard)).or_default();
-        stats.batches += 1;
-        stats.products += products;
+        self.record_batch(cost.units, cost.cycles, wall);
+        let wait_ns = cost.queue_wait.as_nanos() as u64;
+        self.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+        self.queued_units.fetch_add(cost.units, Ordering::Relaxed);
+        counters.tiles.fetch_add(1, Ordering::Relaxed);
+        counters.units.fetch_add(cost.units, Ordering::Relaxed);
+        counters.sim_cycles.fetch_add(cost.cycles, Ordering::Relaxed);
+        counters.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+        counters.queued_units.fetch_add(cost.units, Ordering::Relaxed);
+        let mut shards = counters.shards.lock().unwrap();
+        let stats = shards.entry(shard_idx).or_default();
+        stats.tiles += 1;
+        stats.units += cost.units;
         stats.busy_ns += wall.as_nanos() as u64;
     }
 
-    /// Record one matvec tile executed by a specific shard of the
-    /// `shape = (width, n_elems)` deployment. `rows` is the tile's
-    /// matrix-row count (inner products); `queue_wait` the tile's time from admission
-    /// to execution start, charged to each of its rows. Folds into the
-    /// global batch/product counters so matvec and multiply throughput are
-    /// directly comparable.
-    pub fn record_matvec_tile(
-        &self,
-        shape: (u32, u32),
-        shard: usize,
-        rows: u64,
-        cycles: u64,
-        wall: Duration,
-        queue_wait: Duration,
-    ) {
-        self.record_batch(rows, cycles, wall);
-        self.matvec_tiles.fetch_add(1, Ordering::Relaxed);
-        self.matvec_queue_wait_ns
-            .fetch_add(queue_wait.as_nanos() as u64 * rows, Ordering::Relaxed);
-        self.matvec_queued_rows.fetch_add(rows, Ordering::Relaxed);
-        let mut shards = self.matvec_shards.lock().unwrap();
-        let stats = shards.entry((shape.0, shape.1, shard)).or_default();
-        stats.batches += 1;
-        stats.products += rows;
-        stats.busy_ns += wall.as_nanos() as u64;
-    }
-
-    /// Mean per-row matvec queue wait so far.
-    pub fn avg_matvec_queue_wait(&self) -> Duration {
-        let n = self.matvec_queued_rows.load(Ordering::Relaxed);
-        if n == 0 {
-            Duration::ZERO
-        } else {
-            Duration::from_nanos(self.matvec_queue_wait_ns.load(Ordering::Relaxed) / n)
-        }
-    }
-
-    /// Snapshot of the per-matvec-shard counters, sorted by
-    /// `(width, n_elems, shard)`.
-    pub fn matvec_shard_stats(&self) -> Vec<((u32, u32, usize), ShardStats)> {
-        self.matvec_shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
-    }
-
-    /// Mean per-request queue wait so far.
+    /// Mean per-unit queue wait so far, across all workloads.
     pub fn avg_queue_wait(&self) -> Duration {
-        let n = self.queued_products.load(Ordering::Relaxed);
+        let n = self.queued_units.load(Ordering::Relaxed);
         if n == 0 {
             Duration::ZERO
         } else {
             Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed) / n)
         }
-    }
-
-    /// Snapshot of the per-shard counters, sorted by `(width, shard)`.
-    pub fn shard_stats(&self) -> Vec<((u32, usize), ShardStats)> {
-        self.shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
     }
 
     /// Human-readable snapshot.
@@ -201,32 +214,26 @@ impl Metrics {
             thr,
             self.avg_queue_wait(),
         );
-        for ((width, shard), s) in self.shard_stats() {
+        for (key, wl) in self.workloads() {
+            let tiles = wl.tiles.load(Ordering::Relaxed);
+            let units = wl.units.load(Ordering::Relaxed);
             out.push_str(&format!(
-                "\n  shard[N={width}:{shard}] batches={} products={} busy={:.3}s occupancy={:.1}%",
-                s.batches,
-                s.products,
-                s.busy_ns as f64 / 1e9,
-                100.0 * s.busy_ns as f64 / uptime_ns as f64,
+                "\n  workload[{key}] requests={} admitted={} tiles={tiles} units={units} \
+                 avg_tile={:.1} avg_queue_wait={:.3?}",
+                wl.requests.load(Ordering::Relaxed),
+                wl.admitted_units.load(Ordering::Relaxed),
+                if tiles > 0 { units as f64 / tiles as f64 } else { 0.0 },
+                wl.avg_queue_wait(),
             ));
-        }
-        let mv_requests = self.matvec_requests.load(Ordering::Relaxed);
-        if mv_requests > 0 {
-            out.push_str(&format!(
-                "\n  matvec: requests={mv_requests} rows={} tiles={} avg_queue_wait={:.3?}",
-                self.matvec_rows.load(Ordering::Relaxed),
-                self.matvec_tiles.load(Ordering::Relaxed),
-                self.avg_matvec_queue_wait(),
-            ));
-        }
-        for ((width, n_elems, shard), s) in self.matvec_shard_stats() {
-            out.push_str(&format!(
-                "\n  mv-shard[N={width} n={n_elems}:{shard}] tiles={} rows={} busy={:.3}s occupancy={:.1}%",
-                s.batches,
-                s.products,
-                s.busy_ns as f64 / 1e9,
-                100.0 * s.busy_ns as f64 / uptime_ns as f64,
-            ));
+            for (shard, s) in wl.shard_stats() {
+                out.push_str(&format!(
+                    "\n    shard[{key}:{shard}] tiles={} units={} busy={:.3}s occupancy={:.1}%",
+                    s.tiles,
+                    s.units,
+                    s.busy_ns as f64 / 1e9,
+                    100.0 * s.busy_ns as f64 / uptime_ns as f64,
+                ));
+            }
         }
         out
     }
@@ -235,6 +242,10 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn cost(units: u64, cycles: u64, wait: Duration) -> TileCost {
+        TileCost { units, cycles, queue_wait: wait * units as u32 }
+    }
 
     #[test]
     fn record_and_snapshot() {
@@ -250,56 +261,67 @@ mod tests {
     }
 
     #[test]
-    fn matvec_tile_accounting() {
+    fn workload_tile_accounting() {
         let m = Metrics::default();
-        m.matvec_requests.fetch_add(1, Ordering::Relaxed);
-        m.matvec_rows.fetch_add(100, Ordering::Relaxed);
-        let (ms1, ms2) = (Duration::from_millis(1), Duration::from_millis(2));
-        m.record_matvec_tile((32, 8), 0, 64, 4304, ms2, ms1);
-        m.record_matvec_tile((32, 8), 1, 36, 4304, ms1, 3 * ms1);
-        // Globals fold in the tiles (products == inner products == rows).
+        let key = WorkloadKey::MatVec { n_bits: 32, n_elems: 8 };
+        let wl = m.register(key);
+        wl.record_admission(100);
+        m.record_tile(&wl, 0, &cost(64, 4304, Duration::from_millis(1)), Duration::from_millis(2));
+        m.record_tile(&wl, 1, &cost(36, 4304, Duration::from_millis(3)), Duration::from_millis(1));
+        // Globals fold in the tiles (products == work units).
         assert_eq!(m.products.load(Ordering::Relaxed), 100);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
-        assert_eq!(m.matvec_tiles.load(Ordering::Relaxed), 2);
-        assert_eq!(m.matvec_queued_rows.load(Ordering::Relaxed), 100);
-        // Row-weighted wait: 64 rows x 1ms + 36 rows x 3ms over 100 rows.
+        // Labeled entry.
+        assert_eq!(wl.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(wl.admitted_units.load(Ordering::Relaxed), 100);
+        assert_eq!(wl.tiles.load(Ordering::Relaxed), 2);
+        assert_eq!(wl.units.load(Ordering::Relaxed), 100);
+        assert_eq!(wl.sim_cycles.load(Ordering::Relaxed), 2 * 4304);
+        assert_eq!(wl.queued_units.load(Ordering::Relaxed), 100);
+        // Unit-weighted wait: 64 units x 1ms + 36 units x 3ms over 100.
         assert_eq!(
-            m.avg_matvec_queue_wait(),
+            wl.avg_queue_wait(),
             Duration::from_nanos((64 * 1_000_000 + 36 * 3_000_000) / 100)
         );
-        let stats = m.matvec_shard_stats();
+        // Global wait aggregates the same total.
+        assert_eq!(m.avg_queue_wait(), wl.avg_queue_wait());
+        // Per-shard split.
+        let stats = wl.shard_stats();
         assert_eq!(stats.len(), 2);
-        assert_eq!(stats[0].0, (32, 8, 0));
-        assert_eq!(stats[0].1.products, 64);
-        assert_eq!(stats[1].1.products, 36);
-        // Multiply per-shard map stays untouched.
-        assert!(m.shard_stats().is_empty());
+        assert_eq!(stats[0].0, 0);
+        assert_eq!(stats[0].1.units, 64);
+        assert_eq!(stats[1].1.units, 36);
+        // Snapshot renders labeled lines.
         let s = m.snapshot();
-        assert!(s.contains("matvec: requests=1 rows=100 tiles=2"), "{s}");
-        assert!(s.contains("mv-shard[N=32 n=8:0]"), "{s}");
+        assert!(s.contains("workload[matvec N=32 n=8] requests=1 admitted=100 tiles=2"), "{s}");
+        assert!(s.contains("shard[matvec N=32 n=8:0]"), "{s}");
     }
 
     #[test]
-    fn shard_accounting() {
+    fn workloads_are_isolated() {
         let m = Metrics::default();
-        m.record_shard_batch(32, 0, 100, 611, Duration::from_millis(3), Duration::from_millis(5));
-        m.record_shard_batch(32, 1, 50, 611, Duration::from_millis(1), Duration::from_millis(1));
-        m.record_shard_batch(32, 0, 10, 611, Duration::from_millis(1), Duration::ZERO);
-        // Globals fold in every shard batch.
+        let mul = m.register(WorkloadKey::Multiply { n_bits: 32 });
+        let mm = m.register(WorkloadKey::MatMul { n_bits: 32, k: 8 });
+        m.record_tile(&mul, 0, &cost(100, 611, Duration::from_millis(5)), Duration::from_millis(3));
+        m.record_tile(&mul, 1, &cost(50, 611, Duration::from_millis(1)), Duration::from_millis(1));
+        m.record_tile(&mm, 0, &cost(10, 4304, Duration::ZERO), Duration::from_millis(1));
+        // Globals fold in everything.
         assert_eq!(m.products.load(Ordering::Relaxed), 160);
         assert_eq!(m.batches.load(Ordering::Relaxed), 3);
-        // Per-shard split.
-        let stats = m.shard_stats();
-        assert_eq!(stats.len(), 2);
-        assert_eq!(stats[0].0, (32, 0));
-        assert_eq!(stats[0].1.batches, 2);
-        assert_eq!(stats[0].1.products, 110);
-        assert_eq!(stats[1].1.products, 50);
-        // Queue-wait average: 6ms over 160 products.
-        assert_eq!(m.queued_products.load(Ordering::Relaxed), 160);
-        assert_eq!(m.avg_queue_wait(), Duration::from_nanos(6_000_000 / 160));
+        assert_eq!(m.queued_units.load(Ordering::Relaxed), 160);
+        // Each labeled entry only sees its own tiles.
+        assert_eq!(mul.units.load(Ordering::Relaxed), 150);
+        assert_eq!(mul.shard_stats().len(), 2);
+        assert_eq!(mm.units.load(Ordering::Relaxed), 10);
+        assert_eq!(mm.tiles.load(Ordering::Relaxed), 1);
+        // Re-registering returns the same entry.
+        let again = m.register(WorkloadKey::Multiply { n_bits: 32 });
+        assert_eq!(again.units.load(Ordering::Relaxed), 150);
+        // Unregistered shapes are absent.
+        assert!(m.workload(WorkloadKey::Multiply { n_bits: 8 }).is_none());
+        assert_eq!(m.workloads().len(), 2);
         let s = m.snapshot();
-        assert!(s.contains("shard[N=32:0]"), "{s}");
-        assert!(s.contains("shard[N=32:1]"), "{s}");
+        assert!(s.contains("workload[multiply N=32]"), "{s}");
+        assert!(s.contains("workload[matmul N=32 k=8]"), "{s}");
     }
 }

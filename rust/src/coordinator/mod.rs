@@ -1,73 +1,74 @@
 //! L3 coordinator: the serving layer over the PIM substrate.
 //!
-//! A deployment exposes fixed-point **multiply** and **matvec** operations
-//! backed by simulated memristive crossbars. The coordinator's job mirrors
-//! a serving framework's:
+//! A deployment exposes fixed-point **multiply**, **matvec**, and
+//! **matmul** (GEMM) operations backed by simulated memristive crossbars.
+//! Since PR 3 every scenario is a tenant of one generic serving core:
 //!
-//! * [`batcher`] — requests are *row-batched*: a single-row PIM program
-//!   executes identically across every crossbar row (Fig. 1), so up to
-//!   `rows` independent requests share one program execution. The module
-//!   also provides the [`batcher::BatchQueue`] feeding each shard pool and
-//!   the [`batcher::MatVecPending`] scatter/gather completion state;
-//! * [`engine`] — per-width multiplier engines and per-shape §VI matvec
+//! * [`pool`] — the [`Workload`](pool::Workload) abstraction and the
+//!   generic [`ShardPool`](pool::ShardPool): one shared tile queue, `S`
+//!   worker threads with resident crossbars, per-workload labeled
+//!   metrics, close-and-drain shutdown. The pool/queue/gather/metrics
+//!   plumbing exists exactly once, here;
+//! * [`workloads`] — the tenants: [`MultiplyWorkload`], [`MatVecWorkload`],
+//!   and [`MatMulWorkload`], each a thin plan/execute/gather impl over its
+//!   engine;
+//! * [`batcher`] — planning primitives: the [`RowBatcher`] (multiply
+//!   requests are *row-batched*: a single-row PIM program executes
+//!   identically across every crossbar row (Fig. 1), so up to `rows`
+//!   independent requests share one program execution), the shared
+//!   [`batcher::BatchQueue`], and the generic [`ScatterGather`]
+//!   completion tiling workloads gather through;
+//! * [`engine`] — per-width multiplier engines and per-shape §VI chain
 //!   engines (both validated and compiled **once** at launch), with
 //!   optional golden-model verification;
 //! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model;
-//! * [`server`] — the shard-pool work loops with a routing front door and
-//!   metrics.
+//! * [`server`] — the routing front door ([`Coordinator`]) and the
+//!   deployment configs.
 //!
-//! ## Shard-pool serving architecture
+//! ## The generic shard-pool serving architecture
 //!
-//! Every deployed multiply width runs as a small pipeline:
+//! Every deployed workload follows the same three-phase lifecycle:
 //!
-//! 1. **admission** — `Coordinator::submit` stamps the request with a
-//!    ticket from the global admission counter and an enqueue timestamp,
-//!    then routes it to the width's batcher thread;
-//! 2. **batching** — one thread per width owns a [`RowBatcher`]
-//!    (capacity = crossbar rows, deadline = `max_wait`) and flushes full
-//!    or expired batches into the width's shared [`batcher::BatchQueue`];
-//! 3. **execution** — `S` shard workers (one OS thread each) pop batches
-//!    from that queue. Each shard owns a **resident crossbar** created at
-//!    launch and reused for every batch (clear-and-restage — operands are
-//!    bulk-staged through the word-transposed
+//! 1. **plan** — [`Coordinator::submit`] resolves the request's
+//!    [`WorkloadKey`](pool::WorkloadKey) to its deployment (typed
+//!    [`NoDeployment`](crate::Error::NoDeployment) rejection otherwise),
+//!    stamps a ticket from the global admission counter plus an enqueue
+//!    timestamp, and turns the request into **tiles**:
+//!    * *multiply* — the width's batcher thread accumulates jobs across
+//!      requests (capacity = crossbar rows, deadline = `max_wait`) and
+//!      flushes full-or-expired batches as tiles;
+//!    * *matvec* — the matrix splits row-wise into tiles of up to
+//!      `shard_rows` rows;
+//!    * *matmul* — the `m x p` output splits 2-D into row-tile x
+//!      output-column-panel rectangles (`shard_rows` x `panel_cols`);
+//! 2. **execute** — the deployment's `S` pool workers pop tiles from the
+//!    shared queue. Each worker owns a **resident crossbar** created at
+//!    launch and reused for every tile (clear-and-restage through the
+//!    word-transposed
 //!    [`Crossbar::write_rows_transposed`](crate::crossbar::Crossbar::write_rows_transposed)
-//!    path) and executes the width's pre-lowered
-//!    [`CompiledProgram`](crate::sim::CompiledProgram) — the program is
-//!    validated and lowered exactly once, at launch, never per batch;
-//! 4. **observability** — [`Metrics`] aggregates global counters plus
-//!    per-shard occupancy and the per-request queue-wait latency that the
-//!    batching deadline is tuned against.
-//!
-//! ## Matvec shard path (§VI)
-//!
-//! The paper's flagship workload is served by the same machinery with the
-//! batching stage replaced by **row tiling** — a matvec request arrives
-//! already batch-shaped (its matrix rows), so there is nothing to
-//! accumulate, only to split:
-//!
-//! 1. **admission** — `submit` resolves the `(n_bits, n_elems)` shape to
-//!    its deployment, rejects ragged rows, draws a ticket, and stamps the
-//!    enqueue time;
-//! 2. **tiling** — the matrix is split row-wise into tiles of up to
-//!    `shard_rows` rows, pushed straight onto the shape's shared
-//!    [`batcher::BatchQueue`]; a [`batcher::MatVecPending`] tracks the
-//!    scatter;
-//! 3. **execution** — each matvec shard owns a resident crossbar sized
-//!    `shard_rows x engine width` and the shape's pre-lowered
-//!    [`CompiledPipeline`](crate::sim::CompiledPipeline) (the per-element
-//!    fused multiply-accumulate programs plus the ripple drain,
-//!    chain-validated once at launch via
-//!    [`validate_chain`](crate::sim::validate_chain)). Tiles restage the
-//!    matrix elements through the word-transposed bulk write and the
-//!    duplicated vector through the whole-word
+//!    and whole-word
 //!    [`Crossbar::write_rows_broadcast`](crate::crossbar::Crossbar::write_rows_broadcast)
-//!    path, run the chain, and read back 2N-bit inner products (the
-//!    [`fixedpoint::wrap`](crate::fixedpoint::wrap) carry-save semantics);
-//! 4. **gather** — each tile writes its row slice into the request's
-//!    `MatVecPending`; whichever shard completes the **last** tile sends
-//!    the assembled response. [`Metrics`] tracks matvec admission, tile,
-//!    row-weighted queue-wait, and per-shard occupancy counters alongside
-//!    the multiply counters.
+//!    bulk writes) and runs the deployment's pre-lowered
+//!    [`CompiledProgram`](crate::sim::CompiledProgram) /
+//!    [`CompiledPipeline`](crate::sim::CompiledPipeline) — validated
+//!    (multiply: `sim::validate`; chains: `sim::validate_chain`, which
+//!    threads cell state across program boundaries) and lowered exactly
+//!    once, at launch, never per tile. A matmul tile stages its rows of A
+//!    once and reruns the chain per panel column
+//!    ([`ChainShard::execute_panel`](engine::ChainShard::execute_panel));
+//! 3. **gather** — multiply tiles reply per job; tiling workloads write
+//!    each tile's cells through the request's shared [`ScatterGather`]
+//!    and whichever worker completes the **last** tile sends the
+//!    assembled response (2N-bit
+//!    [`fixedpoint::wrap`](crate::fixedpoint::wrap) semantics) — no
+//!    dedicated gather thread.
+//!
+//! [`Metrics`] aggregates global counters plus one labeled
+//! [`WorkloadCounters`](metrics::WorkloadCounters) entry per deployment
+//! (admission, tiles, units, unit-weighted queue wait, per-shard
+//! occupancy), so throughput is comparable across scenarios. Shutdown
+//! closes every pool and joins the workers only after all queued tiles
+//! drained — no accepted request is dropped.
 //!
 //! The offline dependency set has no tokio, so the event loop is built on
 //! `std::thread` + `std::sync::mpsc` (+ a `Mutex`/`Condvar` queue for the
@@ -77,12 +78,16 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
+pub mod pool;
 pub mod server;
+pub mod workloads;
 
-pub use batcher::{MatVecPending, RowBatcher};
-pub use engine::{
-    EngineConfig, MatVecEngine, MatVecShardExecutor, MultiplyEngine, ShardExecutor,
-};
-pub use metrics::Metrics;
+pub use batcher::{RowBatcher, ScatterGather};
+pub use engine::{ChainEngine, ChainShard, EngineConfig, MultiplyEngine, ShardExecutor};
+pub use metrics::{Metrics, ShardStats, WorkloadCounters};
 pub use pipeline::PipelineModel;
-pub use server::{Coordinator, MatVecDeployment, MultiplyDeployment, Request, Response};
+pub use pool::{ShardPool, TileCost, Workload, WorkloadKey};
+pub use server::{
+    Coordinator, MatMulDeployment, MatVecDeployment, MultiplyDeployment, Request, Response,
+};
+pub use workloads::{MatMulWorkload, MatVecWorkload, MultiplyWorkload};

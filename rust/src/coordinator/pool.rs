@@ -1,0 +1,293 @@
+//! The generic workload shard pool — the single serving core every
+//! scenario rides.
+//!
+//! A deployed scenario (a multiply width, a §VI matvec shape, a GEMM
+//! shape) is a [`Workload`]: it knows how to materialize a
+//! resident-crossbar shard executor and how to execute one queued tile on
+//! it, completing the tile's share of the originating request. Everything
+//! around that — the shared tile queue, the pool of worker threads, the
+//! per-workload labeled metrics, the close-and-drain shutdown contract —
+//! lives here exactly once, instead of being hand-copied per scenario.
+//!
+//! The serving lifecycle every workload follows:
+//!
+//! 1. **plan** — admission turns a request into one or more tiles. The
+//!    tiling workloads (matvec, matmul) plan synchronously at `submit`
+//!    (row tiles / row-tile x column-panel rectangles sharing a
+//!    [`ScatterGather`](super::batcher::ScatterGather) completion); the
+//!    multiply workload plans *across* requests via its width's
+//!    [`RowBatcher`](super::batcher::RowBatcher) thread, which flushes
+//!    full-or-expired batches as tiles.
+//! 2. **execute** — a pool worker pops a tile and runs it on its resident
+//!    shard (compiled program/pipeline lowered once at launch, operands
+//!    restaged through the bulk word-transposed/broadcast writes).
+//! 3. **gather** — the workload's `execute` completes the request state;
+//!    whichever worker finishes the last tile sends the assembled reply.
+//!
+//! Workers record every executed tile into the global counters plus their
+//! workload's [`WorkloadCounters`](super::metrics::WorkloadCounters) entry,
+//! so throughput is comparable across scenarios without per-scenario
+//! metric fields.
+
+use super::batcher::BatchQueue;
+use super::metrics::{Metrics, WorkloadCounters};
+use std::fmt;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Identity of one deployed workload: the key routing, per-workload
+/// metrics, and typed rejection errors
+/// ([`Error::NoDeployment`](crate::Error::NoDeployment)) agree on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WorkloadKey {
+    /// Fixed-point multiplication at one operand width.
+    Multiply {
+        /// Operand width in bits.
+        n_bits: u32,
+    },
+    /// §VI matrix-vector multiplication at one `(width, inner dim)` shape.
+    MatVec {
+        /// Operand width in bits.
+        n_bits: u32,
+        /// Inner dimension (vector length).
+        n_elems: u32,
+    },
+    /// Matrix-matrix multiplication at one `(width, inner dim)` shape.
+    MatMul {
+        /// Operand width in bits.
+        n_bits: u32,
+        /// Inner dimension (columns of A = rows of B).
+        k: u32,
+    },
+}
+
+impl fmt::Display for WorkloadKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkloadKey::Multiply { n_bits } => write!(f, "multiply N={n_bits}"),
+            WorkloadKey::MatVec { n_bits, n_elems } => {
+                write!(f, "matvec N={n_bits} n={n_elems}")
+            }
+            WorkloadKey::MatMul { n_bits, k } => write!(f, "matmul N={n_bits} k={k}"),
+        }
+    }
+}
+
+/// What one executed tile cost, as reported by [`Workload::execute`] and
+/// folded into the global and per-workload counters.
+#[derive(Debug, Clone, Copy)]
+pub struct TileCost {
+    /// Work units the tile completed: products (multiply), inner products
+    /// (matvec rows), or output elements (matmul). One unit is always one
+    /// inner-product-equivalent, so throughput is comparable across
+    /// workloads.
+    pub units: u64,
+    /// Simulated PIM cycles the execution cost.
+    pub cycles: u64,
+    /// Queue wait summed over the tile's units (a tile of `k` units that
+    /// waited `w` from admission to execution start contributes `k * w`;
+    /// the mean divides by `units`).
+    pub queue_wait: Duration,
+}
+
+/// One deployed scenario served by a [`ShardPool`].
+///
+/// Implementations hold only launch-time immutable state (the engine with
+/// its once-validated, once-lowered compiled program or pipeline); all
+/// mutable execution state lives in the per-worker `Shard`.
+pub trait Workload: Send + Sync + 'static {
+    /// One queued unit of work (a flushed multiply batch, a matvec row
+    /// tile, a matmul row-tile x column-panel rectangle).
+    type Tile: Send + 'static;
+    /// Per-worker executor state — typically a resident crossbar reused
+    /// across tiles. Created inside the worker thread, so it does not need
+    /// to be `Send`.
+    type Shard;
+
+    /// This workload's identity (metrics label / rejection key).
+    fn key(&self) -> WorkloadKey;
+
+    /// Materialize one shard executor (cheap shared `Arc`s plus one
+    /// crossbar allocation the worker then reuses for its lifetime).
+    fn shard(&self) -> Self::Shard;
+
+    /// Execute one tile on `shard`, completing its share of the
+    /// originating request (the last tile of a request sends the reply).
+    ///
+    /// Implementations MUST invoke `record` with the tile's cost exactly
+    /// once — after the simulation, but **before** completing the gather
+    /// or sending any reply. A client unblocked by a response can read
+    /// the metrics immediately, so the counters must never lag the
+    /// replies (every exact-accounting test relies on this ordering).
+    fn execute(
+        &self,
+        shard: &mut Self::Shard,
+        tile: Self::Tile,
+        record: &mut dyn FnMut(TileCost),
+    );
+}
+
+/// A pool of `S` worker threads sharing one tile queue for one workload.
+///
+/// Launching spawns the workers; [`ShardPool::close`] closes the queue,
+/// after which workers drain every already-queued tile and exit — the
+/// close-and-drain contract [`Coordinator::shutdown`] relies on so no
+/// accepted request is ever dropped.
+///
+/// [`Coordinator::shutdown`]: super::server::Coordinator::shutdown
+pub struct ShardPool<W: Workload> {
+    workload: Arc<W>,
+    queue: Arc<BatchQueue<W::Tile>>,
+    counters: Arc<WorkloadCounters>,
+}
+
+impl<W: Workload> ShardPool<W> {
+    /// Spawn `shards` worker threads for `workload`, registering its
+    /// labeled counters in `metrics` and pushing the worker join handles
+    /// onto `workers` (the caller owns joining them at shutdown).
+    pub fn launch(
+        workload: W,
+        shards: usize,
+        metrics: &Arc<Metrics>,
+        workers: &mut Vec<JoinHandle<()>>,
+    ) -> Self {
+        assert!(shards > 0, "a shard pool needs at least one worker");
+        let workload = Arc::new(workload);
+        let counters = metrics.register(workload.key());
+        let queue: Arc<BatchQueue<W::Tile>> = BatchQueue::new();
+        for shard_idx in 0..shards {
+            let workload = Arc::clone(&workload);
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(metrics);
+            let counters = Arc::clone(&counters);
+            workers.push(std::thread::spawn(move || {
+                // The resident shard is created inside the worker thread
+                // and never leaves it.
+                let mut shard = workload.shard();
+                while let Some(tile) = queue.pop() {
+                    let t0 = Instant::now();
+                    let mut record = |cost: TileCost| {
+                        metrics.record_tile(&counters, shard_idx, &cost, t0.elapsed());
+                    };
+                    workload.execute(&mut shard, tile, &mut record);
+                }
+            }));
+        }
+        Self { workload, queue, counters }
+    }
+
+    /// The deployed workload (shape accessors, planning helpers).
+    pub fn workload(&self) -> &W {
+        &self.workload
+    }
+
+    /// This workload's labeled metrics entry (admission counters are
+    /// bumped through this handle, lock-free).
+    pub fn counters(&self) -> &WorkloadCounters {
+        &self.counters
+    }
+
+    /// The shared tile queue (the multiply batcher stage pushes flushed
+    /// batches through this handle).
+    pub fn queue(&self) -> &Arc<BatchQueue<W::Tile>> {
+        &self.queue
+    }
+
+    /// Enqueue one tile; `false` (dropping the tile) if the pool has been
+    /// closed.
+    pub fn push(&self, tile: W::Tile) -> bool {
+        self.queue.push(tile)
+    }
+
+    /// Close the pool: workers finish every queued tile, then exit.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc;
+
+    /// A trivial workload: tiles are numbers, shards count executions.
+    struct Doubler {
+        done: mpsc::Sender<u64>,
+        executions: Arc<AtomicU64>,
+    }
+
+    impl Workload for Doubler {
+        type Tile = u64;
+        type Shard = u64; // per-worker execution count
+
+        fn key(&self) -> WorkloadKey {
+            WorkloadKey::Multiply { n_bits: 2 }
+        }
+
+        fn shard(&self) -> u64 {
+            0
+        }
+
+        fn execute(&self, shard: &mut u64, tile: u64, record: &mut dyn FnMut(TileCost)) {
+            *shard += 1;
+            self.executions.fetch_add(1, Ordering::Relaxed);
+            // Cost is recorded before the result is observable.
+            record(TileCost {
+                units: 1,
+                cycles: 10,
+                queue_wait: Duration::ZERO,
+            });
+            self.done.send(tile * 2).unwrap();
+        }
+    }
+
+    #[test]
+    fn pool_executes_and_drains_on_close() {
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        let (tx, rx) = mpsc::channel();
+        let executions = Arc::new(AtomicU64::new(0));
+        let pool = ShardPool::launch(
+            Doubler { done: tx, executions: Arc::clone(&executions) },
+            3,
+            &metrics,
+            &mut workers,
+        );
+        for i in 0..100u64 {
+            assert!(pool.push(i));
+        }
+        pool.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        // Every tile queued before close was executed exactly once.
+        assert_eq!(executions.load(Ordering::Relaxed), 100);
+        let mut got: Vec<u64> = rx.try_iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        // The pool rejects pushes after close.
+        assert!(!pool.push(999));
+        // Labeled counters saw every tile.
+        let wl = metrics.workload(WorkloadKey::Multiply { n_bits: 2 }).unwrap();
+        assert_eq!(wl.tiles.load(Ordering::Relaxed), 100);
+        assert_eq!(wl.units.load(Ordering::Relaxed), 100);
+        assert_eq!(wl.sim_cycles.load(Ordering::Relaxed), 1000);
+        // Work was split across the registered shards (all tiles
+        // accounted, shard indices within the pool size).
+        let stats = wl.shard_stats();
+        assert_eq!(stats.iter().map(|(_, s)| s.tiles).sum::<u64>(), 100);
+        assert!(stats.iter().all(|(idx, _)| *idx < 3));
+    }
+
+    #[test]
+    fn workload_key_labels() {
+        assert_eq!(WorkloadKey::Multiply { n_bits: 32 }.to_string(), "multiply N=32");
+        assert_eq!(
+            WorkloadKey::MatVec { n_bits: 8, n_elems: 4 }.to_string(),
+            "matvec N=8 n=4"
+        );
+        assert_eq!(WorkloadKey::MatMul { n_bits: 16, k: 64 }.to_string(), "matmul N=16 k=64");
+    }
+}

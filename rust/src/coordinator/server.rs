@@ -1,42 +1,49 @@
-//! The serving front door: router + per-width multiply shard pools +
-//! per-shape matvec shard pools + response plumbing.
+//! The serving front door: a router over per-deployment generic shard
+//! pools plus response plumbing.
 //!
 //! Architecture (thread-based; the offline dependency set has no tokio):
 //!
 //! ```text
-//!  clients ---> Coordinator::submit --- route by (op, width) ---> batcher thread
-//!                                |                                     |
-//!                                |  batcher: RowBatcher (rows, deadline)
-//!                                |      flush -> per-width BatchQueue --+-----+
-//!                                |                                      |     |
-//!                                |                                 shard 0 .. S-1
-//!                                |   (resident crossbar, transposed restage,
-//!                                |    one CompiledProgram run, per-request reply)
-//!                                |
-//!                                +-- MatVec: row-tile split (shard_rows) ---+
-//!                                        tiles -> per-shape BatchQueue --+--+
-//!                                                                        |  |
-//!                                                                   mv-shard 0 .. S-1
-//!                                    (resident crossbar, transposed matrix
-//!                                     restage + broadcast vector restage, one
-//!                                     CompiledPipeline run, MatVecPending
-//!                                     gather; last tile sends the reply)
+//!  clients ---> Coordinator::submit --- route by WorkloadKey ----+
+//!                     |                                          |
+//!                     |  multiply: batcher thread (RowBatcher:   |
+//!                     |    rows, deadline) plans ACROSS requests |
+//!                     |    and flushes batch tiles               |
+//!                     |  matvec: row tiles (shard_rows)          |
+//!                     |  matmul: row-tile x column-panel rects   |
+//!                     |                                          v
+//!                     +----------------> ShardPool<W>: BatchQueue --+--+
+//!                                                                   |  |
+//!                                                              shard 0 .. S-1
+//!                                        (resident crossbar, bulk restage, one
+//!                                         pre-lowered CompiledProgram /
+//!                                         CompiledPipeline run per tile,
+//!                                         ScatterGather completion; the last
+//!                                         tile sends the reply)
 //! ```
+//!
+//! Every deployed scenario — a multiply width, a §VI matvec shape, a GEMM
+//! shape — is a [`Workload`](super::pool::Workload) served by one
+//! [`ShardPool`]: the pool/queue/worker/metrics plumbing exists once, in
+//! [`super::pool`], and adding a scenario costs one `Workload` impl, not
+//! a new serving stack.
 //!
 //! Programs are validated and lowered exactly once, at
 //! [`Coordinator::launch`] (inside [`MultiplyEngine::new`] /
-//! [`MatVecEngine::new`]); the shard workers only ever run the pre-lowered
-//! hot path. Every accepted request is stamped with a ticket from a global
-//! admission counter and an enqueue timestamp; the shard that executes it
-//! feeds the measured queue-wait into [`Metrics`], which is how the
-//! batching deadline and tile height are tuned (see the `serve`
+//! [`ChainEngine::new`]); the shard workers only ever run the pre-lowered
+//! hot path. Every accepted request is stamped with a ticket from a
+//! global admission counter and an enqueue timestamp; the shard that
+//! executes it feeds the measured queue-wait into [`Metrics`], which is
+//! how batching deadlines and tile heights are tuned (see the `serve`
 //! subcommand's snapshot output).
 
-use super::batcher::{BatchQueue, MatVecPending, Pending, RowBatcher};
-use super::engine::{
-    EngineConfig, MatVecEngine, MatVecShardExecutor, MultiplyEngine, ShardExecutor,
-};
+use super::batcher::{BatchQueue, RowBatcher};
+use super::engine::{ChainEngine, EngineConfig, MultiplyEngine};
 use super::metrics::Metrics;
+use super::pool::{ShardPool, WorkloadKey};
+use super::workloads::{
+    MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyTile, MultiplyWorkload,
+};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -65,6 +72,16 @@ pub enum Request {
         /// Vector.
         x: Vec<u64>,
     },
+    /// `A * B` for an `m x k` matrix A and `k x p` matrix B (row-major),
+    /// every output element a 2N-bit inner product modulo `2^(2N)`.
+    MatMul {
+        /// Operand width.
+        n_bits: u32,
+        /// Matrix A, row-major `m x k`.
+        a: Vec<Vec<u64>>,
+        /// Matrix B, row-major `k x p`.
+        b: Vec<Vec<u64>>,
+    },
 }
 
 /// A completed response.
@@ -74,47 +91,32 @@ pub enum Response {
     Product(u64),
     /// Inner products of a [`Request::MatVec`].
     InnerProducts(Vec<u64>),
+    /// Row-major `m x p` result of a [`Request::MatMul`].
+    Matrix(Vec<Vec<u64>>),
 }
-
-/// An operand pair plus its reply channel (the batcher's queue payload).
-type MultiplyJob = (u64, u64, mpsc::Sender<Result<Response>>);
 
 enum WorkerMsg {
     Job { job: MultiplyJob, ticket: u64, enqueued: Instant },
     Shutdown,
 }
 
-/// One row tile of a scattered matvec request (the matvec shard pool's
-/// queue payload): up to `shard_rows` matrix rows, the shared vector, and
-/// the request's completion state.
-struct MatVecTile {
-    rows: Vec<Vec<u64>>,
-    /// Index of `rows[0]` in the original matrix (result placement).
-    start: usize,
-    x: Arc<Vec<u64>>,
-    pending: Arc<MatVecPending<u64>>,
-    reply: mpsc::Sender<Result<Response>>,
-    /// Admission timestamp of the parent request (queue-wait accounting).
-    enqueued: Instant,
+/// One deployed multiply width's admission front: the batcher thread's
+/// channel plus the shard pool it flushes into.
+struct MultiplyFront {
+    tx: mpsc::Sender<WorkerMsg>,
+    pool: ShardPool<MultiplyWorkload>,
 }
 
-/// One deployed matvec shape's serving state: the tile queue feeding its
-/// shard pool, plus the tiling height.
-struct MatVecService {
-    shard_rows: usize,
-    queue: Arc<BatchQueue<MatVecTile>>,
-}
-
-/// The deployment: routes requests to per-width multiply shard pools and
-/// per-shape matvec shard pools.
+/// The deployment: routes requests to per-workload shard pools.
 pub struct Coordinator {
-    multiply_tx: HashMap<u32, mpsc::Sender<WorkerMsg>>,
-    matvec: HashMap<(u32, u32), MatVecService>,
+    multiply: HashMap<u32, MultiplyFront>,
+    matvec: HashMap<(u32, u32), ShardPool<MatVecWorkload>>,
+    matmul: HashMap<(u32, u32), ShardPool<MatMulWorkload>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     /// Global admission counter; its value rides on every multiply job as
-    /// the batcher ticket (stable routing/debugging identity). MatVec
-    /// requests draw from the same counter at admission.
+    /// the batcher ticket (stable routing/debugging identity). Tiling
+    /// workloads draw from the same counter at admission.
     tickets: AtomicU64,
 }
 
@@ -142,26 +144,44 @@ pub struct MatVecDeployment {
     pub n_elems: u32,
     /// Crossbar rows per shard — the row-tiling height: a request's matrix
     /// is split into tiles of up to this many rows, scattered across the
-    /// shard pool, and gathered through the [`MatVecPending`] completion
-    /// path.
+    /// shard pool, and gathered through the generic
+    /// [`ScatterGather`](super::batcher::ScatterGather) completion path.
     pub shard_rows: usize,
     /// Crossbar shards (worker threads) sharing this shape's tile queue.
     pub shards: usize,
 }
 
+/// Configuration for one deployed GEMM shape.
+#[derive(Debug, Clone, Copy)]
+pub struct MatMulDeployment {
+    /// Operand width in bits.
+    pub n_bits: u32,
+    /// Inner dimension (columns of A = rows of B).
+    pub k: u32,
+    /// Crossbar rows per shard — the row-tiling height of A.
+    pub shard_rows: usize,
+    /// Output-column panel width per tile: each tile stages its rows of A
+    /// once and reruns the pre-lowered chain for up to this many columns
+    /// of B.
+    pub panel_cols: usize,
+    /// Crossbar shards (worker threads) sharing this shape's tile queue.
+    pub shards: usize,
+}
+
 impl Coordinator {
-    /// Launch the shard pools for the given multiply widths and matvec
-    /// shapes.
+    /// Launch the shard pools for the given multiply widths, matvec
+    /// shapes, and matmul shapes.
     ///
-    /// Each width's multiply program is strictly validated and lowered to
-    /// its [`crate::sim::CompiledProgram`] exactly once, here. Each matvec
-    /// shape's program *chain* is likewise chain-validated and lowered to
-    /// a [`crate::sim::CompiledPipeline`] exactly once, here — no request
-    /// ever validates or lowers anything. Per-shard workers reuse their
-    /// crossbar allocation for the process lifetime.
+    /// Each multiply width's program is strictly validated and lowered to
+    /// its [`crate::sim::CompiledProgram`] exactly once, here. Each
+    /// matvec/matmul shape's program *chain* is likewise chain-validated
+    /// and lowered to a [`crate::sim::CompiledPipeline`] exactly once,
+    /// here — no request ever validates or lowers anything. Per-shard
+    /// workers reuse their crossbar allocation for the process lifetime.
     pub fn launch(
         multiplies: &[MultiplyDeployment],
         matvecs: &[MatVecDeployment],
+        matmuls: &[MatMulDeployment],
     ) -> Result<Self> {
         // Phase 1: validate every deployment and build every engine
         // *before* spawning any worker. A failure here must leave no
@@ -185,7 +205,7 @@ impl Coordinator {
             // Validate + lower once; shards share the immutable program.
             multiply_engines.push((*dep, MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?));
         }
-        let mut matvec_engines: Vec<(MatVecDeployment, MatVecEngine)> =
+        let mut matvec_engines: Vec<(MatVecDeployment, ChainEngine)> =
             Vec::with_capacity(matvecs.len());
         for dep in matvecs {
             if dep.shards == 0 {
@@ -205,43 +225,67 @@ impl Coordinator {
             }
             // Chain-validate + lower once; shards share the immutable
             // compiled pipeline.
-            matvec_engines.push((*dep, MatVecEngine::new(dep.n_bits, dep.n_elems, dep.shard_rows)?));
+            matvec_engines.push((*dep, ChainEngine::new(dep.n_bits, dep.n_elems, dep.shard_rows)?));
+        }
+        let mut matmul_engines: Vec<(MatMulDeployment, ChainEngine)> =
+            Vec::with_capacity(matmuls.len());
+        for dep in matmuls {
+            if dep.shards == 0 {
+                return Err(Error::BadParameter(format!(
+                    "matmul deployment N={} k={} needs at least one shard",
+                    dep.n_bits, dep.k
+                )));
+            }
+            if dep.panel_cols == 0 {
+                return Err(Error::BadParameter(format!(
+                    "matmul deployment N={} k={} needs at least one panel column",
+                    dep.n_bits, dep.k
+                )));
+            }
+            if matmul_engines.iter().any(|(d, _)| (d.n_bits, d.k) == (dep.n_bits, dep.k)) {
+                return Err(Error::BadParameter(format!(
+                    "matmul shape N={} k={} deployed twice",
+                    dep.n_bits, dep.k
+                )));
+            }
+            matmul_engines.push((*dep, ChainEngine::new(dep.n_bits, dep.k, dep.shard_rows)?));
         }
 
         // Phase 2: everything validated — spawn the pools (infallible).
         let metrics = Arc::new(Metrics::default());
-        let mut multiply_tx = HashMap::new();
         let mut workers = Vec::new();
+        let mut multiply = HashMap::new();
         for (dep, engine) in multiply_engines {
-            let queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>> = BatchQueue::new();
-            for shard_idx in 0..dep.shards {
-                let shard = engine.shard();
-                let queue = Arc::clone(&queue);
-                let metrics = Arc::clone(&metrics);
-                let width = dep.n_bits;
-                workers.push(std::thread::spawn(move || {
-                    shard_loop(shard, width, shard_idx, queue, metrics)
-                }));
-            }
+            let pool = ShardPool::launch(
+                MultiplyWorkload::new(engine, dep.n_bits),
+                dep.shards,
+                &metrics,
+                &mut workers,
+            );
+            let queue = Arc::clone(pool.queue());
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
             workers.push(std::thread::spawn(move || batcher_loop(dep, rx, queue)));
-            multiply_tx.insert(dep.n_bits, tx);
+            multiply.insert(dep.n_bits, MultiplyFront { tx, pool });
         }
         let mut matvec = HashMap::new();
         for (dep, engine) in matvec_engines {
             let shape = (dep.n_bits, dep.n_elems);
-            let queue: Arc<BatchQueue<MatVecTile>> = BatchQueue::new();
-            for shard_idx in 0..dep.shards {
-                let shard = engine.shard();
-                let queue = Arc::clone(&queue);
-                let metrics = Arc::clone(&metrics);
-                workers.push(std::thread::spawn(move || {
-                    matvec_shard_loop(shard, shape, shard_idx, queue, metrics)
-                }));
-            }
-            matvec.insert(shape, MatVecService { shard_rows: dep.shard_rows, queue });
+            let pool =
+                ShardPool::launch(MatVecWorkload::new(engine), dep.shards, &metrics, &mut workers);
+            matvec.insert(shape, pool);
         }
-        Ok(Self { multiply_tx, matvec, workers, metrics, tickets: AtomicU64::new(0) })
+        let mut matmul = HashMap::new();
+        for (dep, engine) in matmul_engines {
+            let shape = (dep.n_bits, dep.k);
+            let pool = ShardPool::launch(
+                MatMulWorkload::new(engine, dep.panel_cols),
+                dep.shards,
+                &metrics,
+                &mut workers,
+            );
+            matmul.insert(shape, pool);
+        }
+        Ok(Self { multiply, matvec, matmul, workers, metrics, tickets: AtomicU64::new(0) })
     }
 
     /// Service metrics.
@@ -250,29 +294,36 @@ impl Coordinator {
     }
 
     /// Submit a request; returns a receiver for the response.
+    ///
+    /// Requests routed to a workload or shape that was never launched are
+    /// rejected with the typed [`Error::NoDeployment`] carrying the exact
+    /// [`WorkloadKey`] that failed to resolve.
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Result<Response>>> {
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         match request {
             Request::Multiply { n_bits, a, b } => {
-                let tx = self.multiply_tx.get(&n_bits).ok_or_else(|| {
-                    Error::BadParameter(format!("no multiply engine deployed for N={n_bits}"))
-                })?;
+                let front = self
+                    .multiply
+                    .get(&n_bits)
+                    .ok_or(Error::NoDeployment(WorkloadKey::Multiply { n_bits }))?;
+                // Count acceptance only after routing resolves, so the
+                // global counter stays the sum of the labeled per-workload
+                // counters even when submissions are rejected.
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                front.pool.counters().record_admission(1);
                 let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 // Stamp admission time here so the queue-wait metric also
                 // covers time spent in the submit->batcher channel.
                 let enqueued = Instant::now();
-                tx.send(WorkerMsg::Job { job: (a, b, reply_tx), ticket, enqueued })
+                front
+                    .tx
+                    .send(WorkerMsg::Job { job: (a, b, reply_tx), ticket, enqueued })
                     .map_err(|_| Error::Runtime("worker gone".into()))?;
             }
             Request::MatVec { n_bits, rows, x } => {
-                let service =
-                    self.matvec.get(&(n_bits, x.len() as u32)).ok_or_else(|| {
-                        Error::BadParameter(format!(
-                            "no matvec deployment for N={n_bits}, n={}",
-                            x.len()
-                        ))
-                    })?;
+                let key = WorkloadKey::MatVec { n_bits, n_elems: x.len() as u32 };
+                let pool =
+                    self.matvec.get(&(n_bits, x.len() as u32)).ok_or(Error::NoDeployment(key))?;
                 for (r, row) in rows.iter().enumerate() {
                     if row.len() != x.len() {
                         return Err(Error::BadParameter(format!(
@@ -285,38 +336,59 @@ impl Coordinator {
                 // Admission: draw a ticket and stamp the enqueue time the
                 // tile queue-wait metric measures from.
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
-                self.metrics.matvec_requests.fetch_add(1, Ordering::Relaxed);
-                self.metrics.matvec_rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                pool.counters().record_admission(rows.len() as u64);
                 if rows.is_empty() {
                     let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
                 // Row-wise tiling: ceil(m / shard_rows) tiles scattered
-                // over the shard pool, gathered by MatVecPending (one
-                // inner product per matrix row, as the products counter
-                // expects).
-                let m = rows.len();
-                let tiles = m / service.shard_rows + usize::from(m % service.shard_rows != 0);
-                let pending = Arc::new(MatVecPending::new(m, tiles));
-                let x = Arc::new(x);
-                let mut row_iter = rows.into_iter();
-                let mut start = 0usize;
-                while start < m {
-                    let take = (m - start).min(service.shard_rows);
-                    let tile_rows: Vec<Vec<u64>> = row_iter.by_ref().take(take).collect();
-                    let tile = MatVecTile {
-                        rows: tile_rows,
-                        start,
-                        x: Arc::clone(&x),
-                        pending: Arc::clone(&pending),
-                        reply: reply_tx.clone(),
-                        enqueued,
-                    };
-                    if !service.queue.push(tile) {
+                // over the shard pool, gathered by the ScatterGather
+                // completion (one inner product per matrix row).
+                for tile in pool.workload().plan(rows, x, reply_tx, enqueued) {
+                    if !pool.push(tile) {
                         return Err(Error::Runtime("matvec shard pool shut down".into()));
                     }
-                    start += take;
+                }
+            }
+            Request::MatMul { n_bits, a, b } => {
+                let key = WorkloadKey::MatMul { n_bits, k: b.len() as u32 };
+                let pool =
+                    self.matmul.get(&(n_bits, b.len() as u32)).ok_or(Error::NoDeployment(key))?;
+                let k = b.len();
+                for (r, row) in a.iter().enumerate() {
+                    if row.len() != k {
+                        return Err(Error::BadParameter(format!(
+                            "matmul A row {r} has {} elements, expected k={k}",
+                            row.len()
+                        )));
+                    }
+                }
+                let p = b.first().map_or(0, Vec::len);
+                for (t, row) in b.iter().enumerate() {
+                    if row.len() != p {
+                        return Err(Error::BadParameter(format!(
+                            "matmul B row {t} has {} elements, expected p={p}",
+                            row.len()
+                        )));
+                    }
+                }
+                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                pool.counters().record_admission((a.len() * p) as u64);
+                // Degenerate outputs complete at admission.
+                if a.is_empty() || p == 0 {
+                    let _ = reply_tx.send(Ok(Response::Matrix(vec![Vec::new(); a.len()])));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // 2-D tiling: row tiles x output-column panels scattered
+                // over the shard pool, gathered into the row-major output.
+                for tile in pool.workload().plan(a, b, p, reply_tx, enqueued) {
+                    if !pool.push(tile) {
+                        return Err(Error::Runtime("matmul shard pool shut down".into()));
+                    }
                 }
             }
         }
@@ -341,19 +413,35 @@ impl Coordinator {
         }
     }
 
-    /// Graceful shutdown: flush pending multiply batches through the shard
-    /// pools, drain queued matvec tiles, and join every worker. No
-    /// accepted request is dropped.
-    pub fn shutdown(mut self) {
-        for tx in self.multiply_tx.values() {
-            let _ = tx.send(WorkerMsg::Shutdown);
+    /// Convenience: synchronous matmul (`a` row-major `m x k`, `b`
+    /// row-major `k x p`; result row-major `m x p`).
+    pub fn matmul(&self, n_bits: u32, a: Vec<Vec<u64>>, b: Vec<Vec<u64>>) -> Result<Vec<Vec<u64>>> {
+        let rx = self.submit(Request::MatMul { n_bits, a, b })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::Matrix(c) => Ok(c),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
         }
-        self.multiply_tx.clear();
-        // Matvec tiles are queued directly (no batcher stage): closing the
-        // queue lets the shard workers drain what is already accepted and
-        // then exit.
-        for service in self.matvec.values() {
-            service.queue.close();
+    }
+
+    /// Graceful shutdown with the drain guarantee: every tile already
+    /// admitted to *any* workload queue is completed before the workers
+    /// are joined — no accepted request is ever dropped.
+    ///
+    /// Multiply widths get a `Shutdown` message so their batcher flushes
+    /// the pending partial batch into the pool before closing it; the
+    /// tiling workloads' tiles are queued at admission, so closing the
+    /// pool is enough. Closed pools drain what is queued, then their
+    /// workers exit ([`BatchQueue`] semantics).
+    pub fn shutdown(mut self) {
+        for front in self.multiply.values() {
+            let _ = front.tx.send(WorkerMsg::Shutdown);
+        }
+        self.multiply.clear();
+        for pool in self.matvec.values() {
+            pool.close();
+        }
+        for pool in self.matmul.values() {
+            pool.close();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -362,11 +450,12 @@ impl Coordinator {
 }
 
 /// Per-width batching stage: accumulates jobs until the crossbar is full
-/// or the deadline fires, then hands the whole batch to the shard pool.
+/// or the deadline fires, then hands the whole batch to the shard pool as
+/// one tile.
 fn batcher_loop(
     dep: MultiplyDeployment,
     rx: mpsc::Receiver<WorkerMsg>,
-    queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>>,
+    queue: Arc<BatchQueue<MultiplyTile>>,
 ) {
     let mut batcher: RowBatcher<MultiplyJob> = RowBatcher::new(dep.rows, dep.max_wait);
     loop {
@@ -389,66 +478,6 @@ fn batcher_loop(
             // Shards drain whatever is still queued, then exit.
             queue.close();
             return;
-        }
-    }
-}
-
-/// One shard worker: pops batches off the width's shared queue and runs
-/// them on its resident crossbar.
-fn shard_loop(
-    mut shard: ShardExecutor,
-    width: u32,
-    shard_idx: usize,
-    queue: Arc<BatchQueue<Vec<Pending<MultiplyJob>>>>,
-    metrics: Arc<Metrics>,
-) {
-    while let Some(batch) = queue.pop() {
-        let t0 = Instant::now();
-        let mut queue_wait = Duration::ZERO;
-        for pending in &batch {
-            queue_wait += t0.saturating_duration_since(pending.enqueued);
-        }
-        let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
-        let products = shard.execute(&pairs);
-        metrics.record_shard_batch(
-            width,
-            shard_idx,
-            pairs.len() as u64,
-            shard.cycles_per_batch(),
-            t0.elapsed(),
-            queue_wait,
-        );
-        for (pending, product) in batch.into_iter().zip(products) {
-            let _ = pending.item.2.send(Ok(Response::Product(product)));
-        }
-    }
-}
-
-/// One matvec shard worker: pops row tiles off the shape's shared queue,
-/// runs the pre-lowered chain on its resident crossbar, and completes the
-/// parent request's scatter/gather state — the worker that finishes the
-/// last tile sends the assembled response.
-fn matvec_shard_loop(
-    mut shard: MatVecShardExecutor,
-    shape: (u32, u32),
-    shard_idx: usize,
-    queue: Arc<BatchQueue<MatVecTile>>,
-    metrics: Arc<Metrics>,
-) {
-    while let Some(tile) = queue.pop() {
-        let t0 = Instant::now();
-        let queue_wait = t0.saturating_duration_since(tile.enqueued);
-        let out = shard.execute(&tile.rows, &tile.x);
-        metrics.record_matvec_tile(
-            shape,
-            shard_idx,
-            tile.rows.len() as u64,
-            shard.cycles(),
-            t0.elapsed(),
-            queue_wait,
-        );
-        if let Some(full) = tile.pending.complete(tile.start, &out) {
-            let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
         }
     }
 }
@@ -476,17 +505,33 @@ mod tests {
         MatVecDeployment { n_bits, n_elems, shard_rows, shards }
     }
 
+    fn mm_deployment(
+        n_bits: u32,
+        k: u32,
+        shard_rows: usize,
+        panel_cols: usize,
+        shards: usize,
+    ) -> MatMulDeployment {
+        MatMulDeployment { n_bits, k, shard_rows, panel_cols, shards }
+    }
+
     #[test]
     fn multiply_roundtrip() {
-        let coord = Coordinator::launch(&[deployment(16, 4, 1, 1)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(16, 4, 1, 1)], &[], &[]).unwrap();
         assert_eq!(coord.multiply(16, 1234, 567).unwrap(), 1234 * 567);
-        assert!(coord.multiply(8, 1, 1).is_err(), "undeployed width rejected");
+        assert!(
+            matches!(
+                coord.multiply(8, 1, 1),
+                Err(Error::NoDeployment(WorkloadKey::Multiply { n_bits: 8 }))
+            ),
+            "undeployed width rejected with its typed key"
+        );
         coord.shutdown();
     }
 
     #[test]
     fn batching_fills_rows() {
-        let coord = Coordinator::launch(&[deployment(8, 8, 50, 2)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 8, 50, 2)], &[], &[]).unwrap();
         let receivers: Vec<_> = (0..8u64)
             .map(|i| {
                 coord
@@ -508,7 +553,7 @@ mod tests {
 
     #[test]
     fn deadline_flush_partial_batch() {
-        let coord = Coordinator::launch(&[deployment(8, 1024, 5, 1)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 1024, 5, 1)], &[], &[]).unwrap();
         let p = coord.multiply(8, 3, 5).unwrap(); // waits for the deadline
         assert_eq!(p, 15);
         coord.shutdown();
@@ -516,14 +561,23 @@ mod tests {
 
     #[test]
     fn matvec_route() {
-        let coord = Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1)]).unwrap();
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1)], &[]).unwrap();
         let out = coord
             .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![7, 8, 9])
             .unwrap();
         assert_eq!(out, vec![7 + 16 + 27, 28 + 40 + 54]);
-        assert!(coord.matvec(8, vec![vec![1, 2]], vec![1, 2]).is_err(), "undeployed shape");
         assert!(
-            coord.matvec(8, vec![vec![1, 2]], vec![1, 2, 3]).is_err(),
+            matches!(
+                coord.matvec(8, vec![vec![1, 2]], vec![1, 2]),
+                Err(Error::NoDeployment(WorkloadKey::MatVec { n_bits: 8, n_elems: 2 }))
+            ),
+            "undeployed shape rejected with its typed key"
+        );
+        assert!(
+            matches!(
+                coord.matvec(8, vec![vec![1, 2]], vec![1, 2, 3]),
+                Err(Error::BadParameter(_))
+            ),
             "ragged row rejected at admission"
         );
         // Empty matrices complete immediately with an empty result.
@@ -531,11 +585,61 @@ mod tests {
         coord.shutdown();
     }
 
+    #[test]
+    fn matmul_route() {
+        let coord =
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 2, 4, 2, 2)]).unwrap();
+        let a = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
+        let b = vec![vec![7u64, 8, 9], vec![10, 11, 12]];
+        let c = coord.matmul(8, a, b).unwrap();
+        assert_eq!(
+            c,
+            vec![
+                vec![27, 30, 33],   // [1,2] . columns of B
+                vec![61, 68, 75],   // [3,4]
+                vec![95, 106, 117], // [5,6]
+            ]
+        );
+        assert!(
+            matches!(
+                coord.matmul(8, vec![vec![1, 2, 3]], vec![vec![1]; 3]),
+                Err(Error::NoDeployment(WorkloadKey::MatMul { n_bits: 8, k: 3 }))
+            ),
+            "undeployed inner dimension rejected with its typed key"
+        );
+        assert!(
+            matches!(
+                coord.matmul(8, vec![vec![1, 2, 3]], vec![vec![1], vec![2]]),
+                Err(Error::BadParameter(_))
+            ),
+            "A/B inner-dimension mismatch rejected at admission"
+        );
+        assert!(
+            matches!(
+                coord.matmul(8, vec![vec![1, 2]], vec![vec![1, 2], vec![3]]),
+                Err(Error::BadParameter(_))
+            ),
+            "ragged B rejected at admission"
+        );
+        // Degenerate outputs complete immediately.
+        assert_eq!(
+            coord.matmul(8, vec![], vec![vec![1, 2], vec![3, 4]]).unwrap(),
+            Vec::<Vec<u64>>::new()
+        );
+        assert_eq!(
+            coord
+                .matmul(8, vec![vec![1, 2]], vec![Vec::new(), Vec::new()])
+                .unwrap(),
+            vec![Vec::<u64>::new()]
+        );
+        coord.shutdown();
+    }
+
     /// A matrix taller than `shard_rows` is tiled across the pool and the
     /// gathered result preserves row order.
     #[test]
     fn matvec_tiles_across_shards() {
-        let coord = Coordinator::launch(&[], &[mv_deployment(8, 2, 4, 3)]).unwrap();
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 2, 4, 3)], &[]).unwrap();
         let m = 4usize * 4 + 3; // 5 tiles: 4 full + 1 partial
         let rows: Vec<Vec<u64>> =
             (0..m).map(|r| vec![r as u64 % 251, (r as u64 * 7) % 251]).collect();
@@ -549,10 +653,14 @@ mod tests {
                 "row {r}"
             );
         }
-        let metrics = coord.metrics();
-        assert_eq!(metrics.matvec_tiles.load(Ordering::Relaxed), 5);
-        assert_eq!(metrics.matvec_rows.load(Ordering::Relaxed), m as u64);
-        assert_eq!(metrics.matvec_queued_rows.load(Ordering::Relaxed), m as u64);
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatVec { n_bits: 8, n_elems: 2 })
+            .unwrap();
+        assert_eq!(wl.tiles.load(Ordering::Relaxed), 5);
+        assert_eq!(wl.admitted_units.load(Ordering::Relaxed), m as u64);
+        assert_eq!(wl.units.load(Ordering::Relaxed), m as u64);
+        assert_eq!(wl.queued_units.load(Ordering::Relaxed), m as u64);
         coord.shutdown();
     }
 
@@ -562,8 +670,12 @@ mod tests {
     /// one-product-per-pair accounting.
     #[test]
     fn products_counter_counts_inner_products() {
-        let coord =
-            Coordinator::launch(&[deployment(8, 4, 1, 1)], &[mv_deployment(8, 3, 8, 1)]).unwrap();
+        let coord = Coordinator::launch(
+            &[deployment(8, 4, 1, 1)],
+            &[mv_deployment(8, 3, 8, 1)],
+            &[],
+        )
+        .unwrap();
         coord
             .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![1, 1, 1])
             .unwrap();
@@ -578,45 +690,73 @@ mod tests {
         coord.shutdown();
     }
 
-    /// The dead latency plumbing is alive: every multiply's batcher+queue
-    /// wait lands in the queue-latency counters.
+    /// The latency plumbing is alive: every multiply's batcher+queue wait
+    /// lands in the queue-latency counters, globally and per workload.
     #[test]
     fn queue_wait_is_recorded() {
-        let coord = Coordinator::launch(&[deployment(8, 64, 2, 2)], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 64, 2, 2)], &[], &[]).unwrap();
         for i in 0..5u64 {
             coord.multiply(8, i + 1, 3).unwrap();
         }
         let m = coord.metrics();
-        assert_eq!(m.queued_products.load(Ordering::Relaxed), 5);
+        assert_eq!(m.queued_units.load(Ordering::Relaxed), 5);
         // Every request waited at least the 2ms deadline (it was alone in
         // its batch), so the recorded average cannot be zero.
         assert!(m.avg_queue_wait() > Duration::ZERO);
         // Per-shard occupancy is tracked for this width.
-        let shard_products: u64 =
-            m.shard_stats().iter().map(|((w, _), s)| if *w == 8 { s.products } else { 0 }).sum();
-        assert_eq!(shard_products, 5);
+        let wl = m.workload(WorkloadKey::Multiply { n_bits: 8 }).unwrap();
+        assert_eq!(wl.requests.load(Ordering::Relaxed), 5);
+        let shard_units: u64 = wl.shard_stats().iter().map(|(_, s)| s.units).sum();
+        assert_eq!(shard_units, 5);
+        assert!(wl.avg_queue_wait() > Duration::ZERO);
         coord.shutdown();
     }
 
     #[test]
     fn invalid_deployments_rejected() {
-        assert!(Coordinator::launch(&[deployment(8, 4, 1, 0)], &[]).is_err(), "0 shards");
+        assert!(Coordinator::launch(&[deployment(8, 4, 1, 0)], &[], &[]).is_err(), "0 shards");
         assert!(
-            Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[]).is_err(),
+            Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[], &[])
+                .is_err(),
             "duplicate width"
         );
         assert!(
-            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 0)]).is_err(),
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 0)], &[]).is_err(),
             "0 matvec shards"
         );
         assert!(
-            Coordinator::launch(&[], &[mv_deployment(8, 3, 0, 1)]).is_err(),
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 0, 1)], &[]).is_err(),
             "0 matvec shard rows"
         );
         assert!(
-            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1), mv_deployment(8, 3, 8, 1)])
-                .is_err(),
+            Coordinator::launch(
+                &[],
+                &[mv_deployment(8, 3, 4, 1), mv_deployment(8, 3, 8, 1)],
+                &[]
+            )
+            .is_err(),
             "duplicate matvec shape"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 2, 0)]).is_err(),
+            "0 matmul shards"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 0, 1)]).is_err(),
+            "0 matmul panel columns"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 0, 4, 2, 1)]).is_err(),
+            "0 matmul inner dimension"
+        );
+        assert!(
+            Coordinator::launch(
+                &[],
+                &[],
+                &[mm_deployment(8, 3, 4, 2, 1), mm_deployment(8, 3, 8, 4, 1)]
+            )
+            .is_err(),
+            "duplicate matmul shape"
         );
     }
 }

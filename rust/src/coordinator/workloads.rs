@@ -1,0 +1,332 @@
+//! The shard pool's tenants: one [`Workload`] implementation per served
+//! scenario.
+//!
+//! * [`MultiplyWorkload`] — fixed-point multiplication. Tiles are flushed
+//!   [`RowBatcher`](super::batcher::RowBatcher) batches (the planning
+//!   stage runs in the width's batcher thread, accumulating *across*
+//!   requests); every request in a batch gets its own reply.
+//! * [`MatVecWorkload`] — §VI matrix-vector multiplication. A request
+//!   plans synchronously into row tiles of up to `shard_rows` rows
+//!   sharing one [`ScatterGather`] completion.
+//! * [`MatMulWorkload`] — GEMM, the pool's first new tenant. A request
+//!   plans into a 2-D grid of row-tile x output-column-panel rectangles
+//!   (see [`plan_tiles`](crate::algorithms::matmul::plan_tiles)); each
+//!   tile stages its matrix rows once and runs the pre-lowered chain once
+//!   per panel column ([`ChainShard::execute_panel`]), scattering its
+//!   rectangle of the row-major output through the shared
+//!   [`ScatterGather`].
+
+use super::batcher::{Pending, ScatterGather};
+use super::engine::{ChainEngine, ChainShard, MultiplyEngine, ShardExecutor};
+use super::pool::{TileCost, Workload, WorkloadKey};
+use super::server::Response;
+use crate::algorithms::matmul::plan_tiles;
+use crate::Result;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// The reply channel every request carries.
+pub type ReplySender = mpsc::Sender<Result<Response>>;
+
+/// An operand pair plus its reply channel (the multiply batcher's queue
+/// payload).
+pub type MultiplyJob = (u64, u64, ReplySender);
+
+/// One multiply tile: a flushed batch of pending jobs.
+pub type MultiplyTile = Vec<Pending<MultiplyJob>>;
+
+/// The multiply tenant for one deployed operand width.
+pub struct MultiplyWorkload {
+    engine: MultiplyEngine,
+    n_bits: u32,
+}
+
+impl MultiplyWorkload {
+    /// Wrap a launch-time-built engine.
+    pub fn new(engine: MultiplyEngine, n_bits: u32) -> Self {
+        Self { engine, n_bits }
+    }
+}
+
+impl Workload for MultiplyWorkload {
+    type Tile = MultiplyTile;
+    type Shard = ShardExecutor;
+
+    fn key(&self) -> WorkloadKey {
+        WorkloadKey::Multiply { n_bits: self.n_bits }
+    }
+
+    fn shard(&self) -> ShardExecutor {
+        self.engine.shard()
+    }
+
+    fn execute(
+        &self,
+        shard: &mut ShardExecutor,
+        batch: MultiplyTile,
+        record: &mut dyn FnMut(TileCost),
+    ) {
+        let now = Instant::now();
+        let mut queue_wait = Duration::ZERO;
+        for pending in &batch {
+            queue_wait += now.saturating_duration_since(pending.enqueued);
+        }
+        let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
+        let products = shard.execute(&pairs);
+        let units = batch.len() as u64;
+        // Record before replying: counters must never lag the responses.
+        record(TileCost {
+            units,
+            cycles: shard.cycles_per_batch(),
+            queue_wait,
+        });
+        for (pending, product) in batch.into_iter().zip(products) {
+            let _ = pending.item.2.send(Ok(Response::Product(product)));
+        }
+    }
+}
+
+/// One matvec row tile: a contiguous row range of the request's matrix,
+/// the shared vector, and the request's completion state.
+pub struct MatVecTile {
+    rows: Arc<Vec<Vec<u64>>>,
+    /// Index of the tile's first row in the matrix (result placement).
+    start: usize,
+    /// Rows in this tile.
+    len: usize,
+    x: Arc<Vec<u64>>,
+    gather: Arc<ScatterGather<u64>>,
+    reply: ReplySender,
+    /// Admission timestamp of the parent request (queue-wait accounting).
+    enqueued: Instant,
+}
+
+/// The §VI matvec tenant for one deployed `(n_bits, n_elems)` shape.
+pub struct MatVecWorkload {
+    engine: ChainEngine,
+}
+
+impl MatVecWorkload {
+    /// Wrap a launch-time-built chain engine.
+    pub fn new(engine: ChainEngine) -> Self {
+        Self { engine }
+    }
+
+    /// The wrapped chain engine.
+    pub fn engine(&self) -> &ChainEngine {
+        &self.engine
+    }
+
+    /// Plan an admitted request into row tiles sharing one gather.
+    /// `rows` must be non-empty (empty requests are answered at
+    /// admission).
+    pub fn plan(
+        &self,
+        rows: Vec<Vec<u64>>,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<MatVecTile> {
+        let m = rows.len();
+        let shard_rows = self.engine.shard_rows();
+        let tiles = m / shard_rows + usize::from(m % shard_rows != 0);
+        let gather = Arc::new(ScatterGather::new(m, tiles));
+        let rows = Arc::new(rows);
+        let x = Arc::new(x);
+        let mut planned = Vec::with_capacity(tiles);
+        let mut start = 0usize;
+        while start < m {
+            let len = (m - start).min(shard_rows);
+            planned.push(MatVecTile {
+                rows: Arc::clone(&rows),
+                start,
+                len,
+                x: Arc::clone(&x),
+                gather: Arc::clone(&gather),
+                reply: reply.clone(),
+                enqueued,
+            });
+            start += len;
+        }
+        planned
+    }
+}
+
+impl Workload for MatVecWorkload {
+    type Tile = MatVecTile;
+    type Shard = ChainShard;
+
+    fn key(&self) -> WorkloadKey {
+        WorkloadKey::MatVec { n_bits: self.engine.n_bits(), n_elems: self.engine.n_elems() }
+    }
+
+    fn shard(&self) -> ChainShard {
+        self.engine.shard()
+    }
+
+    fn execute(
+        &self,
+        shard: &mut ChainShard,
+        tile: MatVecTile,
+        record: &mut dyn FnMut(TileCost),
+    ) {
+        let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
+        let slice = &tile.rows[tile.start..tile.start + tile.len];
+        let out = shard.execute(slice, &tile.x);
+        let units = tile.len as u64;
+        // Record before completing the gather: the reply this tile may
+        // trigger must never be observable ahead of its counters.
+        record(TileCost {
+            units,
+            cycles: shard.cycles(),
+            queue_wait: queue_wait * tile.len as u32,
+        });
+        if let Some(full) = tile.gather.complete(tile.start, &out) {
+            let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
+        }
+    }
+}
+
+/// One matmul tile: a row-tile x output-column-panel rectangle of the
+/// request's `m x p` output, plus the request's completion state.
+pub struct MatMulTile {
+    /// The full matrix A (shared; the tile executes `row0..row0 + rows`).
+    a: Arc<Vec<Vec<u64>>>,
+    row0: usize,
+    rows: usize,
+    /// The panel's output-column vectors of B (`xs[c][t] = B[t][col0+c]`),
+    /// extracted once at planning time and shared by every row tile of
+    /// this panel.
+    xs: Arc<Vec<Vec<u64>>>,
+    col0: usize,
+    /// Output columns of the whole request (row-major stride).
+    p: usize,
+    gather: Arc<ScatterGather<u64>>,
+    reply: ReplySender,
+    /// Admission timestamp of the parent request (queue-wait accounting).
+    enqueued: Instant,
+}
+
+/// The GEMM tenant for one deployed `(n_bits, k)` shape: computes
+/// `C = A * B` for an `m x k` matrix A and `k x p` matrix B under the
+/// same 2N-bit [`wrap`](crate::fixedpoint::wrap) inner-product semantics
+/// as matvec — column `j` of C is exactly the matvec `A * B[:, j]`.
+pub struct MatMulWorkload {
+    engine: ChainEngine,
+    panel_cols: usize,
+}
+
+impl MatMulWorkload {
+    /// Wrap a launch-time-built chain engine; tiles cover up to
+    /// `panel_cols` output columns each.
+    pub fn new(engine: ChainEngine, panel_cols: usize) -> Self {
+        assert!(panel_cols > 0, "a matmul tile needs at least one panel column");
+        Self { engine, panel_cols }
+    }
+
+    /// The wrapped chain engine.
+    pub fn engine(&self) -> &ChainEngine {
+        &self.engine
+    }
+
+    /// Output-column panel width per tile.
+    pub fn panel_cols(&self) -> usize {
+        self.panel_cols
+    }
+
+    /// Plan an admitted request into its 2-D tile grid sharing one
+    /// gather over the flattened row-major `m x p` output. `a` must be
+    /// non-empty and `p >= 1` (degenerate shapes are answered at
+    /// admission).
+    pub fn plan(
+        &self,
+        a: Vec<Vec<u64>>,
+        b: Vec<Vec<u64>>,
+        p: usize,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<MatMulTile> {
+        let m = a.len();
+        let rects = plan_tiles(m, p, self.engine.shard_rows(), self.panel_cols);
+        let gather = Arc::new(ScatterGather::new(m * p, rects.len()));
+        let a = Arc::new(a);
+        // Extract each panel's output-column vectors exactly once; every
+        // row tile of a panel shares them, keeping the column gathers off
+        // the shard workers' hot path. Panel `i` starts at column
+        // `i * panel_cols` (plan_tiles steps full panels until the tail),
+        // so a rect's panel is `rect.col0 / panel_cols`.
+        let panels: Vec<Arc<Vec<Vec<u64>>>> = (0..p)
+            .step_by(self.panel_cols)
+            .map(|col0| {
+                let cols = (p - col0).min(self.panel_cols);
+                let xs: Vec<Vec<u64>> = (col0..col0 + cols)
+                    .map(|col| b.iter().map(|b_row| b_row[col]).collect())
+                    .collect();
+                Arc::new(xs)
+            })
+            .collect();
+        rects
+            .into_iter()
+            .map(|rect| {
+                debug_assert!(
+                    rect.col0 % self.panel_cols == 0,
+                    "plan_tiles panel starts must stay panel_cols-aligned"
+                );
+                MatMulTile {
+                    a: Arc::clone(&a),
+                    row0: rect.row0,
+                    rows: rect.rows,
+                        xs: Arc::clone(&panels[rect.col0 / self.panel_cols]),
+                    col0: rect.col0,
+                    p,
+                    gather: Arc::clone(&gather),
+                    reply: reply.clone(),
+                    enqueued,
+                }
+            })
+            .collect()
+    }
+}
+
+impl Workload for MatMulWorkload {
+    type Tile = MatMulTile;
+    type Shard = ChainShard;
+
+    fn key(&self) -> WorkloadKey {
+        WorkloadKey::MatMul { n_bits: self.engine.n_bits(), k: self.engine.n_elems() }
+    }
+
+    fn shard(&self) -> ChainShard {
+        self.engine.shard()
+    }
+
+    fn execute(
+        &self,
+        shard: &mut ChainShard,
+        tile: MatMulTile,
+        record: &mut dyn FnMut(TileCost),
+    ) {
+        let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
+        let a_rows = &tile.a[tile.row0..tile.row0 + tile.rows];
+        let panel = shard.execute_panel(a_rows, &tile.xs);
+        let units = (tile.rows * tile.xs.len()) as u64;
+        // Record before completing the gather: the reply this tile may
+        // trigger must never be observable ahead of its counters.
+        record(TileCost {
+            units,
+            cycles: shard.cycles() * tile.xs.len() as u64,
+            queue_wait: queue_wait * units as u32,
+        });
+        let done = tile.gather.complete_with(|out| {
+            for (c, col) in panel.iter().enumerate() {
+                for (r, &v) in col.iter().enumerate() {
+                    out[(tile.row0 + r) * tile.p + tile.col0 + c] = v;
+                }
+            }
+        });
+        if let Some(flat) = done {
+            let matrix: Vec<Vec<u64>> = flat.chunks(tile.p).map(<[u64]>::to_vec).collect();
+            let _ = tile.reply.send(Ok(Response::Matrix(matrix)));
+        }
+    }
+}

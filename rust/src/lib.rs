@@ -19,8 +19,10 @@
 //!   partition broadcast/shift (§III), the novel full adder (§IV-B1),
 //!   MultPIM / MultPIM-Area (Algorithm 1), Haj-Ali et al. and RIME
 //!   multipliers, ripple adders, and the fused matrix-vector engine (§VI).
-//! * [`coordinator`] — the L3 serving layer: request router, row batcher,
-//!   multiplication pipeline, matvec engine and metrics.
+//! * [`coordinator`] — the L3 serving layer: a generic workload shard
+//!   pool (one pool/queue/gather/metrics core) serving multiply, matvec,
+//!   and matmul tenants, plus the request router, row batcher,
+//!   multiplication pipeline model, and per-workload labeled metrics.
 //! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
 //!   (built once from `python/compile`) and is used as the golden model on
 //!   the verification path.
@@ -62,6 +64,10 @@ pub enum Error {
     },
     /// An algorithm was instantiated with unsupported parameters.
     BadParameter(String),
+    /// A request routed to a workload deployment that was never launched
+    /// (unknown multiply width, matvec shape, or matmul shape). Carries
+    /// the exact [`coordinator::WorkloadKey`] that failed to resolve.
+    NoDeployment(coordinator::WorkloadKey),
     /// Runtime (golden-model executor) failure.
     Runtime(String),
     /// Golden-model mismatch during verification.
@@ -80,6 +86,9 @@ impl std::fmt::Display for Error {
                 write!(f, "column {col} out of bounds (crossbar has {cols} columns)")
             }
             Error::BadParameter(msg) => write!(f, "bad parameter: {msg}"),
+            Error::NoDeployment(key) => {
+                write!(f, "no deployment launched for workload {key}")
+            }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::VerificationFailed(msg) => write!(f, "verification mismatch: {msg}"),
             Error::Io(e) => write!(f, "{e}"),

@@ -3,17 +3,21 @@
 //! ```text
 //! multpim multiply --n 32 --a 123456 --b 654321 [--area]
 //! multpim matvec   --n 32 --elems 8 --rows 16 [--seed 1]
+//! multpim matmul   --n 16 --k 8 --m 32 --p 16 [--seed 1]
+//!                                     # GEMM through the served shard pool
 //! multpim report   [table1|table2|table3|fig3|fa|headline|all]
 //! multpim verify   [--rows 64]        # triple golden agreement via PJRT
 //! multpim serve    [--requests 4096] [--shards 4] [--mv-requests 8] [--mv-rows 256]
-//!                                     # multiply + matvec shard-pool demo with metrics
+//!                  [--mm-requests 4] [--mm-rows 64]
+//!                                     # multiply + matvec + matmul shard-pool
+//!                                     # demo with per-workload metrics
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
 //! ```
 
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::multpim_area::MultPimArea;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::server::{MatVecDeployment, MultiplyDeployment};
+use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
 use multpim::coordinator::{Coordinator, EngineConfig, Request, Response};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::util::SplitMix64;
@@ -72,7 +76,7 @@ fn run(args: &[String]) -> Result<()> {
             let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
             // The serving hot path: chain validated + lowered once, then
             // executed on a resident crossbar shard.
-            let engine = multpim::coordinator::MatVecEngine::new(n, elems, m.max(1))?;
+            let engine = multpim::coordinator::ChainEngine::new(n, elems, m.max(1))?;
             let out = engine.shard().execute(&rows, &x);
             println!(
                 "matvec: {m} rows x {elems} elems, N={n}: {} PIM cycles (all rows parallel)",
@@ -89,6 +93,51 @@ fn run(args: &[String]) -> Result<()> {
                 );
             }
             println!("  ... all {m} rows verified against fixedpoint reference");
+            Ok(())
+        }
+        Some("matmul") => {
+            let n = opt_u64(args, "--n", 16) as u32;
+            let k = opt_u64(args, "--k", 8) as u32;
+            let m = opt_u64(args, "--m", 32) as usize;
+            let p = opt_u64(args, "--p", 16) as usize;
+            let seed = opt_u64(args, "--seed", 1);
+            let mut rng = SplitMix64::new(seed);
+            let a: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..k).map(|_| rng.bits(n)).collect()).collect();
+            let b: Vec<Vec<u64>> =
+                (0..k).map(|_| (0..p).map(|_| rng.bits(n)).collect()).collect();
+            // The full serving surface: a GEMM deployment on the generic
+            // shard pool (2-D row-tile x column-panel scatter/gather).
+            let coord = Coordinator::launch(
+                &[],
+                &[],
+                &[MatMulDeployment {
+                    n_bits: n,
+                    k,
+                    shard_rows: m.clamp(1, 64),
+                    panel_cols: p.clamp(1, 8),
+                    shards: 2,
+                }],
+            )?;
+            let c = coord.matmul(n, a.clone(), b.clone())?;
+            println!("matmul: ({m}x{k}) * ({k}x{p}), N={n}: served over the matmul shard pool");
+            for (r, row) in c.iter().take(2).enumerate() {
+                let shown: Vec<u64> = row.iter().take(4).copied().collect();
+                println!("  C[{r}][..{}] = {shown:?}", shown.len());
+            }
+            for j in 0..p {
+                let col: Vec<u64> = b.iter().map(|b_row| b_row[j]).collect();
+                for (r, row) in c.iter().enumerate() {
+                    assert_eq!(
+                        row[j],
+                        multpim::fixedpoint::inner_product_mod(n, &a[r], &col),
+                        "self-check C[{r}][{j}]"
+                    );
+                }
+            }
+            println!("  ... all {m}x{p} elements verified against fixedpoint reference");
+            println!("metrics: {}", coord.metrics().snapshot());
+            coord.shutdown();
             Ok(())
         }
         Some("report") => {
@@ -143,6 +192,8 @@ fn run(args: &[String]) -> Result<()> {
             let shards = opt_u64(args, "--shards", 4) as usize;
             let mv_requests = opt_u64(args, "--mv-requests", 8);
             let mv_rows = opt_u64(args, "--mv-rows", 256) as usize;
+            let mm_requests = opt_u64(args, "--mm-requests", 4);
+            let mm_rows = opt_u64(args, "--mm-rows", 64) as usize;
             let coord = Coordinator::launch(
                 &[MultiplyDeployment {
                     n_bits: 32,
@@ -155,6 +206,13 @@ fn run(args: &[String]) -> Result<()> {
                     n_bits: 32,
                     n_elems: 8,
                     shard_rows: 64,
+                    shards: shards.max(1),
+                }],
+                &[MatMulDeployment {
+                    n_bits: 32,
+                    k: 8,
+                    shard_rows: 64,
+                    panel_cols: 4,
                     shards: shards.max(1),
                 }],
             )?;
@@ -182,6 +240,34 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 mv_rxs.push(coord.submit(Request::MatVec { n_bits: 32, rows, x })?);
             }
+            // GEMM traffic rides the same generic pool: each request's
+            // output scatters 2-D (row tiles x column panels).
+            let mm_p = 8usize;
+            let mut mm_rxs = Vec::with_capacity(mm_requests as usize);
+            let mut mm_expected = Vec::with_capacity(mm_requests as usize);
+            for _ in 0..mm_requests {
+                let a: Vec<Vec<u64>> = (0..mm_rows)
+                    .map(|_| (0..8).map(|_| rng.bits(32)).collect())
+                    .collect();
+                let b: Vec<Vec<u64>> = (0..8)
+                    .map(|_| (0..mm_p).map(|_| rng.bits(32)).collect())
+                    .collect();
+                let cols: Vec<Vec<u64>> = (0..mm_p)
+                    .map(|j| b.iter().map(|b_row| b_row[j]).collect())
+                    .collect();
+                mm_expected.push(
+                    a.iter()
+                        .map(|row| {
+                            cols.iter()
+                                .map(|col| {
+                                    multpim::fixedpoint::inner_product_mod(32, row, col)
+                                })
+                                .collect::<Vec<u64>>()
+                        })
+                        .collect::<Vec<Vec<u64>>>(),
+                );
+                mm_rxs.push(coord.submit(Request::MatMul { n_bits: 32, a, b })?);
+            }
             for (rx, want) in rxs.into_iter().zip(expected) {
                 match rx
                     .recv()
@@ -200,9 +286,19 @@ fn run(args: &[String]) -> Result<()> {
                     other => panic!("unexpected {other:?}"),
                 }
             }
+            for (rx, want) in mm_rxs.into_iter().zip(mm_expected) {
+                match rx
+                    .recv()
+                    .map_err(|_| multpim::Error::Runtime("worker dropped".into()))??
+                {
+                    Response::Matrix(c) => assert_eq!(c, want),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
             println!(
                 "served {requests} multiply requests + {mv_requests} matvec requests \
-                 ({mv_rows} rows x 8 elems each)"
+                 ({mv_rows} rows x 8 elems each) + {mm_requests} matmul requests \
+                 ({mm_rows}x8 * 8x{mm_p} each)"
             );
             println!("metrics: {}", coord.metrics().snapshot());
             coord.shutdown();
@@ -224,7 +320,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: multpim <multiply|matvec|report|verify|serve|trace> [options]\n\
+                "usage: multpim <multiply|matvec|matmul|report|verify|serve|trace> [options]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())

@@ -155,6 +155,12 @@ impl CompiledProgram {
 /// the final ripple drain). Lowered once at deployment launch — the shard
 /// hot loop runs the whole chain with zero per-request validation or
 /// lowering.
+///
+/// A lowered chain is **rerunnable** over the same crossbar without
+/// restaging its matrix operand columns: the chain only reads them, and
+/// its first program re-initializes every state cell. The GEMM workload
+/// exploits this — one matmul tile stages its rows of A once and executes
+/// the chain once per output-column vector of its panel.
 #[derive(Debug, Clone)]
 pub struct CompiledPipeline {
     programs: Vec<CompiledProgram>,
@@ -297,6 +303,45 @@ mod tests {
                 crate::fixedpoint::inner_product_mod(4, &mat[r], &x),
                 "row {r}"
             );
+        }
+    }
+
+    /// Rerunning a lowered chain after restaging only the *vector*
+    /// operand agrees with a fresh execution — the invariant the GEMM
+    /// panel path relies on (the chain never writes the operand columns,
+    /// and its first program re-initializes every state cell).
+    #[test]
+    fn pipeline_rerun_needs_only_vector_restage() {
+        use crate::algorithms::matvec::MultPimMatVec;
+        let engine = MultPimMatVec::new(4, 3);
+        let rows = 10;
+        let mut rng = SplitMix64::new(0x9A11);
+        let mat: Vec<Vec<u64>> =
+            (0..rows).map(|_| (0..3).map(|_| rng.bits(4)).collect()).collect();
+        let mut sim = Simulator::new(rows, engine.width() as usize);
+        // Stage the matrix exactly once.
+        for (r, row) in mat.iter().enumerate() {
+            for (t, &v) in row.iter().enumerate() {
+                sim.write_bits(r, engine.a_col(t), 4, v);
+            }
+        }
+        let pipeline =
+            CompiledPipeline::lower(engine.programs(), sim.crossbar().words_per_col());
+        for _ in 0..4 {
+            let x: Vec<u64> = (0..3).map(|_| rng.bits(4)).collect();
+            for (t, &v) in x.iter().enumerate() {
+                for r in 0..rows {
+                    sim.write_bits(r, engine.x_col(t), 4, v);
+                }
+            }
+            pipeline.execute(&mut sim);
+            for (r, row) in mat.iter().enumerate() {
+                assert_eq!(
+                    engine.read_row(&sim, r),
+                    crate::fixedpoint::inner_product_mod(4, row, &x),
+                    "row {r} after rerun"
+                );
+            }
         }
     }
 

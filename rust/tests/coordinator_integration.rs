@@ -1,8 +1,10 @@
 //! Coordinator integration: concurrent clients, batching behaviour,
 //! routing errors, metrics accounting, and graceful shutdown.
 
-use multpim::coordinator::server::{MatVecDeployment, MultiplyDeployment};
-use multpim::coordinator::{Coordinator, EngineConfig, PipelineModel, Request, Response};
+use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
+use multpim::coordinator::{
+    Coordinator, EngineConfig, PipelineModel, Request, Response, WorkloadKey,
+};
 use multpim::util::SplitMix64;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -21,7 +23,7 @@ fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> Multiply
 #[test]
 fn concurrent_clients_share_batches() {
     let coord = Arc::new(
-        Coordinator::launch(&[deployment(32, 64, 5, 2)], &[]).unwrap(),
+        Coordinator::launch(&[deployment(32, 64, 5, 2)], &[], &[]).unwrap(),
     );
     let mut handles = Vec::new();
     for t in 0..8u64 {
@@ -51,6 +53,7 @@ fn mixed_width_routing() {
     let coord = Coordinator::launch(
         &[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)],
         &[MatVecDeployment { n_bits: 16, n_elems: 4, shard_rows: 8, shards: 2 }],
+        &[MatMulDeployment { n_bits: 16, k: 2, shard_rows: 8, panel_cols: 2, shards: 2 }],
     )
     .unwrap();
     assert_eq!(coord.multiply(8, 200, 200).unwrap(), 40_000);
@@ -60,12 +63,16 @@ fn mixed_width_routing() {
         .matvec(16, vec![vec![1, 2, 3, 4]], vec![5, 6, 7, 8])
         .unwrap();
     assert_eq!(out, vec![5 + 12 + 21 + 32]);
+    let c = coord
+        .matmul(16, vec![vec![1, 2], vec![3, 4]], vec![vec![5, 6], vec![7, 8]])
+        .unwrap();
+    assert_eq!(c, vec![vec![19, 22], vec![43, 50]]);
     coord.shutdown();
 }
 
 #[test]
 fn submit_api_is_asynchronous() {
-    let coord = Coordinator::launch(&[deployment(8, 256, 20, 2)], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(8, 256, 20, 2)], &[], &[]).unwrap();
     // Fire 100 requests without awaiting; they should coalesce into one or
     // two deadline batches.
     let rxs: Vec<_> = (1..=100u64)
@@ -97,7 +104,7 @@ fn pipeline_model_consistency_with_engine() {
 
 #[test]
 fn metrics_cycle_accounting() {
-    let coord = Coordinator::launch(&[deployment(16, 4, 1, 2)], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(16, 4, 1, 2)], &[], &[]).unwrap();
     for i in 0..4u64 {
         coord.multiply(16, i + 1, 7).unwrap();
     }
@@ -114,7 +121,7 @@ fn metrics_cycle_accounting() {
 #[test]
 fn shutdown_flushes_pending_batch() {
     // 10s deadline + 1024-row capacity: nothing would flush on its own.
-    let coord = Coordinator::launch(&[deployment(16, 1024, 10_000, 2)], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(16, 1024, 10_000, 2)], &[], &[]).unwrap();
     let rxs: Vec<_> = (0..37u64)
         .map(|i| {
             coord
@@ -136,7 +143,7 @@ fn shutdown_flushes_pending_batch() {
 /// every request's queue wait is accounted.
 #[test]
 fn shard_pool_splits_work() {
-    let coord = Arc::new(Coordinator::launch(&[deployment(8, 8, 2, 4)], &[]).unwrap());
+    let coord = Arc::new(Coordinator::launch(&[deployment(8, 8, 2, 4)], &[], &[]).unwrap());
     let mut handles = Vec::new();
     for t in 0..4u64 {
         let coord = Arc::clone(&coord);
@@ -152,9 +159,11 @@ fn shard_pool_splits_work() {
         h.join().unwrap();
     }
     let m = coord.metrics();
-    let shard_products: u64 = m.shard_stats().iter().map(|(_, s)| s.products).sum();
-    assert_eq!(shard_products, 4 * 64, "shard counters add up to the total");
+    let wl = m.workload(WorkloadKey::Multiply { n_bits: 8 }).unwrap();
+    let shard_units: u64 = wl.shard_stats().iter().map(|(_, s)| s.units).sum();
+    assert_eq!(shard_units, 4 * 64, "shard counters add up to the total");
     assert_eq!(m.products.load(Ordering::Relaxed), 4 * 64);
-    assert_eq!(m.queued_products.load(Ordering::Relaxed), 4 * 64);
+    assert_eq!(m.queued_units.load(Ordering::Relaxed), 4 * 64);
+    assert_eq!(wl.requests.load(Ordering::Relaxed), 4 * 64);
     Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
 }

@@ -1,12 +1,12 @@
 //! §VI matvec through the serving layer: the shard-pool path (launch-time
 //! chain validation + `CompiledPipeline` lowering + resident crossbars +
-//! row tiling + `MatVecPending` gather) must agree with the direct
+//! row tiling + `ScatterGather` completion) must agree with the direct
 //! interpreted engine and with the golden `fixedpoint` semantics at every
 //! tile boundary — and its metrics must account for exactly the submitted
 //! work under concurrent load.
 
 use multpim::coordinator::server::MatVecDeployment;
-use multpim::coordinator::{Coordinator, MatVecEngine};
+use multpim::coordinator::{ChainEngine, Coordinator, WorkloadKey};
 use multpim::fixedpoint::inner_product_mod;
 use multpim::util::SplitMix64;
 use std::sync::atomic::Ordering;
@@ -27,7 +27,7 @@ fn random_matrix(rng: &mut SplitMix64, m: usize) -> (Vec<Vec<u64>>, Vec<u64>) {
 /// Tile-boundary equivalence: matrices of 1, shard_rows-1, shard_rows,
 /// shard_rows+1, and 4*shard_rows rows — covering the single-partial-tile,
 /// just-under, exactly-full, one-row-spill, and multi-tile shapes — all
-/// agree with the direct `MatVecEngine::compute` path and the golden
+/// agree with the direct `ChainEngine::compute` path and the golden
 /// semantics.
 #[test]
 fn served_matches_direct_at_tile_boundaries() {
@@ -39,9 +39,10 @@ fn served_matches_direct_at_tile_boundaries() {
             shard_rows: SHARD_ROWS,
             shards: 3,
         }],
+        &[],
     )
     .unwrap();
-    let direct = MatVecEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
+    let direct = ChainEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
     let mut rng = SplitMix64::new(0x7113_B0D5);
     for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 4 * SHARD_ROWS] {
         let (rows, x) = random_matrix(&mut rng, m);
@@ -69,6 +70,7 @@ fn served_wraps_mod_2n_like_fixedpoint() {
     let coord = Coordinator::launch(
         &[],
         &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2 }],
+        &[],
     )
     .unwrap();
     let max = (1u64 << n_bits) - 1;
@@ -101,6 +103,7 @@ fn concurrent_matvec_metrics_account_exactly() {
                 shard_rows: SHARD_ROWS,
                 shards: 4,
             }],
+            &[],
         )
         .unwrap(),
     );
@@ -126,30 +129,34 @@ fn concurrent_matvec_metrics_account_exactly() {
     let total_rows = total_requests * ROWS_PER_REQUEST as u64;
     let tiles_per_request = 3u64; // 2 full tiles + 1 partial (3 rows)
     let m = coord.metrics();
+    let wl = m
+        .workload(WorkloadKey::MatVec { n_bits: N_BITS, n_elems: N_ELEMS })
+        .expect("launched shape is registered");
 
     // Admission counters: exactly the submitted work.
-    assert_eq!(m.matvec_requests.load(Ordering::Relaxed), total_requests);
-    assert_eq!(m.matvec_rows.load(Ordering::Relaxed), total_rows);
+    assert_eq!(wl.requests.load(Ordering::Relaxed), total_requests);
+    assert_eq!(wl.admitted_units.load(Ordering::Relaxed), total_rows);
     // Execution counters: every row served exactly once, every tile
     // executed exactly once.
-    assert_eq!(m.matvec_tiles.load(Ordering::Relaxed), total_requests * tiles_per_request);
-    assert_eq!(m.matvec_queued_rows.load(Ordering::Relaxed), total_rows);
+    assert_eq!(wl.tiles.load(Ordering::Relaxed), total_requests * tiles_per_request);
+    assert_eq!(wl.units.load(Ordering::Relaxed), total_rows);
+    assert_eq!(wl.queued_units.load(Ordering::Relaxed), total_rows);
     assert_eq!(m.products.load(Ordering::Relaxed), total_rows);
     assert_eq!(m.batches.load(Ordering::Relaxed), total_requests * tiles_per_request);
     // Queue wait was measured (tiles inevitably waited a nonzero time).
-    assert!(m.avg_matvec_queue_wait() > std::time::Duration::ZERO);
+    assert!(wl.avg_queue_wait() > std::time::Duration::ZERO);
     // Per-shard occupancy splits the same totals — no double count.
-    let stats = m.matvec_shard_stats();
-    let shard_rows_total: u64 = stats.iter().map(|(_, s)| s.products).sum();
-    let shard_tiles_total: u64 = stats.iter().map(|(_, s)| s.batches).sum();
+    let stats = wl.shard_stats();
+    let shard_rows_total: u64 = stats.iter().map(|(_, s)| s.units).sum();
+    let shard_tiles_total: u64 = stats.iter().map(|(_, s)| s.tiles).sum();
     assert_eq!(shard_rows_total, total_rows, "shard row counters add up");
     assert_eq!(shard_tiles_total, total_requests * tiles_per_request);
-    for ((w, n, _), _) in &stats {
-        assert_eq!((*w, *n), (N_BITS, N_ELEMS), "only the deployed shape appears");
-    }
+    // Only the deployed shape registered a labeled entry.
+    let registered: Vec<WorkloadKey> = m.workloads().into_iter().map(|(k, _)| k).collect();
+    assert_eq!(registered, vec![WorkloadKey::MatVec { n_bits: N_BITS, n_elems: N_ELEMS }]);
     // Simulated cycle accounting: whole multiples of one chain execution.
-    let engine = MatVecEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
-    let cycles = m.sim_cycles.load(Ordering::Relaxed);
+    let engine = ChainEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
+    let cycles = wl.sim_cycles.load(Ordering::Relaxed);
     assert_eq!(cycles, engine.cycles() * total_requests * tiles_per_request);
 
     Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);

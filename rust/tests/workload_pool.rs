@@ -1,0 +1,369 @@
+//! The generic workload shard pool end-to-end: GEMM equivalence at every
+//! tile boundary, typed rejection of unknown deployments, the
+//! shutdown-drain guarantee across all workload queues, and mixed
+//! concurrent traffic with exact per-workload metrics accounting.
+
+use multpim::algorithms::matmul::MultPimMatMul;
+use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
+use multpim::coordinator::{Coordinator, EngineConfig, Request, Response, WorkloadKey};
+use multpim::fixedpoint::{inner_product_mod, widening_mul, wrap};
+use multpim::util::SplitMix64;
+use multpim::Error;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_BITS: u32 = 8;
+const K: u32 = 3;
+const SHARD_ROWS: usize = 8;
+const PANEL_COLS: usize = 4;
+
+fn mm_deployment(shards: usize) -> MatMulDeployment {
+    MatMulDeployment { n_bits: N_BITS, k: K, shard_rows: SHARD_ROWS, panel_cols: PANEL_COLS, shards }
+}
+
+fn random_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>> {
+    (0..rows).map(|_| (0..cols).map(|_| rng.bits(N_BITS)).collect()).collect()
+}
+
+/// C[r][j] by direct widening-mul composition under the 2N-bit wrap.
+fn reference(a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<Vec<u64>> {
+    a.iter()
+        .map(|row| {
+            (0..b[0].len())
+                .map(|j| {
+                    let acc: u128 = row
+                        .iter()
+                        .zip(b)
+                        .map(|(&av, b_row)| widening_mul(N_BITS, av, b_row[j]) as u128)
+                        .sum();
+                    wrap(2 * N_BITS, acc)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Served matmul equals row-wise matvec composition (the widening-mul /
+/// wrap reference) at every row-tile boundary (1, shard_rows -/+ 1,
+/// shard_rows, 4 * shard_rows) crossed with every column-panel boundary.
+#[test]
+fn served_matmul_matches_composition_at_tile_boundaries() {
+    let coord = Coordinator::launch(&[], &[], &[mm_deployment(3)]).unwrap();
+    let direct = MultPimMatMul::new(N_BITS, K);
+    let mut rng = SplitMix64::new(0x6D61_746D);
+    for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 4 * SHARD_ROWS] {
+        for p in [1usize, PANEL_COLS - 1, PANEL_COLS, PANEL_COLS + 1, 2 * PANEL_COLS] {
+            let a = random_matrix(&mut rng, m, K as usize);
+            let b = random_matrix(&mut rng, K as usize, p);
+            let served = coord.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+            assert_eq!(served, reference(&a, &b), "m={m} p={p}: served vs composition");
+            assert_eq!(
+                served,
+                direct.compute(&a, &b).unwrap(),
+                "m={m} p={p}: served vs direct engine"
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// The 2N-bit carry-save wrap: all-max operands overflow the accumulator
+/// into exactly the `fixedpoint::wrap` semantics through the served path.
+#[test]
+fn served_matmul_wraps_mod_2n() {
+    let n_bits = 8u32;
+    let k = 8u32; // 8 * 255^2 > 2^16: the accumulator must wrap
+    let coord = Coordinator::launch(
+        &[],
+        &[],
+        &[MatMulDeployment { n_bits, k, shard_rows: 4, panel_cols: 2, shards: 2 }],
+    )
+    .unwrap();
+    let max = (1u64 << n_bits) - 1;
+    let (m, p) = (5usize, 3usize); // partial tiles in both dimensions
+    let a = vec![vec![max; k as usize]; m];
+    let b = vec![vec![max; p]; k as usize];
+    let served = coord.matmul(n_bits, a, b).unwrap();
+    let expected = wrap(2 * n_bits, 8u128 * (max as u128) * (max as u128));
+    for (r, row) in served.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            assert_eq!(v, expected, "C[{r}][{j}]");
+        }
+    }
+    coord.shutdown();
+}
+
+/// Unknown deployments are rejected with the typed `Error::NoDeployment`
+/// carrying the exact workload key — for an unlaunched multiply width, an
+/// unlaunched matvec shape, and an unlaunched matmul shape alike.
+#[test]
+fn unknown_deployments_rejected_with_typed_error() {
+    let coord = Coordinator::launch(
+        &[MultiplyDeployment {
+            n_bits: 8,
+            rows: 4,
+            max_wait: Duration::from_millis(1),
+            config: EngineConfig::MultPim,
+            shards: 1,
+        }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, shards: 1 }],
+        &[mm_deployment(1)],
+    )
+    .unwrap();
+
+    // Unlaunched multiply width (16 is not deployed).
+    match coord.multiply(16, 2, 3) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(key, WorkloadKey::Multiply { n_bits: 16 });
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // Unlaunched matvec shape: right width, wrong inner dimension.
+    match coord.matvec(8, vec![vec![1, 2, 3, 4]], vec![1, 2, 3, 4]) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(key, WorkloadKey::MatVec { n_bits: 8, n_elems: 4 });
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // Unlaunched matvec width: right inner dimension, wrong width.
+    match coord.matvec(16, vec![vec![1, 2, 3]], vec![1, 2, 3]) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(key, WorkloadKey::MatVec { n_bits: 16, n_elems: 3 });
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // Unlaunched matmul inner dimension.
+    match coord.matmul(8, vec![vec![1, 2]], vec![vec![1], vec![2]]) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(key, WorkloadKey::MatMul { n_bits: 8, k: 2 });
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // The typed error carries a readable label.
+    let err = coord.multiply(16, 2, 3).unwrap_err();
+    assert!(err.to_string().contains("multiply N=16"), "{err}");
+
+    // Deployed shapes still serve.
+    assert_eq!(coord.multiply(8, 7, 9).unwrap(), 63);
+    assert_eq!(coord.matvec(8, vec![vec![1, 2, 3]], vec![4, 5, 6]).unwrap(), vec![32]);
+    // Rejected submissions are not counted as accepted requests: the
+    // global counter equals the sum of the labeled per-workload counters.
+    let m = coord.metrics();
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    let labeled: u64 = m
+        .workloads()
+        .iter()
+        .map(|(_, wl)| wl.requests.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(labeled, 2);
+    coord.shutdown();
+}
+
+/// Shutdown-drain audit: a shutdown issued while matvec AND matmul tiles
+/// (and a pending multiply partial batch) are still outstanding completes
+/// every accepted request before joining — nothing is dropped.
+#[test]
+fn shutdown_drains_pending_tiles_for_every_workload() {
+    // Single-shard pools with multi-tile requests so work is guaranteed
+    // to still be queued when shutdown lands; a 10s multiply deadline and
+    // 1024-row capacity so the partial batch only flushes via shutdown.
+    let coord = Coordinator::launch(
+        &[MultiplyDeployment {
+            n_bits: 8,
+            rows: 1024,
+            max_wait: Duration::from_secs(10),
+            config: EngineConfig::MultPim,
+            shards: 1,
+        }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, shards: 1 }],
+        &[MatMulDeployment { n_bits: 8, k: 3, shard_rows: 2, panel_cols: 2, shards: 1 }],
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(0xD7A1_4E55);
+
+    let mul_inputs: Vec<(u64, u64)> = (0..7).map(|_| (rng.bits(8), rng.bits(8))).collect();
+    let mul_rxs: Vec<_> = mul_inputs
+        .iter()
+        .map(|&(a, b)| coord.submit(Request::Multiply { n_bits: 8, a, b }).unwrap())
+        .collect();
+
+    let mut mv_cases = Vec::new();
+    let mut mv_rxs = Vec::new();
+    for _ in 0..4 {
+        let rows = random_matrix(&mut rng, 9, 3); // 5 tiles each
+        let x: Vec<u64> = (0..3).map(|_| rng.bits(8)).collect();
+        mv_rxs.push(
+            coord
+                .submit(Request::MatVec { n_bits: 8, rows: rows.clone(), x: x.clone() })
+                .unwrap(),
+        );
+        mv_cases.push((rows, x));
+    }
+
+    let mut mm_cases = Vec::new();
+    let mut mm_rxs = Vec::new();
+    for _ in 0..4 {
+        let a = random_matrix(&mut rng, 5, 3); // 3 row tiles x 3 panels = 9 tiles
+        let b = random_matrix(&mut rng, 3, 5);
+        mm_rxs.push(
+            coord
+                .submit(Request::MatMul { n_bits: 8, a: a.clone(), b: b.clone() })
+                .unwrap(),
+        );
+        mm_cases.push((a, b));
+    }
+
+    // Shutdown joins every worker; the drain guarantee means every reply
+    // below must already be in its channel.
+    coord.shutdown();
+
+    for (rx, (a, b)) in mul_rxs.into_iter().zip(mul_inputs) {
+        match rx.recv().expect("multiply reply survives shutdown").unwrap() {
+            Response::Product(p) => assert_eq!(p, a * b),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    for (rx, (rows, x)) in mv_rxs.into_iter().zip(mv_cases) {
+        match rx.recv().expect("matvec reply survives shutdown").unwrap() {
+            Response::InnerProducts(out) => {
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(out[r], inner_product_mod(8, row, &x), "row {r}");
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    for (rx, (a, b)) in mm_rxs.into_iter().zip(mm_cases) {
+        match rx.recv().expect("matmul reply survives shutdown").unwrap() {
+            Response::Matrix(c) => assert_eq!(c, reference(&a, &b)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+/// Mixed traffic: one coordinator, >= 4 client threads driving multiply,
+/// matvec, and matmul concurrently. Every result checks out against the
+/// widening-mul composition, and afterwards the per-workload labeled
+/// counters sum consistently with the globals — no lost or double-counted
+/// work anywhere.
+#[test]
+fn mixed_traffic_metrics_account_exactly() {
+    const MUL_THREADS: u64 = 2;
+    const MUL_PER_THREAD: usize = 32;
+    const MV_THREADS: u64 = 2;
+    const MV_PER_THREAD: usize = 8;
+    const MV_ROWS: usize = 2 * SHARD_ROWS + 3; // 3 tiles each
+    const MM_THREADS: u64 = 2;
+    const MM_PER_THREAD: usize = 4;
+    const MM_M: usize = SHARD_ROWS + 1; // 2 row tiles
+    const MM_P: usize = 2 * PANEL_COLS + 1; // 3 column panels
+
+    let coord = Arc::new(
+        Coordinator::launch(
+            &[MultiplyDeployment {
+                n_bits: N_BITS,
+                rows: 8,
+                max_wait: Duration::from_millis(1),
+                config: EngineConfig::MultPim,
+                shards: 2,
+            }],
+            &[MatVecDeployment { n_bits: N_BITS, n_elems: K, shard_rows: SHARD_ROWS, shards: 2 }],
+            &[mm_deployment(2)],
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..MUL_THREADS {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x4D55 + t);
+            for _ in 0..MUL_PER_THREAD {
+                let (a, b) = (rng.bits(N_BITS), rng.bits(N_BITS));
+                assert_eq!(coord.multiply(N_BITS, a, b).unwrap(), widening_mul(N_BITS, a, b));
+            }
+        }));
+    }
+    for t in 0..MV_THREADS {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x4D56 + t);
+            for _ in 0..MV_PER_THREAD {
+                let rows = random_matrix(&mut rng, MV_ROWS, K as usize);
+                let x: Vec<u64> = (0..K).map(|_| rng.bits(N_BITS)).collect();
+                let out = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(out[r], inner_product_mod(N_BITS, row, &x), "row {r}");
+                }
+            }
+        }));
+    }
+    for t in 0..MM_THREADS {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x4D4D + t);
+            for _ in 0..MM_PER_THREAD {
+                let a = random_matrix(&mut rng, MM_M, K as usize);
+                let b = random_matrix(&mut rng, K as usize, MM_P);
+                let c = coord.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+                assert_eq!(c, reference(&a, &b));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mul_units = MUL_THREADS * MUL_PER_THREAD as u64;
+    let mv_units = MV_THREADS * (MV_PER_THREAD * MV_ROWS) as u64;
+    let mv_tiles = MV_THREADS * MV_PER_THREAD as u64 * 3;
+    let mm_units = MM_THREADS * (MM_PER_THREAD * MM_M * MM_P) as u64;
+    let mm_tiles = MM_THREADS * MM_PER_THREAD as u64 * (2 * 3);
+    let m = coord.metrics();
+
+    // Global request and unit accounting across all three workloads.
+    assert_eq!(
+        m.requests.load(Ordering::Relaxed),
+        mul_units + MV_THREADS * MV_PER_THREAD as u64 + MM_THREADS * MM_PER_THREAD as u64
+    );
+    assert_eq!(m.products.load(Ordering::Relaxed), mul_units + mv_units + mm_units);
+    assert_eq!(m.queued_units.load(Ordering::Relaxed), mul_units + mv_units + mm_units);
+    assert!(m.avg_queue_wait() > Duration::ZERO);
+
+    // Per-workload labeled counters: each workload saw exactly its own
+    // traffic, and the labeled sums reproduce the globals.
+    let workloads = m.workloads();
+    assert_eq!(workloads.len(), 3, "three labeled entries registered");
+    let wl_units: u64 = workloads.iter().map(|(_, wl)| wl.units.load(Ordering::Relaxed)).sum();
+    assert_eq!(wl_units, m.products.load(Ordering::Relaxed), "labeled units cover the globals");
+    let wl_tiles: u64 = workloads.iter().map(|(_, wl)| wl.tiles.load(Ordering::Relaxed)).sum();
+    assert_eq!(wl_tiles, m.batches.load(Ordering::Relaxed), "labeled tiles cover the batches");
+
+    let mul = m.workload(WorkloadKey::Multiply { n_bits: N_BITS }).unwrap();
+    assert_eq!(mul.requests.load(Ordering::Relaxed), mul_units);
+    assert_eq!(mul.admitted_units.load(Ordering::Relaxed), mul_units);
+    assert_eq!(mul.units.load(Ordering::Relaxed), mul_units);
+
+    let mv = m.workload(WorkloadKey::MatVec { n_bits: N_BITS, n_elems: K }).unwrap();
+    assert_eq!(mv.requests.load(Ordering::Relaxed), MV_THREADS * MV_PER_THREAD as u64);
+    assert_eq!(mv.admitted_units.load(Ordering::Relaxed), mv_units);
+    assert_eq!(mv.units.load(Ordering::Relaxed), mv_units);
+    assert_eq!(mv.tiles.load(Ordering::Relaxed), mv_tiles);
+
+    let mm = m.workload(WorkloadKey::MatMul { n_bits: N_BITS, k: K }).unwrap();
+    assert_eq!(mm.requests.load(Ordering::Relaxed), MM_THREADS * MM_PER_THREAD as u64);
+    assert_eq!(mm.admitted_units.load(Ordering::Relaxed), mm_units);
+    assert_eq!(mm.units.load(Ordering::Relaxed), mm_units);
+    assert_eq!(mm.tiles.load(Ordering::Relaxed), mm_tiles);
+
+    // Per-shard occupancy splits each workload's totals exactly.
+    for (key, wl) in &workloads {
+        let shard_units: u64 = wl.shard_stats().iter().map(|(_, s)| s.units).sum();
+        assert_eq!(shard_units, wl.units.load(Ordering::Relaxed), "{key}: shard units add up");
+        let shard_tiles: u64 = wl.shard_stats().iter().map(|(_, s)| s.tiles).sum();
+        assert_eq!(shard_tiles, wl.tiles.load(Ordering::Relaxed), "{key}: shard tiles add up");
+        assert!(wl.shard_stats().len() <= 2, "{key}: at most the deployed shard count");
+    }
+
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
