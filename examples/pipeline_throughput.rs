@@ -69,6 +69,7 @@ fn main() -> multpim::Result<()> {
         }],
         &[],
         &[],
+        &[],
     )?;
     let mut rng = SplitMix64::new(0xF007);
     let t0 = Instant::now();

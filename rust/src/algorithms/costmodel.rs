@@ -145,6 +145,80 @@ pub fn matvec_partitions(n_bits: u64) -> u64 {
     n_bits + 1
 }
 
+// ---------------------------------------------------------------------------
+// Table III float extension — full-precision floating-point matvec
+// (the abstract's closing claim: 25.5x over FloatPIM MVM).
+//
+// FloatPIM's cycle-level float schedule is not public, so — exactly as
+// with the RIME/FloatPIM fixed-point rows above — these are audited
+// derived formulas, documented term by term. Both pipelines run their
+// mantissa datapath at the full word width N = 32 ("full precision": the
+// exact S x S significand product, S = man_bits + 1, fits the 2N-bit
+// accumulator), and E = exp_bits.
+// ---------------------------------------------------------------------------
+
+use crate::fixedpoint::float::FloatFormat;
+
+/// FloatPIM float matvec latency. Per element:
+/// * `13N^2 + 12N + 6` — FloatPIM's multiply-accumulate core at N bits
+///   (the same term as its fixed-point pipeline);
+/// * `14E` — two E-bit FELIX exponent ripple adds (product exponent +
+///   alignment compare), 7E each;
+/// * `4S^2` — worst-case *serial* mantissa alignment and renormalization:
+///   without partitions a row shifts one position at a time (2 cycles per
+///   bit), and a data-independent schedule must provision S positions for
+///   each of the two shifts (`2S^2 + 2S^2`);
+/// * `5S` — the per-element repack/round of the running float
+///   accumulator (FloatPIM renormalizes after every add).
+pub fn floatpim_floatvec_latency(n_elems: u64, fmt: FloatFormat) -> u64 {
+    let n = 32u64;
+    let e = fmt.exp_bits as u64;
+    let s = fmt.man_bits as u64 + 1;
+    n_elems * (13 * n * n + 12 * n + 6 + 14 * e + 4 * s * s + 5 * s)
+}
+
+/// MultPIM float matvec latency. Per element:
+/// * `N*log2(N) + 11N + 9` — the fused CSAS multiply-accumulate stage
+///   (§VI), which absorbs the aligned product into the carry-save
+///   accumulator with **no per-element normalize or round**;
+/// * `10E` — two E-bit exponent ripple adds with the §IV-B1 adder
+///   (5E each);
+/// * `2*(log2(S) + 1)` — the partition-parallel barrel alignment:
+///   `log2(S) + 1` mux levels, each a 2-cycle §III-B parity shift.
+///
+/// Once per matvec: the `4N - 4` carry drain (§VI), a
+/// `2*(log2(2N) + 1)`-cycle partition-parallel binary-search
+/// normalization of the 2N-bit accumulator, and one `5S`-cycle
+/// round-to-nearest-even ripple increment.
+pub fn multpim_floatvec_latency(n_elems: u64, fmt: FloatFormat) -> u64 {
+    let n = 32u64;
+    let e = fmt.exp_bits as u64;
+    let s = fmt.man_bits as u64 + 1;
+    n_elems * (n * lg(n) + 11 * n + 9 + 10 * e + 2 * (lg(s) + 1))
+        + 4 * n
+        - 4
+        + 2 * (lg(2 * n) + 1)
+        + 5 * s
+}
+
+/// FloatPIM float matvec minimum crossbar width: the fixed-point layout
+/// plus staged signs/exponents (`2n(E+1)`) and the serial shifter's
+/// double-buffer (`2S`).
+pub fn floatpim_floatvec_width(n_elems: u64, fmt: FloatFormat) -> u64 {
+    let e = fmt.exp_bits as u64;
+    let s = fmt.man_bits as u64 + 1;
+    floatpim_matvec_width(n_elems, 32) + 2 * n_elems * (e + 1) + 2 * s
+}
+
+/// MultPIM float matvec minimum crossbar width: the fixed-point layout
+/// plus staged signs/exponents (`2n(E+1)`) and the barrel-align stage
+/// cells (`3S + 5`).
+pub fn multpim_floatvec_width(n_elems: u64, fmt: FloatFormat) -> u64 {
+    let e = fmt.exp_bits as u64;
+    let s = fmt.man_bits as u64 + 1;
+    multpim_matvec_width(n_elems, 32) + 2 * n_elems * (e + 1) + 3 * s + 5
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +293,30 @@ mod tests {
         let r64 = rime_latency(64) as f64 / multpim_latency(64) as f64;
         let r256 = rime_latency(256) as f64 / multpim_latency(256) as f64;
         assert!(r16 < r64 && r64 < r256);
+    }
+
+    /// Table III float extension values at n = 8, 32-bit floats
+    /// (E = 8, M = 23, S = 24).
+    #[test]
+    fn table3_float_values() {
+        let fmt = FloatFormat::FP32;
+        assert_eq!(floatpim_floatvec_latency(8, fmt), 129_904);
+        assert_eq!(multpim_floatvec_latency(8, fmt), 5_162);
+        assert_eq!(floatpim_floatvec_width(8, fmt), 1_915);
+        assert_eq!(multpim_floatvec_width(8, fmt), 1_186);
+    }
+
+    /// The abstract's closing claim carries over to the float pipeline:
+    /// >= 25x over the FloatPIM float baseline at 32-bit floats, because
+    /// the fused engine normalizes/rounds once per matvec while FloatPIM
+    /// renormalizes its float accumulator after every element.
+    #[test]
+    fn float_headline_speedup() {
+        let fmt = FloatFormat::FP32;
+        let s = floatpim_floatvec_latency(8, fmt) as f64 / multpim_floatvec_latency(8, fmt) as f64;
+        assert!((25.0..26.0).contains(&s), "float matvec speedup {s}");
+        let a = floatpim_floatvec_width(8, fmt) as f64 / multpim_floatvec_width(8, fmt) as f64;
+        assert!((1.5..1.7).contains(&a), "float matvec area {a}");
     }
 
     /// Adder comparison (footnote 6).

@@ -1,0 +1,870 @@
+//! Full-precision floating-point matrix-vector multiplication — the
+//! abstract's closing claim ("we optimize MultPIM for full-precision
+//! matrix-vector multiplication and improve latency by 25.5x over FloatPIM
+//! matrix-vector multiplication") as a served, checker-validated pipeline.
+//!
+//! [`MultPimFloatVec`] compiles one *fused multiply-accumulate* program
+//! per vector element plus nothing else — like the fixed-point
+//! [`MultPimMatVec`](super::matvec::MultPimMatVec) it emits a program
+//! *chain* executed back-to-back over one crossbar, every row computing
+//! its own dot product in parallel. Per element the program performs, in
+//! stateful logic only:
+//!
+//! * **exponent add + compare** — the product exponent `ea + ex` and the
+//!   alignment distance `d` against the accumulator exponent, in
+//!   two's-complement ripple chains built from the §IV-B1 full adder
+//!   (eqs. (1)-(2): each stage's `Min3` carry-complement feeds the next);
+//! * **mantissa multiply** — the exact significand product via the
+//!   carry-save add-shift recurrence (§II-B): one partial-product AND row
+//!   plus one full-adder row per multiplier bit, again the §IV-B1 adder;
+//! * **align + fused accumulate** — a mux barrel shifter aligns the
+//!   smaller operand (shifted-out bits OR-fold into a sticky LSB), and a
+//!   single two's-complement add merges it into the `2S+4`-bit register
+//!   (`S` = significand width) — the float analogue of §VI's carry-save
+//!   absorption: no intermediate result is ever rounded;
+//! * **normalize + round** — binary-search renormalization and one
+//!   round-to-nearest-even increment produce the new packed accumulator.
+//!
+//! The accumulator bits thread from each element's program to the next
+//! (validated once as a chain by [`crate::sim::validate_chain`], exactly
+//! like the fixed engine), and the result is **bit-exact** against the
+//! software specification
+//! [`float_mac_ref`](crate::fixedpoint::float::float_mac_ref) composition
+//! — the serving layer's contract, fuzzed across formats in
+//! `rust/tests/float_fuzz.rs`.
+//!
+//! ## Schedule honesty
+//!
+//! This functional pipeline is emitted *serially* (one gate per cycle in a
+//! single partition): it proves the algorithm in gates and pins the
+//! bit-exact semantics, but does not lay out the partition-parallel
+//! schedule of §III/§VI. The audited latency comparison for Table III's
+//! float row therefore uses the closed-form cost model
+//! ([`costmodel::multpim_floatvec_latency`](super::costmodel::multpim_floatvec_latency)
+//! vs
+//! [`costmodel::floatpim_floatvec_latency`](super::costmodel::floatpim_floatvec_latency)),
+//! the same convention the repo applies to baselines whose cycle-level
+//! schedule is not public; parallelizing this emission is a ROADMAP open
+//! item. Latencies measured from these programs are labeled as the serial
+//! reference schedule wherever they are printed.
+
+use super::costmodel;
+use crate::fixedpoint::float::{float_add_ref, float_mul_ref, FloatFormat};
+use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+use crate::sim::Simulator;
+use crate::util::ceil_log2;
+use crate::{Error, Result};
+
+/// A packed float operand's staged bit columns (LSB-first fields,
+/// matching [`FloatFormat::pack`]'s `[fraction | exponent | sign]`
+/// layout).
+#[derive(Debug, Clone)]
+struct FloatWires {
+    sign: Col,
+    /// Exponent field bits, LSB first.
+    exp: Vec<Col>,
+    /// Fraction bits, LSB first.
+    man: Vec<Col>,
+}
+
+/// Serial stateful-logic circuit emitter: every wire is a fresh column
+/// written exactly once (SSA), every gate its own cycle in a single
+/// partition. Legality is by construction — each program initializes all
+/// its gate outputs to 1 up front (plus a constant-1 cell) and a
+/// constant-0 cell to 0, so the strict checker's MAGIC preconditions hold
+/// for every emitted gate.
+struct Circuit {
+    next: Col,
+    ops: Vec<GateOp>,
+    outs: Vec<Col>,
+    zero: Col,
+    one: Col,
+}
+
+impl Circuit {
+    fn new(next_col: Col) -> Self {
+        let mut c = Circuit { next: next_col, ops: Vec::new(), outs: Vec::new(), zero: 0, one: 0 };
+        c.zero = c.fresh();
+        c.one = c.fresh();
+        c
+    }
+
+    fn fresh(&mut self) -> Col {
+        let c = self.next;
+        self.next += 1;
+        c
+    }
+
+    fn emit(&mut self, gate: Gate, inputs: &[Col]) -> Col {
+        let out = self.fresh();
+        self.ops.push(GateOp::new(gate, inputs, out));
+        self.outs.push(out);
+        out
+    }
+
+    fn not(&mut self, a: Col) -> Col {
+        self.emit(Gate::Not, &[a])
+    }
+
+    fn or(&mut self, a: Col, b: Col) -> Col {
+        self.emit(Gate::Or2, &[a, b])
+    }
+
+    fn nand(&mut self, a: Col, b: Col) -> Col {
+        self.emit(Gate::Nand2, &[a, b])
+    }
+
+    fn min3(&mut self, a: Col, b: Col, c: Col) -> Col {
+        self.emit(Gate::Min3, &[a, b, c])
+    }
+
+    fn and(&mut self, a: Col, b: Col) -> Col {
+        let n = self.nand(a, b);
+        self.not(n)
+    }
+
+    fn xor(&mut self, a: Col, b: Col) -> Col {
+        let o = self.or(a, b);
+        let n = self.nand(a, b);
+        self.and(o, n)
+    }
+
+    /// `s ? a : b`, given the precomputed complement of `s`.
+    fn mux(&mut self, s: Col, s_not: Col, a: Col, b: Col) -> Col {
+        let ta = self.nand(s, a);
+        let tb = self.nand(s_not, b);
+        self.nand(ta, tb)
+    }
+
+    /// Single-bit `s ? a : b`.
+    fn mux_bit(&mut self, s: Col, a: Col, b: Col) -> Col {
+        let s_not = self.not(s);
+        self.mux(s, s_not, a, b)
+    }
+
+    /// Word-wise `s ? a : b`.
+    fn mux_word(&mut self, s: Col, a: &[Col], b: &[Col]) -> Vec<Col> {
+        assert_eq!(a.len(), b.len());
+        let s_not = self.not(s);
+        a.iter().zip(b).map(|(&ai, &bi)| self.mux(s, s_not, ai, bi)).collect()
+    }
+
+    /// The §IV-B1 full adder (eqs. (1)-(2)): `Cout' = Min3(a, b, Cin)`,
+    /// `T2 = Min3(a, b, Cin')`, `S = Min3(Cout, Cin', T2)`. Returns
+    /// `(sum, cout, cout')` — the free carry complement chains into the
+    /// next stage.
+    fn fa(&mut self, a: Col, b: Col, cin: Col, cin_not: Col) -> (Col, Col, Col) {
+        let t1 = self.min3(a, b, cin);
+        let cout = self.not(t1);
+        let t2 = self.min3(a, b, cin_not);
+        let sum = self.min3(cout, cin_not, t2);
+        (sum, cout, t1)
+    }
+
+    /// Ripple add of equal-width words; returns `(sum, carry_out)`.
+    fn add(&mut self, a: &[Col], b: &[Col], cin: Col, cin_not: Col) -> (Vec<Col>, Col) {
+        assert_eq!(a.len(), b.len());
+        let (mut c, mut cn) = (cin, cin_not);
+        let mut s = Vec::with_capacity(a.len());
+        for (&ai, &bi) in a.iter().zip(b) {
+            let (si, ci, cni) = self.fa(ai, bi, c, cn);
+            s.push(si);
+            c = ci;
+            cn = cni;
+        }
+        (s, c)
+    }
+
+    /// `a + b mod 2^w`.
+    fn add_mod(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
+        self.add(a, b, self.zero, self.one).0
+    }
+
+    /// `a - b mod 2^w` (two's complement).
+    fn sub_mod(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
+        let nb: Vec<Col> = b.iter().map(|&bi| self.not(bi)).collect();
+        self.add(a, &nb, self.one, self.zero).0
+    }
+
+    /// `-a mod 2^w`.
+    fn neg_mod(&mut self, a: &[Col]) -> Vec<Col> {
+        let zeros = vec![self.zero; a.len()];
+        self.sub_mod(&zeros, a)
+    }
+
+    /// OR-reduction (the zero wire for an empty slice).
+    fn or_tree(&mut self, bits: &[Col]) -> Col {
+        let mut acc = self.zero;
+        for &b in bits {
+            acc = self.or(acc, b);
+        }
+        acc
+    }
+
+    /// Constant word from the low `width` bits of `value` (two's
+    /// complement for negatives) — references the constant cells, no
+    /// gates.
+    fn const_word(&self, value: i64, width: u32) -> Vec<Col> {
+        (0..width).map(|i| if (value >> i) & 1 == 1 { self.one } else { self.zero }).collect()
+    }
+
+    /// Zero-extend a word to `width` bits.
+    fn zext(&self, word: &[Col], width: u32) -> Vec<Col> {
+        let mut v = word.to_vec();
+        v.resize(width as usize, self.zero);
+        v
+    }
+
+    /// Exact unsigned multiply via the carry-save add-shift recurrence:
+    /// for each multiplier bit (LSB first) form the partial-product AND
+    /// row and fold it into the running upper word with one full-adder
+    /// row, retiring one finalized low bit per step.
+    fn mul(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
+        assert_eq!(a.len(), b.len());
+        let s = a.len();
+        let mut out = Vec::with_capacity(2 * s);
+        let mut run = vec![self.zero; s];
+        for &bi in b {
+            let pp: Vec<Col> = a.iter().map(|&aj| self.and(aj, bi)).collect();
+            let (sum, cout) = self.add(&run, &pp, self.zero, self.one);
+            out.push(sum[0]);
+            run = sum[1..].to_vec();
+            run.push(cout);
+        }
+        out.extend(run);
+        out
+    }
+
+    /// Barrel right shift by `amt` (LSB-first amount bits), OR-folding
+    /// every shifted-out bit into the returned sticky.
+    fn shift_right_sticky(&mut self, word: &[Col], amt: &[Col]) -> (Vec<Col>, Col) {
+        let w = word.len();
+        let mut cur = word.to_vec();
+        let mut sticky = self.zero;
+        for (k, &ak) in amt.iter().enumerate() {
+            let step = 1usize << k;
+            let dropped = self.or_tree(&cur[..step.min(w)]);
+            let sel = self.and(ak, dropped);
+            sticky = self.or(sticky, sel);
+            let shifted: Vec<Col> =
+                (0..w).map(|i| if i + step < w { cur[i + step] } else { self.zero }).collect();
+            let ak_not = self.not(ak);
+            cur = (0..w).map(|i| self.mux(ak, ak_not, shifted[i], cur[i])).collect();
+        }
+        (cur, sticky)
+    }
+
+    /// Binary-search left normalization: at each level shift left by
+    /// `2^k` when the top `2^k` bits are all zero. Returns the normalized
+    /// register (MSB at the top iff the input was nonzero) and the
+    /// leading-zero count bits (LSB first).
+    fn normalize(&mut self, word: &[Col]) -> (Vec<Col>, Vec<Col>) {
+        let w = word.len();
+        let levels = ceil_log2(w as u64);
+        let mut cur = word.to_vec();
+        let mut lz = vec![self.zero; levels as usize];
+        for k in (0..levels).rev() {
+            let step = 1usize << k;
+            if step >= w {
+                continue;
+            }
+            let top = self.or_tree(&cur[w - step..]);
+            let tz = self.not(top); // complement of tz is `top` itself
+            let shifted: Vec<Col> =
+                (0..w).map(|i| if i >= step { cur[i - step] } else { self.zero }).collect();
+            cur = (0..w).map(|i| self.mux(tz, top, shifted[i], cur[i])).collect();
+            lz[k as usize] = tz;
+        }
+        (cur, lz)
+    }
+}
+
+/// Emit one fused float multiply-accumulate: `acc <- round(acc + a * x)`,
+/// a gate-level transliteration of
+/// [`float_mac_ref`](crate::fixedpoint::float::float_mac_ref) (same
+/// register widths, same clamp, same rounding).
+fn emit_mac(
+    cir: &mut Circuit,
+    fmt: FloatFormat,
+    acc: &FloatWires,
+    a: &FloatWires,
+    x: &FloatWires,
+    ew: u32,
+) -> FloatWires {
+    let e = fmt.exp_bits as usize;
+    let m = fmt.man_bits as usize;
+    let s_w = m + 1; // significand width S
+    let w = 2 * s_w + 3; // aligned register (product + G, R, sticky)
+    let wn = w + 1; // signed add register
+    let bias = fmt.bias();
+
+    // Zero flags: an exponent field of 0 means zero (flush-to-zero).
+    let a_nz = cir.or_tree(&a.exp);
+    let x_nz = cir.or_tree(&x.exp);
+    let c_nz = cir.or_tree(&acc.exp);
+    let a_zero = cir.not(a_nz);
+    let x_zero = cir.not(x_nz);
+    let p_zero = cir.or(a_zero, x_zero);
+
+    // Exact significand product (2S bits). Hidden bits are constant 1:
+    // a zero operand's garbage product is discarded by the final p_zero
+    // mux. The accumulator's hidden bit is its nonzero flag, raising the
+    // canonical accumulator onto the same 2S-bit grid.
+    let mut sig_a = a.man.clone();
+    sig_a.push(cir.one);
+    let mut sig_x = x.man.clone();
+    sig_x.push(cir.one);
+    let p2 = cir.mul(&sig_a, &sig_x);
+    let mut c2 = vec![cir.zero; s_w];
+    c2.extend(&acc.man);
+    c2.push(c_nz);
+
+    // Exponent words (two's complement, `ew` bits, wide enough that no
+    // intermediate wraps): d = ea + ex - ec - bias + 1 is the ulp-weight
+    // gap between the product and accumulator registers.
+    let ea_w = cir.zext(&a.exp, ew);
+    let ex_w = cir.zext(&x.exp, ew);
+    let ec_w = cir.zext(&acc.exp, ew);
+    let t = cir.add_mod(&ea_w, &ex_w);
+    let t2 = cir.sub_mod(&t, &ec_w);
+    let dcst = cir.const_word(1 - bias, ew);
+    let d = cir.add_mod(&t2, &dcst);
+    let d_neg = d[ew as usize - 1];
+    let nd = cir.neg_mod(&d);
+    let d_abs = cir.mux_word(d_neg, &nd, &d);
+
+    // Register anchor exponent of whichever operand stays put.
+    let epc = cir.const_word(-2 * bias - 2 * m as i64, ew);
+    let ep = cir.add_mod(&t, &epc);
+    let ecc = cir.const_word(-bias - 2 * m as i64 - 1, ew);
+    let ecb = cir.add_mod(&ec_w, &ecc);
+    let ebase = cir.mux_word(d_neg, &ecb, &ep);
+
+    // Alignment shift, clamped to the register width (a fully shifted-out
+    // operand survives only as sticky).
+    let sb = ceil_log2(w as u64 + 1);
+    let wcst = cir.const_word(w as i64, ew);
+    let diffw = cir.sub_mod(&d_abs, &wcst);
+    let ge = cir.not(diffw[ew as usize - 1]);
+    let wword = cir.const_word(w as i64, sb);
+    let sh = cir.mux_word(ge, &wword, &d_abs[..sb as usize]);
+
+    // Align the smaller operand; sticky folds into the register LSB.
+    let big = cir.mux_word(d_neg, &c2, &p2);
+    let small = cir.mux_word(d_neg, &p2, &c2);
+    let mut xb = vec![cir.zero; 3];
+    xb.extend(&big);
+    let mut xs_full = vec![cir.zero; 3];
+    xs_full.extend(&small);
+    let (mut xs, sticky) = cir.shift_right_sticky(&xs_full, &sh);
+    xs[0] = cir.or(xs[0], sticky);
+
+    // Fused two's-complement accumulate; a negative difference flips the
+    // result sign.
+    let sp = cir.xor(a.sign, x.sign);
+    let sign_big = cir.mux_bit(d_neg, acc.sign, sp);
+    let eff_sub = cir.xor(sp, acc.sign);
+    let eff_not = cir.not(eff_sub);
+    let mut xb_e = xb;
+    xb_e.push(cir.zero);
+    // Conditional invert of the aligned operand; the implicit sign
+    // extension of `~xs` makes the appended top bit exactly `eff_sub`.
+    let mut addend = Vec::with_capacity(wn);
+    for &b in &xs {
+        let nb = cir.not(b);
+        addend.push(cir.mux(eff_sub, eff_not, nb, b));
+    }
+    addend.push(eff_sub);
+    let (sum, _) = cir.add(&xb_e, &addend, eff_sub, eff_not);
+    let negf = cir.and(eff_sub, sum[wn - 1]);
+    let nsum = cir.neg_mod(&sum);
+    let mag = cir.mux_word(negf, &nsum, &sum);
+    let sign_flip = cir.not(sign_big);
+    let res_sign = cir.mux_bit(negf, sign_flip, sign_big);
+
+    // Normalize and derive the result exponent:
+    // re = ebase + (wn - 4 + bias) - leading_zeros.
+    let (norm, lz) = cir.normalize(&mag);
+    let nonzero = norm[wn - 1];
+    let zero_out = cir.not(nonzero);
+    let rcst = cir.const_word(wn as i64 - 4 + bias, ew);
+    let re0 = cir.add_mod(&ebase, &rcst);
+    let lz_ext = cir.zext(&lz, ew);
+    let re1 = cir.sub_mod(&re0, &lz_ext);
+
+    // Round to nearest even on guard + (rest | lsb); the increment's
+    // carry-out bumps the exponent (mantissa becomes zero).
+    let frac: Vec<Col> = (0..m).map(|j| norm[w - m + j]).collect();
+    let guard = norm[w - m - 1];
+    let rest = cir.or_tree(&norm[..w - m - 1]);
+    let tie = cir.or(rest, frac[0]);
+    let up = cir.and(guard, tie);
+    let up_not = cir.not(up);
+    let mut sig_in = frac;
+    sig_in.push(cir.one);
+    let zeros_sig = vec![cir.zero; s_w];
+    let (sig_sum, cout) = cir.add(&sig_in, &zeros_sig, up, up_not);
+    let zeros_m = vec![cir.zero; m];
+    let frac_rounded = cir.mux_word(cout, &zeros_m, &sig_sum[..m]);
+    let cout_not = cir.not(cout);
+    let zeros_ew = vec![cir.zero; ew as usize];
+    let (re_final, _) = cir.add(&re1, &zeros_ew, cout, cout_not);
+
+    // Flush-to-zero (exact zero or biased exponent <= 0) has priority
+    // over saturation (biased exponent above the top field).
+    let re_neg = re_final[ew as usize - 1];
+    let re_or = cir.or_tree(&re_final);
+    let re_zero = cir.not(re_or);
+    let le0 = cir.or(re_neg, re_zero);
+    let flush = cir.or(zero_out, le0);
+    let flush_not = cir.not(flush);
+    let ovc = cir.const_word(1 << e, ew);
+    let diffo = cir.sub_mod(&re_final, &ovc);
+    let ov_raw = cir.not(diffo[ew as usize - 1]);
+    let ov = cir.and(ov_raw, flush_not);
+
+    let exp_field = &re_final[..e];
+    let zeros_e = vec![cir.zero; e];
+    let ones_e = vec![cir.one; e];
+    let ones_m = vec![cir.one; m];
+    let g_exp1 = cir.mux_word(flush, &zeros_e, exp_field);
+    let g_man1 = cir.mux_word(flush, &zeros_m, &frac_rounded);
+    let g_sign = cir.and(res_sign, flush_not);
+    let g_exp = cir.mux_word(ov, &ones_e, &g_exp1);
+    let g_man = cir.mux_word(ov, &ones_m, &g_man1);
+
+    // A zero product leaves the (canonicalized) accumulator untouched.
+    let acc_sign_can = cir.and(acc.sign, c_nz);
+    let acc_man_can: Vec<Col> = acc.man.iter().map(|&b| cir.and(b, c_nz)).collect();
+    let out_sign = cir.mux_bit(p_zero, acc_sign_can, g_sign);
+    let out_exp = cir.mux_word(p_zero, &acc.exp, &g_exp);
+    let out_man = cir.mux_word(p_zero, &acc_man_can, &g_man);
+    FloatWires { sign: out_sign, exp: out_exp, man: out_man }
+}
+
+/// Compiled fused float matrix-vector engine for one crossbar (all rows
+/// in parallel; the row count is chosen at run time).
+#[derive(Debug, Clone)]
+pub struct MultPimFloatVec {
+    fmt: FloatFormat,
+    n_elems: u32,
+    /// One fused float multiply-accumulate program per vector element.
+    programs: Vec<Program>,
+    /// Matrix element `t` is staged packed at `a_cols[t] .. + total_bits`.
+    a_cols: Vec<Col>,
+    /// Duplicated vector elements, same packed layout.
+    x_cols: Vec<Col>,
+    out_sign: Col,
+    out_exp: Vec<Col>,
+    out_man: Vec<Col>,
+    input_cols: Vec<Col>,
+    num_cols: Col,
+}
+
+impl MultPimFloatVec {
+    /// Build the engine for `n_elems` elements of format `fmt`.
+    pub fn new(fmt: FloatFormat, n_elems: u32) -> Self {
+        assert!(n_elems >= 1, "need at least one element");
+        let tb = fmt.total_bits();
+        let e = fmt.exp_bits as usize;
+        let m = fmt.man_bits as usize;
+        // Exponent working width: covers every intermediate (|d|, anchors,
+        // result exponents) without two's-complement wraparound.
+        let ew = ceil_log2((1u64 << (fmt.exp_bits + 2)) + 4 * fmt.man_bits as u64 + 16) + 1;
+
+        let mut next: Col = 0;
+        let alloc_operand = |next: &mut Col| -> Col {
+            let c = *next;
+            *next += tb;
+            c
+        };
+        let a_cols: Vec<Col> = (0..n_elems).map(|_| alloc_operand(&mut next)).collect();
+        let x_cols: Vec<Col> = (0..n_elems).map(|_| alloc_operand(&mut next)).collect();
+        let operand_wires = |base: Col| FloatWires {
+            sign: base + (m + e) as Col,
+            exp: (0..e).map(|i| base + (m + i) as Col).collect(),
+            man: (0..m).map(|i| base + i as Col).collect(),
+        };
+
+        // Emit every element's circuit first (the shared column allocator
+        // keeps rising), then materialize the programs once the final
+        // crossbar width is known.
+        let mut drafts: Vec<(String, Circuit)> = Vec::with_capacity(n_elems as usize);
+        let mut acc: Option<FloatWires> = None;
+        for t in 0..n_elems as usize {
+            let mut cir = Circuit::new(next);
+            let acc_w = acc.clone().unwrap_or_else(|| FloatWires {
+                sign: cir.zero,
+                exp: vec![cir.zero; e],
+                man: vec![cir.zero; m],
+            });
+            let a = operand_wires(a_cols[t]);
+            let x = operand_wires(x_cols[t]);
+            let out = emit_mac(&mut cir, fmt, &acc_w, &a, &x, ew);
+            next = cir.next;
+            acc = Some(out);
+            drafts.push((format!("multpim-fv-e{e}m{m}-elem{t}"), cir));
+        }
+        let num_cols = next;
+        let partitions = PartitionMap::single(num_cols);
+        let programs: Vec<Program> = drafts
+            .into_iter()
+            .map(|(name, cir)| {
+                let mut b = ProgramBuilder::new(name, partitions.clone(), GateSet::Full);
+                let mut ones = cir.outs.clone();
+                ones.push(cir.one);
+                b.init(true, ones);
+                b.init(false, vec![cir.zero]);
+                for op in cir.ops {
+                    b.stage(op);
+                    b.commit();
+                }
+                b.finish()
+            })
+            .collect();
+
+        let final_acc = acc.expect("at least one element");
+        let input_cols: Vec<Col> = a_cols
+            .iter()
+            .chain(x_cols.iter())
+            .flat_map(|&start| start..start + tb)
+            .collect();
+        Self {
+            fmt,
+            n_elems,
+            programs,
+            a_cols,
+            x_cols,
+            out_sign: final_acc.sign,
+            out_exp: final_acc.exp,
+            out_man: final_acc.man,
+            input_cols,
+            num_cols,
+        }
+    }
+
+    /// The float format.
+    pub fn fmt(&self) -> FloatFormat {
+        self.fmt
+    }
+
+    /// Inner dimension n.
+    pub fn n_elems(&self) -> u32 {
+        self.n_elems
+    }
+
+    /// The program chain: one fused float multiply-accumulate program per
+    /// vector element, executed back-to-back over one crossbar; lower
+    /// with [`CompiledPipeline`](crate::sim::CompiledPipeline) for the
+    /// serving hot path.
+    pub fn programs(&self) -> &[Program] {
+        &self.programs
+    }
+
+    /// Columns holding externally staged operand bits before the chain
+    /// runs.
+    pub fn input_cols(&self) -> &[Col] {
+        &self.input_cols
+    }
+
+    /// First column of matrix element `t` (packed float,
+    /// `total_bits` wide).
+    pub fn a_col(&self, t: usize) -> Col {
+        self.a_cols[t]
+    }
+
+    /// First column of duplicated vector element `t`.
+    pub fn x_col(&self, t: usize) -> Col {
+        self.x_cols[t]
+    }
+
+    /// Crossbar width (columns).
+    pub fn width(&self) -> u32 {
+        self.num_cols
+    }
+
+    /// Measured latency of the chain — the *serial reference schedule*
+    /// (one gate per cycle; see the module docs). The partition-parallel
+    /// cost is [`MultPimFloatVec::expected_latency`].
+    pub fn latency_cycles(&self) -> u64 {
+        self.programs.iter().map(|p| p.cycle_count() as u64).sum()
+    }
+
+    /// Audited partition-parallel latency of the §VI float schedule
+    /// (Table III float row).
+    pub fn expected_latency(&self) -> u64 {
+        costmodel::multpim_floatvec_latency(self.n_elems as u64, self.fmt)
+    }
+
+    /// Statically validate the whole chain once (cell state threads
+    /// across program boundaries). Data independent: a deployment
+    /// validates here at launch and never again.
+    pub fn validate(&self) -> Result<crate::sim::CheckReport> {
+        crate::sim::validate_chain(&self.programs, &self.input_cols)
+    }
+
+    /// Read row `r`'s packed dot-product result after the chain ran
+    /// (always canonical: zero is the all-zero word).
+    pub fn read_row(&self, sim: &Simulator, row: usize) -> u64 {
+        let mut man = 0u64;
+        for (i, &col) in self.out_man.iter().enumerate() {
+            man |= sim.read_bits(row, col, 1) << i;
+        }
+        let mut exp = 0u64;
+        for (i, &col) in self.out_exp.iter().enumerate() {
+            exp |= sim.read_bits(row, col, 1) << i;
+        }
+        let sign = sim.read_bits(row, self.out_sign, 1);
+        self.fmt.pack(sign, exp, man)
+    }
+
+    /// Compute the packed dot products of `rows` against `x` for all rows
+    /// in parallel (the direct, interpreted path; the serving layer runs
+    /// the pre-lowered chain instead).
+    pub fn compute(&self, rows: &[Vec<u64>], x: &[u64]) -> Result<Vec<u64>> {
+        let tb = self.fmt.total_bits();
+        if x.len() != self.n_elems as usize {
+            return Err(Error::BadParameter(format!(
+                "x has {} elements, engine built for {}",
+                x.len(),
+                self.n_elems
+            )));
+        }
+        for (t, &v) in x.iter().enumerate() {
+            if v > self.fmt.mask() {
+                return Err(Error::BadParameter(format!(
+                    "x[{t}] = {v:#x} wider than the {tb}-bit format"
+                )));
+            }
+        }
+        let m = rows.len().max(1);
+        let mut sim = Simulator::new(m, self.num_cols as usize);
+        for (r, row) in rows.iter().enumerate() {
+            if row.len() != self.n_elems as usize {
+                return Err(Error::BadParameter(format!(
+                    "row {r} has {} elements, engine built for {}",
+                    row.len(),
+                    self.n_elems
+                )));
+            }
+            for (t, &v) in row.iter().enumerate() {
+                if v > self.fmt.mask() {
+                    return Err(Error::BadParameter(format!(
+                        "row {r} element {t} = {v:#x} wider than the {tb}-bit format"
+                    )));
+                }
+                sim.write_bits(r, self.a_cols[t], tb, v);
+            }
+            for (t, &v) in x.iter().enumerate() {
+                sim.write_bits(r, self.x_cols[t], tb, v);
+            }
+        }
+        for (i, p) in self.programs.iter().enumerate() {
+            if i == 0 {
+                sim.run_with_inputs(p, &self.input_cols)?;
+            } else {
+                sim.run_unchecked(p);
+            }
+        }
+        Ok((0..rows.len()).map(|r| self.read_row(&sim, r)).collect())
+    }
+}
+
+/// FloatPIM-style float matvec baseline: per element a *rounded* multiply
+/// followed by a *rounded* accumulate (two roundings per element — the
+/// running accumulator is renormalized and repacked after every add,
+/// exactly the pipeline FloatPIM's float MVM performs).
+///
+/// Behavioural model: FloatPIM's cycle-level float schedule is not
+/// public, so — as with the fixed-point baseline — the audited
+/// [`costmodel::floatpim_floatvec_latency`] formula is the comparison
+/// value printed by the Table III float report.
+#[derive(Debug, Clone)]
+pub struct FloatPimFloatVec {
+    fmt: FloatFormat,
+    n_elems: u32,
+}
+
+impl FloatPimFloatVec {
+    /// Build the baseline for `n_elems` elements of format `fmt`.
+    pub fn new(fmt: FloatFormat, n_elems: u32) -> Self {
+        assert!(n_elems >= 1, "need at least one element");
+        Self { fmt, n_elems }
+    }
+
+    /// Quoted latency (audited formula; see `costmodel`).
+    pub fn expected_latency(&self) -> u64 {
+        costmodel::floatpim_floatvec_latency(self.n_elems as u64, self.fmt)
+    }
+
+    /// Quoted minimum crossbar width.
+    pub fn expected_width(&self) -> u64 {
+        costmodel::floatpim_floatvec_width(self.n_elems as u64, self.fmt)
+    }
+
+    /// Compute the baseline's dot products (round after every multiply
+    /// AND every accumulate — note this is *not* bit-identical to the
+    /// fused engine in general; it is FloatPIM's semantics).
+    pub fn compute(&self, rows: &[Vec<u64>], x: &[u64]) -> Result<Vec<u64>> {
+        if x.len() != self.n_elems as usize {
+            return Err(Error::BadParameter(format!(
+                "x has {} elements, baseline built for {}",
+                x.len(),
+                self.n_elems
+            )));
+        }
+        Ok(rows
+            .iter()
+            .map(|row| {
+                row.iter().zip(x).fold(0u64, |acc, (&a, &b)| {
+                    float_add_ref(self.fmt, acc, float_mul_ref(self.fmt, a, b))
+                })
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::float::{float_dot_ref, float_mac_ref};
+    use crate::util::SplitMix64;
+
+    fn random_packed(rng: &mut SplitMix64, fmt: FloatFormat) -> u64 {
+        // Full-range fields, including zero exponents (flushed operands)
+        // and the saturating top exponent.
+        rng.bits(fmt.total_bits())
+    }
+
+    fn random_case(
+        rng: &mut SplitMix64,
+        fmt: FloatFormat,
+        n_elems: u32,
+        m: usize,
+    ) -> (Vec<Vec<u64>>, Vec<u64>) {
+        let rows = (0..m)
+            .map(|_| (0..n_elems).map(|_| random_packed(rng, fmt)).collect())
+            .collect();
+        let x = (0..n_elems).map(|_| random_packed(rng, fmt)).collect();
+        (rows, x)
+    }
+
+    #[test]
+    fn chain_validates_once() {
+        for (fmt, n_elems) in [
+            (FloatFormat::new(3, 2), 1u32),
+            (FloatFormat::new(4, 3), 3),
+            (FloatFormat::FP16, 2),
+            (FloatFormat::FP32, 2),
+        ] {
+            let engine = MultPimFloatVec::new(fmt, n_elems);
+            let report = engine.validate().unwrap_or_else(|e| {
+                panic!("fmt={fmt:?} n={n_elems} chain rejected: {e}")
+            });
+            assert_eq!(
+                report.cycles as u64,
+                engine.latency_cycles(),
+                "fmt={fmt:?} n={n_elems}: every cycle validated"
+            );
+        }
+    }
+
+    #[test]
+    fn single_mac_matches_reference_small_format() {
+        let fmt = FloatFormat::new(3, 2);
+        let engine = MultPimFloatVec::new(fmt, 1);
+        // All operand pairs, batched across crossbar rows.
+        let all: Vec<u64> = (0..1u64 << fmt.total_bits()).collect();
+        for &a in &all {
+            let rows: Vec<Vec<u64>> = all.iter().map(|&v| vec![v]).collect();
+            let got = engine.compute(&rows, &[a]).unwrap();
+            for (&b, &g) in all.iter().zip(&got) {
+                assert_eq!(g, float_mac_ref(fmt, 0, b, a), "a={b:#x} x={a:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_fold() {
+        let mut rng = SplitMix64::new(0xF10D07);
+        for (fmt, n_elems) in [
+            (FloatFormat::new(3, 2), 3u32),
+            (FloatFormat::new(4, 3), 2),
+            (FloatFormat::FP16, 3),
+            (FloatFormat::FP32, 2),
+        ] {
+            let engine = MultPimFloatVec::new(fmt, n_elems);
+            let (rows, x) = random_case(&mut rng, fmt, n_elems, 24);
+            let got = engine.compute(&rows, &x).unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    got[r],
+                    float_dot_ref(fmt, row, &x),
+                    "fmt={fmt:?} n={n_elems} row={r} A={row:?} x={x:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_known_values() {
+        let fmt = FloatFormat::FP32;
+        let engine = MultPimFloatVec::new(fmt, 3);
+        let f = |v: f32| fmt.from_f32(v);
+        let rows = vec![
+            vec![f(1.5), f(-2.0), f(0.25)],
+            vec![f(100.0), f(0.0), f(-4.5)],
+        ];
+        let x = vec![f(2.0), f(3.0), f(8.0)];
+        let got = engine.compute(&rows, &x).unwrap();
+        // 3 - 6 + 2 = -1 ;  200 + 0 - 36 = 164 (all exact in binary32)
+        assert_eq!(fmt.to_f64(got[0]), -1.0);
+        assert_eq!(fmt.to_f64(got[1]), 164.0);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(got[r], float_dot_ref(fmt, row, &x), "row {r}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_wide_values() {
+        let fmt = FloatFormat::new(4, 3);
+        let engine = MultPimFloatVec::new(fmt, 2);
+        assert!(engine.compute(&[vec![0, 0, 0]], &[0, 0]).is_err(), "ragged row");
+        assert!(engine.compute(&[vec![0, 0]], &[0]).is_err(), "short x");
+        assert!(
+            engine.compute(&[vec![1 << 9, 0]], &[0, 0]).is_err(),
+            "value wider than the 8-bit format"
+        );
+        assert!(engine.compute(&[vec![0, 0]], &[1 << 9, 0]).is_err());
+    }
+
+    #[test]
+    fn floatpim_baseline_behaviour() {
+        let fmt = FloatFormat::FP32;
+        let baseline = FloatPimFloatVec::new(fmt, 2);
+        let f = |v: f32| fmt.from_f32(v);
+        let out = baseline
+            .compute(&[vec![f(1.5), f(2.0)], vec![f(-1.0), f(0.5)]], &[f(2.0), f(4.0)])
+            .unwrap();
+        assert_eq!(fmt.to_f64(out[0]), 11.0);
+        assert_eq!(fmt.to_f64(out[1]), 0.0);
+    }
+
+    /// The serial reference schedule is still dramatically cheaper than
+    /// the FloatPIM float formula, and the audited partition-parallel
+    /// formulas reproduce the >= 25x Table III float margin.
+    #[test]
+    fn quoted_float_margin() {
+        let fmt = FloatFormat::FP32;
+        let fused = MultPimFloatVec::new(fmt, 8);
+        let baseline = FloatPimFloatVec::new(fmt, 8);
+        let quoted = baseline.expected_latency() as f64 / fused.expected_latency() as f64;
+        assert!((25.0..26.0).contains(&quoted), "quoted float speedup {quoted}");
+        assert!(
+            fused.latency_cycles() < baseline.expected_latency(),
+            "even the serial schedule ({}) beats the FloatPIM formula ({})",
+            fused.latency_cycles(),
+            baseline.expected_latency()
+        );
+    }
+}

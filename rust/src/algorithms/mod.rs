@@ -16,11 +16,15 @@
 //!   FloatPIM-style baseline.
 //! * [`matmul`] — GEMM by column composition over the fused engine, plus
 //!   the 2-D tile planner the serving layer scatters requests with.
+//! * [`floatvec`] — the full-precision floating-point matvec pipeline
+//!   (the abstract's 25.5x-over-FloatPIM claim) + its FloatPIM-style
+//!   float baseline.
 //! * [`costmodel`] — every closed-form expression the paper quotes.
 
 pub mod adders;
 pub mod broadcast;
 pub mod costmodel;
+pub mod floatvec;
 pub mod fulladder;
 pub mod hajali;
 pub mod matmul;

@@ -11,11 +11,13 @@
 //! See EXPERIMENTS.md §Perf for the measured gains of the compiled +
 //! transposed-staging path over the seed's interpreted per-bit path.
 
+use crate::algorithms::floatvec::MultPimFloatVec;
 use crate::algorithms::matvec::MultPimMatVec;
 use crate::algorithms::multpim::MultPim;
 use crate::algorithms::multpim_area::MultPimArea;
 use crate::algorithms::Multiplier;
 use crate::crossbar::{Crossbar, RegionLayout};
+use crate::fixedpoint::float::FloatFormat;
 use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
 use crate::sim::{validate, CompiledPipeline, CompiledProgram, Simulator};
 use crate::{Error, Result};
@@ -343,6 +345,146 @@ impl ChainShard {
     }
 }
 
+/// A float chain engine for one `(format, n_elems)` shape: the fused
+/// float program chain is chain-validated **once** and lowered **once**
+/// to a [`CompiledPipeline`] at construction — i.e. at
+/// `Coordinator::launch`. Shards share the immutable chain and each own a
+/// resident crossbar that large matrices tile across row-wise, exactly
+/// like [`ChainEngine`].
+pub struct FloatVecEngine {
+    engine: Arc<MultPimFloatVec>,
+    compiled: Arc<CompiledPipeline>,
+    fmt: FloatFormat,
+    n_elems: u32,
+    shard_rows: usize,
+}
+
+impl FloatVecEngine {
+    /// Build, chain-validate, and lower the fused float engine for shards
+    /// of `shard_rows` crossbar rows.
+    pub fn new(exp_bits: u32, man_bits: u32, n_elems: u32, shard_rows: usize) -> Result<Self> {
+        if !(2..=8).contains(&exp_bits) {
+            return Err(Error::BadParameter(format!(
+                "float engine needs an exponent width in 2..=8, got {exp_bits}"
+            )));
+        }
+        if !(1..=23).contains(&man_bits) {
+            return Err(Error::BadParameter(format!(
+                "float engine needs a fraction width in 1..=23, got {man_bits}"
+            )));
+        }
+        if n_elems == 0 {
+            return Err(Error::BadParameter("float engine needs at least one element".into()));
+        }
+        if shard_rows == 0 {
+            return Err(Error::BadParameter(
+                "float engine needs at least one crossbar row per shard".into(),
+            ));
+        }
+        let fmt = FloatFormat::new(exp_bits, man_bits);
+        let engine = Arc::new(MultPimFloatVec::new(fmt, n_elems));
+        // Validate the whole chain exactly once, then lower it exactly
+        // once.
+        engine.validate()?;
+        let words = Crossbar::words_for_rows(shard_rows);
+        let compiled = Arc::new(CompiledPipeline::lower(engine.programs(), words));
+        Ok(Self { engine, compiled, fmt, n_elems, shard_rows })
+    }
+
+    /// The float format.
+    pub fn fmt(&self) -> FloatFormat {
+        self.fmt
+    }
+
+    /// Inner dimension.
+    pub fn n_elems(&self) -> u32 {
+        self.n_elems
+    }
+
+    /// Rows per shard (the row-tiling height).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Simulated cycles per chain execution (serial reference schedule).
+    pub fn cycles(&self) -> u64 {
+        self.compiled.cycles()
+    }
+
+    /// Materialize one shard: a worker-resident crossbar executing the
+    /// pre-lowered float chain.
+    pub fn shard(&self) -> FloatVecShard {
+        FloatVecShard {
+            engine: Arc::clone(&self.engine),
+            compiled: Arc::clone(&self.compiled),
+            shard_rows: self.shard_rows,
+            sim: Simulator::new(self.shard_rows, self.engine.width() as usize),
+            stage: Vec::with_capacity(self.shard_rows),
+        }
+    }
+
+    /// Direct (unserved) path: fresh simulator, interpreted walk — the
+    /// reference the serving tests compare the shard flow against.
+    pub fn compute(&self, rows: &[Vec<u64>], x: &[u64]) -> Result<Vec<u64>> {
+        self.engine.compute(rows, x)
+    }
+
+    /// The wrapped algorithm engine.
+    pub fn inner(&self) -> &MultPimFloatVec {
+        &self.engine
+    }
+}
+
+/// One shard of a float matvec deployment: executes one row tile (up to
+/// `shard_rows` matrix rows of packed floats) per call on a resident
+/// crossbar — word-transposed restage of the matrix elements, whole-word
+/// broadcast restage of the duplicated vector, one pre-lowered chain run,
+/// per-row packed readback. No validation and no lowering ever happen
+/// here.
+pub struct FloatVecShard {
+    engine: Arc<MultPimFloatVec>,
+    compiled: Arc<CompiledPipeline>,
+    shard_rows: usize,
+    sim: Simulator,
+    stage: Vec<u64>,
+}
+
+impl FloatVecShard {
+    /// Tile capacity (crossbar rows).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Cycles one chain execution costs.
+    pub fn cycles(&self) -> u64 {
+        self.compiled.cycles()
+    }
+
+    /// Execute one float matvec tile; returns each row's packed dot
+    /// product, bit-exact against the
+    /// [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)
+    /// composition.
+    pub fn execute(&mut self, rows: &[Vec<u64>], x: &[u64]) -> Vec<u64> {
+        assert!(rows.len() <= self.shard_rows, "tile exceeds shard rows");
+        let tb = self.engine.fmt().total_bits();
+        let n_elems = self.engine.n_elems() as usize;
+        for t in 0..n_elems {
+            self.stage.clear();
+            for row in rows {
+                debug_assert_eq!(row.len(), n_elems, "row length differs from engine shape");
+                self.stage.push(row[t]);
+            }
+            self.sim.crossbar_mut().write_rows_transposed(self.engine.a_col(t), tb, &self.stage);
+        }
+        assert_eq!(x.len(), n_elems, "vector length differs from engine shape");
+        for (t, &xv) in x.iter().enumerate() {
+            self.sim.crossbar_mut().write_rows_broadcast(self.engine.x_col(t), tb, xv, rows.len());
+        }
+        self.compiled.execute(&mut self.sim);
+        (0..rows.len()).map(|r| self.engine.read_row(&self.sim, r)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -450,6 +592,43 @@ mod tests {
         assert!(ChainEngine::new(33, 4, 8).is_err(), "N too large");
         assert!(ChainEngine::new(8, 0, 8).is_err(), "no elements");
         assert!(ChainEngine::new(8, 4, 0).is_err(), "no rows");
+    }
+
+    #[test]
+    fn floatvec_engine_serves_shard_path() {
+        let engine = FloatVecEngine::new(4, 3, 3, 8).unwrap();
+        let fmt = engine.fmt();
+        let mut rng = SplitMix64::new(0xF7E1);
+        let mut shard = engine.shard();
+        // Tile reuse across varying occupancy on a dirty resident
+        // crossbar, checked against the direct path and the reference.
+        for occupancy in [8usize, 1, 5, 8, 2] {
+            let rows: Vec<Vec<u64>> = (0..occupancy)
+                .map(|_| (0..3).map(|_| rng.bits(fmt.total_bits())).collect())
+                .collect();
+            let x: Vec<u64> = (0..3).map(|_| rng.bits(fmt.total_bits())).collect();
+            let served = shard.execute(&rows, &x);
+            assert_eq!(served, engine.compute(&rows, &x).unwrap(), "occupancy={occupancy}");
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    served[r],
+                    crate::fixedpoint::float::float_dot_ref(fmt, row, &x),
+                    "occupancy={occupancy} row={r}"
+                );
+            }
+        }
+        assert_eq!(shard.cycles(), engine.cycles());
+        assert_eq!(shard.shard_rows(), 8);
+    }
+
+    #[test]
+    fn floatvec_engine_rejects_bad_shapes() {
+        assert!(FloatVecEngine::new(1, 3, 2, 8).is_err(), "exponent too narrow");
+        assert!(FloatVecEngine::new(9, 3, 2, 8).is_err(), "exponent too wide");
+        assert!(FloatVecEngine::new(4, 0, 2, 8).is_err(), "no fraction bits");
+        assert!(FloatVecEngine::new(4, 24, 2, 8).is_err(), "fraction too wide");
+        assert!(FloatVecEngine::new(4, 3, 0, 8).is_err(), "no elements");
+        assert!(FloatVecEngine::new(4, 3, 2, 0).is_err(), "no rows");
     }
 
     /// Panel execution (the GEMM tile shape): staging the matrix once and

@@ -1,26 +1,28 @@
 //! L3 coordinator: the serving layer over the PIM substrate.
 //!
 //! A deployment exposes fixed-point **multiply**, **matvec**, and
-//! **matmul** (GEMM) operations backed by simulated memristive crossbars.
-//! Since PR 3 every scenario is a tenant of one generic serving core:
+//! **matmul** (GEMM) operations plus full-precision floating-point
+//! **float matvec**, all backed by simulated memristive crossbars. Every
+//! scenario is a tenant of one generic serving core:
 //!
 //! * [`pool`] — the [`Workload`](pool::Workload) abstraction and the
 //!   generic [`ShardPool`](pool::ShardPool): one shared tile queue, `S`
 //!   worker threads with resident crossbars, per-workload labeled
 //!   metrics, close-and-drain shutdown. The pool/queue/gather/metrics
 //!   plumbing exists exactly once, here;
-//! * [`workloads`] — the tenants: [`MultiplyWorkload`], [`MatVecWorkload`],
-//!   and [`MatMulWorkload`], each a thin plan/execute/gather impl over its
-//!   engine;
+//! * [`workloads`] — the four tenants: [`MultiplyWorkload`],
+//!   [`MatVecWorkload`], [`MatMulWorkload`], and [`FloatVecWorkload`],
+//!   each a thin plan/execute/gather impl over its engine;
 //! * [`batcher`] — planning primitives: the [`RowBatcher`] (multiply
 //!   requests are *row-batched*: a single-row PIM program executes
 //!   identically across every crossbar row (Fig. 1), so up to `rows`
 //!   independent requests share one program execution), the shared
 //!   [`batcher::BatchQueue`], and the generic [`ScatterGather`]
 //!   completion tiling workloads gather through;
-//! * [`engine`] — per-width multiplier engines and per-shape §VI chain
-//!   engines (both validated and compiled **once** at launch), with
-//!   optional golden-model verification;
+//! * [`engine`] — per-width multiplier engines, per-shape §VI chain
+//!   engines, and per-shape float chain engines (all validated and
+//!   compiled **once** at launch), with optional golden-model
+//!   verification;
 //! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model;
 //! * [`server`] — the routing front door ([`Coordinator`]) and the
 //!   deployment configs.
@@ -41,6 +43,13 @@
 //!      `shard_rows` rows;
 //!    * *matmul* — the `m x p` output splits 2-D into row-tile x
 //!      output-column-panel rectangles (`shard_rows` x `panel_cols`);
+//!    * *float matvec* — row tiles like matvec; operands are packed
+//!      floats of the deployed
+//!      [`FloatFormat`](crate::fixedpoint::float::FloatFormat) and every
+//!      gathered row is
+//!      bit-exact against the
+//!      [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)
+//!      composition;
 //! 2. **execute** — the deployment's `S` pool workers pop tiles from the
 //!    shared queue. Each worker owns a **resident crossbar** created at
 //!    launch and reused for every tile (clear-and-restage through the
@@ -56,6 +65,7 @@
 //!    once, at launch, never per tile. A matmul tile stages its rows of A
 //!    once and reruns the chain per panel column
 //!    ([`ChainShard::execute_panel`](engine::ChainShard::execute_panel));
+//!    float tiles run the fused float chain the same way;
 //! 3. **gather** — multiply tiles reply per job; tiling workloads write
 //!    each tile's cells through the request's shared [`ScatterGather`]
 //!    and whichever worker completes the **last** tile sends the
@@ -83,11 +93,15 @@ pub mod server;
 pub mod workloads;
 
 pub use batcher::{RowBatcher, ScatterGather};
-pub use engine::{ChainEngine, ChainShard, EngineConfig, MultiplyEngine, ShardExecutor};
+pub use engine::{
+    ChainEngine, ChainShard, EngineConfig, FloatVecEngine, FloatVecShard, MultiplyEngine,
+    ShardExecutor,
+};
 pub use metrics::{Metrics, ShardStats, WorkloadCounters};
 pub use pipeline::PipelineModel;
 pub use pool::{ShardPool, TileCost, Workload, WorkloadKey};
 pub use server::{
-    Coordinator, MatMulDeployment, MatVecDeployment, MultiplyDeployment, Request, Response,
+    Coordinator, FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
+    Request, Response,
 };
-pub use workloads::{MatMulWorkload, MatVecWorkload, MultiplyWorkload};
+pub use workloads::{FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyWorkload};

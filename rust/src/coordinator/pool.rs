@@ -2,7 +2,8 @@
 //! scenario rides.
 //!
 //! A deployed scenario (a multiply width, a §VI matvec shape, a GEMM
-//! shape) is a [`Workload`]: it knows how to materialize a
+//! shape, a float matvec shape) is a [`Workload`]: it knows how to
+//! materialize a
 //! resident-crossbar shard executor and how to execute one queued tile on
 //! it, completing the tile's share of the originating request. Everything
 //! around that — the shared tile queue, the pool of worker threads, the
@@ -60,6 +61,16 @@ pub enum WorkloadKey {
         /// Inner dimension (columns of A = rows of B).
         k: u32,
     },
+    /// Full-precision floating-point matrix-vector multiplication at one
+    /// `(format, inner dim)` shape.
+    FloatVec {
+        /// Exponent field width in bits.
+        exp_bits: u32,
+        /// Fraction field width in bits.
+        man_bits: u32,
+        /// Inner dimension (vector length).
+        n_elems: u32,
+    },
 }
 
 impl fmt::Display for WorkloadKey {
@@ -70,6 +81,9 @@ impl fmt::Display for WorkloadKey {
                 write!(f, "matvec N={n_bits} n={n_elems}")
             }
             WorkloadKey::MatMul { n_bits, k } => write!(f, "matmul N={n_bits} k={k}"),
+            WorkloadKey::FloatVec { exp_bits, man_bits, n_elems } => {
+                write!(f, "floatvec E={exp_bits} M={man_bits} n={n_elems}")
+            }
         }
     }
 }
@@ -97,8 +111,9 @@ pub struct TileCost {
 /// its once-validated, once-lowered compiled program or pipeline); all
 /// mutable execution state lives in the per-worker `Shard`.
 pub trait Workload: Send + Sync + 'static {
-    /// One queued unit of work (a flushed multiply batch, a matvec row
-    /// tile, a matmul row-tile x column-panel rectangle).
+    /// One queued unit of work (a flushed multiply batch, a matvec or
+    /// float-matvec row tile, a matmul row-tile x column-panel
+    /// rectangle).
     type Tile: Send + 'static;
     /// Per-worker executor state — typically a resident crossbar reused
     /// across tiles. Created inside the worker thread, so it does not need
@@ -289,5 +304,9 @@ mod tests {
             "matvec N=8 n=4"
         );
         assert_eq!(WorkloadKey::MatMul { n_bits: 16, k: 64 }.to_string(), "matmul N=16 k=64");
+        assert_eq!(
+            WorkloadKey::FloatVec { exp_bits: 8, man_bits: 23, n_elems: 8 }.to_string(),
+            "floatvec E=8 M=23 n=8"
+        );
     }
 }

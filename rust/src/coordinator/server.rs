@@ -11,6 +11,7 @@
 //!                     |    and flushes batch tiles               |
 //!                     |  matvec: row tiles (shard_rows)          |
 //!                     |  matmul: row-tile x column-panel rects   |
+//!                     |  floatvec: row tiles (shard_rows)        |
 //!                     |                                          v
 //!                     +----------------> ShardPool<W>: BatchQueue --+--+
 //!                                                                   |  |
@@ -23,7 +24,8 @@
 //! ```
 //!
 //! Every deployed scenario — a multiply width, a §VI matvec shape, a GEMM
-//! shape — is a [`Workload`](super::pool::Workload) served by one
+//! shape, a full-precision float matvec shape — is a
+//! [`Workload`](super::pool::Workload) served by one
 //! [`ShardPool`]: the pool/queue/worker/metrics plumbing exists once, in
 //! [`super::pool`], and adding a scenario costs one `Workload` impl, not
 //! a new serving stack.
@@ -38,12 +40,13 @@
 //! subcommand's snapshot output).
 
 use super::batcher::{BatchQueue, RowBatcher};
-use super::engine::{ChainEngine, EngineConfig, MultiplyEngine};
+use super::engine::{ChainEngine, EngineConfig, FloatVecEngine, MultiplyEngine};
 use super::metrics::Metrics;
 use super::pool::{ShardPool, WorkloadKey};
 use super::workloads::{
-    MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyTile, MultiplyWorkload,
+    FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyTile, MultiplyWorkload,
 };
+use crate::fixedpoint::float::FloatFormat;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -82,6 +85,21 @@ pub enum Request {
         /// Matrix B, row-major `k x p`.
         b: Vec<Vec<u64>>,
     },
+    /// Full-precision floating-point `A x`: every element a packed float
+    /// of the deployed [`FloatFormat`]; each result row is bit-exact
+    /// against the
+    /// [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)
+    /// composition.
+    FloatMatVec {
+        /// Exponent field width of the packed operands.
+        exp_bits: u32,
+        /// Fraction field width of the packed operands.
+        man_bits: u32,
+        /// Matrix rows (packed floats).
+        rows: Vec<Vec<u64>>,
+        /// Vector (packed floats).
+        x: Vec<u64>,
+    },
 }
 
 /// A completed response.
@@ -93,6 +111,8 @@ pub enum Response {
     InnerProducts(Vec<u64>),
     /// Row-major `m x p` result of a [`Request::MatMul`].
     Matrix(Vec<Vec<u64>>),
+    /// Packed float dot products of a [`Request::FloatMatVec`].
+    FloatVector(Vec<u64>),
 }
 
 enum WorkerMsg {
@@ -112,6 +132,7 @@ pub struct Coordinator {
     multiply: HashMap<u32, MultiplyFront>,
     matvec: HashMap<(u32, u32), ShardPool<MatVecWorkload>>,
     matmul: HashMap<(u32, u32), ShardPool<MatMulWorkload>>,
+    floatvec: HashMap<(u32, u32, u32), ShardPool<FloatVecWorkload>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     /// Global admission counter; its value rides on every multiply job as
@@ -151,6 +172,21 @@ pub struct MatVecDeployment {
     pub shards: usize,
 }
 
+/// Configuration for one deployed full-precision float matvec shape.
+#[derive(Debug, Clone, Copy)]
+pub struct FloatVecDeployment {
+    /// Exponent field width in bits (2..=8).
+    pub exp_bits: u32,
+    /// Fraction field width in bits (1..=23).
+    pub man_bits: u32,
+    /// Inner dimension (vector length).
+    pub n_elems: u32,
+    /// Crossbar rows per shard — the row-tiling height.
+    pub shard_rows: usize,
+    /// Crossbar shards (worker threads) sharing this shape's tile queue.
+    pub shards: usize,
+}
+
 /// Configuration for one deployed GEMM shape.
 #[derive(Debug, Clone, Copy)]
 pub struct MatMulDeployment {
@@ -170,18 +206,20 @@ pub struct MatMulDeployment {
 
 impl Coordinator {
     /// Launch the shard pools for the given multiply widths, matvec
-    /// shapes, and matmul shapes.
+    /// shapes, matmul shapes, and float matvec shapes.
     ///
     /// Each multiply width's program is strictly validated and lowered to
     /// its [`crate::sim::CompiledProgram`] exactly once, here. Each
-    /// matvec/matmul shape's program *chain* is likewise chain-validated
-    /// and lowered to a [`crate::sim::CompiledPipeline`] exactly once,
-    /// here — no request ever validates or lowers anything. Per-shard
-    /// workers reuse their crossbar allocation for the process lifetime.
+    /// matvec/matmul/floatvec shape's program *chain* is likewise
+    /// chain-validated and lowered to a
+    /// [`crate::sim::CompiledPipeline`] exactly once, here — no request
+    /// ever validates or lowers anything. Per-shard workers reuse their
+    /// crossbar allocation for the process lifetime.
     pub fn launch(
         multiplies: &[MultiplyDeployment],
         matvecs: &[MatVecDeployment],
         matmuls: &[MatMulDeployment],
+        floatvecs: &[FloatVecDeployment],
     ) -> Result<Self> {
         // Phase 1: validate every deployment and build every engine
         // *before* spawning any worker. A failure here must leave no
@@ -250,6 +288,30 @@ impl Coordinator {
             }
             matmul_engines.push((*dep, ChainEngine::new(dep.n_bits, dep.k, dep.shard_rows)?));
         }
+        let mut floatvec_engines: Vec<(FloatVecDeployment, FloatVecEngine)> =
+            Vec::with_capacity(floatvecs.len());
+        for dep in floatvecs {
+            if dep.shards == 0 {
+                return Err(Error::BadParameter(format!(
+                    "floatvec deployment E={} M={} n={} needs at least one shard",
+                    dep.exp_bits, dep.man_bits, dep.n_elems
+                )));
+            }
+            if floatvec_engines.iter().any(|(d, _)| {
+                (d.exp_bits, d.man_bits, d.n_elems) == (dep.exp_bits, dep.man_bits, dep.n_elems)
+            }) {
+                return Err(Error::BadParameter(format!(
+                    "floatvec shape E={} M={} n={} deployed twice",
+                    dep.exp_bits, dep.man_bits, dep.n_elems
+                )));
+            }
+            // Chain-validate + lower once; shards share the immutable
+            // compiled pipeline.
+            floatvec_engines.push((
+                *dep,
+                FloatVecEngine::new(dep.exp_bits, dep.man_bits, dep.n_elems, dep.shard_rows)?,
+            ));
+        }
 
         // Phase 2: everything validated — spawn the pools (infallible).
         let metrics = Arc::new(Metrics::default());
@@ -285,7 +347,26 @@ impl Coordinator {
             );
             matmul.insert(shape, pool);
         }
-        Ok(Self { multiply, matvec, matmul, workers, metrics, tickets: AtomicU64::new(0) })
+        let mut floatvec = HashMap::new();
+        for (dep, engine) in floatvec_engines {
+            let shape = (dep.exp_bits, dep.man_bits, dep.n_elems);
+            let pool = ShardPool::launch(
+                FloatVecWorkload::new(engine),
+                dep.shards,
+                &metrics,
+                &mut workers,
+            );
+            floatvec.insert(shape, pool);
+        }
+        Ok(Self {
+            multiply,
+            matvec,
+            matmul,
+            floatvec,
+            workers,
+            metrics,
+            tickets: AtomicU64::new(0),
+        })
     }
 
     /// Service metrics.
@@ -391,6 +472,58 @@ impl Coordinator {
                     }
                 }
             }
+            Request::FloatMatVec { exp_bits, man_bits, rows, x } => {
+                let key =
+                    WorkloadKey::FloatVec { exp_bits, man_bits, n_elems: x.len() as u32 };
+                let pool = self
+                    .floatvec
+                    .get(&(exp_bits, man_bits, x.len() as u32))
+                    .ok_or(Error::NoDeployment(key))?;
+                let fmt = FloatFormat::new(exp_bits, man_bits);
+                let check = |what: &str, idx: usize, v: u64| -> Result<()> {
+                    if v > fmt.mask() {
+                        return Err(Error::BadParameter(format!(
+                            "float matvec {what} {idx} holds {v:#x}, wider than the \
+                             {}-bit packed format",
+                            fmt.total_bits()
+                        )));
+                    }
+                    Ok(())
+                };
+                for (t, &v) in x.iter().enumerate() {
+                    check("x element", t, v)?;
+                }
+                for (r, row) in rows.iter().enumerate() {
+                    if row.len() != x.len() {
+                        return Err(Error::BadParameter(format!(
+                            "float matvec row {r} has {} elements, expected {}",
+                            row.len(),
+                            x.len()
+                        )));
+                    }
+                    for &v in row {
+                        check("row", r, v)?;
+                    }
+                }
+                // Admission: draw a ticket and stamp the enqueue time the
+                // tile queue-wait metric measures from.
+                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                pool.counters().record_admission(rows.len() as u64);
+                if rows.is_empty() {
+                    let _ = reply_tx.send(Ok(Response::FloatVector(Vec::new())));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // Row-wise tiling, identical to the fixed-point matvec
+                // tenant; the gathered result is bit-exact against the
+                // float_dot_ref composition.
+                for tile in pool.workload().plan(rows, x, reply_tx, enqueued) {
+                    if !pool.push(tile) {
+                        return Err(Error::Runtime("floatvec shard pool shut down".into()));
+                    }
+                }
+            }
         }
         Ok(reply_rx)
     }
@@ -423,6 +556,24 @@ impl Coordinator {
         }
     }
 
+    /// Convenience: synchronous full-precision float matvec (`rows` and
+    /// `x` hold packed floats of the deployed format; the result is
+    /// bit-exact against
+    /// [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)).
+    pub fn float_matvec(
+        &self,
+        exp_bits: u32,
+        man_bits: u32,
+        rows: Vec<Vec<u64>>,
+        x: Vec<u64>,
+    ) -> Result<Vec<u64>> {
+        let rx = self.submit(Request::FloatMatVec { exp_bits, man_bits, rows, x })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::FloatVector(v) => Ok(v),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
     /// Graceful shutdown with the drain guarantee: every tile already
     /// admitted to *any* workload queue is completed before the workers
     /// are joined — no accepted request is ever dropped.
@@ -441,6 +592,9 @@ impl Coordinator {
             pool.close();
         }
         for pool in self.matmul.values() {
+            pool.close();
+        }
+        for pool in self.floatvec.values() {
             pool.close();
         }
         for w in self.workers.drain(..) {
@@ -515,9 +669,19 @@ mod tests {
         MatMulDeployment { n_bits, k, shard_rows, panel_cols, shards }
     }
 
+    fn fv_deployment(
+        exp_bits: u32,
+        man_bits: u32,
+        n_elems: u32,
+        shard_rows: usize,
+        shards: usize,
+    ) -> FloatVecDeployment {
+        FloatVecDeployment { exp_bits, man_bits, n_elems, shard_rows, shards }
+    }
+
     #[test]
     fn multiply_roundtrip() {
-        let coord = Coordinator::launch(&[deployment(16, 4, 1, 1)], &[], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(16, 4, 1, 1)], &[], &[], &[]).unwrap();
         assert_eq!(coord.multiply(16, 1234, 567).unwrap(), 1234 * 567);
         assert!(
             matches!(
@@ -531,7 +695,7 @@ mod tests {
 
     #[test]
     fn batching_fills_rows() {
-        let coord = Coordinator::launch(&[deployment(8, 8, 50, 2)], &[], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 8, 50, 2)], &[], &[], &[]).unwrap();
         let receivers: Vec<_> = (0..8u64)
             .map(|i| {
                 coord
@@ -553,7 +717,7 @@ mod tests {
 
     #[test]
     fn deadline_flush_partial_batch() {
-        let coord = Coordinator::launch(&[deployment(8, 1024, 5, 1)], &[], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 1024, 5, 1)], &[], &[], &[]).unwrap();
         let p = coord.multiply(8, 3, 5).unwrap(); // waits for the deadline
         assert_eq!(p, 15);
         coord.shutdown();
@@ -561,7 +725,7 @@ mod tests {
 
     #[test]
     fn matvec_route() {
-        let coord = Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1)], &[]).unwrap();
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 1)], &[], &[]).unwrap();
         let out = coord
             .matvec(8, vec![vec![1, 2, 3], vec![4, 5, 6]], vec![7, 8, 9])
             .unwrap();
@@ -588,7 +752,7 @@ mod tests {
     #[test]
     fn matmul_route() {
         let coord =
-            Coordinator::launch(&[], &[], &[mm_deployment(8, 2, 4, 2, 2)]).unwrap();
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 2, 4, 2, 2)], &[]).unwrap();
         let a = vec![vec![1u64, 2], vec![3, 4], vec![5, 6]];
         let b = vec![vec![7u64, 8, 9], vec![10, 11, 12]];
         let c = coord.matmul(8, a, b).unwrap();
@@ -639,7 +803,7 @@ mod tests {
     /// gathered result preserves row order.
     #[test]
     fn matvec_tiles_across_shards() {
-        let coord = Coordinator::launch(&[], &[mv_deployment(8, 2, 4, 3)], &[]).unwrap();
+        let coord = Coordinator::launch(&[], &[mv_deployment(8, 2, 4, 3)], &[], &[]).unwrap();
         let m = 4usize * 4 + 3; // 5 tiles: 4 full + 1 partial
         let rows: Vec<Vec<u64>> =
             (0..m).map(|r| vec![r as u64 % 251, (r as u64 * 7) % 251]).collect();
@@ -674,6 +838,7 @@ mod tests {
             &[deployment(8, 4, 1, 1)],
             &[mv_deployment(8, 3, 8, 1)],
             &[],
+            &[],
         )
         .unwrap();
         coord
@@ -694,7 +859,7 @@ mod tests {
     /// lands in the queue-latency counters, globally and per workload.
     #[test]
     fn queue_wait_is_recorded() {
-        let coord = Coordinator::launch(&[deployment(8, 64, 2, 2)], &[], &[]).unwrap();
+        let coord = Coordinator::launch(&[deployment(8, 64, 2, 2)], &[], &[], &[]).unwrap();
         for i in 0..5u64 {
             coord.multiply(8, i + 1, 3).unwrap();
         }
@@ -714,49 +879,133 @@ mod tests {
 
     #[test]
     fn invalid_deployments_rejected() {
-        assert!(Coordinator::launch(&[deployment(8, 4, 1, 0)], &[], &[]).is_err(), "0 shards");
+        assert!(Coordinator::launch(&[deployment(8, 4, 1, 0)], &[], &[], &[]).is_err(), "0 shards");
         assert!(
-            Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[], &[])
+            Coordinator::launch(&[deployment(8, 4, 1, 1), deployment(8, 8, 1, 1)], &[], &[], &[])
                 .is_err(),
             "duplicate width"
         );
         assert!(
-            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 0)], &[]).is_err(),
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 4, 0)], &[], &[]).is_err(),
             "0 matvec shards"
         );
         assert!(
-            Coordinator::launch(&[], &[mv_deployment(8, 3, 0, 1)], &[]).is_err(),
+            Coordinator::launch(&[], &[mv_deployment(8, 3, 0, 1)], &[], &[]).is_err(),
             "0 matvec shard rows"
         );
         assert!(
             Coordinator::launch(
                 &[],
                 &[mv_deployment(8, 3, 4, 1), mv_deployment(8, 3, 8, 1)],
+                &[],
                 &[]
             )
             .is_err(),
             "duplicate matvec shape"
         );
         assert!(
-            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 2, 0)]).is_err(),
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 2, 0)], &[]).is_err(),
             "0 matmul shards"
         );
         assert!(
-            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 0, 1)]).is_err(),
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 3, 4, 0, 1)], &[]).is_err(),
             "0 matmul panel columns"
         );
         assert!(
-            Coordinator::launch(&[], &[], &[mm_deployment(8, 0, 4, 2, 1)]).is_err(),
+            Coordinator::launch(&[], &[], &[mm_deployment(8, 0, 4, 2, 1)], &[]).is_err(),
             "0 matmul inner dimension"
         );
         assert!(
             Coordinator::launch(
                 &[],
                 &[],
-                &[mm_deployment(8, 3, 4, 2, 1), mm_deployment(8, 3, 8, 4, 1)]
+                &[mm_deployment(8, 3, 4, 2, 1), mm_deployment(8, 3, 8, 4, 1)],
+                &[]
             )
             .is_err(),
             "duplicate matmul shape"
         );
+        assert!(
+            Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 3, 2, 4, 0)]).is_err(),
+            "0 floatvec shards"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 3, 2, 0, 1)]).is_err(),
+            "0 floatvec shard rows"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[], &[fv_deployment(9, 3, 2, 4, 1)]).is_err(),
+            "floatvec exponent too wide"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 0, 2, 4, 1)]).is_err(),
+            "floatvec without fraction bits"
+        );
+        assert!(
+            Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 3, 0, 4, 1)]).is_err(),
+            "0 floatvec inner dimension"
+        );
+        assert!(
+            Coordinator::launch(
+                &[],
+                &[],
+                &[],
+                &[fv_deployment(4, 3, 2, 4, 1), fv_deployment(4, 3, 2, 8, 1)]
+            )
+            .is_err(),
+            "duplicate floatvec shape"
+        );
+    }
+
+    #[test]
+    fn float_matvec_route() {
+        use crate::fixedpoint::float::{float_dot_ref, FloatFormat};
+        let fmt = FloatFormat::new(4, 3);
+        let coord = Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 3, 2, 4, 1)]).unwrap();
+        let f = |v: f32| fmt.from_f32(v);
+        let rows = vec![vec![f(1.5), f(2.0)], vec![f(-3.0), f(0.5)]];
+        let x = vec![f(2.0), f(4.0)];
+        let out = coord.float_matvec(4, 3, rows.clone(), x.clone()).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], float_dot_ref(fmt, row, &x), "row {r}");
+        }
+        // 1.5*2 + 2*4 = 11 ; -3*2 + 0.5*4 = -4 (exact in this format)
+        assert_eq!(fmt.to_f64(out[0]), 11.0);
+        assert_eq!(fmt.to_f64(out[1]), -4.0);
+        assert!(
+            matches!(
+                coord.float_matvec(4, 3, vec![vec![0, 0, 0]], vec![0, 0, 0]),
+                Err(Error::NoDeployment(WorkloadKey::FloatVec {
+                    exp_bits: 4,
+                    man_bits: 3,
+                    n_elems: 3
+                }))
+            ),
+            "undeployed shape rejected with its typed key"
+        );
+        assert!(
+            matches!(
+                coord.float_matvec(4, 3, vec![vec![1, 2]], vec![1, 2, 3]),
+                Err(Error::NoDeployment(_))
+            ),
+            "wrong inner dimension routes to a missing key"
+        );
+        assert!(
+            matches!(
+                coord.float_matvec(4, 3, vec![vec![1, 2, 3]], vec![1, 2]),
+                Err(Error::BadParameter(_))
+            ),
+            "ragged row rejected at admission"
+        );
+        assert!(
+            matches!(
+                coord.float_matvec(4, 3, vec![vec![1 << 8, 0]], vec![1, 2]),
+                Err(Error::BadParameter(_))
+            ),
+            "value wider than the packed format rejected at admission"
+        );
+        // Empty matrices complete immediately with an empty result.
+        assert_eq!(coord.float_matvec(4, 3, vec![], vec![1, 2]).unwrap(), Vec::<u64>::new());
+        coord.shutdown();
     }
 }

@@ -15,9 +15,17 @@
 //!   per panel column ([`ChainShard::execute_panel`]), scattering its
 //!   rectangle of the row-major output through the shared
 //!   [`ScatterGather`].
+//! * [`FloatVecWorkload`] — full-precision floating-point matvec, the
+//!   fourth tenant. Plans like matvec (row tiles of up to `shard_rows`
+//!   rows sharing one gather), executes the pre-lowered fused float
+//!   chain, and every gathered result is bit-exact against the
+//!   [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)
+//!   composition.
 
 use super::batcher::{Pending, ScatterGather};
-use super::engine::{ChainEngine, ChainShard, MultiplyEngine, ShardExecutor};
+use super::engine::{
+    ChainEngine, ChainShard, FloatVecEngine, FloatVecShard, MultiplyEngine, ShardExecutor,
+};
 use super::pool::{TileCost, Workload, WorkloadKey};
 use super::server::Response;
 use crate::algorithms::matmul::plan_tiles;
@@ -285,6 +293,114 @@ impl MatMulWorkload {
                 }
             })
             .collect()
+    }
+}
+
+/// One float matvec row tile: a contiguous row range of the request's
+/// packed-float matrix, the shared packed vector, and the request's
+/// completion state.
+pub struct FloatVecTile {
+    rows: Arc<Vec<Vec<u64>>>,
+    /// Index of the tile's first row in the matrix (result placement).
+    start: usize,
+    /// Rows in this tile.
+    len: usize,
+    x: Arc<Vec<u64>>,
+    gather: Arc<ScatterGather<u64>>,
+    reply: ReplySender,
+    /// Admission timestamp of the parent request (queue-wait accounting).
+    enqueued: Instant,
+}
+
+/// The full-precision float matvec tenant for one deployed
+/// `(format, n_elems)` shape.
+pub struct FloatVecWorkload {
+    engine: FloatVecEngine,
+}
+
+impl FloatVecWorkload {
+    /// Wrap a launch-time-built float chain engine.
+    pub fn new(engine: FloatVecEngine) -> Self {
+        Self { engine }
+    }
+
+    /// The wrapped float chain engine.
+    pub fn engine(&self) -> &FloatVecEngine {
+        &self.engine
+    }
+
+    /// Plan an admitted request into row tiles sharing one gather.
+    /// `rows` must be non-empty (empty requests are answered at
+    /// admission).
+    pub fn plan(
+        &self,
+        rows: Vec<Vec<u64>>,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<FloatVecTile> {
+        let m = rows.len();
+        let shard_rows = self.engine.shard_rows();
+        let tiles = m / shard_rows + usize::from(m % shard_rows != 0);
+        let gather = Arc::new(ScatterGather::new(m, tiles));
+        let rows = Arc::new(rows);
+        let x = Arc::new(x);
+        let mut planned = Vec::with_capacity(tiles);
+        let mut start = 0usize;
+        while start < m {
+            let len = (m - start).min(shard_rows);
+            planned.push(FloatVecTile {
+                rows: Arc::clone(&rows),
+                start,
+                len,
+                x: Arc::clone(&x),
+                gather: Arc::clone(&gather),
+                reply: reply.clone(),
+                enqueued,
+            });
+            start += len;
+        }
+        planned
+    }
+}
+
+impl Workload for FloatVecWorkload {
+    type Tile = FloatVecTile;
+    type Shard = FloatVecShard;
+
+    fn key(&self) -> WorkloadKey {
+        let fmt = self.engine.fmt();
+        WorkloadKey::FloatVec {
+            exp_bits: fmt.exp_bits,
+            man_bits: fmt.man_bits,
+            n_elems: self.engine.n_elems(),
+        }
+    }
+
+    fn shard(&self) -> FloatVecShard {
+        self.engine.shard()
+    }
+
+    fn execute(
+        &self,
+        shard: &mut FloatVecShard,
+        tile: FloatVecTile,
+        record: &mut dyn FnMut(TileCost),
+    ) {
+        let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
+        let slice = &tile.rows[tile.start..tile.start + tile.len];
+        let out = shard.execute(slice, &tile.x);
+        let units = tile.len as u64;
+        // Record before completing the gather: the reply this tile may
+        // trigger must never be observable ahead of its counters.
+        record(TileCost {
+            units,
+            cycles: shard.cycles(),
+            queue_wait: queue_wait * tile.len as u32,
+        });
+        if let Some(full) = tile.gather.complete(tile.start, &out) {
+            let _ = tile.reply.send(Ok(Response::FloatVector(full)));
+        }
     }
 }
 

@@ -1,0 +1,418 @@
+//! Floating-point format and the bit-exact software reference for the
+//! full-precision matrix-vector pipeline (the abstract's "we optimize
+//! MultPIM for full-precision matrix-vector multiplication" claim).
+//!
+//! The format follows FloatPIM's hardware conventions rather than full
+//! IEEE 754: **flush-to-zero** subnormals (an exponent field of 0 means
+//! zero regardless of the mantissa), **no NaN/Inf encodings** (the top
+//! exponent field is an ordinary value; overflow saturates to the largest
+//! finite value), and **round-to-nearest-even**. Within that envelope the
+//! arithmetic is exact: a multiply-accumulate is *fused* — the product is
+//! formed exactly and the sum is rounded once ([`float_mac_ref`]), which
+//! for normal-range binary32 values agrees bit-for-bit with IEEE
+//! `f32::mul_add` (pinned by `rust/tests/float_fuzz.rs`).
+//!
+//! [`float_mac_ref`] is the *specification*: the in-memory pipeline
+//! ([`MultPimFloatVec`](crate::algorithms::floatvec::MultPimFloatVec))
+//! transliterates the exact same register algorithm into stateful-logic
+//! gates, and every served result must match it bit-for-bit.
+//!
+//! ```
+//! use multpim::fixedpoint::float::{float_mac_ref, FloatFormat};
+//! let fmt = FloatFormat::FP32;
+//! let (acc, a, x) = (fmt.from_f32(0.25), fmt.from_f32(1.5), fmt.from_f32(2.0));
+//! assert_eq!(fmt.to_f64(float_mac_ref(fmt, acc, a, x)), 3.25);
+//! ```
+
+/// A packed floating-point format: 1 sign bit, `exp_bits` biased exponent
+/// bits, `man_bits` fraction bits, packed LSB-first as
+/// `[fraction | exponent | sign]` (so the packed word reads like IEEE
+/// interchange layouts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatFormat {
+    /// Exponent field width in bits (2..=8).
+    pub exp_bits: u32,
+    /// Fraction (mantissa) field width in bits (1..=23).
+    pub man_bits: u32,
+}
+
+impl FloatFormat {
+    /// Full-precision 32-bit format (binary32 layout: 8-bit exponent,
+    /// 23-bit fraction) — the Table III float configuration.
+    pub const FP32: FloatFormat = FloatFormat { exp_bits: 8, man_bits: 23 };
+    /// Half precision (binary16 layout).
+    pub const FP16: FloatFormat = FloatFormat { exp_bits: 5, man_bits: 10 };
+    /// bfloat16 layout.
+    pub const BF16: FloatFormat = FloatFormat { exp_bits: 8, man_bits: 7 };
+
+    /// Construct a format. Exponent width 2..=8, fraction width 1..=23,
+    /// total packed width at most 32 bits ("full precision" tops out at
+    /// binary32; the exact significand product must fit the 2N-bit
+    /// fixed-point accumulator width of the §VI engine).
+    pub fn new(exp_bits: u32, man_bits: u32) -> Self {
+        assert!((2..=8).contains(&exp_bits), "exponent width must be in 2..=8");
+        assert!((1..=23).contains(&man_bits), "fraction width must be in 1..=23");
+        Self { exp_bits, man_bits }
+    }
+
+    /// Total packed width: `1 + exp_bits + man_bits`.
+    pub fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Exponent bias: `2^(exp_bits-1) - 1`.
+    pub fn bias(&self) -> i64 {
+        (1i64 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest exponent field value (an ordinary exponent — no Inf/NaN).
+    pub fn max_exp(&self) -> u64 {
+        (1u64 << self.exp_bits) - 1
+    }
+
+    /// Mask of the packed width.
+    pub fn mask(&self) -> u64 {
+        (1u64 << self.total_bits()) - 1
+    }
+
+    /// Pack (sign, exponent field, fraction field).
+    pub fn pack(&self, sign: u64, exp: u64, man: u64) -> u64 {
+        debug_assert!(sign <= 1 && exp <= self.max_exp() && man < (1 << self.man_bits));
+        (sign << (self.exp_bits + self.man_bits)) | (exp << self.man_bits) | man
+    }
+
+    /// Unpack into (sign, exponent field, fraction field).
+    pub fn unpack(&self, bits: u64) -> (u64, u64, u64) {
+        let man = bits & ((1 << self.man_bits) - 1);
+        let exp = (bits >> self.man_bits) & self.max_exp();
+        let sign = (bits >> (self.exp_bits + self.man_bits)) & 1;
+        (sign, exp, man)
+    }
+
+    /// Whether `bits` encodes zero (exponent field 0 — flush-to-zero, so
+    /// the fraction and sign are ignored).
+    pub fn is_zero(&self, bits: u64) -> bool {
+        let (_, exp, _) = self.unpack(bits);
+        exp == 0
+    }
+
+    /// Canonical form: zero becomes the all-zero word (+0), everything
+    /// else is masked to the packed width.
+    pub fn canonical(&self, bits: u64) -> u64 {
+        if self.is_zero(bits) {
+            0
+        } else {
+            bits & self.mask()
+        }
+    }
+
+    /// Largest finite value with the given sign (the saturation value).
+    pub fn max_finite(&self, sign: u64) -> u64 {
+        self.pack(sign, self.max_exp(), (1 << self.man_bits) - 1)
+    }
+
+    /// The value 1.0.
+    pub fn one(&self) -> u64 {
+        self.pack(0, self.bias() as u64, 0)
+    }
+
+    /// Convert from an `f32`, re-rounding the fraction to `man_bits` with
+    /// round-to-nearest-even and applying the format's envelope:
+    /// subnormals and zero flush to +0, Inf/NaN and overflow saturate to
+    /// the largest finite value, underflow flushes to zero.
+    pub fn from_f32(&self, v: f32) -> u64 {
+        let b = v.to_bits() as u64;
+        let sign = b >> 31;
+        let e32 = (b >> 23) & 0xFF;
+        let m32 = b & 0x7F_FFFF;
+        if e32 == 0xFF {
+            return self.max_finite(sign);
+        }
+        if e32 == 0 {
+            return 0;
+        }
+        let mut e = e32 as i64 - 127 + self.bias();
+        let drop = 23 - self.man_bits;
+        let man = if drop == 0 {
+            m32
+        } else {
+            let keep = m32 >> drop;
+            let guard = (m32 >> (drop - 1)) & 1;
+            let sticky = m32 & ((1 << (drop - 1)) - 1) != 0;
+            let up = guard == 1 && (sticky || keep & 1 == 1);
+            let rounded = keep + up as u64;
+            if rounded >> self.man_bits == 1 {
+                e += 1;
+                0
+            } else {
+                rounded
+            }
+        };
+        if e < 1 {
+            0
+        } else if e > self.max_exp() as i64 {
+            self.max_finite(sign)
+        } else {
+            self.pack(sign, e as u64, man)
+        }
+    }
+
+    /// Exact conversion to `f64` (every format this type admits embeds
+    /// losslessly in binary64).
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        let (sign, exp, man) = self.unpack(bits);
+        if exp == 0 {
+            return 0.0;
+        }
+        let sig = 1.0 + man as f64 / (1u64 << self.man_bits) as f64;
+        let mag = sig * 2f64.powi((exp as i64 - self.bias()) as i32);
+        if sign == 1 {
+            -mag
+        } else {
+            mag
+        }
+    }
+}
+
+/// Fused multiply-accumulate specification: `round(acc + a * x)` with a
+/// single round-to-nearest-even at the end.
+///
+/// This is written as the exact register algorithm the gate-level pipeline
+/// implements — clamped alignment shift with a sticky bit folded into the
+/// register's LSB, two's-complement add/subtract in a `2S+4`-bit register
+/// (`S = man_bits + 1` significand bits), binary-search normalization, and
+/// guard/round/sticky rounding — so the hardware is a line-by-line
+/// transliteration. Zero iff the exponent field is zero (flush-to-zero);
+/// overflow saturates to [`FloatFormat::max_finite`]; exact zero results
+/// return +0.
+pub fn float_mac_ref(fmt: FloatFormat, acc: u64, a: u64, x: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sx, ex, mx) = fmt.unpack(x);
+    let (sc, ec, mc) = fmt.unpack(acc);
+    // A zero product leaves the accumulator untouched.
+    if ea == 0 || ex == 0 {
+        return fmt.canonical(acc);
+    }
+    let m = fmt.man_bits as i64;
+    let s_w = m + 1; // significand width S
+    let w = 2 * s_w + 3; // aligned register: product + 3 low bits (G, R, sticky)
+    let bias = fmt.bias();
+
+    // Exact significand product (2S bits) and the accumulator significand
+    // raised to the same 2S-bit grid.
+    let p_sign = sa ^ sx;
+    let p2: u128 = (((1u64 << m) | ma) as u128) * (((1u64 << m) | mx) as u128);
+    let c_zero = ec == 0;
+    let c2: u128 = if c_zero { 0 } else { (((1u64 << m) | mc) as u128) << s_w };
+
+    // Weight difference of one ulp of P2 vs one ulp of C2:
+    //   P2 ulp = 2^(ea + ex - 2B - 2M),  C2 ulp = 2^(ec - B - 2M - 1).
+    let d = ea as i64 + ex as i64 - ec as i64 - bias + 1;
+    let (big, small, ebase, sh, sign_big) = if d >= 0 {
+        (p2, c2, ea as i64 + ex as i64 - 2 * bias - 2 * m, d, p_sign)
+    } else {
+        (c2, p2, ec as i64 - bias - 2 * m - 1, -d, sc)
+    };
+
+    // Align: clamped right shift of the smaller operand, shifted-out bits
+    // OR-folded into the register's sticky LSB.
+    let sh_c = sh.min(w) as u32;
+    let xb = big << 3;
+    let xs_full = small << 3;
+    let mut xs = xs_full >> sh_c;
+    if xs_full & ((1u128 << sh_c) - 1) != 0 {
+        xs |= 1;
+    }
+
+    // Two's-complement add/subtract; a negative difference flips the sign.
+    let eff_sub = p_sign != sc;
+    let (val, res_sign) = if eff_sub {
+        let diff = xb as i128 - xs as i128;
+        if diff < 0 {
+            ((-diff) as u128, sign_big ^ 1)
+        } else {
+            (diff as u128, sign_big)
+        }
+    } else {
+        (xb + xs, sign_big)
+    };
+    if val == 0 {
+        return 0;
+    }
+
+    // Normalize: MSB position L gives the result exponent; shift the MSB
+    // to the fixed register top (bit `w`) for fraction extraction.
+    let l = 127 - val.leading_zeros() as i64;
+    let mut re = l + ebase - 3 + bias;
+    let norm = val << (w - l) as u32;
+
+    // Round to nearest even on guard + (round | sticky | lsb).
+    let frac = ((norm >> (w - m) as u32) as u64) & ((1 << m) - 1);
+    let guard = (norm >> (w - m - 1) as u32) & 1 == 1;
+    let rest = norm & ((1u128 << (w - m - 1) as u32) - 1) != 0;
+    let up = guard && (rest || frac & 1 == 1);
+    let sig_r = ((1u64 << m) | frac) + up as u64;
+    let frac_final = if sig_r >> (m as u32 + 1) == 1 {
+        re += 1;
+        0
+    } else {
+        sig_r & ((1 << m) - 1)
+    };
+
+    if re < 1 {
+        0 // flush-to-zero underflow
+    } else if re > fmt.max_exp() as i64 {
+        fmt.max_finite(res_sign)
+    } else {
+        fmt.pack(res_sign, re as u64, frac_final)
+    }
+}
+
+/// Rounded product: `round(a * x)` (a MAC into a zero accumulator).
+pub fn float_mul_ref(fmt: FloatFormat, a: u64, x: u64) -> u64 {
+    float_mac_ref(fmt, 0, a, x)
+}
+
+/// Rounded sum: `round(a + b)` (a MAC of `b * 1.0`).
+pub fn float_add_ref(fmt: FloatFormat, a: u64, b: u64) -> u64 {
+    float_mac_ref(fmt, a, b, fmt.one())
+}
+
+/// The served dot-product contract: fold [`float_mac_ref`] left-to-right
+/// over the row. Every result the float matvec tenant returns must equal
+/// this composition bit-for-bit.
+pub fn float_dot_ref(fmt: FloatFormat, row: &[u64], x: &[u64]) -> u64 {
+    assert_eq!(row.len(), x.len());
+    row.iter().zip(x).fold(0, |acc, (&a, &b)| float_mac_ref(fmt, acc, a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let fmt = FloatFormat::FP32;
+        let mut rng = SplitMix64::new(0xF10A7);
+        for _ in 0..200 {
+            let (s, e, m) = (rng.bits(1), rng.bits(8), rng.bits(23));
+            let bits = fmt.pack(s, e, m);
+            assert_eq!(fmt.unpack(bits), (s, e, m));
+            assert!(bits <= fmt.mask());
+        }
+        assert_eq!(fmt.total_bits(), 32);
+        assert_eq!(fmt.bias(), 127);
+        assert_eq!(fmt.max_exp(), 255);
+    }
+
+    #[test]
+    fn f32_roundtrip_and_envelope() {
+        let fmt = FloatFormat::FP32;
+        // Normal binary32 values with exponent < 255 embed exactly.
+        for v in [1.0f32, -2.5, 0.3333333, 1.5e30, -7.0e-30] {
+            assert_eq!(fmt.from_f32(v), v.to_bits() as u64, "{v}");
+            assert_eq!(fmt.to_f64(fmt.from_f32(v)), v as f64, "{v}");
+        }
+        // Envelope: zero/subnormal flush, Inf/NaN saturate.
+        assert_eq!(fmt.from_f32(0.0), 0);
+        assert_eq!(fmt.from_f32(-0.0), 0);
+        assert_eq!(fmt.from_f32(1.0e-40), 0, "subnormal flushes");
+        assert_eq!(fmt.from_f32(f32::INFINITY), fmt.max_finite(0));
+        assert_eq!(fmt.from_f32(f32::NEG_INFINITY), fmt.max_finite(1));
+    }
+
+    #[test]
+    fn from_f32_rerounds_narrow_formats() {
+        let fmt = FloatFormat::BF16;
+        // 1.0 + 2^-8 rounds to 1.0 in bf16 (tie to even), 1.0 + 3*2^-9
+        // rounds up to 1.0 + 2^-7.
+        assert_eq!(fmt.to_f64(fmt.from_f32(1.0 + 0.00390625)), 1.0);
+        let up = fmt.from_f32(1.0 + 3.0 * 0.001953125);
+        assert_eq!(fmt.to_f64(up), 1.0078125);
+        // Fraction carry propagates into the exponent.
+        assert_eq!(fmt.to_f64(fmt.from_f32(1.9999999)), 2.0);
+    }
+
+    #[test]
+    fn mac_exact_small_cases() {
+        let fmt = FloatFormat::FP32;
+        let f = |v: f32| fmt.from_f32(v);
+        // Exactly representable arithmetic is exact.
+        assert_eq!(float_mac_ref(fmt, f(0.25), f(1.5), f(2.0)), f(3.25));
+        assert_eq!(float_mac_ref(fmt, 0, f(3.0), f(5.0)), f(15.0));
+        assert_eq!(float_mac_ref(fmt, f(10.0), f(-2.0), f(3.0)), f(4.0));
+        // Exact cancellation returns +0.
+        assert_eq!(float_mac_ref(fmt, f(-6.0), f(2.0), f(3.0)), 0);
+        // Zero product leaves the accumulator untouched.
+        assert_eq!(float_mac_ref(fmt, f(7.5), 0, f(3.0)), f(7.5));
+        assert_eq!(float_mac_ref(fmt, f(7.5), f(3.0), 0), f(7.5));
+        assert_eq!(float_mac_ref(fmt, 0, 0, 0), 0);
+    }
+
+    #[test]
+    fn mul_is_commutative() {
+        let fmt = FloatFormat::FP16;
+        let mut rng = SplitMix64::new(0xC033);
+        for _ in 0..500 {
+            let a = rng.bits(fmt.total_bits());
+            let x = rng.bits(fmt.total_bits());
+            assert_eq!(float_mul_ref(fmt, a, x), float_mul_ref(fmt, x, a), "{a:#x} {x:#x}");
+        }
+    }
+
+    #[test]
+    fn saturation_and_flush() {
+        let fmt = FloatFormat::new(4, 3);
+        let max = fmt.max_finite(0);
+        // max * max overflows -> saturate, preserving the sign.
+        assert_eq!(float_mul_ref(fmt, max, max), max);
+        assert_eq!(float_mul_ref(fmt, fmt.max_finite(1), max), fmt.max_finite(1));
+        // min_normal * min_normal underflows -> flush to +0.
+        let min = fmt.pack(0, 1, 0);
+        assert_eq!(float_mul_ref(fmt, min, min), 0);
+    }
+
+    #[test]
+    fn results_are_canonical() {
+        let fmt = FloatFormat::new(3, 2);
+        let mut rng = SplitMix64::new(0xCAN0);
+        for _ in 0..2000 {
+            let acc = rng.bits(fmt.total_bits());
+            let a = rng.bits(fmt.total_bits());
+            let x = rng.bits(fmt.total_bits());
+            let r = float_mac_ref(fmt, acc, a, x);
+            assert_eq!(r, fmt.canonical(r), "acc={acc:#x} a={a:#x} x={x:#x}");
+        }
+    }
+
+    #[test]
+    fn add_matches_f32_in_normal_range() {
+        let fmt = FloatFormat::FP32;
+        let mut rng = SplitMix64::new(0xADD5);
+        let mut checked = 0;
+        while checked < 500 {
+            // Mid-band exponents keep inputs and results strictly normal.
+            let a = f32::from_bits(
+                ((rng.bits(1) as u32) << 31)
+                    | (((rng.bits(6) + 96) as u32) << 23)
+                    | rng.bits(23) as u32,
+            );
+            let b = f32::from_bits(
+                ((rng.bits(1) as u32) << 31)
+                    | (((rng.bits(6) + 96) as u32) << 23)
+                    | rng.bits(23) as u32,
+            );
+            let sum = a + b;
+            if !sum.is_normal() {
+                continue;
+            }
+            assert_eq!(
+                float_add_ref(fmt, fmt.from_f32(a), fmt.from_f32(b)),
+                fmt.from_f32(sum),
+                "{a} + {b}"
+            );
+            checked += 1;
+        }
+    }
+}

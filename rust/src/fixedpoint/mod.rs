@@ -7,6 +7,12 @@
 //! modulo `2^(2N)`. These helpers centralize that semantics so the Rust
 //! simulator, the JAX/Pallas golden kernels, and the tests can never
 //! disagree about rounding or overflow.
+//!
+//! The [`float`] submodule holds the floating-point counterpart: the
+//! packed format and the bit-exact software reference the full-precision
+//! matvec pipeline is validated against.
+
+pub mod float;
 
 /// Exact full product of two N-bit unsigned values (N <= 32), as the
 /// 2N-bit value the PIM multipliers produce.

@@ -14,20 +14,45 @@
 //! * [`sim`] — the cycle-accurate executor and legality checker (the paper's
 //!   §V-C "custom cycle-accurate simulator").
 //! * [`fixedpoint`] — N-bit fixed-point semantics shared by the PIM
-//!   algorithms and the golden models.
+//!   algorithms and the golden models, plus the floating-point format and
+//!   bit-exact MAC reference ([`fixedpoint::float`]) behind the
+//!   full-precision matvec pipeline.
 //! * [`algorithms`] — the paper's contributions and all baselines:
 //!   partition broadcast/shift (§III), the novel full adder (§IV-B1),
 //!   MultPIM / MultPIM-Area (Algorithm 1), Haj-Ali et al. and RIME
-//!   multipliers, ripple adders, and the fused matrix-vector engine (§VI).
+//!   multipliers, ripple adders, the fused matrix-vector engine (§VI),
+//!   and the full-precision float matvec pipeline
+//!   ([`algorithms::floatvec`]).
 //! * [`coordinator`] — the L3 serving layer: a generic workload shard
 //!   pool (one pool/queue/gather/metrics core) serving multiply, matvec,
-//!   and matmul tenants, plus the request router, row batcher,
-//!   multiplication pipeline model, and per-workload labeled metrics.
+//!   matmul, and float-matvec tenants, plus the request router, row
+//!   batcher, multiplication pipeline model, and per-workload labeled
+//!   metrics.
 //! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
 //!   (built once from `python/compile`) and is used as the golden model on
 //!   the verification path.
 //! * [`report`] — renderers for every table and figure in the paper's
 //!   evaluation (Tables I-III, Fig. 3, full-adder ablation).
+//!
+//! `docs/PAPER_MAP.md` (repository root) maps each contribution claimed
+//! in the paper's abstract to its module, tests, and bench.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use multpim::algorithms::multpim::MultPim;
+//! use multpim::algorithms::Multiplier;
+//! // Compile the 8-bit multiplier and run it on the cycle-accurate
+//! // simulator (one crossbar row).
+//! assert_eq!(MultPim::new(8).multiply(21, 2).unwrap(), 42);
+//!
+//! // The full-precision float reference the served float matvec is
+//! // bit-exact against:
+//! use multpim::fixedpoint::float::{float_mac_ref, FloatFormat};
+//! let fmt = FloatFormat::FP32;
+//! let acc = float_mac_ref(fmt, fmt.from_f32(0.5), fmt.from_f32(3.0), fmt.from_f32(2.0));
+//! assert_eq!(fmt.to_f64(acc), 6.5);
+//! ```
 
 pub mod algorithms;
 pub mod coordinator;
@@ -65,8 +90,9 @@ pub enum Error {
     /// An algorithm was instantiated with unsupported parameters.
     BadParameter(String),
     /// A request routed to a workload deployment that was never launched
-    /// (unknown multiply width, matvec shape, or matmul shape). Carries
-    /// the exact [`coordinator::WorkloadKey`] that failed to resolve.
+    /// (unknown multiply width, matvec shape, matmul shape, or float
+    /// matvec shape). Carries the exact [`coordinator::WorkloadKey`] that
+    /// failed to resolve.
     NoDeployment(coordinator::WorkloadKey),
     /// Runtime (golden-model executor) failure.
     Runtime(String),

@@ -5,20 +5,26 @@
 //! multpim matvec   --n 32 --elems 8 --rows 16 [--seed 1]
 //! multpim matmul   --n 16 --k 8 --m 32 --p 16 [--seed 1]
 //!                                     # GEMM through the served shard pool
+//! multpim float-matvec [--exp 8] [--man 23] --elems 8 --rows 16 [--seed 1]
+//!                                     # full-precision float matvec, bit-exact
+//!                                     # against the float_mac_ref composition
 //! multpim report   [table1|table2|table3|fig3|fa|headline|all]
 //! multpim verify   [--rows 64]        # triple golden agreement via PJRT
 //! multpim serve    [--requests 4096] [--shards 4] [--mv-requests 8] [--mv-rows 256]
-//!                  [--mm-requests 4] [--mm-rows 64]
-//!                                     # multiply + matvec + matmul shard-pool
-//!                                     # demo with per-workload metrics
+//!                  [--mm-requests 4] [--mm-rows 64] [--fv-requests 4] [--fv-rows 128]
+//!                                     # multiply + matvec + matmul + float-matvec
+//!                                     # shard-pool demo with per-workload metrics
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
 //! ```
 
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::multpim_area::MultPimArea;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
+use multpim::coordinator::server::{
+    FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
+};
 use multpim::coordinator::{Coordinator, EngineConfig, Request, Response};
+use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::util::SplitMix64;
 use multpim::{report, Result};
@@ -118,6 +124,7 @@ fn run(args: &[String]) -> Result<()> {
                     panel_cols: p.clamp(1, 8),
                     shards: 2,
                 }],
+                &[],
             )?;
             let c = coord.matmul(n, a.clone(), b.clone())?;
             println!("matmul: ({m}x{k}) * ({k}x{p}), N={n}: served over the matmul shard pool");
@@ -138,6 +145,42 @@ fn run(args: &[String]) -> Result<()> {
             println!("  ... all {m}x{p} elements verified against fixedpoint reference");
             println!("metrics: {}", coord.metrics().snapshot());
             coord.shutdown();
+            Ok(())
+        }
+        Some("float-matvec") => {
+            let exp = opt_u64(args, "--exp", 8) as u32;
+            let man = opt_u64(args, "--man", 23) as u32;
+            let elems = opt_u64(args, "--elems", 8) as u32;
+            let m = opt_u64(args, "--rows", 16) as usize;
+            let seed = opt_u64(args, "--seed", 1);
+            let fmt = FloatFormat::new(exp, man);
+            let mut rng = SplitMix64::new(seed);
+            // Well-conditioned random packed floats: mid-band exponents,
+            // random fractions and signs.
+            let mut rand_float = || {
+                let span = (fmt.max_exp() / 2).max(1);
+                let e = 1 + rng.next_u64() % span;
+                fmt.pack(rng.bits(1), e, rng.bits(fmt.man_bits))
+            };
+            let rows: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..elems).map(|_| rand_float()).collect()).collect();
+            let x: Vec<u64> = (0..elems).map(|_| rand_float()).collect();
+            // The serving hot path: float chain validated + lowered once,
+            // then executed on a resident crossbar shard.
+            let engine = multpim::coordinator::FloatVecEngine::new(exp, man, elems, m.max(1))?;
+            let out = engine.shard().execute(&rows, &x);
+            println!(
+                "float-matvec: {m} rows x {elems} elems, E={exp} M={man}: {} PIM cycles \
+                 (serial reference schedule, all rows parallel)",
+                engine.cycles()
+            );
+            for (i, &v) in out.iter().take(4).enumerate() {
+                println!("  row {i}: {v:#010x}  ({})", fmt.to_f64(v));
+            }
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(out[i], float_dot_ref(fmt, row, &x), "self-check row {i}");
+            }
+            println!("  ... all {m} rows bit-exact against the float_mac_ref composition");
             Ok(())
         }
         Some("report") => {
@@ -194,6 +237,8 @@ fn run(args: &[String]) -> Result<()> {
             let mv_rows = opt_u64(args, "--mv-rows", 256) as usize;
             let mm_requests = opt_u64(args, "--mm-requests", 4);
             let mm_rows = opt_u64(args, "--mm-rows", 64) as usize;
+            let fv_requests = opt_u64(args, "--fv-requests", 4);
+            let fv_rows = opt_u64(args, "--fv-rows", 128) as usize;
             let coord = Coordinator::launch(
                 &[MultiplyDeployment {
                     n_bits: 32,
@@ -213,6 +258,13 @@ fn run(args: &[String]) -> Result<()> {
                     k: 8,
                     shard_rows: 64,
                     panel_cols: 4,
+                    shards: shards.max(1),
+                }],
+                &[FloatVecDeployment {
+                    exp_bits: 8,
+                    man_bits: 23,
+                    n_elems: 8,
+                    shard_rows: 64,
                     shards: shards.max(1),
                 }],
             )?;
@@ -268,6 +320,30 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 mm_rxs.push(coord.submit(Request::MatMul { n_bits: 32, a, b })?);
             }
+            // Full-precision float traffic rides the same generic pool:
+            // every served row must be bit-exact against the
+            // float_mac_ref composition.
+            let fmt = FloatFormat::FP32;
+            let fv_rand = |rng: &mut SplitMix64| {
+                fmt.pack(rng.bits(1), 64 + rng.next_u64() % 128, rng.bits(23))
+            };
+            let mut fv_rxs = Vec::with_capacity(fv_requests as usize);
+            let mut fv_expected = Vec::with_capacity(fv_requests as usize);
+            for _ in 0..fv_requests {
+                let rows: Vec<Vec<u64>> = (0..fv_rows)
+                    .map(|_| (0..8).map(|_| fv_rand(&mut rng)).collect())
+                    .collect();
+                let x: Vec<u64> = (0..8).map(|_| fv_rand(&mut rng)).collect();
+                fv_expected.push(
+                    rows.iter().map(|row| float_dot_ref(fmt, row, &x)).collect::<Vec<u64>>(),
+                );
+                fv_rxs.push(coord.submit(Request::FloatMatVec {
+                    exp_bits: 8,
+                    man_bits: 23,
+                    rows,
+                    x,
+                })?);
+            }
             for (rx, want) in rxs.into_iter().zip(expected) {
                 match rx
                     .recv()
@@ -295,10 +371,20 @@ fn run(args: &[String]) -> Result<()> {
                     other => panic!("unexpected {other:?}"),
                 }
             }
+            for (rx, want) in fv_rxs.into_iter().zip(fv_expected) {
+                match rx
+                    .recv()
+                    .map_err(|_| multpim::Error::Runtime("worker dropped".into()))??
+                {
+                    Response::FloatVector(v) => assert_eq!(v, want),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
             println!(
                 "served {requests} multiply requests + {mv_requests} matvec requests \
                  ({mv_rows} rows x 8 elems each) + {mm_requests} matmul requests \
-                 ({mm_rows}x8 * 8x{mm_p} each)"
+                 ({mm_rows}x8 * 8x{mm_p} each) + {fv_requests} float-matvec requests \
+                 ({fv_rows} rows x 8 elems each, bit-exact)"
             );
             println!("metrics: {}", coord.metrics().snapshot());
             coord.shutdown();
@@ -320,8 +406,8 @@ fn run(args: &[String]) -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: multpim <multiply|matvec|matmul|report|verify|serve|trace> [options]\n\
-                 see `rust/src/main.rs` docs for details"
+                "usage: multpim <multiply|matvec|matmul|float-matvec|report|verify|serve|trace> \
+                 [options]\nsee `rust/src/main.rs` docs for details"
             );
             Ok(())
         }

@@ -23,7 +23,7 @@ fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> Multiply
 #[test]
 fn concurrent_clients_share_batches() {
     let coord = Arc::new(
-        Coordinator::launch(&[deployment(32, 64, 5, 2)], &[], &[]).unwrap(),
+        Coordinator::launch(&[deployment(32, 64, 5, 2)], &[], &[], &[]).unwrap(),
     );
     let mut handles = Vec::new();
     for t in 0..8u64 {
@@ -54,6 +54,7 @@ fn mixed_width_routing() {
         &[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)],
         &[MatVecDeployment { n_bits: 16, n_elems: 4, shard_rows: 8, shards: 2 }],
         &[MatMulDeployment { n_bits: 16, k: 2, shard_rows: 8, panel_cols: 2, shards: 2 }],
+        &[],
     )
     .unwrap();
     assert_eq!(coord.multiply(8, 200, 200).unwrap(), 40_000);
@@ -72,7 +73,7 @@ fn mixed_width_routing() {
 
 #[test]
 fn submit_api_is_asynchronous() {
-    let coord = Coordinator::launch(&[deployment(8, 256, 20, 2)], &[], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(8, 256, 20, 2)], &[], &[], &[]).unwrap();
     // Fire 100 requests without awaiting; they should coalesce into one or
     // two deadline batches.
     let rxs: Vec<_> = (1..=100u64)
@@ -104,7 +105,7 @@ fn pipeline_model_consistency_with_engine() {
 
 #[test]
 fn metrics_cycle_accounting() {
-    let coord = Coordinator::launch(&[deployment(16, 4, 1, 2)], &[], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(16, 4, 1, 2)], &[], &[], &[]).unwrap();
     for i in 0..4u64 {
         coord.multiply(16, i + 1, 7).unwrap();
     }
@@ -121,7 +122,7 @@ fn metrics_cycle_accounting() {
 #[test]
 fn shutdown_flushes_pending_batch() {
     // 10s deadline + 1024-row capacity: nothing would flush on its own.
-    let coord = Coordinator::launch(&[deployment(16, 1024, 10_000, 2)], &[], &[]).unwrap();
+    let coord = Coordinator::launch(&[deployment(16, 1024, 10_000, 2)], &[], &[], &[]).unwrap();
     let rxs: Vec<_> = (0..37u64)
         .map(|i| {
             coord
@@ -143,7 +144,7 @@ fn shutdown_flushes_pending_batch() {
 /// every request's queue wait is accounted.
 #[test]
 fn shard_pool_splits_work() {
-    let coord = Arc::new(Coordinator::launch(&[deployment(8, 8, 2, 4)], &[], &[]).unwrap());
+    let coord = Arc::new(Coordinator::launch(&[deployment(8, 8, 2, 4)], &[], &[], &[]).unwrap());
     let mut handles = Vec::new();
     for t in 0..4u64 {
         let coord = Arc::clone(&coord);

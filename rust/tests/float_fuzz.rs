@@ -1,0 +1,247 @@
+//! Float pipeline fuzz wall: the gate-level fused MAC engine must be
+//! bit-exact against the [`float_mac_ref`] software specification across
+//! formats — exhaustively for a small format, randomly (seeded) for the
+//! rest, and over an adversarial edge corpus (zeros, subnormal-adjacent
+//! minimum exponents, the saturating top exponent, mixed signs).
+//!
+//! The specification itself is cross-checked against two independent
+//! oracles: IEEE `f32::mul_add` (the fused MAC is single-rounded, so for
+//! normal-range binary32 values they must agree bit-for-bit) and an
+//! exact-integer round-to-nearest-even implementation with no register
+//! clamping at all.
+
+use multpim::algorithms::floatvec::MultPimFloatVec;
+use multpim::fixedpoint::float::{float_dot_ref, float_mac_ref, FloatFormat};
+use multpim::util::SplitMix64;
+
+/// Run `cases` (each an `[acc, a, x]` triple) through a 2-element engine:
+/// row `[acc, a]` against `x = [1.0, x]` computes
+/// `mac(mac(0, acc, 1), a, x)` — and `mac(0, v, 1)` is exactly
+/// `canonical(v)`, so this exercises `mac(acc, a, x)` for arbitrary
+/// accumulator bits. Results are compared against the reference fold.
+fn check_triples(fmt: FloatFormat, engine: &MultPimFloatVec, cases: &[[u64; 3]]) {
+    let one = fmt.one();
+    for chunk in cases.chunks(64) {
+        let rows: Vec<Vec<u64>> = chunk.iter().map(|c| vec![c[0], c[1]]).collect();
+        // All triples in a chunk share x: callers group accordingly.
+        let x = vec![one, chunk[0][2]];
+        let got = engine.compute(&rows, &x).unwrap();
+        for (c, &g) in chunk.iter().zip(&got) {
+            assert_eq!(c[2], chunk[0][2], "chunk must share x");
+            let want = float_dot_ref(fmt, &[c[0], c[1]], &x);
+            assert_eq!(
+                g, want,
+                "fmt={fmt:?} acc={:#x} a={:#x} x={:#x}: engine {g:#x} vs reference {want:#x}",
+                c[0], c[1], c[2]
+            );
+            // The fold's first step is exactly canonicalization, so this
+            // also pins mac(canonical(acc), a, x) against the one-step
+            // reference.
+            let direct = float_mac_ref(fmt, fmt.canonical(c[0]), c[1], c[2]);
+            assert_eq!(want, direct, "fold vs direct mac disagree");
+        }
+    }
+}
+
+/// Exhaustive products for the 6-bit (E=3, M=2) format: every `(a, x)`
+/// pair through the 1-element engine vs `mac(0, a, x)`.
+#[test]
+fn exhaustive_small_format_products() {
+    let fmt = FloatFormat::new(3, 2);
+    let engine = MultPimFloatVec::new(fmt, 1);
+    let all: Vec<u64> = (0..1u64 << fmt.total_bits()).collect();
+    for &x in &all {
+        let rows: Vec<Vec<u64>> = all.iter().map(|&a| vec![a]).collect();
+        let got = engine.compute(&rows, &[x]).unwrap();
+        for (&a, &g) in all.iter().zip(&got) {
+            let want = float_mac_ref(fmt, 0, a, x);
+            assert_eq!(g, want, "a={a:#x} x={x:#x}");
+        }
+    }
+}
+
+/// Exhaustive sums for the small format: every `(acc, b)` pair through
+/// the 2-element engine (`[acc, b] . [1, 1]`) vs the reference fold.
+#[test]
+fn exhaustive_small_format_sums() {
+    let fmt = FloatFormat::new(3, 2);
+    let engine = MultPimFloatVec::new(fmt, 2);
+    let one = fmt.one();
+    let all: Vec<u64> = (0..1u64 << fmt.total_bits()).collect();
+    for &acc in &all {
+        let cases: Vec<[u64; 3]> = all.iter().map(|&b| [acc, b, one]).collect();
+        check_triples(fmt, &engine, &cases);
+    }
+}
+
+/// Seeded random triples across formats, full-range operand fields
+/// (zero exponents, the saturating top exponent, random signs included).
+#[test]
+fn random_triples_across_formats() {
+    for (fmt, seed) in [
+        (FloatFormat::new(3, 2), 0xF320u64),
+        (FloatFormat::new(4, 3), 0xF430),
+        (FloatFormat::new(6, 17), 0xF617),
+        (FloatFormat::FP16, 0xF510),
+        (FloatFormat::BF16, 0xF807),
+        (FloatFormat::FP32, 0xF823),
+    ] {
+        let engine = MultPimFloatVec::new(fmt, 2);
+        let mut rng = SplitMix64::new(seed);
+        for _ in 0..4 {
+            let x = rng.bits(fmt.total_bits());
+            let cases: Vec<[u64; 3]> = (0..64)
+                .map(|_| [rng.bits(fmt.total_bits()), rng.bits(fmt.total_bits()), x])
+                .collect();
+            check_triples(fmt, &engine, &cases);
+        }
+    }
+}
+
+/// Adversarial edge corpus: the minimum normal exponent
+/// (subnormal-adjacent — anything below it flushes), the saturating top
+/// exponent, exact one, one ulp above one, and zeros, in both signs,
+/// crossed as (acc, a) pairs against each edge value of x.
+#[test]
+fn edge_corpus_across_formats() {
+    for fmt in [FloatFormat::new(3, 2), FloatFormat::new(4, 3), FloatFormat::FP16] {
+        let engine = MultPimFloatVec::new(fmt, 2);
+        let man_max = (1u64 << fmt.man_bits) - 1;
+        let mut edges = vec![0u64];
+        for sign in [0u64, 1] {
+            edges.push(fmt.pack(sign, 1, 0)); // min normal
+            edges.push(fmt.pack(sign, 1, man_max)); // just under 2*min_normal
+            edges.push(fmt.pack(sign, fmt.bias() as u64, 0)); // +/- 1.0
+            edges.push(fmt.pack(sign, fmt.bias() as u64, 1)); // 1 + ulp
+            edges.push(fmt.max_finite(sign)); // saturation value
+            edges.push(fmt.pack(sign, fmt.max_exp(), 0)); // top exponent, min mantissa
+        }
+        for &x in &edges {
+            let mut cases = Vec::new();
+            for &acc in &edges {
+                for &a in &edges {
+                    cases.push([acc, a, x]);
+                }
+            }
+            check_triples(fmt, &engine, &cases);
+        }
+    }
+}
+
+/// Specification oracle 1: for normal-range binary32 values the fused MAC
+/// is IEEE fma — `float_mac_ref` must agree bit-for-bit with
+/// `f32::mul_add`.
+#[test]
+fn reference_matches_ieee_fma_in_normal_range() {
+    let fmt = FloatFormat::FP32;
+    let mut rng = SplitMix64::new(0xF3A_0001);
+    let normal = |rng: &mut SplitMix64| {
+        f32::from_bits(
+            ((rng.bits(1) as u32) << 31) | (((rng.bits(6) + 96) as u32) << 23)
+                | rng.bits(23) as u32,
+        )
+    };
+    let mut checked = 0;
+    while checked < 1500 {
+        let (acc, a, x) = (normal(&mut rng), normal(&mut rng), normal(&mut rng));
+        let fma = a.mul_add(x, acc);
+        if !fma.is_normal() {
+            continue; // overflow/underflow/zero leave the IEEE envelope
+        }
+        assert_eq!(
+            float_mac_ref(fmt, fmt.from_f32(acc), fmt.from_f32(a), fmt.from_f32(x)),
+            fmt.from_f32(fma),
+            "acc={acc} a={a} x={x}"
+        );
+        checked += 1;
+    }
+}
+
+/// Specification oracle 2: an independent exact-integer RNE MAC (align by
+/// the *minimum* exponent with no clamping, round by exact remainder
+/// comparison). Returns `None` outside the exact-u128 window.
+fn exact_mac_oracle(fmt: FloatFormat, acc: u64, a: u64, x: u64) -> Option<u64> {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sx, ex, mx) = fmt.unpack(x);
+    let (sc, ec, mc) = fmt.unpack(acc);
+    if ea == 0 || ex == 0 {
+        return Some(fmt.canonical(acc));
+    }
+    let m = fmt.man_bits as i64;
+    let bias = fmt.bias();
+    let p: i128 = ((((1u64 << m) | ma) as i128) * (((1u64 << m) | mx) as i128))
+        * if sa ^ sx == 1 { -1 } else { 1 };
+    let pe = ea as i64 + ex as i64 - 2 * bias - 2 * m;
+    let (c, ce): (i128, i64) = if ec == 0 {
+        (0, pe)
+    } else {
+        let mag = ((1u64 << m) | mc) as i128;
+        (if sc == 1 { -mag } else { mag }, ec as i64 - bias - m)
+    };
+    let emin = pe.min(ce);
+    let (shp, shc) = (pe - emin, ce - emin);
+    if shp > 70 || shc > 70 {
+        return None; // outside the exact window
+    }
+    let tot = (p << shp) + (c << shc);
+    if tot == 0 {
+        return Some(0);
+    }
+    let sign = u64::from(tot < 0);
+    let mag = tot.unsigned_abs();
+    let l0 = 127 - mag.leading_zeros() as i64;
+    let shift = l0 - m;
+    let (sig, l) = if shift <= 0 {
+        (mag << (-shift) as u32, l0)
+    } else {
+        let rem = mag & ((1u128 << shift as u32) - 1);
+        let kept = mag >> shift as u32;
+        let half = 1u128 << (shift as u32 - 1);
+        let up = rem > half || (rem == half && kept & 1 == 1);
+        let rounded = kept + u128::from(up);
+        if rounded >> (m as u32 + 1) == 1 {
+            (rounded >> 1, l0 + 1)
+        } else {
+            (rounded, l0)
+        }
+    };
+    let re = l + emin + bias;
+    if re < 1 {
+        Some(0)
+    } else if re > fmt.max_exp() as i64 {
+        Some(fmt.max_finite(sign))
+    } else {
+        Some(fmt.pack(sign, re as u64, (sig as u64) & ((1 << m) - 1)))
+    }
+}
+
+#[test]
+fn reference_matches_exact_integer_oracle() {
+    for (fmt, seed) in [
+        (FloatFormat::new(3, 2), 0xE320u64),
+        (FloatFormat::new(4, 3), 0xE430),
+        (FloatFormat::FP16, 0xE510),
+        (FloatFormat::BF16, 0xE807),
+        (FloatFormat::FP32, 0xE823),
+    ] {
+        let mut rng = SplitMix64::new(seed);
+        let mut checked = 0;
+        let mut attempts = 0;
+        while checked < 3000 && attempts < 60_000 {
+            attempts += 1;
+            let acc = rng.bits(fmt.total_bits());
+            let a = rng.bits(fmt.total_bits());
+            let x = rng.bits(fmt.total_bits());
+            let Some(want) = exact_mac_oracle(fmt, acc, a, x) else {
+                continue;
+            };
+            assert_eq!(
+                float_mac_ref(fmt, acc, a, x),
+                want,
+                "fmt={fmt:?} acc={acc:#x} a={a:#x} x={x:#x}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 1000, "fmt={fmt:?}: exact-window cases too rare ({checked})");
+    }
+}

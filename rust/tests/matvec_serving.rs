@@ -40,6 +40,7 @@ fn served_matches_direct_at_tile_boundaries() {
             shards: 3,
         }],
         &[],
+        &[],
     )
     .unwrap();
     let direct = ChainEngine::new(N_BITS, N_ELEMS, SHARD_ROWS).unwrap();
@@ -70,6 +71,7 @@ fn served_wraps_mod_2n_like_fixedpoint() {
     let coord = Coordinator::launch(
         &[],
         &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2 }],
+        &[],
         &[],
     )
     .unwrap();
@@ -103,6 +105,7 @@ fn concurrent_matvec_metrics_account_exactly() {
                 shard_rows: SHARD_ROWS,
                 shards: 4,
             }],
+            &[],
             &[],
         )
         .unwrap(),

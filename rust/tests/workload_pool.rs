@@ -1,11 +1,18 @@
-//! The generic workload shard pool end-to-end: GEMM equivalence at every
-//! tile boundary, typed rejection of unknown deployments, the
-//! shutdown-drain guarantee across all workload queues, and mixed
-//! concurrent traffic with exact per-workload metrics accounting.
+//! The generic workload shard pool end-to-end: GEMM equivalence at
+//! every tile boundary, typed rejection of unknown deployments, the
+//! shutdown-drain guarantee across all workload queues (float matvec
+//! included), served float-matvec bit-exactness at tile boundaries,
+//! and mixed concurrent traffic with exact per-workload metrics
+//! accounting.
 
 use multpim::algorithms::matmul::MultPimMatMul;
-use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
-use multpim::coordinator::{Coordinator, EngineConfig, Request, Response, WorkloadKey};
+use multpim::coordinator::server::{
+    FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
+};
+use multpim::coordinator::{
+    Coordinator, EngineConfig, FloatVecEngine, Request, Response, WorkloadKey,
+};
+use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
 use multpim::fixedpoint::{inner_product_mod, widening_mul, wrap};
 use multpim::util::SplitMix64;
 use multpim::Error;
@@ -20,6 +27,32 @@ const PANEL_COLS: usize = 4;
 
 fn mm_deployment(shards: usize) -> MatMulDeployment {
     MatMulDeployment { n_bits: N_BITS, k: K, shard_rows: SHARD_ROWS, panel_cols: PANEL_COLS, shards }
+}
+
+/// The float tenant under test: a small format so exhaustive-ish sweeps
+/// stay cheap (E=4, M=3 -> 8-bit packed floats).
+const FV_EXP: u32 = 4;
+const FV_MAN: u32 = 3;
+const FV_ELEMS: u32 = 3;
+const FV_SHARD_ROWS: usize = 4;
+
+fn fv_deployment(shards: usize) -> FloatVecDeployment {
+    FloatVecDeployment {
+        exp_bits: FV_EXP,
+        man_bits: FV_MAN,
+        n_elems: FV_ELEMS,
+        shard_rows: FV_SHARD_ROWS,
+        shards,
+    }
+}
+
+fn fv_fmt() -> FloatFormat {
+    FloatFormat::new(FV_EXP, FV_MAN)
+}
+
+fn random_float_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>> {
+    let fmt = fv_fmt();
+    (0..rows).map(|_| (0..cols).map(|_| rng.bits(fmt.total_bits())).collect()).collect()
 }
 
 fn random_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>> {
@@ -49,7 +82,7 @@ fn reference(a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<Vec<u64>> {
 /// shard_rows, 4 * shard_rows) crossed with every column-panel boundary.
 #[test]
 fn served_matmul_matches_composition_at_tile_boundaries() {
-    let coord = Coordinator::launch(&[], &[], &[mm_deployment(3)]).unwrap();
+    let coord = Coordinator::launch(&[], &[], &[mm_deployment(3)], &[]).unwrap();
     let direct = MultPimMatMul::new(N_BITS, K);
     let mut rng = SplitMix64::new(0x6D61_746D);
     for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 4 * SHARD_ROWS] {
@@ -78,6 +111,7 @@ fn served_matmul_wraps_mod_2n() {
         &[],
         &[],
         &[MatMulDeployment { n_bits, k, shard_rows: 4, panel_cols: 2, shards: 2 }],
+        &[],
     )
     .unwrap();
     let max = (1u64 << n_bits) - 1;
@@ -109,6 +143,7 @@ fn unknown_deployments_rejected_with_typed_error() {
         }],
         &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, shards: 1 }],
         &[mm_deployment(1)],
+        &[fv_deployment(1)],
     )
     .unwrap();
 
@@ -140,6 +175,23 @@ fn unknown_deployments_rejected_with_typed_error() {
         }
         other => panic!("expected typed rejection, got {other:?}"),
     }
+    // Unlaunched float shape: right inner dimension, wrong format.
+    match coord.float_matvec(5, 2, vec![vec![1, 2, 3]], vec![1, 2, 3]) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(key, WorkloadKey::FloatVec { exp_bits: 5, man_bits: 2, n_elems: 3 });
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
+    // Unlaunched float inner dimension at the deployed format.
+    match coord.float_matvec(FV_EXP, FV_MAN, vec![vec![1, 2]], vec![1, 2]) {
+        Err(Error::NoDeployment(key)) => {
+            assert_eq!(
+                key,
+                WorkloadKey::FloatVec { exp_bits: FV_EXP, man_bits: FV_MAN, n_elems: 2 }
+            );
+        }
+        other => panic!("expected typed rejection, got {other:?}"),
+    }
     // The typed error carries a readable label.
     let err = coord.multiply(16, 2, 3).unwrap_err();
     assert!(err.to_string().contains("multiply N=16"), "{err}");
@@ -147,16 +199,24 @@ fn unknown_deployments_rejected_with_typed_error() {
     // Deployed shapes still serve.
     assert_eq!(coord.multiply(8, 7, 9).unwrap(), 63);
     assert_eq!(coord.matvec(8, vec![vec![1, 2, 3]], vec![4, 5, 6]).unwrap(), vec![32]);
+    let fmt = fv_fmt();
+    let one = fmt.one();
+    assert_eq!(
+        coord
+            .float_matvec(FV_EXP, FV_MAN, vec![vec![one, one, one]], vec![one, one, one])
+            .unwrap(),
+        vec![float_dot_ref(fmt, &[one, one, one], &[one, one, one])]
+    );
     // Rejected submissions are not counted as accepted requests: the
     // global counter equals the sum of the labeled per-workload counters.
     let m = coord.metrics();
-    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(m.requests.load(Ordering::Relaxed), 3);
     let labeled: u64 = m
         .workloads()
         .iter()
         .map(|(_, wl)| wl.requests.load(Ordering::Relaxed))
         .sum();
-    assert_eq!(labeled, 2);
+    assert_eq!(labeled, 3);
     coord.shutdown();
 }
 
@@ -178,6 +238,13 @@ fn shutdown_drains_pending_tiles_for_every_workload() {
         }],
         &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, shards: 1 }],
         &[MatMulDeployment { n_bits: 8, k: 3, shard_rows: 2, panel_cols: 2, shards: 1 }],
+        &[FloatVecDeployment {
+            exp_bits: FV_EXP,
+            man_bits: FV_MAN,
+            n_elems: FV_ELEMS,
+            shard_rows: 2,
+            shards: 1,
+        }],
     )
     .unwrap();
     let mut rng = SplitMix64::new(0xD7A1_4E55);
@@ -214,6 +281,24 @@ fn shutdown_drains_pending_tiles_for_every_workload() {
         mm_cases.push((a, b));
     }
 
+    let mut fv_cases = Vec::new();
+    let mut fv_rxs = Vec::new();
+    for _ in 0..3 {
+        let rows = random_float_matrix(&mut rng, 7, FV_ELEMS as usize); // 4 tiles each
+        let x: Vec<u64> = random_float_matrix(&mut rng, 1, FV_ELEMS as usize).remove(0);
+        fv_rxs.push(
+            coord
+                .submit(Request::FloatMatVec {
+                    exp_bits: FV_EXP,
+                    man_bits: FV_MAN,
+                    rows: rows.clone(),
+                    x: x.clone(),
+                })
+                .unwrap(),
+        );
+        fv_cases.push((rows, x));
+    }
+
     // Shutdown joins every worker; the drain guarantee means every reply
     // below must already be in its channel.
     coord.shutdown();
@@ -240,6 +325,66 @@ fn shutdown_drains_pending_tiles_for_every_workload() {
             other => panic!("unexpected {other:?}"),
         }
     }
+    let fmt = fv_fmt();
+    for (rx, (rows, x)) in fv_rxs.into_iter().zip(fv_cases) {
+        match rx.recv().expect("float matvec reply survives shutdown").unwrap() {
+            Response::FloatVector(out) => {
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(out[r], float_dot_ref(fmt, row, &x), "row {r}");
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+/// Served float matvec is bit-exact against both the direct engine path
+/// and the float_mac_ref composition at every row-tile boundary, and its
+/// labeled counters account exactly.
+#[test]
+fn served_floatvec_bit_exact_at_tile_boundaries() {
+    let coord = Coordinator::launch(&[], &[], &[], &[fv_deployment(2)]).unwrap();
+    let direct =
+        FloatVecEngine::new(FV_EXP, FV_MAN, FV_ELEMS, FV_SHARD_ROWS).unwrap();
+    let fmt = fv_fmt();
+    let mut rng = SplitMix64::new(0xF10A7_B0D5);
+    let mut total_rows = 0u64;
+    let mut total_tiles = 0u64;
+    for m in [1usize, FV_SHARD_ROWS - 1, FV_SHARD_ROWS, FV_SHARD_ROWS + 1, 4 * FV_SHARD_ROWS] {
+        let rows = random_float_matrix(&mut rng, m, FV_ELEMS as usize);
+        let x: Vec<u64> = random_float_matrix(&mut rng, 1, FV_ELEMS as usize).remove(0);
+        let served =
+            coord.float_matvec(FV_EXP, FV_MAN, rows.clone(), x.clone()).unwrap();
+        assert_eq!(
+            served,
+            direct.compute(&rows, &x).unwrap(),
+            "m={m}: served vs direct engine"
+        );
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(
+                served[r],
+                float_dot_ref(fmt, row, &x),
+                "m={m} row={r}: served vs float_mac_ref composition"
+            );
+        }
+        total_rows += m as u64;
+        total_tiles += (m / FV_SHARD_ROWS + usize::from(m % FV_SHARD_ROWS != 0)) as u64;
+    }
+    let wl = coord
+        .metrics()
+        .workload(WorkloadKey::FloatVec {
+            exp_bits: FV_EXP,
+            man_bits: FV_MAN,
+            n_elems: FV_ELEMS,
+        })
+        .unwrap();
+    assert_eq!(wl.requests.load(Ordering::Relaxed), 5);
+    assert_eq!(wl.admitted_units.load(Ordering::Relaxed), total_rows);
+    assert_eq!(wl.units.load(Ordering::Relaxed), total_rows);
+    assert_eq!(wl.tiles.load(Ordering::Relaxed), total_tiles);
+    let shard_units: u64 = wl.shard_stats().iter().map(|(_, st)| st.units).sum();
+    assert_eq!(shard_units, total_rows);
+    coord.shutdown();
 }
 
 /// Mixed traffic: one coordinator, >= 4 client threads driving multiply,
@@ -270,6 +415,7 @@ fn mixed_traffic_metrics_account_exactly() {
             }],
             &[MatVecDeployment { n_bits: N_BITS, n_elems: K, shard_rows: SHARD_ROWS, shards: 2 }],
             &[mm_deployment(2)],
+            &[],
         )
         .unwrap(),
     );
