@@ -66,6 +66,7 @@ fn main() -> multpim::Result<()> {
             max_wait: Duration::from_millis(1),
             config: EngineConfig::MultPim,
             shards: 4,
+            max_queue_tiles: 0,
         }],
         &[],
         &[],

@@ -31,252 +31,46 @@
 //! software specification
 //! [`float_mac_ref`](crate::fixedpoint::float::float_mac_ref) composition
 //! — the serving layer's contract, fuzzed across formats in
-//! `rust/tests/float_fuzz.rs`.
+//! `rust/tests/float_fuzz.rs` and `rust/tests/schedule_fuzz.rs`.
 //!
-//! ## Schedule honesty
+//! ## Schedule
 //!
-//! This functional pipeline is emitted *serially* (one gate per cycle in a
-//! single partition): it proves the algorithm in gates and pins the
-//! bit-exact semantics, but does not lay out the partition-parallel
-//! schedule of §III/§VI. The audited latency comparison for Table III's
-//! float row therefore uses the closed-form cost model
-//! ([`costmodel::multpim_floatvec_latency`](super::costmodel::multpim_floatvec_latency)
-//! vs
-//! [`costmodel::floatpim_floatvec_latency`](super::costmodel::floatpim_floatvec_latency)),
-//! the same convention the repo applies to baselines whose cycle-level
-//! schedule is not public; parallelizing this emission is a ROADMAP open
-//! item. Latencies measured from these programs are labeled as the serial
-//! reference schedule wherever they are printed.
+//! The circuits are emitted in the SSA [`Circuit`](crate::schedule::Circuit)
+//! IR and compiled by the partition-parallel scheduler
+//! ([`crate::schedule`]): placement spreads the CSAS wavefront and the
+//! exponent chains across partitions, list scheduling packs independent
+//! gates into shared cycles, and lowering emits programs that pass
+//! [`crate::sim::validate_chain`] unchanged. The measured cycle count of
+//! the scheduled chain lands within 1.25x of the audited
+//! partition-parallel cost model
+//! ([`costmodel::multpim_floatvec_latency`](super::costmodel::multpim_floatvec_latency)),
+//! asserted by `benches/table3_matvec.rs` and gated in CI by
+//! `multpim schedule-stats --budget ci/schedule_budget_fp32x8.txt`.
+//! The old one-gate-per-cycle emission survives as
+//! [`ScheduleMode::Serial`] — the oracle the scheduled programs are
+//! fuzzed bit-exact against.
 
 use super::costmodel;
 use crate::fixedpoint::float::{float_add_ref, float_mul_ref, FloatFormat};
-use crate::isa::{Col, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+use crate::isa::{Col, Program};
+use crate::schedule::{
+    compile_chain, Circuit, CompiledChain, OperandRegion, ScheduleMode, SchedulerConfig,
+    ScheduleStats, Wire,
+};
 use crate::sim::Simulator;
 use crate::util::ceil_log2;
 use crate::{Error, Result};
 
-/// A packed float operand's staged bit columns (LSB-first fields,
+/// A packed float operand's staged bit wires (LSB-first fields,
 /// matching [`FloatFormat::pack`]'s `[fraction | exponent | sign]`
 /// layout).
 #[derive(Debug, Clone)]
 struct FloatWires {
-    sign: Col,
+    sign: Wire,
     /// Exponent field bits, LSB first.
-    exp: Vec<Col>,
+    exp: Vec<Wire>,
     /// Fraction bits, LSB first.
-    man: Vec<Col>,
-}
-
-/// Serial stateful-logic circuit emitter: every wire is a fresh column
-/// written exactly once (SSA), every gate its own cycle in a single
-/// partition. Legality is by construction — each program initializes all
-/// its gate outputs to 1 up front (plus a constant-1 cell) and a
-/// constant-0 cell to 0, so the strict checker's MAGIC preconditions hold
-/// for every emitted gate.
-struct Circuit {
-    next: Col,
-    ops: Vec<GateOp>,
-    outs: Vec<Col>,
-    zero: Col,
-    one: Col,
-}
-
-impl Circuit {
-    fn new(next_col: Col) -> Self {
-        let mut c = Circuit { next: next_col, ops: Vec::new(), outs: Vec::new(), zero: 0, one: 0 };
-        c.zero = c.fresh();
-        c.one = c.fresh();
-        c
-    }
-
-    fn fresh(&mut self) -> Col {
-        let c = self.next;
-        self.next += 1;
-        c
-    }
-
-    fn emit(&mut self, gate: Gate, inputs: &[Col]) -> Col {
-        let out = self.fresh();
-        self.ops.push(GateOp::new(gate, inputs, out));
-        self.outs.push(out);
-        out
-    }
-
-    fn not(&mut self, a: Col) -> Col {
-        self.emit(Gate::Not, &[a])
-    }
-
-    fn or(&mut self, a: Col, b: Col) -> Col {
-        self.emit(Gate::Or2, &[a, b])
-    }
-
-    fn nand(&mut self, a: Col, b: Col) -> Col {
-        self.emit(Gate::Nand2, &[a, b])
-    }
-
-    fn min3(&mut self, a: Col, b: Col, c: Col) -> Col {
-        self.emit(Gate::Min3, &[a, b, c])
-    }
-
-    fn and(&mut self, a: Col, b: Col) -> Col {
-        let n = self.nand(a, b);
-        self.not(n)
-    }
-
-    fn xor(&mut self, a: Col, b: Col) -> Col {
-        let o = self.or(a, b);
-        let n = self.nand(a, b);
-        self.and(o, n)
-    }
-
-    /// `s ? a : b`, given the precomputed complement of `s`.
-    fn mux(&mut self, s: Col, s_not: Col, a: Col, b: Col) -> Col {
-        let ta = self.nand(s, a);
-        let tb = self.nand(s_not, b);
-        self.nand(ta, tb)
-    }
-
-    /// Single-bit `s ? a : b`.
-    fn mux_bit(&mut self, s: Col, a: Col, b: Col) -> Col {
-        let s_not = self.not(s);
-        self.mux(s, s_not, a, b)
-    }
-
-    /// Word-wise `s ? a : b`.
-    fn mux_word(&mut self, s: Col, a: &[Col], b: &[Col]) -> Vec<Col> {
-        assert_eq!(a.len(), b.len());
-        let s_not = self.not(s);
-        a.iter().zip(b).map(|(&ai, &bi)| self.mux(s, s_not, ai, bi)).collect()
-    }
-
-    /// The §IV-B1 full adder (eqs. (1)-(2)): `Cout' = Min3(a, b, Cin)`,
-    /// `T2 = Min3(a, b, Cin')`, `S = Min3(Cout, Cin', T2)`. Returns
-    /// `(sum, cout, cout')` — the free carry complement chains into the
-    /// next stage.
-    fn fa(&mut self, a: Col, b: Col, cin: Col, cin_not: Col) -> (Col, Col, Col) {
-        let t1 = self.min3(a, b, cin);
-        let cout = self.not(t1);
-        let t2 = self.min3(a, b, cin_not);
-        let sum = self.min3(cout, cin_not, t2);
-        (sum, cout, t1)
-    }
-
-    /// Ripple add of equal-width words; returns `(sum, carry_out)`.
-    fn add(&mut self, a: &[Col], b: &[Col], cin: Col, cin_not: Col) -> (Vec<Col>, Col) {
-        assert_eq!(a.len(), b.len());
-        let (mut c, mut cn) = (cin, cin_not);
-        let mut s = Vec::with_capacity(a.len());
-        for (&ai, &bi) in a.iter().zip(b) {
-            let (si, ci, cni) = self.fa(ai, bi, c, cn);
-            s.push(si);
-            c = ci;
-            cn = cni;
-        }
-        (s, c)
-    }
-
-    /// `a + b mod 2^w`.
-    fn add_mod(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
-        self.add(a, b, self.zero, self.one).0
-    }
-
-    /// `a - b mod 2^w` (two's complement).
-    fn sub_mod(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
-        let nb: Vec<Col> = b.iter().map(|&bi| self.not(bi)).collect();
-        self.add(a, &nb, self.one, self.zero).0
-    }
-
-    /// `-a mod 2^w`.
-    fn neg_mod(&mut self, a: &[Col]) -> Vec<Col> {
-        let zeros = vec![self.zero; a.len()];
-        self.sub_mod(&zeros, a)
-    }
-
-    /// OR-reduction (the zero wire for an empty slice).
-    fn or_tree(&mut self, bits: &[Col]) -> Col {
-        let mut acc = self.zero;
-        for &b in bits {
-            acc = self.or(acc, b);
-        }
-        acc
-    }
-
-    /// Constant word from the low `width` bits of `value` (two's
-    /// complement for negatives) — references the constant cells, no
-    /// gates.
-    fn const_word(&self, value: i64, width: u32) -> Vec<Col> {
-        (0..width).map(|i| if (value >> i) & 1 == 1 { self.one } else { self.zero }).collect()
-    }
-
-    /// Zero-extend a word to `width` bits.
-    fn zext(&self, word: &[Col], width: u32) -> Vec<Col> {
-        let mut v = word.to_vec();
-        v.resize(width as usize, self.zero);
-        v
-    }
-
-    /// Exact unsigned multiply via the carry-save add-shift recurrence:
-    /// for each multiplier bit (LSB first) form the partial-product AND
-    /// row and fold it into the running upper word with one full-adder
-    /// row, retiring one finalized low bit per step.
-    fn mul(&mut self, a: &[Col], b: &[Col]) -> Vec<Col> {
-        assert_eq!(a.len(), b.len());
-        let s = a.len();
-        let mut out = Vec::with_capacity(2 * s);
-        let mut run = vec![self.zero; s];
-        for &bi in b {
-            let pp: Vec<Col> = a.iter().map(|&aj| self.and(aj, bi)).collect();
-            let (sum, cout) = self.add(&run, &pp, self.zero, self.one);
-            out.push(sum[0]);
-            run = sum[1..].to_vec();
-            run.push(cout);
-        }
-        out.extend(run);
-        out
-    }
-
-    /// Barrel right shift by `amt` (LSB-first amount bits), OR-folding
-    /// every shifted-out bit into the returned sticky.
-    fn shift_right_sticky(&mut self, word: &[Col], amt: &[Col]) -> (Vec<Col>, Col) {
-        let w = word.len();
-        let mut cur = word.to_vec();
-        let mut sticky = self.zero;
-        for (k, &ak) in amt.iter().enumerate() {
-            let step = 1usize << k;
-            let dropped = self.or_tree(&cur[..step.min(w)]);
-            let sel = self.and(ak, dropped);
-            sticky = self.or(sticky, sel);
-            let shifted: Vec<Col> =
-                (0..w).map(|i| if i + step < w { cur[i + step] } else { self.zero }).collect();
-            let ak_not = self.not(ak);
-            cur = (0..w).map(|i| self.mux(ak, ak_not, shifted[i], cur[i])).collect();
-        }
-        (cur, sticky)
-    }
-
-    /// Binary-search left normalization: at each level shift left by
-    /// `2^k` when the top `2^k` bits are all zero. Returns the normalized
-    /// register (MSB at the top iff the input was nonzero) and the
-    /// leading-zero count bits (LSB first).
-    fn normalize(&mut self, word: &[Col]) -> (Vec<Col>, Vec<Col>) {
-        let w = word.len();
-        let levels = ceil_log2(w as u64);
-        let mut cur = word.to_vec();
-        let mut lz = vec![self.zero; levels as usize];
-        for k in (0..levels).rev() {
-            let step = 1usize << k;
-            if step >= w {
-                continue;
-            }
-            let top = self.or_tree(&cur[w - step..]);
-            let tz = self.not(top); // complement of tz is `top` itself
-            let shifted: Vec<Col> =
-                (0..w).map(|i| if i >= step { cur[i - step] } else { self.zero }).collect();
-            cur = (0..w).map(|i| self.mux(tz, top, shifted[i], cur[i])).collect();
-            lz[k as usize] = tz;
-        }
-        (cur, lz)
-    }
+    man: Vec<Wire>,
 }
 
 /// Emit one fused float multiply-accumulate: `acc <- round(acc + a * x)`,
@@ -297,6 +91,7 @@ fn emit_mac(
     let w = 2 * s_w + 3; // aligned register (product + G, R, sticky)
     let wn = w + 1; // signed add register
     let bias = fmt.bias();
+    let (zero, one) = (cir.zero(), cir.one());
 
     // Zero flags: an exponent field of 0 means zero (flush-to-zero).
     let a_nz = cir.or_tree(&a.exp);
@@ -311,24 +106,28 @@ fn emit_mac(
     // mux. The accumulator's hidden bit is its nonzero flag, raising the
     // canonical accumulator onto the same 2S-bit grid.
     let mut sig_a = a.man.clone();
-    sig_a.push(cir.one);
+    sig_a.push(one);
     let mut sig_x = x.man.clone();
-    sig_x.push(cir.one);
+    sig_x.push(one);
     let p2 = cir.mul(&sig_a, &sig_x);
-    let mut c2 = vec![cir.zero; s_w];
+    let mut c2 = vec![zero; s_w];
     c2.extend(&acc.man);
     c2.push(c_nz);
 
     // Exponent words (two's complement, `ew` bits, wide enough that no
     // intermediate wraps): d = ea + ex - ec - bias + 1 is the ulp-weight
-    // gap between the product and accumulator registers.
+    // gap between the product and accumulator registers. The two ripple
+    // adds feeding `d` run in parallel partitions: t = ea + ex alongside
+    // u = (1 - bias) - ec, then d = t + u (same value mod 2^ew as the
+    // former t - ec + const chain, one ripple shorter on the critical
+    // path).
     let ea_w = cir.zext(&a.exp, ew);
     let ex_w = cir.zext(&x.exp, ew);
     let ec_w = cir.zext(&acc.exp, ew);
     let t = cir.add_mod(&ea_w, &ex_w);
-    let t2 = cir.sub_mod(&t, &ec_w);
     let dcst = cir.const_word(1 - bias, ew);
-    let d = cir.add_mod(&t2, &dcst);
+    let u = cir.sub_mod(&dcst, &ec_w);
+    let d = cir.add_mod(&t, &u);
     let d_neg = d[ew as usize - 1];
     let nd = cir.neg_mod(&d);
     let d_abs = cir.mux_word(d_neg, &nd, &d);
@@ -352,9 +151,9 @@ fn emit_mac(
     // Align the smaller operand; sticky folds into the register LSB.
     let big = cir.mux_word(d_neg, &c2, &p2);
     let small = cir.mux_word(d_neg, &p2, &c2);
-    let mut xb = vec![cir.zero; 3];
+    let mut xb = vec![zero; 3];
     xb.extend(&big);
-    let mut xs_full = vec![cir.zero; 3];
+    let mut xs_full = vec![zero; 3];
     xs_full.extend(&small);
     let (mut xs, sticky) = cir.shift_right_sticky(&xs_full, &sh);
     xs[0] = cir.or(xs[0], sticky);
@@ -366,7 +165,7 @@ fn emit_mac(
     let eff_sub = cir.xor(sp, acc.sign);
     let eff_not = cir.not(eff_sub);
     let mut xb_e = xb;
-    xb_e.push(cir.zero);
+    xb_e.push(zero);
     // Conditional invert of the aligned operand; the implicit sign
     // extension of `~xs` makes the appended top bit exactly `eff_sub`.
     let mut addend = Vec::with_capacity(wn);
@@ -377,8 +176,14 @@ fn emit_mac(
     addend.push(eff_sub);
     let (sum, _) = cir.add(&xb_e, &addend, eff_sub, eff_not);
     let negf = cir.and(eff_sub, sum[wn - 1]);
-    let nsum = cir.neg_mod(&sum);
-    let mag = cir.mux_word(negf, &nsum, &sum);
+    // The magnitude of a negative difference is the *reverse* difference:
+    // -(xb - xs) mod 2^wn == xs - xb mod 2^wn. Computing xs - xb in a
+    // parallel partition instead of negating `sum` afterwards takes a
+    // full ripple off the critical path; `negf` selects between them.
+    let nxb: Vec<Wire> = xb_e.iter().map(|&b| cir.not(b)).collect();
+    let xs_e = cir.zext(&xs, wn as u32);
+    let (rsum, _) = cir.add(&nxb, &xs_e, one, zero);
+    let mag = cir.mux_word(negf, &rsum, &sum);
     let sign_flip = cir.not(sign_big);
     let res_sign = cir.mux_bit(negf, sign_flip, sign_big);
 
@@ -394,20 +199,20 @@ fn emit_mac(
 
     // Round to nearest even on guard + (rest | lsb); the increment's
     // carry-out bumps the exponent (mantissa becomes zero).
-    let frac: Vec<Col> = (0..m).map(|j| norm[w - m + j]).collect();
+    let frac: Vec<Wire> = (0..m).map(|j| norm[w - m + j]).collect();
     let guard = norm[w - m - 1];
     let rest = cir.or_tree(&norm[..w - m - 1]);
     let tie = cir.or(rest, frac[0]);
     let up = cir.and(guard, tie);
     let up_not = cir.not(up);
     let mut sig_in = frac;
-    sig_in.push(cir.one);
-    let zeros_sig = vec![cir.zero; s_w];
+    sig_in.push(one);
+    let zeros_sig = vec![zero; s_w];
     let (sig_sum, cout) = cir.add(&sig_in, &zeros_sig, up, up_not);
-    let zeros_m = vec![cir.zero; m];
+    let zeros_m = vec![zero; m];
     let frac_rounded = cir.mux_word(cout, &zeros_m, &sig_sum[..m]);
     let cout_not = cir.not(cout);
-    let zeros_ew = vec![cir.zero; ew as usize];
+    let zeros_ew = vec![zero; ew as usize];
     let (re_final, _) = cir.add(&re1, &zeros_ew, cout, cout_not);
 
     // Flush-to-zero (exact zero or biased exponent <= 0) has priority
@@ -424,9 +229,9 @@ fn emit_mac(
     let ov = cir.and(ov_raw, flush_not);
 
     let exp_field = &re_final[..e];
-    let zeros_e = vec![cir.zero; e];
-    let ones_e = vec![cir.one; e];
-    let ones_m = vec![cir.one; m];
+    let zeros_e = vec![zero; e];
+    let ones_e = vec![one; e];
+    let ones_m = vec![one; m];
     let g_exp1 = cir.mux_word(flush, &zeros_e, exp_field);
     let g_man1 = cir.mux_word(flush, &zeros_m, &frac_rounded);
     let g_sign = cir.and(res_sign, flush_not);
@@ -435,7 +240,7 @@ fn emit_mac(
 
     // A zero product leaves the (canonicalized) accumulator untouched.
     let acc_sign_can = cir.and(acc.sign, c_nz);
-    let acc_man_can: Vec<Col> = acc.man.iter().map(|&b| cir.and(b, c_nz)).collect();
+    let acc_man_can: Vec<Wire> = acc.man.iter().map(|&b| cir.and(b, c_nz)).collect();
     let out_sign = cir.mux_bit(p_zero, acc_sign_can, g_sign);
     let out_exp = cir.mux_word(p_zero, &acc.exp, &g_exp);
     let out_man = cir.mux_word(p_zero, &acc_man_can, &g_man);
@@ -448,8 +253,8 @@ fn emit_mac(
 pub struct MultPimFloatVec {
     fmt: FloatFormat,
     n_elems: u32,
-    /// One fused float multiply-accumulate program per vector element.
-    programs: Vec<Program>,
+    /// The compiled chain: one fused MAC program per element.
+    chain: CompiledChain,
     /// Matrix element `t` is staged packed at `a_cols[t] .. + total_bits`.
     a_cols: Vec<Col>,
     /// Duplicated vector elements, same packed layout.
@@ -458,12 +263,19 @@ pub struct MultPimFloatVec {
     out_exp: Vec<Col>,
     out_man: Vec<Col>,
     input_cols: Vec<Col>,
-    num_cols: Col,
 }
 
 impl MultPimFloatVec {
-    /// Build the engine for `n_elems` elements of format `fmt`.
+    /// Build the engine for `n_elems` elements of format `fmt` through
+    /// the partition-parallel scheduler (the production path).
     pub fn new(fmt: FloatFormat, n_elems: u32) -> Self {
+        Self::new_with_mode(fmt, n_elems, ScheduleMode::Partitioned)
+    }
+
+    /// Build the engine with an explicit schedule backend.
+    /// [`ScheduleMode::Serial`] is the one-gate-per-cycle oracle the
+    /// scheduled programs are fuzzed bit-exact against.
+    pub fn new_with_mode(fmt: FloatFormat, n_elems: u32, mode: ScheduleMode) -> Self {
         assert!(n_elems >= 1, "need at least one element");
         let tb = fmt.total_bits();
         let e = fmt.exp_bits as usize;
@@ -480,50 +292,43 @@ impl MultPimFloatVec {
         };
         let a_cols: Vec<Col> = (0..n_elems).map(|_| alloc_operand(&mut next)).collect();
         let x_cols: Vec<Col> = (0..n_elems).map(|_| alloc_operand(&mut next)).collect();
+        let operand_width = next;
         let operand_wires = |base: Col| FloatWires {
             sign: base + (m + e) as Col,
             exp: (0..e).map(|i| base + (m + i) as Col).collect(),
             man: (0..m).map(|i| base + i as Col).collect(),
         };
 
-        // Emit every element's circuit first (the shared column allocator
-        // keeps rising), then materialize the programs once the final
-        // crossbar width is known.
-        let mut drafts: Vec<(String, Circuit)> = Vec::with_capacity(n_elems as usize);
+        // Emit every element's circuit (the shared wire allocator keeps
+        // rising), then compile the chain through the selected backend.
+        let mut circuits: Vec<(String, Circuit)> = Vec::with_capacity(n_elems as usize);
         let mut acc: Option<FloatWires> = None;
         for t in 0..n_elems as usize {
             let mut cir = Circuit::new(next);
             let acc_w = acc.clone().unwrap_or_else(|| FloatWires {
-                sign: cir.zero,
-                exp: vec![cir.zero; e],
-                man: vec![cir.zero; m],
+                sign: cir.zero(),
+                exp: vec![cir.zero(); e],
+                man: vec![cir.zero(); m],
             });
             let a = operand_wires(a_cols[t]);
             let x = operand_wires(x_cols[t]);
             let out = emit_mac(&mut cir, fmt, &acc_w, &a, &x, ew);
-            next = cir.next;
+            next = cir.next_wire();
             acc = Some(out);
-            drafts.push((format!("multpim-fv-e{e}m{m}-elem{t}"), cir));
+            circuits.push((format!("multpim-fv-e{e}m{m}-elem{t}"), cir));
         }
-        let num_cols = next;
-        let partitions = PartitionMap::single(num_cols);
-        let programs: Vec<Program> = drafts
-            .into_iter()
-            .map(|(name, cir)| {
-                let mut b = ProgramBuilder::new(name, partitions.clone(), GateSet::Full);
-                let mut ones = cir.outs.clone();
-                ones.push(cir.one);
-                b.init(true, ones);
-                b.init(false, vec![cir.zero]);
-                for op in cir.ops {
-                    b.stage(op);
-                    b.commit();
-                }
-                b.finish()
-            })
-            .collect();
+        let region = OperandRegion::new(
+            a_cols.iter().chain(x_cols.iter()).copied().collect(),
+            operand_width,
+        );
+        let chain = compile_chain(circuits, region, mode, SchedulerConfig::default())
+            .expect("the emitted float MAC chain is well-formed");
 
         let final_acc = acc.expect("at least one element");
+        let resolve = |w: Wire| chain.col_of(w).expect("chain output wire");
+        let out_sign = resolve(final_acc.sign);
+        let out_exp: Vec<Col> = final_acc.exp.iter().map(|&w| resolve(w)).collect();
+        let out_man: Vec<Col> = final_acc.man.iter().map(|&w| resolve(w)).collect();
         let input_cols: Vec<Col> = a_cols
             .iter()
             .chain(x_cols.iter())
@@ -532,14 +337,13 @@ impl MultPimFloatVec {
         Self {
             fmt,
             n_elems,
-            programs,
+            chain,
             a_cols,
             x_cols,
-            out_sign: final_acc.sign,
-            out_exp: final_acc.exp,
-            out_man: final_acc.man,
+            out_sign,
+            out_exp,
+            out_man,
             input_cols,
-            num_cols,
         }
     }
 
@@ -553,12 +357,28 @@ impl MultPimFloatVec {
         self.n_elems
     }
 
+    /// The schedule backend this engine was compiled through.
+    pub fn mode(&self) -> ScheduleMode {
+        self.chain.mode()
+    }
+
+    /// Schedule statistics of the compiled chain (cycles, critical path,
+    /// partition occupancy) — what `multpim schedule-stats` prints.
+    pub fn schedule_stats(&self) -> &ScheduleStats {
+        self.chain.stats()
+    }
+
+    /// Per-element program schedule statistics, in chain order.
+    pub fn per_program_stats(&self) -> &[ScheduleStats] {
+        self.chain.per_program_stats()
+    }
+
     /// The program chain: one fused float multiply-accumulate program per
     /// vector element, executed back-to-back over one crossbar; lower
     /// with [`CompiledPipeline`](crate::sim::CompiledPipeline) for the
     /// serving hot path.
     pub fn programs(&self) -> &[Program] {
-        &self.programs
+        self.chain.programs()
     }
 
     /// Columns holding externally staged operand bits before the chain
@@ -580,18 +400,20 @@ impl MultPimFloatVec {
 
     /// Crossbar width (columns).
     pub fn width(&self) -> u32 {
-        self.num_cols
+        self.chain.width()
     }
 
-    /// Measured latency of the chain — the *serial reference schedule*
-    /// (one gate per cycle; see the module docs). The partition-parallel
-    /// cost is [`MultPimFloatVec::expected_latency`].
+    /// Measured latency of the compiled chain under its schedule backend:
+    /// the partition-parallel cycle count in the default
+    /// [`ScheduleMode::Partitioned`] mode, the one-gate-per-cycle
+    /// reference cost under [`ScheduleMode::Serial`].
     pub fn latency_cycles(&self) -> u64 {
-        self.programs.iter().map(|p| p.cycle_count() as u64).sum()
+        self.chain.stats().cycles
     }
 
     /// Audited partition-parallel latency of the §VI float schedule
-    /// (Table III float row).
+    /// (Table III float row) — the cost-model quote the measured
+    /// scheduled cycle count is held within 1.25x of.
     pub fn expected_latency(&self) -> u64 {
         costmodel::multpim_floatvec_latency(self.n_elems as u64, self.fmt)
     }
@@ -600,7 +422,7 @@ impl MultPimFloatVec {
     /// across program boundaries). Data independent: a deployment
     /// validates here at launch and never again.
     pub fn validate(&self) -> Result<crate::sim::CheckReport> {
-        crate::sim::validate_chain(&self.programs, &self.input_cols)
+        crate::sim::validate_chain(self.chain.programs(), &self.input_cols)
     }
 
     /// Read row `r`'s packed dot-product result after the chain ran
@@ -638,7 +460,7 @@ impl MultPimFloatVec {
             }
         }
         let m = rows.len().max(1);
-        let mut sim = Simulator::new(m, self.num_cols as usize);
+        let mut sim = Simulator::new(m, self.width() as usize);
         for (r, row) in rows.iter().enumerate() {
             if row.len() != self.n_elems as usize {
                 return Err(Error::BadParameter(format!(
@@ -659,7 +481,7 @@ impl MultPimFloatVec {
                 sim.write_bits(r, self.x_cols[t], tb, v);
             }
         }
-        for (i, p) in self.programs.iter().enumerate() {
+        for (i, p) in self.programs().iter().enumerate() {
             if i == 0 {
                 sim.run_with_inputs(p, &self.input_cols)?;
             } else {
@@ -750,22 +572,24 @@ mod tests {
     }
 
     #[test]
-    fn chain_validates_once() {
+    fn chain_validates_once_in_both_modes() {
         for (fmt, n_elems) in [
             (FloatFormat::new(3, 2), 1u32),
             (FloatFormat::new(4, 3), 3),
             (FloatFormat::FP16, 2),
             (FloatFormat::FP32, 2),
         ] {
-            let engine = MultPimFloatVec::new(fmt, n_elems);
-            let report = engine.validate().unwrap_or_else(|e| {
-                panic!("fmt={fmt:?} n={n_elems} chain rejected: {e}")
-            });
-            assert_eq!(
-                report.cycles as u64,
-                engine.latency_cycles(),
-                "fmt={fmt:?} n={n_elems}: every cycle validated"
-            );
+            for mode in [ScheduleMode::Partitioned, ScheduleMode::Serial] {
+                let engine = MultPimFloatVec::new_with_mode(fmt, n_elems, mode);
+                let report = engine.validate().unwrap_or_else(|e| {
+                    panic!("fmt={fmt:?} n={n_elems} {mode:?} chain rejected: {e}")
+                });
+                assert_eq!(
+                    report.cycles as u64,
+                    engine.latency_cycles(),
+                    "fmt={fmt:?} n={n_elems} {mode:?}: every cycle validated"
+                );
+            }
         }
     }
 
@@ -803,6 +627,44 @@ mod tests {
                     "fmt={fmt:?} n={n_elems} row={r} A={row:?} x={x:?}"
                 );
             }
+        }
+    }
+
+    /// The scheduled engine and the serial oracle agree bit-for-bit, and
+    /// the schedule actually realizes parallelism (strictly fewer cycles,
+    /// never beating the dependence-DAG bound).
+    #[test]
+    fn scheduled_matches_serial_oracle() {
+        let mut rng = SplitMix64::new(0x5C4ED);
+        for (fmt, n_elems) in [
+            (FloatFormat::new(3, 2), 2u32),
+            (FloatFormat::new(4, 3), 3),
+            (FloatFormat::FP16, 2),
+        ] {
+            let sched = MultPimFloatVec::new(fmt, n_elems);
+            let serial = MultPimFloatVec::new_with_mode(fmt, n_elems, ScheduleMode::Serial);
+            let stats = sched.schedule_stats();
+            assert!(
+                stats.cycles < stats.serial_cycles,
+                "fmt={fmt:?}: scheduled {} vs serial {}",
+                stats.cycles,
+                stats.serial_cycles
+            );
+            assert!(stats.cycles >= stats.critical_path_cycles);
+            assert_eq!(stats.serial_cycles, serial.latency_cycles());
+            assert!(stats.copy_gates > 0, "operand localization ran");
+            // Per-element program stats fold to the chain aggregate.
+            assert_eq!(sched.per_program_stats().len(), n_elems as usize);
+            assert_eq!(
+                sched.per_program_stats().iter().map(|p| p.cycles).sum::<u64>(),
+                stats.cycles
+            );
+            let (rows, x) = random_case(&mut rng, fmt, n_elems, 16);
+            assert_eq!(
+                sched.compute(&rows, &x).unwrap(),
+                serial.compute(&rows, &x).unwrap(),
+                "fmt={fmt:?} n={n_elems}"
+            );
         }
     }
 
@@ -850,9 +712,10 @@ mod tests {
         assert_eq!(fmt.to_f64(out[1]), 0.0);
     }
 
-    /// The serial reference schedule is still dramatically cheaper than
-    /// the FloatPIM float formula, and the audited partition-parallel
-    /// formulas reproduce the >= 25x Table III float margin.
+    /// The audited partition-parallel formulas reproduce the >= 25x
+    /// Table III float margin, and the *measured scheduled* chain beats
+    /// the serial reference by a wide factor (the tight 1.25x-of-model
+    /// gate lives in `benches/table3_matvec.rs` and the CI budget check).
     #[test]
     fn quoted_float_margin() {
         let fmt = FloatFormat::FP32;
@@ -860,9 +723,16 @@ mod tests {
         let baseline = FloatPimFloatVec::new(fmt, 8);
         let quoted = baseline.expected_latency() as f64 / fused.expected_latency() as f64;
         assert!((25.0..26.0).contains(&quoted), "quoted float speedup {quoted}");
+        let stats = fused.schedule_stats();
+        assert!(
+            stats.cycles < stats.serial_cycles / 2,
+            "scheduled FP32x8 chain ({}) must clearly beat the serial reference ({})",
+            stats.cycles,
+            stats.serial_cycles
+        );
         assert!(
             fused.latency_cycles() < baseline.expected_latency(),
-            "even the serial schedule ({}) beats the FloatPIM formula ({})",
+            "the scheduled chain ({}) beats the FloatPIM formula ({})",
             fused.latency_cycles(),
             baseline.expected_latency()
         );

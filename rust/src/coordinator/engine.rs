@@ -406,7 +406,8 @@ impl FloatVecEngine {
         self.shard_rows
     }
 
-    /// Simulated cycles per chain execution (serial reference schedule).
+    /// Simulated cycles per chain execution (the partition-parallel
+    /// scheduled chain; see [`MultPimFloatVec::schedule_stats`]).
     pub fn cycles(&self) -> u64 {
         self.compiled.cycles()
     }

@@ -47,6 +47,11 @@ pub struct WorkloadCounters {
     pub queue_wait_ns: AtomicU64,
     /// Units whose queue wait has been recorded.
     pub queued_units: AtomicU64,
+    /// Requests rejected by admission control (queue-depth limit hit);
+    /// disjoint from `requests`, which counts admissions only.
+    pub rejected_requests: AtomicU64,
+    /// Work units those rejected requests would have admitted.
+    pub rejected_units: AtomicU64,
     /// Per-shard occupancy, keyed by shard index within the pool.
     shards: Mutex<BTreeMap<usize, ShardStats>>,
 }
@@ -56,6 +61,13 @@ impl WorkloadCounters {
     pub fn record_admission(&self, units: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.admitted_units.fetch_add(units, Ordering::Relaxed);
+    }
+
+    /// Record one request bounced by admission control (the typed
+    /// [`Error::Overloaded`](crate::Error::Overloaded) rejection path).
+    pub fn record_rejection(&self, units: u64) {
+        self.rejected_requests.fetch_add(1, Ordering::Relaxed);
+        self.rejected_units.fetch_add(units, Ordering::Relaxed);
     }
 
     /// Mean per-unit queue wait so far.
@@ -219,11 +231,13 @@ impl Metrics {
             let units = wl.units.load(Ordering::Relaxed);
             out.push_str(&format!(
                 "\n  workload[{key}] requests={} admitted={} tiles={tiles} units={units} \
-                 avg_tile={:.1} avg_queue_wait={:.3?}",
+                 avg_tile={:.1} avg_queue_wait={:.3?} rejected={} rejected_units={}",
                 wl.requests.load(Ordering::Relaxed),
                 wl.admitted_units.load(Ordering::Relaxed),
                 if tiles > 0 { units as f64 / tiles as f64 } else { 0.0 },
                 wl.avg_queue_wait(),
+                wl.rejected_requests.load(Ordering::Relaxed),
+                wl.rejected_units.load(Ordering::Relaxed),
             ));
             for (shard, s) in wl.shard_stats() {
                 out.push_str(&format!(
@@ -295,6 +309,23 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("workload[matvec N=32 n=8] requests=1 admitted=100 tiles=2"), "{s}");
         assert!(s.contains("shard[matvec N=32 n=8:0]"), "{s}");
+    }
+
+    #[test]
+    fn rejections_are_counted_and_rendered() {
+        let m = Metrics::default();
+        let key = WorkloadKey::MatVec { n_bits: 8, n_elems: 4 };
+        let wl = m.register(key);
+        wl.record_admission(10);
+        wl.record_rejection(64);
+        wl.record_rejection(32);
+        assert_eq!(wl.rejected_requests.load(Ordering::Relaxed), 2);
+        assert_eq!(wl.rejected_units.load(Ordering::Relaxed), 96);
+        // Admission counters never absorb rejections.
+        assert_eq!(wl.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(wl.admitted_units.load(Ordering::Relaxed), 10);
+        let s = m.snapshot();
+        assert!(s.contains("rejected=2 rejected_units=96"), "{s}");
     }
 
     #[test]

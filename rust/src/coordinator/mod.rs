@@ -34,8 +34,14 @@
 //! 1. **plan** — [`Coordinator::submit`] resolves the request's
 //!    [`WorkloadKey`](pool::WorkloadKey) to its deployment (typed
 //!    [`NoDeployment`](crate::Error::NoDeployment) rejection otherwise),
-//!    stamps a ticket from the global admission counter plus an enqueue
-//!    timestamp, and turns the request into **tiles**:
+//!    applies **admission control** — each deployment's
+//!    `max_queue_tiles` bounds its tile queue depth, and a submission
+//!    whose planned tiles would exceed it is rejected *before* admission
+//!    with the typed
+//!    [`Overloaded`](crate::Error::Overloaded)`{ key, retry_after_tiles }`
+//!    backpressure error (counted in the labeled `rejected` metrics) —
+//!    then stamps a ticket from the global admission counter plus an
+//!    enqueue timestamp, and turns the request into **tiles**:
 //!    * *multiply* — the width's batcher thread accumulates jobs across
 //!      requests (capacity = crossbar rows, deadline = `max_wait`) and
 //!      flushes full-or-expired batches as tiles;

@@ -42,11 +42,12 @@
 use super::batcher::{BatchQueue, RowBatcher};
 use super::engine::{ChainEngine, EngineConfig, FloatVecEngine, MultiplyEngine};
 use super::metrics::Metrics;
-use super::pool::{ShardPool, WorkloadKey};
+use super::pool::{ShardPool, Workload, WorkloadKey};
 use super::workloads::{
     FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyTile, MultiplyWorkload,
 };
 use crate::fixedpoint::float::FloatFormat;
+use crate::util::div_ceil;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -121,18 +122,47 @@ enum WorkerMsg {
 }
 
 /// One deployed multiply width's admission front: the batcher thread's
-/// channel plus the shard pool it flushes into.
+/// channel plus the shard pool (with its queue-depth limit) it flushes
+/// into. For multiply, queue depth is measured in flushed-but-unexecuted
+/// batches.
 struct MultiplyFront {
     tx: mpsc::Sender<WorkerMsg>,
-    pool: ShardPool<MultiplyWorkload>,
+    tenant: TenantPool<MultiplyWorkload>,
+}
+
+/// One workload's pool plus its admission-control queue-depth limit
+/// (0 = unbounded).
+struct TenantPool<W: Workload> {
+    pool: ShardPool<W>,
+    max_queue_tiles: usize,
+}
+
+impl<W: Workload> TenantPool<W> {
+    /// Reject the submission with the typed overload error when admitting
+    /// `planned` more tiles (`units` work units) would push the tile
+    /// queue past this tenant's depth limit. Best effort: the depth read
+    /// races concurrent admissions, which only ever makes the bound
+    /// slightly conservative or slightly generous, never wrong by more
+    /// than the in-flight submissions.
+    fn admit(&self, key: WorkloadKey, planned: usize, units: u64) -> Result<()> {
+        let depth = self.pool.queue().len();
+        if self.max_queue_tiles > 0 && planned > 0 && depth + planned > self.max_queue_tiles {
+            self.pool.counters().record_rejection(units);
+            return Err(Error::Overloaded {
+                key,
+                retry_after_tiles: (depth + planned - self.max_queue_tiles) as u64,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// The deployment: routes requests to per-workload shard pools.
 pub struct Coordinator {
     multiply: HashMap<u32, MultiplyFront>,
-    matvec: HashMap<(u32, u32), ShardPool<MatVecWorkload>>,
-    matmul: HashMap<(u32, u32), ShardPool<MatMulWorkload>>,
-    floatvec: HashMap<(u32, u32, u32), ShardPool<FloatVecWorkload>>,
+    matvec: HashMap<(u32, u32), TenantPool<MatVecWorkload>>,
+    matmul: HashMap<(u32, u32), TenantPool<MatMulWorkload>>,
+    floatvec: HashMap<(u32, u32, u32), TenantPool<FloatVecWorkload>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     /// Global admission counter; its value rides on every multiply job as
@@ -154,6 +184,10 @@ pub struct MultiplyDeployment {
     pub config: EngineConfig,
     /// Crossbar shards (worker threads) sharing this width's batch queue.
     pub shards: usize,
+    /// Admission control: maximum flushed batches allowed to wait in the
+    /// tile queue before new submissions are rejected with
+    /// [`Error::Overloaded`]. `0` = unbounded (no backpressure).
+    pub max_queue_tiles: usize,
 }
 
 /// Configuration for one deployed §VI matvec shape.
@@ -170,6 +204,10 @@ pub struct MatVecDeployment {
     pub shard_rows: usize,
     /// Crossbar shards (worker threads) sharing this shape's tile queue.
     pub shards: usize,
+    /// Admission control: maximum tiles allowed to wait in the tile queue
+    /// (a request needing more tiles than the remaining headroom is
+    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
+    pub max_queue_tiles: usize,
 }
 
 /// Configuration for one deployed full-precision float matvec shape.
@@ -185,6 +223,10 @@ pub struct FloatVecDeployment {
     pub shard_rows: usize,
     /// Crossbar shards (worker threads) sharing this shape's tile queue.
     pub shards: usize,
+    /// Admission control: maximum tiles allowed to wait in the tile queue
+    /// (a request needing more tiles than the remaining headroom is
+    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
+    pub max_queue_tiles: usize,
 }
 
 /// Configuration for one deployed GEMM shape.
@@ -202,6 +244,10 @@ pub struct MatMulDeployment {
     pub panel_cols: usize,
     /// Crossbar shards (worker threads) sharing this shape's tile queue.
     pub shards: usize,
+    /// Admission control: maximum tiles allowed to wait in the tile queue
+    /// (a request needing more tiles than the remaining headroom is
+    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
+    pub max_queue_tiles: usize,
 }
 
 impl Coordinator {
@@ -327,14 +373,20 @@ impl Coordinator {
             let queue = Arc::clone(pool.queue());
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
             workers.push(std::thread::spawn(move || batcher_loop(dep, rx, queue)));
-            multiply.insert(dep.n_bits, MultiplyFront { tx, pool });
+            multiply.insert(
+                dep.n_bits,
+                MultiplyFront {
+                    tx,
+                    tenant: TenantPool { pool, max_queue_tiles: dep.max_queue_tiles },
+                },
+            );
         }
         let mut matvec = HashMap::new();
         for (dep, engine) in matvec_engines {
             let shape = (dep.n_bits, dep.n_elems);
             let pool =
                 ShardPool::launch(MatVecWorkload::new(engine), dep.shards, &metrics, &mut workers);
-            matvec.insert(shape, pool);
+            matvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
         }
         let mut matmul = HashMap::new();
         for (dep, engine) in matmul_engines {
@@ -345,7 +397,7 @@ impl Coordinator {
                 &metrics,
                 &mut workers,
             );
-            matmul.insert(shape, pool);
+            matmul.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
         }
         let mut floatvec = HashMap::new();
         for (dep, engine) in floatvec_engines {
@@ -356,7 +408,7 @@ impl Coordinator {
                 &metrics,
                 &mut workers,
             );
-            floatvec.insert(shape, pool);
+            floatvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
         }
         Ok(Self {
             multiply,
@@ -387,11 +439,14 @@ impl Coordinator {
                     .multiply
                     .get(&n_bits)
                     .ok_or(Error::NoDeployment(WorkloadKey::Multiply { n_bits }))?;
+                // Admission control: a multiply enqueues (at most) one
+                // more flushed batch, measured against the batch queue.
+                front.tenant.admit(WorkloadKey::Multiply { n_bits }, 1, 1)?;
                 // Count acceptance only after routing resolves, so the
                 // global counter stays the sum of the labeled per-workload
                 // counters even when submissions are rejected.
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                front.pool.counters().record_admission(1);
+                front.tenant.pool.counters().record_admission(1);
                 let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 // Stamp admission time here so the queue-wait metric also
                 // covers time spent in the submit->batcher channel.
@@ -403,7 +458,7 @@ impl Coordinator {
             }
             Request::MatVec { n_bits, rows, x } => {
                 let key = WorkloadKey::MatVec { n_bits, n_elems: x.len() as u32 };
-                let pool =
+                let tenant =
                     self.matvec.get(&(n_bits, x.len() as u32)).ok_or(Error::NoDeployment(key))?;
                 for (r, row) in rows.iter().enumerate() {
                     if row.len() != x.len() {
@@ -414,11 +469,14 @@ impl Coordinator {
                         )));
                     }
                 }
+                // Admission control against the tile queue depth.
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                tenant.admit(key, div_ceil(rows.len(), shard_rows), rows.len() as u64)?;
                 // Admission: draw a ticket and stamp the enqueue time the
                 // tile queue-wait metric measures from.
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                pool.counters().record_admission(rows.len() as u64);
+                tenant.pool.counters().record_admission(rows.len() as u64);
                 if rows.is_empty() {
                     let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
                     return Ok(reply_rx);
@@ -427,15 +485,15 @@ impl Coordinator {
                 // Row-wise tiling: ceil(m / shard_rows) tiles scattered
                 // over the shard pool, gathered by the ScatterGather
                 // completion (one inner product per matrix row).
-                for tile in pool.workload().plan(rows, x, reply_tx, enqueued) {
-                    if !pool.push(tile) {
+                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
+                    if !tenant.pool.push(tile) {
                         return Err(Error::Runtime("matvec shard pool shut down".into()));
                     }
                 }
             }
             Request::MatMul { n_bits, a, b } => {
                 let key = WorkloadKey::MatMul { n_bits, k: b.len() as u32 };
-                let pool =
+                let tenant =
                     self.matmul.get(&(n_bits, b.len() as u32)).ok_or(Error::NoDeployment(key))?;
                 let k = b.len();
                 for (r, row) in a.iter().enumerate() {
@@ -455,9 +513,15 @@ impl Coordinator {
                         )));
                     }
                 }
+                // Admission control: a request plans row-tile x
+                // column-panel rectangles.
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                let panel_cols = tenant.pool.workload().panel_cols();
+                let planned = div_ceil(a.len(), shard_rows) * div_ceil(p, panel_cols);
+                tenant.admit(key, planned, (a.len() * p) as u64)?;
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                pool.counters().record_admission((a.len() * p) as u64);
+                tenant.pool.counters().record_admission((a.len() * p) as u64);
                 // Degenerate outputs complete at admission.
                 if a.is_empty() || p == 0 {
                     let _ = reply_tx.send(Ok(Response::Matrix(vec![Vec::new(); a.len()])));
@@ -466,8 +530,8 @@ impl Coordinator {
                 let enqueued = Instant::now();
                 // 2-D tiling: row tiles x output-column panels scattered
                 // over the shard pool, gathered into the row-major output.
-                for tile in pool.workload().plan(a, b, p, reply_tx, enqueued) {
-                    if !pool.push(tile) {
+                for tile in tenant.pool.workload().plan(a, b, p, reply_tx, enqueued) {
+                    if !tenant.pool.push(tile) {
                         return Err(Error::Runtime("matmul shard pool shut down".into()));
                     }
                 }
@@ -475,7 +539,7 @@ impl Coordinator {
             Request::FloatMatVec { exp_bits, man_bits, rows, x } => {
                 let key =
                     WorkloadKey::FloatVec { exp_bits, man_bits, n_elems: x.len() as u32 };
-                let pool = self
+                let tenant = self
                     .floatvec
                     .get(&(exp_bits, man_bits, x.len() as u32))
                     .ok_or(Error::NoDeployment(key))?;
@@ -505,11 +569,14 @@ impl Coordinator {
                         check("row", r, v)?;
                     }
                 }
+                // Admission control against the tile queue depth.
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                tenant.admit(key, div_ceil(rows.len(), shard_rows), rows.len() as u64)?;
                 // Admission: draw a ticket and stamp the enqueue time the
                 // tile queue-wait metric measures from.
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                pool.counters().record_admission(rows.len() as u64);
+                tenant.pool.counters().record_admission(rows.len() as u64);
                 if rows.is_empty() {
                     let _ = reply_tx.send(Ok(Response::FloatVector(Vec::new())));
                     return Ok(reply_rx);
@@ -518,8 +585,8 @@ impl Coordinator {
                 // Row-wise tiling, identical to the fixed-point matvec
                 // tenant; the gathered result is bit-exact against the
                 // float_dot_ref composition.
-                for tile in pool.workload().plan(rows, x, reply_tx, enqueued) {
-                    if !pool.push(tile) {
+                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
+                    if !tenant.pool.push(tile) {
                         return Err(Error::Runtime("floatvec shard pool shut down".into()));
                     }
                 }
@@ -588,14 +655,14 @@ impl Coordinator {
             let _ = front.tx.send(WorkerMsg::Shutdown);
         }
         self.multiply.clear();
-        for pool in self.matvec.values() {
-            pool.close();
+        for tenant in self.matvec.values() {
+            tenant.pool.close();
         }
-        for pool in self.matmul.values() {
-            pool.close();
+        for tenant in self.matmul.values() {
+            tenant.pool.close();
         }
-        for pool in self.floatvec.values() {
-            pool.close();
+        for tenant in self.floatvec.values() {
+            tenant.pool.close();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -647,6 +714,7 @@ mod tests {
             max_wait: Duration::from_millis(wait_ms),
             config: EngineConfig::MultPim,
             shards,
+            max_queue_tiles: 0,
         }
     }
 
@@ -656,7 +724,7 @@ mod tests {
         shard_rows: usize,
         shards: usize,
     ) -> MatVecDeployment {
-        MatVecDeployment { n_bits, n_elems, shard_rows, shards }
+        MatVecDeployment { n_bits, n_elems, shard_rows, shards, max_queue_tiles: 0 }
     }
 
     fn mm_deployment(
@@ -666,7 +734,7 @@ mod tests {
         panel_cols: usize,
         shards: usize,
     ) -> MatMulDeployment {
-        MatMulDeployment { n_bits, k, shard_rows, panel_cols, shards }
+        MatMulDeployment { n_bits, k, shard_rows, panel_cols, shards, max_queue_tiles: 0 }
     }
 
     fn fv_deployment(
@@ -676,7 +744,7 @@ mod tests {
         shard_rows: usize,
         shards: usize,
     ) -> FloatVecDeployment {
-        FloatVecDeployment { exp_bits, man_bits, n_elems, shard_rows, shards }
+        FloatVecDeployment { exp_bits, man_bits, n_elems, shard_rows, shards, max_queue_tiles: 0 }
     }
 
     #[test]
@@ -955,6 +1023,102 @@ mod tests {
             .is_err(),
             "duplicate floatvec shape"
         );
+    }
+
+    /// Admission control: a request needing more tiles than the
+    /// queue-depth limit is rejected with the typed overload error, the
+    /// rejection is counted (and rendered), and admission counters never
+    /// absorb the bounced work.
+    #[test]
+    fn overloaded_matvec_rejected_with_retry_hint() {
+        let mut dep = mv_deployment(8, 2, 2, 1);
+        dep.max_queue_tiles = 3;
+        let coord = Coordinator::launch(&[], &[dep], &[], &[]).unwrap();
+        // 10 rows at shard_rows = 2 need 5 tiles > limit 3: rejected even
+        // on an empty queue, with the excess as the retry hint.
+        let rows: Vec<Vec<u64>> = (0..10u64).map(|r| vec![r, r + 1]).collect();
+        match coord.matvec(8, rows, vec![1, 2]) {
+            Err(Error::Overloaded { key, retry_after_tiles }) => {
+                assert_eq!(key, WorkloadKey::MatVec { n_bits: 8, n_elems: 2 });
+                assert_eq!(retry_after_tiles, 2);
+            }
+            other => panic!("expected overload, got {other:?}"),
+        }
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatVec { n_bits: 8, n_elems: 2 })
+            .unwrap();
+        assert_eq!(wl.rejected_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(wl.rejected_units.load(Ordering::Relaxed), 10);
+        assert_eq!(wl.requests.load(Ordering::Relaxed), 0, "rejections are not admissions");
+        assert_eq!(coord.metrics().requests.load(Ordering::Relaxed), 0);
+        // A request within the limit still serves.
+        let out = coord.matvec(8, vec![vec![2, 3], vec![4, 5]], vec![1, 2]).unwrap();
+        assert_eq!(out, vec![2 + 6, 4 + 10]);
+        let snap = coord.metrics().snapshot();
+        assert!(snap.contains("rejected=1 rejected_units=10"), "{snap}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn overloaded_matmul_rejected() {
+        let mut dep = mm_deployment(8, 2, 2, 2, 1);
+        dep.max_queue_tiles = 2;
+        let coord = Coordinator::launch(&[], &[], &[dep], &[]).unwrap();
+        // 4x2 * 2x4: 2 row tiles x 2 column panels = 4 rects > limit 2.
+        let a: Vec<Vec<u64>> = (0..4u64).map(|r| vec![r, r + 1]).collect();
+        let b = vec![vec![1u64, 2, 3, 4], vec![5, 6, 7, 8]];
+        assert!(matches!(
+            coord.matmul(8, a, b),
+            Err(Error::Overloaded { retry_after_tiles: 2, .. })
+        ));
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatMul { n_bits: 8, k: 2 })
+            .unwrap();
+        assert_eq!(wl.rejected_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(wl.rejected_units.load(Ordering::Relaxed), 16);
+        // A single-rect request fits.
+        assert_eq!(
+            coord
+                .matmul(8, vec![vec![1, 2], vec![3, 4]], vec![vec![5, 6], vec![7, 8]])
+                .unwrap(),
+            vec![vec![19, 22], vec![43, 50]]
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn overloaded_floatvec_rejected_and_zero_limit_unbounded() {
+        let mut dep = fv_deployment(4, 3, 2, 1, 1);
+        dep.max_queue_tiles = 1;
+        let coord = Coordinator::launch(&[], &[], &[], &[dep]).unwrap();
+        let rows = vec![vec![0u64, 0]; 3]; // 3 tiles at shard_rows = 1
+        assert!(matches!(
+            coord.float_matvec(4, 3, rows, vec![0, 0]),
+            Err(Error::Overloaded { .. })
+        ));
+        // Within the limit: serves.
+        assert!(coord.float_matvec(4, 3, vec![vec![0, 0]], vec![0, 0]).is_ok());
+        coord.shutdown();
+        // Limit 0 (the default) is unbounded: the same 3-tile request is
+        // admitted.
+        let coord = Coordinator::launch(&[], &[], &[], &[fv_deployment(4, 3, 2, 1, 1)]).unwrap();
+        assert!(coord
+            .float_matvec(4, 3, vec![vec![0u64, 0]; 3], vec![0, 0])
+            .is_ok());
+        coord.shutdown();
+    }
+
+    /// A multiply limit measured against the flushed-batch queue never
+    /// rejects on an idle service.
+    #[test]
+    fn multiply_limit_admits_when_queue_empty() {
+        let mut dep = deployment(8, 4, 1, 1);
+        dep.max_queue_tiles = 1;
+        let coord = Coordinator::launch(&[dep], &[], &[], &[]).unwrap();
+        assert_eq!(coord.multiply(8, 7, 6).unwrap(), 42);
+        coord.shutdown();
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //!   multipliers, ripple adders, the fused matrix-vector engine (§VI),
 //!   and the full-precision float matvec pipeline
 //!   ([`algorithms::floatvec`]).
+//! * [`schedule`] — the partition-parallel circuit scheduler: a compiler
+//!   backend (placement → list scheduling → lowering) from the SSA
+//!   [`schedule::Circuit`] IR to legal partition-parallel programs; the
+//!   float matvec pipeline emits through it, closing the measured cycle
+//!   count to the audited §VI cost model. The serial emission survives as
+//!   [`schedule::ScheduleMode::Serial`], the bit-exactness oracle.
 //! * [`coordinator`] — the L3 serving layer: a generic workload shard
 //!   pool (one pool/queue/gather/metrics core) serving multiply, matvec,
 //!   matmul, and float-matvec tenants, plus the request router, row
@@ -61,6 +67,7 @@ pub mod fixedpoint;
 pub mod isa;
 pub mod report;
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 pub mod util;
 
@@ -94,6 +101,20 @@ pub enum Error {
     /// matvec shape). Carries the exact [`coordinator::WorkloadKey`] that
     /// failed to resolve.
     NoDeployment(coordinator::WorkloadKey),
+    /// A request was rejected by admission control: the workload's tile
+    /// queue is at its configured depth limit. Clients should back off
+    /// and retry after roughly `retry_after_tiles` queued tiles have
+    /// drained (the excess this request would have created). A request
+    /// whose *own* tile count exceeds the limit is rejected even on an
+    /// empty queue — the limit doubles as the deployment's maximum
+    /// request size, so a client seeing the identical rejection repeat
+    /// should split the request rather than keep retrying.
+    Overloaded {
+        /// The overloaded workload.
+        key: coordinator::WorkloadKey,
+        /// Queue excess in tiles — a retry hint, not a guarantee.
+        retry_after_tiles: u64,
+    },
     /// Runtime (golden-model executor) failure.
     Runtime(String),
     /// Golden-model mismatch during verification.
@@ -114,6 +135,13 @@ impl std::fmt::Display for Error {
             Error::BadParameter(msg) => write!(f, "bad parameter: {msg}"),
             Error::NoDeployment(key) => {
                 write!(f, "no deployment launched for workload {key}")
+            }
+            Error::Overloaded { key, retry_after_tiles } => {
+                write!(
+                    f,
+                    "workload {key} overloaded: retry after ~{retry_after_tiles} queued \
+                     tiles drain"
+                )
             }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::VerificationFailed(msg) => write!(f, "verification mismatch: {msg}"),

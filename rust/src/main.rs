@@ -12,11 +12,17 @@
 //! multpim verify   [--rows 64]        # triple golden agreement via PJRT
 //! multpim serve    [--requests 4096] [--shards 4] [--mv-requests 8] [--mv-rows 256]
 //!                  [--mm-requests 4] [--mm-rows 64] [--fv-requests 4] [--fv-rows 128]
+//!                  [--fv-format fp32|bf16|fp16]
 //!                                     # multiply + matvec + matmul + float-matvec
 //!                                     # shard-pool demo with per-workload metrics
+//! multpim schedule-stats [--exp 8] [--man 23] [--elems 8] [--budget FILE]
+//!                                     # partition-parallel float MAC schedule
+//!                                     # stats; with --budget, fail when the
+//!                                     # checked-in cycle ceilings regress
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
 //! ```
 
+use multpim::algorithms::floatvec::MultPimFloatVec;
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::multpim_area::MultPimArea;
 use multpim::algorithms::Multiplier;
@@ -123,6 +129,7 @@ fn run(args: &[String]) -> Result<()> {
                     shard_rows: m.clamp(1, 64),
                     panel_cols: p.clamp(1, 8),
                     shards: 2,
+                    max_queue_tiles: 0,
                 }],
                 &[],
             )?;
@@ -171,7 +178,7 @@ fn run(args: &[String]) -> Result<()> {
             let out = engine.shard().execute(&rows, &x);
             println!(
                 "float-matvec: {m} rows x {elems} elems, E={exp} M={man}: {} PIM cycles \
-                 (serial reference schedule, all rows parallel)",
+                 (partition-parallel schedule, all rows parallel)",
                 engine.cycles()
             );
             for (i, &v) in out.iter().take(4).enumerate() {
@@ -239,6 +246,19 @@ fn run(args: &[String]) -> Result<()> {
             let mm_rows = opt_u64(args, "--mm-rows", 64) as usize;
             let fv_requests = opt_u64(args, "--fv-requests", 4);
             let fv_rows = opt_u64(args, "--fv-rows", 128) as usize;
+            // Mixed-precision serving: the float tenant's format is a
+            // deployment choice (scheduled engines are format-parametric).
+            let fv_format = opt(args, "--fv-format").unwrap_or_else(|| "fp32".into());
+            let fmt = match fv_format.as_str() {
+                "fp32" => FloatFormat::FP32,
+                "bf16" => FloatFormat::BF16,
+                "fp16" => FloatFormat::FP16,
+                other => {
+                    return Err(multpim::Error::BadParameter(format!(
+                        "--fv-format must be fp32|bf16|fp16, got {other}"
+                    )))
+                }
+            };
             let coord = Coordinator::launch(
                 &[MultiplyDeployment {
                     n_bits: 32,
@@ -246,12 +266,14 @@ fn run(args: &[String]) -> Result<()> {
                     max_wait: Duration::from_millis(2),
                     config: EngineConfig::MultPim,
                     shards,
+                    max_queue_tiles: 0,
                 }],
                 &[MatVecDeployment {
                     n_bits: 32,
                     n_elems: 8,
                     shard_rows: 64,
                     shards: shards.max(1),
+                    max_queue_tiles: 0,
                 }],
                 &[MatMulDeployment {
                     n_bits: 32,
@@ -259,13 +281,15 @@ fn run(args: &[String]) -> Result<()> {
                     shard_rows: 64,
                     panel_cols: 4,
                     shards: shards.max(1),
+                    max_queue_tiles: 0,
                 }],
                 &[FloatVecDeployment {
-                    exp_bits: 8,
-                    man_bits: 23,
+                    exp_bits: fmt.exp_bits,
+                    man_bits: fmt.man_bits,
                     n_elems: 8,
                     shard_rows: 64,
                     shards: shards.max(1),
+                    max_queue_tiles: 0,
                 }],
             )?;
             let mut rng = SplitMix64::new(0xE0);
@@ -320,12 +344,16 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 mm_rxs.push(coord.submit(Request::MatMul { n_bits: 32, a, b })?);
             }
-            // Full-precision float traffic rides the same generic pool:
-            // every served row must be bit-exact against the
-            // float_mac_ref composition.
-            let fmt = FloatFormat::FP32;
+            // Float traffic (format chosen by --fv-format) rides the same
+            // generic pool: every served row must be bit-exact against
+            // the float_mac_ref composition.
             let fv_rand = |rng: &mut SplitMix64| {
-                fmt.pack(rng.bits(1), 64 + rng.next_u64() % 128, rng.bits(23))
+                let span = (fmt.max_exp() / 2).max(1);
+                fmt.pack(
+                    rng.bits(1),
+                    fmt.max_exp() / 4 + 1 + rng.next_u64() % span,
+                    rng.bits(fmt.man_bits),
+                )
             };
             let mut fv_rxs = Vec::with_capacity(fv_requests as usize);
             let mut fv_expected = Vec::with_capacity(fv_requests as usize);
@@ -338,8 +366,8 @@ fn run(args: &[String]) -> Result<()> {
                     rows.iter().map(|row| float_dot_ref(fmt, row, &x)).collect::<Vec<u64>>(),
                 );
                 fv_rxs.push(coord.submit(Request::FloatMatVec {
-                    exp_bits: 8,
-                    man_bits: 23,
+                    exp_bits: fmt.exp_bits,
+                    man_bits: fmt.man_bits,
                     rows,
                     x,
                 })?);
@@ -384,10 +412,101 @@ fn run(args: &[String]) -> Result<()> {
                 "served {requests} multiply requests + {mv_requests} matvec requests \
                  ({mv_rows} rows x 8 elems each) + {mm_requests} matmul requests \
                  ({mm_rows}x8 * 8x{mm_p} each) + {fv_requests} float-matvec requests \
-                 ({fv_rows} rows x 8 elems each, bit-exact)"
+                 ({fv_format}, {fv_rows} rows x 8 elems each, bit-exact)"
             );
             println!("metrics: {}", coord.metrics().snapshot());
             coord.shutdown();
+            Ok(())
+        }
+        Some("schedule-stats") => {
+            let exp = opt_u64(args, "--exp", 8) as u32;
+            let man = opt_u64(args, "--man", 23) as u32;
+            let elems = opt_u64(args, "--elems", 8) as u32;
+            let fmt = FloatFormat::new(exp, man);
+            let sched = MultPimFloatVec::new(fmt, elems);
+            let stats = sched.schedule_stats();
+            let quoted = sched.expected_latency();
+            println!(
+                "schedule-stats: float MAC chain, E={exp} M={man} n={elems} \
+                 (partition-parallel backend)"
+            );
+            println!("{}", stats.render());
+            println!("  per-program (element) schedules:");
+            for (i, ps) in sched.per_program_stats().iter().enumerate() {
+                println!(
+                    "    elem {i}: cycles={} serial={} critical={} peak={} occupancy={:.1}%",
+                    ps.cycles,
+                    ps.serial_cycles,
+                    ps.critical_path_cycles,
+                    ps.peak_parallel_gates,
+                    100.0 * ps.occupancy(),
+                );
+            }
+            println!("  quoted cost model:    {quoted} cycles (MultPIM-F row)");
+            println!(
+                "  measured / quoted:    {:.3}x (bench + CI budget gate at <= 1.25x)",
+                stats.cycles as f64 / quoted as f64
+            );
+            if let Some(path) = opt(args, "--budget") {
+                let text = std::fs::read_to_string(&path)?;
+                let mut failed = Vec::new();
+                let mut checked = 0usize;
+                for (ln, line) in text.lines().enumerate() {
+                    let line = line.trim();
+                    if line.is_empty() || line.starts_with('#') {
+                        continue;
+                    }
+                    let mut it = line.split_whitespace();
+                    let (key, value) = (it.next().unwrap_or(""), it.next());
+                    let limit: u64 = value.and_then(|v| v.parse().ok()).ok_or_else(|| {
+                        multpim::Error::BadParameter(format!(
+                            "{path}:{}: malformed budget line `{line}`",
+                            ln + 1
+                        ))
+                    })?;
+                    if it.next().is_some() {
+                        // A merged or mangled line must fail loudly, not
+                        // silently drop a gate.
+                        return Err(multpim::Error::BadParameter(format!(
+                            "{path}:{}: trailing tokens on budget line `{line}`",
+                            ln + 1
+                        )));
+                    }
+                    let measured = match key {
+                        "max_cycles" => stats.cycles,
+                        "max_critical_path" => stats.critical_path_cycles,
+                        other => {
+                            return Err(multpim::Error::BadParameter(format!(
+                                "{path}:{}: unknown budget key `{other}`",
+                                ln + 1
+                            )))
+                        }
+                    };
+                    let ok = measured <= limit;
+                    checked += 1;
+                    println!(
+                        "  budget {key}: measured {measured} <= {limit} ... {}",
+                        if ok { "OK" } else { "REGRESSED" }
+                    );
+                    if !ok {
+                        failed.push(format!("{key}: {measured} > {limit}"));
+                    }
+                }
+                if checked == 0 {
+                    // An empty budget file must not silently turn the CI
+                    // gate into a no-op.
+                    return Err(multpim::Error::BadParameter(format!(
+                        "{path}: no budget lines found (expected max_cycles / \
+                         max_critical_path)"
+                    )));
+                }
+                if !failed.is_empty() {
+                    return Err(multpim::Error::VerificationFailed(format!(
+                        "schedule budget regressed: {}",
+                        failed.join("; ")
+                    )));
+                }
+            }
             Ok(())
         }
         Some("trace") => {
@@ -406,8 +525,8 @@ fn run(args: &[String]) -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: multpim <multiply|matvec|matmul|float-matvec|report|verify|serve|trace> \
-                 [options]\nsee `rust/src/main.rs` docs for details"
+                "usage: multpim <multiply|matvec|matmul|float-matvec|report|verify|serve|\
+                 schedule-stats|trace> [options]\nsee `rust/src/main.rs` docs for details"
             );
             Ok(())
         }

@@ -1,0 +1,362 @@
+//! The SSA circuit IR the scheduler compiles from.
+//!
+//! A [`Circuit`] is a pure dataflow graph over single-assignment *wires*:
+//! every wire is written by exactly one gate (or staged externally before
+//! the program runs), and gates list their input wires explicitly, so the
+//! dependence DAG the list scheduler needs is the program text itself.
+//! The emitter API is the gate-level vocabulary the float pipeline is
+//! written in — the §IV-B1 full adder, ripple/two's-complement words,
+//! barrel shifts, binary-search normalization — plus the raw
+//! [`Circuit::emit`] escape hatch used by the fuzz suite's random DAGs.
+//!
+//! Wires are plain `u32` ids sharing the [`Col`] domain: in the
+//! [`Serial`](super::ScheduleMode::Serial) oracle lowering a wire *is* its
+//! crossbar column, which is exactly the emission scheme the float
+//! pipeline used before the scheduler existed. The partition-parallel
+//! lowering instead treats wires as virtual names and assigns columns in
+//! the placement pass.
+//!
+//! Two wires are special: [`Circuit::zero`] and [`Circuit::one`] name the
+//! constants. The serial lowering materializes them as two initialized
+//! cells; the partitioned lowering replicates them into every partition
+//! (initialization cycles may write any set of cells in one cycle, §II-A)
+//! so constant reads never serialize the schedule.
+
+use crate::isa::{Col, Gate, GateOp};
+use crate::util::ceil_log2;
+
+/// An SSA value id (shares the [`Col`] domain; the serial lowering maps a
+/// wire to the column of the same index).
+pub type Wire = Col;
+
+/// A single-assignment gate-level circuit under construction.
+///
+/// Wires allocated by this circuit occupy `first_wire()..next_wire()`.
+/// Wires below `first_wire()` are *external*: operand columns staged
+/// before the program runs, or values produced by the previous circuit of
+/// a chain (the float accumulator threading).
+#[derive(Debug, Clone)]
+pub struct Circuit {
+    first: Wire,
+    next: Wire,
+    zero: Wire,
+    one: Wire,
+    ops: Vec<GateOp>,
+}
+
+impl Circuit {
+    /// Start a circuit whose own wires begin at `first_wire`. The first
+    /// two wires are the constant cells.
+    pub fn new(first_wire: Wire) -> Self {
+        let mut c =
+            Circuit { first: first_wire, next: first_wire, zero: 0, one: 0, ops: Vec::new() };
+        c.zero = c.fresh();
+        c.one = c.fresh();
+        c
+    }
+
+    /// Allocate a fresh wire (no gate drives it yet).
+    fn fresh(&mut self) -> Wire {
+        let w = self.next;
+        self.next += 1;
+        w
+    }
+
+    /// The constant-0 wire.
+    pub fn zero(&self) -> Wire {
+        self.zero
+    }
+
+    /// The constant-1 wire.
+    pub fn one(&self) -> Wire {
+        self.one
+    }
+
+    /// First wire owned by this circuit.
+    pub fn first_wire(&self) -> Wire {
+        self.first
+    }
+
+    /// One past the last wire owned by this circuit.
+    pub fn next_wire(&self) -> Wire {
+        self.next
+    }
+
+    /// The emitted gates in topological (emission) order.
+    pub fn ops(&self) -> &[GateOp] {
+        &self.ops
+    }
+
+    /// Number of gates emitted.
+    pub fn gate_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when no gate has been emitted.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Emit one gate over existing wires, returning its fresh output wire.
+    pub fn emit(&mut self, gate: Gate, inputs: &[Wire]) -> Wire {
+        let out = self.fresh();
+        self.ops.push(GateOp::new(gate, inputs, out));
+        out
+    }
+
+    /// `NOT a`.
+    pub fn not(&mut self, a: Wire) -> Wire {
+        self.emit(Gate::Not, &[a])
+    }
+
+    /// `a OR b` (FELIX OR).
+    pub fn or(&mut self, a: Wire, b: Wire) -> Wire {
+        self.emit(Gate::Or2, &[a, b])
+    }
+
+    /// `NOT (a AND b)` (FELIX NAND).
+    pub fn nand(&mut self, a: Wire, b: Wire) -> Wire {
+        self.emit(Gate::Nand2, &[a, b])
+    }
+
+    /// `NOT majority(a, b, c)` (FELIX Minority3).
+    pub fn min3(&mut self, a: Wire, b: Wire, c: Wire) -> Wire {
+        self.emit(Gate::Min3, &[a, b, c])
+    }
+
+    /// `a AND b` (NAND + NOT).
+    pub fn and(&mut self, a: Wire, b: Wire) -> Wire {
+        let n = self.nand(a, b);
+        self.not(n)
+    }
+
+    /// `a XOR b` (OR + NAND + AND).
+    pub fn xor(&mut self, a: Wire, b: Wire) -> Wire {
+        let o = self.or(a, b);
+        let n = self.nand(a, b);
+        self.and(o, n)
+    }
+
+    /// `s ? a : b`, given the precomputed complement of `s`.
+    pub fn mux(&mut self, s: Wire, s_not: Wire, a: Wire, b: Wire) -> Wire {
+        let ta = self.nand(s, a);
+        let tb = self.nand(s_not, b);
+        self.nand(ta, tb)
+    }
+
+    /// Single-bit `s ? a : b`.
+    pub fn mux_bit(&mut self, s: Wire, a: Wire, b: Wire) -> Wire {
+        let s_not = self.not(s);
+        self.mux(s, s_not, a, b)
+    }
+
+    /// Word-wise `s ? a : b`.
+    pub fn mux_word(&mut self, s: Wire, a: &[Wire], b: &[Wire]) -> Vec<Wire> {
+        assert_eq!(a.len(), b.len());
+        let s_not = self.not(s);
+        a.iter().zip(b).map(|(&ai, &bi)| self.mux(s, s_not, ai, bi)).collect()
+    }
+
+    /// The §IV-B1 full adder (eqs. (1)-(2)): `Cout' = Min3(a, b, Cin)`,
+    /// `T2 = Min3(a, b, Cin')`, `S = Min3(Cout, Cin', T2)`. Returns
+    /// `(sum, cout, cout')` — the free carry complement chains into the
+    /// next stage.
+    pub fn fa(&mut self, a: Wire, b: Wire, cin: Wire, cin_not: Wire) -> (Wire, Wire, Wire) {
+        let t1 = self.min3(a, b, cin);
+        let cout = self.not(t1);
+        let t2 = self.min3(a, b, cin_not);
+        let sum = self.min3(cout, cin_not, t2);
+        (sum, cout, t1)
+    }
+
+    /// Ripple add of equal-width words; returns `(sum, carry_out)`.
+    pub fn add(&mut self, a: &[Wire], b: &[Wire], cin: Wire, cin_not: Wire) -> (Vec<Wire>, Wire) {
+        assert_eq!(a.len(), b.len());
+        let (mut c, mut cn) = (cin, cin_not);
+        let mut s = Vec::with_capacity(a.len());
+        for (&ai, &bi) in a.iter().zip(b) {
+            let (si, ci, cni) = self.fa(ai, bi, c, cn);
+            s.push(si);
+            c = ci;
+            cn = cni;
+        }
+        (s, c)
+    }
+
+    /// `a + b mod 2^w`.
+    pub fn add_mod(&mut self, a: &[Wire], b: &[Wire]) -> Vec<Wire> {
+        self.add(a, b, self.zero, self.one).0
+    }
+
+    /// `a - b mod 2^w` (two's complement).
+    pub fn sub_mod(&mut self, a: &[Wire], b: &[Wire]) -> Vec<Wire> {
+        let nb: Vec<Wire> = b.iter().map(|&bi| self.not(bi)).collect();
+        self.add(a, &nb, self.one, self.zero).0
+    }
+
+    /// `-a mod 2^w`.
+    pub fn neg_mod(&mut self, a: &[Wire]) -> Vec<Wire> {
+        let zeros = vec![self.zero; a.len()];
+        self.sub_mod(&zeros, a)
+    }
+
+    /// Balanced OR-reduction (the zero wire for an empty slice, the bit
+    /// itself for a single-element slice). Logarithmic depth, so sticky
+    /// and leading-zero folds stay off the schedule's critical path.
+    pub fn or_tree(&mut self, bits: &[Wire]) -> Wire {
+        if bits.is_empty() {
+            return self.zero;
+        }
+        let mut level: Vec<Wire> = bits.to_vec();
+        while level.len() > 1 {
+            let mut up = Vec::with_capacity(level.len() / 2 + 1);
+            let mut i = 0;
+            while i + 1 < level.len() {
+                up.push(self.or(level[i], level[i + 1]));
+                i += 2;
+            }
+            if i < level.len() {
+                up.push(level[i]);
+            }
+            level = up;
+        }
+        level[0]
+    }
+
+    /// Constant word from the low `width` bits of `value` (two's
+    /// complement for negatives) — references the constant wires, no
+    /// gates.
+    pub fn const_word(&self, value: i64, width: u32) -> Vec<Wire> {
+        (0..width).map(|i| if (value >> i) & 1 == 1 { self.one } else { self.zero }).collect()
+    }
+
+    /// Zero-extend a word to `width` bits.
+    pub fn zext(&self, word: &[Wire], width: u32) -> Vec<Wire> {
+        let mut v = word.to_vec();
+        v.resize(width as usize, self.zero);
+        v
+    }
+
+    /// Exact unsigned multiply via the carry-save add-shift recurrence
+    /// (§II-B): for each multiplier bit (LSB first) form the
+    /// partial-product AND row and fold it into the running upper word
+    /// with one full-adder row, retiring one finalized low bit per step.
+    pub fn mul(&mut self, a: &[Wire], b: &[Wire]) -> Vec<Wire> {
+        assert_eq!(a.len(), b.len());
+        let s = a.len();
+        let mut out = Vec::with_capacity(2 * s);
+        let mut run = vec![self.zero; s];
+        for &bi in b {
+            let pp: Vec<Wire> = a.iter().map(|&aj| self.and(aj, bi)).collect();
+            let (sum, cout) = self.add(&run, &pp, self.zero, self.one);
+            out.push(sum[0]);
+            run = sum[1..].to_vec();
+            run.push(cout);
+        }
+        out.extend(run);
+        out
+    }
+
+    /// Barrel right shift by `amt` (LSB-first amount bits), OR-folding
+    /// every shifted-out bit into the returned sticky.
+    pub fn shift_right_sticky(&mut self, word: &[Wire], amt: &[Wire]) -> (Vec<Wire>, Wire) {
+        let w = word.len();
+        let mut cur = word.to_vec();
+        let mut sticky = self.zero;
+        for (k, &ak) in amt.iter().enumerate() {
+            let step = 1usize << k;
+            let dropped = self.or_tree(&cur[..step.min(w)]);
+            let sel = self.and(ak, dropped);
+            sticky = self.or(sticky, sel);
+            let shifted: Vec<Wire> =
+                (0..w).map(|i| if i + step < w { cur[i + step] } else { self.zero }).collect();
+            let ak_not = self.not(ak);
+            cur = (0..w).map(|i| self.mux(ak, ak_not, shifted[i], cur[i])).collect();
+        }
+        (cur, sticky)
+    }
+
+    /// Binary-search left normalization: at each level shift left by
+    /// `2^k` when the top `2^k` bits are all zero. Returns the normalized
+    /// register (MSB at the top iff the input was nonzero) and the
+    /// leading-zero count bits (LSB first).
+    pub fn normalize(&mut self, word: &[Wire]) -> (Vec<Wire>, Vec<Wire>) {
+        let w = word.len();
+        let levels = ceil_log2(w as u64);
+        let mut cur = word.to_vec();
+        let mut lz = vec![self.zero; levels as usize];
+        for k in (0..levels).rev() {
+            let step = 1usize << k;
+            if step >= w {
+                continue;
+            }
+            let top = self.or_tree(&cur[w - step..]);
+            let tz = self.not(top); // complement of tz is `top` itself
+            let shifted: Vec<Wire> =
+                (0..w).map(|i| if i >= step { cur[i - step] } else { self.zero }).collect();
+            cur = (0..w).map(|i| self.mux(tz, top, shifted[i], cur[i])).collect();
+            lz[k as usize] = tz;
+        }
+        (cur, lz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wires_are_single_assignment_and_contiguous() {
+        let mut c = Circuit::new(4);
+        assert_eq!(c.first_wire(), 4);
+        assert_eq!(c.zero(), 4);
+        assert_eq!(c.one(), 5);
+        let a = c.not(0);
+        let b = c.or(a, 1);
+        assert_eq!((a, b), (6, 7));
+        assert_eq!(c.next_wire(), 8);
+        let mut seen = std::collections::BTreeSet::new();
+        for op in c.ops() {
+            assert!(seen.insert(op.output), "wire written twice");
+        }
+    }
+
+    #[test]
+    fn or_tree_is_logarithmic() {
+        let mut c = Circuit::new(64);
+        let bits: Vec<Wire> = (0..33).collect();
+        let before = c.gate_count();
+        let _ = c.or_tree(&bits);
+        // Balanced reduction over n bits costs exactly n - 1 OR gates.
+        assert_eq!(c.gate_count() - before, 32);
+        // Depth: walk the emitted ops and verify max chain length is
+        // ceil(log2 33) = 6.
+        let mut depth = std::collections::HashMap::new();
+        let mut max_depth = 0u32;
+        for op in &c.ops()[before..] {
+            let d = 1 + op.inputs[..2]
+                .iter()
+                .map(|w| depth.get(w).copied().unwrap_or(0))
+                .max()
+                .unwrap();
+            depth.insert(op.output, d);
+            max_depth = max_depth.max(d);
+        }
+        assert_eq!(max_depth, 6);
+    }
+
+    #[test]
+    fn or_tree_trivial_cases() {
+        let mut c = Circuit::new(8);
+        assert_eq!(c.or_tree(&[]), c.zero());
+        assert_eq!(c.or_tree(&[3]), 3, "single bit passes through without a gate");
+        assert_eq!(c.gate_count(), 0);
+    }
+
+    #[test]
+    fn const_word_uses_constant_wires() {
+        let c = Circuit::new(0);
+        let w = c.const_word(-3, 4); // 0b1101 in two's complement
+        assert_eq!(w, vec![c.one(), c.zero(), c.one(), c.one()]);
+    }
+}

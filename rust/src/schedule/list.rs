@@ -1,0 +1,226 @@
+//! List scheduling — the second compiler pass.
+//!
+//! ASAP scheduling with a ready list over the dependence DAG, under the
+//! exact resource model the legality checker enforces (§II-A / §III): a
+//! gate occupies the *inclusive partition interval* spanned by its input
+//! and output columns for one cycle (every isolation transistor inside
+//! the interval must conduct), and the intervals of simultaneous gates
+//! must be pairwise disjoint — so within a partition execution is serial,
+//! and parallelism only comes from gates whose intervals do not touch.
+//!
+//! Each cycle the scheduler walks the ready list in priority order
+//! (longest path to a sink first — the carry chains and normalization
+//! folds that bound the critical path), claiming partition intervals
+//! greedily; whatever does not fit is retried next cycle. An op becomes
+//! ready only one cycle *after* its last producer executed, matching the
+//! simulator's parallel-cycle semantics (reads observe the previous
+//! cycle's state).
+
+use super::lower::OperandRegion;
+use super::place::{PlacedCircuit, Placement};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// One circuit's schedule: op indices grouped by compute cycle.
+#[derive(Debug)]
+pub(crate) struct ScheduledCircuit {
+    /// `cycles[c]` lists the indices (into the placed op list) executing
+    /// in compute cycle `c`.
+    pub cycles: Vec<Vec<usize>>,
+    /// Peak gates in one cycle.
+    pub peak_parallel: u64,
+    /// Sum of busy partitions over all compute cycles (occupancy).
+    pub busy_partition_cycles: u64,
+}
+
+/// Schedule every circuit of a placed chain. Infallible for DAGs the
+/// placement pass accepted (SSA circuits are acyclic by construction).
+pub(crate) fn schedule_chain(
+    placement: &Placement,
+    region: &OperandRegion,
+) -> Vec<ScheduledCircuit> {
+    let total_lanes = region.partitions() + placement.work_lanes;
+    placement
+        .circuits
+        .iter()
+        .map(|c| schedule_circuit(c, placement, region, total_lanes))
+        .collect()
+}
+
+fn schedule_circuit(
+    circuit: &PlacedCircuit,
+    placement: &Placement,
+    region: &OperandRegion,
+    total_lanes: usize,
+) -> ScheduledCircuit {
+    let ops = &circuit.ops;
+    let n = ops.len();
+    // Partition interval of each op: its lane plus every non-constant
+    // input's lane (constants are replicated per lane at lowering, so
+    // they never widen the interval).
+    let producer: HashMap<u32, usize> =
+        ops.iter().enumerate().map(|(i, p)| (p.op.output, i)).collect();
+    let mut intervals: Vec<(usize, usize)> = Vec::with_capacity(n);
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut indeg: Vec<u32> = vec![0; n];
+    for (i, p) in ops.iter().enumerate() {
+        let (mut lo, mut hi) = (p.lane, p.lane);
+        for &w in &p.op.inputs[..p.op.gate.arity()] {
+            if placement.const_zeros.contains(&w) || placement.const_ones.contains(&w) {
+                continue;
+            }
+            let lane = if w < region.width() {
+                region.lane_of(w)
+            } else if let Some(&pi) = producer.get(&w) {
+                consumers[pi].push(i);
+                indeg[i] += 1;
+                ops[pi].lane
+            } else {
+                // A predecessor circuit's wire: already placed globally.
+                placement.wire_lane[&w]
+            };
+            lo = lo.min(lane);
+            hi = hi.max(lane);
+        }
+        intervals.push((lo, hi));
+    }
+
+    // Ready heap: (height, lowest index first on ties).
+    let mut ready: BinaryHeap<(u32, Reverse<usize>)> = BinaryHeap::new();
+    for i in 0..n {
+        if indeg[i] == 0 {
+            ready.push((ops[i].height, Reverse(i)));
+        }
+    }
+    // Per-cycle lane occupancy via stamping (no per-cycle clears). A
+    // bounded number of failed placement attempts per cycle keeps the
+    // scheduler linear-ish without measurably loosening the packing.
+    let mut busy: Vec<u64> = vec![u64::MAX; total_lanes];
+    let max_failures = 4 * total_lanes;
+    let mut stamp = 0u64;
+    let mut scheduled = 0usize;
+    let mut cycles: Vec<Vec<usize>> = Vec::new();
+    let mut peak_parallel = 0u64;
+    let mut busy_partition_cycles = 0u64;
+    let mut deferred: Vec<(u32, Reverse<usize>)> = Vec::new();
+
+    while scheduled < n {
+        debug_assert!(!ready.is_empty(), "acyclic SSA DAG cannot stall");
+        stamp += 1;
+        let mut this_cycle: Vec<usize> = Vec::new();
+        let mut failures = 0usize;
+        deferred.clear();
+        while let Some((h, Reverse(i))) = ready.pop() {
+            let (lo, hi) = intervals[i];
+            if (lo..=hi).all(|l| busy[l] != stamp) {
+                for l in lo..=hi {
+                    busy[l] = stamp;
+                }
+                busy_partition_cycles += (hi - lo + 1) as u64;
+                this_cycle.push(i);
+            } else {
+                deferred.push((h, Reverse(i)));
+                failures += 1;
+                if failures >= max_failures {
+                    break;
+                }
+            }
+        }
+        ready.extend(deferred.drain(..));
+        // Consumers of this cycle's results become ready next cycle.
+        for &i in &this_cycle {
+            for &c in &consumers[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push((ops[c].height, Reverse(c)));
+                }
+            }
+        }
+        scheduled += this_cycle.len();
+        peak_parallel = peak_parallel.max(this_cycle.len() as u64);
+        cycles.push(this_cycle);
+    }
+    ScheduledCircuit { cycles, peak_parallel, busy_partition_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::ir::Circuit;
+    use super::super::place::place_chain;
+
+    /// Independent chains in different lanes run in the same cycles; a
+    /// chain's own ops never share a cycle.
+    #[test]
+    fn parallel_chains_share_cycles() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c = Circuit::new(2);
+        let (mut a, mut b) = (0u32, 1u32);
+        for _ in 0..6 {
+            a = c.not(a);
+            b = c.not(b);
+        }
+        let chain = vec![("par".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        let scheds = schedule_chain(&placement, &region);
+        let sched = &scheds[0];
+        let n_ops = placement.circuits[0].ops.len();
+        assert_eq!(
+            sched.cycles.iter().map(Vec::len).sum::<usize>(),
+            n_ops,
+            "every op scheduled exactly once"
+        );
+        // 12 gates over two independent chains: strictly fewer cycles
+        // than serial, bounded below by the 6-deep chain.
+        assert!(sched.cycles.len() < n_ops);
+        assert!(sched.cycles.len() >= 6);
+        assert!(sched.peak_parallel >= 2);
+    }
+
+    /// A dependent chain serializes: exactly one gate per cycle, in
+    /// dependence order.
+    #[test]
+    fn dependent_chain_is_serial() {
+        let region = OperandRegion::new(vec![0], 1);
+        let mut c = Circuit::new(1);
+        let mut w = 0u32;
+        for _ in 0..5 {
+            w = c.not(w);
+        }
+        let chain = vec![("ser".to_string(), c)];
+        let placement = place_chain(&chain, &region, 4, true).unwrap();
+        let sched = &schedule_chain(&placement, &region)[0];
+        assert_eq!(sched.cycles.len(), 5);
+        assert!(sched.cycles.iter().all(|cy| cy.len() == 1));
+        assert_eq!(sched.peak_parallel, 1);
+    }
+
+    /// Two gates that both read the same operand partition can never
+    /// share a cycle (their intervals both contain it).
+    #[test]
+    fn operand_partition_serializes_direct_readers() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c = Circuit::new(2);
+        // Both read operand wire 0 once (so no copy is inserted), plus
+        // wire 1 once.
+        let x = c.not(0);
+        let y = c.not(1);
+        let _ = c.or(x, 0);
+        let _ = c.or(y, 1);
+        let chain = vec![("opreads".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let sched = &schedule_chain(&placement, &region)[0];
+        for cy in &sched.cycles {
+            let operand_readers = cy
+                .iter()
+                .filter(|&&i| {
+                    ops[i].op.inputs[..ops[i].op.gate.arity()]
+                        .iter()
+                        .any(|&w| w < region.width())
+                })
+                .count();
+            assert!(operand_readers <= 1, "operand partition double-booked: {cy:?}");
+        }
+    }
+}

@@ -1,0 +1,640 @@
+//! Lowering — the third compiler pass: placed + scheduled circuits
+//! become legal [`Program`]s over one shared crossbar geometry.
+//!
+//! ## Column allocation (partitioned mode)
+//!
+//! The crossbar is laid out as the operand region (columns fixed by the
+//! caller, partitioned as staged) followed by the work lanes. Each work
+//! lane holds:
+//!
+//! * two **constant cells** (`0` / `1`) re-initialized by every program's
+//!   init cycles — constant reads resolve to the reading gate's own lane,
+//!   so they never widen a partition interval;
+//! * a **double-buffered slot region**: even-indexed programs of the
+//!   chain allocate their SSA outputs in half A, odd-indexed programs in
+//!   half B. Program `t + 1` can therefore read every wire program `t`
+//!   produced while its own outputs land in the other half, and program
+//!   `t + 2` reuses `t`'s half — safe *because placement enforced the
+//!   predecessor-only read rule*. This bounds the crossbar width by two
+//!   programs' live values instead of the whole chain's.
+//!
+//! ## Legality
+//!
+//! Legality is by construction — one init cycle initializes every gate
+//! output (and the per-lane 1-constants) to 1 before any gate fires, a
+//! second initializes the 0-constants, the list scheduler never
+//! double-books a partition interval, and readiness lags production by a
+//! cycle — and then *checked*: every compiled chain passes
+//! [`validate_chain`](crate::sim::validate_chain) unchanged (asserted in
+//! debug builds here, and again at every serving launch).
+
+use super::ir::{Circuit, Wire};
+use super::list::schedule_chain;
+use super::place::place_chain;
+use super::stats::ScheduleStats;
+use crate::isa::{Col, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Which backend a chain is compiled through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// One gate per cycle in a single partition, wires = columns. The
+    /// oracle: trivially legal, and the bit-exactness reference the
+    /// partitioned schedule is fuzzed against.
+    Serial,
+    /// The partition-parallel backend: placement, list scheduling,
+    /// double-buffered lowering.
+    Partitioned,
+}
+
+/// Compiler knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerConfig {
+    /// Number of compute partitions (work lanes). `None` picks a
+    /// heuristic from the largest circuit (one lane per ~48 gates,
+    /// clamped to 8..=64).
+    pub work_lanes: Option<usize>,
+}
+
+/// The externally staged operand region: columns `0..width`, already
+/// split into partitions at `starts` (one per staged operand word, so
+/// concurrent gates may read *different* operands).
+#[derive(Debug, Clone)]
+pub struct OperandRegion {
+    starts: Vec<Col>,
+    width: Col,
+}
+
+impl OperandRegion {
+    /// Region over columns `0..width` with partitions beginning at
+    /// `starts` (must begin at 0, strictly increasing, last `< width`).
+    /// An empty `starts` requires `width == 0` (no external operands).
+    pub fn new(starts: Vec<Col>, width: Col) -> Self {
+        if width == 0 {
+            assert!(starts.is_empty(), "an empty operand region has no partitions");
+        } else {
+            assert_eq!(starts.first(), Some(&0), "operand partitions must start at column 0");
+            assert!(
+                starts.windows(2).all(|w| w[0] < w[1]),
+                "operand partition starts must be strictly increasing"
+            );
+            assert!(*starts.last().unwrap() < width, "last operand partition must be non-empty");
+        }
+        Self { starts, width }
+    }
+
+    /// A region with no external operands.
+    pub fn empty() -> Self {
+        Self { starts: Vec::new(), width: 0 }
+    }
+
+    /// Columns in the region.
+    pub fn width(&self) -> Col {
+        self.width
+    }
+
+    /// Operand partitions.
+    pub fn partitions(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Partition start columns.
+    pub fn starts(&self) -> &[Col] {
+        &self.starts
+    }
+
+    /// Partition index of operand column `w`.
+    pub(crate) fn lane_of(&self, w: Wire) -> usize {
+        debug_assert!(w < self.width);
+        self.starts.partition_point(|&s| s <= w) - 1
+    }
+}
+
+/// A compiled chain: legal programs over one shared geometry, the wire →
+/// column resolution, and the schedule statistics.
+#[derive(Debug, Clone)]
+pub struct CompiledChain {
+    programs: Vec<Program>,
+    width: Col,
+    mode: ScheduleMode,
+    stats: ScheduleStats,
+    per_program: Vec<ScheduleStats>,
+    operand_width: Col,
+    /// Constant wires of every circuit (serial mode only; the
+    /// partitioned map simply omits constants). Sorted — circuits have
+    /// disjoint increasing wire ranges and allocate constants first —
+    /// so [`CompiledChain::col_of`] can binary-search it to keep the
+    /// "`None` for constants" contract identical across both backends.
+    serial_const_wires: Vec<Wire>,
+    /// Columns of non-operand wires (empty in serial mode, where wires
+    /// are columns). Deliberately kept for *every* program of the chain,
+    /// not just the last: per-program resolution right after a program
+    /// retires is part of the compiler's contract (the fuzz oracle
+    /// compares every wire of every program in lockstep), at the cost of
+    /// a few bytes per gate retained on the compiled artifact.
+    wire_cols: HashMap<Wire, Col>,
+}
+
+impl CompiledChain {
+    /// The lowered programs, in chain order.
+    pub fn programs(&self) -> &[Program] {
+        &self.programs
+    }
+
+    /// Crossbar width (columns).
+    pub fn width(&self) -> Col {
+        self.width
+    }
+
+    /// The backend this chain was compiled through.
+    pub fn mode(&self) -> ScheduleMode {
+        self.mode
+    }
+
+    /// Aggregate schedule statistics (cycles, occupancy, critical path).
+    pub fn stats(&self) -> &ScheduleStats {
+        &self.stats
+    }
+
+    /// Per-program schedule statistics, in chain order (each entry's
+    /// `programs == 1`; the aggregate is their fold).
+    pub fn per_program_stats(&self) -> &[ScheduleStats] {
+        &self.per_program
+    }
+
+    /// Physical column of `wire`: operand wires map to themselves, every
+    /// produced wire to its allocated slot. `None` for constants and
+    /// wires the chain never produced — in both modes, so code written
+    /// against one backend cannot silently depend on resolving a
+    /// constant.
+    pub fn col_of(&self, wire: Wire) -> Option<Col> {
+        if wire < self.operand_width {
+            return Some(wire);
+        }
+        match self.mode {
+            ScheduleMode::Serial => {
+                if self.serial_const_wires.binary_search(&wire).is_ok() {
+                    return None;
+                }
+                (wire < self.width).then_some(wire)
+            }
+            ScheduleMode::Partitioned => self.wire_cols.get(&wire).copied(),
+        }
+    }
+}
+
+/// Compile a chain of named circuits executed back-to-back over one
+/// crossbar. The result's programs pass
+/// [`validate_chain`](crate::sim::validate_chain) with the operand
+/// columns as inputs.
+pub fn compile_chain(
+    circuits: Vec<(String, Circuit)>,
+    region: OperandRegion,
+    mode: ScheduleMode,
+    config: SchedulerConfig,
+) -> Result<CompiledChain> {
+    if circuits.is_empty() {
+        return Err(Error::BadParameter("compile_chain needs at least one circuit".into()));
+    }
+    let mut prev_end = region.width();
+    for (name, c) in &circuits {
+        if c.first_wire() < region.width() {
+            return Err(Error::BadParameter(format!(
+                "circuit `{name}` allocates wires from {} inside the {}-column operand region",
+                c.first_wire(),
+                region.width()
+            )));
+        }
+        // Wire ranges must be disjoint and increasing along the chain:
+        // an overlap would let a later circuit's constant wires alias an
+        // earlier circuit's outputs (constants are classified before
+        // producers), silently reading 0/1 instead of data.
+        if c.first_wire() < prev_end {
+            return Err(Error::BadParameter(format!(
+                "circuit `{name}` allocates wires from {} inside an earlier circuit's \
+                 range (ends at {prev_end}); chained circuits need disjoint, increasing \
+                 wire ranges",
+                c.first_wire()
+            )));
+        }
+        prev_end = c.next_wire();
+    }
+    let chain = match mode {
+        ScheduleMode::Serial => lower_serial(&circuits, &region)?,
+        ScheduleMode::Partitioned => lower_partitioned(&circuits, &region, config)?,
+    };
+    #[cfg(debug_assertions)]
+    {
+        let inputs: Vec<Col> = (0..region.width()).collect();
+        crate::sim::validate_chain(&chain.programs, &inputs)
+            .expect("compiled chains are legal by construction");
+    }
+    Ok(chain)
+}
+
+fn lower_serial(
+    circuits: &[(String, Circuit)],
+    region: &OperandRegion,
+) -> Result<CompiledChain> {
+    // Validation + levels, shared with the partitioned path (single lane,
+    // no copies: the placement degenerates to the dependence analysis).
+    let placement = place_chain(circuits, region, 1, false)?;
+    let width = circuits
+        .iter()
+        .map(|(_, c)| c.next_wire())
+        .max()
+        .unwrap()
+        .max(region.width());
+    let partitions = PartitionMap::single(width.max(1));
+    let mut programs = Vec::with_capacity(circuits.len());
+    let mut stats = ScheduleStats {
+        programs: circuits.len(),
+        partitions: 1,
+        width: width.max(1),
+        peak_parallel_gates: 1,
+        ..Default::default()
+    };
+    let mut per_program = Vec::with_capacity(circuits.len());
+    for ((name, circuit), placed) in circuits.iter().zip(&placement.circuits) {
+        let mut b =
+            ProgramBuilder::new(format!("{name}-serial"), partitions.clone(), GateSet::Full);
+        let mut ones: Vec<Col> = circuit.ops().iter().map(|op| op.output).collect();
+        ones.push(circuit.one());
+        b.init(true, ones);
+        b.init(false, vec![circuit.zero()]);
+        for op in circuit.ops() {
+            b.stage(op.clone());
+            b.commit();
+        }
+        let gates = circuit.gate_count() as u64;
+        let ps = ScheduleStats {
+            programs: 1,
+            gates,
+            copy_gates: 0,
+            cycles: gates + 2,
+            serial_cycles: gates + 2,
+            critical_path_cycles: placed.critical as u64 + 2,
+            peak_parallel_gates: gates.min(1),
+            busy_partition_cycles: gates,
+            compute_cycles: gates,
+            partitions: 1,
+            width: width.max(1),
+        };
+        stats.gates += ps.gates;
+        stats.cycles += ps.cycles;
+        stats.serial_cycles += ps.serial_cycles;
+        stats.compute_cycles += ps.compute_cycles;
+        stats.busy_partition_cycles += ps.busy_partition_cycles;
+        stats.critical_path_cycles += ps.critical_path_cycles;
+        per_program.push(ps);
+        programs.push(b.finish());
+    }
+    let serial_const_wires: Vec<Wire> =
+        circuits.iter().flat_map(|(_, c)| [c.zero(), c.one()]).collect();
+    debug_assert!(serial_const_wires.windows(2).all(|w| w[0] < w[1]));
+    Ok(CompiledChain {
+        programs,
+        width: width.max(1),
+        mode: ScheduleMode::Serial,
+        stats,
+        per_program,
+        operand_width: region.width(),
+        serial_const_wires,
+        wire_cols: HashMap::new(),
+    })
+}
+
+fn lower_partitioned(
+    circuits: &[(String, Circuit)],
+    region: &OperandRegion,
+    config: SchedulerConfig,
+) -> Result<CompiledChain> {
+    let max_gates = circuits.iter().map(|(_, c)| c.gate_count()).max().unwrap_or(0);
+    let work_lanes = config.work_lanes.unwrap_or_else(|| (max_gates / 48).clamp(8, 64));
+    let placement = place_chain(circuits, region, work_lanes, true)?;
+    let schedules = schedule_chain(&placement, region);
+    let operand_lanes = region.partitions();
+
+    // Slot allocation: program parity selects the half of each lane's
+    // slot region; capacities are the per-parity maxima.
+    let mut cap = vec![[0u32; 2]; work_lanes];
+    // wire -> (work lane, parity, slot)
+    let mut slots: HashMap<Wire, (usize, usize, u32)> = HashMap::new();
+    for (prog, placed) in placement.circuits.iter().enumerate() {
+        let parity = prog % 2;
+        let mut used = vec![0u32; work_lanes];
+        for p in &placed.ops {
+            let lane = p.lane - operand_lanes;
+            slots.insert(p.op.output, (lane, parity, used[lane]));
+            used[lane] += 1;
+        }
+        for (lane, &u) in used.iter().enumerate() {
+            cap[lane][parity] = cap[lane][parity].max(u);
+        }
+    }
+    // Lane bases: [zero, one, A-half, B-half] per lane.
+    let mut lane_base = Vec::with_capacity(work_lanes);
+    let mut next_col = region.width();
+    for c in &cap {
+        lane_base.push(next_col);
+        next_col += 2 + c[0] + c[1];
+    }
+    let width = next_col;
+    let zero_col = |lane: usize| lane_base[lane];
+    let one_col = |lane: usize| lane_base[lane] + 1;
+    let wire_cols: HashMap<Wire, Col> = slots
+        .iter()
+        .map(|(&w, &(lane, parity, slot))| {
+            let half = if parity == 0 { 0 } else { cap[lane][0] };
+            (w, lane_base[lane] + 2 + half + slot)
+        })
+        .collect();
+
+    let mut starts: Vec<Col> = Vec::with_capacity(operand_lanes + work_lanes);
+    starts.extend_from_slice(region.starts());
+    starts.extend_from_slice(&lane_base);
+    let partitions = PartitionMap::new(starts, width);
+
+    let mut stats = ScheduleStats {
+        programs: circuits.len(),
+        partitions: partitions.len(),
+        width,
+        ..Default::default()
+    };
+    let mut programs = Vec::with_capacity(circuits.len());
+    let all_one_cells: Vec<Col> = (0..work_lanes).map(one_col).collect();
+    let all_zero_cells: Vec<Col> = (0..work_lanes).map(zero_col).collect();
+    let mut per_program = Vec::with_capacity(circuits.len());
+    for (placed, sched) in placement.circuits.iter().zip(&schedules) {
+        let mut b = ProgramBuilder::new(
+            format!("{}-sched", placed.name),
+            partitions.clone(),
+            GateSet::Full,
+        );
+        let mut ones: Vec<Col> = placed.ops.iter().map(|p| wire_cols[&p.op.output]).collect();
+        ones.extend_from_slice(&all_one_cells);
+        b.init(true, ones);
+        b.init(false, all_zero_cells.clone());
+        for cycle in &sched.cycles {
+            for &i in cycle {
+                let p = &placed.ops[i];
+                let lane = p.lane - operand_lanes;
+                let mut inputs: [Col; 3] = [0; 3];
+                for (k, &w) in p.op.inputs[..p.op.gate.arity()].iter().enumerate() {
+                    inputs[k] = if placement.const_zeros.contains(&w) {
+                        zero_col(lane)
+                    } else if placement.const_ones.contains(&w) {
+                        one_col(lane)
+                    } else if w < region.width() {
+                        w
+                    } else {
+                        wire_cols[&w]
+                    };
+                }
+                b.stage(GateOp::new(
+                    p.op.gate,
+                    &inputs[..p.op.gate.arity()],
+                    wire_cols[&p.op.output],
+                ));
+            }
+            b.commit();
+        }
+        let gates = placed.ops.len() as u64;
+        let copies = placed.ops.iter().filter(|p| p.is_copy).count() as u64;
+        let ps = ScheduleStats {
+            programs: 1,
+            gates,
+            copy_gates: copies,
+            cycles: sched.cycles.len() as u64 + 2,
+            serial_cycles: placed.serial_gates + 2,
+            critical_path_cycles: placed.critical as u64 + 2,
+            peak_parallel_gates: sched.peak_parallel,
+            busy_partition_cycles: sched.busy_partition_cycles,
+            compute_cycles: sched.cycles.len() as u64,
+            partitions: partitions.len(),
+            width,
+        };
+        stats.gates += ps.gates;
+        stats.copy_gates += ps.copy_gates;
+        stats.cycles += ps.cycles;
+        stats.serial_cycles += ps.serial_cycles;
+        stats.compute_cycles += ps.compute_cycles;
+        stats.critical_path_cycles += ps.critical_path_cycles;
+        stats.peak_parallel_gates = stats.peak_parallel_gates.max(ps.peak_parallel_gates);
+        stats.busy_partition_cycles += ps.busy_partition_cycles;
+        per_program.push(ps);
+        programs.push(b.finish());
+    }
+    Ok(CompiledChain {
+        programs,
+        width,
+        mode: ScheduleMode::Partitioned,
+        stats,
+        per_program,
+        operand_width: region.width(),
+        serial_const_wires: Vec::new(),
+        wire_cols,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{validate_chain, Simulator};
+    use crate::util::SplitMix64;
+
+    /// Run one compiled chain over a simulator with the given operand
+    /// bits and return the value of every produced wire.
+    fn run_chain(
+        chain: &CompiledChain,
+        operands: &[u64],
+        wires: &[Wire],
+    ) -> Vec<u64> {
+        let mut sim = Simulator::new(1, chain.width() as usize);
+        for (i, &bit) in operands.iter().enumerate() {
+            sim.write_bits(0, i as Col, 1, bit);
+        }
+        let inputs: Vec<Col> = (0..operands.len() as Col).collect();
+        for (i, p) in chain.programs().iter().enumerate() {
+            if i == 0 {
+                sim.run_with_inputs(p, &inputs).unwrap();
+            } else {
+                sim.run_unchecked(p);
+            }
+        }
+        wires
+            .iter()
+            .map(|&w| sim.read_bits(0, chain.col_of(w).expect("produced wire"), 1))
+            .collect()
+    }
+
+    fn adder_circuit(first: Wire, width: usize) -> (Circuit, Vec<Wire>) {
+        let mut c = Circuit::new(first);
+        let a: Vec<Wire> = (0..width as Wire).collect();
+        let b: Vec<Wire> = (width as Wire..2 * width as Wire).collect();
+        let (zero, one) = (c.zero(), c.one());
+        let (sum, carry) = c.add(&a, &b, zero, one);
+        let mut outs = sum;
+        outs.push(carry);
+        (c, outs)
+    }
+
+    /// Serial and partitioned lowerings of the same circuit agree on
+    /// every output bit, and the partitioned one is strictly faster.
+    #[test]
+    fn modes_agree_bitwise_on_an_adder() {
+        let width = 8usize;
+        let region = OperandRegion::new(
+            vec![0, width as Col],
+            2 * width as Col,
+        );
+        let mut rng = SplitMix64::new(0x5EED);
+        let (c_serial, outs) = adder_circuit(2 * width as Col, width);
+        let c_par = c_serial.clone();
+        let serial = compile_chain(
+            vec![("add".into(), c_serial)],
+            region.clone(),
+            ScheduleMode::Serial,
+            SchedulerConfig::default(),
+        )
+        .unwrap();
+        let par = compile_chain(
+            vec![("add".into(), c_par)],
+            region,
+            ScheduleMode::Partitioned,
+            SchedulerConfig::default(),
+        )
+        .unwrap();
+        assert!(par.stats().cycles < serial.stats().cycles, "parallelism realized");
+        assert!(par.stats().cycles >= par.stats().critical_path_cycles);
+        assert_eq!(par.stats().serial_cycles, serial.stats().cycles);
+        // Per-program stats fold to the aggregate.
+        assert_eq!(par.per_program_stats().len(), 1);
+        assert_eq!(par.per_program_stats()[0].cycles, par.stats().cycles);
+        for _ in 0..16 {
+            let a = rng.bits(width as u32);
+            let b = rng.bits(width as u32);
+            let operands: Vec<u64> = (0..width)
+                .map(|i| a >> i & 1)
+                .chain((0..width).map(|i| b >> i & 1))
+                .collect();
+            let s = run_chain(&serial, &operands, &outs);
+            let p = run_chain(&par, &operands, &outs);
+            assert_eq!(s, p, "a={a} b={b}");
+            let got: u64 = s.iter().enumerate().map(|(i, &v)| v << i).sum();
+            assert_eq!(got, a + b, "adder semantics");
+        }
+    }
+
+    /// A two-circuit chain threads values across the program boundary in
+    /// both modes, and the compiled programs pass `validate_chain`.
+    #[test]
+    fn chained_circuits_thread_state() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c0 = Circuit::new(2);
+        let x = c0.xor(0, 1);
+        let y = c0.and(0, 1);
+        let mut c1 = Circuit::new(c0.next_wire());
+        let z = c1.or(x, y);
+        let n = c1.not(z);
+        for mode in [ScheduleMode::Serial, ScheduleMode::Partitioned] {
+            let chain = compile_chain(
+                vec![("p0".into(), c0.clone()), ("p1".into(), c1.clone())],
+                region.clone(),
+                mode,
+                SchedulerConfig { work_lanes: Some(4) },
+            )
+            .unwrap();
+            let inputs: Vec<Col> = vec![0, 1];
+            validate_chain(chain.programs(), &inputs).unwrap();
+            for bits in 0..4u64 {
+                let operands = vec![bits & 1, bits >> 1];
+                let got = run_chain(&chain, &operands, &[x, y, z, n]);
+                let (a, b) = (bits & 1, bits >> 1);
+                assert_eq!(got[0], a ^ b, "{mode:?} bits={bits}");
+                assert_eq!(got[1], a & b);
+                assert_eq!(got[2], (a ^ b) | (a & b));
+                assert_eq!(got[3], 1 - got[2]);
+            }
+        }
+    }
+
+    /// Double buffering: a three-circuit chain reuses columns between
+    /// programs two apart without corrupting threaded values.
+    #[test]
+    fn double_buffer_reuse_is_sound() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c0 = Circuit::new(2);
+        let a0 = c0.xor(0, 1);
+        let mut c1 = Circuit::new(c0.next_wire());
+        let a1 = c1.not(a0);
+        let mut c2 = Circuit::new(c1.next_wire());
+        let a2 = c2.not(a1);
+        let mut c3 = Circuit::new(c2.next_wire());
+        let a3 = c3.not(a2);
+        let chain = compile_chain(
+            vec![
+                ("q0".into(), c0),
+                ("q1".into(), c1),
+                ("q2".into(), c2),
+                ("q3".into(), c3),
+            ],
+            region,
+            ScheduleMode::Partitioned,
+            SchedulerConfig { work_lanes: Some(2) },
+        )
+        .unwrap();
+        // Programs 0 and 2 share half A, 1 and 3 half B.
+        for bits in 0..4u64 {
+            let operands = vec![bits & 1, bits >> 1];
+            let got = run_chain(&chain, &operands, &[a3]);
+            assert_eq!(got[0], ((bits & 1) ^ (bits >> 1)) ^ 1, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn empty_chain_rejected() {
+        assert!(matches!(
+            compile_chain(
+                Vec::new(),
+                OperandRegion::empty(),
+                ScheduleMode::Serial,
+                SchedulerConfig::default()
+            ),
+            Err(Error::BadParameter(_))
+        ));
+    }
+
+    #[test]
+    fn overlapping_wire_ranges_rejected() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut a = Circuit::new(2);
+        let _ = a.not(0);
+        // Overlaps `a`'s tail: its constants would alias a's output.
+        let b = Circuit::new(a.next_wire() - 1);
+        let err = compile_chain(
+            vec![("a".into(), a), ("b".into(), b)],
+            region,
+            ScheduleMode::Partitioned,
+            SchedulerConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("disjoint"), "{err}");
+    }
+
+    #[test]
+    fn wires_inside_operand_region_rejected() {
+        let region = OperandRegion::new(vec![0], 4);
+        let c = Circuit::new(2); // constants collide with operand columns
+        assert!(matches!(
+            compile_chain(
+                vec![("bad".into(), c)],
+                region,
+                ScheduleMode::Partitioned,
+                SchedulerConfig::default()
+            ),
+            Err(Error::BadParameter(_))
+        ));
+    }
+}

@@ -1,0 +1,103 @@
+//! The partition-parallel circuit scheduler: a compiler backend from SSA
+//! float/gate pipelines to linear-log-latency stateful-logic programs.
+//!
+//! MultPIM's headline result — quadratic → linear-log multiplication
+//! latency — comes entirely from executing gates in *different memristive
+//! partitions in the same cycle* (§III, §V). The hand-written fixed-point
+//! engines already exploit that; this module is the general form: any
+//! circuit emitted in the SSA [`Circuit`] IR compiles to a legal,
+//! partition-parallel [`Program`](crate::isa::Program) schedule, so new
+//! pipelines (the full-precision float MAC chain today; mixed precision
+//! and float GEMM tomorrow) get a compiler instead of hand-laid-out
+//! circuits.
+//!
+//! ## The pass pipeline
+//!
+//! 1. **Partition placement** (`place.rs`) — validates the chain (single
+//!    assignment, defined reads, predecessor-only cross-program reads),
+//!    pulls remote values consumed more than once into the work region
+//!    behind §III-A copy gates (`OR(x, x)` into another partition — the
+//!    paper's inter-partition copy primitive, cf.
+//!    [`broadcast`](crate::algorithms::broadcast)), and assigns every
+//!    gate a partition lane: ripple-carry and sticky chains inherit their
+//!    producer's lane (serialization *within* a partition is free), while
+//!    independent work at the same dependence depth spreads across lanes
+//!    — the CSAS multiplier's wavefront lands one row per partition,
+//!    which is exactly the §V layout.
+//! 2. **List scheduling** (`list.rs`) — ASAP with a ready list over the
+//!    dependence DAG, longest-path-to-sink priority. The resource model
+//!    is the checker's own: a gate occupies the inclusive partition
+//!    interval spanned by its columns, at most one gate per partition
+//!    interval per cycle; a gate whose inputs sit in a neighbouring
+//!    partition computes *through* the isolation transistor exactly like
+//!    the §III-B fused-gate shift.
+//! 3. **Lowering** (`lower.rs`) — assigns concrete columns
+//!    (double-buffered per lane across the chain's programs), replicates
+//!    the constants into every partition (one init cycle writes any set
+//!    of cells), and emits [`Program`](crate::isa::Program)s that pass
+//!    [`validate_chain`](crate::sim::validate_chain) unchanged — legality
+//!    stays by-construction-*plus*-checked.
+//!
+//! [`ScheduleMode::Serial`] keeps the old one-gate-per-cycle emission as
+//! a bit-exactness oracle (`rust/tests/schedule_fuzz.rs` pins scheduled
+//! ≡ serial ≡ `float_mac_ref` across formats and random DAGs), and
+//! [`ScheduleStats`] reports cycles, critical path, and partition
+//! occupancy — the numbers `multpim schedule-stats` prints and CI's
+//! checked-in budget (`ci/schedule_budget_fp32x8.txt`) gates on.
+//!
+//! ## Example: compile and run a 6-bit ripple adder
+//!
+//! ```
+//! use multpim::schedule::{
+//!     compile_chain, Circuit, OperandRegion, ScheduleMode, SchedulerConfig,
+//! };
+//! use multpim::Simulator;
+//!
+//! // Externally staged operands: two packed 6-bit words at columns 0..6
+//! // and 6..12, each its own partition.
+//! let mut c = Circuit::new(12);
+//! let a: Vec<u32> = (0..6).collect();
+//! let b: Vec<u32> = (6..12).collect();
+//! let (zero, one) = (c.zero(), c.one());
+//! let (sum, carry) = c.add(&a, &b, zero, one);
+//!
+//! let chain = compile_chain(
+//!     vec![("ripple-add".into(), c)],
+//!     OperandRegion::new(vec![0, 6], 12),
+//!     ScheduleMode::Partitioned,
+//!     SchedulerConfig::default(),
+//! )
+//! .unwrap();
+//!
+//! // Legal by construction — and checked, exactly like every serving
+//! // launch does:
+//! let inputs: Vec<u32> = (0..12).collect();
+//! multpim::sim::validate_chain(chain.programs(), &inputs).unwrap();
+//!
+//! // Execute: 27 + 9 = 36.
+//! let mut sim = Simulator::new(1, chain.width() as usize);
+//! sim.write_bits(0, 0, 6, 27);
+//! sim.write_bits(0, 6, 6, 9);
+//! sim.run_with_inputs(&chain.programs()[0], &inputs).unwrap();
+//! let got: u64 = (0..6)
+//!     .map(|i| sim.read_bits(0, chain.col_of(sum[i]).unwrap(), 1) << i)
+//!     .sum::<u64>()
+//!     + (sim.read_bits(0, chain.col_of(carry).unwrap(), 1) << 6);
+//! assert_eq!(got, 36);
+//!
+//! // The schedule realizes parallelism: fewer cycles than the serial
+//! // oracle, never fewer than the dependence DAG allows.
+//! let stats = chain.stats();
+//! assert!(stats.cycles < stats.serial_cycles);
+//! assert!(stats.cycles >= stats.critical_path_cycles);
+//! ```
+
+mod ir;
+mod list;
+mod lower;
+mod place;
+mod stats;
+
+pub use ir::{Circuit, Wire};
+pub use lower::{compile_chain, CompiledChain, OperandRegion, ScheduleMode, SchedulerConfig};
+pub use stats::ScheduleStats;

@@ -1,0 +1,414 @@
+//! Partition placement — the first compiler pass.
+//!
+//! Placement turns a validated chain of SSA [`Circuit`]s into *placed*
+//! ops: every gate is assigned a partition (its output's home lane) and
+//! every remote value a circuit consumes more than once is first pulled
+//! into the work region by an explicit **copy gate** — the §III-A
+//! inter-partition copy primitive (`OR(x, x)` with the output in another
+//! partition, exactly the idealized copy of
+//! [`broadcast_program`](crate::algorithms::broadcast::broadcast_program)).
+//! Localizing a hot operand bit once and fanning consumers out from its
+//! copy is what keeps the operand partitions from serializing the whole
+//! schedule: a gate that reads an operand column occupies every partition
+//! between the operand and its output for that cycle, so at most one such
+//! gate can run per cycle per operand partition.
+//!
+//! The pass also performs the chain's static semantic checks (they are
+//! cheaper here, in wire space, than after lowering):
+//!
+//! * single assignment — no wire is driven twice;
+//! * defined reads — every input is an operand wire, a constant, a wire
+//!   of this circuit, or a wire of the *immediately preceding* circuit;
+//! * the predecessor-only rule above is what makes the lowering's
+//!   double-buffered column reuse safe: circuit `t + 2` may reuse the
+//!   columns of circuit `t` because nothing downstream can still read
+//!   them.
+//!
+//! Lane assignment is a greedy levelized heuristic: an op prefers the
+//! lane of its most-recently-produced input (keeping ripple-carry chains
+//! and sticky folds inside one partition), and probes outward to the
+//! nearest lane with no other op at the same ASAP level (spreading the
+//! CSAS multiplier's wavefront across partitions instead of stacking it).
+
+use super::ir::{Circuit, Wire};
+use super::lower::OperandRegion;
+use crate::isa::{Gate, GateOp};
+use crate::{Error, Result};
+use std::collections::{HashMap, HashSet};
+
+/// One gate with its placement and schedule metadata.
+#[derive(Debug, Clone)]
+pub(crate) struct PlacedOp {
+    /// The gate, still in wire space (inputs rewritten to local copies
+    /// where a copy was inserted).
+    pub op: GateOp,
+    /// Global lane (operand partitions first, then work lanes).
+    pub lane: usize,
+    /// ASAP level (1 = depends only on external/constant values).
+    pub level: u32,
+    /// Longest path to a sink within the circuit (list priority).
+    pub height: u32,
+    /// True for inserted cross-partition copy gates.
+    pub is_copy: bool,
+}
+
+/// One circuit after placement.
+#[derive(Debug)]
+pub(crate) struct PlacedCircuit {
+    pub name: String,
+    pub ops: Vec<PlacedOp>,
+    /// Gate count before copy insertion (the serial reference cost).
+    pub serial_gates: u64,
+    /// Critical path of the dependence DAG (max ASAP level).
+    pub critical: u32,
+}
+
+/// The placed chain plus the wire metadata later passes need.
+#[derive(Debug)]
+pub(crate) struct Placement {
+    pub circuits: Vec<PlacedCircuit>,
+    /// Global lane of every produced wire (circuit outputs and copies).
+    pub wire_lane: HashMap<Wire, usize>,
+    /// Constant-1 wires of every circuit.
+    pub const_ones: HashSet<Wire>,
+    /// Constant-0 wires of every circuit.
+    pub const_zeros: HashSet<Wire>,
+    /// Number of work lanes placed into.
+    pub work_lanes: usize,
+}
+
+/// How a wire read resolves during placement.
+enum Use {
+    Const,
+    Operand,
+    Local,
+    Prev,
+}
+
+/// Place the whole chain. `work_lanes` is the number of compute
+/// partitions to spread across (1 reduces the result to the serial
+/// analysis used by the oracle lowering); `insert_copies` enables remote
+/// operand localization (off for the serial oracle, whose single
+/// partition makes copies pure overhead).
+pub(crate) fn place_chain(
+    circuits: &[(String, Circuit)],
+    region: &OperandRegion,
+    work_lanes: usize,
+    insert_copies: bool,
+) -> Result<Placement> {
+    assert!(work_lanes >= 1, "placement needs at least one work lane");
+    // Constant-wire sets grow as circuits are processed, so a read of a
+    // *later* circuit's constant wire is an undefined read, not a
+    // constant (only constants already materialized are referenceable).
+    let mut const_ones = HashSet::new();
+    let mut const_zeros = HashSet::new();
+    // Fresh wires for copies are allocated above every circuit's range.
+    let mut next_wire: Wire = circuits
+        .iter()
+        .map(|(_, c)| c.next_wire())
+        .max()
+        .unwrap_or(region.width());
+
+    let operand_lanes = region.partitions();
+    let mut wire_lane: HashMap<Wire, usize> = HashMap::new();
+    // Producer program of every wire (enforces the predecessor-only rule).
+    let mut produced_by: HashMap<Wire, usize> = HashMap::new();
+    let mut placed_circuits = Vec::with_capacity(circuits.len());
+
+    for (prog, (name, circuit)) in circuits.iter().enumerate() {
+        const_zeros.insert(circuit.zero());
+        const_ones.insert(circuit.one());
+        let classify = |w: Wire,
+                        local: &HashMap<Wire, usize>|
+         -> Result<Use> {
+            if const_zeros.contains(&w) || const_ones.contains(&w) {
+                return Ok(Use::Const);
+            }
+            if w < region.width() {
+                return Ok(Use::Operand);
+            }
+            if local.contains_key(&w) {
+                return Ok(Use::Local);
+            }
+            match produced_by.get(&w) {
+                Some(&p) if p + 1 == prog => Ok(Use::Prev),
+                Some(&p) => Err(Error::BadParameter(format!(
+                    "circuit `{name}` reads wire {w} produced by circuit {p}; chained \
+                     circuits may only read their immediate predecessor"
+                ))),
+                None => Err(Error::BadParameter(format!(
+                    "circuit `{name}` reads undefined wire {w}"
+                ))),
+            }
+        };
+
+        // Pass 1: validate single assignment and defined reads; count the
+        // uses of every remote (operand or predecessor) wire.
+        let mut local: HashMap<Wire, usize> = HashMap::new();
+        let mut remote_uses: HashMap<Wire, u32> = HashMap::new();
+        let mut remote_order: Vec<Wire> = Vec::new();
+        for (i, op) in circuit.ops().iter().enumerate() {
+            for &w in &op.inputs[..op.gate.arity()] {
+                match classify(w, &local)? {
+                    Use::Const | Use::Local => {}
+                    Use::Operand | Use::Prev => {
+                        let n = remote_uses.entry(w).or_insert(0);
+                        if *n == 0 {
+                            remote_order.push(w);
+                        }
+                        *n += 1;
+                    }
+                }
+            }
+            let out = op.output;
+            if out < region.width()
+                || const_zeros.contains(&out)
+                || const_ones.contains(&out)
+                || local.contains_key(&out)
+                || produced_by.contains_key(&out)
+            {
+                return Err(Error::BadParameter(format!(
+                    "circuit `{name}` violates single assignment on wire {out}"
+                )));
+            }
+            local.insert(out, i);
+        }
+
+        // Pass 2: localize every remote wire used more than once behind a
+        // §III-A copy gate, rewriting its consumers.
+        let mut rewrites: HashMap<Wire, Wire> = HashMap::new();
+        let mut ops: Vec<GateOp> = Vec::new();
+        let mut is_copy: Vec<bool> = Vec::new();
+        if insert_copies {
+            for &w in &remote_order {
+                if remote_uses[&w] >= 2 {
+                    let copy = next_wire;
+                    next_wire += 1;
+                    rewrites.insert(w, copy);
+                    ops.push(GateOp::new(Gate::Or2, &[w, w], copy));
+                    is_copy.push(true);
+                }
+            }
+        }
+        let copies = ops.len();
+        for op in circuit.ops() {
+            let mut rewritten = op.clone();
+            for slot in rewritten.inputs[..op.gate.arity()].iter_mut() {
+                if let Some(&c) = rewrites.get(slot) {
+                    *slot = c;
+                }
+            }
+            ops.push(rewritten);
+            is_copy.push(false);
+        }
+        // Local producer index over the final op list.
+        let producer: HashMap<Wire, usize> =
+            ops.iter().enumerate().map(|(i, op)| (op.output, i)).collect();
+
+        // ASAP levels (external and constant inputs sit at level 0).
+        let mut levels: Vec<u32> = Vec::with_capacity(ops.len());
+        for op in &ops {
+            let mut lv = 0u32;
+            for &w in &op.inputs[..op.gate.arity()] {
+                if let Some(&p) = producer.get(&w) {
+                    lv = lv.max(levels[p]);
+                }
+            }
+            levels.push(lv + 1);
+        }
+        let critical = levels.iter().copied().max().unwrap_or(0);
+
+        // Heights (longest path to a sink — the list scheduler's
+        // priority, so gates feeding long chains run first).
+        let mut heights: Vec<u32> = vec![1; ops.len()];
+        for i in (0..ops.len()).rev() {
+            let h = heights[i];
+            for &w in &ops[i].inputs[..ops[i].gate.arity()] {
+                if let Some(&p) = producer.get(&w) {
+                    heights[p] = heights[p].max(h + 1);
+                }
+            }
+        }
+
+        // Lane assignment. `load[lane][level]` counts ops already placed
+        // at an ASAP level, so independent chains spread across lanes.
+        let mut load: Vec<Vec<u16>> = vec![Vec::new(); work_lanes];
+        let mut placed: Vec<PlacedOp> = Vec::with_capacity(ops.len());
+        let mut round_robin = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            let level = levels[i];
+            // Prefer the lane of the deepest locally produced input: the
+            // carry/sticky chain anchor.
+            let mut pref: Option<usize> = None;
+            let mut pref_level = 0u32;
+            for &w in &op.inputs[..op.gate.arity()] {
+                if let Some(&p) = producer.get(&w) {
+                    if levels[p] >= pref_level {
+                        pref_level = levels[p];
+                        pref = Some(placed[p].lane - operand_lanes);
+                    }
+                } else if let Some(&gl) = wire_lane.get(&w) {
+                    // Predecessor-circuit wire: anchor near where the
+                    // previous program left the value.
+                    if pref.is_none() {
+                        pref = Some(gl.saturating_sub(operand_lanes).min(work_lanes - 1));
+                    }
+                }
+            }
+            let pref = pref.unwrap_or_else(|| {
+                let l = round_robin % work_lanes;
+                round_robin += 1;
+                l
+            });
+            let lane = probe_lane(&mut load, pref, level);
+            let global = operand_lanes + lane;
+            wire_lane.insert(op.output, global);
+            placed.push(PlacedOp {
+                op: op.clone(),
+                lane: global,
+                level,
+                height: heights[i],
+                is_copy: i < copies,
+            });
+        }
+        for op in circuit.ops() {
+            produced_by.insert(op.output, prog);
+        }
+        for placed_op in placed.iter().filter(|p| p.is_copy) {
+            produced_by.insert(placed_op.op.output, prog);
+        }
+        placed_circuits.push(PlacedCircuit {
+            name: name.clone(),
+            ops: placed,
+            serial_gates: circuit.gate_count() as u64,
+            critical,
+        });
+    }
+    Ok(Placement {
+        circuits: placed_circuits,
+        wire_lane,
+        const_ones,
+        const_zeros,
+        work_lanes,
+    })
+}
+
+/// Probe outward from `pref` for the nearest lane with no op at `level`
+/// yet; fall back to `pref` when every lane is taken.
+fn probe_lane(load: &mut [Vec<u16>], pref: usize, level: u32) -> usize {
+    let lanes = load.len();
+    let level = level as usize;
+    let mut chosen = pref;
+    'probe: for d in 0..lanes {
+        for cand in [pref.checked_sub(d), Some(pref + d)].into_iter().flatten() {
+            if cand >= lanes {
+                continue;
+            }
+            if load[cand].get(level).copied().unwrap_or(0) == 0 {
+                chosen = cand;
+                break 'probe;
+            }
+        }
+    }
+    if load[chosen].len() <= level {
+        load[chosen].resize(level + 1, 0);
+    }
+    load[chosen][level] = load[chosen][level].saturating_add(1);
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Gate;
+
+    fn tiny_region() -> OperandRegion {
+        OperandRegion::new(vec![0, 2], 4)
+    }
+
+    #[test]
+    fn validates_single_assignment_and_defined_reads() {
+        let mut c = Circuit::new(4);
+        let a = c.not(0);
+        let _ = c.or(a, 1);
+        let chain = vec![("ok".to_string(), c)];
+        assert!(place_chain(&chain, &tiny_region(), 4, true).is_ok());
+
+        let mut c = Circuit::new(4);
+        let _ = c.not(99); // undefined wire
+        let chain = vec![("bad".to_string(), c)];
+        let err = place_chain(&chain, &tiny_region(), 4, true).unwrap_err();
+        assert!(err.to_string().contains("undefined wire"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_predecessor_chain_reads() {
+        let mut c0 = Circuit::new(4);
+        let w0 = c0.not(0);
+        let mut c1 = Circuit::new(c0.next_wire());
+        let _ = c1.not(w0); // legal: immediate predecessor
+        let mut c2 = Circuit::new(c1.next_wire());
+        let _ = c2.not(w0); // illegal: two programs back
+        let chain = vec![
+            ("a".to_string(), c0),
+            ("b".to_string(), c1),
+            ("c".to_string(), c2),
+        ];
+        let err = place_chain(&chain, &tiny_region(), 4, true).unwrap_err();
+        assert!(err.to_string().contains("immediate predecessor"), "{err}");
+    }
+
+    #[test]
+    fn hot_operands_are_localized_once() {
+        let mut c = Circuit::new(4);
+        // Operand wire 1 is read three times, operand wire 0 once.
+        let x = c.and(1, 0);
+        let y = c.or(1, x);
+        let _ = c.nand(1, y);
+        let chain = vec![("copies".to_string(), c)];
+        let placement = place_chain(&chain, &tiny_region(), 4, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let copies: Vec<_> = ops.iter().filter(|p| p.is_copy).collect();
+        assert_eq!(copies.len(), 1, "one copy for the triple-use operand");
+        assert_eq!(copies[0].op.gate, Gate::Or2);
+        assert_eq!(copies[0].op.inputs[0], 1);
+        let copy_wire = copies[0].op.output;
+        // Every former use of wire 1 now reads the copy.
+        for p in ops.iter().filter(|p| !p.is_copy) {
+            for &w in &p.op.inputs[..p.op.gate.arity()] {
+                assert_ne!(w, 1, "rewritten to the local copy");
+            }
+        }
+        assert!(ops
+            .iter()
+            .any(|p| p.op.inputs[..p.op.gate.arity()].contains(&copy_wire)));
+    }
+
+    #[test]
+    fn chains_stay_in_lane_and_independent_work_spreads() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c = Circuit::new(2);
+        // Two independent 4-deep NOT chains from the two operand bits.
+        let mut a = 0;
+        let mut b = 1;
+        for _ in 0..4 {
+            a = c.not(a);
+            b = c.not(b);
+        }
+        let chain = vec![("lanes".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let lanes: HashSet<usize> = ops.iter().map(|p| p.lane).collect();
+        assert_eq!(lanes.len(), 2, "two chains in two lanes: {lanes:?}");
+        // Each chain's ops all share one lane.
+        for p in ops {
+            let tail = ops
+                .iter()
+                .filter(|q| q.op.inputs[0] == p.op.output)
+                .collect::<Vec<_>>();
+            for q in tail {
+                assert_eq!(q.lane, p.lane, "chain hops lanes");
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-chain schedule statistics.
+
+/// What a compiled chain's schedule cost — the numbers the
+/// `schedule-stats` CLI subcommand prints, the Table III float bench
+/// reports, and the CI budget file gates on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScheduleStats {
+    /// Programs in the chain (one per circuit).
+    pub programs: usize,
+    /// Total gates emitted, including inserted cross-partition copies.
+    pub gates: u64,
+    /// Inserted §III-A copy gates (cross-partition operand localization).
+    pub copy_gates: u64,
+    /// Total cycles of the lowered chain (compute + initialization).
+    pub cycles: u64,
+    /// Cycles of the one-gate-per-cycle serial reference emission of the
+    /// same circuits (no copies — the [`Serial`](super::ScheduleMode)
+    /// oracle's cost).
+    pub serial_cycles: u64,
+    /// Dependence-DAG lower bound: the sum over programs of each DAG's
+    /// depth plus its initialization cycles. No legal schedule of these
+    /// circuits can beat this.
+    pub critical_path_cycles: u64,
+    /// Peak gates executed in one cycle.
+    pub peak_parallel_gates: u64,
+    /// Busy partitions summed over all compute cycles.
+    pub busy_partition_cycles: u64,
+    /// Compute cycles (excludes initialization cycles).
+    pub compute_cycles: u64,
+    /// Partitions of the shared crossbar geometry.
+    pub partitions: usize,
+    /// Crossbar width in columns.
+    pub width: u32,
+}
+
+impl ScheduleStats {
+    /// How much faster the partition-parallel schedule is than the serial
+    /// reference emission.
+    pub fn speedup_vs_serial(&self) -> f64 {
+        if self.cycles == 0 {
+            1.0
+        } else {
+            self.serial_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// How close the schedule is to its dependence-DAG lower bound
+    /// (1.0 = every cycle advances the critical path).
+    pub fn schedule_efficiency(&self) -> f64 {
+        if self.cycles == 0 {
+            1.0
+        } else {
+            self.critical_path_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean busy partitions per compute cycle.
+    pub fn avg_busy_partitions(&self) -> f64 {
+        if self.compute_cycles == 0 {
+            0.0
+        } else {
+            self.busy_partition_cycles as f64 / self.compute_cycles as f64
+        }
+    }
+
+    /// Mean fraction of partitions busy per compute cycle.
+    pub fn occupancy(&self) -> f64 {
+        if self.partitions == 0 {
+            0.0
+        } else {
+            self.avg_busy_partitions() / self.partitions as f64
+        }
+    }
+
+    /// Multi-line human-readable rendering (CLI / bench output).
+    pub fn render(&self) -> String {
+        format!(
+            "  programs:             {}\n\
+             \x20 gates:                {} ({} copies)\n\
+             \x20 scheduled cycles:     {}\n\
+             \x20 serial cycles:        {}\n\
+             \x20 critical path:        {}\n\
+             \x20 speedup vs serial:    {:.2}x\n\
+             \x20 schedule efficiency:  {:.2}\n\
+             \x20 partitions:           {}\n\
+             \x20 avg busy partitions:  {:.1} ({:.1}% occupancy)\n\
+             \x20 peak parallel gates:  {}\n\
+             \x20 crossbar width:       {} columns",
+            self.programs,
+            self.gates,
+            self.copy_gates,
+            self.cycles,
+            self.serial_cycles,
+            self.critical_path_cycles,
+            self.speedup_vs_serial(),
+            self.schedule_efficiency(),
+            self.partitions,
+            self.avg_busy_partitions(),
+            100.0 * self.occupancy(),
+            self.peak_parallel_gates,
+            self.width,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_ratios() {
+        let s = ScheduleStats {
+            programs: 2,
+            gates: 100,
+            copy_gates: 10,
+            cycles: 50,
+            serial_cycles: 104,
+            critical_path_cycles: 40,
+            peak_parallel_gates: 8,
+            busy_partition_cycles: 230,
+            compute_cycles: 46,
+            partitions: 10,
+            width: 64,
+        };
+        assert!((s.speedup_vs_serial() - 2.08).abs() < 1e-9);
+        assert!((s.schedule_efficiency() - 0.8).abs() < 1e-9);
+        assert!((s.avg_busy_partitions() - 5.0).abs() < 1e-9);
+        assert!((s.occupancy() - 0.5).abs() < 1e-9);
+        let r = s.render();
+        assert!(r.contains("scheduled cycles:     50"), "{r}");
+        assert!(r.contains("speedup vs serial:    2.08x"), "{r}");
+    }
+
+    #[test]
+    fn empty_stats_do_not_divide_by_zero() {
+        let s = ScheduleStats::default();
+        assert_eq!(s.speedup_vs_serial(), 1.0);
+        assert_eq!(s.occupancy(), 0.0);
+    }
+}

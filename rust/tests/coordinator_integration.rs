@@ -17,6 +17,7 @@ fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> Multiply
         max_wait: Duration::from_millis(wait_ms),
         config: EngineConfig::MultPim,
         shards,
+        max_queue_tiles: 0,
     }
 }
 
@@ -52,8 +53,21 @@ fn concurrent_clients_share_batches() {
 fn mixed_width_routing() {
     let coord = Coordinator::launch(
         &[deployment(8, 16, 2, 1), deployment(16, 16, 2, 3)],
-        &[MatVecDeployment { n_bits: 16, n_elems: 4, shard_rows: 8, shards: 2 }],
-        &[MatMulDeployment { n_bits: 16, k: 2, shard_rows: 8, panel_cols: 2, shards: 2 }],
+        &[MatVecDeployment {
+            n_bits: 16,
+            n_elems: 4,
+            shard_rows: 8,
+            shards: 2,
+            max_queue_tiles: 0,
+        }],
+        &[MatMulDeployment {
+            n_bits: 16,
+            k: 2,
+            shard_rows: 8,
+            panel_cols: 2,
+            shards: 2,
+            max_queue_tiles: 0,
+        }],
         &[],
     )
     .unwrap();

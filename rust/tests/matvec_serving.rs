@@ -38,6 +38,7 @@ fn served_matches_direct_at_tile_boundaries() {
             n_elems: N_ELEMS,
             shard_rows: SHARD_ROWS,
             shards: 3,
+            max_queue_tiles: 0,
         }],
         &[],
         &[],
@@ -70,7 +71,7 @@ fn served_wraps_mod_2n_like_fixedpoint() {
     let n_elems = 8u32; // 8 * 255^2 > 2^16: the accumulator must wrap
     let coord = Coordinator::launch(
         &[],
-        &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2 }],
+        &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2, max_queue_tiles: 0 }],
         &[],
         &[],
     )
@@ -104,6 +105,7 @@ fn concurrent_matvec_metrics_account_exactly() {
                 n_elems: N_ELEMS,
                 shard_rows: SHARD_ROWS,
                 shards: 4,
+                max_queue_tiles: 0,
             }],
             &[],
             &[],

@@ -26,7 +26,14 @@ const SHARD_ROWS: usize = 8;
 const PANEL_COLS: usize = 4;
 
 fn mm_deployment(shards: usize) -> MatMulDeployment {
-    MatMulDeployment { n_bits: N_BITS, k: K, shard_rows: SHARD_ROWS, panel_cols: PANEL_COLS, shards }
+    MatMulDeployment {
+        n_bits: N_BITS,
+        k: K,
+        shard_rows: SHARD_ROWS,
+        panel_cols: PANEL_COLS,
+        shards,
+        max_queue_tiles: 0,
+    }
 }
 
 /// The float tenant under test: a small format so exhaustive-ish sweeps
@@ -43,6 +50,7 @@ fn fv_deployment(shards: usize) -> FloatVecDeployment {
         n_elems: FV_ELEMS,
         shard_rows: FV_SHARD_ROWS,
         shards,
+        max_queue_tiles: 0,
     }
 }
 
@@ -110,7 +118,14 @@ fn served_matmul_wraps_mod_2n() {
     let coord = Coordinator::launch(
         &[],
         &[],
-        &[MatMulDeployment { n_bits, k, shard_rows: 4, panel_cols: 2, shards: 2 }],
+        &[MatMulDeployment {
+            n_bits,
+            k,
+            shard_rows: 4,
+            panel_cols: 2,
+            shards: 2,
+            max_queue_tiles: 0,
+        }],
         &[],
     )
     .unwrap();
@@ -140,8 +155,9 @@ fn unknown_deployments_rejected_with_typed_error() {
             max_wait: Duration::from_millis(1),
             config: EngineConfig::MultPim,
             shards: 1,
+            max_queue_tiles: 0,
         }],
-        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, shards: 1 }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, shards: 1, max_queue_tiles: 0 }],
         &[mm_deployment(1)],
         &[fv_deployment(1)],
     )
@@ -235,15 +251,24 @@ fn shutdown_drains_pending_tiles_for_every_workload() {
             max_wait: Duration::from_secs(10),
             config: EngineConfig::MultPim,
             shards: 1,
+            max_queue_tiles: 0,
         }],
-        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, shards: 1 }],
-        &[MatMulDeployment { n_bits: 8, k: 3, shard_rows: 2, panel_cols: 2, shards: 1 }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, shards: 1, max_queue_tiles: 0 }],
+        &[MatMulDeployment {
+            n_bits: 8,
+            k: 3,
+            shard_rows: 2,
+            panel_cols: 2,
+            shards: 1,
+            max_queue_tiles: 0,
+        }],
         &[FloatVecDeployment {
             exp_bits: FV_EXP,
             man_bits: FV_MAN,
             n_elems: FV_ELEMS,
             shard_rows: 2,
             shards: 1,
+            max_queue_tiles: 0,
         }],
     )
     .unwrap();
@@ -412,8 +437,15 @@ fn mixed_traffic_metrics_account_exactly() {
                 max_wait: Duration::from_millis(1),
                 config: EngineConfig::MultPim,
                 shards: 2,
+                max_queue_tiles: 0,
             }],
-            &[MatVecDeployment { n_bits: N_BITS, n_elems: K, shard_rows: SHARD_ROWS, shards: 2 }],
+            &[MatVecDeployment {
+                n_bits: N_BITS,
+                n_elems: K,
+                shard_rows: SHARD_ROWS,
+                shards: 2,
+                max_queue_tiles: 0,
+            }],
             &[mm_deployment(2)],
             &[],
         )
