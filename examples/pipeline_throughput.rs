@@ -15,7 +15,7 @@
 
 use multpim::algorithms::costmodel;
 use multpim::coordinator::{
-    Coordinator, EngineConfig, MultiplyDeployment, PipelineModel, Request, Response,
+    Coordinator, DeploymentSpec, EngineConfig, MultiplyDeployment, PipelineModel, Request, Response,
 };
 use multpim::util::SplitMix64;
 use std::time::{Duration, Instant};
@@ -65,8 +65,7 @@ fn main() -> multpim::Result<()> {
             rows: 1024,
             max_wait: Duration::from_millis(1),
             config: EngineConfig::MultPim,
-            shards: 4,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(4),
         }],
         &[],
         &[],

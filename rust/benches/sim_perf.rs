@@ -13,10 +13,16 @@
 //! for served matvec at N=16, 64x64, and >= 1.5x for served GEMM at
 //! N=16, 64x64x64.
 
+use std::sync::atomic::Ordering;
+
 use multpim::algorithms::matmul::{plan_tiles, MultPimMatMul};
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
-use multpim::coordinator::{ChainEngine, EngineConfig, MultiplyEngine};
+use multpim::coordinator::{
+    ChainEngine, Coordinator, DeploymentSpec, EngineConfig, MatMulDeployment, MultiplyEngine,
+    WorkloadKey,
+};
+use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::inner_product_mod;
 use multpim::runtime::trace::program_to_trace;
 use multpim::sim::Simulator;
@@ -262,5 +268,69 @@ fn main() {
     assert!(
         gemm_speedup >= 1.5,
         "served GEMM speedup regressed below the 1.5x acceptance bar: {gemm_speedup:.2}x"
+    );
+
+    // ----------------------------------------------------------------
+    // Topology locality: the same served GEMM traffic on a hierarchical
+    // 2x2x2x4 device, locality-aware vs seeded-random tile placement.
+    // The numbers tracked by EXPERIMENTS.md §Topology; the acceptance
+    // bar is >= 2x fewer modeled cross-channel restage words under the
+    // locality policy.
+    // ----------------------------------------------------------------
+    println!("\n=== topology locality: served GEMM, locality-aware vs random placement ===");
+    let requests = 2usize;
+    let mut cross_by_policy = Vec::new();
+    for policy in [PlacementPolicy::Locality, PlacementPolicy::Random] {
+        let mut device = DeviceConfig::new(Topology::parse("2x2x2x4").unwrap());
+        device.policy = policy;
+        // 8 shards on 8 banks: the allocator's round-robin sweep puts one
+        // crossbar in every bank, so every tile has 8 candidate lanes and
+        // a random pick usually lands away from the tile's staged A panel.
+        let coord = Coordinator::launch_on(
+            device,
+            &[],
+            &[],
+            &[MatMulDeployment {
+                n_bits: n,
+                k,
+                shard_rows: 16,
+                panel_cols,
+                spec: DeploymentSpec::new(8),
+            }],
+            &[],
+        )
+        .unwrap();
+        for _ in 0..requests {
+            let c = coord.matmul(n, a.clone(), b.clone()).unwrap();
+            assert_eq!(c, out_served, "served GEMM must be placement-invariant");
+        }
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatMul { n_bits: n, k })
+            .expect("matmul counters registered at launch");
+        let cross = wl.cross_channel_words.load(Ordering::Relaxed);
+        println!(
+            "policy={:<9} staged_words={:<7} restage_words={:<7} cross_channel_words={:<7} transfer_cycles={:<9} locality_hits={}",
+            match policy {
+                PlacementPolicy::Locality => "locality",
+                PlacementPolicy::Random => "random",
+            },
+            wl.staged_words.load(Ordering::Relaxed),
+            wl.restage_words.load(Ordering::Relaxed),
+            cross,
+            wl.transfer_cycles.load(Ordering::Relaxed),
+            wl.locality_hits.load(Ordering::Relaxed),
+        );
+        cross_by_policy.push(cross);
+        coord.shutdown();
+    }
+    let (locality_cross, random_cross) = (cross_by_policy[0], cross_by_policy[1]);
+    println!(
+        "\ncross-channel restage words, random vs locality: {random_cross} vs {locality_cross} (acceptance bar: >= 2x reduction)"
+    );
+    assert!(
+        random_cross >= 2 * locality_cross.max(1),
+        "locality-aware placement must cut modeled cross-channel restage words by >= 2x: \
+         locality={locality_cross} random={random_cross}"
     );
 }

@@ -173,6 +173,11 @@ pub struct BatchQueue<T> {
 #[derive(Debug)]
 struct QueueState<T> {
     items: VecDeque<T>,
+    /// Tiles popped by a consumer whose [`BatchQueue::task_done`] has not
+    /// arrived yet — work that left the queue but is still executing.
+    /// Tracked under the queue lock so [`BatchQueue::backlog`] is an
+    /// exact queued-plus-in-flight count, never a racy sum of two reads.
+    in_flight: usize,
     closed: bool,
 }
 
@@ -180,7 +185,7 @@ impl<T> BatchQueue<T> {
     /// A new, open queue.
     pub fn new() -> Arc<Self> {
         Arc::new(Self {
-            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState { items: VecDeque::new(), in_flight: 0, closed: false }),
             ready: Condvar::new(),
         })
     }
@@ -206,10 +211,15 @@ impl<T> BatchQueue<T> {
     }
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
+    ///
+    /// A popped item counts as **in flight** until the consumer calls
+    /// [`BatchQueue::task_done`], so [`BatchQueue::backlog`] keeps seeing
+    /// work that is executing on a shard rather than waiting in line.
     pub fn pop(&self) -> Option<T> {
         let mut state = self.state.lock().unwrap();
         loop {
             if let Some(item) = state.items.pop_front() {
+                state.in_flight += 1;
                 return Some(item);
             }
             if state.closed {
@@ -219,9 +229,25 @@ impl<T> BatchQueue<T> {
         }
     }
 
+    /// Mark one popped item finished (the consumer's execute returned).
+    pub fn task_done(&self) {
+        let mut state = self.state.lock().unwrap();
+        debug_assert!(state.in_flight > 0, "task_done without a matching pop");
+        state.in_flight = state.in_flight.saturating_sub(1);
+    }
+
     /// Items currently waiting.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().items.len()
+    }
+
+    /// Outstanding work: items waiting in the queue **plus** items popped
+    /// but not yet [`task_done`](BatchQueue::task_done) — the number
+    /// admission control measures queue-depth limits against, so a
+    /// saturated pool with an empty queue still reports its true load.
+    pub fn backlog(&self) -> usize {
+        let state = self.state.lock().unwrap();
+        state.items.len() + state.in_flight
     }
 
     /// True when nothing is waiting.
@@ -377,6 +403,30 @@ mod tests {
         for (i, &v) in finals[0].iter().enumerate() {
             assert_eq!(v, ((i / p) * 10 + i % p) as u64, "cell {i}");
         }
+    }
+
+    /// Backlog counts in-flight work: an item stays visible between its
+    /// pop and the consumer's `task_done`, even though `len()` already
+    /// dropped — the exact window the old queue-only depth reads missed.
+    #[test]
+    fn backlog_counts_in_flight_items() {
+        let q = BatchQueue::new();
+        assert!(q.push(1u32));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.backlog(), 2);
+        let item = q.pop().unwrap();
+        assert_eq!(item, 1);
+        // Popped but not done: out of the queue, still in the backlog.
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.backlog(), 2);
+        q.task_done();
+        assert_eq!(q.backlog(), 1);
+        let _ = q.pop().unwrap();
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.backlog(), 1, "fully drained queue, one executing item");
+        q.task_done();
+        assert_eq!(q.backlog(), 0);
     }
 
     #[test]

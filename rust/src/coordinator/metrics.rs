@@ -11,6 +11,7 @@
 //! comparable across workloads.
 
 use super::pool::{TileCost, WorkloadKey};
+use crate::device::{BankPath, CrossbarPath, RouteDecision};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -52,8 +53,27 @@ pub struct WorkloadCounters {
     pub rejected_requests: AtomicU64,
     /// Work units those rejected requests would have admitted.
     pub rejected_units: AtomicU64,
+    /// Operand words staged into banks by routed tiles (fresh operands
+    /// plus first-time resident staging).
+    pub staged_words: AtomicU64,
+    /// Resident words the router had to *re*-stage because a tile landed
+    /// on a bank other than where its affinity was resident.
+    pub restage_words: AtomicU64,
+    /// The subset of `restage_words` that crossed a channel boundary —
+    /// the expensive hop the locality policy exists to avoid.
+    pub cross_channel_words: AtomicU64,
+    /// Modeled interconnect cycles spent moving this workload's operand
+    /// words across the device hierarchy.
+    pub transfer_cycles: AtomicU64,
+    /// Routed tiles whose affinity was already resident on the chosen
+    /// bank (no resident words moved).
+    pub locality_hits: AtomicU64,
     /// Per-shard occupancy, keyed by shard index within the pool.
     shards: Mutex<BTreeMap<usize, ShardStats>>,
+    /// The crossbar slots this workload's pool was placed on, in shard
+    /// index order (set once at launch; empty before launch and for
+    /// pools created without a device placement in unit tests).
+    placement: Mutex<Vec<CrossbarPath>>,
 }
 
 impl WorkloadCounters {
@@ -84,6 +104,65 @@ impl WorkloadCounters {
     /// index.
     pub fn shard_stats(&self) -> Vec<(usize, ShardStats)> {
         self.shards.lock().unwrap().iter().map(|(&k, v)| (k, v.clone())).collect()
+    }
+
+    /// Record the placement the workload's pool launched on (called once
+    /// by [`ShardPool::launch`](super::pool::ShardPool::launch)).
+    pub fn set_placement(&self, slots: Vec<CrossbarPath>) {
+        *self.placement.lock().unwrap() = slots;
+    }
+
+    /// The crossbar slots the pool was placed on, in shard-index order.
+    pub fn placement(&self) -> Vec<CrossbarPath> {
+        self.placement.lock().unwrap().clone()
+    }
+
+    /// Fold one routing decision into the device-traffic counters (the
+    /// pool calls this for every successfully enqueued tile).
+    pub fn record_route(&self, d: &RouteDecision) {
+        self.staged_words.fetch_add(d.staged_words, Ordering::Relaxed);
+        self.restage_words.fetch_add(d.restage_words, Ordering::Relaxed);
+        self.cross_channel_words.fetch_add(d.cross_channel_words, Ordering::Relaxed);
+        self.transfer_cycles.fetch_add(d.transfer_cycles, Ordering::Relaxed);
+        if d.locality_hit {
+            self.locality_hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-shard counters aggregated up to the bank level through the
+    /// recorded placement, sorted by bank path. Empty when no placement
+    /// was recorded. The sums over these entries equal the sums over
+    /// [`WorkloadCounters::shard_stats`] exactly — aggregation never
+    /// drops a tile.
+    pub fn bank_stats(&self) -> Vec<(BankPath, ShardStats)> {
+        let placement = self.placement.lock().unwrap();
+        if placement.is_empty() {
+            return Vec::new();
+        }
+        let mut by_bank: BTreeMap<BankPath, ShardStats> = BTreeMap::new();
+        for (shard_idx, stats) in self.shard_stats() {
+            // Shard indices always come from the pool that recorded the
+            // placement, so the lookup cannot miss; stay total anyway.
+            let Some(slot) = placement.get(shard_idx) else { continue };
+            let agg = by_bank.entry(slot.bank).or_default();
+            agg.tiles += stats.tiles;
+            agg.units += stats.units;
+            agg.busy_ns += stats.busy_ns;
+        }
+        by_bank.into_iter().collect()
+    }
+
+    /// Bank-level counters aggregated up to the channel, sorted by
+    /// channel index. Empty when no placement was recorded.
+    pub fn channel_stats(&self) -> Vec<(usize, ShardStats)> {
+        let mut by_channel: BTreeMap<usize, ShardStats> = BTreeMap::new();
+        for (bank, stats) in self.bank_stats() {
+            let agg = by_channel.entry(bank.channel).or_default();
+            agg.tiles += stats.tiles;
+            agg.units += stats.units;
+            agg.busy_ns += stats.busy_ns;
+        }
+        by_channel.into_iter().collect()
     }
 }
 
@@ -239,6 +318,36 @@ impl Metrics {
                 wl.rejected_requests.load(Ordering::Relaxed),
                 wl.rejected_units.load(Ordering::Relaxed),
             ));
+            let staged = wl.staged_words.load(Ordering::Relaxed);
+            if staged > 0 {
+                out.push_str(&format!(
+                    "\n    device[{key}] staged_words={staged} restage_words={} \
+                     cross_channel_words={} transfer_cycles={} locality_hits={}",
+                    wl.restage_words.load(Ordering::Relaxed),
+                    wl.cross_channel_words.load(Ordering::Relaxed),
+                    wl.transfer_cycles.load(Ordering::Relaxed),
+                    wl.locality_hits.load(Ordering::Relaxed),
+                ));
+            }
+            for (channel, s) in wl.channel_stats() {
+                out.push_str(&format!(
+                    "\n    channel[{key}:c{channel}] tiles={} units={} busy={:.3}s \
+                     occupancy={:.1}%",
+                    s.tiles,
+                    s.units,
+                    s.busy_ns as f64 / 1e9,
+                    100.0 * s.busy_ns as f64 / uptime_ns as f64,
+                ));
+            }
+            for (bank, s) in wl.bank_stats() {
+                out.push_str(&format!(
+                    "\n    bank[{key}:{bank}] tiles={} units={} busy={:.3}s occupancy={:.1}%",
+                    s.tiles,
+                    s.units,
+                    s.busy_ns as f64 / 1e9,
+                    100.0 * s.busy_ns as f64 / uptime_ns as f64,
+                ));
+            }
             for (shard, s) in wl.shard_stats() {
                 out.push_str(&format!(
                     "\n    shard[{key}:{shard}] tiles={} units={} busy={:.3}s occupancy={:.1}%",
@@ -326,6 +435,80 @@ mod tests {
         assert_eq!(wl.admitted_units.load(Ordering::Relaxed), 10);
         let s = m.snapshot();
         assert!(s.contains("rejected=2 rejected_units=96"), "{s}");
+    }
+
+    #[test]
+    fn per_level_aggregation_sums_exactly() {
+        use crate::device::Topology;
+
+        let m = Metrics::default();
+        let key = WorkloadKey::MatMul { n_bits: 16, k: 64 };
+        let wl = m.register(key);
+        // Place 4 shards one per bank on a 2x1x2x1 device: shards 0/1 on
+        // channel 0, shards 2/3 on channel 1.
+        let topo = Topology::parse("2x1x2x1").unwrap();
+        wl.set_placement(
+            (0..4).map(|i| CrossbarPath { bank: topo.bank_path(i), crossbar: 0 }).collect(),
+        );
+        for shard in 0..4usize {
+            let tiles = (shard + 1) as u64;
+            for _ in 0..tiles {
+                m.record_tile(&wl, shard, &cost(8, 100, Duration::ZERO), Duration::from_micros(5));
+            }
+        }
+        let shard_total: u64 = wl.shard_stats().iter().map(|(_, s)| s.tiles).sum();
+        let banks = wl.bank_stats();
+        let channels = wl.channel_stats();
+        // Every level accounts for exactly the same tiles and units: no
+        // tile is dropped or double-counted by the rollup.
+        assert_eq!(shard_total, 1 + 2 + 3 + 4);
+        assert_eq!(banks.iter().map(|(_, s)| s.tiles).sum::<u64>(), shard_total);
+        assert_eq!(channels.iter().map(|(_, s)| s.tiles).sum::<u64>(), shard_total);
+        assert_eq!(banks.len(), 4);
+        assert_eq!(channels.len(), 2);
+        // Channel 0 holds shards 0+1, channel 1 holds shards 2+3.
+        assert_eq!(channels[0].1.tiles, 1 + 2);
+        assert_eq!(channels[1].1.tiles, 3 + 4);
+        // Device-traffic counters fold routing decisions and render.
+        wl.record_route(&RouteDecision {
+            lane: 0,
+            staged_words: 128,
+            restage_words: 64,
+            cross_channel_words: 64,
+            transfer_cycles: 960,
+            locality_hit: false,
+        });
+        wl.record_route(&RouteDecision {
+            lane: 0,
+            staged_words: 64,
+            restage_words: 0,
+            cross_channel_words: 0,
+            transfer_cycles: 448,
+            locality_hit: true,
+        });
+        assert_eq!(wl.staged_words.load(Ordering::Relaxed), 192);
+        assert_eq!(wl.restage_words.load(Ordering::Relaxed), 64);
+        assert_eq!(wl.cross_channel_words.load(Ordering::Relaxed), 64);
+        assert_eq!(wl.transfer_cycles.load(Ordering::Relaxed), 1408);
+        assert_eq!(wl.locality_hits.load(Ordering::Relaxed), 1);
+        let s = m.snapshot();
+        assert!(s.contains("device[matmul N=16 k=64] staged_words=192"), "{s}");
+        assert!(s.contains("channel[matmul N=16 k=64:c0]"), "{s}");
+        assert!(s.contains("bank[matmul N=16 k=64:c1.g0.b1]"), "{s}");
+    }
+
+    #[test]
+    fn missing_placement_renders_no_device_lines() {
+        let m = Metrics::default();
+        let key = WorkloadKey::Multiply { n_bits: 8 };
+        let wl = m.register(key);
+        m.record_tile(&wl, 0, &cost(4, 50, Duration::ZERO), Duration::from_micros(1));
+        assert!(wl.bank_stats().is_empty());
+        assert!(wl.channel_stats().is_empty());
+        let s = m.snapshot();
+        assert!(!s.contains("device["), "{s}");
+        assert!(!s.contains("bank["), "{s}");
+        assert!(s.contains("shard[multiply N=8:0]"), "{s}");
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! scenario is a tenant of one generic serving core:
 //!
 //! * [`pool`] — the [`Workload`](pool::Workload) abstraction and the
-//!   generic [`ShardPool`](pool::ShardPool): one shared tile queue, `S`
-//!   worker threads with resident crossbars, per-workload labeled
-//!   metrics, close-and-drain shutdown. The pool/queue/gather/metrics
-//!   plumbing exists exactly once, here;
+//!   generic [`ShardPool`](pool::ShardPool): per-bank tile-queue lanes
+//!   over the deployment's [`Placement`](crate::device::Placement), `S`
+//!   worker threads with resident crossbars, a locality-aware tile
+//!   [`Router`](crate::device::Router), per-workload labeled metrics,
+//!   close-and-drain shutdown. The pool/queue/gather/metrics plumbing
+//!   exists exactly once, here;
 //! * [`workloads`] — the four tenants: [`MultiplyWorkload`],
 //!   [`MatVecWorkload`], [`MatMulWorkload`], and [`FloatVecWorkload`],
 //!   each a thin plan/execute/gather impl over its engine;
@@ -25,7 +27,38 @@
 //!   verification;
 //! * [`pipeline`] — the §IV footnote-3 multiplication pipeline model;
 //! * [`server`] — the routing front door ([`Coordinator`]) and the
-//!   deployment configs.
+//!   deployment configs (shared launch surface:
+//!   [`DeploymentSpec`](server::DeploymentSpec)).
+//!
+//! ## The device hierarchy under the pools
+//!
+//! Serving is placed onto the [`crate::device`] model
+//! (Device → Channel → BankGroup → Bank → crossbar):
+//!
+//! * **launch** — [`Coordinator::launch_on`] takes a
+//!   [`DeviceConfig`](crate::device::DeviceConfig) and hands every
+//!   deployment its crossbar slots from a capacity-aware
+//!   [`Allocator`](crate::device::Allocator) sweep (round-robin across
+//!   banks). A launch the device cannot hold is the typed
+//!   [`CapacityExceeded`](crate::Error::CapacityExceeded) error — never a
+//!   silent oversubscription. [`Coordinator::launch`] is the degenerate
+//!   flat wrapper (`1x1x1xN`): one bank, one lane per pool, serving
+//!   bit-identical to the pre-hierarchy flat shard pool;
+//! * **serve** — each pool groups its slots into per-bank queue lanes;
+//!   every pushed tile passes the pool's
+//!   [`Router`](crate::device::Router), which picks the lane from the
+//!   tile's declared [`TileTraffic`](crate::device::TileTraffic). Under
+//!   the default locality policy, a GEMM row tile follows its staged A
+//!   panel (only the fresh B panel words move); the seeded-random policy
+//!   is the locality-off baseline that re-stages panels across the
+//!   hierarchy at the modeled per-level transfer cost;
+//! * **observe** — routing decisions land in per-workload device
+//!   counters (staged / restage / cross-channel words, transfer cycles,
+//!   locality hits), per-shard occupancy aggregates to per-bank and
+//!   per-channel lines in [`Metrics::snapshot`], and
+//!   [`Coordinator::placement_report`] renders live per-lane queue depth,
+//!   in-flight tiles, and staged-panel residency (the CLI `topology`
+//!   subcommand).
 //!
 //! ## The generic shard-pool serving architecture
 //!
@@ -56,8 +89,9 @@
 //!      bit-exact against the
 //!      [`float_dot_ref`](crate::fixedpoint::float::float_dot_ref)
 //!      composition;
-//! 2. **execute** — the deployment's `S` pool workers pop tiles from the
-//!    shared queue. Each worker owns a **resident crossbar** created at
+//! 2. **execute** — the deployment's `S` pool workers pop tiles from
+//!    their bank's queue lane (the router assigned each tile its lane at
+//!    push time). Each worker owns a **resident crossbar** created at
 //!    launch and reused for every tile (clear-and-restage through the
 //!    word-transposed
 //!    [`Crossbar::write_rows_transposed`](crate::crossbar::Crossbar::write_rows_transposed)
@@ -105,9 +139,9 @@ pub use engine::{
 };
 pub use metrics::{Metrics, ShardStats, WorkloadCounters};
 pub use pipeline::PipelineModel;
-pub use pool::{ShardPool, TileCost, Workload, WorkloadKey};
+pub use pool::{LaneStatus, ShardPool, TileCost, Workload, WorkloadKey};
 pub use server::{
-    Coordinator, FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
-    Request, Response,
+    Coordinator, DeploymentSpec, FloatVecDeployment, MatMulDeployment, MatVecDeployment,
+    MultiplyDeployment, Request, Response,
 };
 pub use workloads::{FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyWorkload};

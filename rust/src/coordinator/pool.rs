@@ -1,14 +1,30 @@
 //! The generic workload shard pool — the single serving core every
-//! scenario rides.
+//! scenario rides, placed onto the hierarchical device model.
 //!
 //! A deployed scenario (a multiply width, a §VI matvec shape, a GEMM
 //! shape, a float matvec shape) is a [`Workload`]: it knows how to
 //! materialize a
 //! resident-crossbar shard executor and how to execute one queued tile on
 //! it, completing the tile's share of the originating request. Everything
-//! around that — the shared tile queue, the pool of worker threads, the
-//! per-workload labeled metrics, the close-and-drain shutdown contract —
-//! lives here exactly once, instead of being hand-copied per scenario.
+//! around that — the per-bank tile queues, the pool of worker threads,
+//! the tile [`Router`], the per-workload labeled metrics, the
+//! close-and-drain shutdown contract — lives here exactly once, instead
+//! of being hand-copied per scenario.
+//!
+//! Since the device-hierarchy refactor the pool is a **placement layer**
+//! over [`crate::device`]: a launch receives a [`Placement`] — the
+//! crossbar slots a capacity-checked allocation assigned to this
+//! deployment — and groups them by bank. Each bank with at least one
+//! slot gets its own [`BatchQueue`] lane; the bank's workers pop from
+//! that lane only, so queue contention is per-bank, exactly like the
+//! modeled hardware. Every pushed tile first passes the pool's
+//! [`Router`], which picks the lane (locality-aware by default: a tile
+//! declaring [`Workload::traffic`] affinity follows its resident staged
+//! words) and models the staging traffic the choice costs; the decision
+//! is folded into the workload's device counters. On the degenerate flat
+//! `1x1x1xN` topology every slot shares the single bank, the router has
+//! one forced lane, and serving is bit-identical to the flat
+//! one-queue/N-workers pool this replaced.
 //!
 //! The serving lifecycle every workload follows:
 //!
@@ -19,19 +35,22 @@
 //!    multiply workload plans *across* requests via its width's
 //!    [`RowBatcher`](super::batcher::RowBatcher) thread, which flushes
 //!    full-or-expired batches as tiles.
-//! 2. **execute** — a pool worker pops a tile and runs it on its resident
-//!    shard (compiled program/pipeline lowered once at launch, operands
+//! 2. **route + execute** — the router assigns the tile a bank lane; a
+//!    worker of that bank pops it and runs it on its resident shard
+//!    (compiled program/pipeline lowered once at launch, operands
 //!    restaged through the bulk word-transposed/broadcast writes).
 //! 3. **gather** — the workload's `execute` completes the request state;
 //!    whichever worker finishes the last tile sends the assembled reply.
 //!
 //! Workers record every executed tile into the global counters plus their
-//! workload's [`WorkloadCounters`](super::metrics::WorkloadCounters) entry,
-//! so throughput is comparable across scenarios without per-scenario
-//! metric fields.
+//! workload's [`WorkloadCounters`](super::metrics::WorkloadCounters) entry
+//! (which aggregates per-crossbar, per-bank, and per-channel through the
+//! recorded placement), so throughput and per-level occupancy are
+//! comparable across scenarios without per-scenario metric fields.
 
 use super::batcher::BatchQueue;
 use super::metrics::{Metrics, WorkloadCounters};
+use crate::device::{BankPath, CrossbarPath, Placement, Router, TileTraffic};
 use std::fmt;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -127,6 +146,15 @@ pub trait Workload: Send + Sync + 'static {
     /// crossbar allocation the worker then reuses for its lifetime).
     fn shard(&self) -> Self::Shard;
 
+    /// The staging traffic `tile` brings: reusable resident words keyed
+    /// by an affinity (a GEMM row tile's A panel) plus always-fresh
+    /// words. The pool's [`Router`] uses this to place the tile and to
+    /// model per-level transfer costs. The default declares no traffic —
+    /// correct for synthetic test workloads that stage nothing.
+    fn traffic(&self, _tile: &Self::Tile) -> TileTraffic {
+        TileTraffic::default()
+    }
+
     /// Execute one tile on `shard`, completing its share of the
     /// originating request (the last tile of a request sends the reply).
     ///
@@ -143,37 +171,114 @@ pub trait Workload: Send + Sync + 'static {
     );
 }
 
-/// A pool of `S` worker threads sharing one tile queue for one workload.
+/// One bank's serving lane: the bank's tile queue plus its address.
+#[derive(Debug)]
+struct Lane<T> {
+    queue: Arc<BatchQueue<T>>,
+    bank: BankPath,
+    /// Crossbar slots (pool-local shard indices) working this lane.
+    slots: Vec<usize>,
+}
+
+/// Point-in-time status of one bank lane (placement-report surface).
+#[derive(Debug, Clone)]
+pub struct LaneStatus {
+    /// The bank this lane serves.
+    pub bank: BankPath,
+    /// Crossbar workers popping from this lane.
+    pub crossbars: usize,
+    /// Tiles waiting in the lane's queue.
+    pub queued: usize,
+    /// Tiles waiting **plus** executing on the lane's crossbars.
+    pub backlog: usize,
+    /// Affinity keys (staged panels) currently resident on this bank.
+    pub resident: usize,
+}
+
+/// A pool of worker threads for one workload, placed onto the device
+/// hierarchy: one tile-queue lane per occupied bank, one worker per
+/// assigned crossbar.
 ///
-/// Launching spawns the workers; [`ShardPool::close`] closes the queue,
+/// Launching spawns the workers; [`ShardPool::close`] closes every lane,
 /// after which workers drain every already-queued tile and exit — the
 /// close-and-drain contract [`Coordinator::shutdown`] relies on so no
 /// accepted request is ever dropped.
 ///
+/// The pool is cheaply cloneable (all state is shared): the multiply
+/// batcher thread holds a clone and pushes flushed batches through the
+/// same router.
+///
 /// [`Coordinator::shutdown`]: super::server::Coordinator::shutdown
 pub struct ShardPool<W: Workload> {
     workload: Arc<W>,
-    queue: Arc<BatchQueue<W::Tile>>,
+    lanes: Arc<Vec<Lane<W::Tile>>>,
+    router: Arc<Router>,
+    slots: Arc<Vec<CrossbarPath>>,
     counters: Arc<WorkloadCounters>,
 }
 
+impl<W: Workload> Clone for ShardPool<W> {
+    fn clone(&self) -> Self {
+        Self {
+            workload: Arc::clone(&self.workload),
+            lanes: Arc::clone(&self.lanes),
+            router: Arc::clone(&self.router),
+            slots: Arc::clone(&self.slots),
+            counters: Arc::clone(&self.counters),
+        }
+    }
+}
+
 impl<W: Workload> ShardPool<W> {
-    /// Spawn `shards` worker threads for `workload`, registering its
-    /// labeled counters in `metrics` and pushing the worker join handles
-    /// onto `workers` (the caller owns joining them at shutdown).
+    /// Spawn one worker thread per crossbar slot of `placement`,
+    /// registering the workload's labeled counters (and its placement,
+    /// for per-level aggregation) in `metrics` and pushing the worker
+    /// join handles onto `workers` (the caller owns joining them at
+    /// shutdown).
+    ///
+    /// Slots sharing a bank share one queue lane; `placement.policy`
+    /// decides how tiles are routed across lanes. A flat
+    /// [`Placement::flat`] placement yields exactly one lane — the
+    /// pre-hierarchy single-queue pool.
     pub fn launch(
         workload: W,
-        shards: usize,
+        placement: Placement,
         metrics: &Arc<Metrics>,
         workers: &mut Vec<JoinHandle<()>>,
     ) -> Self {
-        assert!(shards > 0, "a shard pool needs at least one worker");
+        assert!(!placement.slots.is_empty(), "a shard pool needs at least one crossbar slot");
         let workload = Arc::new(workload);
         let counters = metrics.register(workload.key());
-        let queue: Arc<BatchQueue<W::Tile>> = BatchQueue::new();
-        for shard_idx in 0..shards {
+        counters.set_placement(placement.slots.clone());
+
+        // Group the slots by bank, preserving first-appearance order so
+        // lane indices are deterministic for a given placement.
+        let mut lanes: Vec<Lane<W::Tile>> = Vec::new();
+        let mut lane_of: Vec<usize> = Vec::with_capacity(placement.slots.len());
+        for (slot_idx, slot) in placement.slots.iter().enumerate() {
+            let lane_idx = match lanes.iter().position(|l| l.bank == slot.bank) {
+                Some(i) => i,
+                None => {
+                    lanes.push(Lane {
+                        queue: BatchQueue::new(),
+                        bank: slot.bank,
+                        slots: Vec::new(),
+                    });
+                    lanes.len() - 1
+                }
+            };
+            lanes[lane_idx].slots.push(slot_idx);
+            lane_of.push(lane_idx);
+        }
+        let router = Arc::new(Router::new(
+            Arc::clone(&placement.topology),
+            placement.policy,
+            lanes.iter().map(|l| l.bank).collect(),
+        ));
+
+        for (shard_idx, &lane_idx) in lane_of.iter().enumerate() {
             let workload = Arc::clone(&workload);
-            let queue = Arc::clone(&queue);
+            let queue = Arc::clone(&lanes[lane_idx].queue);
             let metrics = Arc::clone(metrics);
             let counters = Arc::clone(&counters);
             workers.push(std::thread::spawn(move || {
@@ -186,10 +291,19 @@ impl<W: Workload> ShardPool<W> {
                         metrics.record_tile(&counters, shard_idx, &cost, t0.elapsed());
                     };
                     workload.execute(&mut shard, tile, &mut record);
+                    // The tile leaves the lane's backlog only now, so
+                    // admission depth checks keep seeing executing work.
+                    queue.task_done();
                 }
             }));
         }
-        Self { workload, queue, counters }
+        Self {
+            workload,
+            lanes: Arc::new(lanes),
+            router,
+            slots: Arc::new(placement.slots),
+            counters,
+        }
     }
 
     /// The deployed workload (shape accessors, planning helpers).
@@ -203,27 +317,69 @@ impl<W: Workload> ShardPool<W> {
         &self.counters
     }
 
-    /// The shared tile queue (the multiply batcher stage pushes flushed
-    /// batches through this handle).
-    pub fn queue(&self) -> &Arc<BatchQueue<W::Tile>> {
-        &self.queue
+    /// The crossbar slots this pool was placed on, in shard-index order.
+    pub fn slots(&self) -> &[CrossbarPath] {
+        &self.slots
     }
 
-    /// Enqueue one tile; `false` (dropping the tile) if the pool has been
-    /// closed.
+    /// Bank lanes this pool serves from (1 on the flat topology).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue one tile: the router picks its bank lane (charging the
+    /// modeled staging traffic into the device counters), then the tile
+    /// joins that lane's queue. `false` (dropping the tile) if the pool
+    /// has been closed.
     pub fn push(&self, tile: W::Tile) -> bool {
-        self.queue.push(tile)
+        let traffic = self.workload.traffic(&tile);
+        let decision = self.router.route(&traffic);
+        if !self.lanes[decision.lane].queue.push(tile) {
+            return false;
+        }
+        self.counters.record_route(&decision);
+        true
+    }
+
+    /// Outstanding tiles across every lane: queued **plus** in flight on
+    /// the executing shards — the depth admission control limits against.
+    pub fn backlog(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.backlog()).sum()
+    }
+
+    /// Tiles waiting in queues only (excluding in-flight execution).
+    pub fn queued(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.len()).sum()
+    }
+
+    /// Point-in-time per-lane status (topology placement report).
+    pub fn lane_status(&self) -> Vec<LaneStatus> {
+        let resident = self.router.resident_by_lane();
+        self.lanes
+            .iter()
+            .zip(resident)
+            .map(|(lane, resident)| LaneStatus {
+                bank: lane.bank,
+                crossbars: lane.slots.len(),
+                queued: lane.queue.len(),
+                backlog: lane.queue.backlog(),
+                resident,
+            })
+            .collect()
     }
 
     /// Close the pool: workers finish every queued tile, then exit.
     pub fn close(&self) {
-        self.queue.close();
+        for lane in self.lanes.iter() {
+            lane.queue.close();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::{PlacementPolicy, Topology};
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::mpsc;
 
@@ -266,10 +422,11 @@ mod tests {
         let executions = Arc::new(AtomicU64::new(0));
         let pool = ShardPool::launch(
             Doubler { done: tx, executions: Arc::clone(&executions) },
-            3,
+            Placement::flat(3),
             &metrics,
             &mut workers,
         );
+        assert_eq!(pool.lane_count(), 1, "flat placement is one bank lane");
         for i in 0..100u64 {
             assert!(pool.push(i));
         }
@@ -284,6 +441,8 @@ mod tests {
         assert_eq!(got, (0..100).map(|i| i * 2).collect::<Vec<_>>());
         // The pool rejects pushes after close.
         assert!(!pool.push(999));
+        // A drained, closed pool has no backlog.
+        assert_eq!(pool.backlog(), 0);
         // Labeled counters saw every tile.
         let wl = metrics.workload(WorkloadKey::Multiply { n_bits: 2 }).unwrap();
         assert_eq!(wl.tiles.load(Ordering::Relaxed), 100);
@@ -294,6 +453,110 @@ mod tests {
         let stats = wl.shard_stats();
         assert_eq!(stats.iter().map(|(_, s)| s.tiles).sum::<u64>(), 100);
         assert!(stats.iter().all(|(idx, _)| *idx < 3));
+    }
+
+    /// A workload whose execution blocks until released — the
+    /// deterministic probe for in-flight backlog accounting.
+    struct Blocker {
+        started: mpsc::Sender<()>,
+        release: std::sync::Mutex<mpsc::Receiver<()>>,
+    }
+
+    impl Workload for Blocker {
+        type Tile = ();
+        type Shard = ();
+
+        fn key(&self) -> WorkloadKey {
+            WorkloadKey::Multiply { n_bits: 3 }
+        }
+
+        fn shard(&self) {}
+
+        fn execute(&self, _shard: &mut (), _tile: (), record: &mut dyn FnMut(TileCost)) {
+            self.started.send(()).unwrap();
+            self.release.lock().unwrap().recv().unwrap();
+            record(TileCost { units: 1, cycles: 1, queue_wait: Duration::ZERO });
+        }
+    }
+
+    /// Satellite regression: backlog must count tiles that left the queue
+    /// and are executing on a shard. Before the fix, admission depth was
+    /// `queue.len()`, which reads 0 the moment a saturated worker pops
+    /// the last tile — letting `retry_after_tiles` under-report and the
+    /// depth limit silently oversubscribe.
+    #[test]
+    fn backlog_counts_tiles_executing_on_shards() {
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let pool = ShardPool::launch(
+            Blocker { started: started_tx, release: std::sync::Mutex::new(release_rx) },
+            Placement::flat(1),
+            &metrics,
+            &mut workers,
+        );
+        assert!(pool.push(()));
+        // Wait until the single worker has *popped* the tile and is
+        // executing it: the queue is now empty...
+        started_rx.recv().unwrap();
+        assert_eq!(pool.queued(), 0, "tile left the queue");
+        // ...but the backlog still sees the in-flight tile.
+        assert_eq!(pool.backlog(), 1, "in-flight tile must stay visible");
+        // A second tile waits behind it: backlog counts both.
+        assert!(pool.push(()));
+        assert_eq!(pool.queued(), 1);
+        assert_eq!(pool.backlog(), 2);
+        // Release both executions and drain.
+        release_tx.send(()).unwrap();
+        release_tx.send(()).unwrap();
+        started_rx.recv().unwrap();
+        pool.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(pool.backlog(), 0);
+    }
+
+    /// Multi-bank placement: tiles spread across per-bank lanes and every
+    /// lane drains on close.
+    #[test]
+    fn multi_bank_placement_spreads_lanes() {
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        let (tx, rx) = mpsc::channel();
+        let executions = Arc::new(AtomicU64::new(0));
+        let topology = Arc::new(Topology::parse("2x1x2x1").unwrap());
+        let slots: Vec<CrossbarPath> = (0..topology.total_banks())
+            .map(|i| CrossbarPath { bank: topology.bank_path(i), crossbar: 0 })
+            .collect();
+        let pool = ShardPool::launch(
+            Doubler { done: tx, executions: Arc::clone(&executions) },
+            Placement { slots, topology, policy: PlacementPolicy::Locality },
+            &metrics,
+            &mut workers,
+        );
+        assert_eq!(pool.lane_count(), 4, "one lane per occupied bank");
+        for i in 0..40u64 {
+            assert!(pool.push(i));
+        }
+        pool.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(executions.load(Ordering::Relaxed), 40);
+        let mut got: Vec<u64> = rx.try_iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..40).map(|i| i * 2).collect::<Vec<_>>());
+        // Affinity-free tiles round-robin: every bank lane saw work, and
+        // the per-bank aggregation covers every executed tile.
+        let wl = metrics.workload(WorkloadKey::Multiply { n_bits: 2 }).unwrap();
+        let banks = wl.bank_stats();
+        assert_eq!(banks.len(), 4);
+        assert_eq!(banks.iter().map(|(_, s)| s.tiles).sum::<u64>(), 40);
+        for (bank, stats) in &banks {
+            assert_eq!(stats.tiles, 10, "round-robin splits evenly across {bank}");
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The serving front door: a router over per-deployment generic shard
-//! pools plus response plumbing.
+//! pools placed onto the device hierarchy, plus response plumbing.
 //!
 //! Architecture (thread-based; the offline dependency set has no tokio):
 //!
@@ -8,14 +8,19 @@
 //!                     |                                          |
 //!                     |  multiply: batcher thread (RowBatcher:   |
 //!                     |    rows, deadline) plans ACROSS requests |
-//!                     |    and flushes batch tiles               |
 //!                     |  matvec: row tiles (shard_rows)          |
 //!                     |  matmul: row-tile x column-panel rects   |
 //!                     |  floatvec: row tiles (shard_rows)        |
 //!                     |                                          v
-//!                     +----------------> ShardPool<W>: BatchQueue --+--+
-//!                                                                   |  |
-//!                                                              shard 0 .. S-1
+//!                     +---------> ShardPool<W>: Router --- bank lanes
+//!                                               |             |
+//!                                     (locality-aware bank     |
+//!                                      choice, modeled per-    |
+//!                                      level staging traffic)  |
+//!                                                              v
+//!                           bank c0.g0.b0: queue -> crossbars ...
+//!                           bank c0.g0.b1: queue -> crossbars ...
+//!                           ...
 //!                                        (resident crossbar, bulk restage, one
 //!                                         pre-lowered CompiledProgram /
 //!                                         CompiledPipeline run per tile,
@@ -28,10 +33,15 @@
 //! [`Workload`](super::pool::Workload) served by one
 //! [`ShardPool`]: the pool/queue/worker/metrics plumbing exists once, in
 //! [`super::pool`], and adding a scenario costs one `Workload` impl, not
-//! a new serving stack.
+//! a new serving stack. [`Coordinator::launch_on`] places the pools onto
+//! a [`DeviceConfig`]: a launch-time [`Allocator`] hands every deployment
+//! its crossbar slots — a launch the device cannot hold is the typed
+//! [`Error::CapacityExceeded`] — and [`Coordinator::launch`] is the flat
+//! degenerate wrapper (one bank holding every shard), bit-identical to
+//! the pre-hierarchy pool.
 //!
 //! Programs are validated and lowered exactly once, at
-//! [`Coordinator::launch`] (inside [`MultiplyEngine::new`] /
+//! [`Coordinator::launch_on`] (inside [`MultiplyEngine::new`] /
 //! [`ChainEngine::new`]); the shard workers only ever run the pre-lowered
 //! hot path. Every accepted request is stamped with a ticket from a
 //! global admission counter and an enqueue timestamp; the shard that
@@ -39,13 +49,14 @@
 //! how batching deadlines and tile heights are tuned (see the `serve`
 //! subcommand's snapshot output).
 
-use super::batcher::{BatchQueue, RowBatcher};
+use super::batcher::RowBatcher;
 use super::engine::{ChainEngine, EngineConfig, FloatVecEngine, MultiplyEngine};
 use super::metrics::Metrics;
 use super::pool::{ShardPool, Workload, WorkloadKey};
 use super::workloads::{
-    FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyTile, MultiplyWorkload,
+    FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyWorkload,
 };
+use crate::device::{Allocator, DeviceConfig, Placement, PlacementPolicy, Topology};
 use crate::fixedpoint::float::FloatFormat;
 use crate::util::div_ceil;
 use crate::{Error, Result};
@@ -139,13 +150,17 @@ struct TenantPool<W: Workload> {
 
 impl<W: Workload> TenantPool<W> {
     /// Reject the submission with the typed overload error when admitting
-    /// `planned` more tiles (`units` work units) would push the tile
-    /// queue past this tenant's depth limit. Best effort: the depth read
+    /// `planned` more tiles (`units` work units) would push the tenant's
+    /// backlog past its depth limit. The depth is the pool's *backlog* —
+    /// tiles queued **plus** tiles popped and still executing on shards —
+    /// so a saturated pool whose queues happen to be drained still
+    /// backpressures, and `retry_after_tiles` can never report an excess
+    /// of zero while every worker is busy. Best effort: the depth read
     /// races concurrent admissions, which only ever makes the bound
     /// slightly conservative or slightly generous, never wrong by more
     /// than the in-flight submissions.
     fn admit(&self, key: WorkloadKey, planned: usize, units: u64) -> Result<()> {
-        let depth = self.pool.queue().len();
+        let depth = self.pool.backlog();
         if self.max_queue_tiles > 0 && planned > 0 && depth + planned > self.max_queue_tiles {
             self.pool.counters().record_rejection(units);
             return Err(Error::Overloaded {
@@ -157,7 +172,46 @@ impl<W: Workload> TenantPool<W> {
     }
 }
 
-/// The deployment: routes requests to per-workload shard pools.
+/// The launch surface every deployment shares: how many crossbar shards
+/// the device [`Allocator`] should assign it, and its admission-control
+/// queue-depth limit. One definition instead of the same two fields
+/// hand-copied into all four deployment structs.
+#[derive(Debug, Clone, Copy)]
+pub struct DeploymentSpec {
+    /// Crossbar shards (worker threads) to allocate on the device. The
+    /// allocator spreads them round-robin across banks, so a multi-shard
+    /// deployment serves from as many bank lanes as the topology allows.
+    pub shards: usize,
+    /// Admission control: maximum tiles allowed in the deployment's
+    /// backlog — queued **plus** in flight on the executing shards —
+    /// before new submissions are rejected with [`Error::Overloaded`].
+    /// `0` = unbounded (no backpressure).
+    pub max_queue_tiles: usize,
+}
+
+impl DeploymentSpec {
+    /// A spec with `shards` shards and no queue-depth limit.
+    pub fn new(shards: usize) -> Self {
+        Self { shards, max_queue_tiles: 0 }
+    }
+
+    /// A spec with `shards` shards and a backlog limit of
+    /// `max_queue_tiles` tiles.
+    pub fn with_queue_limit(shards: usize, max_queue_tiles: usize) -> Self {
+        Self { shards, max_queue_tiles }
+    }
+
+    /// The shard-count validation every deployment runs at launch.
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::BadParameter(format!("{what} needs at least one shard")));
+        }
+        Ok(())
+    }
+}
+
+/// The deployment: routes requests to per-workload shard pools placed on
+/// the device hierarchy.
 pub struct Coordinator {
     multiply: HashMap<u32, MultiplyFront>,
     matvec: HashMap<(u32, u32), TenantPool<MatVecWorkload>>,
@@ -166,9 +220,16 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     /// Global admission counter; its value rides on every multiply job as
-    /// the batcher ticket (stable routing/debugging identity). Tiling
-    /// workloads draw from the same counter at admission.
+    /// the batcher ticket (stable routing/debugging identity) and on
+    /// every GEMM request as its staging-affinity seed. Tiling workloads
+    /// draw from the same counter at admission.
     tickets: AtomicU64,
+    /// The device topology every pool was placed on.
+    topology: Arc<Topology>,
+    /// The tile-routing policy the pools run.
+    policy: PlacementPolicy,
+    /// Crossbars the launch-time allocator assigned across deployments.
+    allocated: usize,
 }
 
 /// Configuration for one deployed multiply width.
@@ -182,12 +243,9 @@ pub struct MultiplyDeployment {
     pub max_wait: Duration,
     /// Engine variant.
     pub config: EngineConfig,
-    /// Crossbar shards (worker threads) sharing this width's batch queue.
-    pub shards: usize,
-    /// Admission control: maximum flushed batches allowed to wait in the
-    /// tile queue before new submissions are rejected with
-    /// [`Error::Overloaded`]. `0` = unbounded (no backpressure).
-    pub max_queue_tiles: usize,
+    /// Shard count and admission limit (for multiply, the backlog is
+    /// measured in flushed-but-uncompleted batches).
+    pub spec: DeploymentSpec,
 }
 
 /// Configuration for one deployed §VI matvec shape.
@@ -202,12 +260,8 @@ pub struct MatVecDeployment {
     /// shard pool, and gathered through the generic
     /// [`ScatterGather`](super::batcher::ScatterGather) completion path.
     pub shard_rows: usize,
-    /// Crossbar shards (worker threads) sharing this shape's tile queue.
-    pub shards: usize,
-    /// Admission control: maximum tiles allowed to wait in the tile queue
-    /// (a request needing more tiles than the remaining headroom is
-    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
-    pub max_queue_tiles: usize,
+    /// Shard count and admission limit.
+    pub spec: DeploymentSpec,
 }
 
 /// Configuration for one deployed full-precision float matvec shape.
@@ -221,12 +275,8 @@ pub struct FloatVecDeployment {
     pub n_elems: u32,
     /// Crossbar rows per shard — the row-tiling height.
     pub shard_rows: usize,
-    /// Crossbar shards (worker threads) sharing this shape's tile queue.
-    pub shards: usize,
-    /// Admission control: maximum tiles allowed to wait in the tile queue
-    /// (a request needing more tiles than the remaining headroom is
-    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
-    pub max_queue_tiles: usize,
+    /// Shard count and admission limit.
+    pub spec: DeploymentSpec,
 }
 
 /// Configuration for one deployed GEMM shape.
@@ -242,17 +292,32 @@ pub struct MatMulDeployment {
     /// once and reruns the pre-lowered chain for up to this many columns
     /// of B.
     pub panel_cols: usize,
-    /// Crossbar shards (worker threads) sharing this shape's tile queue.
-    pub shards: usize,
-    /// Admission control: maximum tiles allowed to wait in the tile queue
-    /// (a request needing more tiles than the remaining headroom is
-    /// rejected with [`Error::Overloaded`]). `0` = unbounded.
-    pub max_queue_tiles: usize,
+    /// Shard count and admission limit.
+    pub spec: DeploymentSpec,
 }
 
 impl Coordinator {
+    /// Launch on the degenerate flat device: a single bank holding
+    /// exactly as many crossbars as the deployments request, with the
+    /// default locality policy. Placement collapses to one queue lane
+    /// per pool and serving is bit-identical to the pre-hierarchy flat
+    /// shard pool — every capacity check trivially passes.
+    pub fn launch(
+        multiplies: &[MultiplyDeployment],
+        matvecs: &[MatVecDeployment],
+        matmuls: &[MatMulDeployment],
+        floatvecs: &[FloatVecDeployment],
+    ) -> Result<Self> {
+        let total = multiplies.iter().map(|d| d.spec.shards).sum::<usize>()
+            + matvecs.iter().map(|d| d.spec.shards).sum::<usize>()
+            + matmuls.iter().map(|d| d.spec.shards).sum::<usize>()
+            + floatvecs.iter().map(|d| d.spec.shards).sum::<usize>();
+        Self::launch_on(DeviceConfig::flat(total.max(1)), multiplies, matvecs, matmuls, floatvecs)
+    }
+
     /// Launch the shard pools for the given multiply widths, matvec
-    /// shapes, matmul shapes, and float matvec shapes.
+    /// shapes, matmul shapes, and float matvec shapes, placed onto
+    /// `device`.
     ///
     /// Each multiply width's program is strictly validated and lowered to
     /// its [`crate::sim::CompiledProgram`] exactly once, here. Each
@@ -261,7 +326,16 @@ impl Coordinator {
     /// [`crate::sim::CompiledPipeline`] exactly once, here — no request
     /// ever validates or lowers anything. Per-shard workers reuse their
     /// crossbar allocation for the process lifetime.
-    pub fn launch(
+    ///
+    /// Placement is capacity-aware: every deployment receives distinct
+    /// crossbar slots from a launch-time [`Allocator`] sweep (round-robin
+    /// across banks, in declaration order: multiplies, matvecs, matmuls,
+    /// floatvecs), and a launch whose total shard demand exceeds the
+    /// device's crossbar count fails with the typed
+    /// [`Error::CapacityExceeded`] naming the deployment that did not
+    /// fit — never a silent oversubscription.
+    pub fn launch_on(
+        device: DeviceConfig,
         multiplies: &[MultiplyDeployment],
         matvecs: &[MatVecDeployment],
         matmuls: &[MatMulDeployment],
@@ -274,12 +348,7 @@ impl Coordinator {
         let mut multiply_engines: Vec<(MultiplyDeployment, MultiplyEngine)> =
             Vec::with_capacity(multiplies.len());
         for dep in multiplies {
-            if dep.shards == 0 {
-                return Err(Error::BadParameter(format!(
-                    "deployment N={} needs at least one shard",
-                    dep.n_bits
-                )));
-            }
+            dep.spec.validate(&format!("deployment N={}", dep.n_bits))?;
             if multiply_engines.iter().any(|(d, _)| d.n_bits == dep.n_bits) {
                 return Err(Error::BadParameter(format!(
                     "width N={} deployed twice",
@@ -292,12 +361,7 @@ impl Coordinator {
         let mut matvec_engines: Vec<(MatVecDeployment, ChainEngine)> =
             Vec::with_capacity(matvecs.len());
         for dep in matvecs {
-            if dep.shards == 0 {
-                return Err(Error::BadParameter(format!(
-                    "matvec deployment N={} n={} needs at least one shard",
-                    dep.n_bits, dep.n_elems
-                )));
-            }
+            dep.spec.validate(&format!("matvec deployment N={} n={}", dep.n_bits, dep.n_elems))?;
             if matvec_engines
                 .iter()
                 .any(|(d, _)| (d.n_bits, d.n_elems) == (dep.n_bits, dep.n_elems))
@@ -314,12 +378,7 @@ impl Coordinator {
         let mut matmul_engines: Vec<(MatMulDeployment, ChainEngine)> =
             Vec::with_capacity(matmuls.len());
         for dep in matmuls {
-            if dep.shards == 0 {
-                return Err(Error::BadParameter(format!(
-                    "matmul deployment N={} k={} needs at least one shard",
-                    dep.n_bits, dep.k
-                )));
-            }
+            dep.spec.validate(&format!("matmul deployment N={} k={}", dep.n_bits, dep.k))?;
             if dep.panel_cols == 0 {
                 return Err(Error::BadParameter(format!(
                     "matmul deployment N={} k={} needs at least one panel column",
@@ -337,12 +396,10 @@ impl Coordinator {
         let mut floatvec_engines: Vec<(FloatVecDeployment, FloatVecEngine)> =
             Vec::with_capacity(floatvecs.len());
         for dep in floatvecs {
-            if dep.shards == 0 {
-                return Err(Error::BadParameter(format!(
-                    "floatvec deployment E={} M={} n={} needs at least one shard",
-                    dep.exp_bits, dep.man_bits, dep.n_elems
-                )));
-            }
+            dep.spec.validate(&format!(
+                "floatvec deployment E={} M={} n={}",
+                dep.exp_bits, dep.man_bits, dep.n_elems
+            ))?;
             if floatvec_engines.iter().any(|(d, _)| {
                 (d.exp_bits, d.man_bits, d.n_elems) == (dep.exp_bits, dep.man_bits, dep.n_elems)
             }) {
@@ -359,56 +416,98 @@ impl Coordinator {
             ));
         }
 
-        // Phase 2: everything validated — spawn the pools (infallible).
+        // Phase 1.5: place every deployment on the device. Still before
+        // any thread spawns — a capacity failure must leave no worker
+        // behind. Allocation order is declaration order (multiplies,
+        // matvecs, matmuls, floatvecs), so the deployment named in a
+        // CapacityExceeded error is the first one that did not fit.
+        let topology = Arc::new(device.topology);
+        let policy = device.policy;
+        let mut alloc = Allocator::new(Arc::clone(&topology));
+        let placement = |slots| Placement { slots, topology: Arc::clone(&topology), policy };
+        let mut multiply_slots = Vec::with_capacity(multiply_engines.len());
+        for (dep, _) in &multiply_engines {
+            let key = WorkloadKey::Multiply { n_bits: dep.n_bits };
+            multiply_slots.push(alloc.allocate(dep.spec.shards, &key.to_string())?);
+        }
+        let mut matvec_slots = Vec::with_capacity(matvec_engines.len());
+        for (dep, _) in &matvec_engines {
+            let key = WorkloadKey::MatVec { n_bits: dep.n_bits, n_elems: dep.n_elems };
+            matvec_slots.push(alloc.allocate(dep.spec.shards, &key.to_string())?);
+        }
+        let mut matmul_slots = Vec::with_capacity(matmul_engines.len());
+        for (dep, _) in &matmul_engines {
+            let key = WorkloadKey::MatMul { n_bits: dep.n_bits, k: dep.k };
+            matmul_slots.push(alloc.allocate(dep.spec.shards, &key.to_string())?);
+        }
+        let mut floatvec_slots = Vec::with_capacity(floatvec_engines.len());
+        for (dep, _) in &floatvec_engines {
+            let key = WorkloadKey::FloatVec {
+                exp_bits: dep.exp_bits,
+                man_bits: dep.man_bits,
+                n_elems: dep.n_elems,
+            };
+            floatvec_slots.push(alloc.allocate(dep.spec.shards, &key.to_string())?);
+        }
+        let allocated = topology.total_crossbars() - alloc.available();
+
+        // Phase 2: everything validated and placed — spawn the pools
+        // (infallible).
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
         let mut multiply = HashMap::new();
-        for (dep, engine) in multiply_engines {
+        for ((dep, engine), slots) in multiply_engines.into_iter().zip(multiply_slots) {
             let pool = ShardPool::launch(
                 MultiplyWorkload::new(engine, dep.n_bits),
-                dep.shards,
+                placement(slots),
                 &metrics,
                 &mut workers,
             );
-            let queue = Arc::clone(pool.queue());
+            // The batcher flushes through a pool clone so its batches ride
+            // the same router (and device accounting) as everything else.
+            let batcher_pool = pool.clone();
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            workers.push(std::thread::spawn(move || batcher_loop(dep, rx, queue)));
+            workers.push(std::thread::spawn(move || batcher_loop(dep, rx, batcher_pool)));
             multiply.insert(
                 dep.n_bits,
                 MultiplyFront {
                     tx,
-                    tenant: TenantPool { pool, max_queue_tiles: dep.max_queue_tiles },
+                    tenant: TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles },
                 },
             );
         }
         let mut matvec = HashMap::new();
-        for (dep, engine) in matvec_engines {
+        for ((dep, engine), slots) in matvec_engines.into_iter().zip(matvec_slots) {
             let shape = (dep.n_bits, dep.n_elems);
-            let pool =
-                ShardPool::launch(MatVecWorkload::new(engine), dep.shards, &metrics, &mut workers);
-            matvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
+            let pool = ShardPool::launch(
+                MatVecWorkload::new(engine),
+                placement(slots),
+                &metrics,
+                &mut workers,
+            );
+            matvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
         }
         let mut matmul = HashMap::new();
-        for (dep, engine) in matmul_engines {
+        for ((dep, engine), slots) in matmul_engines.into_iter().zip(matmul_slots) {
             let shape = (dep.n_bits, dep.k);
             let pool = ShardPool::launch(
                 MatMulWorkload::new(engine, dep.panel_cols),
-                dep.shards,
+                placement(slots),
                 &metrics,
                 &mut workers,
             );
-            matmul.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
+            matmul.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
         }
         let mut floatvec = HashMap::new();
-        for (dep, engine) in floatvec_engines {
+        for ((dep, engine), slots) in floatvec_engines.into_iter().zip(floatvec_slots) {
             let shape = (dep.exp_bits, dep.man_bits, dep.n_elems);
             let pool = ShardPool::launch(
                 FloatVecWorkload::new(engine),
-                dep.shards,
+                placement(slots),
                 &metrics,
                 &mut workers,
             );
-            floatvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.max_queue_tiles });
+            floatvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
         }
         Ok(Self {
             multiply,
@@ -418,12 +517,87 @@ impl Coordinator {
             workers,
             metrics,
             tickets: AtomicU64::new(0),
+            topology,
+            policy,
+            allocated,
         })
     }
 
     /// Service metrics.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The device topology every pool was placed on.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Point-in-time placement report: device capacity, then each
+    /// workload's crossbar slots, bank lanes (with queued / in-flight
+    /// tiles and resident staged panels), and modeled staging traffic.
+    /// This is what the CLI `topology` subcommand prints.
+    pub fn placement_report(&self) -> String {
+        fn tenant_lines<W: Workload>(out: &mut String, pool: &ShardPool<W>) {
+            let key = pool.workload().key();
+            let wl = pool.counters();
+            out.push_str(&format!(
+                "\n  workload[{key}] shards={} lanes={} staged_words={} restage_words={} \
+                 cross_channel_words={} transfer_cycles={} locality_hits={}",
+                pool.slots().len(),
+                pool.lane_count(),
+                wl.staged_words.load(Ordering::Relaxed),
+                wl.restage_words.load(Ordering::Relaxed),
+                wl.cross_channel_words.load(Ordering::Relaxed),
+                wl.transfer_cycles.load(Ordering::Relaxed),
+                wl.locality_hits.load(Ordering::Relaxed),
+            ));
+            for lane in pool.lane_status() {
+                out.push_str(&format!(
+                    "\n    lane[{key}:{}] crossbars={} queued={} in_flight={} resident={}",
+                    lane.bank,
+                    lane.crossbars,
+                    lane.queued,
+                    lane.backlog - lane.queued,
+                    lane.resident,
+                ));
+            }
+        }
+        let mut out = format!(
+            "device {} banks={} crossbars={} policy={} allocated={}/{}",
+            self.topology,
+            self.topology.total_banks(),
+            self.topology.total_crossbars(),
+            match self.policy {
+                PlacementPolicy::Locality => "locality",
+                PlacementPolicy::Random => "random",
+            },
+            self.allocated,
+            self.topology.total_crossbars(),
+        );
+        // HashMap order is nondeterministic; render sorted by key so the
+        // report is stable across runs.
+        let mut pools_m: Vec<_> = self.multiply.values().collect();
+        pools_m.sort_by_key(|f| f.tenant.pool.workload().key());
+        for front in pools_m {
+            tenant_lines(&mut out, &front.tenant.pool);
+        }
+        let mut pools_v: Vec<_> = self.matvec.values().collect();
+        pools_v.sort_by_key(|t| t.pool.workload().key());
+        for tenant in pools_v {
+            tenant_lines(&mut out, &tenant.pool);
+        }
+        let mut pools_mm: Vec<_> = self.matmul.values().collect();
+        pools_mm.sort_by_key(|t| t.pool.workload().key());
+        for tenant in pools_mm {
+            tenant_lines(&mut out, &tenant.pool);
+        }
+        let mut pools_f: Vec<_> = self.floatvec.values().collect();
+        pools_f.sort_by_key(|t| t.pool.workload().key());
+        for tenant in pools_f {
+            tenant_lines(&mut out, &tenant.pool);
+        }
+        out
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -519,7 +693,10 @@ impl Coordinator {
                 let panel_cols = tenant.pool.workload().panel_cols();
                 let planned = div_ceil(a.len(), shard_rows) * div_ceil(p, panel_cols);
                 tenant.admit(key, planned, (a.len() * p) as u64)?;
-                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                // The ticket doubles as the request's staging-affinity
+                // seed: its row tiles share per-tile affinity keys, so
+                // the locality router keeps each A panel on one bank.
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission((a.len() * p) as u64);
                 // Degenerate outputs complete at admission.
@@ -530,7 +707,7 @@ impl Coordinator {
                 let enqueued = Instant::now();
                 // 2-D tiling: row tiles x output-column panels scattered
                 // over the shard pool, gathered into the row-major output.
-                for tile in tenant.pool.workload().plan(a, b, p, reply_tx, enqueued) {
+                for tile in tenant.pool.workload().plan(a, b, p, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
                         return Err(Error::Runtime("matmul shard pool shut down".into()));
                     }
@@ -672,11 +849,12 @@ impl Coordinator {
 
 /// Per-width batching stage: accumulates jobs until the crossbar is full
 /// or the deadline fires, then hands the whole batch to the shard pool as
-/// one tile.
+/// one tile (through the pool's router, so flushed batches are placed and
+/// traffic-accounted like every other tile).
 fn batcher_loop(
     dep: MultiplyDeployment,
     rx: mpsc::Receiver<WorkerMsg>,
-    queue: Arc<BatchQueue<MultiplyTile>>,
+    pool: ShardPool<MultiplyWorkload>,
 ) {
     let mut batcher: RowBatcher<MultiplyJob> = RowBatcher::new(dep.rows, dep.max_wait);
     loop {
@@ -693,11 +871,11 @@ fn batcher_loop(
             Err(mpsc::RecvTimeoutError::Timeout) => (batcher.poll_deadline(Instant::now()), false),
         };
         if let Some(batch) = ready {
-            queue.push(batch);
+            pool.push(batch);
         }
         if shutdown {
             // Shards drain whatever is still queued, then exit.
-            queue.close();
+            pool.close();
             return;
         }
     }
@@ -713,8 +891,7 @@ mod tests {
             rows,
             max_wait: Duration::from_millis(wait_ms),
             config: EngineConfig::MultPim,
-            shards,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(shards),
         }
     }
 
@@ -724,7 +901,7 @@ mod tests {
         shard_rows: usize,
         shards: usize,
     ) -> MatVecDeployment {
-        MatVecDeployment { n_bits, n_elems, shard_rows, shards, max_queue_tiles: 0 }
+        MatVecDeployment { n_bits, n_elems, shard_rows, spec: DeploymentSpec::new(shards) }
     }
 
     fn mm_deployment(
@@ -734,7 +911,7 @@ mod tests {
         panel_cols: usize,
         shards: usize,
     ) -> MatMulDeployment {
-        MatMulDeployment { n_bits, k, shard_rows, panel_cols, shards, max_queue_tiles: 0 }
+        MatMulDeployment { n_bits, k, shard_rows, panel_cols, spec: DeploymentSpec::new(shards) }
     }
 
     fn fv_deployment(
@@ -744,7 +921,13 @@ mod tests {
         shard_rows: usize,
         shards: usize,
     ) -> FloatVecDeployment {
-        FloatVecDeployment { exp_bits, man_bits, n_elems, shard_rows, shards, max_queue_tiles: 0 }
+        FloatVecDeployment {
+            exp_bits,
+            man_bits,
+            n_elems,
+            shard_rows,
+            spec: DeploymentSpec::new(shards),
+        }
     }
 
     #[test]
@@ -1025,6 +1208,93 @@ mod tests {
         );
     }
 
+    /// Capacity-aware admission at launch: a deployment set whose total
+    /// shard demand exceeds the device's crossbar count is the typed
+    /// [`Error::CapacityExceeded`] naming the first deployment that did
+    /// not fit — never a silently oversubscribed launch.
+    #[test]
+    fn oversubscribed_launch_rejected_with_typed_error() {
+        let device = DeviceConfig::new(Topology::parse("1x1x2x2").unwrap()); // 4 crossbars
+        match Coordinator::launch_on(device, &[], &[mv_deployment(8, 2, 2, 5)], &[], &[]) {
+            Err(Error::CapacityExceeded { deployment, requested, available }) => {
+                assert_eq!(deployment, "matvec N=8 n=2");
+                assert_eq!(requested, 5);
+                assert_eq!(available, 4);
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
+        }
+        // Two deployments that fit individually but not together: the
+        // second one is named.
+        let device = DeviceConfig::new(Topology::parse("1x1x2x2").unwrap());
+        match Coordinator::launch_on(
+            device,
+            &[deployment(8, 4, 1, 3)],
+            &[mv_deployment(8, 2, 2, 2)],
+            &[],
+            &[],
+        ) {
+            Err(Error::CapacityExceeded { deployment, requested, available }) => {
+                assert_eq!(deployment, "matvec N=8 n=2");
+                assert_eq!(requested, 2);
+                assert_eq!(available, 1);
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
+        }
+        // Exactly at capacity: launches (and serves) fine.
+        let device = DeviceConfig::new(Topology::parse("1x1x2x2").unwrap());
+        let coord =
+            Coordinator::launch_on(device, &[], &[mv_deployment(8, 2, 2, 4)], &[], &[]).unwrap();
+        assert_eq!(coord.matvec(8, vec![vec![1, 2]], vec![3, 4]).unwrap(), vec![11]);
+        coord.shutdown();
+    }
+
+    /// A hierarchical launch serves every tenant correctly, spreads the
+    /// pools across banks, and the placement report renders per-lane
+    /// occupancy.
+    #[test]
+    fn hierarchical_launch_serves_and_reports() {
+        let device = DeviceConfig::new(Topology::parse("2x2x2x4").unwrap());
+        let coord = Coordinator::launch_on(
+            device,
+            &[deployment(8, 8, 1, 2)],
+            &[mv_deployment(8, 2, 2, 8)],
+            &[mm_deployment(8, 2, 2, 2, 4)],
+            &[],
+        )
+        .unwrap();
+        // Results are identical to the flat launch: placement never
+        // changes arithmetic.
+        assert_eq!(coord.multiply(8, 12, 11).unwrap(), 132);
+        let rows: Vec<Vec<u64>> = (0..9u64).map(|r| vec![r, r + 2]).collect();
+        let out = coord.matvec(8, rows.clone(), vec![3, 5]).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], crate::fixedpoint::inner_product_mod(8, row, &[3, 5]), "row {r}");
+        }
+        assert_eq!(
+            coord.matmul(8, vec![vec![1, 2], vec![3, 4]], vec![vec![5, 6], vec![7, 8]]).unwrap(),
+            vec![vec![19, 22], vec![43, 50]]
+        );
+        // The matvec pool's 8 shards landed on 8 distinct banks (the
+        // allocator sweeps round-robin), so it serves from 8 lanes.
+        let report = coord.placement_report();
+        assert!(report.contains("device 2x2x2x4 banks=8 crossbars=32 policy=locality"), "{report}");
+        assert!(report.contains("allocated=14/32"), "{report}");
+        assert!(report.contains("workload[matvec N=8 n=2] shards=8 lanes=8"), "{report}");
+        assert!(report.contains("lane[matvec N=8 n=2:c0.g0.b0]"), "{report}");
+        // Device traffic was modeled for the served tiles.
+        let wl = coord.metrics().workload(WorkloadKey::MatVec { n_bits: 8, n_elems: 2 }).unwrap();
+        assert!(wl.staged_words.load(Ordering::Relaxed) > 0);
+        // Per-level aggregation covers every executed tile exactly.
+        let tiles = wl.tiles.load(Ordering::Relaxed);
+        assert_eq!(wl.bank_stats().iter().map(|(_, s)| s.tiles).sum::<u64>(), tiles);
+        assert_eq!(wl.channel_stats().iter().map(|(_, s)| s.tiles).sum::<u64>(), tiles);
+        // The snapshot carries the per-level utilization lines.
+        let snap = coord.metrics().snapshot();
+        assert!(snap.contains("device[matvec N=8 n=2]"), "{snap}");
+        assert!(snap.contains("channel[matvec N=8 n=2:c0]"), "{snap}");
+        coord.shutdown();
+    }
+
     /// Admission control: a request needing more tiles than the
     /// queue-depth limit is rejected with the typed overload error, the
     /// rejection is counted (and rendered), and admission counters never
@@ -1032,7 +1302,7 @@ mod tests {
     #[test]
     fn overloaded_matvec_rejected_with_retry_hint() {
         let mut dep = mv_deployment(8, 2, 2, 1);
-        dep.max_queue_tiles = 3;
+        dep.spec.max_queue_tiles = 3;
         let coord = Coordinator::launch(&[], &[dep], &[], &[]).unwrap();
         // 10 rows at shard_rows = 2 need 5 tiles > limit 3: rejected even
         // on an empty queue, with the excess as the retry hint.
@@ -1063,7 +1333,7 @@ mod tests {
     #[test]
     fn overloaded_matmul_rejected() {
         let mut dep = mm_deployment(8, 2, 2, 2, 1);
-        dep.max_queue_tiles = 2;
+        dep.spec.max_queue_tiles = 2;
         let coord = Coordinator::launch(&[], &[], &[dep], &[]).unwrap();
         // 4x2 * 2x4: 2 row tiles x 2 column panels = 4 rects > limit 2.
         let a: Vec<Vec<u64>> = (0..4u64).map(|r| vec![r, r + 1]).collect();
@@ -1091,7 +1361,7 @@ mod tests {
     #[test]
     fn overloaded_floatvec_rejected_and_zero_limit_unbounded() {
         let mut dep = fv_deployment(4, 3, 2, 1, 1);
-        dep.max_queue_tiles = 1;
+        dep.spec.max_queue_tiles = 1;
         let coord = Coordinator::launch(&[], &[], &[], &[dep]).unwrap();
         let rows = vec![vec![0u64, 0]; 3]; // 3 tiles at shard_rows = 1
         assert!(matches!(
@@ -1115,7 +1385,7 @@ mod tests {
     #[test]
     fn multiply_limit_admits_when_queue_empty() {
         let mut dep = deployment(8, 4, 1, 1);
-        dep.max_queue_tiles = 1;
+        dep.spec.max_queue_tiles = 1;
         let coord = Coordinator::launch(&[dep], &[], &[], &[]).unwrap();
         assert_eq!(coord.multiply(8, 7, 6).unwrap(), 42);
         coord.shutdown();

@@ -29,6 +29,7 @@ use super::engine::{
 use super::pool::{TileCost, Workload, WorkloadKey};
 use super::server::Response;
 use crate::algorithms::matmul::plan_tiles;
+use crate::device::TileTraffic;
 use crate::Result;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -66,6 +67,11 @@ impl Workload for MultiplyWorkload {
 
     fn shard(&self) -> ShardExecutor {
         self.engine.shard()
+    }
+
+    fn traffic(&self, batch: &MultiplyTile) -> TileTraffic {
+        // Two fresh operand words per pair; nothing survives the batch.
+        TileTraffic::fresh(2 * batch.len() as u64)
     }
 
     fn execute(
@@ -172,6 +178,12 @@ impl Workload for MatVecWorkload {
         self.engine.shard()
     }
 
+    fn traffic(&self, tile: &MatVecTile) -> TileTraffic {
+        // Row words plus the shared vector, all staged fresh per tile.
+        let n = self.engine.n_elems() as u64;
+        TileTraffic::fresh(tile.len as u64 * n + n)
+    }
+
     fn execute(
         &self,
         shard: &mut ChainShard,
@@ -213,6 +225,10 @@ pub struct MatMulTile {
     reply: ReplySender,
     /// Admission timestamp of the parent request (queue-wait accounting).
     enqueued: Instant,
+    /// Staging-affinity key: all panels of one row tile share it, so the
+    /// locality router lands them on the bank where the tile's A rows are
+    /// already resident and only the fresh B panel moves.
+    affinity: u64,
 }
 
 /// The GEMM tenant for one deployed `(n_bits, k)` shape: computes
@@ -245,7 +261,10 @@ impl MatMulWorkload {
     /// Plan an admitted request into its 2-D tile grid sharing one
     /// gather over the flattened row-major `m x p` output. `a` must be
     /// non-empty and `p >= 1` (degenerate shapes are answered at
-    /// admission).
+    /// admission). `ticket` is a request-unique token (the coordinator's
+    /// admission counter): tiles of the *same* row tile across panels
+    /// share a staging-affinity key derived from it, while distinct
+    /// requests never alias each other's staged panels.
     pub fn plan(
         &self,
         a: Vec<Vec<u64>>,
@@ -253,6 +272,7 @@ impl MatMulWorkload {
         p: usize,
         reply: ReplySender,
         enqueued: Instant,
+        ticket: u64,
     ) -> Vec<MatMulTile> {
         let m = a.len();
         let rects = plan_tiles(m, p, self.engine.shard_rows(), self.panel_cols);
@@ -284,12 +304,15 @@ impl MatMulWorkload {
                     a: Arc::clone(&a),
                     row0: rect.row0,
                     rows: rect.rows,
-                        xs: Arc::clone(&panels[rect.col0 / self.panel_cols]),
+                    xs: Arc::clone(&panels[rect.col0 / self.panel_cols]),
                     col0: rect.col0,
                     p,
                     gather: Arc::clone(&gather),
                     reply: reply.clone(),
                     enqueued,
+                    // Golden-ratio mix keeps per-request keys distinct
+                    // while every panel of one row tile shares the key.
+                    affinity: ticket.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ rect.row0 as u64,
                 }
             })
             .collect()
@@ -381,6 +404,12 @@ impl Workload for FloatVecWorkload {
         self.engine.shard()
     }
 
+    fn traffic(&self, tile: &FloatVecTile) -> TileTraffic {
+        // Packed row words plus the shared packed vector, fresh per tile.
+        let n = self.engine.n_elems() as u64;
+        TileTraffic::fresh(tile.len as u64 * n + n)
+    }
+
     fn execute(
         &self,
         shard: &mut FloatVecShard,
@@ -414,6 +443,17 @@ impl Workload for MatMulWorkload {
 
     fn shard(&self) -> ChainShard {
         self.engine.shard()
+    }
+
+    fn traffic(&self, tile: &MatMulTile) -> TileTraffic {
+        // The A rows are the reusable staging (shared by every panel of
+        // this row tile, keyed by the affinity); the B panel is fresh.
+        let k = self.engine.n_elems() as u64;
+        TileTraffic {
+            affinity: Some(tile.affinity),
+            resident_words: tile.rows as u64 * k,
+            fresh_words: tile.xs.len() as u64 * k,
+        }
     }
 
     fn execute(

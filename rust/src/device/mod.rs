@@ -1,0 +1,36 @@
+//! The hierarchical PIM device model the serving layer places work onto.
+//!
+//! The paper's §VI matrix-vector optimization assumes many crossbars
+//! computing in parallel; real PIM parts organize those crossbars as a
+//! deep hierarchy — Device → Channel → BankGroup → Bank → crossbar —
+//! with per-level bandwidth limits (the HBM-PIM shape). This module is
+//! that hierarchy as data:
+//!
+//! * [`Topology`] — the device shape (`channels x bank_groups x banks x
+//!   crossbars_per_bank`) with per-level cycles-per-word
+//!   [`TransferCosts`] and total crossbar capacity;
+//! * [`Allocator`] — launch-time placement: each deployment receives
+//!   distinct [`CrossbarPath`] slots spread round-robin across banks, and
+//!   a launch that exceeds the device's capacity is the typed
+//!   [`Error::CapacityExceeded`](crate::Error::CapacityExceeded);
+//! * [`Router`] — serve-time placement: every tile is assigned a bank
+//!   lane. Tiles declare their [`TileTraffic`] (reusable resident words
+//!   keyed by an affinity, plus always-fresh words), and the router
+//!   models the staging traffic each choice costs — under the default
+//!   [`PlacementPolicy::Locality`] a GEMM row tile lands on the bank
+//!   where its A panel is already staged, while the
+//!   [`PlacementPolicy::Random`] baseline re-stages panels across the
+//!   hierarchy and pays the modeled cross-channel cost.
+//!
+//! The degenerate [`Topology::flat`] device (`1x1x1xN`) is one bank
+//! holding every crossbar: placement collapses to a single shared queue
+//! and serving is bit-identical to the flat shard pool this model
+//! replaced.
+
+pub mod placement;
+pub mod topology;
+
+pub use placement::{
+    Allocator, DeviceConfig, Placement, PlacementPolicy, RouteDecision, Router, TileTraffic,
+};
+pub use topology::{BankPath, CrossbarPath, Topology, TransferCosts};

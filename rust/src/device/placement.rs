@@ -1,0 +1,448 @@
+//! Placement and routing over a [`Topology`]: capacity-aware crossbar
+//! allocation at launch, and per-tile bank selection (with modeled
+//! restage traffic) at serve time.
+//!
+//! * [`Allocator`] hands each deployment a set of [`CrossbarPath`] slots,
+//!   spreading them round-robin across banks so a multi-shard deployment
+//!   can exploit bank-level parallelism; a launch that asks for more
+//!   crossbars than the device has left is a typed
+//!   [`Error::CapacityExceeded`](crate::Error::CapacityExceeded), never a
+//!   silent oversubscription.
+//! * [`Router`] picks the bank lane each tile executes on. Under
+//!   [`PlacementPolicy::Locality`] a tile that declares an affinity key
+//!   (a GEMM row tile's staged A panel) is routed back to the bank where
+//!   that panel is already resident, so only the fresh words (the panel's
+//!   B vectors) move; under [`PlacementPolicy::Random`] the tile lands on
+//!   a seeded-random bank and any resident words it needs are re-staged —
+//!   charged at the modeled per-level transfer cost, and counted as
+//!   cross-channel restage words when the move crosses a channel.
+
+use super::topology::{BankPath, CrossbarPath, Topology};
+use crate::util::SplitMix64;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// How the router assigns tiles to bank lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Route a tile with a known affinity back to the bank where its
+    /// resident words were last staged; everything else round-robins.
+    /// This is the production default.
+    #[default]
+    Locality,
+    /// Seeded-random bank per affinity-carrying tile — the locality-off
+    /// baseline the bench and EXPERIMENTS.md §Topology compare against.
+    Random,
+}
+
+impl PlacementPolicy {
+    /// Parse a CLI policy name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "locality" => Ok(Self::Locality),
+            "random" => Ok(Self::Random),
+            other => Err(Error::BadParameter(format!(
+                "placement policy must be locality|random, got {other}"
+            ))),
+        }
+    }
+}
+
+/// The device a coordinator launch targets: its topology plus the
+/// tile-routing policy.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// The device shape and transfer-cost model.
+    pub topology: Topology,
+    /// The tile-routing policy.
+    pub policy: PlacementPolicy,
+}
+
+impl DeviceConfig {
+    /// The degenerate single-bank device holding `n` crossbars —
+    /// bit-identical serving to the flat pre-hierarchy pool.
+    pub fn flat(n: usize) -> Self {
+        Self { topology: Topology::flat(n), policy: PlacementPolicy::Locality }
+    }
+
+    /// A device with the given topology and the default locality policy.
+    pub fn new(topology: Topology) -> Self {
+        Self { topology, policy: PlacementPolicy::Locality }
+    }
+}
+
+/// Launch-time crossbar allocator: assigns each deployment distinct
+/// crossbars, round-robin across the device's banks.
+#[derive(Debug)]
+pub struct Allocator {
+    topology: Arc<Topology>,
+    /// Crossbars already handed out per bank (flat bank index).
+    used: Vec<usize>,
+    /// Bank cursor for the round-robin sweep.
+    next_bank: usize,
+    allocated: usize,
+}
+
+impl Allocator {
+    /// An allocator over an empty device.
+    pub fn new(topology: Arc<Topology>) -> Self {
+        let banks = topology.total_banks();
+        Self { topology, used: vec![0; banks], next_bank: 0, allocated: 0 }
+    }
+
+    /// Crossbars not yet assigned to any deployment.
+    pub fn available(&self) -> usize {
+        self.topology.total_crossbars() - self.allocated
+    }
+
+    /// Assign `shards` crossbars to the deployment described by `what`,
+    /// one per bank in a round-robin sweep (so a deployment's shards
+    /// spread over as many banks as possible). A request that does not
+    /// fit the remaining capacity is the typed
+    /// [`Error::CapacityExceeded`](crate::Error::CapacityExceeded).
+    pub fn allocate(&mut self, shards: usize, what: &str) -> Result<Vec<CrossbarPath>> {
+        if shards > self.available() {
+            return Err(Error::CapacityExceeded {
+                deployment: what.to_string(),
+                requested: shards,
+                available: self.available(),
+            });
+        }
+        let banks = self.used.len();
+        let per_bank = self.topology.crossbars_per_bank();
+        let mut slots = Vec::with_capacity(shards);
+        while slots.len() < shards {
+            // The capacity check above guarantees a free slot exists, so
+            // this sweep always terminates.
+            let bank = self.next_bank;
+            self.next_bank = (self.next_bank + 1) % banks;
+            if self.used[bank] < per_bank {
+                slots.push(CrossbarPath {
+                    bank: self.topology.bank_path(bank),
+                    crossbar: self.used[bank],
+                });
+                self.used[bank] += 1;
+                self.allocated += 1;
+            }
+        }
+        Ok(slots)
+    }
+}
+
+/// One deployment's placement on the device: its crossbar slots, the
+/// shared topology, and the routing policy. This is what a
+/// [`ShardPool`](crate::coordinator::ShardPool) launches over.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// The crossbars this deployment owns, in shard-index order.
+    pub slots: Vec<CrossbarPath>,
+    /// The device topology (shared across deployments).
+    pub topology: Arc<Topology>,
+    /// The tile-routing policy.
+    pub policy: PlacementPolicy,
+}
+
+impl Placement {
+    /// A flat single-bank placement of `n` crossbars — the degenerate
+    /// point every pre-hierarchy test runs at.
+    pub fn flat(n: usize) -> Self {
+        let topology = Arc::new(Topology::flat(n));
+        let slots = (0..n.max(1))
+            .map(|i| CrossbarPath { bank: topology.bank_path(0), crossbar: i })
+            .collect();
+        Self { slots, topology, policy: PlacementPolicy::Locality }
+    }
+}
+
+/// What a tile is about to stage, declared by its
+/// [`Workload`](crate::coordinator::Workload) so the router can model the
+/// transfer traffic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TileTraffic {
+    /// Identity of the tile's reusable staged data (a GEMM request's A
+    /// row-tile panel). Tiles sharing an affinity key reuse each other's
+    /// staging when they land on the same bank; `None` means nothing is
+    /// reusable.
+    pub affinity: Option<u64>,
+    /// Words that are reusable across tiles with the same affinity (the
+    /// A panel): staged on first placement, re-staged — at modeled
+    /// transfer cost — whenever the tile lands on a bank where they are
+    /// not resident.
+    pub resident_words: u64,
+    /// Words staged fresh for every tile regardless of placement (the
+    /// per-panel B vectors, a matvec tile's rows).
+    pub fresh_words: u64,
+}
+
+impl TileTraffic {
+    /// Traffic for a tile that stages `words` fresh each execution and
+    /// reuses nothing.
+    pub fn fresh(words: u64) -> Self {
+        Self { affinity: None, resident_words: 0, fresh_words: words }
+    }
+}
+
+/// One routing decision: the chosen lane plus the modeled traffic it
+/// cost, folded into the workload's device counters by the pool.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    /// Index of the chosen bank lane (into the pool's lane list).
+    pub lane: usize,
+    /// Words staged into the bank for this tile (fresh words, plus the
+    /// resident words whenever they were not already there).
+    pub staged_words: u64,
+    /// Resident words that had to be re-staged because the tile landed
+    /// away from their bank (zero on first staging and on locality hits).
+    pub restage_words: u64,
+    /// The subset of `restage_words` whose move crossed a channel.
+    pub cross_channel_words: u64,
+    /// Modeled transfer cycles for all staged words at the per-level
+    /// costs.
+    pub transfer_cycles: u64,
+    /// Whether the tile found its resident words already in place.
+    pub locality_hit: bool,
+}
+
+/// Routing residency the affinity map is bounded to; past this the map
+/// is cleared (modeled as a device-wide staging flush).
+const RESIDENCY_CAP: usize = 8192;
+
+/// The per-pool tile router: picks a bank lane for every pushed tile and
+/// models the staging traffic the choice costs.
+#[derive(Debug)]
+pub struct Router {
+    topology: Arc<Topology>,
+    policy: PlacementPolicy,
+    /// The distinct banks the pool's slots occupy, in lane order.
+    lanes: Vec<BankPath>,
+    state: Mutex<RouterState>,
+}
+
+#[derive(Debug)]
+struct RouterState {
+    /// affinity key → lane index where its resident words live.
+    residency: HashMap<u64, usize>,
+    /// Round-robin cursor for tiles without a resident lane.
+    next: usize,
+    /// Seeded generator for [`PlacementPolicy::Random`] — deterministic,
+    /// so locality-off experiments reproduce exactly.
+    rng: SplitMix64,
+}
+
+impl Router {
+    /// A router over the given bank lanes.
+    pub fn new(topology: Arc<Topology>, policy: PlacementPolicy, lanes: Vec<BankPath>) -> Self {
+        assert!(!lanes.is_empty(), "a router needs at least one bank lane");
+        Self {
+            topology,
+            policy,
+            lanes,
+            state: Mutex::new(RouterState {
+                residency: HashMap::new(),
+                next: 0,
+                rng: SplitMix64::new(0x504C_4143_452E), // "PLACE."
+            }),
+        }
+    }
+
+    /// Bank lanes this router spreads over.
+    pub fn lanes(&self) -> &[BankPath] {
+        &self.lanes
+    }
+
+    /// Affinity keys currently resident per lane (placement-report
+    /// surface).
+    pub fn resident_by_lane(&self) -> Vec<usize> {
+        let state = self.state.lock().unwrap();
+        let mut counts = vec![0usize; self.lanes.len()];
+        for &lane in state.residency.values() {
+            counts[lane] += 1;
+        }
+        counts
+    }
+
+    /// Route one tile: choose its bank lane and model the staging
+    /// traffic. With a single lane (the flat topology) the choice is
+    /// forced and only host-staging traffic is modeled — behaviorally
+    /// identical to the pre-hierarchy single queue.
+    pub fn route(&self, traffic: &TileTraffic) -> RouteDecision {
+        let mut state = self.state.lock().unwrap();
+        let n = self.lanes.len();
+        if state.residency.len() > RESIDENCY_CAP {
+            state.residency.clear();
+        }
+        let (lane, resident_at) = match traffic.affinity {
+            Some(key) => match self.policy {
+                PlacementPolicy::Locality => match state.residency.get(&key) {
+                    // Locality: follow the resident panel.
+                    Some(&lane) => (lane, Some(lane)),
+                    None => {
+                        let lane = state.next;
+                        state.next = (state.next + 1) % n;
+                        state.residency.insert(key, lane);
+                        (lane, None)
+                    }
+                },
+                PlacementPolicy::Random => {
+                    let lane = state.rng.below(n as u64) as usize;
+                    let prev = state.residency.insert(key, lane);
+                    (lane, prev)
+                }
+            },
+            None => {
+                let lane = state.next;
+                state.next = (state.next + 1) % n;
+                (lane, None)
+            }
+        };
+        drop(state);
+
+        let to = self.lanes[lane];
+        let fresh_cycles = self.topology.host_load_cycles(traffic.fresh_words);
+        match resident_at {
+            // The resident words are already on this bank: only the fresh
+            // words move.
+            Some(prev) if prev == lane => RouteDecision {
+                lane,
+                staged_words: traffic.fresh_words,
+                restage_words: 0,
+                cross_channel_words: 0,
+                transfer_cycles: fresh_cycles,
+                locality_hit: true,
+            },
+            // Resident elsewhere: re-stage them across the hierarchy at
+            // the modeled per-level cost.
+            Some(prev) => {
+                let from = self.lanes[prev];
+                let crossed = self.topology.crosses_channel(from, to);
+                RouteDecision {
+                    lane,
+                    staged_words: traffic.fresh_words + traffic.resident_words,
+                    restage_words: traffic.resident_words,
+                    cross_channel_words: if crossed { traffic.resident_words } else { 0 },
+                    transfer_cycles: fresh_cycles
+                        + self.topology.move_cycles(from, to, traffic.resident_words),
+                    locality_hit: false,
+                }
+            }
+            // First staging: everything comes from the host.
+            None => RouteDecision {
+                lane,
+                staged_words: traffic.fresh_words + traffic.resident_words,
+                restage_words: 0,
+                cross_channel_words: 0,
+                transfer_cycles: fresh_cycles
+                    + self.topology.host_load_cycles(traffic.resident_words),
+                locality_hit: false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(policy: PlacementPolicy) -> Router {
+        let topology = Arc::new(Topology::parse("2x2x2x1").unwrap());
+        let lanes: Vec<BankPath> =
+            (0..topology.total_banks()).map(|i| topology.bank_path(i)).collect();
+        Router::new(topology, policy, lanes)
+    }
+
+    #[test]
+    fn capacity_allocation_spreads_and_rejects() {
+        let topology = Arc::new(Topology::parse("2x2x2x4").unwrap());
+        let mut alloc = Allocator::new(Arc::clone(&topology));
+        assert_eq!(alloc.available(), 32);
+        // 8 shards on 8 banks: one crossbar per bank.
+        let slots = alloc.allocate(8, "gemm").unwrap();
+        assert_eq!(slots.len(), 8);
+        let banks: std::collections::BTreeSet<BankPath> =
+            slots.iter().map(|s| s.bank).collect();
+        assert_eq!(banks.len(), 8, "spread over every bank");
+        assert_eq!(alloc.available(), 24);
+        // The rest fits exactly...
+        alloc.allocate(24, "rest").unwrap();
+        assert_eq!(alloc.available(), 0);
+        // ...and one more crossbar is the typed capacity error.
+        match alloc.allocate(1, "overflow") {
+            Err(Error::CapacityExceeded { deployment, requested, available }) => {
+                assert_eq!(deployment, "overflow");
+                assert_eq!(requested, 1);
+                assert_eq!(available, 0);
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn allocation_slots_are_distinct() {
+        let topology = Arc::new(Topology::parse("2x2x2x4").unwrap());
+        let mut alloc = Allocator::new(Arc::clone(&topology));
+        let mut all = alloc.allocate(20, "a").unwrap();
+        all.extend(alloc.allocate(12, "b").unwrap());
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len(), "no crossbar assigned twice");
+    }
+
+    #[test]
+    fn locality_routes_affinity_back_to_its_bank() {
+        let r = router(PlacementPolicy::Locality);
+        let t = TileTraffic { affinity: Some(7), resident_words: 100, fresh_words: 10 };
+        let first = r.route(&t);
+        assert!(!first.locality_hit, "first placement stages from the host");
+        assert_eq!(first.staged_words, 110);
+        assert_eq!(first.restage_words, 0);
+        assert_eq!(first.cross_channel_words, 0);
+        // Every subsequent tile with the same affinity follows the panel.
+        for _ in 0..5 {
+            let d = r.route(&t);
+            assert_eq!(d.lane, first.lane);
+            assert!(d.locality_hit);
+            assert_eq!(d.staged_words, 10, "only the fresh words move");
+            assert_eq!(d.restage_words, 0);
+        }
+        // A different affinity takes the next lane (round-robin), and
+        // affinity-free tiles keep rotating.
+        let other = r.route(&TileTraffic { affinity: Some(8), resident_words: 1, fresh_words: 0 });
+        assert_ne!(other.lane, first.lane);
+    }
+
+    #[test]
+    fn random_policy_charges_cross_channel_restage() {
+        let r = router(PlacementPolicy::Random);
+        let t = TileTraffic { affinity: Some(42), resident_words: 64, fresh_words: 4 };
+        let mut cross = 0u64;
+        let mut restaged = 0u64;
+        for _ in 0..64 {
+            let d = r.route(&t);
+            cross += d.cross_channel_words;
+            restaged += d.restage_words;
+        }
+        // Over 64 seeded-random placements on 8 banks the panel moves
+        // many times, and some moves cross the 2-channel boundary.
+        assert!(restaged > 0, "random placement re-stages the panel");
+        assert!(cross > 0, "some re-stages cross a channel");
+        assert!(cross <= restaged, "cross-channel words are a subset");
+    }
+
+    #[test]
+    fn single_lane_is_degenerate() {
+        let topology = Arc::new(Topology::flat(4));
+        let r = Router::new(
+            Arc::clone(&topology),
+            PlacementPolicy::Locality,
+            vec![topology.bank_path(0)],
+        );
+        for i in 0..10u64 {
+            let d = r.route(&TileTraffic { affinity: Some(i % 2), resident_words: 8, fresh_words: 2 });
+            assert_eq!(d.lane, 0);
+            assert_eq!(d.restage_words, 0, "one bank never re-stages");
+            assert_eq!(d.cross_channel_words, 0);
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! The hierarchical PIM device topology: Device → Channel → BankGroup →
+//! Bank → crossbar, with per-level transfer costs.
+//!
+//! Real PIM parts are not a flat list of crossbars: HBM-PIM-class devices
+//! nest compute units under banks, banks under bank groups, bank groups
+//! under channels, and every level has its own bandwidth to the one
+//! above. [`Topology`] models exactly that shape — the dimensions give
+//! the device its crossbar capacity, and [`TransferCosts`] gives each
+//! level a cycles-per-word price the placement layer charges whenever
+//! operand words move through it.
+//!
+//! The degenerate `1x1x1xN` topology ([`Topology::flat`]) is one bank
+//! holding every crossbar: a pool placed on it behaves bit-identically to
+//! a flat worker list sharing one queue, which is what keeps the
+//! pre-hierarchy serving semantics (and every equivalence test) intact.
+
+use crate::{Error, Result};
+use std::fmt;
+
+/// Modeled cycles-per-word cost of each hierarchy link.
+///
+/// A word moving from the host into a bank pays every link on the way
+/// down (`channel + group + bank`); a word moving *between* banks pays
+/// the links up to the lowest common ancestor and back down, so a
+/// cross-channel move is the most expensive path the device has.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferCosts {
+    /// Device ↔ channel link, cycles per word.
+    pub channel_cpw: u64,
+    /// Channel ↔ bank-group link, cycles per word.
+    pub group_cpw: u64,
+    /// Bank-group ↔ bank link, cycles per word.
+    pub bank_cpw: u64,
+}
+
+impl Default for TransferCosts {
+    /// The default cost model: each level is twice as expensive as the
+    /// one below it (bank 1, group 2, channel 4 cycles/word), matching
+    /// the narrowing-bandwidth shape of an HBM-PIM stack.
+    fn default() -> Self {
+        Self { channel_cpw: 4, group_cpw: 2, bank_cpw: 1 }
+    }
+}
+
+/// Address of one bank inside the device hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BankPath {
+    /// Channel index.
+    pub channel: usize,
+    /// Bank-group index within the channel.
+    pub group: usize,
+    /// Bank index within the bank group.
+    pub bank: usize,
+}
+
+impl fmt::Display for BankPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}.g{}.b{}", self.channel, self.group, self.bank)
+    }
+}
+
+/// Address of one crossbar: its bank plus the slot within the bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CrossbarPath {
+    /// The bank holding this crossbar.
+    pub bank: BankPath,
+    /// Crossbar slot within the bank.
+    pub crossbar: usize,
+}
+
+impl fmt::Display for CrossbarPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.x{}", self.bank, self.crossbar)
+    }
+}
+
+/// The device shape: `channels x bank_groups x banks x
+/// crossbars_per_bank`, plus the per-level transfer cost model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    channels: usize,
+    bank_groups: usize,
+    banks: usize,
+    crossbars_per_bank: usize,
+    costs: TransferCosts,
+}
+
+impl Topology {
+    /// A topology with the given dimensions and the default
+    /// [`TransferCosts`]. Every dimension must be at least 1.
+    pub fn new(
+        channels: usize,
+        bank_groups: usize,
+        banks: usize,
+        crossbars_per_bank: usize,
+    ) -> Result<Self> {
+        Self::with_costs(channels, bank_groups, banks, crossbars_per_bank, TransferCosts::default())
+    }
+
+    /// A topology with explicit per-level transfer costs.
+    pub fn with_costs(
+        channels: usize,
+        bank_groups: usize,
+        banks: usize,
+        crossbars_per_bank: usize,
+        costs: TransferCosts,
+    ) -> Result<Self> {
+        for (dim, what) in [
+            (channels, "channels"),
+            (bank_groups, "bank groups"),
+            (banks, "banks"),
+            (crossbars_per_bank, "crossbars per bank"),
+        ] {
+            if dim == 0 {
+                return Err(Error::BadParameter(format!(
+                    "topology needs at least one of each level, got 0 {what}"
+                )));
+            }
+        }
+        Ok(Self { channels, bank_groups, banks, crossbars_per_bank, costs })
+    }
+
+    /// The degenerate single-bank topology `1x1x1xN`: one channel, one
+    /// bank group, one bank holding all `n` crossbars. A pool placed on
+    /// it serves bit-identically to the flat pre-hierarchy shard list.
+    pub fn flat(n: usize) -> Self {
+        Self {
+            channels: 1,
+            bank_groups: 1,
+            banks: 1,
+            crossbars_per_bank: n.max(1),
+            costs: TransferCosts::default(),
+        }
+    }
+
+    /// Parse a `CxGxBxX` dimension string (e.g. `2x2x2x4`) into a
+    /// topology with the default cost model.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let dims: Vec<usize> = spec
+            .split('x')
+            .map(|d| {
+                d.trim().parse::<usize>().map_err(|_| {
+                    Error::BadParameter(format!(
+                        "topology `{spec}`: `{d}` is not a dimension (want CxGxBxX, e.g. 2x2x2x4)"
+                    ))
+                })
+            })
+            .collect::<Result<_>>()?;
+        if dims.len() != 4 {
+            return Err(Error::BadParameter(format!(
+                "topology `{spec}` has {} dimensions, want 4 (CxGxBxX, e.g. 2x2x2x4)",
+                dims.len()
+            )));
+        }
+        Self::new(dims[0], dims[1], dims[2], dims[3])
+    }
+
+    /// Channels in the device.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Bank groups per channel.
+    pub fn bank_groups(&self) -> usize {
+        self.bank_groups
+    }
+
+    /// Banks per bank group.
+    pub fn banks(&self) -> usize {
+        self.banks
+    }
+
+    /// Crossbars per bank.
+    pub fn crossbars_per_bank(&self) -> usize {
+        self.crossbars_per_bank
+    }
+
+    /// The per-level transfer cost model.
+    pub fn costs(&self) -> TransferCosts {
+        self.costs
+    }
+
+    /// Banks in the whole device.
+    pub fn total_banks(&self) -> usize {
+        self.channels * self.bank_groups * self.banks
+    }
+
+    /// Crossbars in the whole device — the capacity every launch is
+    /// admitted against.
+    pub fn total_crossbars(&self) -> usize {
+        self.total_banks() * self.crossbars_per_bank
+    }
+
+    /// The bank at flat index `idx` (row-major over channel, group,
+    /// bank). Panics if `idx >= total_banks()`.
+    pub fn bank_path(&self, idx: usize) -> BankPath {
+        assert!(idx < self.total_banks(), "bank index {idx} out of range");
+        BankPath {
+            channel: idx / (self.bank_groups * self.banks),
+            group: (idx / self.banks) % self.bank_groups,
+            bank: idx % self.banks,
+        }
+    }
+
+    /// Modeled cycles to stage `words` operand words from the host into
+    /// any bank: every link on the path down is paid once per word.
+    pub fn host_load_cycles(&self, words: u64) -> u64 {
+        words * (self.costs.channel_cpw + self.costs.group_cpw + self.costs.bank_cpw)
+    }
+
+    /// Modeled cycles to move `words` already-staged words from bank
+    /// `from` to bank `to`: each word pays every link up to the lowest
+    /// common ancestor and back down. Zero when the banks coincide.
+    pub fn move_cycles(&self, from: BankPath, to: BankPath, words: u64) -> u64 {
+        let per_word = if from == to {
+            0
+        } else if from.channel != to.channel {
+            2 * (self.costs.bank_cpw + self.costs.group_cpw + self.costs.channel_cpw)
+        } else if from.group != to.group {
+            2 * (self.costs.bank_cpw + self.costs.group_cpw)
+        } else {
+            2 * self.costs.bank_cpw
+        };
+        words * per_word
+    }
+
+    /// Whether a `from → to` move crosses a channel boundary — the
+    /// traffic the locality-aware placement exists to avoid.
+    pub fn crosses_channel(&self, from: BankPath, to: BankPath) -> bool {
+        from.channel != to.channel
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{}x{}x{}",
+            self.channels, self.bank_groups, self.banks, self.crossbars_per_bank
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        let t = Topology::parse("2x2x2x4").unwrap();
+        assert_eq!(t.channels(), 2);
+        assert_eq!(t.bank_groups(), 2);
+        assert_eq!(t.banks(), 2);
+        assert_eq!(t.crossbars_per_bank(), 4);
+        assert_eq!(t.total_banks(), 8);
+        assert_eq!(t.total_crossbars(), 32);
+        assert_eq!(t.to_string(), "2x2x2x4");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Topology::parse("2x2x2").is_err(), "three dims");
+        assert!(Topology::parse("2x2x2x4x1").is_err(), "five dims");
+        assert!(Topology::parse("2xax2x4").is_err(), "non-numeric");
+        assert!(Topology::parse("2x0x2x4").is_err(), "zero dim");
+        assert!(Topology::parse("").is_err(), "empty");
+    }
+
+    #[test]
+    fn flat_is_one_bank() {
+        let t = Topology::flat(6);
+        assert_eq!(t.total_banks(), 1);
+        assert_eq!(t.total_crossbars(), 6);
+        assert_eq!(t.bank_path(0), BankPath { channel: 0, group: 0, bank: 0 });
+        // Flat never hides a zero-capacity device.
+        assert_eq!(Topology::flat(0).total_crossbars(), 1);
+    }
+
+    #[test]
+    fn bank_paths_enumerate_row_major() {
+        let t = Topology::parse("2x2x2x1").unwrap();
+        let paths: Vec<BankPath> = (0..t.total_banks()).map(|i| t.bank_path(i)).collect();
+        assert_eq!(paths[0], BankPath { channel: 0, group: 0, bank: 0 });
+        assert_eq!(paths[1], BankPath { channel: 0, group: 0, bank: 1 });
+        assert_eq!(paths[2], BankPath { channel: 0, group: 1, bank: 0 });
+        assert_eq!(paths[4], BankPath { channel: 1, group: 0, bank: 0 });
+        assert_eq!(paths[7], BankPath { channel: 1, group: 1, bank: 1 });
+        // Every path is distinct.
+        let mut sorted = paths.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), paths.len());
+    }
+
+    #[test]
+    fn transfer_costs_scale_with_distance() {
+        let t = Topology::parse("2x2x2x4").unwrap();
+        let b = |i: usize| t.bank_path(i);
+        // Host staging pays the whole path down: (4 + 2 + 1) per word.
+        assert_eq!(t.host_load_cycles(10), 70);
+        // Same bank: free.
+        assert_eq!(t.move_cycles(b(0), b(0), 10), 0);
+        // Sibling banks, same group: 2 * bank link.
+        assert_eq!(t.move_cycles(b(0), b(1), 10), 20);
+        // Same channel, different group: 2 * (bank + group).
+        assert_eq!(t.move_cycles(b(0), b(2), 10), 60);
+        // Cross channel: 2 * (bank + group + channel) — the worst path.
+        assert_eq!(t.move_cycles(b(0), b(4), 10), 140);
+        assert!(t.crosses_channel(b(0), b(4)));
+        assert!(!t.crosses_channel(b(0), b(2)));
+    }
+}

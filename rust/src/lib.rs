@@ -23,6 +23,11 @@
 //!   multipliers, ripple adders, the fused matrix-vector engine (§VI),
 //!   and the full-precision float matvec pipeline
 //!   ([`algorithms::floatvec`]).
+//! * [`device`] — the hierarchical PIM device model: the
+//!   Device → Channel → BankGroup → Bank → crossbar [`device::Topology`]
+//!   with per-level transfer costs, the capacity-aware launch-time
+//!   crossbar [`device::Allocator`], and the locality-aware tile
+//!   [`device::Router`] the serving layer places every pool onto.
 //! * [`schedule`] — the partition-parallel circuit scheduler: a compiler
 //!   backend (placement → list scheduling → lowering) from the SSA
 //!   [`schedule::Circuit`] IR to legal partition-parallel programs; the
@@ -63,6 +68,7 @@
 pub mod algorithms;
 pub mod coordinator;
 pub mod crossbar;
+pub mod device;
 pub mod fixedpoint;
 pub mod isa;
 pub mod report;
@@ -112,8 +118,22 @@ pub enum Error {
     Overloaded {
         /// The overloaded workload.
         key: coordinator::WorkloadKey,
-        /// Queue excess in tiles — a retry hint, not a guarantee.
+        /// Backlog excess in tiles (queued **plus** in-flight on the
+        /// executing shards) — a retry hint, not a guarantee.
         retry_after_tiles: u64,
+    },
+    /// A launch asked for more crossbar shards than the device topology
+    /// has unassigned. Deployments own their crossbars exclusively
+    /// (resident staging), so an oversubscribed launch is rejected here —
+    /// at [`Coordinator::launch_on`](coordinator::Coordinator::launch_on)
+    /// — rather than silently time-slicing the device.
+    CapacityExceeded {
+        /// The deployment whose allocation failed.
+        deployment: String,
+        /// Crossbars that deployment requested.
+        requested: usize,
+        /// Crossbars the device still had unassigned.
+        available: usize,
     },
     /// Runtime (golden-model executor) failure.
     Runtime(String),
@@ -141,6 +161,13 @@ impl std::fmt::Display for Error {
                     f,
                     "workload {key} overloaded: retry after ~{retry_after_tiles} queued \
                      tiles drain"
+                )
+            }
+            Error::CapacityExceeded { deployment, requested, available } => {
+                write!(
+                    f,
+                    "deployment {deployment} requested {requested} crossbar shards but the \
+                     device topology has only {available} unassigned"
                 )
             }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),

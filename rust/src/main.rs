@@ -13,8 +13,17 @@
 //! multpim serve    [--requests 4096] [--shards 4] [--mv-requests 8] [--mv-rows 256]
 //!                  [--mm-requests 4] [--mm-rows 64] [--fv-requests 4] [--fv-rows 128]
 //!                  [--fv-format fp32|bf16|fp16]
+//!                  [--topology CxGxBxX] [--placement locality|random]
 //!                                     # multiply + matvec + matmul + float-matvec
-//!                                     # shard-pool demo with per-workload metrics
+//!                                     # shard-pool demo with per-workload metrics;
+//!                                     # --topology places the pools on a
+//!                                     # channels x groups x banks x crossbars
+//!                                     # device (default: flat single bank)
+//! multpim topology [--topology 2x2x2x4] [--placement locality|random] [--shards 4]
+//!                                     # launch the serve tenants on a hierarchical
+//!                                     # device, run a small mixed burst, and print
+//!                                     # the placement report (per-level capacity,
+//!                                     # lane occupancy, modeled restage traffic)
 //! multpim schedule-stats [--exp 8] [--man 23] [--elems 8] [--budget FILE]
 //!                                     # partition-parallel float MAC schedule
 //!                                     # stats; with --budget, fail when the
@@ -29,7 +38,8 @@ use multpim::algorithms::Multiplier;
 use multpim::coordinator::server::{
     FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
 };
-use multpim::coordinator::{Coordinator, EngineConfig, Request, Response};
+use multpim::coordinator::{Coordinator, DeploymentSpec, EngineConfig, Request, Response};
+use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::util::SplitMix64;
@@ -128,8 +138,7 @@ fn run(args: &[String]) -> Result<()> {
                     k,
                     shard_rows: m.clamp(1, 64),
                     panel_cols: p.clamp(1, 8),
-                    shards: 2,
-                    max_queue_tiles: 0,
+                    spec: DeploymentSpec::new(2),
                 }],
                 &[],
             )?;
@@ -259,39 +268,46 @@ fn run(args: &[String]) -> Result<()> {
                     )))
                 }
             };
-            let coord = Coordinator::launch(
-                &[MultiplyDeployment {
-                    n_bits: 32,
-                    rows: 256,
-                    max_wait: Duration::from_millis(2),
-                    config: EngineConfig::MultPim,
-                    shards,
-                    max_queue_tiles: 0,
-                }],
-                &[MatVecDeployment {
-                    n_bits: 32,
-                    n_elems: 8,
-                    shard_rows: 64,
-                    shards: shards.max(1),
-                    max_queue_tiles: 0,
-                }],
-                &[MatMulDeployment {
-                    n_bits: 32,
-                    k: 8,
-                    shard_rows: 64,
-                    panel_cols: 4,
-                    shards: shards.max(1),
-                    max_queue_tiles: 0,
-                }],
-                &[FloatVecDeployment {
-                    exp_bits: fmt.exp_bits,
-                    man_bits: fmt.man_bits,
-                    n_elems: 8,
-                    shard_rows: 64,
-                    shards: shards.max(1),
-                    max_queue_tiles: 0,
-                }],
-            )?;
+            let multiplies = [MultiplyDeployment {
+                n_bits: 32,
+                rows: 256,
+                max_wait: Duration::from_millis(2),
+                config: EngineConfig::MultPim,
+                spec: DeploymentSpec::new(shards),
+            }];
+            let matvecs = [MatVecDeployment {
+                n_bits: 32,
+                n_elems: 8,
+                shard_rows: 64,
+                spec: DeploymentSpec::new(shards.max(1)),
+            }];
+            let matmuls = [MatMulDeployment {
+                n_bits: 32,
+                k: 8,
+                shard_rows: 64,
+                panel_cols: 4,
+                spec: DeploymentSpec::new(shards.max(1)),
+            }];
+            let floatvecs = [FloatVecDeployment {
+                exp_bits: fmt.exp_bits,
+                man_bits: fmt.man_bits,
+                n_elems: 8,
+                shard_rows: 64,
+                spec: DeploymentSpec::new(shards.max(1)),
+            }];
+            // --topology places the pools on a hierarchical device (the
+            // launch is capacity-checked); without it the flat degenerate
+            // single-bank device serves exactly like the old pool.
+            let coord = match opt(args, "--topology") {
+                Some(spec) => {
+                    let mut device = DeviceConfig::new(Topology::parse(&spec)?);
+                    if let Some(policy) = opt(args, "--placement") {
+                        device.policy = PlacementPolicy::parse(&policy)?;
+                    }
+                    Coordinator::launch_on(device, &multiplies, &matvecs, &matmuls, &floatvecs)?
+                }
+                None => Coordinator::launch(&multiplies, &matvecs, &matmuls, &floatvecs)?,
+            };
             let mut rng = SplitMix64::new(0xE0);
             let mut rxs = Vec::with_capacity(requests as usize);
             let mut expected = Vec::with_capacity(requests as usize);
@@ -415,6 +431,64 @@ fn run(args: &[String]) -> Result<()> {
                  ({fv_format}, {fv_rows} rows x 8 elems each, bit-exact)"
             );
             println!("metrics: {}", coord.metrics().snapshot());
+            if opt(args, "--topology").is_some() {
+                println!("placement: {}", coord.placement_report());
+            }
+            coord.shutdown();
+            Ok(())
+        }
+        Some("topology") => {
+            let spec = opt(args, "--topology").unwrap_or_else(|| "2x2x2x4".into());
+            let shards = opt_u64(args, "--shards", 4) as usize;
+            let mut device = DeviceConfig::new(Topology::parse(&spec)?);
+            if let Some(policy) = opt(args, "--placement") {
+                device.policy = PlacementPolicy::parse(&policy)?;
+            }
+            let coord = Coordinator::launch_on(
+                device,
+                &[MultiplyDeployment {
+                    n_bits: 32,
+                    rows: 64,
+                    max_wait: Duration::from_millis(1),
+                    config: EngineConfig::MultPim,
+                    spec: DeploymentSpec::new(shards.max(1)),
+                }],
+                &[MatVecDeployment {
+                    n_bits: 32,
+                    n_elems: 8,
+                    shard_rows: 16,
+                    spec: DeploymentSpec::new(shards.max(1)),
+                }],
+                &[MatMulDeployment {
+                    n_bits: 32,
+                    k: 8,
+                    shard_rows: 16,
+                    panel_cols: 4,
+                    spec: DeploymentSpec::new(shards.max(1)),
+                }],
+                &[],
+            )?;
+            // A small mixed burst so the report shows live residency and
+            // modeled staging traffic, not an idle device.
+            let mut rng = SplitMix64::new(0x70_70);
+            for _ in 0..32 {
+                let (a, b) = (rng.bits(32), rng.bits(32));
+                assert_eq!(coord.multiply(32, a, b)?, a * b);
+            }
+            for _ in 0..2 {
+                let rows: Vec<Vec<u64>> =
+                    (0..64).map(|_| (0..8).map(|_| rng.bits(32)).collect()).collect();
+                let x: Vec<u64> = (0..8).map(|_| rng.bits(32)).collect();
+                coord.matvec(32, rows, x)?;
+            }
+            for _ in 0..2 {
+                let a: Vec<Vec<u64>> =
+                    (0..32).map(|_| (0..8).map(|_| rng.bits(32)).collect()).collect();
+                let b: Vec<Vec<u64>> =
+                    (0..8).map(|_| (0..8).map(|_| rng.bits(32)).collect()).collect();
+                coord.matmul(32, a, b)?;
+            }
+            println!("{}", coord.placement_report());
             coord.shutdown();
             Ok(())
         }
@@ -526,7 +600,8 @@ fn run(args: &[String]) -> Result<()> {
         _ => {
             eprintln!(
                 "usage: multpim <multiply|matvec|matmul|float-matvec|report|verify|serve|\
-                 schedule-stats|trace> [options]\nsee `rust/src/main.rs` docs for details"
+                 topology|schedule-stats|trace> [options]\nsee `rust/src/main.rs` docs for \
+                 details"
             );
             Ok(())
         }

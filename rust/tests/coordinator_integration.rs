@@ -3,7 +3,7 @@
 
 use multpim::coordinator::server::{MatMulDeployment, MatVecDeployment, MultiplyDeployment};
 use multpim::coordinator::{
-    Coordinator, EngineConfig, PipelineModel, Request, Response, WorkloadKey,
+    Coordinator, DeploymentSpec, EngineConfig, PipelineModel, Request, Response, WorkloadKey,
 };
 use multpim::util::SplitMix64;
 use std::sync::atomic::Ordering;
@@ -16,8 +16,7 @@ fn deployment(n_bits: u32, rows: usize, wait_ms: u64, shards: usize) -> Multiply
         rows,
         max_wait: Duration::from_millis(wait_ms),
         config: EngineConfig::MultPim,
-        shards,
-        max_queue_tiles: 0,
+        spec: DeploymentSpec::new(shards),
     }
 }
 
@@ -57,16 +56,14 @@ fn mixed_width_routing() {
             n_bits: 16,
             n_elems: 4,
             shard_rows: 8,
-            shards: 2,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(2),
         }],
         &[MatMulDeployment {
             n_bits: 16,
             k: 2,
             shard_rows: 8,
             panel_cols: 2,
-            shards: 2,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(2),
         }],
         &[],
     )

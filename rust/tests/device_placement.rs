@@ -1,0 +1,292 @@
+//! The device hierarchy end-to-end: an explicit flat topology serves all
+//! four tenants bit-identically to the plain `Coordinator::launch` pool
+//! (the pre-hierarchy behavior) at every tile boundary, an oversubscribed
+//! launch is the typed capacity error rather than a silent
+//! oversubscription, and a seeded mixed-traffic run on a hierarchical
+//! device accounts per-bank / per-channel utilization exactly against
+//! each workload's totals and the global counters.
+
+use multpim::coordinator::server::{
+    FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
+};
+use multpim::coordinator::{Coordinator, DeploymentSpec, EngineConfig, WorkloadKey};
+use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
+use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
+use multpim::fixedpoint::inner_product_mod;
+use multpim::util::SplitMix64;
+use multpim::Error;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const N_BITS: u32 = 8;
+const K: u32 = 3;
+const SHARD_ROWS: usize = 4;
+const PANEL_COLS: usize = 2;
+const FV_EXP: u32 = 4;
+const FV_MAN: u32 = 3;
+
+fn mul_deployment(shards: usize) -> MultiplyDeployment {
+    MultiplyDeployment {
+        n_bits: N_BITS,
+        rows: 4,
+        max_wait: Duration::from_millis(1),
+        config: EngineConfig::MultPim,
+        spec: DeploymentSpec::new(shards),
+    }
+}
+
+fn mv_deployment(shards: usize) -> MatVecDeployment {
+    MatVecDeployment {
+        n_bits: N_BITS,
+        n_elems: K,
+        shard_rows: SHARD_ROWS,
+        spec: DeploymentSpec::new(shards),
+    }
+}
+
+fn mm_deployment(shards: usize) -> MatMulDeployment {
+    MatMulDeployment {
+        n_bits: N_BITS,
+        k: K,
+        shard_rows: SHARD_ROWS,
+        panel_cols: PANEL_COLS,
+        spec: DeploymentSpec::new(shards),
+    }
+}
+
+fn fv_deployment(shards: usize) -> FloatVecDeployment {
+    FloatVecDeployment {
+        exp_bits: FV_EXP,
+        man_bits: FV_MAN,
+        n_elems: K,
+        shard_rows: SHARD_ROWS,
+        spec: DeploymentSpec::new(shards),
+    }
+}
+
+fn random_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>> {
+    (0..rows).map(|_| (0..cols).map(|_| rng.bits(N_BITS)).collect()).collect()
+}
+
+fn random_float_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>> {
+    let fmt = FloatFormat::new(FV_EXP, FV_MAN);
+    (0..rows).map(|_| (0..cols).map(|_| rng.bits(fmt.total_bits())).collect()).collect()
+}
+
+/// The degenerate point the refactor must preserve: a `1x1x1xN` device
+/// behind `launch_on` serves every tenant bit-identically to the plain
+/// `Coordinator::launch` pool at every row-tile / column-panel boundary,
+/// and the goldens hold on both.
+#[test]
+fn flat_topology_serves_all_tenants_bit_identically() {
+    let muls = [mul_deployment(2)];
+    let mvs = [mv_deployment(2)];
+    let mms = [mm_deployment(2)];
+    let fvs = [fv_deployment(2)];
+    let plain = Coordinator::launch(&muls, &mvs, &mms, &fvs).unwrap();
+    let flat = Coordinator::launch_on(DeviceConfig::flat(8), &muls, &mvs, &mms, &fvs).unwrap();
+    assert_eq!(flat.topology().total_banks(), 1, "flat device is one bank");
+    assert_eq!(flat.topology().to_string(), "1x1x1x8");
+
+    let fmt = FloatFormat::new(FV_EXP, FV_MAN);
+    let mut rng = SplitMix64::new(0xF1A7_0601);
+    for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 4 * SHARD_ROWS] {
+        // Multiply: same product on both pools.
+        let (a, b) = (rng.bits(N_BITS), rng.bits(N_BITS));
+        assert_eq!(plain.multiply(N_BITS, a, b).unwrap(), a * b);
+        assert_eq!(flat.multiply(N_BITS, a, b).unwrap(), a * b);
+
+        // Matvec at the row-tile boundary.
+        let rows = random_matrix(&mut rng, m, K as usize);
+        let x: Vec<u64> = (0..K).map(|_| rng.bits(N_BITS)).collect();
+        let served_plain = plain.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+        let served_flat = flat.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+        assert_eq!(served_flat, served_plain, "m={m}: flat vs plain matvec");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(served_flat[r], inner_product_mod(N_BITS, row, &x), "m={m} row={r}");
+        }
+
+        // Matmul at the row-tile x column-panel boundary.
+        for p in [1usize, PANEL_COLS, 2 * PANEL_COLS + 1] {
+            let a = random_matrix(&mut rng, m, K as usize);
+            let b = random_matrix(&mut rng, K as usize, p);
+            let c_plain = plain.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+            let c_flat = flat.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+            assert_eq!(c_flat, c_plain, "m={m} p={p}: flat vs plain matmul");
+            for j in 0..p {
+                let col: Vec<u64> = b.iter().map(|b_row| b_row[j]).collect();
+                for (r, row) in c_flat.iter().enumerate() {
+                    assert_eq!(row[j], inner_product_mod(N_BITS, &a[r], &col), "C[{r}][{j}]");
+                }
+            }
+        }
+
+        // Float matvec at the row-tile boundary: bit-exact on both.
+        let rows = random_float_matrix(&mut rng, m, K as usize);
+        let x: Vec<u64> = random_float_matrix(&mut rng, 1, K as usize).remove(0);
+        let served_plain = plain.float_matvec(FV_EXP, FV_MAN, rows.clone(), x.clone()).unwrap();
+        let served_flat = flat.float_matvec(FV_EXP, FV_MAN, rows.clone(), x.clone()).unwrap();
+        assert_eq!(served_flat, served_plain, "m={m}: flat vs plain float matvec");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(served_flat[r], float_dot_ref(fmt, row, &x), "m={m} row={r}");
+        }
+    }
+
+    // One bank means one lane per pool, and no restage traffic anywhere.
+    let report = flat.placement_report();
+    assert!(report.contains("lanes=1"), "{report}");
+    for (key, wl) in flat.metrics().workloads() {
+        assert_eq!(wl.restage_words.load(Ordering::Relaxed), 0, "{key}: flat never re-stages");
+        assert_eq!(wl.cross_channel_words.load(Ordering::Relaxed), 0, "{key}");
+    }
+    plain.shutdown();
+    flat.shutdown();
+}
+
+/// A launch that asks for more crossbars than the device has left fails
+/// with the typed `Error::CapacityExceeded` naming the deployment — and a
+/// launch at exactly the remaining capacity still comes up serving.
+#[test]
+fn oversubscribed_launch_rejected_with_typed_error() {
+    // 1x1x2x2 holds 4 crossbars; multiply takes 2, matvec then asks for 3.
+    let device = || DeviceConfig::new(Topology::parse("1x1x2x2").unwrap());
+    match Coordinator::launch_on(device(), &[mul_deployment(2)], &[mv_deployment(3)], &[], &[]) {
+        Err(Error::CapacityExceeded { deployment, requested, available }) => {
+            assert!(deployment.contains("matvec"), "names the failing deployment: {deployment}");
+            assert_eq!(requested, 3);
+            assert_eq!(available, 2);
+        }
+        other => panic!("expected CapacityExceeded, got {other:?}"),
+    }
+    // The typed error renders readably.
+    let err =
+        Coordinator::launch_on(device(), &[mul_deployment(5)], &[], &[], &[]).unwrap_err();
+    assert!(err.to_string().contains("requested 5 crossbar shards"), "{err}");
+
+    // Exactly-full still launches and serves.
+    let coord =
+        Coordinator::launch_on(device(), &[mul_deployment(2)], &[mv_deployment(2)], &[], &[])
+            .unwrap();
+    assert_eq!(coord.multiply(N_BITS, 7, 9).unwrap(), 63);
+    assert_eq!(coord.matvec(N_BITS, vec![vec![1, 2, 3]], vec![4, 5, 6]).unwrap(), vec![32]);
+    coord.shutdown();
+}
+
+/// Seeded mixed traffic on a 2x2x2x4 device: per-bank and per-channel
+/// utilization counters split each workload's totals exactly, the labeled
+/// sums reproduce the globals, and the snapshot renders the per-level
+/// lines.
+#[test]
+fn hierarchical_mixed_traffic_accounts_per_level_exactly() {
+    let coord = Coordinator::launch_on(
+        DeviceConfig::new(Topology::parse("2x2x2x4").unwrap()),
+        &[mul_deployment(2)],
+        &[mv_deployment(8)],
+        &[mm_deployment(4)],
+        &[],
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(0x5EED_7417);
+    for _ in 0..16 {
+        let (a, b) = (rng.bits(N_BITS), rng.bits(N_BITS));
+        assert_eq!(coord.multiply(N_BITS, a, b).unwrap(), a * b);
+    }
+    for _ in 0..4 {
+        // 11 rows -> 3 tiles per request.
+        let rows = random_matrix(&mut rng, 2 * SHARD_ROWS + 3, K as usize);
+        let x: Vec<u64> = (0..K).map(|_| rng.bits(N_BITS)).collect();
+        let out = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], inner_product_mod(N_BITS, row, &x), "row {r}");
+        }
+    }
+    for _ in 0..4 {
+        // 5x5 output -> 2 row tiles x 3 panels = 6 tiles per request.
+        let p = 2 * PANEL_COLS + 1;
+        let a = random_matrix(&mut rng, SHARD_ROWS + 1, K as usize);
+        let b = random_matrix(&mut rng, K as usize, p);
+        let c = coord.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+        for j in 0..p {
+            let col: Vec<u64> = b.iter().map(|b_row| b_row[j]).collect();
+            for (r, row) in c.iter().enumerate() {
+                assert_eq!(row[j], inner_product_mod(N_BITS, &a[r], &col), "C[{r}][{j}]");
+            }
+        }
+    }
+
+    let m = coord.metrics();
+    let workloads = m.workloads();
+    assert_eq!(workloads.len(), 3);
+    for (key, wl) in &workloads {
+        let tiles = wl.tiles.load(Ordering::Relaxed);
+        let units = wl.units.load(Ordering::Relaxed);
+        let bank_tiles: u64 = wl.bank_stats().iter().map(|(_, s)| s.tiles).sum();
+        let bank_units: u64 = wl.bank_stats().iter().map(|(_, s)| s.units).sum();
+        assert_eq!(bank_tiles, tiles, "{key}: bank tiles sum to the workload total");
+        assert_eq!(bank_units, units, "{key}: bank units sum to the workload total");
+        let channel_tiles: u64 = wl.channel_stats().iter().map(|(_, s)| s.tiles).sum();
+        let channel_units: u64 = wl.channel_stats().iter().map(|(_, s)| s.units).sum();
+        assert_eq!(channel_tiles, tiles, "{key}: channel tiles sum to the workload total");
+        assert_eq!(channel_units, units, "{key}: channel units sum to the workload total");
+        assert!(wl.staged_words.load(Ordering::Relaxed) > 0, "{key}: routed traffic modeled");
+    }
+    // The labeled per-workload sums reproduce the globals exactly.
+    let wl_tiles: u64 = workloads.iter().map(|(_, wl)| wl.tiles.load(Ordering::Relaxed)).sum();
+    let wl_units: u64 = workloads.iter().map(|(_, wl)| wl.units.load(Ordering::Relaxed)).sum();
+    assert_eq!(wl_tiles, m.batches.load(Ordering::Relaxed));
+    assert_eq!(wl_units, m.products.load(Ordering::Relaxed));
+
+    // The matvec pool spreads over all 8 banks; fixed shapes pin its
+    // deterministic per-request tiling: 4 requests x 3 tiles.
+    let mv = m.workload(WorkloadKey::MatVec { n_bits: N_BITS, n_elems: K }).unwrap();
+    assert_eq!(mv.tiles.load(Ordering::Relaxed), 12);
+    assert!(mv.bank_stats().len() > 1, "hierarchical matvec uses multiple banks");
+
+    // GEMM locality: 4 requests x 2 row tiles = 8 first placements; the
+    // other 16 tiles follow their resident A panel (no restage).
+    let mm = m.workload(WorkloadKey::MatMul { n_bits: N_BITS, k: K }).unwrap();
+    assert_eq!(mm.tiles.load(Ordering::Relaxed), 24);
+    assert_eq!(mm.locality_hits.load(Ordering::Relaxed), 16);
+    assert_eq!(mm.restage_words.load(Ordering::Relaxed), 0);
+
+    // The per-level lines join the labeled snapshot.
+    let snapshot = m.snapshot();
+    assert!(snapshot.contains("device[matmul"), "{snapshot}");
+    assert!(snapshot.contains("channel[matvec N=8 n=3:c0]"), "{snapshot}");
+    assert!(snapshot.contains("bank[matvec N=8 n=3:c0.g0.b0]"), "{snapshot}");
+    coord.shutdown();
+}
+
+/// Locality vs seeded-random placement on the same hierarchical device:
+/// the results are placement-invariant, locality never re-stages a
+/// resident A panel, and the random baseline provably does.
+#[test]
+fn random_placement_restages_where_locality_does_not() {
+    let mut restage_by_policy = Vec::new();
+    let mut results = Vec::new();
+    for policy in [PlacementPolicy::Locality, PlacementPolicy::Random] {
+        let mut device = DeviceConfig::new(Topology::parse("2x2x2x4").unwrap());
+        device.policy = policy;
+        let coord = Coordinator::launch_on(device, &[], &[], &[mm_deployment(8)], &[]).unwrap();
+        let mut rng = SplitMix64::new(0x10CA_117F);
+        let mut outs = Vec::new();
+        for _ in 0..2 {
+            // 8x8 output -> 2 row tiles x 4 panels = 8 tiles per request.
+            let a = random_matrix(&mut rng, 2 * SHARD_ROWS, K as usize);
+            let b = random_matrix(&mut rng, K as usize, 4 * PANEL_COLS);
+            outs.push(coord.matmul(N_BITS, a, b).unwrap());
+        }
+        results.push(outs);
+        let wl = coord.metrics().workload(WorkloadKey::MatMul { n_bits: N_BITS, k: K }).unwrap();
+        let restage = wl.restage_words.load(Ordering::Relaxed);
+        assert!(
+            wl.cross_channel_words.load(Ordering::Relaxed) <= restage,
+            "cross-channel words are a subset of restage words"
+        );
+        restage_by_policy.push(restage);
+        coord.shutdown();
+    }
+    assert_eq!(results[0], results[1], "served GEMM is placement-invariant");
+    assert_eq!(restage_by_policy[0], 0, "locality keeps every A panel resident");
+    assert!(restage_by_policy[1] > 0, "random placement re-stages panels");
+}

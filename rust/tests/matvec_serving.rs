@@ -6,7 +6,7 @@
 //! work under concurrent load.
 
 use multpim::coordinator::server::MatVecDeployment;
-use multpim::coordinator::{ChainEngine, Coordinator, WorkloadKey};
+use multpim::coordinator::{ChainEngine, Coordinator, DeploymentSpec, WorkloadKey};
 use multpim::fixedpoint::inner_product_mod;
 use multpim::util::SplitMix64;
 use std::sync::atomic::Ordering;
@@ -37,8 +37,7 @@ fn served_matches_direct_at_tile_boundaries() {
             n_bits: N_BITS,
             n_elems: N_ELEMS,
             shard_rows: SHARD_ROWS,
-            shards: 3,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(3),
         }],
         &[],
         &[],
@@ -71,7 +70,7 @@ fn served_wraps_mod_2n_like_fixedpoint() {
     let n_elems = 8u32; // 8 * 255^2 > 2^16: the accumulator must wrap
     let coord = Coordinator::launch(
         &[],
-        &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, shards: 2, max_queue_tiles: 0 }],
+        &[MatVecDeployment { n_bits, n_elems, shard_rows: 4, spec: DeploymentSpec::new(2) }],
         &[],
         &[],
     )
@@ -104,8 +103,7 @@ fn concurrent_matvec_metrics_account_exactly() {
                 n_bits: N_BITS,
                 n_elems: N_ELEMS,
                 shard_rows: SHARD_ROWS,
-                shards: 4,
-                max_queue_tiles: 0,
+                spec: DeploymentSpec::new(4),
             }],
             &[],
             &[],

@@ -10,7 +10,7 @@ use multpim::coordinator::server::{
     FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
 };
 use multpim::coordinator::{
-    Coordinator, EngineConfig, FloatVecEngine, Request, Response, WorkloadKey,
+    Coordinator, DeploymentSpec, EngineConfig, FloatVecEngine, Request, Response, WorkloadKey,
 };
 use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
 use multpim::fixedpoint::{inner_product_mod, widening_mul, wrap};
@@ -31,8 +31,7 @@ fn mm_deployment(shards: usize) -> MatMulDeployment {
         k: K,
         shard_rows: SHARD_ROWS,
         panel_cols: PANEL_COLS,
-        shards,
-        max_queue_tiles: 0,
+        spec: DeploymentSpec::new(shards),
     }
 }
 
@@ -49,8 +48,7 @@ fn fv_deployment(shards: usize) -> FloatVecDeployment {
         man_bits: FV_MAN,
         n_elems: FV_ELEMS,
         shard_rows: FV_SHARD_ROWS,
-        shards,
-        max_queue_tiles: 0,
+        spec: DeploymentSpec::new(shards),
     }
 }
 
@@ -123,8 +121,7 @@ fn served_matmul_wraps_mod_2n() {
             k,
             shard_rows: 4,
             panel_cols: 2,
-            shards: 2,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(2),
         }],
         &[],
     )
@@ -154,10 +151,9 @@ fn unknown_deployments_rejected_with_typed_error() {
             rows: 4,
             max_wait: Duration::from_millis(1),
             config: EngineConfig::MultPim,
-            shards: 1,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(1),
         }],
-        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, shards: 1, max_queue_tiles: 0 }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 4, spec: DeploymentSpec::new(1) }],
         &[mm_deployment(1)],
         &[fv_deployment(1)],
     )
@@ -250,25 +246,22 @@ fn shutdown_drains_pending_tiles_for_every_workload() {
             rows: 1024,
             max_wait: Duration::from_secs(10),
             config: EngineConfig::MultPim,
-            shards: 1,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(1),
         }],
-        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, shards: 1, max_queue_tiles: 0 }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 3, shard_rows: 2, spec: DeploymentSpec::new(1) }],
         &[MatMulDeployment {
             n_bits: 8,
             k: 3,
             shard_rows: 2,
             panel_cols: 2,
-            shards: 1,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(1),
         }],
         &[FloatVecDeployment {
             exp_bits: FV_EXP,
             man_bits: FV_MAN,
             n_elems: FV_ELEMS,
             shard_rows: 2,
-            shards: 1,
-            max_queue_tiles: 0,
+            spec: DeploymentSpec::new(1),
         }],
     )
     .unwrap();
@@ -436,15 +429,13 @@ fn mixed_traffic_metrics_account_exactly() {
                 rows: 8,
                 max_wait: Duration::from_millis(1),
                 config: EngineConfig::MultPim,
-                shards: 2,
-                max_queue_tiles: 0,
+                spec: DeploymentSpec::new(2),
             }],
             &[MatVecDeployment {
                 n_bits: N_BITS,
                 n_elems: K,
                 shard_rows: SHARD_ROWS,
-                shards: 2,
-                max_queue_tiles: 0,
+                spec: DeploymentSpec::new(2),
             }],
             &[mm_deployment(2)],
             &[],
