@@ -6,12 +6,19 @@
 //! run) against the shard flow (resident crossbar + word-transposed
 //! restage + `CompiledProgram`), the §VI matvec direct flow against its
 //! compiled shard flow (`CompiledPipeline` + transposed/broadcast
-//! restage), and served GEMM (2-D tiled panel flow) against per-request
-//! matvec composition. These are the numbers tracked by EXPERIMENTS.md
-//! §Perf, §Matvec-Serving, and §GEMM; the acceptance bars are >= 1.5x
-//! products/sec for the multiply shard path at N=32, 4096 rows, >= 1.5x
-//! for served matvec at N=16, 64x64, and >= 1.5x for served GEMM at
-//! N=16, 64x64x64.
+//! restage), served GEMM (2-D tiled panel flow) against per-request
+//! matvec composition, topology-aware placement, and the double-buffered
+//! staging overlap model. These are the numbers tracked by EXPERIMENTS.md
+//! §Perf, §Matvec-Serving, §GEMM, §Topology, and §Overlap; the acceptance
+//! bars are >= 1.5x products/sec for the multiply shard path at N=32,
+//! 4096 rows, >= 1.5x for served matvec at N=16, 64x64, >= 1.5x for
+//! served GEMM at N=16, 64x64x64, >= 2x fewer cross-channel restage
+//! words under locality placement, and >= 1.3x modeled throughput from
+//! overlapped staging with bit-identical results.
+//!
+//! Sections run individually via `cargo bench --bench sim_perf -- <name>`
+//! where `<name>` is one of `gates`, `serving`, `matvec`, `gemm`,
+//! `topology`, `overlap`; with no argument every section runs.
 
 use std::sync::atomic::Ordering;
 
@@ -19,8 +26,8 @@ use multpim::algorithms::matmul::{plan_tiles, MultPimMatMul};
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
 use multpim::coordinator::{
-    ChainEngine, Coordinator, DeploymentSpec, EngineConfig, MatMulDeployment, MultiplyEngine,
-    WorkloadKey,
+    ChainEngine, Coordinator, DeploymentSpec, EngineConfig, MatMulDeployment, MatVecDeployment,
+    MultiplyEngine, WorkloadKey,
 };
 use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::inner_product_mod;
@@ -29,6 +36,39 @@ use multpim::sim::Simulator;
 use multpim::util::{SplitMix64, Stopwatch};
 
 fn main() {
+    // Optional section filter (the bench is harness = false, so argv
+    // arrives verbatim after `--`). Cargo's own `--bench`-style flags
+    // are skipped.
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let only = args.first().map(String::as_str);
+    let run_section = |name: &str| only.is_none() || only == Some(name);
+
+    if run_section("gates") {
+        hot_path();
+    }
+    if run_section("serving") {
+        multiply_serving();
+    }
+    if run_section("matvec") {
+        matvec_serving();
+    }
+    if run_section("gemm") || run_section("topology") {
+        let fx = gemm_fixture();
+        if run_section("gemm") {
+            gemm_serving(&fx);
+        }
+        if run_section("topology") {
+            topology_locality(&fx);
+        }
+    }
+    if run_section("overlap") {
+        staging_overlap();
+    }
+}
+
+/// Gate-application throughput on the simulator hot path, interpreted vs
+/// compiled.
+fn hot_path() {
     println!("=== simulator performance (hot path) ===");
     for (n, rows) in [(16u32, 1024usize), (32, 1024), (32, 4096), (32, 16384)] {
         let mult = MultPim::new(n);
@@ -71,10 +111,10 @@ fn main() {
             rows as f64 / secs2,
         );
     }
+}
 
-    // ----------------------------------------------------------------
-    // End-to-end serving path: seed flow vs shard flow, per batch.
-    // ----------------------------------------------------------------
+/// End-to-end multiply serving path: seed flow vs shard flow, per batch.
+fn multiply_serving() {
     println!("\n=== serving path: interpreted seed flow vs compiled shard flow ===");
     let mut headline_speedup = None;
     for (n, rows) in [(32u32, 1024usize), (32, 4096)] {
@@ -134,10 +174,10 @@ fn main() {
         headline >= 1.5,
         "serving speedup regressed below the 1.5x acceptance bar: {headline:.2}x"
     );
+}
 
-    // ----------------------------------------------------------------
-    // §VI matvec: direct engine flow vs served shard flow, per request.
-    // ----------------------------------------------------------------
+/// §VI matvec: direct engine flow vs served shard flow, per request.
+fn matvec_serving() {
     println!("\n=== matvec serving path: direct engine flow vs compiled shard flow ===");
     let mut matvec_headline = None;
     for (n, elems, m) in [(16u32, 16u32, 64usize), (16, 64, 64)] {
@@ -190,19 +230,34 @@ fn main() {
         mv_headline >= 1.5,
         "served matvec speedup regressed below the 1.5x acceptance bar: {mv_headline:.2}x"
     );
+}
 
-    // ----------------------------------------------------------------
-    // GEMM: per-request matvec composition vs the served 2-D panel flow.
-    // ----------------------------------------------------------------
-    println!("\n=== GEMM serving path: per-request matvec composition vs served panel flow ===");
+/// Shared inputs for the GEMM and topology sections: an `m x k` A and a
+/// `k x p` B at N=16, 64x64x64, panel width 16.
+struct GemmFixture {
+    n: u32,
+    k: u32,
+    m: usize,
+    p: usize,
+    panel_cols: usize,
+    a: Vec<Vec<u64>>,
+    b: Vec<Vec<u64>>,
+}
+
+fn gemm_fixture() -> GemmFixture {
     let (n, k, m, p) = (16u32, 64u32, 64usize, 64usize);
-    let panel_cols = 16usize;
-    let gemm = MultPimMatMul::new(n, k);
     let mut rng = SplitMix64::new(0x47454D);
-    let a: Vec<Vec<u64>> =
-        (0..m).map(|_| (0..k).map(|_| rng.bits(n)).collect()).collect();
-    let b: Vec<Vec<u64>> =
-        (0..k).map(|_| (0..p).map(|_| rng.bits(n)).collect()).collect();
+    let a: Vec<Vec<u64>> = (0..m).map(|_| (0..k).map(|_| rng.bits(n)).collect()).collect();
+    let b: Vec<Vec<u64>> = (0..k).map(|_| (0..p).map(|_| rng.bits(n)).collect()).collect();
+    GemmFixture { n, k, m, p, panel_cols: 16, a, b }
+}
+
+/// GEMM: per-request matvec composition vs the served 2-D panel flow.
+fn gemm_serving(fx: &GemmFixture) {
+    println!("\n=== GEMM serving path: per-request matvec composition vs served panel flow ===");
+    let (n, k, m, p, panel_cols) = (fx.n, fx.k, fx.m, fx.p, fx.panel_cols);
+    let (a, b) = (&fx.a, &fx.b);
+    let gemm = MultPimMatMul::new(n, k);
     let iters = 3;
 
     // Baseline (the flow GEMM traffic had before the matmul tenant): one
@@ -211,7 +266,7 @@ fn main() {
     // full restage of A for every single column of B.
     let mut sw_composed = Stopwatch::new();
     let out_composed = sw_composed
-        .run(iters, || gemm.compute(&a, &b).unwrap())
+        .run(iters, || gemm.compute(a, b).unwrap())
         .unwrap();
 
     // Served flow: the matmul tenant's 2-D tiling on a resident shard —
@@ -269,15 +324,23 @@ fn main() {
         gemm_speedup >= 1.5,
         "served GEMM speedup regressed below the 1.5x acceptance bar: {gemm_speedup:.2}x"
     );
+}
 
-    // ----------------------------------------------------------------
-    // Topology locality: the same served GEMM traffic on a hierarchical
-    // 2x2x2x4 device, locality-aware vs seeded-random tile placement.
-    // The numbers tracked by EXPERIMENTS.md §Topology; the acceptance
-    // bar is >= 2x fewer modeled cross-channel restage words under the
-    // locality policy.
-    // ----------------------------------------------------------------
+/// Topology locality: the same served GEMM traffic on a hierarchical
+/// 2x2x2x4 device, locality-aware vs seeded-random tile placement. The
+/// numbers tracked by EXPERIMENTS.md §Topology; the acceptance bar is
+/// >= 2x fewer modeled cross-channel restage words under the locality
+/// policy.
+fn topology_locality(fx: &GemmFixture) {
     println!("\n=== topology locality: served GEMM, locality-aware vs random placement ===");
+    let (n, k, p, panel_cols) = (fx.n, fx.k, fx.p, fx.panel_cols);
+    let (a, b) = (&fx.a, &fx.b);
+    // Ground truth for the placement-invariance check.
+    let cols: Vec<Vec<u64>> = (0..p).map(|j| b.iter().map(|row| row[j]).collect()).collect();
+    let expected: Vec<Vec<u64>> = a
+        .iter()
+        .map(|row| cols.iter().map(|col| inner_product_mod(n, row, col)).collect())
+        .collect();
     let requests = 2usize;
     let mut cross_by_policy = Vec::new();
     for policy in [PlacementPolicy::Locality, PlacementPolicy::Random] {
@@ -302,7 +365,7 @@ fn main() {
         .unwrap();
         for _ in 0..requests {
             let c = coord.matmul(n, a.clone(), b.clone()).unwrap();
-            assert_eq!(c, out_served, "served GEMM must be placement-invariant");
+            assert_eq!(c, expected, "served GEMM must be placement-invariant");
         }
         let wl = coord
             .metrics()
@@ -332,5 +395,100 @@ fn main() {
         random_cross >= 2 * locality_cross.max(1),
         "locality-aware placement must cut modeled cross-channel restage words by >= 2x: \
          locality={locality_cross} random={random_cross}"
+    );
+}
+
+/// Staging overlap: the same matvec tenant served with double-buffered
+/// staging on vs off on a 2x2x2x4 device. The numbers tracked by
+/// EXPERIMENTS.md §Overlap; the acceptance bars are bit-identical served
+/// results, staging fully hidden past each lane's first >= 64-row tile
+/// (stall cycles confined to cold starts), and >= 1.3x modeled
+/// throughput over the stop-and-stage baseline.
+fn staging_overlap() {
+    println!("\n=== staging overlap: double-buffered vs stop-and-stage, matvec on 2x2x2x4 ===");
+    let (n, elems, m, requests) = (32u32, 8u32, 256usize, 4usize);
+    let shards = 4usize;
+    let mut rng = SplitMix64::new(0x4F564C);
+    let reqs: Vec<(Vec<Vec<u64>>, Vec<u64>)> = (0..requests)
+        .map(|_| {
+            let rows: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
+            let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
+            (rows, x)
+        })
+        .collect();
+
+    // One 64-row tile stages `n_elems` packed matrix bit-planes plus the
+    // whole-word vector broadcast (8*32 + 8*32 = 512 words) through the
+    // 7-cycles/word host-to-bank write channel = 3584 cycles — under the
+    // chain's ~4292 compute cycles, so every tile after a lane's first
+    // hides its staging completely.
+    let topology = Topology::parse("2x2x2x4").unwrap();
+    let stage_tile = (u64::from(elems) * u64::from(n) * 2) * topology.stage_cpw();
+
+    let mut outputs: Vec<Vec<Vec<u64>>> = Vec::new();
+    let mut modeled = Vec::new();
+    for overlap in [true, false] {
+        let device = DeviceConfig::new(topology.clone()).with_overlap(overlap);
+        let coord = Coordinator::launch_on(
+            device,
+            &[],
+            &[MatVecDeployment {
+                n_bits: n,
+                n_elems: elems,
+                shard_rows: 64,
+                spec: DeploymentSpec::new(shards),
+            }],
+            &[],
+            &[],
+        )
+        .unwrap();
+        let outs: Vec<Vec<u64>> = reqs
+            .iter()
+            .map(|(rows, x)| coord.matvec(n, rows.clone(), x.clone()).unwrap())
+            .collect();
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatVec { n_bits: n, n_elems: elems })
+            .expect("matvec counters registered at launch");
+        let sim = wl.sim_cycles.load(Ordering::Relaxed);
+        let stage = wl.stage_cycles.load(Ordering::Relaxed);
+        let stall = wl.stall_cycles.load(Ordering::Relaxed);
+        let hidden = wl.hidden_words.load(Ordering::Relaxed);
+        println!(
+            "overlap={:<3} sim_cycles={sim:<7} stage_cycles={stage:<7} stall_cycles={stall:<7} hidden_words={hidden:<6} modeled_total={}",
+            if overlap { "on" } else { "off" },
+            sim + stall,
+        );
+        if overlap {
+            // Stalls come only from each lane's first tile, which has no
+            // previous compute to hide behind.
+            assert_eq!(stall % stage_tile, 0, "stalls come in whole cold-start tiles");
+            assert!(
+                stall <= shards as u64 * stage_tile,
+                "staging must be fully hidden past each lane's first 64-row tile: \
+                 stall_cycles={stall} > {shards} lanes x {stage_tile} cycles"
+            );
+            assert!(hidden > 0, "staged words must be hidden behind compute");
+        } else {
+            assert_eq!(stall, stage, "overlap off exposes every staging cycle");
+            assert_eq!(hidden, 0, "overlap off hides nothing");
+        }
+        outputs.push(outs);
+        modeled.push(sim + stall);
+        coord.shutdown();
+    }
+
+    assert_eq!(outputs[0], outputs[1], "overlap must never change served results");
+    let (on_total, off_total) = (modeled[0], modeled[1]);
+    let ratio = off_total as f64 / on_total as f64;
+    println!(
+        "\nmodeled serving cycles, stop-and-stage vs double-buffered: {off_total} vs {on_total} \
+         ({ratio:.2}x, acceptance bar: >= 1.3x)"
+    );
+    assert!(
+        off_total * 10 >= on_total * 13,
+        "double-buffered staging must model >= 1.3x throughput over stop-and-stage: \
+         off={off_total} on={on_total}"
     );
 }

@@ -229,11 +229,35 @@ impl<T> BatchQueue<T> {
         }
     }
 
-    /// Mark one popped item finished (the consumer's execute returned).
-    pub fn task_done(&self) {
+    /// Non-blocking pop: an item if one is immediately available, `None`
+    /// otherwise (empty *or* closed-and-drained — never waits). A
+    /// returned item counts as in flight exactly like
+    /// [`BatchQueue::pop`]'s. This is the double-buffer prefetch path:
+    /// a shard worker grabs tile `t+1` here so it can stage into the
+    /// shadow columns while tile `t` executes.
+    pub fn try_pop(&self) -> Option<T> {
         let mut state = self.state.lock().unwrap();
-        debug_assert!(state.in_flight > 0, "task_done without a matching pop");
-        state.in_flight = state.in_flight.saturating_sub(1);
+        let item = state.items.pop_front()?;
+        state.in_flight += 1;
+        Some(item)
+    }
+
+    /// Mark one popped item finished (the consumer's execute returned).
+    ///
+    /// Returns `false` on an unmatched call (no pop outstanding): the
+    /// count is clamped at zero instead of wrapping, so a double
+    /// `task_done` can dent [`BatchQueue::backlog`] by at most the calls
+    /// that actually happened — the caller is expected to surface the
+    /// `false` through a metrics counter rather than corrupt admission
+    /// control silently.
+    #[must_use]
+    pub fn task_done(&self) -> bool {
+        let mut state = self.state.lock().unwrap();
+        if state.in_flight == 0 {
+            return false;
+        }
+        state.in_flight -= 1;
+        true
     }
 
     /// Items currently waiting.
@@ -420,12 +444,50 @@ mod tests {
         // Popped but not done: out of the queue, still in the backlog.
         assert_eq!(q.len(), 1);
         assert_eq!(q.backlog(), 2);
-        q.task_done();
+        assert!(q.task_done());
         assert_eq!(q.backlog(), 1);
         let _ = q.pop().unwrap();
         assert_eq!(q.len(), 0);
         assert_eq!(q.backlog(), 1, "fully drained queue, one executing item");
-        q.task_done();
+        assert!(q.task_done());
+        assert_eq!(q.backlog(), 0);
+    }
+
+    /// A double `task_done` reports the underflow and clamps instead of
+    /// silently corrupting the backlog admission control reads.
+    #[test]
+    fn unmatched_task_done_clamps_and_reports() {
+        let q = BatchQueue::new();
+        assert!(!q.task_done(), "no pop outstanding");
+        assert_eq!(q.backlog(), 0, "clamped, not wrapped");
+        assert!(q.push(1u32));
+        let _ = q.pop().unwrap();
+        assert!(q.task_done(), "the matched call succeeds");
+        assert!(!q.task_done(), "the duplicate is reported");
+        assert_eq!(q.backlog(), 0);
+        // Later pops still pair up normally.
+        assert!(q.push(2));
+        let _ = q.pop().unwrap();
+        assert_eq!(q.backlog(), 1);
+        assert!(q.task_done());
+        assert_eq!(q.backlog(), 0);
+    }
+
+    /// `try_pop` never blocks, counts its items as in flight, and keeps
+    /// the close-and-drain contract.
+    #[test]
+    fn try_pop_is_non_blocking_and_counts_in_flight() {
+        let q = BatchQueue::new();
+        assert_eq!(q.try_pop(), None, "empty queue returns immediately");
+        assert!(q.push(1u32));
+        assert!(q.push(2));
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.backlog(), 2, "prefetched item is in flight");
+        q.close();
+        assert_eq!(q.try_pop(), Some(2), "closed queue still drains");
+        assert_eq!(q.try_pop(), None);
+        assert!(q.task_done());
+        assert!(q.task_done());
         assert_eq!(q.backlog(), 0);
     }
 

@@ -17,6 +17,24 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// What one tile's staging cost after the double-buffer model split it:
+/// computed by the pool worker (which knows the shard's previous compute
+/// window and the topology's staging cycles-per-word) and folded into the
+/// counters alongside the [`TileCost`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TileStaging {
+    /// Total write-channel cycles the tile's operand staging cost
+    /// (`stage_words * stage_cpw`).
+    pub stage_cycles: u64,
+    /// The staging cycles left on the critical path: everything with
+    /// overlap off, only the part that did not fit under the previous
+    /// tile's compute with overlap on.
+    pub stall_cycles: u64,
+    /// Operand words whose staging was hidden behind compute (zero with
+    /// overlap off).
+    pub hidden_words: u64,
+}
+
 /// Per-shard execution counters within one workload's pool.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ShardStats {
@@ -68,6 +86,20 @@ pub struct WorkloadCounters {
     /// Routed tiles whose affinity was already resident on the chosen
     /// bank (no resident words moved).
     pub locality_hits: AtomicU64,
+    /// The queuing share of `transfer_cycles`: cycles spent waiting for
+    /// hierarchy links already occupied by other deployments' staging
+    /// traffic (zero when the workload has its channels to itself).
+    pub link_wait_cycles: AtomicU64,
+    /// Write-channel cycles spent staging operand words into shards
+    /// (`stage_words * stage_cpw`, summed over executed tiles).
+    pub stage_cycles: AtomicU64,
+    /// The subset of `stage_cycles` left on the modeled critical path:
+    /// all of it with overlap off, only the exposed remainder with
+    /// double-buffered staging on.
+    pub stall_cycles: AtomicU64,
+    /// Operand words whose staging was hidden under the previous tile's
+    /// compute window (zero with overlap off).
+    pub hidden_words: AtomicU64,
     /// Per-shard occupancy, keyed by shard index within the pool.
     shards: Mutex<BTreeMap<usize, ShardStats>>,
     /// The crossbar slots this workload's pool was placed on, in shard
@@ -124,6 +156,7 @@ impl WorkloadCounters {
         self.restage_words.fetch_add(d.restage_words, Ordering::Relaxed);
         self.cross_channel_words.fetch_add(d.cross_channel_words, Ordering::Relaxed);
         self.transfer_cycles.fetch_add(d.transfer_cycles, Ordering::Relaxed);
+        self.link_wait_cycles.fetch_add(d.link_wait_cycles, Ordering::Relaxed);
         if d.locality_hit {
             self.locality_hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -192,6 +225,10 @@ pub struct Metrics {
     pub queue_wait_ns: AtomicU64,
     /// Units whose queue wait has been recorded.
     pub queued_units: AtomicU64,
+    /// Times a lane released a tile it never checked out (the
+    /// [`BatchQueue::task_done`](super::batcher::BatchQueue::task_done)
+    /// clamp path fired instead of corrupting the backlog count).
+    pub task_done_underflow: AtomicU64,
     /// When this metrics registry was created (occupancy baseline).
     started: Instant,
     /// Per-workload labeled counters, registered at launch.
@@ -209,6 +246,7 @@ impl Default for Metrics {
             verifications: AtomicU64::new(0),
             queue_wait_ns: AtomicU64::new(0),
             queued_units: AtomicU64::new(0),
+            task_done_underflow: AtomicU64::new(0),
             started: Instant::now(),
             workloads: Mutex::new(BTreeMap::new()),
         }
@@ -250,9 +288,10 @@ impl Metrics {
         shard_idx: usize,
         cost: &TileCost,
         wall: Duration,
+        staging: TileStaging,
     ) {
         self.record_batch(cost.units, cost.cycles, wall);
-        let wait_ns = cost.queue_wait.as_nanos() as u64;
+        let wait_ns = cost.queue_wait_ns;
         self.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
         self.queued_units.fetch_add(cost.units, Ordering::Relaxed);
         counters.tiles.fetch_add(1, Ordering::Relaxed);
@@ -260,11 +299,21 @@ impl Metrics {
         counters.sim_cycles.fetch_add(cost.cycles, Ordering::Relaxed);
         counters.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
         counters.queued_units.fetch_add(cost.units, Ordering::Relaxed);
+        counters.stage_cycles.fetch_add(staging.stage_cycles, Ordering::Relaxed);
+        counters.stall_cycles.fetch_add(staging.stall_cycles, Ordering::Relaxed);
+        counters.hidden_words.fetch_add(staging.hidden_words, Ordering::Relaxed);
         let mut shards = counters.shards.lock().unwrap();
         let stats = shards.entry(shard_idx).or_default();
         stats.tiles += 1;
         stats.units += cost.units;
         stats.busy_ns += wall.as_nanos() as u64;
+    }
+
+    /// Record one clamped release from a lane queue: `task_done` was
+    /// called with nothing checked out. A correctness tripwire, not a
+    /// performance counter — any nonzero value is a serving-path bug.
+    pub fn note_task_done_underflow(&self) {
+        self.task_done_underflow.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mean per-unit queue wait so far, across all workloads.
@@ -295,7 +344,8 @@ impl Metrics {
         };
         let mut out = format!(
             "requests={} products={} batches={} avg_batch={:.1} sim_cycles={} \
-             sim_wall={:.3}s throughput={:.0} products/s avg_queue_wait={:.3?}",
+             sim_wall={:.3}s throughput={:.0} products/s avg_queue_wait={:.3?} \
+             task_done_underflow={}",
             self.requests.load(Ordering::Relaxed),
             products,
             batches,
@@ -304,6 +354,7 @@ impl Metrics {
             wall_ns as f64 / 1e9,
             thr,
             self.avg_queue_wait(),
+            self.task_done_underflow.load(Ordering::Relaxed),
         );
         for (key, wl) in self.workloads() {
             let tiles = wl.tiles.load(Ordering::Relaxed);
@@ -322,11 +373,22 @@ impl Metrics {
             if staged > 0 {
                 out.push_str(&format!(
                     "\n    device[{key}] staged_words={staged} restage_words={} \
-                     cross_channel_words={} transfer_cycles={} locality_hits={}",
+                     cross_channel_words={} transfer_cycles={} locality_hits={} \
+                     link_wait_cycles={}",
                     wl.restage_words.load(Ordering::Relaxed),
                     wl.cross_channel_words.load(Ordering::Relaxed),
                     wl.transfer_cycles.load(Ordering::Relaxed),
                     wl.locality_hits.load(Ordering::Relaxed),
+                    wl.link_wait_cycles.load(Ordering::Relaxed),
+                ));
+            }
+            let stage_cycles = wl.stage_cycles.load(Ordering::Relaxed);
+            if stage_cycles > 0 {
+                out.push_str(&format!(
+                    "\n    staging[{key}] stage_cycles={stage_cycles} stall_cycles={} \
+                     hidden_words={}",
+                    wl.stall_cycles.load(Ordering::Relaxed),
+                    wl.hidden_words.load(Ordering::Relaxed),
                 ));
             }
             for (channel, s) in wl.channel_stats() {
@@ -367,7 +429,16 @@ mod tests {
     use super::*;
 
     fn cost(units: u64, cycles: u64, wait: Duration) -> TileCost {
-        TileCost { units, cycles, queue_wait: wait * units as u32 }
+        TileCost {
+            units,
+            cycles,
+            queue_wait_ns: (wait.as_nanos() as u64).saturating_mul(units),
+            stage_words: 0,
+        }
+    }
+
+    fn no_staging() -> TileStaging {
+        TileStaging::default()
     }
 
     #[test]
@@ -389,8 +460,20 @@ mod tests {
         let key = WorkloadKey::MatVec { n_bits: 32, n_elems: 8 };
         let wl = m.register(key);
         wl.record_admission(100);
-        m.record_tile(&wl, 0, &cost(64, 4304, Duration::from_millis(1)), Duration::from_millis(2));
-        m.record_tile(&wl, 1, &cost(36, 4304, Duration::from_millis(3)), Duration::from_millis(1));
+        m.record_tile(
+            &wl,
+            0,
+            &cost(64, 4304, Duration::from_millis(1)),
+            Duration::from_millis(2),
+            no_staging(),
+        );
+        m.record_tile(
+            &wl,
+            1,
+            &cost(36, 4304, Duration::from_millis(3)),
+            Duration::from_millis(1),
+            no_staging(),
+        );
         // Globals fold in the tiles (products == work units).
         assert_eq!(m.products.load(Ordering::Relaxed), 100);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
@@ -453,7 +536,13 @@ mod tests {
         for shard in 0..4usize {
             let tiles = (shard + 1) as u64;
             for _ in 0..tiles {
-                m.record_tile(&wl, shard, &cost(8, 100, Duration::ZERO), Duration::from_micros(5));
+                m.record_tile(
+                    &wl,
+                    shard,
+                    &cost(8, 100, Duration::ZERO),
+                    Duration::from_micros(5),
+                    no_staging(),
+                );
             }
         }
         let shard_total: u64 = wl.shard_stats().iter().map(|(_, s)| s.tiles).sum();
@@ -477,6 +566,7 @@ mod tests {
             cross_channel_words: 64,
             transfer_cycles: 960,
             locality_hit: false,
+            link_wait_cycles: 100,
         });
         wl.record_route(&RouteDecision {
             lane: 0,
@@ -485,14 +575,17 @@ mod tests {
             cross_channel_words: 0,
             transfer_cycles: 448,
             locality_hit: true,
+            link_wait_cycles: 0,
         });
         assert_eq!(wl.staged_words.load(Ordering::Relaxed), 192);
         assert_eq!(wl.restage_words.load(Ordering::Relaxed), 64);
         assert_eq!(wl.cross_channel_words.load(Ordering::Relaxed), 64);
         assert_eq!(wl.transfer_cycles.load(Ordering::Relaxed), 1408);
         assert_eq!(wl.locality_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(wl.link_wait_cycles.load(Ordering::Relaxed), 100);
         let s = m.snapshot();
         assert!(s.contains("device[matmul N=16 k=64] staged_words=192"), "{s}");
+        assert!(s.contains("link_wait_cycles=100"), "{s}");
         assert!(s.contains("channel[matmul N=16 k=64:c0]"), "{s}");
         assert!(s.contains("bank[matmul N=16 k=64:c1.g0.b1]"), "{s}");
     }
@@ -502,7 +595,7 @@ mod tests {
         let m = Metrics::default();
         let key = WorkloadKey::Multiply { n_bits: 8 };
         let wl = m.register(key);
-        m.record_tile(&wl, 0, &cost(4, 50, Duration::ZERO), Duration::from_micros(1));
+        m.record_tile(&wl, 0, &cost(4, 50, Duration::ZERO), Duration::from_micros(1), no_staging());
         assert!(wl.bank_stats().is_empty());
         assert!(wl.channel_stats().is_empty());
         let s = m.snapshot();
@@ -516,9 +609,27 @@ mod tests {
         let m = Metrics::default();
         let mul = m.register(WorkloadKey::Multiply { n_bits: 32 });
         let mm = m.register(WorkloadKey::MatMul { n_bits: 32, k: 8 });
-        m.record_tile(&mul, 0, &cost(100, 611, Duration::from_millis(5)), Duration::from_millis(3));
-        m.record_tile(&mul, 1, &cost(50, 611, Duration::from_millis(1)), Duration::from_millis(1));
-        m.record_tile(&mm, 0, &cost(10, 4304, Duration::ZERO), Duration::from_millis(1));
+        m.record_tile(
+            &mul,
+            0,
+            &cost(100, 611, Duration::from_millis(5)),
+            Duration::from_millis(3),
+            no_staging(),
+        );
+        m.record_tile(
+            &mul,
+            1,
+            &cost(50, 611, Duration::from_millis(1)),
+            Duration::from_millis(1),
+            no_staging(),
+        );
+        m.record_tile(
+            &mm,
+            0,
+            &cost(10, 4304, Duration::ZERO),
+            Duration::from_millis(1),
+            no_staging(),
+        );
         // Globals fold in everything.
         assert_eq!(m.products.load(Ordering::Relaxed), 160);
         assert_eq!(m.batches.load(Ordering::Relaxed), 3);
@@ -537,5 +648,35 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("workload[multiply N=32]"), "{s}");
         assert!(s.contains("workload[matmul N=32 k=8]"), "{s}");
+    }
+
+    #[test]
+    fn staging_counters_fold_and_render() {
+        let m = Metrics::default();
+        let wl = m.register(WorkloadKey::Multiply { n_bits: 16 });
+        let staging = TileStaging { stage_cycles: 224, stall_cycles: 224, hidden_words: 0 };
+        m.record_tile(&wl, 0, &cost(64, 291, Duration::ZERO), Duration::from_micros(3), staging);
+        let hidden = TileStaging { stage_cycles: 224, stall_cycles: 0, hidden_words: 32 };
+        m.record_tile(&wl, 0, &cost(64, 291, Duration::ZERO), Duration::from_micros(3), hidden);
+        assert_eq!(wl.stage_cycles.load(Ordering::Relaxed), 448);
+        assert_eq!(wl.stall_cycles.load(Ordering::Relaxed), 224);
+        assert_eq!(wl.hidden_words.load(Ordering::Relaxed), 32);
+        let s = m.snapshot();
+        assert!(
+            s.contains("staging[multiply N=16] stage_cycles=448 stall_cycles=224 hidden_words=32"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn task_done_underflow_is_counted_and_rendered() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert!(s.contains("task_done_underflow=0"), "{s}");
+        m.note_task_done_underflow();
+        m.note_task_done_underflow();
+        assert_eq!(m.task_done_underflow.load(Ordering::Relaxed), 2);
+        let s = m.snapshot();
+        assert!(s.contains("task_done_underflow=2"), "{s}");
     }
 }

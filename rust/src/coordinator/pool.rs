@@ -49,12 +49,12 @@
 //! comparable across scenarios without per-scenario metric fields.
 
 use super::batcher::BatchQueue;
-use super::metrics::{Metrics, WorkloadCounters};
+use super::metrics::{Metrics, TileStaging, WorkloadCounters};
 use crate::device::{BankPath, CrossbarPath, Placement, Router, TileTraffic};
 use std::fmt;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Identity of one deployed workload: the key routing, per-workload
 /// metrics, and typed rejection errors
@@ -116,12 +116,23 @@ pub struct TileCost {
     /// inner-product-equivalent, so throughput is comparable across
     /// workloads.
     pub units: u64,
-    /// Simulated PIM cycles the execution cost.
+    /// Simulated PIM cycles the execution cost (pure gate cycles; the
+    /// staging write channel is accounted separately via `stage_words`).
     pub cycles: u64,
-    /// Queue wait summed over the tile's units (a tile of `k` units that
-    /// waited `w` from admission to execution start contributes `k * w`;
-    /// the mean divides by `units`).
-    pub queue_wait: Duration,
+    /// Queue wait summed over the tile's units, in **saturating u64
+    /// nanoseconds** (a tile of `k` units that waited `w` ns from
+    /// admission to execution start contributes `k * w`, saturating at
+    /// `u64::MAX`; the mean divides by `units`). Accumulated in integer
+    /// nanoseconds because `Duration * u32` panics on overflow for long
+    /// waits times large tiles.
+    pub queue_wait_ns: u64,
+    /// Operand words the tile wrote through the staging channel
+    /// (bit-plane word writes: transposed operand columns plus broadcast
+    /// vector words). The pool turns this into staging cycles at the
+    /// topology's [`stage_cpw`](crate::device::Topology::stage_cpw) and,
+    /// with overlap on, hides the cycles that fit under the previous
+    /// tile's compute.
+    pub stage_words: u64,
 }
 
 /// One deployed scenario served by a [`ShardPool`].
@@ -270,12 +281,16 @@ impl<W: Workload> ShardPool<W> {
             lanes[lane_idx].slots.push(slot_idx);
             lane_of.push(lane_idx);
         }
-        let router = Arc::new(Router::new(
+        let router = Arc::new(Router::with_contention(
             Arc::clone(&placement.topology),
             placement.policy,
             lanes.iter().map(|l| l.bank).collect(),
+            Arc::clone(&placement.contention),
+            placement.pool_id,
         ));
 
+        let overlap = placement.overlap;
+        let stage_cpw = placement.topology.stage_cpw().max(1);
         for (shard_idx, &lane_idx) in lane_of.iter().enumerate() {
             let workload = Arc::clone(&workload);
             let queue = Arc::clone(&lanes[lane_idx].queue);
@@ -285,15 +300,49 @@ impl<W: Workload> ShardPool<W> {
                 // The resident shard is created inside the worker thread
                 // and never leaves it.
                 let mut shard = workload.shard();
-                while let Some(tile) = queue.pop() {
+                // Double-buffer state: gate cycles of the previous tile
+                // on this shard — the compute window the current tile's
+                // staging hid under. Zero for the first tile (a cold
+                // shard has nothing to overlap with, so its staging is
+                // fully exposed).
+                let mut prev_compute = 0u64;
+                // Tile prefetched into the shadow column set while the
+                // current tile executes.
+                let mut next: Option<W::Tile> = None;
+                loop {
+                    let tile = match next.take() {
+                        Some(t) => t,
+                        None => match queue.pop() {
+                            Some(t) => t,
+                            None => break,
+                        },
+                    };
+                    if overlap {
+                        next = queue.try_pop();
+                    }
                     let t0 = Instant::now();
                     let mut record = |cost: TileCost| {
-                        metrics.record_tile(&counters, shard_idx, &cost, t0.elapsed());
+                        let stage_cycles = cost.stage_words.saturating_mul(stage_cpw);
+                        // With overlap, only the staging cycles that did
+                        // not fit under the previous tile's compute
+                        // stall the shard; synchronously, every staged
+                        // word sits on the critical path.
+                        let stall_cycles = if overlap {
+                            stage_cycles.saturating_sub(prev_compute)
+                        } else {
+                            stage_cycles
+                        };
+                        let hidden_words = (stage_cycles - stall_cycles) / stage_cpw;
+                        prev_compute = cost.cycles;
+                        let staging = TileStaging { stage_cycles, stall_cycles, hidden_words };
+                        metrics.record_tile(&counters, shard_idx, &cost, t0.elapsed(), staging);
                     };
                     workload.execute(&mut shard, tile, &mut record);
                     // The tile leaves the lane's backlog only now, so
                     // admission depth checks keep seeing executing work.
-                    queue.task_done();
+                    if !queue.task_done() {
+                        metrics.note_task_done_underflow();
+                    }
                 }
             }));
         }
@@ -379,7 +428,7 @@ impl<W: Workload> ShardPool<W> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::{PlacementPolicy, Topology};
+    use crate::device::{LinkContention, PlacementPolicy, Topology};
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::mpsc;
 
@@ -405,11 +454,7 @@ mod tests {
             *shard += 1;
             self.executions.fetch_add(1, Ordering::Relaxed);
             // Cost is recorded before the result is observable.
-            record(TileCost {
-                units: 1,
-                cycles: 10,
-                queue_wait: Duration::ZERO,
-            });
+            record(TileCost { units: 1, cycles: 10, queue_wait_ns: 0, stage_words: 0 });
             self.done.send(tile * 2).unwrap();
         }
     }
@@ -475,7 +520,7 @@ mod tests {
         fn execute(&self, _shard: &mut (), _tile: (), record: &mut dyn FnMut(TileCost)) {
             self.started.send(()).unwrap();
             self.release.lock().unwrap().recv().unwrap();
-            record(TileCost { units: 1, cycles: 1, queue_wait: Duration::ZERO });
+            record(TileCost { units: 1, cycles: 1, queue_wait_ns: 0, stage_words: 0 });
         }
     }
 
@@ -532,7 +577,14 @@ mod tests {
             .collect();
         let pool = ShardPool::launch(
             Doubler { done: tx, executions: Arc::clone(&executions) },
-            Placement { slots, topology, policy: PlacementPolicy::Locality },
+            Placement {
+                slots,
+                topology,
+                policy: PlacementPolicy::Locality,
+                overlap: true,
+                contention: Arc::new(LinkContention::new()),
+                pool_id: 0,
+            },
             &metrics,
             &mut workers,
         );
@@ -557,6 +609,83 @@ mod tests {
         for (bank, stats) in &banks {
             assert_eq!(stats.tiles, 10, "round-robin splits evenly across {bank}");
         }
+    }
+
+    /// A workload with fixed, known compute cycles and staging words, so
+    /// the double-buffer stall arithmetic is exactly checkable.
+    struct Stager {
+        cycles: u64,
+        stage_words: u64,
+    }
+
+    impl Workload for Stager {
+        type Tile = ();
+        type Shard = ();
+
+        fn key(&self) -> WorkloadKey {
+            WorkloadKey::Multiply { n_bits: 4 }
+        }
+
+        fn shard(&self) {}
+
+        fn execute(&self, _shard: &mut (), _tile: (), record: &mut dyn FnMut(TileCost)) {
+            record(TileCost {
+                units: 1,
+                cycles: self.cycles,
+                queue_wait_ns: 0,
+                stage_words: self.stage_words,
+            });
+        }
+    }
+
+    fn run_stager(overlap: bool, tiles: usize, cycles: u64, stage_words: u64) -> (u64, u64, u64) {
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        let mut placement = Placement::flat(1); // one shard: sequential, deterministic
+        placement.overlap = overlap;
+        let pool =
+            ShardPool::launch(Stager { cycles, stage_words }, placement, &metrics, &mut workers);
+        for _ in 0..tiles {
+            assert!(pool.push(()));
+        }
+        pool.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let wl = metrics.workload(WorkloadKey::Multiply { n_bits: 4 }).unwrap();
+        (
+            wl.stage_cycles.load(Ordering::Relaxed),
+            wl.stall_cycles.load(Ordering::Relaxed),
+            wl.hidden_words.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Tentpole arithmetic, pinned: with overlap on, staging that fits
+    /// under the previous tile's compute costs only the cold-start tile;
+    /// with overlap off, every staged word stalls the shard. The flat
+    /// topology's staging channel is 7 cycles/word (4 + 2 + 1).
+    #[test]
+    fn overlap_hides_staging_behind_compute() {
+        // 10 words * 7 cpw = 70 staging cycles per tile, under the
+        // 100-cycle compute window: only tile 1 (cold shard) stalls.
+        let (stage, stall, hidden) = run_stager(true, 5, 100, 10);
+        assert_eq!(stage, 5 * 70);
+        assert_eq!(stall, 70, "cold-start staging is fully exposed");
+        assert_eq!(hidden, 4 * 10, "every warm tile hides all 10 words");
+
+        // Synchronous baseline: all staging is on the critical path.
+        let (stage_off, stall_off, hidden_off) = run_stager(false, 5, 100, 10);
+        assert_eq!(stage_off, 5 * 70);
+        assert_eq!(stall_off, 5 * 70);
+        assert_eq!(hidden_off, 0);
+
+        // Staging wider than the compute window: the overflow stalls
+        // even with overlap on (130 words * 7 = 910 > 100 compute), and
+        // exactly the compute window's worth of words is hidden.
+        let (stage_big, stall_big, hidden_big) = run_stager(true, 3, 100, 130);
+        assert_eq!(stage_big, 3 * 910);
+        assert_eq!(stall_big, 910 + 2 * (910 - 100));
+        assert_eq!(hidden_big, 2 * (100 / 7));
     }
 
     #[test]

@@ -56,12 +56,12 @@ use super::pool::{ShardPool, Workload, WorkloadKey};
 use super::workloads::{
     FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyWorkload,
 };
-use crate::device::{Allocator, DeviceConfig, Placement, PlacementPolicy, Topology};
+use crate::device::{Allocator, DeviceConfig, LinkContention, Placement, PlacementPolicy, Topology};
 use crate::fixedpoint::float::FloatFormat;
 use crate::util::div_ceil;
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -146,29 +146,66 @@ struct MultiplyFront {
 struct TenantPool<W: Workload> {
     pool: ShardPool<W>,
     max_queue_tiles: usize,
+    /// Tiles admitted but not yet pushed into the pool's queues. `admit`
+    /// reserves its planned tile count here atomically and `release`
+    /// returns it once the tiles are queued (and therefore counted by
+    /// the pool's backlog), closing the window in which a racing
+    /// admission could read a stale depth and over-admit.
+    reserved: AtomicUsize,
 }
 
 impl<W: Workload> TenantPool<W> {
+    fn new(pool: ShardPool<W>, max_queue_tiles: usize) -> Self {
+        Self { pool, max_queue_tiles, reserved: AtomicUsize::new(0) }
+    }
+
     /// Reject the submission with the typed overload error when admitting
     /// `planned` more tiles (`units` work units) would push the tenant's
     /// backlog past its depth limit. The depth is the pool's *backlog* —
     /// tiles queued **plus** tiles popped and still executing on shards —
     /// so a saturated pool whose queues happen to be drained still
     /// backpressures, and `retry_after_tiles` can never report an excess
-    /// of zero while every worker is busy. Best effort: the depth read
-    /// races concurrent admissions, which only ever makes the bound
-    /// slightly conservative or slightly generous, never wrong by more
-    /// than the in-flight submissions.
+    /// of zero while every worker is busy.
+    ///
+    /// Admissions racing each other serialize on the `reserved` counter:
+    /// a successful admit holds `planned` tiles reserved until its
+    /// `release`, so two requests that each fit individually can never
+    /// both slip under the limit together (the old read-then-push check
+    /// did exactly that). A tile momentarily counted by both the backlog
+    /// and a not-yet-released reservation only makes the bound
+    /// conservative, never generous.
     fn admit(&self, key: WorkloadKey, planned: usize, units: u64) -> Result<()> {
-        let depth = self.pool.backlog();
-        if self.max_queue_tiles > 0 && planned > 0 && depth + planned > self.max_queue_tiles {
-            self.pool.counters().record_rejection(units);
-            return Err(Error::Overloaded {
-                key,
-                retry_after_tiles: (depth + planned - self.max_queue_tiles) as u64,
-            });
+        if self.max_queue_tiles == 0 || planned == 0 {
+            return Ok(());
         }
-        Ok(())
+        let mut reserved = self.reserved.load(Ordering::Acquire);
+        loop {
+            let depth = self.pool.backlog() + reserved;
+            if depth + planned > self.max_queue_tiles {
+                self.pool.counters().record_rejection(units);
+                return Err(Error::Overloaded {
+                    key,
+                    retry_after_tiles: (depth + planned - self.max_queue_tiles) as u64,
+                });
+            }
+            match self.reserved.compare_exchange_weak(
+                reserved,
+                reserved + planned,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(current) => reserved = current,
+            }
+        }
+    }
+
+    /// Return a reservation taken by a successful `admit`, once its tiles
+    /// are pushed (or the request completed without pushing any).
+    fn release(&self, planned: usize) {
+        if self.max_queue_tiles > 0 && planned > 0 {
+            self.reserved.fetch_sub(planned, Ordering::AcqRel);
+        }
     }
 }
 
@@ -230,6 +267,11 @@ pub struct Coordinator {
     policy: PlacementPolicy,
     /// Crossbars the launch-time allocator assigned across deployments.
     allocated: usize,
+    /// The shared per-link contention state every pool's router offers
+    /// its staging traffic into (one instance per device).
+    contention: Arc<LinkContention>,
+    /// Whether shard staging is double-buffered behind compute.
+    overlap: bool,
 }
 
 /// Configuration for one deployed multiply width.
@@ -421,10 +463,29 @@ impl Coordinator {
         // behind. Allocation order is declaration order (multiplies,
         // matvecs, matmuls, floatvecs), so the deployment named in a
         // CapacityExceeded error is the first one that did not fit.
-        let topology = Arc::new(device.topology);
         let policy = device.policy;
+        let overlap = device.overlap;
+        let topology = Arc::new(device.topology);
         let mut alloc = Allocator::new(Arc::clone(&topology));
-        let placement = |slots| Placement { slots, topology: Arc::clone(&topology), policy };
+        // One contention instance per device: every pool's router offers
+        // its staging traffic into the same per-link state, so
+        // deployments restaging across a shared channel queue against
+        // each other. Pool ids keep each pool's own traffic from
+        // self-queuing.
+        let contention = Arc::new(LinkContention::new());
+        let next_pool_id = std::cell::Cell::new(0u64);
+        let placement = |slots| {
+            let pool_id = next_pool_id.get();
+            next_pool_id.set(pool_id + 1);
+            Placement {
+                slots,
+                topology: Arc::clone(&topology),
+                policy,
+                overlap,
+                contention: Arc::clone(&contention),
+                pool_id,
+            }
+        };
         let mut multiply_slots = Vec::with_capacity(multiply_engines.len());
         for (dep, _) in &multiply_engines {
             let key = WorkloadKey::Multiply { n_bits: dep.n_bits };
@@ -472,7 +533,7 @@ impl Coordinator {
                 dep.n_bits,
                 MultiplyFront {
                     tx,
-                    tenant: TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles },
+                    tenant: TenantPool::new(pool, dep.spec.max_queue_tiles),
                 },
             );
         }
@@ -485,7 +546,7 @@ impl Coordinator {
                 &metrics,
                 &mut workers,
             );
-            matvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
+            matvec.insert(shape, TenantPool::new(pool, dep.spec.max_queue_tiles));
         }
         let mut matmul = HashMap::new();
         for ((dep, engine), slots) in matmul_engines.into_iter().zip(matmul_slots) {
@@ -496,7 +557,7 @@ impl Coordinator {
                 &metrics,
                 &mut workers,
             );
-            matmul.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
+            matmul.insert(shape, TenantPool::new(pool, dep.spec.max_queue_tiles));
         }
         let mut floatvec = HashMap::new();
         for ((dep, engine), slots) in floatvec_engines.into_iter().zip(floatvec_slots) {
@@ -507,7 +568,7 @@ impl Coordinator {
                 &metrics,
                 &mut workers,
             );
-            floatvec.insert(shape, TenantPool { pool, max_queue_tiles: dep.spec.max_queue_tiles });
+            floatvec.insert(shape, TenantPool::new(pool, dep.spec.max_queue_tiles));
         }
         Ok(Self {
             multiply,
@@ -520,6 +581,8 @@ impl Coordinator {
             topology,
             policy,
             allocated,
+            contention,
+            overlap,
         })
     }
 
@@ -564,7 +627,7 @@ impl Coordinator {
             }
         }
         let mut out = format!(
-            "device {} banks={} crossbars={} policy={} allocated={}/{}",
+            "device {} banks={} crossbars={} policy={} allocated={}/{} overlap={}",
             self.topology,
             self.topology.total_banks(),
             self.topology.total_crossbars(),
@@ -574,7 +637,14 @@ impl Coordinator {
             },
             self.allocated,
             self.topology.total_crossbars(),
+            if self.overlap { "on" } else { "off" },
         );
+        // Per-level link occupancy: cumulative words every deployment
+        // offered through each hierarchy link (only links that carried
+        // traffic appear).
+        for (link, words) in self.contention.occupancy() {
+            out.push_str(&format!("\n  link[{link}] offered_words={words}"));
+        }
         // HashMap order is nondeterministic; render sorted by key so the
         // report is stable across runs.
         let mut pools_m: Vec<_> = self.multiply.values().collect();
@@ -625,10 +695,11 @@ impl Coordinator {
                 // Stamp admission time here so the queue-wait metric also
                 // covers time spent in the submit->batcher channel.
                 let enqueued = Instant::now();
-                front
-                    .tx
-                    .send(WorkerMsg::Job { job: (a, b, reply_tx), ticket, enqueued })
-                    .map_err(|_| Error::Runtime("worker gone".into()))?;
+                let sent = front.tx.send(WorkerMsg::Job { job: (a, b, reply_tx), ticket, enqueued });
+                // The job is in the batcher's hands (or the service is
+                // dying): either way the reservation must not leak.
+                front.tenant.release(1);
+                sent.map_err(|_| Error::Runtime("worker gone".into()))?;
             }
             Request::MatVec { n_bits, rows, x } => {
                 let key = WorkloadKey::MatVec { n_bits, n_elems: x.len() as u32 };
@@ -645,7 +716,8 @@ impl Coordinator {
                 }
                 // Admission control against the tile queue depth.
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
-                tenant.admit(key, div_ceil(rows.len(), shard_rows), rows.len() as u64)?;
+                let planned = div_ceil(rows.len(), shard_rows);
+                tenant.admit(key, planned, rows.len() as u64)?;
                 // Admission: draw a ticket and stamp the enqueue time the
                 // tile queue-wait metric measures from.
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
@@ -661,9 +733,12 @@ impl Coordinator {
                 // completion (one inner product per matrix row).
                 for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
                     if !tenant.pool.push(tile) {
+                        tenant.release(planned);
                         return Err(Error::Runtime("matvec shard pool shut down".into()));
                     }
                 }
+                // Queued tiles are counted by the backlog now.
+                tenant.release(planned);
             }
             Request::MatMul { n_bits, a, b } => {
                 let key = WorkloadKey::MatMul { n_bits, k: b.len() as u32 };
@@ -709,9 +784,12 @@ impl Coordinator {
                 // over the shard pool, gathered into the row-major output.
                 for tile in tenant.pool.workload().plan(a, b, p, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
+                        tenant.release(planned);
                         return Err(Error::Runtime("matmul shard pool shut down".into()));
                     }
                 }
+                // Queued tiles are counted by the backlog now.
+                tenant.release(planned);
             }
             Request::FloatMatVec { exp_bits, man_bits, rows, x } => {
                 let key =
@@ -748,7 +826,8 @@ impl Coordinator {
                 }
                 // Admission control against the tile queue depth.
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
-                tenant.admit(key, div_ceil(rows.len(), shard_rows), rows.len() as u64)?;
+                let planned = div_ceil(rows.len(), shard_rows);
+                tenant.admit(key, planned, rows.len() as u64)?;
                 // Admission: draw a ticket and stamp the enqueue time the
                 // tile queue-wait metric measures from.
                 let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
@@ -764,9 +843,12 @@ impl Coordinator {
                 // float_dot_ref composition.
                 for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
                     if !tenant.pool.push(tile) {
+                        tenant.release(planned);
                         return Err(Error::Runtime("floatvec shard pool shut down".into()));
                     }
                 }
+                // Queued tiles are counted by the backlog now.
+                tenant.release(planned);
             }
         }
         Ok(reply_rx)
@@ -1279,6 +1361,10 @@ mod tests {
         let report = coord.placement_report();
         assert!(report.contains("device 2x2x2x4 banks=8 crossbars=32 policy=locality"), "{report}");
         assert!(report.contains("allocated=14/32"), "{report}");
+        assert!(report.contains("overlap=on"), "{report}");
+        // Served tiles staged through the hierarchy, so the shared
+        // contention state saw their words on the channel links.
+        assert!(report.contains("link[channel c0] offered_words="), "{report}");
         assert!(report.contains("workload[matvec N=8 n=2] shards=8 lanes=8"), "{report}");
         assert!(report.contains("lane[matvec N=8 n=2:c0.g0.b0]"), "{report}");
         // Device traffic was modeled for the served tiles.
@@ -1377,6 +1463,48 @@ mod tests {
         assert!(coord
             .float_matvec(4, 3, vec![vec![0u64, 0]; 3], vec![0, 0])
             .is_ok());
+        coord.shutdown();
+    }
+
+    /// Regression (admission race): `admit` used to read the backlog and
+    /// then push non-atomically, so two requests that each fit under the
+    /// limit could both slip in together. Reservations serialize racing
+    /// admissions; hammering one tenant at its limit from many threads
+    /// must never see more tiles admitted-and-unreleased than the limit.
+    #[test]
+    fn concurrent_admissions_never_exceed_queue_limit() {
+        use std::sync::atomic::AtomicI64;
+        let mut dep = mv_deployment(8, 2, 2, 1);
+        dep.spec.max_queue_tiles = 8;
+        let coord = Coordinator::launch(&[], &[dep], &[], &[]).unwrap();
+        let tenant = coord.matvec.get(&(8, 2)).unwrap();
+        let key = WorkloadKey::MatVec { n_bits: 8, n_elems: 2 };
+        // Nothing is ever pushed, so the pool backlog stays 0 and the
+        // limit is enforced purely by the reservation counter — exactly
+        // the window the old check left open.
+        let outstanding = AtomicI64::new(0);
+        let peak = AtomicI64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..500 {
+                        if tenant.admit(key, 2, 2).is_ok() {
+                            let now = outstanding.fetch_add(2, Ordering::AcqRel) + 2;
+                            peak.fetch_max(now, Ordering::AcqRel);
+                            std::thread::yield_now();
+                            outstanding.fetch_sub(2, Ordering::AcqRel);
+                            tenant.release(2);
+                        }
+                    }
+                });
+            }
+        });
+        let peak = peak.load(Ordering::Acquire);
+        assert!(peak > 0, "hammer admitted nothing");
+        assert!(peak <= 8, "admissions raced past the limit: peak {peak} > 8");
+        // Every reservation was returned: a full-size request fits again.
+        assert!(tenant.admit(key, 8, 8).is_ok());
+        tenant.release(8);
         coord.shutdown();
     }
 

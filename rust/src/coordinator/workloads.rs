@@ -37,6 +37,24 @@ use std::time::{Duration, Instant};
 /// The reply channel every request carries.
 pub type ReplySender = mpsc::Sender<Result<Response>>;
 
+/// Unit-weighted queue wait in saturating u64 nanoseconds: a tile of
+/// `units` work units that waited `wait` contributes `units * wait`.
+/// The old `wait * units as u32` Duration arithmetic panicked (or
+/// silently truncated the unit count) once a pathological backlog pushed
+/// the product past `Duration`'s range; nanosecond saturation keeps the
+/// counter monotone instead.
+fn unit_weighted_wait_ns(wait: Duration, units: u64) -> u64 {
+    let ns = wait.as_nanos().min(u128::from(u64::MAX)) as u64;
+    ns.saturating_mul(units)
+}
+
+/// Bit-plane words written through the staging channel to load `rows`
+/// operand values of `bits` bits each into 64-lane-packed crossbar
+/// columns: one word per bit-plane per 64-row lane group.
+fn packed_plane_words(rows: u64, bits: u64) -> u64 {
+    bits * rows.div_ceil(64)
+}
+
 /// An operand pair plus its reply channel (the multiply batcher's queue
 /// payload).
 pub type MultiplyJob = (u64, u64, ReplySender);
@@ -81,9 +99,10 @@ impl Workload for MultiplyWorkload {
         record: &mut dyn FnMut(TileCost),
     ) {
         let now = Instant::now();
-        let mut queue_wait = Duration::ZERO;
+        let mut queue_wait_ns = 0u64;
         for pending in &batch {
-            queue_wait += now.saturating_duration_since(pending.enqueued);
+            let wait = now.saturating_duration_since(pending.enqueued);
+            queue_wait_ns = queue_wait_ns.saturating_add(unit_weighted_wait_ns(wait, 1));
         }
         let pairs: Vec<(u64, u64)> = batch.iter().map(|p| (p.item.0, p.item.1)).collect();
         let products = shard.execute(&pairs);
@@ -92,7 +111,9 @@ impl Workload for MultiplyWorkload {
         record(TileCost {
             units,
             cycles: shard.cycles_per_batch(),
-            queue_wait,
+            queue_wait_ns,
+            // Two operand columns per pair, bit-serial into 64 lanes.
+            stage_words: 2 * packed_plane_words(units, self.n_bits as u64),
         });
         for (pending, product) in batch.into_iter().zip(products) {
             let _ = pending.item.2.send(Ok(Response::Product(product)));
@@ -194,12 +215,17 @@ impl Workload for MatVecWorkload {
         let slice = &tile.rows[tile.start..tile.start + tile.len];
         let out = shard.execute(slice, &tile.x);
         let units = tile.len as u64;
+        let n = self.engine.n_elems() as u64;
+        let nb = self.engine.n_bits() as u64;
         // Record before completing the gather: the reply this tile may
         // trigger must never be observable ahead of its counters.
         record(TileCost {
             units,
             cycles: shard.cycles(),
-            queue_wait: queue_wait * tile.len as u32,
+            queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
+            // n_elems packed matrix columns plus the broadcast vector's
+            // bit-planes written across every row.
+            stage_words: n * packed_plane_words(units, nb) + n * nb,
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
             let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
@@ -420,12 +446,16 @@ impl Workload for FloatVecWorkload {
         let slice = &tile.rows[tile.start..tile.start + tile.len];
         let out = shard.execute(slice, &tile.x);
         let units = tile.len as u64;
+        let n = self.engine.n_elems() as u64;
+        let tb = u64::from(self.engine.fmt().total_bits());
         // Record before completing the gather: the reply this tile may
         // trigger must never be observable ahead of its counters.
         record(TileCost {
             units,
             cycles: shard.cycles(),
-            queue_wait: queue_wait * tile.len as u32,
+            queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
+            // Packed-float columns stage every bit of the format.
+            stage_words: n * packed_plane_words(units, tb) + n * tb,
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
             let _ = tile.reply.send(Ok(Response::FloatVector(full)));
@@ -466,12 +496,18 @@ impl Workload for MatMulWorkload {
         let a_rows = &tile.a[tile.row0..tile.row0 + tile.rows];
         let panel = shard.execute_panel(a_rows, &tile.xs);
         let units = (tile.rows * tile.xs.len()) as u64;
+        let k = self.engine.n_elems() as u64;
+        let nb = self.engine.n_bits() as u64;
         // Record before completing the gather: the reply this tile may
         // trigger must never be observable ahead of its counters.
         record(TileCost {
             units,
             cycles: shard.cycles() * tile.xs.len() as u64,
-            queue_wait: queue_wait * units as u32,
+            queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
+            // The A rows stage once per tile; each panel column's B
+            // vector is broadcast separately before its chain run.
+            stage_words: k * packed_plane_words(tile.rows as u64, nb)
+                + tile.xs.len() as u64 * k * nb,
         });
         let done = tile.gather.complete_with(|out| {
             for (c, col) in panel.iter().enumerate() {
@@ -484,5 +520,39 @@ impl Workload for MatMulWorkload {
             let matrix: Vec<Vec<u64>> = flat.chunks(tile.p).map(<[u64]>::to_vec).collect();
             let _ = tile.reply.send(Ok(Response::Matrix(matrix)));
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_weighted_wait_saturates_instead_of_panicking() {
+        // Exact in the normal range the serving path lives in.
+        assert_eq!(unit_weighted_wait_ns(Duration::from_millis(3), 36), 108_000_000);
+        assert_eq!(unit_weighted_wait_ns(Duration::ZERO, u64::MAX), 0);
+        // A wait beyond u64 nanoseconds clamps before weighting; the old
+        // `wait * units as u32` Duration arithmetic panicked here.
+        let huge = Duration::from_secs(1 << 35);
+        assert!(huge.as_nanos() > u128::from(u64::MAX));
+        assert_eq!(unit_weighted_wait_ns(huge, 1), u64::MAX);
+        // A synthetic tile with an absurd unit count saturates instead
+        // of wrapping (the old u32 cast also silently truncated counts
+        // past 2^32).
+        assert_eq!(unit_weighted_wait_ns(Duration::from_secs(2), u64::MAX), u64::MAX);
+        assert_eq!(
+            unit_weighted_wait_ns(Duration::from_nanos(1), 1 + u64::from(u32::MAX)),
+            4_294_967_296
+        );
+    }
+
+    #[test]
+    fn packed_plane_word_counts() {
+        // 64 rows fill one lane group exactly: one word per bit-plane.
+        assert_eq!(packed_plane_words(64, 16), 16);
+        assert_eq!(packed_plane_words(65, 16), 32);
+        assert_eq!(packed_plane_words(1, 8), 8);
+        assert_eq!(packed_plane_words(0, 8), 0);
     }
 }

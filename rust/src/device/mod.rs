@@ -22,6 +22,20 @@
 //!   [`PlacementPolicy::Random`] baseline re-stages panels across the
 //!   hierarchy and pays the modeled cross-channel cost.
 //!
+//! Two refinements make the model honest about *time*, not just word
+//! counts:
+//!
+//! * [`LinkBudgets`] gives every hierarchy link a words-per-cycle width,
+//!   and the shared [`LinkContention`] state queues deployments against
+//!   each other per link — two pools restaging through the same channel
+//!   see strictly higher `transfer_cycles` than the same traffic on
+//!   separate channels;
+//! * [`DeviceConfig::overlap`] double-buffers shard staging: while tile
+//!   `t` executes, tile `t+1` stages through the
+//!   [`Topology::stage_cpw`] write channel, so staging cycles that fit
+//!   under the previous tile's compute are hidden from the modeled
+//!   serving latency.
+//!
 //! The degenerate [`Topology::flat`] device (`1x1x1xN`) is one bank
 //! holding every crossbar: placement collapses to a single shared queue
 //! and serving is bit-identical to the flat shard pool this model
@@ -31,6 +45,7 @@ pub mod placement;
 pub mod topology;
 
 pub use placement::{
-    Allocator, DeviceConfig, Placement, PlacementPolicy, RouteDecision, Router, TileTraffic,
+    Allocator, DeviceConfig, LinkContention, LinkId, Placement, PlacementPolicy, RouteDecision,
+    Router, TileTraffic,
 };
-pub use topology::{BankPath, CrossbarPath, Topology, TransferCosts};
+pub use topology::{BankPath, CrossbarPath, LinkBudgets, Topology, TransferCosts};

@@ -21,6 +21,7 @@ use super::topology::{BankPath, CrossbarPath, Topology};
 use crate::util::SplitMix64;
 use crate::{Error, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::{Arc, Mutex};
 
 /// How the router assigns tiles to bank lanes.
@@ -49,26 +50,127 @@ impl PlacementPolicy {
     }
 }
 
-/// The device a coordinator launch targets: its topology plus the
-/// tile-routing policy.
+/// The device a coordinator launch targets: its topology, the
+/// tile-routing policy, and whether shards double-buffer operand staging
+/// behind compute.
 #[derive(Debug, Clone)]
 pub struct DeviceConfig {
     /// The device shape and transfer-cost model.
     pub topology: Topology,
     /// The tile-routing policy.
     pub policy: PlacementPolicy,
+    /// Double-buffered staging: while tile `t` executes on the resident
+    /// crossbar, tile `t+1` stages into the shadow column set, so staging
+    /// cycles that fit under the previous tile's compute are hidden.
+    /// `false` is the synchronous baseline where every staged word sits
+    /// on the critical path. Results are bit-identical either way — the
+    /// knob only moves the modeled latency split. On by default.
+    pub overlap: bool,
 }
 
 impl DeviceConfig {
     /// The degenerate single-bank device holding `n` crossbars —
     /// bit-identical serving to the flat pre-hierarchy pool.
     pub fn flat(n: usize) -> Self {
-        Self { topology: Topology::flat(n), policy: PlacementPolicy::Locality }
+        Self { topology: Topology::flat(n), policy: PlacementPolicy::Locality, overlap: true }
     }
 
-    /// A device with the given topology and the default locality policy.
+    /// A device with the given topology, the default locality policy, and
+    /// double-buffered staging on.
     pub fn new(topology: Topology) -> Self {
-        Self { topology, policy: PlacementPolicy::Locality }
+        Self { topology, policy: PlacementPolicy::Locality, overlap: true }
+    }
+
+    /// The same device with double-buffered staging switched on or off.
+    pub fn with_overlap(mut self, overlap: bool) -> Self {
+        self.overlap = overlap;
+        self
+    }
+}
+
+/// One physical link in the hierarchy, identified by the element on its
+/// lower end. Every staged word occupies each link on its path, and the
+/// contention model queues pools against each other per link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkId {
+    /// The device ↔ channel link of one channel.
+    Channel(usize),
+    /// The channel ↔ bank-group link of one group (channel, group).
+    Group(usize, usize),
+    /// The bank-group ↔ bank link of one bank (channel, group, bank).
+    Bank(usize, usize, usize),
+}
+
+impl fmt::Display for LinkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinkId::Channel(c) => write!(f, "channel c{c}"),
+            LinkId::Group(c, g) => write!(f, "group c{c}.g{g}"),
+            LinkId::Bank(c, g, b) => write!(f, "bank c{c}.g{g}.b{b}"),
+        }
+    }
+}
+
+/// Shared per-device link-contention state: every deployment's staging
+/// traffic is offered to the links it traverses, and a pool whose
+/// transfer follows foreign traffic through the same link waits for the
+/// backlog to drain at the link's words-per-cycle budget.
+///
+/// The model is a per-(link, pool) watermark over each link's cumulative
+/// offered words: when pool `p` sends `w` words through link `L`, it
+/// first waits `ceil(foreign / wpc(L))` cycles, where `foreign` is the
+/// words *other* pools pushed through `L` since `p`'s previous visit.
+/// A pool alone on its links never waits; two pools restaging through
+/// the same channel each pay for the other's traffic — which is exactly
+/// the queuing an infinitely wide link hides. The model is bounded (a
+/// watermark per pool per link) and deterministic for a serialized
+/// route order.
+#[derive(Debug, Default)]
+pub struct LinkContention {
+    state: Mutex<HashMap<LinkId, LinkState>>,
+}
+
+#[derive(Debug, Default)]
+struct LinkState {
+    /// Cumulative words ever offered to this link, by every pool.
+    offered: u64,
+    /// pool id → value of `offered` right after that pool's last visit.
+    seen: HashMap<u64, u64>,
+}
+
+impl LinkContention {
+    /// Fresh contention state for one device.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer `words` on every `(link, words_per_cycle)` hop of a path on
+    /// behalf of `pool`, returning the modeled queuing wait in cycles.
+    pub fn offer(&self, pool: u64, path: &[(LinkId, u64)], words: u64) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        let mut state = self.state.lock().unwrap();
+        let mut wait = 0u64;
+        for &(link, wpc) in path {
+            let entry = state.entry(link).or_default();
+            let mark = entry.seen.get(&pool).copied().unwrap_or(entry.offered);
+            let foreign = entry.offered - mark;
+            wait += foreign.div_ceil(wpc.max(1));
+            entry.offered += words;
+            entry.seen.insert(pool, entry.offered);
+        }
+        wait
+    }
+
+    /// Cumulative words offered per link, sorted by link — the per-level
+    /// occupancy surface the placement report prints.
+    pub fn occupancy(&self) -> Vec<(LinkId, u64)> {
+        let state = self.state.lock().unwrap();
+        let mut rows: Vec<(LinkId, u64)> =
+            state.iter().map(|(&link, s)| (link, s.offered)).collect();
+        rows.sort();
+        rows
     }
 }
 
@@ -141,6 +243,13 @@ pub struct Placement {
     pub topology: Arc<Topology>,
     /// The tile-routing policy.
     pub policy: PlacementPolicy,
+    /// Double-buffered staging (see [`DeviceConfig::overlap`]).
+    pub overlap: bool,
+    /// Link-contention state shared by every deployment on the device.
+    pub contention: Arc<LinkContention>,
+    /// This deployment's identity in the contention model: traffic from
+    /// the same pool never queues against itself.
+    pub pool_id: u64,
 }
 
 impl Placement {
@@ -151,7 +260,14 @@ impl Placement {
         let slots = (0..n.max(1))
             .map(|i| CrossbarPath { bank: topology.bank_path(0), crossbar: i })
             .collect();
-        Self { slots, topology, policy: PlacementPolicy::Locality }
+        Self {
+            slots,
+            topology,
+            policy: PlacementPolicy::Locality,
+            overlap: true,
+            contention: Arc::new(LinkContention::new()),
+            pool_id: 0,
+        }
     }
 }
 
@@ -198,8 +314,12 @@ pub struct RouteDecision {
     /// The subset of `restage_words` whose move crossed a channel.
     pub cross_channel_words: u64,
     /// Modeled transfer cycles for all staged words at the per-level
-    /// costs.
+    /// costs, *including* any link-contention wait.
     pub transfer_cycles: u64,
+    /// The queuing share of `transfer_cycles`: cycles this tile's
+    /// staging waited behind other deployments' traffic on shared links
+    /// (zero for a pool alone on its links).
+    pub link_wait_cycles: u64,
     /// Whether the tile found its resident words already in place.
     pub locality_hit: bool,
 }
@@ -216,6 +336,11 @@ pub struct Router {
     policy: PlacementPolicy,
     /// The distinct banks the pool's slots occupy, in lane order.
     lanes: Vec<BankPath>,
+    /// Shared link-contention state; `None` routes on infinitely wide
+    /// links (the pre-contention model, kept for standalone routers).
+    contention: Option<Arc<LinkContention>>,
+    /// This pool's identity in the contention model.
+    pool_id: u64,
     state: Mutex<RouterState>,
 }
 
@@ -231,18 +356,85 @@ struct RouterState {
 }
 
 impl Router {
-    /// A router over the given bank lanes.
+    /// A router over the given bank lanes, on infinitely wide links (no
+    /// contention state).
     pub fn new(topology: Arc<Topology>, policy: PlacementPolicy, lanes: Vec<BankPath>) -> Self {
+        Self::build(topology, policy, lanes, None, 0)
+    }
+
+    /// A router sharing a device's [`LinkContention`] state with the
+    /// other pools placed on it, identified as `pool_id`.
+    pub fn with_contention(
+        topology: Arc<Topology>,
+        policy: PlacementPolicy,
+        lanes: Vec<BankPath>,
+        contention: Arc<LinkContention>,
+        pool_id: u64,
+    ) -> Self {
+        Self::build(topology, policy, lanes, Some(contention), pool_id)
+    }
+
+    fn build(
+        topology: Arc<Topology>,
+        policy: PlacementPolicy,
+        lanes: Vec<BankPath>,
+        contention: Option<Arc<LinkContention>>,
+        pool_id: u64,
+    ) -> Self {
         assert!(!lanes.is_empty(), "a router needs at least one bank lane");
         Self {
             topology,
             policy,
             lanes,
+            contention,
+            pool_id,
             state: Mutex::new(RouterState {
                 residency: HashMap::new(),
                 next: 0,
                 rng: SplitMix64::new(0x504C_4143_452E), // "PLACE."
             }),
+        }
+    }
+
+    /// The links a host load into `to` traverses, widest first, each with
+    /// its words-per-cycle budget.
+    fn host_path(&self, to: BankPath) -> Vec<(LinkId, u64)> {
+        let w = self.topology.links();
+        vec![
+            (LinkId::Channel(to.channel), w.channel_wpc),
+            (LinkId::Group(to.channel, to.group), w.group_wpc),
+            (LinkId::Bank(to.channel, to.group, to.bank), w.bank_wpc),
+        ]
+    }
+
+    /// The links a bank-to-bank move traverses: up from `from` to the
+    /// lowest common ancestor, then down to `to`.
+    fn move_path(&self, from: BankPath, to: BankPath) -> Vec<(LinkId, u64)> {
+        let w = self.topology.links();
+        let mut path = Vec::new();
+        if from == to {
+            return path;
+        }
+        path.push((LinkId::Bank(from.channel, from.group, from.bank), w.bank_wpc));
+        if from.channel != to.channel {
+            path.push((LinkId::Group(from.channel, from.group), w.group_wpc));
+            path.push((LinkId::Channel(from.channel), w.channel_wpc));
+            path.push((LinkId::Channel(to.channel), w.channel_wpc));
+            path.push((LinkId::Group(to.channel, to.group), w.group_wpc));
+        } else if from.group != to.group {
+            path.push((LinkId::Group(from.channel, from.group), w.group_wpc));
+            path.push((LinkId::Group(to.channel, to.group), w.group_wpc));
+        }
+        path.push((LinkId::Bank(to.channel, to.group, to.bank), w.bank_wpc));
+        path
+    }
+
+    /// Offer `words` along `path` to the shared contention state (when
+    /// present), returning the modeled queuing wait.
+    fn contend(&self, path: &[(LinkId, u64)], words: u64) -> u64 {
+        match &self.contention {
+            Some(c) => c.offer(self.pool_id, path, words),
+            None => 0,
         }
     }
 
@@ -299,43 +491,58 @@ impl Router {
         drop(state);
 
         let to = self.lanes[lane];
+        let host = self.host_path(to);
         let fresh_cycles = self.topology.host_load_cycles(traffic.fresh_words);
         match resident_at {
             // The resident words are already on this bank: only the fresh
             // words move.
-            Some(prev) if prev == lane => RouteDecision {
-                lane,
-                staged_words: traffic.fresh_words,
-                restage_words: 0,
-                cross_channel_words: 0,
-                transfer_cycles: fresh_cycles,
-                locality_hit: true,
-            },
+            Some(prev) if prev == lane => {
+                let wait = self.contend(&host, traffic.fresh_words);
+                RouteDecision {
+                    lane,
+                    staged_words: traffic.fresh_words,
+                    restage_words: 0,
+                    cross_channel_words: 0,
+                    transfer_cycles: fresh_cycles + wait,
+                    link_wait_cycles: wait,
+                    locality_hit: true,
+                }
+            }
             // Resident elsewhere: re-stage them across the hierarchy at
             // the modeled per-level cost.
             Some(prev) => {
                 let from = self.lanes[prev];
                 let crossed = self.topology.crosses_channel(from, to);
+                let wait = self.contend(&host, traffic.fresh_words)
+                    + self.contend(&self.move_path(from, to), traffic.resident_words);
                 RouteDecision {
                     lane,
                     staged_words: traffic.fresh_words + traffic.resident_words,
                     restage_words: traffic.resident_words,
                     cross_channel_words: if crossed { traffic.resident_words } else { 0 },
                     transfer_cycles: fresh_cycles
-                        + self.topology.move_cycles(from, to, traffic.resident_words),
+                        + self.topology.move_cycles(from, to, traffic.resident_words)
+                        + wait,
+                    link_wait_cycles: wait,
                     locality_hit: false,
                 }
             }
             // First staging: everything comes from the host.
-            None => RouteDecision {
-                lane,
-                staged_words: traffic.fresh_words + traffic.resident_words,
-                restage_words: 0,
-                cross_channel_words: 0,
-                transfer_cycles: fresh_cycles
-                    + self.topology.host_load_cycles(traffic.resident_words),
-                locality_hit: false,
-            },
+            None => {
+                let wait =
+                    self.contend(&host, traffic.fresh_words + traffic.resident_words);
+                RouteDecision {
+                    lane,
+                    staged_words: traffic.fresh_words + traffic.resident_words,
+                    restage_words: 0,
+                    cross_channel_words: 0,
+                    transfer_cycles: fresh_cycles
+                        + self.topology.host_load_cycles(traffic.resident_words)
+                        + wait,
+                    link_wait_cycles: wait,
+                    locality_hit: false,
+                }
+            }
         }
     }
 }
@@ -428,6 +635,85 @@ mod tests {
         assert!(restaged > 0, "random placement re-stages the panel");
         assert!(cross > 0, "some re-stages cross a channel");
         assert!(cross <= restaged, "cross-channel words are a subset");
+    }
+
+    #[test]
+    fn a_pool_alone_on_its_links_never_waits() {
+        let topology = Arc::new(Topology::parse("1x2x1x1").unwrap());
+        let contention = Arc::new(LinkContention::new());
+        let lanes: Vec<BankPath> =
+            (0..topology.total_banks()).map(|i| topology.bank_path(i)).collect();
+        let r = Router::with_contention(
+            Arc::clone(&topology),
+            PlacementPolicy::Locality,
+            lanes,
+            contention,
+            1,
+        );
+        for _ in 0..16 {
+            let d = r.route(&TileTraffic::fresh(32));
+            assert_eq!(d.link_wait_cycles, 0, "own traffic never queues against itself");
+            assert_eq!(d.transfer_cycles, topology.host_load_cycles(32));
+        }
+    }
+
+    #[test]
+    fn shared_channel_contends_and_separate_channels_do_not() {
+        // The same two-pool traffic, staged twice: once with both pools'
+        // banks under one channel (they share the device↔channel link),
+        // once with a channel each. Per-route latency is identical in
+        // both shapes (the flat cost model only counts links walked), so
+        // any transfer_cycles excess is pure modeled queuing.
+        let run = |spec: &str, bank_a: usize, bank_b: usize| -> (u64, u64) {
+            let topology = Arc::new(Topology::parse(spec).unwrap());
+            let contention = Arc::new(LinkContention::new());
+            let mk = |bank: usize, pool: u64, c: &Arc<LinkContention>| {
+                Router::with_contention(
+                    Arc::clone(&topology),
+                    PlacementPolicy::Locality,
+                    vec![topology.bank_path(bank)],
+                    Arc::clone(c),
+                    pool,
+                )
+            };
+            let a = mk(bank_a, 1, &contention);
+            let b = mk(bank_b, 2, &contention);
+            let mut transfer = 0u64;
+            let mut wait = 0u64;
+            for _ in 0..8 {
+                for r in [&a, &b] {
+                    let d = r.route(&TileTraffic::fresh(16));
+                    transfer += d.transfer_cycles;
+                    wait += d.link_wait_cycles;
+                }
+            }
+            (transfer, wait)
+        };
+        // 1x2x1x1: banks c0.g0.b0 and c0.g1.b0 share only the channel.
+        let (shared_transfer, shared_wait) = run("1x2x1x1", 0, 1);
+        // 2x1x1x1: banks c0.g0.b0 and c1.g0.b0 share nothing.
+        let (separate_transfer, separate_wait) = run("2x1x1x1", 0, 1);
+        assert_eq!(separate_wait, 0, "disjoint links never queue");
+        assert!(shared_wait > 0, "interleaved pools on one channel must queue");
+        assert!(
+            shared_transfer > separate_transfer,
+            "contention must surface in transfer_cycles: shared={shared_transfer} separate={separate_transfer}"
+        );
+    }
+
+    #[test]
+    fn contention_occupancy_counts_offered_words() {
+        let c = LinkContention::new();
+        let path = [(LinkId::Channel(0), 1), (LinkId::Bank(0, 0, 0), 4)];
+        assert_eq!(c.offer(1, &path, 10), 0, "first visit rides an idle link");
+        // Pool 2 follows 10 foreign words: 10/1 on the channel + 10/4
+        // (rounded up) on the bank link.
+        assert_eq!(c.offer(2, &path, 2), 10 + 3);
+        // Pool 1 again: only pool 2's words are foreign to it.
+        assert_eq!(c.offer(1, &path, 0), 0, "zero-word transfers don't queue");
+        assert_eq!(c.offer(1, &path, 4), 2 + 1);
+        let occ = c.occupancy();
+        assert_eq!(occ, vec![(LinkId::Channel(0), 16), (LinkId::Bank(0, 0, 0), 16)]);
     }
 
     #[test]

@@ -42,6 +42,32 @@ impl Default for TransferCosts {
     }
 }
 
+/// Modeled words-per-cycle width of each hierarchy link — the bandwidth
+/// budget the contention model queues against when two deployments
+/// restage through the same link at the same time. Latency
+/// ([`TransferCosts`]) says how long one word takes; these budgets say
+/// how many words fit per cycle before traffic starts waiting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkBudgets {
+    /// Device ↔ channel link, words per cycle (the narrowest link).
+    pub channel_wpc: u64,
+    /// Channel ↔ bank-group link, words per cycle.
+    pub group_wpc: u64,
+    /// Bank-group ↔ bank link, words per cycle.
+    pub bank_wpc: u64,
+}
+
+impl Default for LinkBudgets {
+    /// The default budget mirrors the cost model's narrowing shape
+    /// upside down: the shared channel link is the narrowest (1 word per
+    /// cycle), bank-group links are twice as wide, bank links four
+    /// times — many banks share one channel, so the channel is where
+    /// contention bites.
+    fn default() -> Self {
+        Self { channel_wpc: 1, group_wpc: 2, bank_wpc: 4 }
+    }
+}
+
 /// Address of one bank inside the device hierarchy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct BankPath {
@@ -83,6 +109,7 @@ pub struct Topology {
     banks: usize,
     crossbars_per_bank: usize,
     costs: TransferCosts,
+    links: LinkBudgets,
 }
 
 impl Topology {
@@ -117,7 +144,20 @@ impl Topology {
                 )));
             }
         }
-        Ok(Self { channels, bank_groups, banks, crossbars_per_bank, costs })
+        Ok(Self {
+            channels,
+            bank_groups,
+            banks,
+            crossbars_per_bank,
+            costs,
+            links: LinkBudgets::default(),
+        })
+    }
+
+    /// The same topology with explicit per-level link bandwidth budgets.
+    pub fn with_link_budgets(mut self, links: LinkBudgets) -> Self {
+        self.links = links;
+        self
     }
 
     /// The degenerate single-bank topology `1x1x1xN`: one channel, one
@@ -130,6 +170,7 @@ impl Topology {
             banks: 1,
             crossbars_per_bank: n.max(1),
             costs: TransferCosts::default(),
+            links: LinkBudgets::default(),
         }
     }
 
@@ -180,6 +221,22 @@ impl Topology {
         self.costs
     }
 
+    /// The per-level link bandwidth budgets the contention model queues
+    /// against.
+    pub fn links(&self) -> LinkBudgets {
+        self.links
+    }
+
+    /// Cycles-per-word cost of the shard staging write channel: the full
+    /// host-to-bank path (`channel + group + bank`). This is the write
+    /// channel the double-buffered shards stage operand columns through
+    /// while the crossbar computes; a tile whose staging cycles
+    /// (`stage_words * stage_cpw`) fit under the previous tile's compute
+    /// cycles is fully hidden.
+    pub fn stage_cpw(&self) -> u64 {
+        self.costs.channel_cpw + self.costs.group_cpw + self.costs.bank_cpw
+    }
+
     /// Banks in the whole device.
     pub fn total_banks(&self) -> usize {
         self.channels * self.bank_groups * self.banks
@@ -205,7 +262,7 @@ impl Topology {
     /// Modeled cycles to stage `words` operand words from the host into
     /// any bank: every link on the path down is paid once per word.
     pub fn host_load_cycles(&self, words: u64) -> u64 {
-        words * (self.costs.channel_cpw + self.costs.group_cpw + self.costs.bank_cpw)
+        words * self.stage_cpw()
     }
 
     /// Modeled cycles to move `words` already-staged words from bank
@@ -296,7 +353,9 @@ mod tests {
     fn transfer_costs_scale_with_distance() {
         let t = Topology::parse("2x2x2x4").unwrap();
         let b = |i: usize| t.bank_path(i);
-        // Host staging pays the whole path down: (4 + 2 + 1) per word.
+        // Host staging pays the whole path down: (4 + 2 + 1) per word —
+        // the same cycles-per-word the staging write channel charges.
+        assert_eq!(t.stage_cpw(), 7);
         assert_eq!(t.host_load_cycles(10), 70);
         // Same bank: free.
         assert_eq!(t.move_cycles(b(0), b(0), 10), 0);
@@ -308,5 +367,16 @@ mod tests {
         assert_eq!(t.move_cycles(b(0), b(4), 10), 140);
         assert!(t.crosses_channel(b(0), b(4)));
         assert!(!t.crosses_channel(b(0), b(2)));
+    }
+
+    #[test]
+    fn link_budgets_default_and_override() {
+        let t = Topology::parse("2x2x2x4").unwrap();
+        // Default budgets narrow toward the shared channel link.
+        assert_eq!(t.links(), LinkBudgets { channel_wpc: 1, group_wpc: 2, bank_wpc: 4 });
+        let wide = t.with_link_budgets(LinkBudgets { channel_wpc: 8, group_wpc: 8, bank_wpc: 8 });
+        assert_eq!(wide.links().channel_wpc, 8);
+        // Budgets don't change latency, only queuing.
+        assert_eq!(wide.host_load_cycles(10), 70);
     }
 }

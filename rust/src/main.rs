@@ -14,12 +14,16 @@
 //!                  [--mm-requests 4] [--mm-rows 64] [--fv-requests 4] [--fv-rows 128]
 //!                  [--fv-format fp32|bf16|fp16]
 //!                  [--topology CxGxBxX] [--placement locality|random]
+//!                  [--overlap on|off]
 //!                                     # multiply + matvec + matmul + float-matvec
 //!                                     # shard-pool demo with per-workload metrics;
 //!                                     # --topology places the pools on a
 //!                                     # channels x groups x banks x crossbars
-//!                                     # device (default: flat single bank)
+//!                                     # device (default: flat single bank);
+//!                                     # --overlap toggles double-buffered operand
+//!                                     # staging (default on)
 //! multpim topology [--topology 2x2x2x4] [--placement locality|random] [--shards 4]
+//!                  [--overlap on|off]
 //!                                     # launch the serve tenants on a hierarchical
 //!                                     # device, run a small mixed burst, and print
 //!                                     # the placement report (per-level capacity,
@@ -68,6 +72,19 @@ fn opt(args: &[String], name: &str) -> Option<String> {
 
 fn opt_u64(args: &[String], name: &str, default: u64) -> u64 {
     opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Apply the `--overlap on|off` knob to a device config (absent = keep
+/// the config's default, which is on).
+fn apply_overlap(args: &[String], device: DeviceConfig) -> Result<DeviceConfig> {
+    match opt(args, "--overlap").as_deref() {
+        None => Ok(device),
+        Some("on") => Ok(device.with_overlap(true)),
+        Some("off") => Ok(device.with_overlap(false)),
+        Some(other) => Err(multpim::Error::BadParameter(format!(
+            "--overlap must be on|off, got {other}"
+        ))),
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -298,16 +315,26 @@ fn run(args: &[String]) -> Result<()> {
             // --topology places the pools on a hierarchical device (the
             // launch is capacity-checked); without it the flat degenerate
             // single-bank device serves exactly like the old pool.
-            let coord = match opt(args, "--topology") {
+            // --overlap applies either way.
+            let device = match opt(args, "--topology") {
                 Some(spec) => {
                     let mut device = DeviceConfig::new(Topology::parse(&spec)?);
                     if let Some(policy) = opt(args, "--placement") {
                         device.policy = PlacementPolicy::parse(&policy)?;
                     }
-                    Coordinator::launch_on(device, &multiplies, &matvecs, &matmuls, &floatvecs)?
+                    device
                 }
-                None => Coordinator::launch(&multiplies, &matvecs, &matmuls, &floatvecs)?,
+                None => {
+                    let total = multiplies.iter().map(|d| d.spec.shards).sum::<usize>()
+                        + matvecs.iter().map(|d| d.spec.shards).sum::<usize>()
+                        + matmuls.iter().map(|d| d.spec.shards).sum::<usize>()
+                        + floatvecs.iter().map(|d| d.spec.shards).sum::<usize>();
+                    DeviceConfig::flat(total.max(1))
+                }
             };
+            let device = apply_overlap(args, device)?;
+            let coord =
+                Coordinator::launch_on(device, &multiplies, &matvecs, &matmuls, &floatvecs)?;
             let mut rng = SplitMix64::new(0xE0);
             let mut rxs = Vec::with_capacity(requests as usize);
             let mut expected = Vec::with_capacity(requests as usize);
@@ -444,6 +471,7 @@ fn run(args: &[String]) -> Result<()> {
             if let Some(policy) = opt(args, "--placement") {
                 device.policy = PlacementPolicy::parse(&policy)?;
             }
+            let device = apply_overlap(args, device)?;
             let coord = Coordinator::launch_on(
                 device,
                 &[MultiplyDeployment {

@@ -257,6 +257,139 @@ fn hierarchical_mixed_traffic_accounts_per_level_exactly() {
     coord.shutdown();
 }
 
+/// Double-buffered staging is a latency model, not a datapath: the same
+/// seeded traffic served with overlap on and off is bit-identical for all
+/// four tenants at every row-tile / column-panel boundary. The off run
+/// exposes exactly its staging cycles and hides nothing; the on run never
+/// stalls longer than it stages.
+#[test]
+fn overlap_modes_serve_all_tenants_bit_identically() {
+    let fmt = FloatFormat::new(FV_EXP, FV_MAN);
+    let mut outs_by_mode = Vec::new();
+    for overlap in [true, false] {
+        let device =
+            DeviceConfig::new(Topology::parse("2x2x2x4").unwrap()).with_overlap(overlap);
+        let coord = Coordinator::launch_on(
+            device,
+            &[mul_deployment(2)],
+            &[mv_deployment(4)],
+            &[mm_deployment(4)],
+            &[fv_deployment(2)],
+        )
+        .unwrap();
+        let mut rng = SplitMix64::new(0x07E2_14D0);
+        let mut outs: Vec<Vec<u64>> = Vec::new();
+        for m in [1usize, SHARD_ROWS, SHARD_ROWS + 1, 3 * SHARD_ROWS] {
+            let (a, b) = (rng.bits(N_BITS), rng.bits(N_BITS));
+            assert_eq!(coord.multiply(N_BITS, a, b).unwrap(), a * b);
+            outs.push(vec![a * b]);
+
+            let rows = random_matrix(&mut rng, m, K as usize);
+            let x: Vec<u64> = (0..K).map(|_| rng.bits(N_BITS)).collect();
+            let served = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(served[r], inner_product_mod(N_BITS, row, &x), "m={m} row={r}");
+            }
+            outs.push(served);
+
+            let a = random_matrix(&mut rng, m, K as usize);
+            let b = random_matrix(&mut rng, K as usize, PANEL_COLS + 1);
+            let c = coord.matmul(N_BITS, a.clone(), b.clone()).unwrap();
+            for j in 0..PANEL_COLS + 1 {
+                let col: Vec<u64> = b.iter().map(|b_row| b_row[j]).collect();
+                for (r, row) in c.iter().enumerate() {
+                    assert_eq!(row[j], inner_product_mod(N_BITS, &a[r], &col), "C[{r}][{j}]");
+                }
+            }
+            outs.extend(c);
+
+            let rows = random_float_matrix(&mut rng, m, K as usize);
+            let x: Vec<u64> = random_float_matrix(&mut rng, 1, K as usize).remove(0);
+            let served = coord.float_matvec(FV_EXP, FV_MAN, rows.clone(), x.clone()).unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(served[r], float_dot_ref(fmt, row, &x), "m={m} row={r}");
+            }
+            outs.push(served);
+        }
+
+        for (key, wl) in coord.metrics().workloads() {
+            let stage = wl.stage_cycles.load(Ordering::Relaxed);
+            let stall = wl.stall_cycles.load(Ordering::Relaxed);
+            let hidden = wl.hidden_words.load(Ordering::Relaxed);
+            assert!(stage > 0, "{key}: staged traffic is modeled");
+            if overlap {
+                assert!(stall <= stage, "{key}: stalls never exceed staging");
+            } else {
+                assert_eq!(stall, stage, "{key}: synchronous staging is fully exposed");
+                assert_eq!(hidden, 0, "{key}: synchronous staging hides nothing");
+            }
+        }
+        let report = coord.placement_report();
+        let tag = if overlap { "overlap=on" } else { "overlap=off" };
+        assert!(report.contains(tag), "{report}");
+        outs_by_mode.push(outs);
+        coord.shutdown();
+    }
+    assert_eq!(outs_by_mode[0], outs_by_mode[1], "overlap must never change served results");
+}
+
+/// Two tenants staging through one shared channel queue against each
+/// other; the same traffic on a two-channel device where each tenant owns
+/// its own channel does not. The uncontended per-word path cost is
+/// identical on both shapes (channel + group + bank), so the entire
+/// transfer-cycle difference is modeled queuing.
+#[test]
+fn shared_channel_contention_raises_transfer_cycles() {
+    let mv_a = mv_deployment(1);
+    let mv_b = MatVecDeployment {
+        n_bits: N_BITS,
+        n_elems: 2,
+        shard_rows: SHARD_ROWS,
+        spec: DeploymentSpec::new(1),
+    };
+    let mut totals = Vec::new();
+    // 1x2x1x1: both single-shard pools behind the one channel link.
+    // 2x1x1x1: the allocator's bank sweep gives each pool its own channel.
+    for shape in ["1x2x1x1", "2x1x1x1"] {
+        let device = DeviceConfig::new(Topology::parse(shape).unwrap());
+        let coord = Coordinator::launch_on(device, &[], &[mv_a, mv_b], &[], &[]).unwrap();
+        let mut rng = SplitMix64::new(0xC047_E570);
+        for _ in 0..4 {
+            // Alternate tenants so each one's staging lands on the links
+            // right after the other's traffic crossed them.
+            let rows = random_matrix(&mut rng, SHARD_ROWS, K as usize);
+            let x: Vec<u64> = (0..K).map(|_| rng.bits(N_BITS)).collect();
+            let out = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(out[r], inner_product_mod(N_BITS, row, &x), "row {r}");
+            }
+            let rows = random_matrix(&mut rng, SHARD_ROWS, 2);
+            let x: Vec<u64> = (0..2).map(|_| rng.bits(N_BITS)).collect();
+            let out = coord.matvec(N_BITS, rows.clone(), x.clone()).unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(out[r], inner_product_mod(N_BITS, row, &x), "row {r}");
+            }
+        }
+        let mut transfer = 0u64;
+        let mut wait = 0u64;
+        for key in [
+            WorkloadKey::MatVec { n_bits: N_BITS, n_elems: K },
+            WorkloadKey::MatVec { n_bits: N_BITS, n_elems: 2 },
+        ] {
+            let wl = coord.metrics().workload(key).unwrap();
+            transfer += wl.transfer_cycles.load(Ordering::Relaxed);
+            wait += wl.link_wait_cycles.load(Ordering::Relaxed);
+        }
+        totals.push((transfer, wait));
+        coord.shutdown();
+    }
+    let (shared, separate) = (totals[0], totals[1]);
+    assert!(shared.1 > 0, "tenants queuing through one channel wait on each other");
+    assert_eq!(separate.1, 0, "tenants on their own channels never wait");
+    assert!(shared.0 > separate.0, "contention raises modeled transfer cycles");
+    assert_eq!(shared.0 - shared.1, separate.0, "the entire difference is queuing");
+}
+
 /// Locality vs seeded-random placement on the same hierarchical device:
 /// the results are placement-invariant, locality never re-stages a
 /// resident A panel, and the random baseline provably does.
