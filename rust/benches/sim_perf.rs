@@ -7,28 +7,40 @@
 //! restage + `CompiledProgram`), the §VI matvec direct flow against its
 //! compiled shard flow (`CompiledPipeline` + transposed/broadcast
 //! restage), served GEMM (2-D tiled panel flow) against per-request
-//! matvec composition, topology-aware placement, and the double-buffered
-//! staging overlap model. These are the numbers tracked by EXPERIMENTS.md
-//! §Perf, §Matvec-Serving, §GEMM, §Topology, and §Overlap; the acceptance
+//! matvec composition, topology-aware placement, the double-buffered
+//! staging overlap model, the compiled-program disk cache (cold vs warm
+//! launch of the FP32x8 float chain), and the bit-transposed wire format
+//! (row-major vs plane staging for the matvec tenant). These are the
+//! numbers tracked by EXPERIMENTS.md §Perf, §Matvec-Serving, §GEMM,
+//! §Topology, §Overlap, §Cold-start, and §Wire-format; the acceptance
 //! bars are >= 1.5x products/sec for the multiply shard path at N=32,
 //! 4096 rows, >= 1.5x for served matvec at N=16, 64x64, >= 1.5x for
 //! served GEMM at N=16, 64x64x64, >= 2x fewer cross-channel restage
-//! words under locality placement, and >= 1.3x modeled throughput from
-//! overlapped staging with bit-identical results.
+//! words under locality placement, >= 1.3x modeled throughput from
+//! overlapped staging with bit-identical results, >= 10x faster warm
+//! (cache-hit) launches than cold compiles for FP32x8, and >= 1.5x
+//! fewer modeled staging words on the bit-transposed matvec wire.
 //!
 //! Sections run individually via `cargo bench --bench sim_perf -- <name>`
 //! where `<name>` is one of `gates`, `serving`, `matvec`, `gemm`,
-//! `topology`, `overlap`; with no argument every section runs.
+//! `topology`, `overlap`, `coldstart`, `wire`; with no argument every
+//! section runs. Each run also emits `BENCH_sim_perf.json` (hand-rolled
+//! JSON, no serde) holding every executed section's headline numbers so
+//! the perf trajectory is machine-trackable across PRs.
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
 
 use multpim::algorithms::matmul::{plan_tiles, MultPimMatMul};
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
+use multpim::cache::{CacheContext, ProgramCache};
 use multpim::coordinator::{
-    ChainEngine, Coordinator, DeploymentSpec, EngineConfig, MatMulDeployment, MatVecDeployment,
-    MultiplyEngine, WorkloadKey,
+    staging_cost, ChainEngine, Coordinator, DeploymentSpec, EngineConfig, FloatVecEngine,
+    MatMulDeployment, MatVecDeployment, MultiplyEngine, StageKind, WireFormat, WorkloadKey,
 };
+use multpim::crossbar::PlaneMatrix;
 use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::inner_product_mod;
 use multpim::runtime::trace::program_to_trace;
@@ -43,33 +55,88 @@ fn main() {
     let only = args.first().map(String::as_str);
     let run_section = |name: &str| only.is_none() || only == Some(name);
 
+    let mut reports = Vec::new();
     if run_section("gates") {
-        hot_path();
+        reports.push(hot_path());
     }
     if run_section("serving") {
-        multiply_serving();
+        reports.push(multiply_serving());
     }
     if run_section("matvec") {
-        matvec_serving();
+        reports.push(matvec_serving());
     }
     if run_section("gemm") || run_section("topology") {
         let fx = gemm_fixture();
         if run_section("gemm") {
-            gemm_serving(&fx);
+            reports.push(gemm_serving(&fx));
         }
         if run_section("topology") {
-            topology_locality(&fx);
+            reports.push(topology_locality(&fx));
         }
     }
     if run_section("overlap") {
-        staging_overlap();
+        reports.push(staging_overlap());
+    }
+    if run_section("coldstart") {
+        reports.push(cold_start());
+    }
+    if run_section("wire") {
+        reports.push(wire_format());
+    }
+    write_bench_json(&reports);
+}
+
+/// One section's headline numbers, collected for `BENCH_sim_perf.json`.
+struct SectionReport {
+    name: &'static str,
+    fields: Vec<(String, f64)>,
+}
+
+impl SectionReport {
+    fn new(name: &'static str) -> Self {
+        Self { name, fields: Vec::new() }
+    }
+
+    fn push(&mut self, key: impl Into<String>, value: f64) {
+        self.fields.push((key.into(), value));
+    }
+}
+
+/// Hand-rolled JSON emitter (offline env: no serde). Keys are fixed
+/// ASCII identifiers, so no string escaping is needed; non-finite
+/// values render as `null`, integral values without a fraction.
+fn write_bench_json(reports: &[SectionReport]) {
+    fn num(v: f64) -> String {
+        if !v.is_finite() {
+            "null".into()
+        } else if v == v.trunc() && v.abs() < 9.0e15 {
+            format!("{}", v as i64)
+        } else {
+            format!("{v:.6}")
+        }
+    }
+    let mut out = String::from("{\n  \"bench\": \"sim_perf\",\n  \"sections\": {\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str(&format!("    \"{}\": {{\n", r.name));
+        for (j, (k, v)) in r.fields.iter().enumerate() {
+            let sep = if j + 1 < r.fields.len() { "," } else { "" };
+            out.push_str(&format!("      \"{k}\": {}{sep}\n", num(*v)));
+        }
+        let sep = if i + 1 < reports.len() { "," } else { "" };
+        out.push_str(&format!("    }}{sep}\n"));
+    }
+    out.push_str("  }\n}\n");
+    match std::fs::write("BENCH_sim_perf.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_sim_perf.json ({} section(s))", reports.len()),
+        Err(e) => println!("\nwarning: could not write BENCH_sim_perf.json: {e}"),
     }
 }
 
 /// Gate-application throughput on the simulator hot path, interpreted vs
 /// compiled.
-fn hot_path() {
+fn hot_path() -> SectionReport {
     println!("=== simulator performance (hot path) ===");
+    let mut rep = SectionReport::new("gates");
     for (n, rows) in [(16u32, 1024usize), (32, 1024), (32, 4096), (32, 16384)] {
         let mult = MultPim::new(n);
         let program = mult.program();
@@ -110,12 +177,17 @@ fn hot_path() {
             secs / secs2,
             rows as f64 / secs2,
         );
+        rep.push(format!("interp_apps_per_s_n{n}_rows{rows}"), gate_apps as f64 / secs);
+        rep.push(format!("compiled_apps_per_s_n{n}_rows{rows}"), gate_apps as f64 / secs2);
+        rep.push(format!("compiled_products_per_s_n{n}_rows{rows}"), rows as f64 / secs2);
     }
+    rep
 }
 
 /// End-to-end multiply serving path: seed flow vs shard flow, per batch.
-fn multiply_serving() {
+fn multiply_serving() -> SectionReport {
     println!("\n=== serving path: interpreted seed flow vs compiled shard flow ===");
+    let mut rep = SectionReport::new("serving");
     let mut headline_speedup = None;
     for (n, rows) in [(32u32, 1024usize), (32, 4096)] {
         let mult = MultPim::new(n);
@@ -162,6 +234,8 @@ fn multiply_serving() {
             rows as f64 / s_shard,
             speedup,
         );
+        rep.push(format!("shard_products_per_s_n{n}_rows{rows}"), rows as f64 / s_shard);
+        rep.push(format!("speedup_n{n}_rows{rows}"), speedup);
         if rows == 4096 {
             headline_speedup = Some(speedup);
         }
@@ -174,11 +248,13 @@ fn multiply_serving() {
         headline >= 1.5,
         "serving speedup regressed below the 1.5x acceptance bar: {headline:.2}x"
     );
+    rep
 }
 
 /// §VI matvec: direct engine flow vs served shard flow, per request.
-fn matvec_serving() {
+fn matvec_serving() -> SectionReport {
     println!("\n=== matvec serving path: direct engine flow vs compiled shard flow ===");
+    let mut rep = SectionReport::new("matvec");
     let mut matvec_headline = None;
     for (n, elems, m) in [(16u32, 16u32, 64usize), (16, 64, 64)] {
         let engine = ChainEngine::new(n, elems, m).unwrap();
@@ -218,6 +294,8 @@ fn matvec_serving() {
             m as f64 / s_served,
             speedup,
         );
+        rep.push(format!("served_rows_per_s_n{n}_{m}x{elems}"), m as f64 / s_served);
+        rep.push(format!("speedup_n{n}_{m}x{elems}"), speedup);
         if elems == 64 {
             matvec_headline = Some(speedup);
         }
@@ -230,6 +308,7 @@ fn matvec_serving() {
         mv_headline >= 1.5,
         "served matvec speedup regressed below the 1.5x acceptance bar: {mv_headline:.2}x"
     );
+    rep
 }
 
 /// Shared inputs for the GEMM and topology sections: an `m x k` A and a
@@ -253,8 +332,9 @@ fn gemm_fixture() -> GemmFixture {
 }
 
 /// GEMM: per-request matvec composition vs the served 2-D panel flow.
-fn gemm_serving(fx: &GemmFixture) {
+fn gemm_serving(fx: &GemmFixture) -> SectionReport {
     println!("\n=== GEMM serving path: per-request matvec composition vs served panel flow ===");
+    let mut rep = SectionReport::new("gemm");
     let (n, k, m, p, panel_cols) = (fx.n, fx.k, fx.m, fx.p, fx.panel_cols);
     let (a, b) = (&fx.a, &fx.b);
     let gemm = MultPimMatMul::new(n, k);
@@ -324,6 +404,9 @@ fn gemm_serving(fx: &GemmFixture) {
         gemm_speedup >= 1.5,
         "served GEMM speedup regressed below the 1.5x acceptance bar: {gemm_speedup:.2}x"
     );
+    rep.push(format!("served_products_per_s_n{n}_{m}x{k}x{p}"), products / s_served);
+    rep.push(format!("speedup_n{n}_{m}x{k}x{p}"), gemm_speedup);
+    rep
 }
 
 /// Topology locality: the same served GEMM traffic on a hierarchical
@@ -331,8 +414,9 @@ fn gemm_serving(fx: &GemmFixture) {
 /// numbers tracked by EXPERIMENTS.md §Topology; the acceptance bar is
 /// >= 2x fewer modeled cross-channel restage words under the locality
 /// policy.
-fn topology_locality(fx: &GemmFixture) {
+fn topology_locality(fx: &GemmFixture) -> SectionReport {
     println!("\n=== topology locality: served GEMM, locality-aware vs random placement ===");
+    let mut rep = SectionReport::new("topology");
     let (n, k, p, panel_cols) = (fx.n, fx.k, fx.p, fx.panel_cols);
     let (a, b) = (&fx.a, &fx.b);
     // Ground truth for the placement-invariance check.
@@ -372,12 +456,18 @@ fn topology_locality(fx: &GemmFixture) {
             .workload(WorkloadKey::MatMul { n_bits: n, k })
             .expect("matmul counters registered at launch");
         let cross = wl.cross_channel_words.load(Ordering::Relaxed);
+        let policy_name = match policy {
+            PlacementPolicy::Locality => "locality",
+            PlacementPolicy::Random => "random",
+        };
+        rep.push(format!("cross_channel_words_{policy_name}"), cross as f64);
+        rep.push(
+            format!("transfer_cycles_{policy_name}"),
+            wl.transfer_cycles.load(Ordering::Relaxed) as f64,
+        );
         println!(
             "policy={:<9} staged_words={:<7} restage_words={:<7} cross_channel_words={:<7} transfer_cycles={:<9} locality_hits={}",
-            match policy {
-                PlacementPolicy::Locality => "locality",
-                PlacementPolicy::Random => "random",
-            },
+            policy_name,
             wl.staged_words.load(Ordering::Relaxed),
             wl.restage_words.load(Ordering::Relaxed),
             cross,
@@ -396,6 +486,7 @@ fn topology_locality(fx: &GemmFixture) {
         "locality-aware placement must cut modeled cross-channel restage words by >= 2x: \
          locality={locality_cross} random={random_cross}"
     );
+    rep
 }
 
 /// Staging overlap: the same matvec tenant served with double-buffered
@@ -404,8 +495,9 @@ fn topology_locality(fx: &GemmFixture) {
 /// results, staging fully hidden past each lane's first >= 64-row tile
 /// (stall cycles confined to cold starts), and >= 1.3x modeled
 /// throughput over the stop-and-stage baseline.
-fn staging_overlap() {
+fn staging_overlap() -> SectionReport {
     println!("\n=== staging overlap: double-buffered vs stop-and-stage, matvec on 2x2x2x4 ===");
+    let mut rep = SectionReport::new("overlap");
     let (n, elems, m, requests) = (32u32, 8u32, 256usize, 4usize);
     let shards = 4usize;
     let mut rng = SplitMix64::new(0x4F564C);
@@ -491,4 +583,178 @@ fn staging_overlap() {
         "double-buffered staging must model >= 1.3x throughput over stop-and-stage: \
          off={off_total} on={on_total}"
     );
+    rep.push("modeled_cycles_overlap_on", on_total as f64);
+    rep.push("modeled_cycles_overlap_off", off_total as f64);
+    rep.push("overlap_throughput_ratio", ratio);
+    rep
+}
+
+/// Cold start: launching the FP32x8 float deployment with an empty
+/// compiled-program cache (full emit → validate → schedule → lower →
+/// store) vs the warm path (decode from disk + re-validate only). The
+/// numbers tracked by EXPERIMENTS.md §Cold-start; the acceptance bar is
+/// a >= 10x faster warm launch, serving bit-identically to cold.
+fn cold_start() -> SectionReport {
+    println!("\n=== cold start: FP32x8 float chain, compiled-program disk cache ===");
+    let mut rep = SectionReport::new("coldstart");
+    let dir = std::env::temp_dir().join(format!("multpim-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let topology = Topology::flat(4);
+    let (exp, man, elems, shard_rows) = (8u32, 23u32, 8u32, 64usize);
+
+    // Cold: the cache directory does not exist yet, so the launch pays
+    // the full compile and then persists the artifact (1 miss, 1 store).
+    let cold_cache = Arc::new(ProgramCache::new(&dir));
+    let ctx = CacheContext::new(Arc::clone(&cold_cache), &topology);
+    let t0 = Instant::now();
+    let cold_engine =
+        FloatVecEngine::with_cache(exp, man, elems, shard_rows, Some(&ctx)).unwrap();
+    let cold = t0.elapsed();
+    let cs = cold_cache.stats();
+    assert_eq!(
+        (cs.hits, cs.misses, cs.stores),
+        (0, 1, 1),
+        "cold launch must miss the empty cache and store its artifact"
+    );
+
+    // Warm: a fresh cache handle over the same directory finds the
+    // stored artifact; only decode + chain re-validation remain.
+    let warm_cache = Arc::new(ProgramCache::new(&dir));
+    let ctx = CacheContext::new(Arc::clone(&warm_cache), &topology);
+    let t1 = Instant::now();
+    let warm_engine =
+        FloatVecEngine::with_cache(exp, man, elems, shard_rows, Some(&ctx)).unwrap();
+    let warm = t1.elapsed();
+    let ws = warm_cache.stats();
+    assert_eq!(
+        (ws.hits, ws.misses, ws.invalidations),
+        (1, 0, 0),
+        "warm launch must be served from the cache"
+    );
+
+    // Legality is re-checked on hits, but the served bits must also be
+    // identical between the compiled and rehydrated engines.
+    let tb = warm_engine.fmt().total_bits();
+    let mut rng = SplitMix64::new(0xC01D);
+    let rows: Vec<Vec<u64>> =
+        (0..shard_rows).map(|_| (0..elems).map(|_| rng.bits(tb)).collect()).collect();
+    let x: Vec<u64> = (0..elems).map(|_| rng.bits(tb)).collect();
+    let mut cold_shard = cold_engine.shard();
+    let mut warm_shard = warm_engine.shard();
+    assert_eq!(
+        cold_shard.execute(&rows, &x),
+        warm_shard.execute(&rows, &x),
+        "rehydrated engine must serve bit-identically to the cold compile"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64();
+    println!(
+        "FP32x{elems} shard_rows={shard_rows} cold {cold:>9.3?}  warm {warm:>9.3?}  {speedup:.1}x"
+    );
+    println!(
+        "\nwarm vs cold FP32x8 launch: {speedup:.1}x (acceptance bar: >= 10x)"
+    );
+    assert!(
+        warm.as_nanos() * 10 <= cold.as_nanos(),
+        "warm (cache-hit) launch must be >= 10x faster than cold compile: \
+         cold={cold:?} warm={warm:?}"
+    );
+    rep.push("cold_launch_ns", cold.as_nanos() as f64);
+    rep.push("warm_launch_ns", warm.as_nanos() as f64);
+    rep.push("warm_speedup", speedup);
+    rep
+}
+
+/// Wire format: the same served matvec request on the row-major wire
+/// (per-tile `write_rows_transposed`) vs the bit-transposed wire (plane
+/// slices memcpy'd through `write_col_words`). The numbers tracked by
+/// EXPERIMENTS.md §Wire-format; the acceptance bars are >= 1.5x fewer
+/// modeled staging words per 64-row matvec tile and bit-identical
+/// served results across the two wires.
+fn wire_format() -> SectionReport {
+    println!("\n=== wire format: row-major vs bit-transposed matvec staging ===");
+    let mut rep = SectionReport::new("wire");
+    let (n, elems, m) = (8u32, 8u32, 64usize);
+
+    // Modeled per-tile staging price for the standard 64-row tile.
+    let kind = StageKind::VecTile { rows: m as u64, elems: u64::from(elems), bits: u64::from(n) };
+    let rows_tile = staging_cost(WireFormat::Rows, kind);
+    let planes_tile = staging_cost(WireFormat::Transposed, kind);
+    assert!(
+        rows_tile * 2 >= planes_tile * 3,
+        "bit-transposed staging must price >= 1.5x under row-major: \
+         rows={rows_tile} transposed={planes_tile}"
+    );
+
+    // Serve the same request over both wires through one coordinator
+    // and compare the staged-traffic deltas the router records.
+    let coord = Coordinator::launch_on(
+        DeviceConfig::flat(1),
+        &[],
+        &[MatVecDeployment {
+            n_bits: n,
+            n_elems: elems,
+            shard_rows: m,
+            spec: DeploymentSpec::new(1),
+        }],
+        &[],
+        &[],
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(0x5749_5245);
+    let rows: Vec<Vec<u64>> =
+        (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
+    let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
+    let expected: Vec<u64> = rows.iter().map(|row| inner_product_mod(n, row, &x)).collect();
+
+    let staged = |coord: &Coordinator| {
+        let w = coord
+            .metrics()
+            .workload(WorkloadKey::MatVec { n_bits: n, n_elems: elems })
+            .expect("matvec counters registered at launch");
+        (w.staged_words.load(Ordering::Relaxed), w.stage_cycles.load(Ordering::Relaxed))
+    };
+
+    let out_rows = coord.matvec(n, rows.clone(), x.clone()).unwrap();
+    let (rows_staged, rows_cycles) = staged(&coord);
+
+    let planes = PlaneMatrix::from_rows(&rows, n).unwrap();
+    let out_planes = coord.matvec_planes(n, planes, x.clone()).unwrap();
+    let (total_staged, total_cycles) = staged(&coord);
+    let (planes_staged, planes_cycles) =
+        (total_staged - rows_staged, total_cycles - rows_cycles);
+    coord.shutdown();
+
+    assert_eq!(out_rows, expected, "row wire must serve the reference result");
+    assert_eq!(out_planes, expected, "plane wire must serve bit-identically to the row wire");
+    assert!(
+        rows_staged * 2 >= planes_staged * 3,
+        "bit-transposed wire must move >= 1.5x fewer staged words: \
+         rows={rows_staged} transposed={planes_staged}"
+    );
+    assert!(
+        rows_cycles * 2 >= planes_cycles * 3,
+        "bit-transposed wire must model >= 1.5x fewer staging cycles: \
+         rows={rows_cycles} transposed={planes_cycles}"
+    );
+
+    let tile_ratio = rows_tile as f64 / planes_tile as f64;
+    let staged_ratio = rows_staged as f64 / planes_staged as f64;
+    println!(
+        "N={n} {m}x{elems} tile stage_words: rows={rows_tile} transposed={planes_tile} ({tile_ratio:.2}x)"
+    );
+    println!(
+        "N={n} {m}x{elems} staged words:     rows={rows_staged} transposed={planes_staged} ({staged_ratio:.2}x)"
+    );
+    println!(
+        "\nbit-transposed matvec staging reduction: {tile_ratio:.2}x per tile (acceptance bar: >= 1.5x)"
+    );
+    rep.push("tile_stage_words_rows", rows_tile as f64);
+    rep.push("tile_stage_words_transposed", planes_tile as f64);
+    rep.push("tile_stage_words_ratio", tile_ratio);
+    rep.push("staged_words_rows", rows_staged as f64);
+    rep.push("staged_words_transposed", planes_staged as f64);
+    rep.push("staged_words_ratio", staged_ratio);
+    rep
 }

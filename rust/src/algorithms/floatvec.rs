@@ -347,6 +347,60 @@ impl MultPimFloatVec {
         }
     }
 
+    /// Rehydrate an engine from cached parts (see [`crate::cache`]):
+    /// the chain comes back through
+    /// [`CompiledChain::from_parts`](crate::schedule::CompiledChain),
+    /// with the resolved output columns carried explicitly because the
+    /// rehydrated chain has no wire → column map. The caller
+    /// re-validates the chain before use.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_cached(
+        fmt: FloatFormat,
+        n_elems: u32,
+        chain: CompiledChain,
+        a_cols: Vec<Col>,
+        x_cols: Vec<Col>,
+        out_sign: Col,
+        out_exp: Vec<Col>,
+        out_man: Vec<Col>,
+        input_cols: Vec<Col>,
+    ) -> Self {
+        Self { fmt, n_elems, chain, a_cols, x_cols, out_sign, out_exp, out_man, input_cols }
+    }
+
+    /// The compiled chain (cache serialization needs its stats and
+    /// operand width).
+    pub(crate) fn chain(&self) -> &CompiledChain {
+        &self.chain
+    }
+
+    /// Resolved output columns — serialized by the program cache, which
+    /// cannot rederive them from a rehydrated chain.
+    pub(crate) fn out_sign(&self) -> Col {
+        self.out_sign
+    }
+
+    /// See [`Self::out_sign`].
+    pub(crate) fn out_exp(&self) -> &[Col] {
+        &self.out_exp
+    }
+
+    /// See [`Self::out_sign`].
+    pub(crate) fn out_man(&self) -> &[Col] {
+        &self.out_man
+    }
+
+    /// First columns of every matrix / vector element (cache
+    /// serialization counterparts of [`Self::a_col`] / [`Self::x_col`]).
+    pub(crate) fn a_cols(&self) -> &[Col] {
+        &self.a_cols
+    }
+
+    /// See [`Self::a_cols`].
+    pub(crate) fn x_cols(&self) -> &[Col] {
+        &self.x_cols
+    }
+
     /// The float format.
     pub fn fmt(&self) -> FloatFormat {
         self.fmt

@@ -433,6 +433,40 @@ impl MultPimMatVec {
         Self { n_bits, n_elems, programs, a_cols, x_cols, out_map, input_cols, num_cols }
     }
 
+    /// Column of each accumulator output bit, low to high — serialized
+    /// by the program cache, which cannot rederive the drain layout
+    /// without re-emitting the chain.
+    pub(crate) fn out_map(&self) -> &[Col] {
+        &self.out_map
+    }
+
+    /// First columns of every matrix / vector element (cache
+    /// serialization counterparts of [`Self::a_col`] / [`Self::x_col`]).
+    pub(crate) fn a_cols(&self) -> &[Col] {
+        &self.a_cols
+    }
+
+    /// See [`Self::a_cols`].
+    pub(crate) fn x_cols(&self) -> &[Col] {
+        &self.x_cols
+    }
+
+    /// Rehydrate a chain from cached parts (see [`crate::cache`]). The
+    /// caller re-validates the chain before use.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_cached(
+        n_bits: u32,
+        n_elems: u32,
+        num_cols: Col,
+        programs: Vec<Program>,
+        a_cols: Vec<Col>,
+        x_cols: Vec<Col>,
+        out_map: Vec<Col>,
+        input_cols: Vec<Col>,
+    ) -> Self {
+        Self { n_bits, n_elems, programs, a_cols, x_cols, out_map, input_cols, num_cols }
+    }
+
     /// Total latency in cycles (all products + drain).
     pub fn latency_cycles(&self) -> u64 {
         self.programs.iter().map(|p| p.cycle_count() as u64).sum()

@@ -343,6 +343,17 @@ impl MultPim {
     pub fn expected_latency(&self) -> u64 {
         super::costmodel::multpim_latency(self.n as u64)
     }
+
+    /// Rehydrate a multiplier from cached parts (see [`crate::cache`]).
+    /// The caller re-validates the program before use.
+    pub(crate) fn from_cached(
+        n: u32,
+        program: Program,
+        layout: RegionLayout,
+        input_cols: Vec<Col>,
+    ) -> Self {
+        Self { n, program, layout, input_cols }
+    }
 }
 
 /// HA scratch cell: each non-top unit reuses its dead broadcast-receive

@@ -270,6 +270,25 @@ impl MultPimArea {
         }
         v
     }
+
+    /// Column of each output bit, low to high (low bits alias the `b`
+    /// cells) — serialized by the program cache, which cannot rederive
+    /// the scattered high-bit placement from the layout alone.
+    pub(crate) fn out_map(&self) -> &[Col] {
+        &self.out_map
+    }
+
+    /// Rehydrate a multiplier from cached parts (see [`crate::cache`]).
+    /// The caller re-validates the program before use.
+    pub(crate) fn from_cached(
+        n: u32,
+        program: Program,
+        layout: RegionLayout,
+        input_cols: Vec<Col>,
+        out_map: Vec<Col>,
+    ) -> Self {
+        Self { n, program, layout, input_cols, out_map }
+    }
 }
 
 impl Multiplier for MultPimArea {

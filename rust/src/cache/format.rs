@@ -1,0 +1,410 @@
+//! Hand-rolled binary (de)serialization for compiled-program artifacts.
+//!
+//! The offline build environment resolves no external crates, so there is
+//! no serde: artifacts are written through [`ByteWriter`] and read back
+//! through [`ByteReader`] in a fixed little-endian layout. Every
+//! `ByteReader` accessor is total — truncated or garbled input yields
+//! `None`, never a panic — because cache files are untrusted input: the
+//! checksum in the container header catches accidental corruption, and
+//! the decoders themselves tolerate anything that slips past it.
+
+use crate::isa::{Col, Cycle, Gate, GateOp, GateSet, PartitionMap, Program};
+use crate::schedule::ScheduleStats;
+
+/// 64-bit FNV-1a over a byte string — the cache container checksum and
+/// the cache-key content hash. Stable across platforms and releases
+/// (unlike `DefaultHasher`), trivially reimplementable, and good enough
+/// for corruption detection (the threat model is torn writes and bit rot,
+/// not adversaries).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian append-only byte sink.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// An empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The accumulated bytes.
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a bool as one byte.
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    /// Append a little-endian u32.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian u64.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Append a length-prefixed column vector.
+    pub fn cols(&mut self, v: &[Col]) {
+        self.u32(v.len() as u32);
+        for &c in v {
+            self.u32(c);
+        }
+    }
+}
+
+/// Bounds-checked little-endian cursor over untrusted bytes.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// A cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether every byte has been consumed.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.remaining() < n {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    /// Read a bool; any byte other than 0/1 is corruption.
+    pub fn bool(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Option<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+
+    /// Read a length-prefixed column vector. The length is validated
+    /// against the remaining bytes before allocating, so a corrupt
+    /// length prefix cannot trigger a pathological allocation.
+    pub fn cols(&mut self) -> Option<Vec<Col>> {
+        let len = self.u32()? as usize;
+        if self.remaining() < len.checked_mul(4)? {
+            return None;
+        }
+        (0..len).map(|_| self.u32()).collect()
+    }
+}
+
+fn gate_tag(g: Gate) -> u8 {
+    match g {
+        Gate::Not => 0,
+        Gate::Nor2 => 1,
+        Gate::Nor3 => 2,
+        Gate::Or2 => 3,
+        Gate::Nand2 => 4,
+        Gate::Min3 => 5,
+    }
+}
+
+fn gate_from_tag(t: u8) -> Option<Gate> {
+    Some(match t {
+        0 => Gate::Not,
+        1 => Gate::Nor2,
+        2 => Gate::Nor3,
+        3 => Gate::Or2,
+        4 => Gate::Nand2,
+        5 => Gate::Min3,
+        _ => return None,
+    })
+}
+
+fn gate_set_tag(s: GateSet) -> u8 {
+    match s {
+        GateSet::Magic => 0,
+        GateSet::Rime => 1,
+        GateSet::NotMin3 => 2,
+        GateSet::Full => 3,
+    }
+}
+
+fn gate_set_from_tag(t: u8) -> Option<GateSet> {
+    Some(match t {
+        0 => GateSet::Magic,
+        1 => GateSet::Rime,
+        2 => GateSet::NotMin3,
+        3 => GateSet::Full,
+        _ => return None,
+    })
+}
+
+/// Serialize one compiled [`Program`] (name, gate set, area accounting,
+/// partition geometry, and the full cycle schedule).
+pub fn write_program(w: &mut ByteWriter, p: &Program) {
+    w.str(&p.name);
+    w.u8(gate_set_tag(p.gate_set));
+    w.u32(p.area_memristors);
+    let starts: Vec<Col> = (0..p.partitions.len()).map(|i| p.partitions.columns_of(i).start).collect();
+    w.cols(&starts);
+    w.u32(p.partitions.num_cols());
+    w.u32(p.cycles.len() as u32);
+    for cycle in &p.cycles {
+        match cycle {
+            Cycle::Init { value, outputs } => {
+                w.u8(0);
+                w.bool(*value);
+                w.cols(outputs);
+            }
+            Cycle::Gates(gates) => {
+                w.u8(1);
+                w.u32(gates.len() as u32);
+                for g in gates {
+                    w.u8(gate_tag(g.gate));
+                    for i in g.inputs {
+                        w.u32(i);
+                    }
+                    w.u32(g.output);
+                    w.bool(g.no_init);
+                }
+            }
+        }
+    }
+}
+
+/// Deserialize one [`Program`]. Returns `None` for any malformed input —
+/// including partition geometry [`PartitionMap::new`] would assert on,
+/// which is re-validated here by hand so corrupt bytes can never panic
+/// the loader.
+pub fn read_program(r: &mut ByteReader<'_>) -> Option<Program> {
+    let name = r.str()?;
+    let gate_set = gate_set_from_tag(r.u8()?)?;
+    let area_memristors = r.u32()?;
+    let starts = r.cols()?;
+    let num_cols = r.u32()?;
+    // Re-validate what PartitionMap::new asserts: decoding must stay
+    // total on arbitrary bytes.
+    if starts.is_empty()
+        || starts[0] != 0
+        || !starts.windows(2).all(|w| w[0] < w[1])
+        || *starts.last()? >= num_cols
+    {
+        return None;
+    }
+    let partitions = PartitionMap::new(starts, num_cols);
+    let n_cycles = r.u32()? as usize;
+    let mut cycles = Vec::new();
+    for _ in 0..n_cycles {
+        // Every cycle costs at least 2 bytes, bounding the reserve.
+        match r.u8()? {
+            0 => {
+                let value = r.bool()?;
+                let outputs = r.cols()?;
+                cycles.push(Cycle::Init { value, outputs });
+            }
+            1 => {
+                let n_gates = r.u32()? as usize;
+                if r.remaining() < n_gates.checked_mul(18)? {
+                    return None;
+                }
+                let mut gates = Vec::with_capacity(n_gates);
+                for _ in 0..n_gates {
+                    let gate = gate_from_tag(r.u8()?)?;
+                    let inputs = [r.u32()?, r.u32()?, r.u32()?];
+                    let output = r.u32()?;
+                    let no_init = r.bool()?;
+                    gates.push(GateOp { gate, inputs, output, no_init });
+                }
+                cycles.push(Cycle::Gates(gates));
+            }
+            _ => return None,
+        }
+    }
+    Some(Program { name, cycles, partitions, gate_set, area_memristors })
+}
+
+/// Serialize one [`ScheduleStats`] record.
+pub fn write_stats(w: &mut ByteWriter, s: &ScheduleStats) {
+    w.u64(s.programs as u64);
+    w.u64(s.gates);
+    w.u64(s.copy_gates);
+    w.u64(s.cycles);
+    w.u64(s.serial_cycles);
+    w.u64(s.critical_path_cycles);
+    w.u64(s.peak_parallel_gates);
+    w.u64(s.busy_partition_cycles);
+    w.u64(s.compute_cycles);
+    w.u64(s.partitions as u64);
+    w.u32(s.width);
+}
+
+/// Deserialize one [`ScheduleStats`] record.
+pub fn read_stats(r: &mut ByteReader<'_>) -> Option<ScheduleStats> {
+    Some(ScheduleStats {
+        programs: r.u64()? as usize,
+        gates: r.u64()?,
+        copy_gates: r.u64()?,
+        cycles: r.u64()?,
+        serial_cycles: r.u64()?,
+        critical_path_cycles: r.u64()?,
+        peak_parallel_gates: r.u64()?,
+        busy_partition_cycles: r.u64()?,
+        compute_cycles: r.u64()?,
+        partitions: r.u64()? as usize,
+        width: r.u32()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ProgramBuilder;
+
+    fn sample_program() -> Program {
+        let partitions = PartitionMap::new(vec![0, 4], 8);
+        let mut b = ProgramBuilder::new("fmt-test", partitions, GateSet::Full);
+        b.init(true, vec![2, 3, 6]);
+        b.init(false, vec![7]);
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.stage(GateOp::no_init(Gate::Min3, &[0, 1, 2], 3));
+        b.commit();
+        b.finish()
+    }
+
+    #[test]
+    fn program_roundtrip_is_exact() {
+        let p = sample_program();
+        let mut w = ByteWriter::new();
+        write_program(&mut w, &p);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        let q = read_program(&mut r).expect("roundtrip");
+        assert!(r.is_empty(), "decoder must consume exactly what the encoder wrote");
+        assert_eq!(q.name, p.name);
+        assert_eq!(q.gate_set, p.gate_set);
+        assert_eq!(q.area_memristors, p.area_memristors);
+        assert_eq!(q.partitions, p.partitions);
+        assert_eq!(q.cycles, p.cycles);
+    }
+
+    #[test]
+    fn truncated_program_is_rejected_not_panicking() {
+        let p = sample_program();
+        let mut w = ByteWriter::new();
+        write_program(&mut w, &p);
+        let bytes = w.into_inner();
+        // Every proper prefix must decode to None (total decoder).
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(read_program(&mut r).is_none(), "prefix of {cut} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn garbled_partition_geometry_is_rejected() {
+        let p = sample_program();
+        let mut w = ByteWriter::new();
+        write_program(&mut w, &p);
+        let mut bytes = w.into_inner();
+        // The partition starts follow the name/gate-set/area header:
+        // name len(4) + name(8) + gate_set(1) + area(4) + starts len(4).
+        // Flip the first start (must be 0) to a nonzero value.
+        let starts0 = 4 + p.name.len() + 1 + 4 + 4;
+        bytes[starts0] = 9;
+        let mut r = ByteReader::new(&bytes);
+        assert!(read_program(&mut r).is_none());
+    }
+
+    #[test]
+    fn stats_roundtrip_is_exact() {
+        let s = ScheduleStats {
+            programs: 3,
+            gates: 1234,
+            copy_gates: 56,
+            cycles: 789,
+            serial_cycles: 1290,
+            critical_path_cycles: 400,
+            peak_parallel_gates: 17,
+            busy_partition_cycles: 3000,
+            compute_cycles: 700,
+            partitions: 24,
+            width: 965,
+        };
+        let mut w = ByteWriter::new();
+        write_stats(&mut w, &s);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(read_stats(&mut r).expect("roundtrip"), s);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn fnv1a_is_stable() {
+        // Pinned reference values: the on-disk format depends on this
+        // hash never changing across releases.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"multpim"), fnv1a(b"multpin"));
+    }
+}

@@ -1,0 +1,699 @@
+//! Compiled-program disk cache for millisecond cold starts.
+//!
+//! Launching a deployment runs emit → validate → lower → schedule; for
+//! the FP32x8 float chain that means building and scheduling ~50k-gate
+//! programs before the first request can be served. The schedule is a
+//! pure function of (workload kind, number format, shape, topology
+//! geometry, schedule mode, cost-model constants, crate version), so
+//! this module persists the result: a [`ProgramCache`] maps a
+//! [`CacheKey`] content hash over exactly those inputs to a serialized
+//! [`Artifact`], stored in a versioned binary container with a checksum.
+//!
+//! Trust model: the cache is an *accelerator*, never an *authority*.
+//! - Corruption (truncated file, flipped bits, torn write) is caught by
+//!   the container checksum / total decoders and degrades to a
+//!   recompile, counted as an invalidation.
+//! - A stale key (different geometry, bumped crate version, changed
+//!   cost constants) hashes to a different file name and is simply a
+//!   miss.
+//! - Legality is never trusted from disk: every engine re-runs
+//!   [`crate::sim::validate`] / chain validation on decoded programs
+//!   before executing them, so even a hash-colliding forged file cannot
+//!   smuggle an illegal program past the checker.
+//! - Writers stage to a process-unique temp file and `rename(2)` into
+//!   place, so concurrent launches sharing a cache directory never
+//!   observe half-written artifacts.
+
+mod format;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::crossbar::RegionLayout;
+use crate::isa::{Col, Program};
+use crate::schedule::{ScheduleMode, ScheduleStats};
+use crate::device::Topology;
+
+use format::{fnv1a, ByteReader, ByteWriter};
+
+/// Bumped whenever the on-disk layout changes; old files become
+/// invalidations, not decode errors.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Container magic — identifies a MultPIM program-cache file.
+const MAGIC: &[u8; 8] = b"MPIMPROG";
+
+/// Content-hash key for one cached artifact.
+///
+/// The hash material is `kind \0 device-blob shape...`, where the
+/// device blob (crate version, topology geometry, staging cost
+/// constants) comes from [`CacheContext`] and the shape words come from
+/// the engine (bit width, element count, shard rows, schedule mode).
+/// The full material is echoed into the stored payload and compared on
+/// load, so even an FNV collision cannot serve the wrong artifact.
+#[derive(Debug, Clone)]
+pub struct CacheKey {
+    kind: &'static str,
+    material: Vec<u8>,
+    hash: u64,
+}
+
+impl CacheKey {
+    /// Build a key for `kind` from the raw hash material.
+    fn new(kind: &'static str, material: Vec<u8>) -> Self {
+        let hash = fnv1a(&material);
+        Self { kind, material, hash }
+    }
+
+    /// The file this key maps to inside a cache directory.
+    pub fn file_name(&self) -> String {
+        format!("{}-{:016x}.mpc", self.kind, self.hash)
+    }
+
+    /// The exact bytes hashed into [`Self::file_name`]; echoed in the
+    /// payload for collision detection.
+    pub fn material(&self) -> &[u8] {
+        &self.material
+    }
+}
+
+/// A decoded cache payload: everything an engine needs to skip the
+/// emit → schedule path. Layouts and column maps are stored alongside
+/// the programs because engines derive them during emission, which a
+/// cache hit bypasses.
+#[derive(Debug, Clone)]
+pub enum Artifact {
+    /// Single fixed-point multiplier ([`crate::algorithms::MultPim`] /
+    /// the area-optimized variant, discriminated by `out_map`).
+    Multiply {
+        n_bits: u32,
+        program: Program,
+        layout: RegionLayout,
+        input_cols: Vec<Col>,
+        /// `Some` for the area variant's scattered output map.
+        out_map: Option<Vec<Col>>,
+    },
+    /// Fixed-point matvec chain ([`crate::algorithms::MultPimMatVec`]).
+    Chain {
+        n_bits: u32,
+        n_elems: u32,
+        num_cols: u32,
+        programs: Vec<Program>,
+        a_cols: Vec<Col>,
+        x_cols: Vec<Col>,
+        out_map: Vec<Col>,
+        input_cols: Vec<Col>,
+    },
+    /// Scheduled float matvec chain
+    /// ([`crate::algorithms::MultPimFloatVec`]), including the compiled
+    /// chain's schedule statistics so warm launches report the same
+    /// numbers as cold ones.
+    Float {
+        exp_bits: u32,
+        man_bits: u32,
+        n_elems: u32,
+        mode: ScheduleMode,
+        width: u32,
+        operand_width: u32,
+        stats: ScheduleStats,
+        per_program: Vec<ScheduleStats>,
+        programs: Vec<Program>,
+        a_cols: Vec<Col>,
+        x_cols: Vec<Col>,
+        out_sign: Col,
+        out_exp: Vec<Col>,
+        out_man: Vec<Col>,
+        input_cols: Vec<Col>,
+    },
+}
+
+fn mode_tag(mode: ScheduleMode) -> u8 {
+    match mode {
+        ScheduleMode::Serial => 0,
+        ScheduleMode::Partitioned => 1,
+    }
+}
+
+fn mode_from_tag(t: u8) -> Option<ScheduleMode> {
+    Some(match t {
+        0 => ScheduleMode::Serial,
+        1 => ScheduleMode::Partitioned,
+        _ => return None,
+    })
+}
+
+fn write_layout(w: &mut ByteWriter, l: &RegionLayout) {
+    w.u32(l.a_start);
+    w.u32(l.a_bits);
+    w.u32(l.b_start);
+    w.u32(l.b_bits);
+    w.u32(l.out_start);
+    w.u32(l.out_bits);
+}
+
+fn read_layout(r: &mut ByteReader<'_>) -> Option<RegionLayout> {
+    Some(RegionLayout {
+        a_start: r.u32()?,
+        a_bits: r.u32()?,
+        b_start: r.u32()?,
+        b_bits: r.u32()?,
+        out_start: r.u32()?,
+        out_bits: r.u32()?,
+    })
+}
+
+fn write_programs(w: &mut ByteWriter, programs: &[Program]) {
+    w.u32(programs.len() as u32);
+    for p in programs {
+        format::write_program(w, p);
+    }
+}
+
+fn read_programs(r: &mut ByteReader<'_>) -> Option<Vec<Program>> {
+    let n = r.u32()? as usize;
+    // Each serialized program is ≥ 21 bytes; bound the count before
+    // trusting it.
+    if r.remaining() < n.checked_mul(21)? {
+        return None;
+    }
+    (0..n).map(|_| format::read_program(r)).collect()
+}
+
+fn encode_artifact(w: &mut ByteWriter, artifact: &Artifact) {
+    match artifact {
+        Artifact::Multiply { n_bits, program, layout, input_cols, out_map } => {
+            w.u8(0);
+            w.u32(*n_bits);
+            format::write_program(w, program);
+            write_layout(w, layout);
+            w.cols(input_cols);
+            match out_map {
+                None => w.u8(0),
+                Some(m) => {
+                    w.u8(1);
+                    w.cols(m);
+                }
+            }
+        }
+        Artifact::Chain {
+            n_bits,
+            n_elems,
+            num_cols,
+            programs,
+            a_cols,
+            x_cols,
+            out_map,
+            input_cols,
+        } => {
+            w.u8(1);
+            w.u32(*n_bits);
+            w.u32(*n_elems);
+            w.u32(*num_cols);
+            write_programs(w, programs);
+            w.cols(a_cols);
+            w.cols(x_cols);
+            w.cols(out_map);
+            w.cols(input_cols);
+        }
+        Artifact::Float {
+            exp_bits,
+            man_bits,
+            n_elems,
+            mode,
+            width,
+            operand_width,
+            stats,
+            per_program,
+            programs,
+            a_cols,
+            x_cols,
+            out_sign,
+            out_exp,
+            out_man,
+            input_cols,
+        } => {
+            w.u8(2);
+            w.u32(*exp_bits);
+            w.u32(*man_bits);
+            w.u32(*n_elems);
+            w.u8(mode_tag(*mode));
+            w.u32(*width);
+            w.u32(*operand_width);
+            format::write_stats(w, stats);
+            w.u32(per_program.len() as u32);
+            for s in per_program {
+                format::write_stats(w, s);
+            }
+            write_programs(w, programs);
+            w.cols(a_cols);
+            w.cols(x_cols);
+            w.u32(*out_sign);
+            w.cols(out_exp);
+            w.cols(out_man);
+            w.cols(input_cols);
+        }
+    }
+}
+
+fn decode_artifact(r: &mut ByteReader<'_>) -> Option<Artifact> {
+    let artifact = match r.u8()? {
+        0 => {
+            let n_bits = r.u32()?;
+            let program = format::read_program(r)?;
+            let layout = read_layout(r)?;
+            let input_cols = r.cols()?;
+            let out_map = match r.u8()? {
+                0 => None,
+                1 => Some(r.cols()?),
+                _ => return None,
+            };
+            Artifact::Multiply { n_bits, program, layout, input_cols, out_map }
+        }
+        1 => Artifact::Chain {
+            n_bits: r.u32()?,
+            n_elems: r.u32()?,
+            num_cols: r.u32()?,
+            programs: read_programs(r)?,
+            a_cols: r.cols()?,
+            x_cols: r.cols()?,
+            out_map: r.cols()?,
+            input_cols: r.cols()?,
+        },
+        2 => {
+            let exp_bits = r.u32()?;
+            let man_bits = r.u32()?;
+            let n_elems = r.u32()?;
+            let mode = mode_from_tag(r.u8()?)?;
+            let width = r.u32()?;
+            let operand_width = r.u32()?;
+            let stats = format::read_stats(r)?;
+            let n_per = r.u32()? as usize;
+            if r.remaining() < n_per.checked_mul(84)? {
+                return None;
+            }
+            let per_program =
+                (0..n_per).map(|_| format::read_stats(r)).collect::<Option<Vec<_>>>()?;
+            let programs = read_programs(r)?;
+            Artifact::Float {
+                exp_bits,
+                man_bits,
+                n_elems,
+                mode,
+                width,
+                operand_width,
+                stats,
+                per_program,
+                programs,
+                a_cols: r.cols()?,
+                x_cols: r.cols()?,
+                out_sign: r.u32()?,
+                out_exp: r.cols()?,
+                out_man: r.cols()?,
+                input_cols: r.cols()?,
+            }
+        }
+        _ => return None,
+    };
+    if !r.is_empty() {
+        return None;
+    }
+    Some(artifact)
+}
+
+/// Snapshot of a cache's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Artifacts served from disk.
+    pub hits: u64,
+    /// Keys with no cache file (cold compile, may store after).
+    pub misses: u64,
+    /// Files that existed but were rejected: corruption, version or
+    /// key-echo mismatch, or post-decode validation failure.
+    pub invalidations: u64,
+    /// Artifacts successfully written to disk.
+    pub stores: u64,
+}
+
+/// A directory of compiled-program artifacts with hit/miss accounting.
+///
+/// All I/O is best-effort: the cache never fails a launch. A missing
+/// directory, unreadable file, or failed write degrades to compiling
+/// (and the counters record why).
+#[derive(Debug)]
+pub struct ProgramCache {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+    stores: AtomicU64,
+}
+
+impl ProgramCache {
+    /// A cache rooted at `dir` (created lazily on first store).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+        }
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up `key`. `None` is either a miss (no file) or an
+    /// invalidation (file rejected); the counters distinguish them.
+    pub fn load(&self, key: &CacheKey) -> Option<Artifact> {
+        let path = self.dir.join(key.file_name());
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match Self::parse(&bytes, key) {
+            Some(artifact) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(artifact)
+            }
+            None => {
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn parse(bytes: &[u8], key: &CacheKey) -> Option<Artifact> {
+        let mut r = ByteReader::new(bytes);
+        if r.take(MAGIC.len())? != MAGIC {
+            return None;
+        }
+        if r.u32()? != FORMAT_VERSION {
+            return None;
+        }
+        let payload_len = r.u64()? as usize;
+        let checksum = r.u64()?;
+        let payload = r.take(payload_len)?;
+        if !r.is_empty() {
+            return None;
+        }
+        if fnv1a(payload) != checksum {
+            return None;
+        }
+        let mut pr = ByteReader::new(payload);
+        let echo_len = pr.u32()? as usize;
+        if pr.take(echo_len)? != key.material() {
+            return None;
+        }
+        decode_artifact(&mut pr)
+    }
+
+    /// Record that a decoded artifact failed post-load validation
+    /// (wrong shape inside, illegal program). The caller falls back to
+    /// a cold compile.
+    pub fn note_invalidation(&self) {
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Persist `artifact` under `key`: write the full container to a
+    /// write-unique temp file (pid + per-process sequence number, so
+    /// neither concurrent processes nor concurrent threads sharing one
+    /// directory ever write the same staging path), then atomically
+    /// rename into place. Errors are swallowed — a read-only or full
+    /// disk must not fail the launch.
+    pub fn store(&self, key: &CacheKey, artifact: &Artifact) {
+        let mut pw = ByteWriter::new();
+        pw.u32(key.material().len() as u32);
+        pw.bytes(key.material());
+        encode_artifact(&mut pw, artifact);
+        let payload = pw.into_inner();
+
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u64(payload.len() as u64);
+        w.u64(fnv1a(&payload));
+        w.bytes(&payload);
+
+        if fs::create_dir_all(&self.dir).is_err() {
+            return;
+        }
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let final_path = self.dir.join(key.file_name());
+        let tmp = self.dir.join(format!(
+            "{}.tmp.{}.{}",
+            key.file_name(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if fs::write(&tmp, w.into_inner()).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return;
+        }
+        if fs::rename(&tmp, &final_path).is_ok() {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+
+    /// Current counter values.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A [`ProgramCache`] bound to one launch environment.
+///
+/// The context pre-hashes everything a compiled artifact implicitly
+/// depends on besides the workload shape: crate version (the emitters
+/// and scheduler live in this crate, so any release may change their
+/// output), topology geometry, and the staging cost constant baked into
+/// tile pricing. Engines then only add their shape words.
+#[derive(Debug, Clone)]
+pub struct CacheContext {
+    cache: Arc<ProgramCache>,
+    device_blob: Vec<u8>,
+}
+
+impl CacheContext {
+    /// Bind `cache` to the launch topology.
+    pub fn new(cache: Arc<ProgramCache>, topology: &Topology) -> Self {
+        let mut w = ByteWriter::new();
+        w.str(env!("CARGO_PKG_VERSION"));
+        w.str(&topology.to_string());
+        w.u64(topology.stage_cpw());
+        Self { cache, device_blob: w.into_inner() }
+    }
+
+    /// The underlying cache (for counters and direct loads/stores).
+    pub fn cache(&self) -> &ProgramCache {
+        &self.cache
+    }
+
+    /// A key for `kind` with the engine's shape words appended to the
+    /// environment blob.
+    pub fn key(&self, kind: &'static str, shape: &[u64]) -> CacheKey {
+        let mut material = Vec::with_capacity(
+            kind.len() + 1 + self.device_blob.len() + 8 * shape.len(),
+        );
+        material.extend_from_slice(kind.as_bytes());
+        material.push(0);
+        material.extend_from_slice(&self.device_blob);
+        for &s in shape {
+            material.extend_from_slice(&s.to_le_bytes());
+        }
+        CacheKey::new(kind, material)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Gate, GateSet, PartitionMap, ProgramBuilder};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("multpim-cache-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_artifact() -> Artifact {
+        let partitions = PartitionMap::new(vec![0, 3], 6);
+        let mut b = ProgramBuilder::new("cache-test", partitions, GateSet::Full);
+        b.init(true, vec![2, 5]);
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Not, &[2], 5);
+        let program = b.finish();
+        Artifact::Multiply {
+            n_bits: 4,
+            program,
+            layout: RegionLayout {
+                a_start: 0,
+                a_bits: 4,
+                b_start: 4,
+                b_bits: 4,
+                out_start: 8,
+                out_bits: 8,
+            },
+            input_cols: vec![0, 1, 2, 3, 4, 5],
+            out_map: Some(vec![5, 4, 3, 2]),
+        }
+    }
+
+    fn ctx(cache: Arc<ProgramCache>) -> CacheContext {
+        CacheContext::new(cache, &Topology::flat(8))
+    }
+
+    fn assert_multiply_eq(a: &Artifact, b: &Artifact) {
+        let (Artifact::Multiply { n_bits, program, layout, input_cols, out_map },
+             Artifact::Multiply { n_bits: n2, program: p2, layout: l2, input_cols: i2, out_map: o2 }) =
+            (a, b)
+        else {
+            panic!("variant changed in roundtrip");
+        };
+        assert_eq!(n_bits, n2);
+        assert_eq!(program.name, p2.name);
+        assert_eq!(program.cycles, p2.cycles);
+        assert_eq!(program.partitions, p2.partitions);
+        assert_eq!(program.gate_set, p2.gate_set);
+        assert_eq!(program.area_memristors, p2.area_memristors);
+        assert_eq!(layout, l2);
+        assert_eq!(input_cols, i2);
+        assert_eq!(out_map, o2);
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        let key = ctx.key("multiply", &[4, 64]);
+        assert!(cache.load(&key).is_none(), "empty cache must miss");
+        let artifact = sample_artifact();
+        cache.store(&key, &artifact);
+        let loaded = cache.load(&key).expect("stored artifact must load");
+        assert_multiply_eq(&artifact, &loaded);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.invalidations, s.stores), (1, 1, 0, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_shape_or_kind_is_a_miss() {
+        let dir = tmp_dir("keys");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        cache.store(&ctx.key("multiply", &[4, 64]), &sample_artifact());
+        assert!(cache.load(&ctx.key("multiply", &[8, 64])).is_none());
+        assert!(cache.load(&ctx.key("multiply", &[4, 128])).is_none());
+        assert!(cache.load(&ctx.key("matvec", &[4, 64])).is_none());
+        assert_eq!(cache.stats().invalidations, 0, "wrong keys are misses, not invalidations");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_geometry_or_version_changes_the_key() {
+        let cache = Arc::new(ProgramCache::new(tmp_dir("geom")));
+        let a = CacheContext::new(Arc::clone(&cache), &Topology::flat(8));
+        let b = CacheContext::new(Arc::clone(&cache), &Topology::parse("2x2x2x4").unwrap());
+        assert_ne!(
+            a.key("floatvec", &[8, 23, 8]).file_name(),
+            b.key("floatvec", &[8, 23, 8]).file_name(),
+            "topology geometry must be part of the key"
+        );
+    }
+
+    #[test]
+    fn corrupted_payload_is_invalidated() {
+        let dir = tmp_dir("corrupt");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        let key = ctx.key("multiply", &[4, 64]);
+        cache.store(&key, &sample_artifact());
+        let path = dir.join(key.file_name());
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(&key).is_none(), "flipped byte must not load");
+        assert_eq!(cache.stats().invalidations, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_is_invalidated_at_every_length() {
+        let dir = tmp_dir("trunc");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        let key = ctx.key("multiply", &[4, 64]);
+        cache.store(&key, &sample_artifact());
+        let path = dir.join(key.file_name());
+        let full = fs::read(&path).unwrap();
+        for cut in [0, 1, 7, 8, 12, 20, full.len() / 2, full.len() - 1] {
+            fs::write(&path, &full[..cut]).unwrap();
+            assert!(cache.load(&key).is_none(), "truncation at {cut} must not load");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_format_version_is_invalidated() {
+        let dir = tmp_dir("version");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        let key = ctx.key("multiply", &[4, 64]);
+        cache.store(&key, &sample_artifact());
+        let path = dir.join(key.file_name());
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(&key).is_none());
+        assert_eq!(cache.stats().invalidations, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_echo_mismatch_is_invalidated() {
+        // Simulate an FNV collision / renamed file: a valid container
+        // stored under one key, read back under another.
+        let dir = tmp_dir("echo");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        let key_a = ctx.key("multiply", &[4, 64]);
+        let key_b = ctx.key("multiply", &[8, 64]);
+        cache.store(&key_a, &sample_artifact());
+        fs::rename(dir.join(key_a.file_name()), dir.join(key_b.file_name())).unwrap();
+        assert!(cache.load(&key_b).is_none(), "payload echoes key_a, must reject");
+        assert_eq!(cache.stats().invalidations, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_leaves_no_temp_files() {
+        let dir = tmp_dir("tmpfiles");
+        let cache = Arc::new(ProgramCache::new(&dir));
+        let ctx = ctx(Arc::clone(&cache));
+        cache.store(&ctx.key("multiply", &[4, 64]), &sample_artifact());
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be renamed away: {leftovers:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -16,9 +16,11 @@ use crate::algorithms::matvec::MultPimMatVec;
 use crate::algorithms::multpim::MultPim;
 use crate::algorithms::multpim_area::MultPimArea;
 use crate::algorithms::Multiplier;
-use crate::crossbar::{Crossbar, RegionLayout};
+use crate::cache::{Artifact, CacheContext};
+use crate::crossbar::{Crossbar, PlaneMatrix, RegionLayout};
 use crate::fixedpoint::float::FloatFormat;
 use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
+use crate::schedule::CompiledChain;
 use crate::sim::{validate, CompiledPipeline, CompiledProgram, Simulator};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -46,18 +48,115 @@ impl MultiplyEngine {
     /// Build and statically validate an engine, lowering the program for
     /// a `rows`-row crossbar.
     pub fn new(config: EngineConfig, n_bits: u32, rows: usize) -> Result<Self> {
+        Self::with_cache(config, n_bits, rows, None)
+    }
+
+    /// Like [`Self::new`], but consulting a compiled-program cache first.
+    /// A usable hit skips program emission; the program is still
+    /// re-validated before use (legality is never trusted from disk), and
+    /// any rejected artifact falls back to a cold compile that stores the
+    /// fresh result.
+    pub fn with_cache(
+        config: EngineConfig,
+        n_bits: u32,
+        rows: usize,
+        ctx: Option<&CacheContext>,
+    ) -> Result<Self> {
         if rows == 0 {
             return Err(Error::BadParameter("engine needs at least one crossbar row".into()));
         }
-        let multiplier: Arc<dyn Multiplier + Send + Sync> = match config {
-            EngineConfig::MultPim => Arc::new(MultPim::new(n_bits)),
-            EngineConfig::MultPimArea => Arc::new(MultPimArea::new(n_bits)),
+        let kind = match config {
+            EngineConfig::MultPim => "multiply",
+            EngineConfig::MultPimArea => "multiply-area",
         };
-        validate(multiplier.program(), &multiplier.input_cols())?;
+        let shape = [u64::from(n_bits), rows as u64];
+        let mut multiplier: Option<Arc<dyn Multiplier + Send + Sync>> = None;
+        if let Some(ctx) = ctx {
+            if let Some(artifact) = ctx.cache().load(&ctx.key(kind, &shape)) {
+                match Self::rehydrate(config, n_bits, artifact) {
+                    Some(m) if validate(m.program(), &m.input_cols()).is_ok() => {
+                        multiplier = Some(m);
+                    }
+                    _ => ctx.cache().note_invalidation(),
+                }
+            }
+        }
+        let multiplier = match multiplier {
+            Some(m) => m,
+            None => match config {
+                EngineConfig::MultPim => {
+                    let m = MultPim::new(n_bits);
+                    validate(m.program(), &m.input_cols())?;
+                    if let Some(ctx) = ctx {
+                        let artifact = Artifact::Multiply {
+                            n_bits,
+                            program: m.program().clone(),
+                            layout: m.layout(),
+                            input_cols: m.input_cols(),
+                            out_map: None,
+                        };
+                        ctx.cache().store(&ctx.key(kind, &shape), &artifact);
+                    }
+                    Arc::new(m)
+                }
+                EngineConfig::MultPimArea => {
+                    let m = MultPimArea::new(n_bits);
+                    validate(m.program(), &m.input_cols())?;
+                    if let Some(ctx) = ctx {
+                        let artifact = Artifact::Multiply {
+                            n_bits,
+                            program: m.program().clone(),
+                            layout: m.layout(),
+                            input_cols: m.input_cols(),
+                            out_map: Some(m.out_map().to_vec()),
+                        };
+                        ctx.cache().store(&ctx.key(kind, &shape), &artifact);
+                    }
+                    Arc::new(m)
+                }
+            },
+        };
         let cols = multiplier.program().partitions.num_cols() as usize;
         let words = Crossbar::words_for_rows(rows);
         let compiled = Arc::new(CompiledProgram::lower(multiplier.program(), words));
         Ok(Self { multiplier, rows, cols, compiled })
+    }
+
+    /// Turn a decoded cache payload back into a multiplier, rejecting
+    /// anything whose shape or column references don't fit this engine
+    /// (the checksum already passed; this guards against a payload that
+    /// is internally consistent but wrong for the request, and against
+    /// out-of-bounds readback columns the legality checker doesn't see).
+    fn rehydrate(
+        config: EngineConfig,
+        n_bits: u32,
+        artifact: Artifact,
+    ) -> Option<Arc<dyn Multiplier + Send + Sync>> {
+        let Artifact::Multiply { n_bits: n, program, layout, input_cols, out_map } = artifact
+        else {
+            return None;
+        };
+        if n != n_bits {
+            return None;
+        }
+        let num_cols = program.partitions.num_cols();
+        match (config, out_map) {
+            (EngineConfig::MultPim, None) => {
+                // The default read_result reads the layout's contiguous
+                // output range.
+                if u64::from(layout.out_start) + u64::from(layout.out_bits) > u64::from(num_cols) {
+                    return None;
+                }
+                Some(Arc::new(MultPim::from_cached(n, program, layout, input_cols)))
+            }
+            (EngineConfig::MultPimArea, Some(map)) => {
+                if map.len() != 2 * n as usize || map.iter().any(|&c| c >= num_cols) {
+                    return None;
+                }
+                Some(Arc::new(MultPimArea::from_cached(n, program, layout, input_cols, map)))
+            }
+            _ => None,
+        }
     }
 
     /// Operand width.
@@ -192,6 +291,21 @@ impl ChainEngine {
     /// Build, chain-validate, and lower the fused engine for shards of
     /// `shard_rows` crossbar rows (the row-tiling height).
     pub fn new(n_bits: u32, n_elems: u32, shard_rows: usize) -> Result<Self> {
+        Self::with_cache(n_bits, n_elems, shard_rows, None, "matvec")
+    }
+
+    /// Like [`Self::new`], but consulting a compiled-program cache first.
+    /// `kind` separates tenants sharing this engine type (matvec vs
+    /// matmul) in the cache key. A usable hit skips chain emission; the
+    /// chain is still re-validated before use, and any rejected artifact
+    /// falls back to a cold compile that stores the fresh result.
+    pub fn with_cache(
+        n_bits: u32,
+        n_elems: u32,
+        shard_rows: usize,
+        ctx: Option<&CacheContext>,
+        kind: &'static str,
+    ) -> Result<Self> {
         if !(2..=32).contains(&n_bits) {
             return Err(Error::BadParameter(format!(
                 "chain engine needs N in 2..=32, got {n_bits}"
@@ -205,13 +319,86 @@ impl ChainEngine {
                 "chain engine needs at least one crossbar row per shard".into(),
             ));
         }
-        let engine = Arc::new(MultPimMatVec::new(n_bits, n_elems));
-        // Validate the whole chain exactly once (state threads across the
-        // per-element programs and the drain), then lower it exactly once.
-        engine.validate()?;
+        let shape = [u64::from(n_bits), u64::from(n_elems), shard_rows as u64];
+        let mut engine: Option<Arc<MultPimMatVec>> = None;
+        if let Some(ctx) = ctx {
+            if let Some(artifact) = ctx.cache().load(&ctx.key(kind, &shape)) {
+                match Self::rehydrate(n_bits, n_elems, artifact) {
+                    // Re-validate the whole chain: legality is never
+                    // trusted from disk.
+                    Some(e) if e.validate().is_ok() => engine = Some(e),
+                    _ => ctx.cache().note_invalidation(),
+                }
+            }
+        }
+        let engine = match engine {
+            Some(e) => e,
+            None => {
+                let e = Arc::new(MultPimMatVec::new(n_bits, n_elems));
+                // Validate the whole chain exactly once (state threads
+                // across the per-element programs and the drain), then
+                // lower it exactly once.
+                e.validate()?;
+                if let Some(ctx) = ctx {
+                    let artifact = Artifact::Chain {
+                        n_bits,
+                        n_elems,
+                        num_cols: e.width(),
+                        programs: e.programs().to_vec(),
+                        a_cols: e.a_cols().to_vec(),
+                        x_cols: e.x_cols().to_vec(),
+                        out_map: e.out_map().to_vec(),
+                        input_cols: e.input_cols().to_vec(),
+                    };
+                    ctx.cache().store(&ctx.key(kind, &shape), &artifact);
+                }
+                e
+            }
+        };
         let words = Crossbar::words_for_rows(shard_rows);
         let compiled = Arc::new(CompiledPipeline::lower(engine.programs(), words));
         Ok(Self { engine, compiled, n_bits, n_elems, shard_rows })
+    }
+
+    /// Turn a decoded cache payload back into a chain engine, rejecting
+    /// anything whose shape or column references don't fit this request.
+    fn rehydrate(n_bits: u32, n_elems: u32, artifact: Artifact) -> Option<Arc<MultPimMatVec>> {
+        let Artifact::Chain {
+            n_bits: n,
+            n_elems: e,
+            num_cols,
+            programs,
+            a_cols,
+            x_cols,
+            out_map,
+            input_cols,
+        } = artifact
+        else {
+            return None;
+        };
+        if n != n_bits || e != n_elems || programs.is_empty() {
+            return None;
+        }
+        // Every program of the chain shares the crossbar geometry, and
+        // every staged/readback column must fit inside it — the legality
+        // checker sees input columns, but not the engine's own a/x/out
+        // maps.
+        if programs.iter().any(|p| p.partitions.num_cols() != num_cols) {
+            return None;
+        }
+        let fits = |cols: &[u32], width: u32| {
+            cols.len() == n_elems as usize
+                && cols.iter().all(|&c| u64::from(c) + u64::from(width) <= u64::from(num_cols))
+        };
+        if !fits(&a_cols, n_bits) || !fits(&x_cols, n_bits) {
+            return None;
+        }
+        if out_map.len() != 2 * n_bits as usize || out_map.iter().any(|&c| c >= num_cols) {
+            return None;
+        }
+        Some(Arc::new(MultPimMatVec::from_cached(
+            n_bits, n_elems, num_cols, programs, a_cols, x_cols, out_map, input_cols,
+        )))
     }
 
     /// Inner dimension.
@@ -307,6 +494,36 @@ impl ChainShard {
         xs.iter().map(|x| self.run_with(rows.len(), x)).collect()
     }
 
+    /// Execute one matvec tile whose matrix ships pre-transposed
+    /// (`planes` holds the whole matrix as bit-planes; this tile covers
+    /// logical rows `start..start + len`). Bit-identical to
+    /// [`Self::execute`] on the same rows — only the staging path
+    /// differs: each operand column is a straight word copy instead of
+    /// an on-the-fly transpose.
+    pub fn execute_planes(
+        &mut self,
+        planes: &PlaneMatrix,
+        start: usize,
+        len: usize,
+        x: &[u64],
+    ) -> Vec<u64> {
+        self.stage_planes(planes, start, len);
+        self.run_with(len, x)
+    }
+
+    /// Panel counterpart of [`Self::execute_planes`]: stage the plane
+    /// slice once, run the chain once per vector.
+    pub fn execute_panel_planes(
+        &mut self,
+        planes: &PlaneMatrix,
+        start: usize,
+        len: usize,
+        xs: &[Vec<u64>],
+    ) -> Vec<Vec<u64>> {
+        self.stage_planes(planes, start, len);
+        xs.iter().map(|x| self.run_with(len, x)).collect()
+    }
+
     /// Word-transposed restage of the tile's matrix rows.
     fn stage_rows(&mut self, rows: &[Vec<u64>]) {
         assert!(rows.len() <= self.shard_rows, "tile exceeds shard rows");
@@ -319,6 +536,30 @@ impl ChainShard {
                 self.stage.push(row[t]);
             }
             self.sim.crossbar_mut().write_rows_transposed(self.engine.a_col(t), n, &self.stage);
+        }
+    }
+
+    /// Word-memcpy restage from pre-transposed bit-planes: each operand
+    /// column receives its plane slice directly (no per-row bit
+    /// extraction).
+    fn stage_planes(&mut self, planes: &PlaneMatrix, start: usize, len: usize) {
+        assert!(len <= self.shard_rows, "tile exceeds shard rows");
+        let n = self.engine.n_bits();
+        assert_eq!(planes.bits(), n, "plane width differs from engine shape");
+        assert_eq!(
+            planes.elems(),
+            self.engine.n_elems() as usize,
+            "plane element count differs from engine shape"
+        );
+        for t in 0..planes.elems() {
+            for b in 0..n {
+                planes.slice_plane(t, b, start, len, &mut self.stage);
+                self.sim.crossbar_mut().write_col_words(
+                    self.engine.a_col(t) + b,
+                    len,
+                    &self.stage,
+                );
+            }
         }
     }
 
@@ -363,6 +604,22 @@ impl FloatVecEngine {
     /// Build, chain-validate, and lower the fused float engine for shards
     /// of `shard_rows` crossbar rows.
     pub fn new(exp_bits: u32, man_bits: u32, n_elems: u32, shard_rows: usize) -> Result<Self> {
+        Self::with_cache(exp_bits, man_bits, n_elems, shard_rows, None)
+    }
+
+    /// Like [`Self::new`], but consulting a compiled-program cache first.
+    /// This is the shape the cache exists for: a cold FP32x8 launch
+    /// emits, schedules, and lowers ~50k-gate programs, while a warm one
+    /// decodes them and re-runs only chain validation. Legality is never
+    /// trusted from disk, and any rejected artifact falls back to a cold
+    /// compile that stores the fresh result.
+    pub fn with_cache(
+        exp_bits: u32,
+        man_bits: u32,
+        n_elems: u32,
+        shard_rows: usize,
+        ctx: Option<&CacheContext>,
+    ) -> Result<Self> {
         if !(2..=8).contains(&exp_bits) {
             return Err(Error::BadParameter(format!(
                 "float engine needs an exponent width in 2..=8, got {exp_bits}"
@@ -382,13 +639,109 @@ impl FloatVecEngine {
             ));
         }
         let fmt = FloatFormat::new(exp_bits, man_bits);
-        let engine = Arc::new(MultPimFloatVec::new(fmt, n_elems));
-        // Validate the whole chain exactly once, then lower it exactly
-        // once.
-        engine.validate()?;
+        let shape =
+            [u64::from(exp_bits), u64::from(man_bits), u64::from(n_elems), shard_rows as u64];
+        let mut engine: Option<Arc<MultPimFloatVec>> = None;
+        if let Some(ctx) = ctx {
+            if let Some(artifact) = ctx.cache().load(&ctx.key("floatvec", &shape)) {
+                match Self::rehydrate(fmt, n_elems, artifact) {
+                    // Re-validate the whole chain: legality is never
+                    // trusted from disk.
+                    Some(e) if e.validate().is_ok() => engine = Some(e),
+                    _ => ctx.cache().note_invalidation(),
+                }
+            }
+        }
+        let engine = match engine {
+            Some(e) => e,
+            None => {
+                let e = Arc::new(MultPimFloatVec::new(fmt, n_elems));
+                // Validate the whole chain exactly once, then lower it
+                // exactly once.
+                e.validate()?;
+                if let Some(ctx) = ctx {
+                    let artifact = Artifact::Float {
+                        exp_bits,
+                        man_bits,
+                        n_elems,
+                        mode: e.mode(),
+                        width: e.width(),
+                        operand_width: e.chain().operand_width(),
+                        stats: e.schedule_stats().clone(),
+                        per_program: e.per_program_stats().to_vec(),
+                        programs: e.programs().to_vec(),
+                        a_cols: e.a_cols().to_vec(),
+                        x_cols: e.x_cols().to_vec(),
+                        out_sign: e.out_sign(),
+                        out_exp: e.out_exp().to_vec(),
+                        out_man: e.out_man().to_vec(),
+                        input_cols: e.input_cols().to_vec(),
+                    };
+                    ctx.cache().store(&ctx.key("floatvec", &shape), &artifact);
+                }
+                e
+            }
+        };
         let words = Crossbar::words_for_rows(shard_rows);
         let compiled = Arc::new(CompiledPipeline::lower(engine.programs(), words));
         Ok(Self { engine, compiled, fmt, n_elems, shard_rows })
+    }
+
+    /// Turn a decoded cache payload back into a float engine, rejecting
+    /// anything whose shape or column references don't fit this request.
+    fn rehydrate(fmt: FloatFormat, n_elems: u32, artifact: Artifact) -> Option<Arc<MultPimFloatVec>> {
+        let Artifact::Float {
+            exp_bits,
+            man_bits,
+            n_elems: e,
+            mode,
+            width,
+            operand_width,
+            stats,
+            per_program,
+            programs,
+            a_cols,
+            x_cols,
+            out_sign,
+            out_exp,
+            out_man,
+            input_cols,
+        } = artifact
+        else {
+            return None;
+        };
+        if exp_bits != fmt.exp_bits || man_bits != fmt.man_bits || e != n_elems {
+            return None;
+        }
+        if programs.is_empty()
+            || per_program.len() != programs.len()
+            || programs.iter().any(|p| p.partitions.num_cols() != width)
+            || operand_width > width
+        {
+            return None;
+        }
+        let tb = fmt.total_bits();
+        let fits = |cols: &[u32]| {
+            cols.len() == n_elems as usize
+                && cols.iter().all(|&c| u64::from(c) + u64::from(tb) <= u64::from(width))
+        };
+        if !fits(&a_cols) || !fits(&x_cols) {
+            return None;
+        }
+        // The packed readback walks these exact columns; lengths must
+        // match the format and every column must exist.
+        if out_sign >= width
+            || out_exp.len() != exp_bits as usize
+            || out_man.len() != man_bits as usize
+            || out_exp.iter().chain(out_man.iter()).any(|&c| c >= width)
+        {
+            return None;
+        }
+        let chain =
+            CompiledChain::from_parts(programs, width, mode, stats, per_program, operand_width);
+        Some(Arc::new(MultPimFloatVec::from_cached(
+            fmt, n_elems, chain, a_cols, x_cols, out_sign, out_exp, out_man, input_cols,
+        )))
     }
 
     /// The float format.
@@ -477,12 +830,57 @@ impl FloatVecShard {
             }
             self.sim.crossbar_mut().write_rows_transposed(self.engine.a_col(t), tb, &self.stage);
         }
-        assert_eq!(x.len(), n_elems, "vector length differs from engine shape");
+        self.run_with(rows.len(), x)
+    }
+
+    /// Execute one float matvec tile whose matrix ships pre-transposed
+    /// (`planes` holds the whole matrix as bit-planes; this tile covers
+    /// logical rows `start..start + len`). Bit-identical to
+    /// [`Self::execute`] on the same rows — only the staging path
+    /// differs.
+    pub fn execute_planes(
+        &mut self,
+        planes: &PlaneMatrix,
+        start: usize,
+        len: usize,
+        x: &[u64],
+    ) -> Vec<u64> {
+        assert!(len <= self.shard_rows, "tile exceeds shard rows");
+        let tb = self.engine.fmt().total_bits();
+        assert_eq!(planes.bits(), tb, "plane width differs from engine shape");
+        assert_eq!(
+            planes.elems(),
+            self.engine.n_elems() as usize,
+            "plane element count differs from engine shape"
+        );
+        for t in 0..planes.elems() {
+            for b in 0..tb {
+                planes.slice_plane(t, b, start, len, &mut self.stage);
+                self.sim.crossbar_mut().write_col_words(
+                    self.engine.a_col(t) + b,
+                    len,
+                    &self.stage,
+                );
+            }
+        }
+        self.run_with(len, x)
+    }
+
+    /// Broadcast-stage the duplicated vector over the tile's `m`
+    /// occupied rows, run the pre-lowered chain, read the packed dot
+    /// products back.
+    fn run_with(&mut self, m: usize, x: &[u64]) -> Vec<u64> {
+        let tb = self.engine.fmt().total_bits();
+        assert_eq!(
+            x.len(),
+            self.engine.n_elems() as usize,
+            "vector length differs from engine shape"
+        );
         for (t, &xv) in x.iter().enumerate() {
-            self.sim.crossbar_mut().write_rows_broadcast(self.engine.x_col(t), tb, xv, rows.len());
+            self.sim.crossbar_mut().write_rows_broadcast(self.engine.x_col(t), tb, xv, m);
         }
         self.compiled.execute(&mut self.sim);
-        (0..rows.len()).map(|r| self.engine.read_row(&self.sim, r)).collect()
+        (0..m).map(|r| self.engine.read_row(&self.sim, r)).collect()
     }
 }
 
@@ -630,6 +1028,95 @@ mod tests {
         assert!(FloatVecEngine::new(4, 24, 2, 8).is_err(), "fraction too wide");
         assert!(FloatVecEngine::new(4, 3, 0, 8).is_err(), "no elements");
         assert!(FloatVecEngine::new(4, 3, 2, 0).is_err(), "no rows");
+    }
+
+    /// The bit-transposed wire path: staging a tile from pre-transposed
+    /// planes must be bit-identical to row staging — at aligned and
+    /// unaligned tile starts, full and partial occupancy, on dirty
+    /// resident crossbars.
+    #[test]
+    fn planes_staging_matches_row_staging() {
+        let engine = ChainEngine::new(8, 4, 8).unwrap();
+        let mut row_shard = engine.shard();
+        let mut plane_shard = engine.shard();
+        let mut rng = SplitMix64::new(0xBEEF);
+        let rows: Vec<Vec<u64>> =
+            (0..21).map(|_| (0..4).map(|_| rng.bits(8)).collect()).collect();
+        let planes = PlaneMatrix::from_rows(&rows, 8).unwrap();
+        let x: Vec<u64> = (0..4).map(|_| rng.bits(8)).collect();
+        for (start, len) in [(0usize, 8usize), (8, 8), (16, 5), (3, 8), (13, 6), (20, 1)] {
+            assert_eq!(
+                plane_shard.execute_planes(&planes, start, len, &x),
+                row_shard.execute(&rows[start..start + len], &x),
+                "start={start} len={len}"
+            );
+        }
+    }
+
+    /// Same equivalence for the float tenant and for GEMM panels.
+    #[test]
+    fn float_and_panel_planes_match_row_staging() {
+        let engine = FloatVecEngine::new(4, 3, 3, 8).unwrap();
+        let fmt = engine.fmt();
+        let mut row_shard = engine.shard();
+        let mut plane_shard = engine.shard();
+        let mut rng = SplitMix64::new(0xF00D);
+        let rows: Vec<Vec<u64>> = (0..13)
+            .map(|_| (0..3).map(|_| rng.bits(fmt.total_bits())).collect())
+            .collect();
+        let planes = PlaneMatrix::from_rows(&rows, fmt.total_bits()).unwrap();
+        let x: Vec<u64> = (0..3).map(|_| rng.bits(fmt.total_bits())).collect();
+        for (start, len) in [(0usize, 8usize), (8, 5), (5, 8), (12, 1)] {
+            assert_eq!(
+                plane_shard.execute_planes(&planes, start, len, &x),
+                row_shard.execute(&rows[start..start + len], &x),
+                "start={start} len={len}"
+            );
+        }
+
+        let engine = ChainEngine::new(8, 4, 8).unwrap();
+        let mut row_shard = engine.shard();
+        let mut plane_shard = engine.shard();
+        let rows: Vec<Vec<u64>> =
+            (0..11).map(|_| (0..4).map(|_| rng.bits(8)).collect()).collect();
+        let planes = PlaneMatrix::from_rows(&rows, 8).unwrap();
+        let xs: Vec<Vec<u64>> =
+            (0..3).map(|_| (0..4).map(|_| rng.bits(8)).collect()).collect();
+        for (start, len) in [(0usize, 8usize), (8, 3), (2, 7)] {
+            assert_eq!(
+                plane_shard.execute_panel_planes(&planes, start, len, &xs),
+                row_shard.execute_panel(&rows[start..start + len], &xs),
+                "start={start} len={len}"
+            );
+        }
+    }
+
+    /// A warm (cache-hit) float engine must count one hit and serve
+    /// bit-identically to the cold engine that stored the artifact.
+    #[test]
+    fn float_engine_cache_hit_serves_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("multpim-engine-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Arc::new(crate::cache::ProgramCache::new(&dir));
+        let ctx = CacheContext::new(Arc::clone(&cache), &crate::device::Topology::flat(4));
+        let cold = FloatVecEngine::with_cache(4, 3, 2, 8, Some(&ctx)).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.stores), (0, 1, 1), "cold launch: miss + store");
+        let warm = FloatVecEngine::with_cache(4, 3, 2, 8, Some(&ctx)).unwrap();
+        assert_eq!(cache.stats().hits, 1, "warm launch must hit");
+        assert_eq!(warm.cycles(), cold.cycles());
+        assert_eq!(warm.inner().schedule_stats(), cold.inner().schedule_stats());
+        let fmt = cold.fmt();
+        let mut rng = SplitMix64::new(0xCA11);
+        let rows: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..2).map(|_| rng.bits(fmt.total_bits())).collect())
+            .collect();
+        let x: Vec<u64> = (0..2).map(|_| rng.bits(fmt.total_bits())).collect();
+        let mut cold_shard = cold.shard();
+        let mut warm_shard = warm.shard();
+        assert_eq!(warm_shard.execute(&rows, &x), cold_shard.execute(&rows, &x));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Panel execution (the GEMM tile shape): staging the matrix once and

@@ -229,6 +229,17 @@ pub struct Metrics {
     /// [`BatchQueue::task_done`](super::batcher::BatchQueue::task_done)
     /// clamp path fired instead of corrupting the backlog count).
     pub task_done_underflow: AtomicU64,
+    /// Compiled-program disk cache hits during launch (copied from
+    /// [`ProgramCache::stats`](crate::cache::ProgramCache::stats) once
+    /// launch completes; zero when launched without a cache directory).
+    pub cache_hits: AtomicU64,
+    /// Compiled-program cache misses (no file for the key).
+    pub cache_misses: AtomicU64,
+    /// Cache entries rejected as corrupt, truncated, stale-versioned, or
+    /// failing re-validation — every one fell back to a clean recompile.
+    pub cache_invalidations: AtomicU64,
+    /// Freshly compiled artifacts written back to the cache directory.
+    pub cache_stores: AtomicU64,
     /// When this metrics registry was created (occupancy baseline).
     started: Instant,
     /// Per-workload labeled counters, registered at launch.
@@ -247,6 +258,10 @@ impl Default for Metrics {
             queue_wait_ns: AtomicU64::new(0),
             queued_units: AtomicU64::new(0),
             task_done_underflow: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_invalidations: AtomicU64::new(0),
+            cache_stores: AtomicU64::new(0),
             started: Instant::now(),
             workloads: Mutex::new(BTreeMap::new()),
         }
@@ -316,6 +331,16 @@ impl Metrics {
         self.task_done_underflow.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Copy the compiled-program cache's launch-time outcome into the
+    /// service counters (store, not add: launch happens once and the
+    /// cache's own counters are the source of truth).
+    pub fn set_cache_stats(&self, stats: crate::cache::CacheStats) {
+        self.cache_hits.store(stats.hits, Ordering::Relaxed);
+        self.cache_misses.store(stats.misses, Ordering::Relaxed);
+        self.cache_invalidations.store(stats.invalidations, Ordering::Relaxed);
+        self.cache_stores.store(stats.stores, Ordering::Relaxed);
+    }
+
     /// Mean per-unit queue wait so far, across all workloads.
     pub fn avg_queue_wait(&self) -> Duration {
         let n = self.queued_units.load(Ordering::Relaxed);
@@ -356,6 +381,18 @@ impl Metrics {
             self.avg_queue_wait(),
             self.task_done_underflow.load(Ordering::Relaxed),
         );
+        let (c_hits, c_misses, c_inval, c_stores) = (
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.cache_invalidations.load(Ordering::Relaxed),
+            self.cache_stores.load(Ordering::Relaxed),
+        );
+        if c_hits + c_misses + c_inval + c_stores > 0 {
+            out.push_str(&format!(
+                "\n  cache[program] hits={c_hits} misses={c_misses} \
+                 invalidations={c_inval} stores={c_stores}"
+            ));
+        }
         for (key, wl) in self.workloads() {
             let tiles = wl.tiles.load(Ordering::Relaxed);
             let units = wl.units.load(Ordering::Relaxed);
@@ -666,6 +703,32 @@ mod tests {
             s.contains("staging[multiply N=16] stage_cycles=448 stall_cycles=224 hidden_words=32"),
             "{s}"
         );
+    }
+
+    #[test]
+    fn cache_line_renders_only_after_a_cached_launch() {
+        let m = Metrics::default();
+        // No cache directory configured: the line is absent entirely.
+        assert!(!m.snapshot().contains("cache[program]"), "{}", m.snapshot());
+        m.set_cache_stats(crate::cache::CacheStats {
+            hits: 3,
+            misses: 1,
+            invalidations: 2,
+            stores: 1,
+        });
+        let s = m.snapshot();
+        assert!(
+            s.contains("cache[program] hits=3 misses=1 invalidations=2 stores=1"),
+            "{s}"
+        );
+        // set semantics: a second copy replaces, never accumulates.
+        m.set_cache_stats(crate::cache::CacheStats {
+            hits: 4,
+            misses: 0,
+            invalidations: 0,
+            stores: 0,
+        });
+        assert!(m.snapshot().contains("cache[program] hits=4 misses=0"), "{}", m.snapshot());
     }
 
     #[test]

@@ -144,4 +144,7 @@ pub use server::{
     Coordinator, DeploymentSpec, FloatVecDeployment, MatMulDeployment, MatVecDeployment,
     MultiplyDeployment, Request, Response,
 };
-pub use workloads::{FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyWorkload};
+pub use workloads::{
+    staging_cost, FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyWorkload, StageKind,
+    TileMatrix, WireFormat,
+};

@@ -56,6 +56,8 @@ use super::pool::{ShardPool, Workload, WorkloadKey};
 use super::workloads::{
     FloatVecWorkload, MatMulWorkload, MatVecWorkload, MultiplyJob, MultiplyWorkload,
 };
+use crate::cache::CacheContext;
+use crate::crossbar::PlaneMatrix;
 use crate::device::{Allocator, DeviceConfig, LinkContention, Placement, PlacementPolicy, Topology};
 use crate::fixedpoint::float::FloatFormat;
 use crate::util::div_ceil;
@@ -87,6 +89,18 @@ pub enum Request {
         /// Vector.
         x: Vec<u64>,
     },
+    /// [`Request::MatVec`] over the bit-transposed wire: the matrix ships
+    /// as a [`PlaneMatrix`] (`a.bits() == n_bits`), so shard staging is a
+    /// straight word memcpy per operand column. Results are bit-identical
+    /// to the row-major wire on the equivalent matrix.
+    MatVecPlanes {
+        /// Operand width.
+        n_bits: u32,
+        /// Matrix as packed bit-planes.
+        a: PlaneMatrix,
+        /// Vector.
+        x: Vec<u64>,
+    },
     /// `A * B` for an `m x k` matrix A and `k x p` matrix B (row-major),
     /// every output element a 2N-bit inner product modulo `2^(2N)`.
     MatMul {
@@ -96,6 +110,20 @@ pub enum Request {
         a: Vec<Vec<u64>>,
         /// Matrix B, row-major `k x p`.
         b: Vec<Vec<u64>>,
+    },
+    /// [`Request::MatMul`] over the bit-transposed wire: A ships as a
+    /// [`PlaneMatrix`] (`a.bits() == n_bits`, `a.elems() == k`) and B
+    /// ships *pre-transposed* — `bt` has `p` rows of `k` values with
+    /// `bt[c][t] = B[t][c]` — so panel extraction is a row slice instead
+    /// of a strided gather. Results are bit-identical to the row-major
+    /// wire on the equivalent operands.
+    MatMulPlanes {
+        /// Operand width.
+        n_bits: u32,
+        /// Matrix A as packed bit-planes.
+        a: PlaneMatrix,
+        /// Matrix B transposed, row-major `p x k`.
+        bt: Vec<Vec<u64>>,
     },
     /// Full-precision floating-point `A x`: every element a packed float
     /// of the deployed [`FloatFormat`]; each result row is bit-exact
@@ -109,6 +137,20 @@ pub enum Request {
         man_bits: u32,
         /// Matrix rows (packed floats).
         rows: Vec<Vec<u64>>,
+        /// Vector (packed floats).
+        x: Vec<u64>,
+    },
+    /// [`Request::FloatMatVec`] over the bit-transposed wire: the matrix
+    /// ships as a [`PlaneMatrix`] of packed floats
+    /// (`a.bits() == fmt.total_bits()`). Results are bit-identical to the
+    /// row-major wire on the equivalent matrix.
+    FloatMatVecPlanes {
+        /// Exponent field width of the packed operands.
+        exp_bits: u32,
+        /// Fraction field width of the packed operands.
+        man_bits: u32,
+        /// Matrix as packed bit-planes of packed floats.
+        a: PlaneMatrix,
         /// Vector (packed floats).
         x: Vec<u64>,
     },
@@ -383,6 +425,16 @@ impl Coordinator {
         matmuls: &[MatMulDeployment],
         floatvecs: &[FloatVecDeployment],
     ) -> Result<Self> {
+        // Phase 0: if the device carries a compiled-program cache, bind
+        // it to this device's key context (topology geometry + crate
+        // version) so every Phase 1 engine build consults the disk cache
+        // before validating/lowering from scratch. Cache hits are still
+        // re-validated — legality is never trusted from disk.
+        let ctx = device
+            .cache
+            .as_ref()
+            .map(|cache| CacheContext::new(Arc::clone(cache), &device.topology));
+
         // Phase 1: validate every deployment and build every engine
         // *before* spawning any worker. A failure here must leave no
         // thread behind — a worker blocked on a queue nothing will ever
@@ -398,7 +450,10 @@ impl Coordinator {
                 )));
             }
             // Validate + lower once; shards share the immutable program.
-            multiply_engines.push((*dep, MultiplyEngine::new(dep.config, dep.n_bits, dep.rows)?));
+            multiply_engines.push((
+                *dep,
+                MultiplyEngine::with_cache(dep.config, dep.n_bits, dep.rows, ctx.as_ref())?,
+            ));
         }
         let mut matvec_engines: Vec<(MatVecDeployment, ChainEngine)> =
             Vec::with_capacity(matvecs.len());
@@ -415,7 +470,16 @@ impl Coordinator {
             }
             // Chain-validate + lower once; shards share the immutable
             // compiled pipeline.
-            matvec_engines.push((*dep, ChainEngine::new(dep.n_bits, dep.n_elems, dep.shard_rows)?));
+            matvec_engines.push((
+                *dep,
+                ChainEngine::with_cache(
+                    dep.n_bits,
+                    dep.n_elems,
+                    dep.shard_rows,
+                    ctx.as_ref(),
+                    "matvec",
+                )?,
+            ));
         }
         let mut matmul_engines: Vec<(MatMulDeployment, ChainEngine)> =
             Vec::with_capacity(matmuls.len());
@@ -433,7 +497,10 @@ impl Coordinator {
                     dep.n_bits, dep.k
                 )));
             }
-            matmul_engines.push((*dep, ChainEngine::new(dep.n_bits, dep.k, dep.shard_rows)?));
+            matmul_engines.push((
+                *dep,
+                ChainEngine::with_cache(dep.n_bits, dep.k, dep.shard_rows, ctx.as_ref(), "matmul")?,
+            ));
         }
         let mut floatvec_engines: Vec<(FloatVecDeployment, FloatVecEngine)> =
             Vec::with_capacity(floatvecs.len());
@@ -454,7 +521,13 @@ impl Coordinator {
             // compiled pipeline.
             floatvec_engines.push((
                 *dep,
-                FloatVecEngine::new(dep.exp_bits, dep.man_bits, dep.n_elems, dep.shard_rows)?,
+                FloatVecEngine::with_cache(
+                    dep.exp_bits,
+                    dep.man_bits,
+                    dep.n_elems,
+                    dep.shard_rows,
+                    ctx.as_ref(),
+                )?,
             ));
         }
 
@@ -515,6 +588,11 @@ impl Coordinator {
         // Phase 2: everything validated and placed — spawn the pools
         // (infallible).
         let metrics = Arc::new(Metrics::default());
+        // Every engine build is done, so the cache's launch outcome is
+        // final; copy it into the service counters once.
+        if let Some(ctx) = &ctx {
+            metrics.set_cache_stats(ctx.cache().stats());
+        }
         let mut workers = Vec::new();
         let mut multiply = HashMap::new();
         for ((dep, engine), slots) in multiply_engines.into_iter().zip(multiply_slots) {
@@ -740,6 +818,47 @@ impl Coordinator {
                 // Queued tiles are counted by the backlog now.
                 tenant.release(planned);
             }
+            Request::MatVecPlanes { n_bits, a, x } => {
+                let key = WorkloadKey::MatVec { n_bits, n_elems: x.len() as u32 };
+                let tenant =
+                    self.matvec.get(&(n_bits, x.len() as u32)).ok_or(Error::NoDeployment(key))?;
+                if a.bits() != n_bits {
+                    return Err(Error::BadParameter(format!(
+                        "matvec planes pack {}-bit values, expected N={n_bits}",
+                        a.bits()
+                    )));
+                }
+                // An empty plane matrix has no element count to check;
+                // values are already range-checked by PlaneMatrix.
+                if a.rows() > 0 && a.elems() != x.len() {
+                    return Err(Error::BadParameter(format!(
+                        "matvec planes carry {} elements per row, expected {}",
+                        a.elems(),
+                        x.len()
+                    )));
+                }
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                let m = a.rows();
+                let planned = div_ceil(m, shard_rows);
+                tenant.admit(key, planned, m as u64)?;
+                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                tenant.pool.counters().record_admission(m as u64);
+                if m == 0 {
+                    let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // Same row-wise tiling as the row-major wire; only the
+                // staging path (word memcpy) and its modeled cost differ.
+                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued) {
+                    if !tenant.pool.push(tile) {
+                        tenant.release(planned);
+                        return Err(Error::Runtime("matvec shard pool shut down".into()));
+                    }
+                }
+                tenant.release(planned);
+            }
             Request::MatMul { n_bits, a, b } => {
                 let key = WorkloadKey::MatMul { n_bits, k: b.len() as u32 };
                 let tenant =
@@ -789,6 +908,55 @@ impl Coordinator {
                     }
                 }
                 // Queued tiles are counted by the backlog now.
+                tenant.release(planned);
+            }
+            Request::MatMulPlanes { n_bits, a, bt } => {
+                // B arrives transposed (p rows of k values), so the inner
+                // dimension is A's element count — recovered from bt for
+                // the degenerate empty-A case, matching the row-major
+                // wire's `k = b.len()` routing.
+                let k = if a.rows() > 0 { a.elems() } else { bt.first().map_or(0, Vec::len) };
+                let key = WorkloadKey::MatMul { n_bits, k: k as u32 };
+                let tenant =
+                    self.matmul.get(&(n_bits, k as u32)).ok_or(Error::NoDeployment(key))?;
+                if a.bits() != n_bits {
+                    return Err(Error::BadParameter(format!(
+                        "matmul planes pack {}-bit values, expected N={n_bits}",
+                        a.bits()
+                    )));
+                }
+                for (c, row) in bt.iter().enumerate() {
+                    if row.len() != k {
+                        return Err(Error::BadParameter(format!(
+                            "matmul B^T row {c} has {} elements, expected k={k}",
+                            row.len()
+                        )));
+                    }
+                }
+                let m = a.rows();
+                let p = bt.len();
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                let panel_cols = tenant.pool.workload().panel_cols();
+                let planned = div_ceil(m, shard_rows) * div_ceil(p, panel_cols);
+                tenant.admit(key, planned, (m * p) as u64)?;
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                tenant.pool.counters().record_admission((m * p) as u64);
+                if m == 0 || p == 0 {
+                    let _ = reply_tx.send(Ok(Response::Matrix(vec![Vec::new(); m])));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // Same 2-D tiling as the row-major wire; panels are row
+                // slices of the pre-transposed B.
+                for tile in
+                    tenant.pool.workload().plan_planes(a, bt, p, reply_tx, enqueued, ticket)
+                {
+                    if !tenant.pool.push(tile) {
+                        tenant.release(planned);
+                        return Err(Error::Runtime("matmul shard pool shut down".into()));
+                    }
+                }
                 tenant.release(planned);
             }
             Request::FloatMatVec { exp_bits, man_bits, rows, x } => {
@@ -850,6 +1018,61 @@ impl Coordinator {
                 // Queued tiles are counted by the backlog now.
                 tenant.release(planned);
             }
+            Request::FloatMatVecPlanes { exp_bits, man_bits, a, x } => {
+                let key =
+                    WorkloadKey::FloatVec { exp_bits, man_bits, n_elems: x.len() as u32 };
+                let tenant = self
+                    .floatvec
+                    .get(&(exp_bits, man_bits, x.len() as u32))
+                    .ok_or(Error::NoDeployment(key))?;
+                let fmt = FloatFormat::new(exp_bits, man_bits);
+                // Plane values are range-checked by PlaneMatrix once the
+                // width matches; only the vector needs the mask check.
+                if a.bits() != fmt.total_bits() {
+                    return Err(Error::BadParameter(format!(
+                        "float matvec planes pack {}-bit values, expected the {}-bit \
+                         packed format",
+                        a.bits(),
+                        fmt.total_bits()
+                    )));
+                }
+                for (t, &v) in x.iter().enumerate() {
+                    if v > fmt.mask() {
+                        return Err(Error::BadParameter(format!(
+                            "float matvec x element {t} holds {v:#x}, wider than the \
+                             {}-bit packed format",
+                            fmt.total_bits()
+                        )));
+                    }
+                }
+                if a.rows() > 0 && a.elems() != x.len() {
+                    return Err(Error::BadParameter(format!(
+                        "float matvec planes carry {} elements per row, expected {}",
+                        a.elems(),
+                        x.len()
+                    )));
+                }
+                let shard_rows = tenant.pool.workload().engine().shard_rows();
+                let m = a.rows();
+                let planned = div_ceil(m, shard_rows);
+                tenant.admit(key, planned, m as u64)?;
+                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                tenant.pool.counters().record_admission(m as u64);
+                if m == 0 {
+                    let _ = reply_tx.send(Ok(Response::FloatVector(Vec::new())));
+                    return Ok(reply_rx);
+                }
+                let enqueued = Instant::now();
+                // Same row-wise tiling as the row-major wire.
+                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued) {
+                    if !tenant.pool.push(tile) {
+                        tenant.release(planned);
+                        return Err(Error::Runtime("floatvec shard pool shut down".into()));
+                    }
+                }
+                tenant.release(planned);
+            }
         }
         Ok(reply_rx)
     }
@@ -872,10 +1095,36 @@ impl Coordinator {
         }
     }
 
+    /// Convenience: synchronous matvec over the bit-transposed wire.
+    /// Bit-identical to [`Coordinator::matvec`] on the equivalent rows.
+    pub fn matvec_planes(&self, n_bits: u32, a: PlaneMatrix, x: Vec<u64>) -> Result<Vec<u64>> {
+        let rx = self.submit(Request::MatVecPlanes { n_bits, a, x })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::InnerProducts(v) => Ok(v),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
     /// Convenience: synchronous matmul (`a` row-major `m x k`, `b`
     /// row-major `k x p`; result row-major `m x p`).
     pub fn matmul(&self, n_bits: u32, a: Vec<Vec<u64>>, b: Vec<Vec<u64>>) -> Result<Vec<Vec<u64>>> {
         let rx = self.submit(Request::MatMul { n_bits, a, b })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::Matrix(c) => Ok(c),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Convenience: synchronous matmul over the bit-transposed wire
+    /// (`a` as planes, `bt` = B transposed, `p x k`). Bit-identical to
+    /// [`Coordinator::matmul`] on the equivalent operands.
+    pub fn matmul_planes(
+        &self,
+        n_bits: u32,
+        a: PlaneMatrix,
+        bt: Vec<Vec<u64>>,
+    ) -> Result<Vec<Vec<u64>>> {
+        let rx = self.submit(Request::MatMulPlanes { n_bits, a, bt })?;
         match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
             Response::Matrix(c) => Ok(c),
             other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
@@ -894,6 +1143,23 @@ impl Coordinator {
         x: Vec<u64>,
     ) -> Result<Vec<u64>> {
         let rx = self.submit(Request::FloatMatVec { exp_bits, man_bits, rows, x })?;
+        match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
+            Response::FloatVector(v) => Ok(v),
+            other => Err(Error::Runtime(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Convenience: synchronous float matvec over the bit-transposed
+    /// wire. Bit-identical to [`Coordinator::float_matvec`] on the
+    /// equivalent rows.
+    pub fn float_matvec_planes(
+        &self,
+        exp_bits: u32,
+        man_bits: u32,
+        a: PlaneMatrix,
+        x: Vec<u64>,
+    ) -> Result<Vec<u64>> {
+        let rx = self.submit(Request::FloatMatVecPlanes { exp_bits, man_bits, a, x })?;
         match rx.recv().map_err(|_| Error::Runtime("worker dropped reply".into()))?? {
             Response::FloatVector(v) => Ok(v),
             other => Err(Error::Runtime(format!("unexpected response {other:?}"))),

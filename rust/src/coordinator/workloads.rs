@@ -29,6 +29,7 @@ use super::engine::{
 use super::pool::{TileCost, Workload, WorkloadKey};
 use super::server::Response;
 use crate::algorithms::matmul::plan_tiles;
+use crate::crossbar::PlaneMatrix;
 use crate::device::TileTraffic;
 use crate::Result;
 use std::sync::{mpsc, Arc};
@@ -53,6 +54,114 @@ fn unit_weighted_wait_ns(wait: Duration, units: u64) -> u64 {
 /// columns: one word per bit-plane per 64-row lane group.
 fn packed_plane_words(rows: u64, bits: u64) -> u64 {
     bits * rows.div_ceil(64)
+}
+
+/// The operand wire format a tile's matrix arrived in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Row-major values; the shard re-transposes them into bit-planes
+    /// while staging (the original path, and the transparent fallback).
+    Rows,
+    /// Pre-transposed bit-planes ([`PlaneMatrix`]); staging is a
+    /// straight word memcpy per operand column.
+    Transposed,
+}
+
+/// The staging shape of one tile, for [`staging_cost`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// A multiply batch: two operand columns per pair.
+    PairBatch {
+        /// Pairs in the batch.
+        pairs: u64,
+        /// Operand width N.
+        bits: u64,
+    },
+    /// A matvec/floatvec row tile: the matrix slice plus one broadcast
+    /// vector.
+    VecTile {
+        /// Occupied rows of the tile.
+        rows: u64,
+        /// Elements per row (the inner dimension).
+        elems: u64,
+        /// Packed width of each value.
+        bits: u64,
+    },
+    /// A GEMM rectangle: the A slice staged once plus one broadcast
+    /// vector per panel column.
+    PanelTile {
+        /// Occupied rows of the tile.
+        rows: u64,
+        /// Elements per row (the inner dimension k).
+        elems: u64,
+        /// Packed width of each value.
+        bits: u64,
+        /// Output columns sharing this tile's A staging.
+        panel_cols: u64,
+    },
+}
+
+/// Modeled words through the staging write channel for one tile — the
+/// single source of truth every tenant's `TileCost::stage_words` prices
+/// through (previously four near-duplicate inline formulas).
+///
+/// Under [`WireFormat::Rows`] the matrix term is the bit-planes the
+/// shard materializes while transposing (`bits * ceil(rows/64)` words
+/// per element) and each broadcast vector element costs its `bits`
+/// planes — the original pricing, unchanged so the overlap model and its
+/// gates stay put. Under [`WireFormat::Transposed`] the matrix term is
+/// identical (the client ships exactly those plane words and the shard
+/// memcpys them), but each vector element costs **one** word: the wire
+/// carries the raw value and the per-bit broadcast becomes an on-bank
+/// column fill rather than staged write-channel traffic. Multiply
+/// batches are scalar pairs batched server-side, so both wire formats
+/// price them the same.
+pub fn staging_cost(wire: WireFormat, kind: StageKind) -> u64 {
+    match kind {
+        StageKind::PairBatch { pairs, bits } => 2 * packed_plane_words(pairs, bits),
+        StageKind::VecTile { rows, elems, bits } => {
+            let matrix = elems * packed_plane_words(rows, bits);
+            match wire {
+                WireFormat::Rows => matrix + elems * bits,
+                WireFormat::Transposed => matrix + elems,
+            }
+        }
+        StageKind::PanelTile { rows, elems, bits, panel_cols } => {
+            let matrix = elems * packed_plane_words(rows, bits);
+            match wire {
+                WireFormat::Rows => matrix + panel_cols * elems * bits,
+                WireFormat::Transposed => matrix + panel_cols * elems,
+            }
+        }
+    }
+}
+
+/// A tile's matrix payload: row-major (the transparent fallback every
+/// existing client keeps using) or pre-transposed bit-planes.
+#[derive(Debug, Clone)]
+pub enum TileMatrix {
+    /// Row-major rows, transposed on the shard while staging.
+    Rows(Arc<Vec<Vec<u64>>>),
+    /// Pre-transposed planes, word-copied while staging.
+    Planes(Arc<PlaneMatrix>),
+}
+
+impl TileMatrix {
+    /// The wire format this payload arrived in.
+    pub fn wire(&self) -> WireFormat {
+        match self {
+            TileMatrix::Rows(_) => WireFormat::Rows,
+            TileMatrix::Planes(_) => WireFormat::Transposed,
+        }
+    }
+
+    /// Logical row count.
+    pub fn rows(&self) -> usize {
+        match self {
+            TileMatrix::Rows(rows) => rows.len(),
+            TileMatrix::Planes(planes) => planes.rows(),
+        }
+    }
 }
 
 /// An operand pair plus its reply channel (the multiply batcher's queue
@@ -113,7 +222,10 @@ impl Workload for MultiplyWorkload {
             cycles: shard.cycles_per_batch(),
             queue_wait_ns,
             // Two operand columns per pair, bit-serial into 64 lanes.
-            stage_words: 2 * packed_plane_words(units, self.n_bits as u64),
+            stage_words: staging_cost(
+                WireFormat::Rows,
+                StageKind::PairBatch { pairs: units, bits: self.n_bits as u64 },
+            ),
         });
         for (pending, product) in batch.into_iter().zip(products) {
             let _ = pending.item.2.send(Ok(Response::Product(product)));
@@ -121,10 +233,11 @@ impl Workload for MultiplyWorkload {
     }
 }
 
-/// One matvec row tile: a contiguous row range of the request's matrix,
-/// the shared vector, and the request's completion state.
+/// One matvec row tile: a contiguous row range of the request's matrix
+/// (row-major or bit-transposed), the shared vector, and the request's
+/// completion state.
 pub struct MatVecTile {
-    rows: Arc<Vec<Vec<u64>>>,
+    matrix: TileMatrix,
     /// Index of the tile's first row in the matrix (result placement).
     start: usize,
     /// Rows in this tile.
@@ -152,8 +265,8 @@ impl MatVecWorkload {
         &self.engine
     }
 
-    /// Plan an admitted request into row tiles sharing one gather.
-    /// `rows` must be non-empty (empty requests are answered at
+    /// Plan an admitted row-major request into row tiles sharing one
+    /// gather. `rows` must be non-empty (empty requests are answered at
     /// admission).
     pub fn plan(
         &self,
@@ -162,18 +275,41 @@ impl MatVecWorkload {
         reply: ReplySender,
         enqueued: Instant,
     ) -> Vec<MatVecTile> {
-        let m = rows.len();
+        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued)
+    }
+
+    /// Plan an admitted bit-transposed request ([`PlaneMatrix`] wire
+    /// format) into row tiles sharing one gather. Results are
+    /// bit-identical to [`Self::plan`] on the equivalent rows; only the
+    /// staging path and its modeled cost differ.
+    pub fn plan_planes(
+        &self,
+        planes: PlaneMatrix,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<MatVecTile> {
+        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued)
+    }
+
+    fn plan_matrix(
+        &self,
+        matrix: TileMatrix,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<MatVecTile> {
+        let m = matrix.rows();
         let shard_rows = self.engine.shard_rows();
         let tiles = m / shard_rows + usize::from(m % shard_rows != 0);
         let gather = Arc::new(ScatterGather::new(m, tiles));
-        let rows = Arc::new(rows);
         let x = Arc::new(x);
         let mut planned = Vec::with_capacity(tiles);
         let mut start = 0usize;
         while start < m {
             let len = (m - start).min(shard_rows);
             planned.push(MatVecTile {
-                rows: Arc::clone(&rows),
+                matrix: matrix.clone(),
                 start,
                 len,
                 x: Arc::clone(&x),
@@ -200,9 +336,17 @@ impl Workload for MatVecWorkload {
     }
 
     fn traffic(&self, tile: &MatVecTile) -> TileTraffic {
-        // Row words plus the shared vector, all staged fresh per tile.
         let n = self.engine.n_elems() as u64;
-        TileTraffic::fresh(tile.len as u64 * n + n)
+        match &tile.matrix {
+            // Row words plus the shared vector, all staged fresh per
+            // tile (value-word scale, the legacy accounting).
+            TileMatrix::Rows(_) => TileTraffic::fresh(tile.len as u64 * n + n),
+            // The transposed wire moves exactly the plane words of the
+            // tile slice plus the raw vector words.
+            TileMatrix::Planes(_) => TileTraffic::fresh(
+                n * packed_plane_words(tile.len as u64, self.engine.n_bits() as u64) + n,
+            ),
+        }
     }
 
     fn execute(
@@ -212,8 +356,14 @@ impl Workload for MatVecWorkload {
         record: &mut dyn FnMut(TileCost),
     ) {
         let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
-        let slice = &tile.rows[tile.start..tile.start + tile.len];
-        let out = shard.execute(slice, &tile.x);
+        let out = match &tile.matrix {
+            TileMatrix::Rows(rows) => {
+                shard.execute(&rows[tile.start..tile.start + tile.len], &tile.x)
+            }
+            TileMatrix::Planes(planes) => {
+                shard.execute_planes(planes, tile.start, tile.len, &tile.x)
+            }
+        };
         let units = tile.len as u64;
         let n = self.engine.n_elems() as u64;
         let nb = self.engine.n_bits() as u64;
@@ -223,9 +373,10 @@ impl Workload for MatVecWorkload {
             units,
             cycles: shard.cycles(),
             queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
-            // n_elems packed matrix columns plus the broadcast vector's
-            // bit-planes written across every row.
-            stage_words: n * packed_plane_words(units, nb) + n * nb,
+            stage_words: staging_cost(
+                tile.matrix.wire(),
+                StageKind::VecTile { rows: units, elems: n, bits: nb },
+            ),
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
             let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
@@ -236,8 +387,9 @@ impl Workload for MatVecWorkload {
 /// One matmul tile: a row-tile x output-column-panel rectangle of the
 /// request's `m x p` output, plus the request's completion state.
 pub struct MatMulTile {
-    /// The full matrix A (shared; the tile executes `row0..row0 + rows`).
-    a: Arc<Vec<Vec<u64>>>,
+    /// The full matrix A, row-major or bit-transposed (shared; the tile
+    /// executes `row0..row0 + rows`).
+    a: TileMatrix,
     row0: usize,
     rows: usize,
     /// The panel's output-column vectors of B (`xs[c][t] = B[t][col0+c]`),
@@ -300,15 +452,9 @@ impl MatMulWorkload {
         enqueued: Instant,
         ticket: u64,
     ) -> Vec<MatMulTile> {
-        let m = a.len();
-        let rects = plan_tiles(m, p, self.engine.shard_rows(), self.panel_cols);
-        let gather = Arc::new(ScatterGather::new(m * p, rects.len()));
-        let a = Arc::new(a);
         // Extract each panel's output-column vectors exactly once; every
         // row tile of a panel shares them, keeping the column gathers off
-        // the shard workers' hot path. Panel `i` starts at column
-        // `i * panel_cols` (plan_tiles steps full panels until the tail),
-        // so a rect's panel is `rect.col0 / panel_cols`.
+        // the shard workers' hot path.
         let panels: Vec<Arc<Vec<Vec<u64>>>> = (0..p)
             .step_by(self.panel_cols)
             .map(|col0| {
@@ -319,6 +465,49 @@ impl MatMulWorkload {
                 Arc::new(xs)
             })
             .collect();
+        self.plan_matrix(TileMatrix::Rows(Arc::new(a)), panels, p, reply, enqueued, ticket)
+    }
+
+    /// Plan an admitted bit-transposed request: `a` arrives as a
+    /// [`PlaneMatrix`] and B arrives *pre-transposed* as `bt` (`p` rows
+    /// of `k` values, `bt[c][t] = B[t][c]`), so the per-panel
+    /// output-column vectors are straight row slices instead of strided
+    /// gathers. Results are bit-identical to [`Self::plan`] on the
+    /// equivalent operands.
+    pub fn plan_planes(
+        &self,
+        a: PlaneMatrix,
+        bt: Vec<Vec<u64>>,
+        p: usize,
+        reply: ReplySender,
+        enqueued: Instant,
+        ticket: u64,
+    ) -> Vec<MatMulTile> {
+        let panels: Vec<Arc<Vec<Vec<u64>>>> = (0..p)
+            .step_by(self.panel_cols)
+            .map(|col0| {
+                let cols = (p - col0).min(self.panel_cols);
+                Arc::new(bt[col0..col0 + cols].to_vec())
+            })
+            .collect();
+        self.plan_matrix(TileMatrix::Planes(Arc::new(a)), panels, p, reply, enqueued, ticket)
+    }
+
+    /// Shared rectangle builder. Panel `i` starts at column
+    /// `i * panel_cols` (plan_tiles steps full panels until the tail),
+    /// so a rect's panel is `rect.col0 / panel_cols`.
+    fn plan_matrix(
+        &self,
+        a: TileMatrix,
+        panels: Vec<Arc<Vec<Vec<u64>>>>,
+        p: usize,
+        reply: ReplySender,
+        enqueued: Instant,
+        ticket: u64,
+    ) -> Vec<MatMulTile> {
+        let m = a.rows();
+        let rects = plan_tiles(m, p, self.engine.shard_rows(), self.panel_cols);
+        let gather = Arc::new(ScatterGather::new(m * p, rects.len()));
         rects
             .into_iter()
             .map(|rect| {
@@ -327,7 +516,7 @@ impl MatMulWorkload {
                     "plan_tiles panel starts must stay panel_cols-aligned"
                 );
                 MatMulTile {
-                    a: Arc::clone(&a),
+                    a: a.clone(),
                     row0: rect.row0,
                     rows: rect.rows,
                     xs: Arc::clone(&panels[rect.col0 / self.panel_cols]),
@@ -349,7 +538,7 @@ impl MatMulWorkload {
 /// packed-float matrix, the shared packed vector, and the request's
 /// completion state.
 pub struct FloatVecTile {
-    rows: Arc<Vec<Vec<u64>>>,
+    matrix: TileMatrix,
     /// Index of the tile's first row in the matrix (result placement).
     start: usize,
     /// Rows in this tile.
@@ -378,8 +567,8 @@ impl FloatVecWorkload {
         &self.engine
     }
 
-    /// Plan an admitted request into row tiles sharing one gather.
-    /// `rows` must be non-empty (empty requests are answered at
+    /// Plan an admitted row-major request into row tiles sharing one
+    /// gather. `rows` must be non-empty (empty requests are answered at
     /// admission).
     pub fn plan(
         &self,
@@ -388,18 +577,41 @@ impl FloatVecWorkload {
         reply: ReplySender,
         enqueued: Instant,
     ) -> Vec<FloatVecTile> {
-        let m = rows.len();
+        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued)
+    }
+
+    /// Plan an admitted bit-transposed request ([`PlaneMatrix`] of
+    /// packed-float values, `bits == fmt.total_bits()`) into row tiles
+    /// sharing one gather. Results are bit-identical to [`Self::plan`]
+    /// on the equivalent rows.
+    pub fn plan_planes(
+        &self,
+        planes: PlaneMatrix,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<FloatVecTile> {
+        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued)
+    }
+
+    fn plan_matrix(
+        &self,
+        matrix: TileMatrix,
+        x: Vec<u64>,
+        reply: ReplySender,
+        enqueued: Instant,
+    ) -> Vec<FloatVecTile> {
+        let m = matrix.rows();
         let shard_rows = self.engine.shard_rows();
         let tiles = m / shard_rows + usize::from(m % shard_rows != 0);
         let gather = Arc::new(ScatterGather::new(m, tiles));
-        let rows = Arc::new(rows);
         let x = Arc::new(x);
         let mut planned = Vec::with_capacity(tiles);
         let mut start = 0usize;
         while start < m {
             let len = (m - start).min(shard_rows);
             planned.push(FloatVecTile {
-                rows: Arc::clone(&rows),
+                matrix: matrix.clone(),
                 start,
                 len,
                 x: Arc::clone(&x),
@@ -431,9 +643,20 @@ impl Workload for FloatVecWorkload {
     }
 
     fn traffic(&self, tile: &FloatVecTile) -> TileTraffic {
-        // Packed row words plus the shared packed vector, fresh per tile.
         let n = self.engine.n_elems() as u64;
-        TileTraffic::fresh(tile.len as u64 * n + n)
+        match &tile.matrix {
+            // Packed row words plus the shared packed vector, fresh per
+            // tile (value-word scale, the legacy accounting).
+            TileMatrix::Rows(_) => TileTraffic::fresh(tile.len as u64 * n + n),
+            // The transposed wire moves exactly the plane words of the
+            // tile slice plus the raw packed vector words.
+            TileMatrix::Planes(_) => TileTraffic::fresh(
+                n * packed_plane_words(
+                    tile.len as u64,
+                    u64::from(self.engine.fmt().total_bits()),
+                ) + n,
+            ),
+        }
     }
 
     fn execute(
@@ -443,8 +666,14 @@ impl Workload for FloatVecWorkload {
         record: &mut dyn FnMut(TileCost),
     ) {
         let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
-        let slice = &tile.rows[tile.start..tile.start + tile.len];
-        let out = shard.execute(slice, &tile.x);
+        let out = match &tile.matrix {
+            TileMatrix::Rows(rows) => {
+                shard.execute(&rows[tile.start..tile.start + tile.len], &tile.x)
+            }
+            TileMatrix::Planes(planes) => {
+                shard.execute_planes(planes, tile.start, tile.len, &tile.x)
+            }
+        };
         let units = tile.len as u64;
         let n = self.engine.n_elems() as u64;
         let tb = u64::from(self.engine.fmt().total_bits());
@@ -455,7 +684,10 @@ impl Workload for FloatVecWorkload {
             cycles: shard.cycles(),
             queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
             // Packed-float columns stage every bit of the format.
-            stage_words: n * packed_plane_words(units, tb) + n * tb,
+            stage_words: staging_cost(
+                tile.matrix.wire(),
+                StageKind::VecTile { rows: units, elems: n, bits: tb },
+            ),
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
             let _ = tile.reply.send(Ok(Response::FloatVector(full)));
@@ -476,12 +708,18 @@ impl Workload for MatMulWorkload {
     }
 
     fn traffic(&self, tile: &MatMulTile) -> TileTraffic {
-        // The A rows are the reusable staging (shared by every panel of
+        // The A slice is the reusable staging (shared by every panel of
         // this row tile, keyed by the affinity); the B panel is fresh.
         let k = self.engine.n_elems() as u64;
+        let resident_words = match &tile.a {
+            TileMatrix::Rows(_) => tile.rows as u64 * k,
+            TileMatrix::Planes(_) => {
+                k * packed_plane_words(tile.rows as u64, self.engine.n_bits() as u64)
+            }
+        };
         TileTraffic {
             affinity: Some(tile.affinity),
-            resident_words: tile.rows as u64 * k,
+            resident_words,
             fresh_words: tile.xs.len() as u64 * k,
         }
     }
@@ -493,8 +731,14 @@ impl Workload for MatMulWorkload {
         record: &mut dyn FnMut(TileCost),
     ) {
         let queue_wait = Instant::now().saturating_duration_since(tile.enqueued);
-        let a_rows = &tile.a[tile.row0..tile.row0 + tile.rows];
-        let panel = shard.execute_panel(a_rows, &tile.xs);
+        let panel = match &tile.a {
+            TileMatrix::Rows(a) => {
+                shard.execute_panel(&a[tile.row0..tile.row0 + tile.rows], &tile.xs)
+            }
+            TileMatrix::Planes(planes) => {
+                shard.execute_panel_planes(planes, tile.row0, tile.rows, &tile.xs)
+            }
+        };
         let units = (tile.rows * tile.xs.len()) as u64;
         let k = self.engine.n_elems() as u64;
         let nb = self.engine.n_bits() as u64;
@@ -504,10 +748,15 @@ impl Workload for MatMulWorkload {
             units,
             cycles: shard.cycles() * tile.xs.len() as u64,
             queue_wait_ns: unit_weighted_wait_ns(queue_wait, units),
-            // The A rows stage once per tile; each panel column's B
-            // vector is broadcast separately before its chain run.
-            stage_words: k * packed_plane_words(tile.rows as u64, nb)
-                + tile.xs.len() as u64 * k * nb,
+            stage_words: staging_cost(
+                tile.a.wire(),
+                StageKind::PanelTile {
+                    rows: tile.rows as u64,
+                    elems: k,
+                    bits: nb,
+                    panel_cols: tile.xs.len() as u64,
+                },
+            ),
         });
         let done = tile.gather.complete_with(|out| {
             for (c, col) in panel.iter().enumerate() {
@@ -554,5 +803,48 @@ mod tests {
         assert_eq!(packed_plane_words(65, 16), 32);
         assert_eq!(packed_plane_words(1, 8), 8);
         assert_eq!(packed_plane_words(0, 8), 0);
+    }
+
+    /// Every tenant's exact modeled word counts, pinned per wire format.
+    /// The `Rows` numbers are the pre-refactor inline formulas — they
+    /// must never drift, the overlap model's gates are calibrated against
+    /// them.
+    #[test]
+    fn staging_cost_pins_every_tenant() {
+        use StageKind::*;
+        use WireFormat::*;
+        // Multiply, a full 64-pair batch of 16-bit operands: two columns
+        // of 16 planes each, one lane group. Same both wire formats
+        // (pairs are scalars; there is no matrix to pre-transpose).
+        assert_eq!(staging_cost(Rows, PairBatch { pairs: 64, bits: 16 }), 32);
+        assert_eq!(staging_cost(Transposed, PairBatch { pairs: 64, bits: 16 }), 32);
+
+        // MatVec, a full 64-row tile with n_elems = 8 of 8-bit values:
+        // 8 * 8 matrix plane words + broadcast vector (8 * 8 planes vs
+        // 8 raw words).
+        let matvec = VecTile { rows: 64, elems: 8, bits: 8 };
+        assert_eq!(staging_cost(Rows, matvec), 128);
+        assert_eq!(staging_cost(Transposed, matvec), 72);
+        // The acceptance floor: transposed staging beats rows by >= 1.5x
+        // for the matvec tenant's standard tile.
+        assert!(staging_cost(Rows, matvec) * 2 >= staging_cost(Transposed, matvec) * 3);
+
+        // MatMul, a 64-row x 4-column rectangle with k = 8 of 8-bit
+        // values: the A planes stage once, each panel column's B vector
+        // is broadcast separately.
+        let matmul = PanelTile { rows: 64, elems: 8, bits: 8, panel_cols: 4 };
+        assert_eq!(staging_cost(Rows, matmul), 320);
+        assert_eq!(staging_cost(Transposed, matmul), 96);
+
+        // FloatVec, a full 64-row FP32 tile with n_elems = 8: every bit
+        // of the 32-bit packed format stages.
+        let floatvec = VecTile { rows: 64, elems: 8, bits: 32 };
+        assert_eq!(staging_cost(Rows, floatvec), 512);
+        assert_eq!(staging_cost(Transposed, floatvec), 264);
+
+        // Partial tiles round the lane group up, exactly like the
+        // crossbar's word packing.
+        assert_eq!(staging_cost(Rows, VecTile { rows: 65, elems: 8, bits: 8 }), 192);
+        assert_eq!(staging_cost(Rows, VecTile { rows: 1, elems: 8, bits: 8 }), 128);
     }
 }

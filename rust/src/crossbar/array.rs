@@ -160,6 +160,29 @@ impl Crossbar {
         }
     }
 
+    /// Stage one column's packed row-words directly: `words[w]` lands as
+    /// word `w` of column `col`, covering rows `0..n_rows`; rows beyond
+    /// `n_rows` keep their previous contents (same partial-restage
+    /// semantics as [`Self::write_rows_transposed`]).
+    ///
+    /// This is the bit-transposed wire-format staging primitive: when a
+    /// client ships operands as pre-transposed bit-planes
+    /// ([`crate::crossbar::PlaneMatrix`]), staging is this straight word
+    /// memcpy — no per-row bit extraction at all.
+    pub fn write_col_words(&mut self, col: Col, n_rows: usize, words: &[u64]) {
+        assert!(n_rows <= self.rows, "{n_rows} rows exceed {} rows", self.rows);
+        let needed = Self::words_for_rows(n_rows);
+        assert!(words.len() >= needed, "{} words cover fewer than {n_rows} rows", words.len());
+        let full = n_rows / WORD_BITS;
+        let dst = self.col_mut(col);
+        dst[..full].copy_from_slice(&words[..full]);
+        let rem = n_rows % WORD_BITS;
+        if rem != 0 {
+            let keep = !((1u64 << rem) - 1);
+            dst[full] = (dst[full] & keep) | (words[full] & !keep);
+        }
+    }
+
     /// Bulk-stage the *same* N-bit value into columns `start..start+n` of
     /// rows `0..num_rows` — the matvec serving path's staging primitive for
     /// the duplicated vector operand (Fig. 5: every crossbar row holds its
@@ -392,6 +415,41 @@ mod tests {
                 }
                 b.write_rows_broadcast(1, n, value, occupied);
                 for c in 0..16u32 {
+                    assert_eq!(a.col(c), b.col(c), "rows={rows} occ={occupied} col={c}");
+                }
+            }
+        }
+    }
+
+    /// The column-word memcpy write must agree bit-for-bit with the
+    /// transposed write at every word boundary, including the
+    /// partial-restage row-preservation semantics.
+    #[test]
+    fn col_words_write_matches_transposed_path() {
+        let mut rng = crate::util::SplitMix64::new(0xC01);
+        for rows in [1usize, 63, 64, 65, 130] {
+            for occupied in [1usize, rows / 2 + 1, rows] {
+                let n = 9u32;
+                let values: Vec<u64> = (0..occupied).map(|_| rng.bits(n)).collect();
+                let mut a = Crossbar::new(rows, 12);
+                let mut b = Crossbar::new(rows, 12);
+                // Pre-dirty both arrays identically so preserved rows are
+                // visible.
+                let dirt: Vec<u64> = (0..rows).map(|r| (r as u64).wrapping_mul(0x39) & 0x1FF).collect();
+                a.write_rows_transposed(2, n, &dirt);
+                b.write_rows_transposed(2, n, &dirt);
+                a.write_rows_transposed(2, n, &values);
+                // Transpose the values into per-bit plane words by hand,
+                // then stage each column as a straight word write.
+                let wpc = Crossbar::words_for_rows(rows);
+                for i in 0..n {
+                    let mut plane = vec![0u64; wpc];
+                    for (r, &v) in values.iter().enumerate() {
+                        plane[r / 64] |= (v >> i & 1) << (r % 64);
+                    }
+                    b.write_col_words(2 + i, occupied, &plane);
+                }
+                for c in 0..12u32 {
                     assert_eq!(a.col(c), b.col(c), "rows={rows} occ={occupied} col={c}");
                 }
             }

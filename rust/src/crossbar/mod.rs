@@ -8,6 +8,8 @@
 
 mod array;
 mod layout;
+mod planes;
 
 pub use array::Crossbar;
 pub use layout::{CellAlloc, RegionLayout};
+pub use planes::PlaneMatrix;

@@ -1,0 +1,230 @@
+//! The bit-transposed wire format: a matrix shipped as bit-planes.
+//!
+//! Crossbar columns are bit-planes ([`Crossbar`](super::Crossbar) packs
+//! row `r` of column `c` into bit `r % 64` of word `r / 64`), so a
+//! client that ships its matrix *pre-transposed* — one packed word
+//! stream per (element, bit) — lets the server stage each operand column
+//! with a straight word memcpy
+//! ([`Crossbar::write_col_words`](super::Crossbar::write_col_words))
+//! instead of re-transposing rows on the hot path
+//! (`write_rows_transposed`). For an `R x n` matrix of `N`-bit values
+//! that cuts modeled staging from `n * (N * ceil(R/64) + ...)` value
+//! words to the plane words alone; the serving layer prices the
+//! difference through `staging_cost` and the round-trip equivalence is
+//! pinned against the row path for every tenant.
+
+use crate::{Error, Result};
+
+const WORD_BITS: usize = 64;
+
+/// An `rows x elems` matrix of `bits`-bit values, stored as packed
+/// bit-planes: plane `(elem, bit)` holds bit `bit` of column `elem` for
+/// every row, row `r` in bit `r % 64` of word `r / 64` — exactly the
+/// crossbar's column layout.
+#[derive(Debug, Clone)]
+pub struct PlaneMatrix {
+    rows: usize,
+    elems: usize,
+    bits: u32,
+    /// Words per plane: `ceil(rows / 64)`.
+    words_per_plane: usize,
+    /// Plane `(elem, bit)` occupies
+    /// `(elem * bits + bit) * words_per_plane ..` the next plane.
+    words: Vec<u64>,
+}
+
+impl PlaneMatrix {
+    /// Transpose a row-major matrix into planes. Rows must be equal
+    /// length, `bits` in 1..=64, and every value must fit in `bits`.
+    pub fn from_rows(rows: &[Vec<u64>], bits: u32) -> Result<Self> {
+        if !(1..=64).contains(&bits) {
+            return Err(Error::BadParameter(format!(
+                "plane matrix needs a bit width in 1..=64, got {bits}"
+            )));
+        }
+        let elems = rows.first().map_or(0, Vec::len);
+        let words_per_plane = rows.len().div_ceil(WORD_BITS);
+        let mut words = vec![0u64; elems * bits as usize * words_per_plane];
+        for (r, row) in rows.iter().enumerate() {
+            if row.len() != elems {
+                return Err(Error::BadParameter(format!(
+                    "ragged matrix: row {r} has {} elements, row 0 has {elems}",
+                    row.len()
+                )));
+            }
+            for (t, &v) in row.iter().enumerate() {
+                if bits < 64 && v >> bits != 0 {
+                    return Err(Error::BadParameter(format!(
+                        "matrix value at ({r}, {t}) does not fit in {bits} bits"
+                    )));
+                }
+                let (w, sh) = (r / WORD_BITS, r % WORD_BITS);
+                let base = t * bits as usize * words_per_plane;
+                for b in 0..bits as usize {
+                    words[base + b * words_per_plane + w] |= (v >> b & 1) << sh;
+                }
+            }
+        }
+        Ok(Self { rows: rows.len(), elems, bits, words_per_plane, words })
+    }
+
+    /// Logical row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Elements per row.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Bit width of each value.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Total packed words across all planes — what actually moves over
+    /// the wire (the modeled staging traffic of a plane-format request).
+    pub fn total_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Packed words of plane `(elem, bit)`, all rows.
+    pub fn plane(&self, elem: usize, bit: u32) -> &[u64] {
+        assert!(elem < self.elems && bit < self.bits, "plane ({elem}, {bit}) out of bounds");
+        let base = (elem * self.bits as usize + bit as usize) * self.words_per_plane;
+        &self.words[base..base + self.words_per_plane]
+    }
+
+    /// Extract rows `start..start + len` of plane `(elem, bit)` into
+    /// `out` as packed words (row `start + i` lands in bit `i % 64` of
+    /// `out[i / 64]` — i.e. re-based to row 0, ready for
+    /// [`Crossbar::write_col_words`](super::Crossbar::write_col_words)).
+    /// Word-aligned starts are a straight copy; unaligned starts shift
+    /// two adjacent words per output word.
+    pub fn slice_plane(&self, elem: usize, bit: u32, start: usize, len: usize, out: &mut Vec<u64>) {
+        assert!(
+            start + len <= self.rows,
+            "rows {start}..{} out of bounds ({} rows)",
+            start + len,
+            self.rows
+        );
+        let plane = self.plane(elem, bit);
+        let out_words = len.div_ceil(WORD_BITS);
+        out.clear();
+        let sh = start % WORD_BITS;
+        let w0 = start / WORD_BITS;
+        if sh == 0 {
+            out.extend_from_slice(&plane[w0..w0 + out_words]);
+        } else {
+            for w in 0..out_words {
+                let lo = plane[w0 + w] >> sh;
+                let hi = plane
+                    .get(w0 + w + 1)
+                    .map_or(0, |&next| next << (WORD_BITS - sh));
+                out.push(lo | hi);
+            }
+        }
+        // Mask bits beyond `len` in the final word so the staged words
+        // carry no stale neighbors (write_col_words preserves rows
+        // beyond the tile anyway, but the canonical form keeps the
+        // equality tests and traffic accounting simple).
+        let rem = len % WORD_BITS;
+        if rem != 0 {
+            if let Some(last) = out.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Reconstruct the row-major matrix (tests and the transparent
+    /// row-major fallback).
+    pub fn to_rows(&self) -> Vec<Vec<u64>> {
+        (0..self.rows)
+            .map(|r| {
+                (0..self.elems)
+                    .map(|t| {
+                        let (w, sh) = (r / WORD_BITS, r % WORD_BITS);
+                        (0..self.bits).fold(0u64, |acc, b| {
+                            acc | ((self.plane(t, b)[w] >> sh & 1) << b)
+                        })
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_rows(rng: &mut SplitMix64, rows: usize, elems: usize, bits: u32) -> Vec<Vec<u64>> {
+        (0..rows).map(|_| (0..elems).map(|_| rng.bits(bits)).collect()).collect()
+    }
+
+    /// Round-trip at every word boundary the crossbar tests pin.
+    #[test]
+    fn roundtrip_at_word_boundaries() {
+        let mut rng = SplitMix64::new(0x9137);
+        for rows in [1usize, 63, 64, 65, 130] {
+            let m = random_rows(&mut rng, rows, 3, 16);
+            let planes = PlaneMatrix::from_rows(&m, 16).unwrap();
+            assert_eq!(planes.rows(), rows);
+            assert_eq!(planes.elems(), 3);
+            assert_eq!(planes.total_words(), 3 * 16 * rows.div_ceil(64));
+            assert_eq!(planes.to_rows(), m, "rows={rows}");
+        }
+    }
+
+    /// slice_plane re-bases any (start, len) window to row 0 exactly.
+    #[test]
+    fn slice_plane_matches_manual_extraction() {
+        let mut rng = SplitMix64::new(0x51ce);
+        let m = random_rows(&mut rng, 130, 2, 8);
+        let planes = PlaneMatrix::from_rows(&m, 8).unwrap();
+        let mut out = Vec::new();
+        for &(start, len) in
+            &[(0usize, 64usize), (64, 64), (64, 2), (1, 64), (63, 66), (7, 19), (129, 1), (0, 130)]
+        {
+            for t in 0..2 {
+                for b in 0..8u32 {
+                    planes.slice_plane(t, b, start, len, &mut out);
+                    assert_eq!(out.len(), len.div_ceil(64));
+                    for i in 0..len {
+                        let got = out[i / 64] >> (i % 64) & 1;
+                        let want = m[start + i][t] >> b & 1;
+                        assert_eq!(got, want, "start={start} len={len} t={t} b={b} i={i}");
+                    }
+                    // Bits beyond `len` in the tail word are zero.
+                    if len % 64 != 0 {
+                        assert_eq!(out[len / 64] & !((1u64 << (len % 64)) - 1), 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_and_oversized_values() {
+        assert!(PlaneMatrix::from_rows(&[vec![1, 2], vec![3]], 8).is_err(), "ragged");
+        assert!(PlaneMatrix::from_rows(&[vec![256]], 8).is_err(), "value too wide");
+        assert!(PlaneMatrix::from_rows(&[vec![255]], 0).is_err(), "zero width");
+        assert!(PlaneMatrix::from_rows(&[vec![255]], 65).is_err(), "width over 64");
+        assert!(PlaneMatrix::from_rows(&[vec![255]], 8).is_ok());
+        // 64-bit values are never "too wide".
+        assert!(PlaneMatrix::from_rows(&[vec![u64::MAX]], 64).is_ok());
+    }
+
+    /// The empty matrix is representable (degenerate requests reply
+    /// immediately but must still parse).
+    #[test]
+    fn empty_matrix() {
+        let planes = PlaneMatrix::from_rows(&[], 8).unwrap();
+        assert_eq!(planes.rows(), 0);
+        assert_eq!(planes.elems(), 0);
+        assert_eq!(planes.total_words(), 0);
+        assert!(planes.to_rows().is_empty());
+    }
+}

@@ -66,24 +66,39 @@ pub struct DeviceConfig {
     /// on the critical path. Results are bit-identical either way — the
     /// knob only moves the modeled latency split. On by default.
     pub overlap: bool,
+    /// Compiled-program disk cache consulted before the
+    /// validate → lower → schedule path at launch (see [`crate::cache`]).
+    /// `None` (the default) compiles every engine from scratch.
+    pub cache: Option<Arc<crate::cache::ProgramCache>>,
 }
 
 impl DeviceConfig {
     /// The degenerate single-bank device holding `n` crossbars —
     /// bit-identical serving to the flat pre-hierarchy pool.
     pub fn flat(n: usize) -> Self {
-        Self { topology: Topology::flat(n), policy: PlacementPolicy::Locality, overlap: true }
+        Self {
+            topology: Topology::flat(n),
+            policy: PlacementPolicy::Locality,
+            overlap: true,
+            cache: None,
+        }
     }
 
     /// A device with the given topology, the default locality policy, and
     /// double-buffered staging on.
     pub fn new(topology: Topology) -> Self {
-        Self { topology, policy: PlacementPolicy::Locality, overlap: true }
+        Self { topology, policy: PlacementPolicy::Locality, overlap: true, cache: None }
     }
 
     /// The same device with double-buffered staging switched on or off.
     pub fn with_overlap(mut self, overlap: bool) -> Self {
         self.overlap = overlap;
+        self
+    }
+
+    /// The same device with a compiled-program cache attached.
+    pub fn with_cache(mut self, cache: Arc<crate::cache::ProgramCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 }

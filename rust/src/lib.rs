@@ -39,6 +39,12 @@
 //!   matmul, and float-matvec tenants, plus the request router, row
 //!   batcher, multiplication pipeline model, and per-workload labeled
 //!   metrics.
+//! * [`cache`] — the compiled-program disk cache: launches persist
+//!   validated/lowered/scheduled programs in a versioned, checksummed
+//!   binary format keyed by (workload kind, format, shape, topology
+//!   geometry, schedule mode, crate version), so relaunching a fleet of
+//!   known shapes skips compilation entirely. Legality is never trusted
+//!   from disk — hits are re-validated before serving.
 //! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
 //!   (built once from `python/compile`) and is used as the golden model on
 //!   the verification path.
@@ -66,6 +72,7 @@
 //! ```
 
 pub mod algorithms;
+pub mod cache;
 pub mod coordinator;
 pub mod crossbar;
 pub mod device;

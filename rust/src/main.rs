@@ -14,14 +14,19 @@
 //!                  [--mm-requests 4] [--mm-rows 64] [--fv-requests 4] [--fv-rows 128]
 //!                  [--fv-format fp32|bf16|fp16]
 //!                  [--topology CxGxBxX] [--placement locality|random]
-//!                  [--overlap on|off]
+//!                  [--overlap on|off] [--cache-dir PATH] [--wire rows|transposed]
 //!                                     # multiply + matvec + matmul + float-matvec
 //!                                     # shard-pool demo with per-workload metrics;
 //!                                     # --topology places the pools on a
 //!                                     # channels x groups x banks x crossbars
 //!                                     # device (default: flat single bank);
 //!                                     # --overlap toggles double-buffered operand
-//!                                     # staging (default on)
+//!                                     # staging (default on); --cache-dir enables
+//!                                     # the compiled-program disk cache (second
+//!                                     # launch skips lowering/scheduling; the
+//!                                     # snapshot's cache[program] line counts
+//!                                     # hits/misses); --wire transposed ships
+//!                                     # matrices as pre-transposed bit-planes
 //! multpim topology [--topology 2x2x2x4] [--placement locality|random] [--shards 4]
 //!                  [--overlap on|off]
 //!                                     # launch the serve tenants on a hierarchical
@@ -39,15 +44,18 @@ use multpim::algorithms::floatvec::MultPimFloatVec;
 use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::multpim_area::MultPimArea;
 use multpim::algorithms::Multiplier;
+use multpim::cache::ProgramCache;
 use multpim::coordinator::server::{
     FloatVecDeployment, MatMulDeployment, MatVecDeployment, MultiplyDeployment,
 };
 use multpim::coordinator::{Coordinator, DeploymentSpec, EngineConfig, Request, Response};
+use multpim::crossbar::PlaneMatrix;
 use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::util::SplitMix64;
 use multpim::{report, Result};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -333,6 +341,25 @@ fn run(args: &[String]) -> Result<()> {
                 }
             };
             let device = apply_overlap(args, device)?;
+            // --cache-dir: consult (and populate) the compiled-program
+            // disk cache at launch. A warm directory skips the
+            // validate -> lower -> schedule path for every tenant.
+            let device = match opt(args, "--cache-dir") {
+                Some(dir) => device.with_cache(Arc::new(ProgramCache::new(dir))),
+                None => device,
+            };
+            // --wire: how clients ship matrices. `transposed` sends
+            // pre-transposed bit-planes (staging becomes a word memcpy);
+            // results are bit-identical to the row-major wire.
+            let transposed = match opt(args, "--wire").as_deref() {
+                None | Some("rows") => false,
+                Some("transposed") => true,
+                Some(other) => {
+                    return Err(multpim::Error::BadParameter(format!(
+                        "--wire must be rows|transposed, got {other}"
+                    )))
+                }
+            };
             let coord =
                 Coordinator::launch_on(device, &multiplies, &matvecs, &matmuls, &floatvecs)?;
             let mut rng = SplitMix64::new(0xE0);
@@ -357,7 +384,12 @@ fn run(args: &[String]) -> Result<()> {
                         .map(|row| multpim::fixedpoint::inner_product_mod(32, row, &x))
                         .collect::<Vec<u64>>(),
                 );
-                mv_rxs.push(coord.submit(Request::MatVec { n_bits: 32, rows, x })?);
+                mv_rxs.push(if transposed {
+                    let a = PlaneMatrix::from_rows(&rows, 32)?;
+                    coord.submit(Request::MatVecPlanes { n_bits: 32, a, x })?
+                } else {
+                    coord.submit(Request::MatVec { n_bits: 32, rows, x })?
+                });
             }
             // GEMM traffic rides the same generic pool: each request's
             // output scatters 2-D (row tiles x column panels).
@@ -385,7 +417,14 @@ fn run(args: &[String]) -> Result<()> {
                         })
                         .collect::<Vec<Vec<u64>>>(),
                 );
-                mm_rxs.push(coord.submit(Request::MatMul { n_bits: 32, a, b })?);
+                mm_rxs.push(if transposed {
+                    // The transposed wire ships B pre-transposed (its
+                    // columns are exactly `cols`) and A as planes.
+                    let ap = PlaneMatrix::from_rows(&a, 32)?;
+                    coord.submit(Request::MatMulPlanes { n_bits: 32, a: ap, bt: cols.clone() })?
+                } else {
+                    coord.submit(Request::MatMul { n_bits: 32, a, b })?
+                });
             }
             // Float traffic (format chosen by --fv-format) rides the same
             // generic pool: every served row must be bit-exact against
@@ -408,12 +447,22 @@ fn run(args: &[String]) -> Result<()> {
                 fv_expected.push(
                     rows.iter().map(|row| float_dot_ref(fmt, row, &x)).collect::<Vec<u64>>(),
                 );
-                fv_rxs.push(coord.submit(Request::FloatMatVec {
-                    exp_bits: fmt.exp_bits,
-                    man_bits: fmt.man_bits,
-                    rows,
-                    x,
-                })?);
+                fv_rxs.push(if transposed {
+                    let a = PlaneMatrix::from_rows(&rows, fmt.total_bits())?;
+                    coord.submit(Request::FloatMatVecPlanes {
+                        exp_bits: fmt.exp_bits,
+                        man_bits: fmt.man_bits,
+                        a,
+                        x,
+                    })?
+                } else {
+                    coord.submit(Request::FloatMatVec {
+                        exp_bits: fmt.exp_bits,
+                        man_bits: fmt.man_bits,
+                        rows,
+                        x,
+                    })?
+                });
             }
             for (rx, want) in rxs.into_iter().zip(expected) {
                 match rx

@@ -182,6 +182,37 @@ impl CompiledChain {
             ScheduleMode::Partitioned => self.wire_cols.get(&wire).copied(),
         }
     }
+
+    /// Width of the operand region (wires below this resolve to
+    /// themselves in [`Self::col_of`]).
+    pub(crate) fn operand_width(&self) -> Col {
+        self.operand_width
+    }
+
+    /// Reassemble a chain from cached parts (see [`crate::cache`]). The
+    /// wire → column maps are *not* reconstructed: a rehydrated chain
+    /// resolves operand wires only, so callers must have serialized
+    /// every resolved output column alongside the programs. The caller
+    /// is responsible for re-validating the programs before execution.
+    pub(crate) fn from_parts(
+        programs: Vec<Program>,
+        width: Col,
+        mode: ScheduleMode,
+        stats: ScheduleStats,
+        per_program: Vec<ScheduleStats>,
+        operand_width: Col,
+    ) -> Self {
+        Self {
+            programs,
+            width,
+            mode,
+            stats,
+            per_program,
+            operand_width,
+            serial_const_wires: Vec::new(),
+            wire_cols: HashMap::new(),
+        }
+    }
 }
 
 /// Compile a chain of named circuits executed back-to-back over one

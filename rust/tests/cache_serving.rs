@@ -1,0 +1,242 @@
+//! Compiled-program disk cache integration: a warm (cache-hit) launch
+//! must serve **bit-identically** to the cold compile for all four
+//! tenants, corrupted or truncated cache files must degrade to a clean
+//! recompile, a changed device geometry must key to a *miss* (never a
+//! false hit), and concurrent launches sharing one cache directory must
+//! never observe half-written artifacts (atomic write-then-rename).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use multpim::cache::ProgramCache;
+use multpim::coordinator::{
+    Coordinator, DeploymentSpec, EngineConfig, FloatVecDeployment, MatMulDeployment,
+    MatVecDeployment, MultiplyDeployment,
+};
+use multpim::device::{DeviceConfig, Topology};
+use multpim::fixedpoint::inner_product_mod;
+use multpim::util::SplitMix64;
+
+/// A process- and test-unique scratch cache directory.
+fn scratch_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("multpim-{test}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Launch all four tenants on `device` (one shard each, so a flat
+/// 4-crossbar device holds them). Small shapes keep the cold compiles
+/// fast; the cache path is identical at any width.
+fn launch_cached(device: DeviceConfig) -> Coordinator {
+    Coordinator::launch_on(
+        device,
+        &[MultiplyDeployment {
+            n_bits: 8,
+            rows: 16,
+            max_wait: Duration::from_millis(1),
+            config: EngineConfig::MultPim,
+            spec: DeploymentSpec::new(1),
+        }],
+        &[MatVecDeployment { n_bits: 8, n_elems: 4, shard_rows: 8, spec: DeploymentSpec::new(1) }],
+        &[MatMulDeployment {
+            n_bits: 8,
+            k: 4,
+            shard_rows: 8,
+            panel_cols: 2,
+            spec: DeploymentSpec::new(1),
+        }],
+        &[FloatVecDeployment {
+            exp_bits: 4,
+            man_bits: 3,
+            n_elems: 2,
+            shard_rows: 8,
+            spec: DeploymentSpec::new(1),
+        }],
+    )
+    .unwrap()
+}
+
+fn flat_cached(dir: &Path) -> Coordinator {
+    launch_cached(DeviceConfig::flat(4).with_cache(Arc::new(ProgramCache::new(dir))))
+}
+
+/// One fixed request per tenant; the returned tuple is the serving
+/// fingerprint compared across cold and warm launches.
+fn serve_all(coord: &Coordinator) -> (u64, Vec<u64>, Vec<Vec<u64>>, Vec<u64>) {
+    let product = coord.multiply(8, 200, 201).unwrap();
+    assert_eq!(product, 200 * 201);
+
+    let rows: Vec<Vec<u64>> =
+        vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8], vec![9, 10, 11, 12], vec![250, 251, 252, 253]];
+    let x = vec![13, 14, 15, 255];
+    let mv = coord.matvec(8, rows.clone(), x.clone()).unwrap();
+    for (r, row) in rows.iter().enumerate() {
+        assert_eq!(mv[r], inner_product_mod(8, row, &x), "row {r}");
+    }
+
+    let a = vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]];
+    let b = vec![vec![9, 10], vec![11, 12], vec![13, 14], vec![15, 255]];
+    let mm = coord.matmul(8, a.clone(), b.clone()).unwrap();
+    for j in 0..2 {
+        let col: Vec<u64> = b.iter().map(|row| row[j]).collect();
+        for (r, row) in a.iter().enumerate() {
+            assert_eq!(mm[r][j], inner_product_mod(8, row, &col), "C[{r}][{j}]");
+        }
+    }
+
+    // FP8 (1+4+3): arbitrary bit patterns — the fingerprint is
+    // bit-exactness across launches, not float semantics.
+    let mut rng = SplitMix64::new(0xF8);
+    let frows: Vec<Vec<u64>> = (0..3).map(|_| (0..2).map(|_| rng.bits(8)).collect()).collect();
+    let fx: Vec<u64> = (0..2).map(|_| rng.bits(8)).collect();
+    let fv = coord.float_matvec(4, 3, frows, fx).unwrap();
+
+    (product, mv, mm, fv)
+}
+
+/// The launch-time cache counters copied into the coordinator metrics.
+fn cache_counters(coord: &Coordinator) -> (u64, u64, u64, u64) {
+    let m = coord.metrics();
+    (
+        m.cache_hits.load(Ordering::Relaxed),
+        m.cache_misses.load(Ordering::Relaxed),
+        m.cache_invalidations.load(Ordering::Relaxed),
+        m.cache_stores.load(Ordering::Relaxed),
+    )
+}
+
+/// Cold launch populates (4 misses, 4 stores); warm launch hits all
+/// four keys and serves bit-identically on every tenant.
+#[test]
+fn warm_launch_serves_bit_identically_for_all_tenants() {
+    let dir = scratch_dir("cache-warm");
+
+    let cold = flat_cached(&dir);
+    assert_eq!(cache_counters(&cold), (0, 4, 0, 4), "cold: one miss+store per engine");
+    let cold_out = serve_all(&cold);
+    cold.shutdown();
+
+    let warm = flat_cached(&dir);
+    assert_eq!(cache_counters(&warm), (4, 0, 0, 0), "warm: every engine served from disk");
+    let snapshot = warm.metrics().snapshot();
+    assert!(
+        snapshot.contains("cache[program] hits=4"),
+        "cache counters must render in the snapshot:\n{snapshot}"
+    );
+    let warm_out = serve_all(&warm);
+    warm.shutdown();
+
+    assert_eq!(cold_out, warm_out, "hit and miss launches must serve identical bits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every stored file is corrupted — half truncated, half bit-flipped.
+/// The next launch must reject all four (counted as invalidations, not
+/// hits), recompile, re-store, and serve the same bits.
+#[test]
+fn corrupt_cache_files_fall_back_to_recompile() {
+    let dir = scratch_dir("cache-corrupt");
+
+    let cold = flat_cached(&dir);
+    let cold_out = serve_all(&cold);
+    cold.shutdown();
+
+    let mut files: Vec<PathBuf> =
+        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    files.sort();
+    assert_eq!(files.len(), 4, "one artifact per engine");
+    for (i, path) in files.iter().enumerate() {
+        let bytes = std::fs::read(path).unwrap();
+        if i % 2 == 0 {
+            // Truncate into the container header (torn write).
+            std::fs::write(path, &bytes[..16.min(bytes.len())]).unwrap();
+        } else {
+            // Flip a payload bit; the checksum must catch it.
+            let mut b = bytes;
+            let last = b.len() - 1;
+            b[last] ^= 0x40;
+            std::fs::write(path, &b).unwrap();
+        }
+    }
+
+    let recovered = flat_cached(&dir);
+    assert_eq!(
+        cache_counters(&recovered),
+        (0, 0, 4, 4),
+        "corrupt files invalidate, recompile, and re-store"
+    );
+    let recovered_out = serve_all(&recovered);
+    recovered.shutdown();
+    assert_eq!(cold_out, recovered_out, "fallback recompile must serve identical bits");
+
+    // The re-stored files must be clean again.
+    let warm = flat_cached(&dir);
+    assert_eq!(cache_counters(&warm), (4, 0, 0, 0), "re-stored artifacts hit");
+    warm.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A different device geometry hashes to different keys: the second
+/// launch is a clean *miss* (never a stale hit, never an invalidation)
+/// and adds its own artifacts next to the first geometry's.
+#[test]
+fn changed_geometry_is_a_miss_not_a_stale_hit() {
+    let dir = scratch_dir("cache-geometry");
+
+    let flat = flat_cached(&dir);
+    let flat_out = serve_all(&flat);
+    flat.shutdown();
+
+    let mut device = DeviceConfig::new(Topology::parse("2x1x1x2").unwrap());
+    device = device.with_cache(Arc::new(ProgramCache::new(&dir)));
+    let hierarchical = launch_cached(device);
+    assert_eq!(
+        cache_counters(&hierarchical),
+        (0, 4, 0, 4),
+        "a new geometry must miss every key"
+    );
+    let hierarchical_out = serve_all(&hierarchical);
+    hierarchical.shutdown();
+    assert_eq!(flat_out, hierarchical_out, "serving is placement-invariant");
+
+    let files = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(files, 8, "both geometries' artifacts coexist");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Concurrent launches race on an empty shared directory: the atomic
+/// write-then-rename must keep every launch either hitting a complete
+/// file or compiling its own copy — never decoding a partial write. A
+/// final launch proves the surviving files are all decodable.
+#[test]
+fn concurrent_launches_share_a_cache_directory_safely() {
+    let dir = scratch_dir("cache-concurrent");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let dir = dir.clone();
+        handles.push(std::thread::spawn(move || {
+            let coord = flat_cached(&dir);
+            let out = serve_all(&coord);
+            coord.shutdown();
+            out
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for out in &outs[1..] {
+        assert_eq!(out, &outs[0], "racing launches must serve identical bits");
+    }
+
+    let warm = flat_cached(&dir);
+    assert_eq!(
+        cache_counters(&warm),
+        (4, 0, 0, 0),
+        "after the race every artifact on disk is complete and decodable"
+    );
+    serve_all(&warm);
+    warm.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,169 @@
+//! Bit-transposed wire integration: serving a request as a
+//! [`PlaneMatrix`] (plane slices memcpy'd onto the crossbar) must be
+//! **bit-identical** to serving the same operands row-major (per-tile
+//! `write_rows_transposed`) for every tiling tenant, at every
+//! tile-boundary row count, and malformed plane payloads must be typed
+//! rejections — never a panic or a wrong answer.
+
+use multpim::coordinator::{
+    Coordinator, DeploymentSpec, FloatVecDeployment, MatMulDeployment, MatVecDeployment,
+};
+use multpim::crossbar::PlaneMatrix;
+use multpim::fixedpoint::inner_product_mod;
+use multpim::util::SplitMix64;
+use multpim::Error;
+
+const N: u32 = 8;
+const ELEMS: u32 = 4;
+const SHARD_ROWS: usize = 64;
+
+/// The three tiling tenants, two shards each so multi-tile requests
+/// actually fan out across lanes.
+fn launch() -> Coordinator {
+    Coordinator::launch(
+        &[],
+        &[MatVecDeployment {
+            n_bits: N,
+            n_elems: ELEMS,
+            shard_rows: SHARD_ROWS,
+            spec: DeploymentSpec::new(2),
+        }],
+        &[MatMulDeployment {
+            n_bits: N,
+            k: ELEMS,
+            shard_rows: SHARD_ROWS,
+            panel_cols: 2,
+            spec: DeploymentSpec::new(2),
+        }],
+        &[FloatVecDeployment {
+            exp_bits: 4,
+            man_bits: 3,
+            n_elems: ELEMS,
+            shard_rows: SHARD_ROWS,
+            spec: DeploymentSpec::new(2),
+        }],
+    )
+    .unwrap()
+}
+
+fn random_matrix(rng: &mut SplitMix64, rows: usize, elems: u32, bits: u32) -> Vec<Vec<u64>> {
+    (0..rows).map(|_| (0..elems).map(|_| rng.bits(bits)).collect()).collect()
+}
+
+/// Rows 1 / 63 / 64 / 65 / 130 cover: a single row in one plane word, a
+/// word missing its top bit, an exactly-full tile, one row spilling into
+/// a second tile, and two full tiles plus a remainder.
+const ROW_EDGES: [usize; 5] = [1, 63, 64, 65, 130];
+
+#[test]
+fn matvec_planes_match_rows_at_tile_boundaries() {
+    let coord = launch();
+    for &m in &ROW_EDGES {
+        let mut rng = SplitMix64::new(0x3A00 + m as u64);
+        let rows = random_matrix(&mut rng, m, ELEMS, N);
+        let x: Vec<u64> = (0..ELEMS).map(|_| rng.bits(N)).collect();
+
+        let out_rows = coord.matvec(N, rows.clone(), x.clone()).unwrap();
+        let planes = PlaneMatrix::from_rows(&rows, N).unwrap();
+        let out_planes = coord.matvec_planes(N, planes, x.clone()).unwrap();
+
+        assert_eq!(out_rows, out_planes, "m={m}: wires must serve identical bits");
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out_planes[r], inner_product_mod(N, row, &x), "m={m} row {r}");
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn matmul_planes_match_rows_at_tile_boundaries() {
+    let coord = launch();
+    for &(m, p) in &[(1usize, 1usize), (63, 2), (64, 3), (65, 2), (130, 5)] {
+        let mut rng = SplitMix64::new(0x3B00 + (m * 7 + p) as u64);
+        let a = random_matrix(&mut rng, m, ELEMS, N);
+        let b = random_matrix(&mut rng, ELEMS as usize, p as u32, N);
+
+        let out_rows = coord.matmul(N, a.clone(), b.clone()).unwrap();
+        // The plane wire ships B pre-transposed: bt[c][t] = B[t][c].
+        let bt: Vec<Vec<u64>> =
+            (0..p).map(|c| b.iter().map(|b_row| b_row[c]).collect()).collect();
+        let ap = PlaneMatrix::from_rows(&a, N).unwrap();
+        let out_planes = coord.matmul_planes(N, ap, bt.clone()).unwrap();
+
+        assert_eq!(out_rows, out_planes, "{m}x{p}: wires must serve identical bits");
+        for (j, col) in bt.iter().enumerate() {
+            for (r, row) in a.iter().enumerate() {
+                assert_eq!(
+                    out_planes[r][j],
+                    inner_product_mod(N, row, col),
+                    "{m}x{p} C[{r}][{j}]"
+                );
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn float_matvec_planes_match_rows_at_tile_boundaries() {
+    let coord = launch();
+    let tb = 1 + 4 + 3; // FP8: sign + exponent + fraction
+    for &m in &ROW_EDGES {
+        let mut rng = SplitMix64::new(0x3C00 + m as u64);
+        let rows = random_matrix(&mut rng, m, ELEMS, tb);
+        let x: Vec<u64> = (0..ELEMS).map(|_| rng.bits(tb)).collect();
+
+        let out_rows = coord.float_matvec(4, 3, rows.clone(), x.clone()).unwrap();
+        let planes = PlaneMatrix::from_rows(&rows, tb).unwrap();
+        let out_planes = coord.float_matvec_planes(4, 3, planes, x.clone()).unwrap();
+        assert_eq!(out_rows, out_planes, "m={m}: wires must serve identical bits");
+    }
+    coord.shutdown();
+}
+
+/// A degenerate (0-row) plane matrix is served as an empty result, like
+/// the row wire's empty matrix.
+#[test]
+fn empty_plane_matrix_serves_empty_result() {
+    let coord = launch();
+    let empty = PlaneMatrix::from_rows(&[], N).unwrap();
+    let x: Vec<u64> = vec![1, 2, 3, 4];
+    assert!(coord.matvec_planes(N, empty, x).unwrap().is_empty());
+    coord.shutdown();
+}
+
+/// Malformed plane payloads are typed `BadParameter` rejections.
+#[test]
+fn malformed_plane_payloads_are_rejected() {
+    let coord = launch();
+    let mut rng = SplitMix64::new(0x3D00);
+    let rows = random_matrix(&mut rng, 4, ELEMS, N);
+
+    // Plane width disagrees with the deployment's bit width.
+    let wide = PlaneMatrix::from_rows(&rows, N + 1).unwrap();
+    match coord.matvec_planes(N, wide, vec![1, 2, 3, 4]) {
+        Err(Error::BadParameter(_)) => {}
+        other => panic!("expected BadParameter, got {other:?}"),
+    }
+
+    // Vector length disagrees with the plane element count.
+    let planes = PlaneMatrix::from_rows(&rows, N).unwrap();
+    match coord.matvec_planes(N, planes.clone(), vec![1, 2, 3]) {
+        Err(Error::BadParameter(_)) => {}
+        other => panic!("expected BadParameter, got {other:?}"),
+    }
+
+    // Ragged transposed-B panel.
+    match coord.matmul_planes(N, planes, vec![vec![1, 2, 3, 4], vec![5, 6]]) {
+        Err(Error::BadParameter(_)) => {}
+        other => panic!("expected BadParameter, got {other:?}"),
+    }
+
+    // A value out of range for the declared plane width cannot even be
+    // constructed — the wire format is range-checked at the edge.
+    match PlaneMatrix::from_rows(&[vec![1u64 << N, 0, 0, 0]], N) {
+        Err(Error::BadParameter(_)) => {}
+        other => panic!("expected BadParameter, got {other:?}"),
+    }
+    coord.shutdown();
+}
