@@ -19,6 +19,10 @@
 //! * [`floatvec`] — the full-precision floating-point matvec pipeline
 //!   (the abstract's 25.5x-over-FloatPIM claim) + its FloatPIM-style
 //!   float baseline.
+//! * [`schedmul`] — the §IV/§V multiply and §VI MAC chain re-emitted in
+//!   the [`schedule`](crate::schedule) IR and compiled through the shared
+//!   backend; the serving default, with the hand-laid emitters above kept
+//!   as the `ScheduleMode::Handwritten` oracle.
 //! * [`costmodel`] — every closed-form expression the paper quotes.
 
 pub mod adders;
@@ -32,6 +36,7 @@ pub mod matvec;
 pub mod multpim;
 pub mod multpim_area;
 pub mod rime;
+pub mod schedmul;
 pub mod shift;
 
 use crate::crossbar::RegionLayout;

@@ -1,0 +1,337 @@
+//! Scheduled fixed-point emitters: §IV/§V multiply and the §VI MAC chain
+//! re-emitted in the [`schedule`](crate::schedule) SSA IR and compiled
+//! through the shared placement → list-scheduling → lowering backend.
+//!
+//! This is the unified-IR counterpart of the hand-laid emitters in
+//! [`multpim`](super::multpim), [`multpim_area`](super::multpim_area) and
+//! [`matvec`](super::matvec): the same CSAS recurrence (§V) and fused
+//! multiply-accumulate (§VI), but written as pure dataflow circuits
+//! ([`Circuit::mul_select`], [`Circuit::mul`], [`Circuit::mac`]) and
+//! scheduled by the compiler instead of by hand. Every serving engine
+//! reaches compiled form through this path by default; the hand emitters
+//! remain behind [`ScheduleMode::Handwritten`] as the bit-exactness
+//! oracle (`rust/tests/emitter_equivalence.rs` pins the equivalence), the
+//! same role [`ScheduleMode::Serial`] plays for the float chain.
+//!
+//! Two multiplier flavors mirror the two hand-laid configs:
+//!
+//! * [`MulFlavor::Latency`] — carry-select CSAS rows
+//!   ([`Circuit::mul_select`]), trading speculative gates for a carry
+//!   chain that resolves in blocks; the counterpart of `MultPim`.
+//! * [`MulFlavor::Area`] — plain ripple CSAS rows ([`Circuit::mul`]),
+//!   the leanest gate count; the counterpart of `MultPimArea`.
+//!
+//! The matvec chain emits one circuit per vector element — circuit 0 is a
+//! bare product, circuit `t` a [`Circuit::mac`] folding element `t` into
+//! the threaded `2N`-bit accumulator — which respects the compiler's
+//! predecessor-only read rule (circuit `t` reads only operand columns and
+//! circuit `t - 1`'s accumulator), so the double-buffered lowering
+//! applies unchanged. The operand region is laid out exactly as
+//! [`ChainShard`](crate::coordinator::ChainShard) stages it: `n_elems`
+//! contiguous N-bit matrix words, then `n_elems` contiguous N-bit vector
+//! words, one operand partition per word.
+
+use super::matvec::MultPimMatVec;
+use super::Multiplier;
+use crate::crossbar::RegionLayout;
+use crate::isa::{Col, Program};
+use crate::schedule::{
+    compile_chain, Circuit, CompiledChain, OperandRegion, ScheduleMode, SchedulerConfig, Wire,
+};
+use crate::sim::Simulator;
+use crate::Result;
+
+/// Carry-select block width of every scheduled fixed-point circuit. Four
+/// bits keeps the speculative ripple pairs short enough to fit one work
+/// lane's cycle budget while cutting the per-row carry chain from `2N`
+/// gate-depths to `3 * N / 4` — the knob behind the ≤ 1.05x schedule
+/// budgets in `ci/`.
+pub const SELECT_BLOCK: usize = 4;
+
+/// Which hand-laid §IV emitter family a scheduled multiplier mirrors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulFlavor {
+    /// Carry-select CSAS rows ([`Circuit::mul_select`]) — the
+    /// latency-flavored counterpart of `MultPim`.
+    Latency,
+    /// Plain ripple CSAS rows ([`Circuit::mul`]) — the area-flavored
+    /// counterpart of `MultPimArea`.
+    Area,
+}
+
+/// A single-row N-bit multiplier compiled through the schedule backend.
+///
+/// Operands occupy the layout `[a: 0..N | b: N..2N]`; the product bits
+/// land wherever the lowering allocated them, so [`Multiplier::read_result`]
+/// is overridden to walk the resolved `out_map` (like the hand-laid
+/// area variant's scattered outputs).
+#[derive(Debug, Clone)]
+pub struct ScheduledMul {
+    flavor: MulFlavor,
+    n: u32,
+    program: Program,
+    layout: RegionLayout,
+    input_cols: Vec<Col>,
+    out_map: Vec<Col>,
+}
+
+/// Emit the one-circuit multiply chain for `flavor` and compile it.
+fn compile_mult(
+    flavor: MulFlavor,
+    n: u32,
+    mode: ScheduleMode,
+) -> Result<(CompiledChain, Vec<Wire>)> {
+    assert!((2..=32).contains(&n), "N must be in 2..=32 (2N-bit result in u64)");
+    let region = OperandRegion::new(vec![0, n], 2 * n);
+    let mut c = Circuit::new(2 * n);
+    let a: Vec<Wire> = (0..n).collect();
+    let b: Vec<Wire> = (n..2 * n).collect();
+    let (name, out) = match flavor {
+        MulFlavor::Latency => ("sched-mul", c.mul_select(&a, &b, SELECT_BLOCK)),
+        MulFlavor::Area => ("sched-mul-area", c.mul(&a, &b)),
+    };
+    let chain =
+        compile_chain(vec![(format!("{name}-n{n}"), c)], region, mode, SchedulerConfig::default())?;
+    Ok((chain, out))
+}
+
+/// The latency-flavored multiply as a compiled chain — the
+/// `schedule-stats --chain mult32` budget subject.
+pub fn mult_chain(n: u32, mode: ScheduleMode) -> Result<CompiledChain> {
+    compile_mult(MulFlavor::Latency, n, mode).map(|(chain, _)| chain)
+}
+
+impl ScheduledMul {
+    /// Emit and compile an N-bit multiplier through `mode` (the
+    /// [`Handwritten`](ScheduleMode::Handwritten) mode is rejected by the
+    /// compiler — that flag selects the hand-laid emitters upstream).
+    pub fn build(flavor: MulFlavor, n: u32, mode: ScheduleMode) -> Result<Self> {
+        let (chain, out) = compile_mult(flavor, n, mode)?;
+        let out_map: Vec<Col> = out
+            .iter()
+            .map(|&w| chain.col_of(w).expect("product wires are produced by the circuit"))
+            .collect();
+        let program = chain.programs()[0].clone();
+        Ok(Self {
+            flavor,
+            n,
+            program,
+            // The output range is scattered (per-wire via `out_map`), so
+            // the layout's out fields are unused — `read_result` is
+            // overridden.
+            layout: RegionLayout {
+                a_start: 0,
+                a_bits: n,
+                b_start: n,
+                b_bits: n,
+                out_start: 0,
+                out_bits: 0,
+            },
+            input_cols: (0..2 * n).collect(),
+            out_map,
+        })
+    }
+
+    /// Rehydrate from cached parts (see [`crate::cache`]). The caller
+    /// re-validates the program before use.
+    pub(crate) fn from_cached(
+        flavor: MulFlavor,
+        n: u32,
+        program: Program,
+        layout: RegionLayout,
+        input_cols: Vec<Col>,
+        out_map: Vec<Col>,
+    ) -> Self {
+        Self { flavor, n, program, layout, input_cols, out_map }
+    }
+
+    /// Column of each product bit, low to high — serialized by the
+    /// program cache, which cannot rederive the lowering's slot
+    /// allocation without recompiling.
+    pub(crate) fn out_map(&self) -> &[Col] {
+        &self.out_map
+    }
+}
+
+impl Multiplier for ScheduledMul {
+    fn name(&self) -> &'static str {
+        match self.flavor {
+            MulFlavor::Latency => "MultPIM (scheduled)",
+            MulFlavor::Area => "MultPIM-Area (scheduled)",
+        }
+    }
+
+    fn n_bits(&self) -> u32 {
+        self.n
+    }
+
+    fn program(&self) -> &Program {
+        &self.program
+    }
+
+    fn layout(&self) -> RegionLayout {
+        self.layout
+    }
+
+    fn input_cols(&self) -> Vec<Col> {
+        self.input_cols.clone()
+    }
+
+    fn read_result(&self, sim: &Simulator, row: usize) -> u64 {
+        let mut v = 0u64;
+        for (i, &col) in self.out_map.iter().enumerate() {
+            if sim.read_bits(row, col, 1) == 1 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+}
+
+/// Emit the §VI chain circuits: one per element, accumulator threaded.
+fn matvec_circuits(n_bits: u32, n_elems: u32) -> (Vec<(String, Circuit)>, OperandRegion, Vec<Wire>) {
+    let n = n_bits;
+    let width = 2 * n_elems * n;
+    let starts: Vec<Col> = (0..2 * n_elems).map(|i| i * n).collect();
+    let region = OperandRegion::new(starts, width);
+    let a_word = |t: u32| -> Vec<Wire> { (t * n..(t + 1) * n).collect() };
+    let x_word = |t: u32| -> Vec<Wire> { ((n_elems + t) * n..(n_elems + t + 1) * n).collect() };
+    let mut circuits = Vec::with_capacity(n_elems as usize);
+    let mut acc: Vec<Wire> = Vec::new();
+    let mut first = width;
+    for t in 0..n_elems {
+        let mut c = Circuit::new(first);
+        acc = if t == 0 {
+            c.mul_select(&a_word(0), &x_word(0), SELECT_BLOCK)
+        } else {
+            c.mac(&acc, &a_word(t), &x_word(t), SELECT_BLOCK)
+        };
+        first = c.next_wire();
+        circuits.push((format!("sched-mv-n{n}-elem{t}"), c));
+    }
+    (circuits, region, acc)
+}
+
+/// The §VI MAC chain as a compiled chain — the
+/// `schedule-stats --chain matvec32` budget subject.
+pub fn matvec_chain(n_bits: u32, n_elems: u32, mode: ScheduleMode) -> Result<CompiledChain> {
+    let (circuits, region, _) = matvec_circuits(n_bits, n_elems);
+    compile_chain(circuits, region, mode, SchedulerConfig::default())
+}
+
+/// Emit and compile the §VI fused matvec through the schedule backend,
+/// packaged as a [`MultPimMatVec`] so the serving layer (tiling, shards,
+/// panel reuse, plane staging) is shared verbatim with the handwritten
+/// engine — none of it depends on program provenance.
+pub fn build_scheduled_matvec(
+    n_bits: u32,
+    n_elems: u32,
+    mode: ScheduleMode,
+) -> Result<MultPimMatVec> {
+    assert!((2..=32).contains(&n_bits), "N must be in 2..=32");
+    assert!(n_elems >= 1, "need at least one element");
+    let (circuits, region, out) = matvec_circuits(n_bits, n_elems);
+    let chain = compile_chain(circuits, region, mode, SchedulerConfig::default())?;
+    let out_map: Vec<Col> = out
+        .iter()
+        .map(|&w| chain.col_of(w).expect("accumulator wires are produced by the chain"))
+        .collect();
+    let a_cols: Vec<Col> = (0..n_elems).map(|t| t * n_bits).collect();
+    let x_cols: Vec<Col> = (0..n_elems).map(|t| (n_elems + t) * n_bits).collect();
+    let input_cols: Vec<Col> = (0..2 * n_elems * n_bits).collect();
+    Ok(MultPimMatVec::from_cached(
+        n_bits,
+        n_elems,
+        chain.width(),
+        chain.programs().to_vec(),
+        a_cols,
+        x_cols,
+        out_map,
+        input_cols,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::inner_product_mod;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn scheduled_mul_is_exact_in_both_flavors_and_modes() {
+        let mut rng = SplitMix64::new(0x5CED);
+        for flavor in [MulFlavor::Latency, MulFlavor::Area] {
+            for mode in [ScheduleMode::Serial, ScheduleMode::Partitioned] {
+                for n in [3u32, 8] {
+                    let m = ScheduledMul::build(flavor, n, mode).unwrap();
+                    let pairs: Vec<(u64, u64)> =
+                        (0..16).map(|_| (rng.bits(n), rng.bits(n))).collect();
+                    let out = m.multiply_batch(&pairs).unwrap();
+                    for (&(a, b), &p) in pairs.iter().zip(&out) {
+                        assert_eq!(p, a * b, "{flavor:?} {mode:?} N={n} a={a} b={b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_mul_out_map_is_resolved_and_in_bounds() {
+        let m = ScheduledMul::build(MulFlavor::Latency, 8, ScheduleMode::Partitioned).unwrap();
+        let width = m.program().partitions.num_cols();
+        assert_eq!(m.out_map().len(), 16);
+        assert!(m.out_map().iter().all(|&c| c >= 16 && c < width), "outputs live in work lanes");
+    }
+
+    #[test]
+    fn handwritten_mode_is_rejected() {
+        assert!(ScheduledMul::build(MulFlavor::Latency, 8, ScheduleMode::Handwritten).is_err());
+        assert!(build_scheduled_matvec(4, 2, ScheduleMode::Handwritten).is_err());
+    }
+
+    #[test]
+    fn scheduled_matvec_matches_reference() {
+        let mut rng = SplitMix64::new(0x5C4D);
+        for mode in [ScheduleMode::Serial, ScheduleMode::Partitioned] {
+            for (n_bits, n_elems) in [(2u32, 1u32), (4, 3), (8, 2)] {
+                let engine = build_scheduled_matvec(n_bits, n_elems, mode).unwrap();
+                let rows: Vec<Vec<u64>> = (0..6)
+                    .map(|_| (0..n_elems).map(|_| rng.bits(n_bits)).collect())
+                    .collect();
+                let x: Vec<u64> = (0..n_elems).map(|_| rng.bits(n_bits)).collect();
+                let got = engine.compute(&rows, &x).unwrap();
+                for (r, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        got[r],
+                        inner_product_mod(n_bits, row, &x),
+                        "{mode:?} N={n_bits} n={n_elems} row={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The packaged engine satisfies the same once-at-launch chain
+    /// validation contract as the handwritten one.
+    #[test]
+    fn scheduled_matvec_chain_validates() {
+        let engine = build_scheduled_matvec(4, 3, ScheduleMode::Partitioned).unwrap();
+        let report = engine.validate().unwrap();
+        assert_eq!(report.cycles as u64, engine.latency_cycles());
+    }
+
+    /// Every compiled fixed chain reports schedule occupancy (the
+    /// budget gate reads these fields).
+    #[test]
+    fn compiled_chains_report_occupancy() {
+        let mult = mult_chain(8, ScheduleMode::Partitioned).unwrap();
+        let mv = matvec_chain(4, 3, ScheduleMode::Partitioned).unwrap();
+        for chain in [&mult, &mv] {
+            let s = chain.stats();
+            assert!(s.busy_partition_cycles > 0, "occupancy tracked");
+            assert!(s.cycles >= s.critical_path_cycles);
+            assert!(s.gates > 0 && s.partitions > 1);
+            assert_eq!(s.programs, chain.per_program_stats().len());
+        }
+    }
+}

@@ -133,6 +133,10 @@ fn mode_tag(mode: ScheduleMode) -> u8 {
     match mode {
         ScheduleMode::Serial => 0,
         ScheduleMode::Partitioned => 1,
+        // Never stored in practice: handwritten programs carry no
+        // compiled-chain mode, so only the engines' key shapes mention
+        // the handwritten path (as the *absence* of a mode word).
+        ScheduleMode::Handwritten => 2,
     }
 }
 

@@ -10,21 +10,45 @@
 //! never reallocated) and staged through the word-transposed bulk write.
 //! See EXPERIMENTS.md §Perf for the measured gains of the compiled +
 //! transposed-staging path over the seed's interpreted per-bit path.
+//!
+//! Fixed-point programs come from the unified IR backend by default:
+//! [`with_cache`](MultiplyEngine::with_cache) compiles the
+//! [`schedmul`](crate::algorithms::schedmul) emitters through
+//! [`ScheduleMode::Partitioned`], exactly like the float chain. The
+//! hand-laid §IV/§VI emitters stay reachable through
+//! [`ScheduleMode::Handwritten`] (via the `*_mode` constructors) as the
+//! bit-exactness oracle — `rust/tests/emitter_equivalence.rs` pins the
+//! two paths against each other.
 
 use crate::algorithms::floatvec::MultPimFloatVec;
 use crate::algorithms::matvec::MultPimMatVec;
 use crate::algorithms::multpim::MultPim;
 use crate::algorithms::multpim_area::MultPimArea;
+use crate::algorithms::schedmul::{self, MulFlavor, ScheduledMul};
 use crate::algorithms::Multiplier;
 use crate::cache::{Artifact, CacheContext};
 use crate::crossbar::{Crossbar, PlaneMatrix, RegionLayout};
 use crate::fixedpoint::float::FloatFormat;
+use crate::isa::Col;
 use crate::runtime::{golden, ArtifactSet, PjrtRuntime};
-use crate::schedule::CompiledChain;
+use crate::schedule::{CompiledChain, ScheduleMode};
 use crate::sim::{validate, CompiledPipeline, CompiledProgram, Simulator};
 use crate::{Error, Result};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Append the schedule-mode discriminant to a cache-key shape. The
+/// handwritten oracle keeps the legacy shape (no mode word), so artifacts
+/// stored by handwritten-era builds can never satisfy a scheduled
+/// request — the key simply misses and the engine recompiles cleanly —
+/// and vice versa.
+fn push_mode_shape(shape: &mut Vec<u64>, mode: ScheduleMode) {
+    match mode {
+        ScheduleMode::Handwritten => {}
+        ScheduleMode::Partitioned => shape.push(1),
+        ScheduleMode::Serial => shape.push(2),
+    }
+}
 
 /// Which multiplier implementation an engine deploys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,12 +79,28 @@ impl MultiplyEngine {
     /// A usable hit skips program emission; the program is still
     /// re-validated before use (legality is never trusted from disk), and
     /// any rejected artifact falls back to a cold compile that stores the
-    /// fresh result.
+    /// fresh result. Compiles through the default scheduled backend
+    /// ([`ScheduleMode::Partitioned`]).
     pub fn with_cache(
         config: EngineConfig,
         n_bits: u32,
         rows: usize,
         ctx: Option<&CacheContext>,
+    ) -> Result<Self> {
+        Self::with_cache_mode(config, n_bits, rows, ctx, ScheduleMode::Partitioned)
+    }
+
+    /// Like [`Self::with_cache`], but selecting the program backend:
+    /// [`ScheduleMode::Partitioned`] / [`ScheduleMode::Serial`] compile
+    /// the [`schedmul`] emitters through the schedule pipeline;
+    /// [`ScheduleMode::Handwritten`] deploys the hand-laid §IV emitters
+    /// (the fixed-point oracle path).
+    pub fn with_cache_mode(
+        config: EngineConfig,
+        n_bits: u32,
+        rows: usize,
+        ctx: Option<&CacheContext>,
+        mode: ScheduleMode,
     ) -> Result<Self> {
         if rows == 0 {
             return Err(Error::BadParameter("engine needs at least one crossbar row".into()));
@@ -69,11 +109,12 @@ impl MultiplyEngine {
             EngineConfig::MultPim => "multiply",
             EngineConfig::MultPimArea => "multiply-area",
         };
-        let shape = [u64::from(n_bits), rows as u64];
+        let mut shape = vec![u64::from(n_bits), rows as u64];
+        push_mode_shape(&mut shape, mode);
         let mut multiplier: Option<Arc<dyn Multiplier + Send + Sync>> = None;
         if let Some(ctx) = ctx {
             if let Some(artifact) = ctx.cache().load(&ctx.key(kind, &shape)) {
-                match Self::rehydrate(config, n_bits, artifact) {
+                match Self::rehydrate(config, n_bits, mode, artifact) {
                     Some(m) if validate(m.program(), &m.input_cols()).is_ok() => {
                         multiplier = Some(m);
                     }
@@ -83,38 +124,40 @@ impl MultiplyEngine {
         }
         let multiplier = match multiplier {
             Some(m) => m,
-            None => match config {
-                EngineConfig::MultPim => {
-                    let m = MultPim::new(n_bits);
-                    validate(m.program(), &m.input_cols())?;
-                    if let Some(ctx) = ctx {
-                        let artifact = Artifact::Multiply {
-                            n_bits,
-                            program: m.program().clone(),
-                            layout: m.layout(),
-                            input_cols: m.input_cols(),
-                            out_map: None,
-                        };
-                        ctx.cache().store(&ctx.key(kind, &shape), &artifact);
-                    }
-                    Arc::new(m)
+            None => {
+                let (m, out_map): (Arc<dyn Multiplier + Send + Sync>, Option<Vec<Col>>) =
+                    match (config, mode) {
+                        (EngineConfig::MultPim, ScheduleMode::Handwritten) => {
+                            (Arc::new(MultPim::new(n_bits)), None)
+                        }
+                        (EngineConfig::MultPimArea, ScheduleMode::Handwritten) => {
+                            let m = MultPimArea::new(n_bits);
+                            let map = Some(m.out_map().to_vec());
+                            (Arc::new(m), map)
+                        }
+                        (config, mode) => {
+                            let flavor = match config {
+                                EngineConfig::MultPim => MulFlavor::Latency,
+                                EngineConfig::MultPimArea => MulFlavor::Area,
+                            };
+                            let m = ScheduledMul::build(flavor, n_bits, mode)?;
+                            let map = Some(m.out_map().to_vec());
+                            (Arc::new(m), map)
+                        }
+                    };
+                validate(m.program(), &m.input_cols())?;
+                if let Some(ctx) = ctx {
+                    let artifact = Artifact::Multiply {
+                        n_bits,
+                        program: m.program().clone(),
+                        layout: m.layout(),
+                        input_cols: m.input_cols(),
+                        out_map,
+                    };
+                    ctx.cache().store(&ctx.key(kind, &shape), &artifact);
                 }
-                EngineConfig::MultPimArea => {
-                    let m = MultPimArea::new(n_bits);
-                    validate(m.program(), &m.input_cols())?;
-                    if let Some(ctx) = ctx {
-                        let artifact = Artifact::Multiply {
-                            n_bits,
-                            program: m.program().clone(),
-                            layout: m.layout(),
-                            input_cols: m.input_cols(),
-                            out_map: Some(m.out_map().to_vec()),
-                        };
-                        ctx.cache().store(&ctx.key(kind, &shape), &artifact);
-                    }
-                    Arc::new(m)
-                }
-            },
+                m
+            }
         };
         let cols = multiplier.program().partitions.num_cols() as usize;
         let words = Crossbar::words_for_rows(rows);
@@ -130,6 +173,7 @@ impl MultiplyEngine {
     fn rehydrate(
         config: EngineConfig,
         n_bits: u32,
+        mode: ScheduleMode,
         artifact: Artifact,
     ) -> Option<Arc<dyn Multiplier + Send + Sync>> {
         let Artifact::Multiply { n_bits: n, program, layout, input_cols, out_map } = artifact
@@ -140,8 +184,8 @@ impl MultiplyEngine {
             return None;
         }
         let num_cols = program.partitions.num_cols();
-        match (config, out_map) {
-            (EngineConfig::MultPim, None) => {
+        match (config, mode, out_map) {
+            (EngineConfig::MultPim, ScheduleMode::Handwritten, None) => {
                 // The default read_result reads the layout's contiguous
                 // output range.
                 if u64::from(layout.out_start) + u64::from(layout.out_bits) > u64::from(num_cols) {
@@ -149,11 +193,23 @@ impl MultiplyEngine {
                 }
                 Some(Arc::new(MultPim::from_cached(n, program, layout, input_cols)))
             }
-            (EngineConfig::MultPimArea, Some(map)) => {
+            (EngineConfig::MultPimArea, ScheduleMode::Handwritten, Some(map)) => {
                 if map.len() != 2 * n as usize || map.iter().any(|&c| c >= num_cols) {
                     return None;
                 }
                 Some(Arc::new(MultPimArea::from_cached(n, program, layout, input_cols, map)))
+            }
+            (config, ScheduleMode::Partitioned | ScheduleMode::Serial, Some(map)) => {
+                if map.len() != 2 * n as usize || map.iter().any(|&c| c >= num_cols) {
+                    return None;
+                }
+                let flavor = match config {
+                    EngineConfig::MultPim => MulFlavor::Latency,
+                    EngineConfig::MultPimArea => MulFlavor::Area,
+                };
+                Some(Arc::new(ScheduledMul::from_cached(
+                    flavor, n, program, layout, input_cols, map,
+                )))
             }
             _ => None,
         }
@@ -299,12 +355,29 @@ impl ChainEngine {
     /// matmul) in the cache key. A usable hit skips chain emission; the
     /// chain is still re-validated before use, and any rejected artifact
     /// falls back to a cold compile that stores the fresh result.
+    /// Compiles through the default scheduled backend
+    /// ([`ScheduleMode::Partitioned`]).
     pub fn with_cache(
         n_bits: u32,
         n_elems: u32,
         shard_rows: usize,
         ctx: Option<&CacheContext>,
         kind: &'static str,
+    ) -> Result<Self> {
+        Self::with_cache_mode(n_bits, n_elems, shard_rows, ctx, kind, ScheduleMode::Partitioned)
+    }
+
+    /// Like [`Self::with_cache`], but selecting the program backend:
+    /// scheduled modes compile the §VI MAC chain from the IR emitters
+    /// through the schedule pipeline; [`ScheduleMode::Handwritten`]
+    /// deploys the hand-laid §VI chain (the oracle path).
+    pub fn with_cache_mode(
+        n_bits: u32,
+        n_elems: u32,
+        shard_rows: usize,
+        ctx: Option<&CacheContext>,
+        kind: &'static str,
+        mode: ScheduleMode,
     ) -> Result<Self> {
         if !(2..=32).contains(&n_bits) {
             return Err(Error::BadParameter(format!(
@@ -319,7 +392,8 @@ impl ChainEngine {
                 "chain engine needs at least one crossbar row per shard".into(),
             ));
         }
-        let shape = [u64::from(n_bits), u64::from(n_elems), shard_rows as u64];
+        let mut shape = vec![u64::from(n_bits), u64::from(n_elems), shard_rows as u64];
+        push_mode_shape(&mut shape, mode);
         let mut engine: Option<Arc<MultPimMatVec>> = None;
         if let Some(ctx) = ctx {
             if let Some(artifact) = ctx.cache().load(&ctx.key(kind, &shape)) {
@@ -334,7 +408,10 @@ impl ChainEngine {
         let engine = match engine {
             Some(e) => e,
             None => {
-                let e = Arc::new(MultPimMatVec::new(n_bits, n_elems));
+                let e = match mode {
+                    ScheduleMode::Handwritten => Arc::new(MultPimMatVec::new(n_bits, n_elems)),
+                    mode => Arc::new(schedmul::build_scheduled_matvec(n_bits, n_elems, mode)?),
+                };
                 // Validate the whole chain exactly once (state threads
                 // across the per-element programs and the drain), then
                 // lower it exactly once.
@@ -896,9 +973,54 @@ mod tests {
         let pairs: Vec<(u64, u64)> =
             (0..64).map(|_| (rng.bits(16), rng.bits(16))).collect();
         let (out, cycles, _) = engine.execute(&pairs).unwrap();
+        assert!(cycles > 0);
+        for (&(a, b), &p) in pairs.iter().zip(&out) {
+            assert_eq!(p, a * b);
+        }
+    }
+
+    /// The handwritten oracle path stays deployable behind the mode flag
+    /// and still hits the paper's Table I latency exactly.
+    #[test]
+    fn handwritten_oracle_engine_pins_table1_latency() {
+        let engine = MultiplyEngine::with_cache_mode(
+            EngineConfig::MultPim,
+            16,
+            64,
+            None,
+            ScheduleMode::Handwritten,
+        )
+        .unwrap();
+        let mut rng = SplitMix64::new(5);
+        let pairs: Vec<(u64, u64)> =
+            (0..64).map(|_| (rng.bits(16), rng.bits(16))).collect();
+        let (out, cycles, _) = engine.execute(&pairs).unwrap();
         assert_eq!(cycles, 291); // Table I, N = 16
         for (&(a, b), &p) in pairs.iter().zip(&out) {
             assert_eq!(p, a * b);
+        }
+    }
+
+    /// Scheduled (default) and handwritten (oracle) engines agree bit
+    /// for bit on the same operand batch — both flavors.
+    #[test]
+    fn scheduled_engine_matches_handwritten_oracle() {
+        let mut rng = SplitMix64::new(0x0DD5);
+        let pairs: Vec<(u64, u64)> =
+            (0..16).map(|_| (rng.bits(8), rng.bits(8))).collect();
+        for config in [EngineConfig::MultPim, EngineConfig::MultPimArea] {
+            let sched = MultiplyEngine::new(config, 8, 16).unwrap();
+            let oracle = MultiplyEngine::with_cache_mode(
+                config,
+                8,
+                16,
+                None,
+                ScheduleMode::Handwritten,
+            )
+            .unwrap();
+            let (sched_out, _, _) = sched.execute(&pairs).unwrap();
+            let (oracle_out, _, _) = oracle.execute(&pairs).unwrap();
+            assert_eq!(sched_out, oracle_out, "config={config:?}");
         }
     }
 

@@ -4,10 +4,15 @@
 //! every wire is written by exactly one gate (or staged externally before
 //! the program runs), and gates list their input wires explicitly, so the
 //! dependence DAG the list scheduler needs is the program text itself.
-//! The emitter API is the gate-level vocabulary the float pipeline is
-//! written in — the §IV-B1 full adder, ripple/two's-complement words,
-//! barrel shifts, binary-search normalization — plus the raw
-//! [`Circuit::emit`] escape hatch used by the fuzz suite's random DAGs.
+//! The emitter API is the gate-level vocabulary every pipeline is
+//! written in — the §IV-B1 full adder in both ripple ([`Circuit::add`])
+//! and carry-select ([`Circuit::add_select`]) forms, the §V CSAS
+//! partial-product recurrence ([`Circuit::mul`]/[`Circuit::mul_select`])
+//! and the §VI fused MAC step ([`Circuit::mac`]), §III-A broadcast
+//! replicas ([`Circuit::replicate`]) and the §III-B shift-as-wiring view
+//! ([`Circuit::shifted_left`]), barrel shifts, binary-search
+//! normalization — plus the raw [`Circuit::emit`] escape hatch used by
+//! the fuzz suite's random DAGs.
 //!
 //! Wires are plain `u32` ids sharing the [`Col`] domain: in the
 //! [`Serial`](super::ScheduleMode::Serial) oracle lowering a wire *is* its
@@ -183,6 +188,54 @@ impl Circuit {
         (s, c)
     }
 
+    /// Carry-select add (§IV-B1 variant): the low `block` bits ripple
+    /// with the real carry; every later block computes both carry
+    /// polarities speculatively (two independent ripple chains per
+    /// block, schedulable in parallel lanes) and a 2-deep mux picks the
+    /// real sums once the previous block's carry resolves. The carry
+    /// chain then costs 3 gate-depths per block instead of 2 per *bit*,
+    /// which is what pulls the wide `emit_mac` ripple adds off the
+    /// schedule's critical path. Drop-in replacement for [`Self::add`]:
+    /// same `(sum, carry_out)` contract.
+    pub fn add_select(
+        &mut self,
+        a: &[Wire],
+        b: &[Wire],
+        cin: Wire,
+        cin_not: Wire,
+        block: usize,
+    ) -> (Vec<Wire>, Wire) {
+        assert_eq!(a.len(), b.len());
+        assert!(block >= 1, "carry-select blocks must be non-empty");
+        let w = a.len();
+        if w <= block {
+            return self.add(a, b, cin, cin_not);
+        }
+        let (mut c, mut cn) = (cin, cin_not);
+        let mut sum = Vec::with_capacity(w);
+        for i in 0..block {
+            let (si, ci, cni) = self.fa(a[i], b[i], c, cn);
+            sum.push(si);
+            c = ci;
+            cn = cni;
+        }
+        let mut lo = block;
+        while lo < w {
+            let hi = (lo + block).min(w);
+            let (s0, c0) = self.add(&a[lo..hi], &b[lo..hi], self.zero, self.one);
+            let (s1, c1) = self.add(&a[lo..hi], &b[lo..hi], self.one, self.zero);
+            for i in 0..(hi - lo) {
+                let m = self.mux(c, cn, s1[i], s0[i]);
+                sum.push(m);
+            }
+            let c_next = self.mux(c, cn, c1, c0);
+            cn = self.not(c_next);
+            c = c_next;
+            lo = hi;
+        }
+        (sum, c)
+    }
+
     /// `a + b mod 2^w`.
     pub fn add_mod(&mut self, a: &[Wire], b: &[Wire]) -> Vec<Wire> {
         self.add(a, b, self.zero, self.one).0
@@ -255,6 +308,66 @@ impl Circuit {
         }
         out.extend(run);
         out
+    }
+
+    /// Carry-select CSAS multiply (§V schedule + §IV-B1 adder variant):
+    /// the same recurrence as [`Self::mul`], with every row merge going
+    /// through [`Self::add_select`] so the per-row carry chain resolves
+    /// in blocks instead of bit-serially. The latency-flavored fixed
+    /// emitter (`MultPIM` config) compiles this form.
+    pub fn mul_select(&mut self, a: &[Wire], b: &[Wire], block: usize) -> Vec<Wire> {
+        assert_eq!(a.len(), b.len());
+        let s = a.len();
+        let mut out = Vec::with_capacity(2 * s);
+        let mut run = vec![self.zero; s];
+        for &bi in b {
+            let pp: Vec<Wire> = a.iter().map(|&aj| self.and(aj, bi)).collect();
+            let (sum, cout) = self.add_select(&run, &pp, self.zero, self.one, block);
+            out.push(sum[0]);
+            run = sum[1..].to_vec();
+            run.push(cout);
+        }
+        out.extend(run);
+        out
+    }
+
+    /// Fused multiply-accumulate step of the §VI chain:
+    /// `acc + a * x` over a `2n`-bit accumulator (`acc.len() == 2 *
+    /// a.len()`), product widened by zero-extension before the final
+    /// carry-select add. One circuit per chain element emits exactly
+    /// this.
+    pub fn mac(&mut self, acc: &[Wire], a: &[Wire], x: &[Wire], block: usize) -> Vec<Wire> {
+        assert_eq!(a.len(), x.len());
+        assert_eq!(acc.len(), 2 * a.len(), "accumulator holds the full 2n-bit product");
+        let prod = self.mul_select(a, x, block);
+        self.add_select(acc, &prod, self.zero, self.one, block).0
+    }
+
+    /// §III-A broadcast as an IR op: `k` identity replicas (`OR(x, x)`)
+    /// of `w` arranged as a heap-shaped tree — replica `i > 0` reads
+    /// replica `(i - 1) / 2` — so fanning a hot value out to `k`
+    /// consumers costs `ceil(log2(k + 1))` dependence levels instead of
+    /// serializing `k` reads through the producer's partition. The
+    /// placement pass inserts these automatically for high-fanout wires;
+    /// emitters can also place them by hand around known-hot selects.
+    pub fn replicate(&mut self, w: Wire, k: usize) -> Vec<Wire> {
+        let mut out: Vec<Wire> = Vec::with_capacity(k);
+        for i in 0..k {
+            let src = if i == 0 { w } else { out[(i - 1) / 2] };
+            out.push(self.or(src, src));
+        }
+        out
+    }
+
+    /// §III-B shift as wiring: in the IR a left shift by `k` is free —
+    /// the shifted word references the same wires at different indices,
+    /// zero-filling the bottom. The two-cycle parity schedule of
+    /// [`shift`](crate::algorithms::shift) is what the *scheduler*
+    /// recovers when consumers in different partitions read the result.
+    pub fn shifted_left(&self, word: &[Wire], k: usize) -> Vec<Wire> {
+        let mut v = vec![self.zero; k.min(word.len())];
+        v.extend_from_slice(&word[..word.len() - v.len()]);
+        v
     }
 
     /// Barrel right shift by `amt` (LSB-first amount bits), OR-folding
@@ -358,5 +471,178 @@ mod tests {
         let c = Circuit::new(0);
         let w = c.const_word(-3, 4); // 0b1101 in two's complement
         assert_eq!(w, vec![c.one(), c.zero(), c.one(), c.one()]);
+    }
+
+    /// Evaluate a circuit's DAG in software: operand wires take the given
+    /// bits, constants their values, every op its gate function.
+    fn eval(c: &Circuit, operands: &[u64]) -> std::collections::HashMap<Wire, u64> {
+        let mut v: std::collections::HashMap<Wire, u64> = operands
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as Wire, b))
+            .collect();
+        v.insert(c.zero(), 0);
+        v.insert(c.one(), 1);
+        for op in c.ops() {
+            let i: Vec<u64> =
+                op.inputs[..op.gate.arity()].iter().map(|w| v[w]).collect();
+            let out = match op.gate {
+                Gate::Not => 1 - i[0],
+                Gate::Or2 => i[0] | i[1],
+                Gate::Nand2 => 1 - (i[0] & i[1]),
+                Gate::Min3 => 1 - (((i[0] + i[1] + i[2]) >= 2) as u64),
+                g => panic!("emitters never produce {g:?}"),
+            };
+            v.insert(op.output, out);
+        }
+        v
+    }
+
+    fn word_val(v: &std::collections::HashMap<Wire, u64>, w: &[Wire]) -> u64 {
+        w.iter().enumerate().map(|(i, wire)| v[wire] << i).sum()
+    }
+
+    /// Carry-select addition is bit-exact with ripple for every block
+    /// size, including blocks that do not divide the width.
+    #[test]
+    fn add_select_matches_add_semantics() {
+        let width = 11u32;
+        for block in [1usize, 2, 3, 4, 8, 16] {
+            let mut rng = crate::util::SplitMix64::new(0xCA44 ^ block as u64);
+            for _ in 0..32 {
+                let a = rng.bits(width);
+                let b = rng.bits(width);
+                let cin = rng.bits(1);
+                let mut c = Circuit::new(2 * width);
+                let aw: Vec<Wire> = (0..width).collect();
+                let bw: Vec<Wire> = (width..2 * width).collect();
+                let (cin_w, cin_not_w) =
+                    if cin == 1 { (c.one(), c.zero()) } else { (c.zero(), c.one()) };
+                let (sum, carry) = c.add_select(&aw, &bw, cin_w, cin_not_w, block);
+                let operands: Vec<u64> = (0..width)
+                    .map(|i| a >> i & 1)
+                    .chain((0..width).map(|i| b >> i & 1))
+                    .collect();
+                let v = eval(&c, &operands);
+                let got = word_val(&v, &sum) | (v[&carry] << width);
+                assert_eq!(got, a + b + cin, "a={a} b={b} cin={cin} block={block}");
+            }
+        }
+    }
+
+    /// The carry-select form trades gates for depth: strictly more gates
+    /// than ripple, strictly shallower carry resolution on wide words.
+    #[test]
+    fn add_select_is_shallower_than_ripple() {
+        let width = 32u32;
+        let aw: Vec<Wire> = (0..width).collect();
+        let bw: Vec<Wire> = (width..2 * width).collect();
+        let depth_of = |c: &Circuit, sink: Wire| -> u32 {
+            let mut depth = std::collections::HashMap::new();
+            for op in c.ops() {
+                let d = 1 + op.inputs[..op.gate.arity()]
+                    .iter()
+                    .map(|w| depth.get(w).copied().unwrap_or(0))
+                    .max()
+                    .unwrap();
+                depth.insert(op.output, d);
+            }
+            depth[&sink]
+        };
+        let mut ripple = Circuit::new(2 * width);
+        let (z, o) = (ripple.zero(), ripple.one());
+        let (_, rc) = ripple.add(&aw, &bw, z, o);
+        let mut sel = Circuit::new(2 * width);
+        let (z, o) = (sel.zero(), sel.one());
+        let (_, sc) = sel.add_select(&aw, &bw, z, o, 4);
+        assert!(sel.gate_count() > ripple.gate_count(), "speculation costs gates");
+        assert!(
+            depth_of(&sel, sc) < depth_of(&ripple, rc),
+            "carry-select must shorten the carry chain: {} vs {}",
+            depth_of(&sel, sc),
+            depth_of(&ripple, rc)
+        );
+    }
+
+    /// `mul_select` agrees with the widening reference product.
+    #[test]
+    fn mul_select_is_exact() {
+        let n = 6u32;
+        let mut rng = crate::util::SplitMix64::new(0x5E1EC7);
+        for _ in 0..64 {
+            let a = rng.bits(n);
+            let b = rng.bits(n);
+            let mut c = Circuit::new(2 * n);
+            let aw: Vec<Wire> = (0..n).collect();
+            let bw: Vec<Wire> = (n..2 * n).collect();
+            let out = c.mul_select(&aw, &bw, 3);
+            let operands: Vec<u64> = (0..n)
+                .map(|i| a >> i & 1)
+                .chain((0..n).map(|i| b >> i & 1))
+                .collect();
+            let v = eval(&c, &operands);
+            assert_eq!(word_val(&v, &out), a * b, "a={a} b={b}");
+        }
+    }
+
+    /// `mac` computes `acc + a * x` over the 2n-bit accumulator.
+    #[test]
+    fn mac_accumulates_exactly() {
+        let n = 5u32;
+        let mut rng = crate::util::SplitMix64::new(0xACC5EED);
+        for _ in 0..32 {
+            let acc = rng.bits(2 * n); // mod-2^2n accumulator, like the chain
+            let a = rng.bits(n);
+            let x = rng.bits(n);
+            let mut c = Circuit::new(4 * n);
+            let accw: Vec<Wire> = (0..2 * n).collect();
+            let aw: Vec<Wire> = (2 * n..3 * n).collect();
+            let xw: Vec<Wire> = (3 * n..4 * n).collect();
+            let out = c.mac(&accw, &aw, &xw, 4);
+            let operands: Vec<u64> = (0..2 * n)
+                .map(|i| acc >> i & 1)
+                .chain((0..n).map(|i| a >> i & 1))
+                .chain((0..n).map(|i| x >> i & 1))
+                .collect();
+            let v = eval(&c, &operands);
+            assert_eq!(
+                word_val(&v, &out),
+                (acc + a * x) & ((1 << (2 * n)) - 1),
+                "acc={acc} a={a} x={x}"
+            );
+        }
+    }
+
+    /// The replicate tree is identity-valued, heap-shaped, and log-depth.
+    #[test]
+    fn replicate_tree_is_log_depth_identity() {
+        let mut c = Circuit::new(1);
+        let reps = c.replicate(0, 7);
+        assert_eq!(reps.len(), 7);
+        assert_eq!(c.gate_count(), 7, "one OR(x, x) per replica");
+        let v = eval(&c, &[1]);
+        for &r in &reps {
+            assert_eq!(v[&r], 1, "replicas are identity copies");
+        }
+        // Heap shape: replica i reads replica (i-1)/2, root reads the
+        // source — depth ceil(log2(k + 1)) = 3 for k = 7.
+        let mut depth = std::collections::HashMap::new();
+        depth.insert(0u32, 0u32);
+        let mut max_depth = 0;
+        for op in c.ops() {
+            let d = depth[&op.inputs[0]] + 1;
+            depth.insert(op.output, d);
+            max_depth = max_depth.max(d);
+        }
+        assert_eq!(max_depth, 3);
+    }
+
+    #[test]
+    fn shifted_left_is_pure_wiring() {
+        let c = Circuit::new(4);
+        let w: Vec<Wire> = (0..4).collect();
+        assert_eq!(c.shifted_left(&w, 2), vec![c.zero(), c.zero(), 0, 1]);
+        assert_eq!(c.shifted_left(&w, 6), vec![c.zero(); 4]);
+        assert_eq!(c.gate_count(), 0, "shift emits no gates");
     }
 }

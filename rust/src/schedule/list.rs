@@ -15,6 +15,14 @@
 //! ready only one cycle *after* its last producer executed, matching the
 //! simulator's parallel-cycle semantics (reads observe the previous
 //! cycle's state).
+//!
+//! A **slack-compaction pass** then sweeps the greedy result once in
+//! cycle order: any op sitting later than its producers require — because
+//! an interval conflict deferred it and the conflicting gate has since
+//! been placed elsewhere — is hoisted to the earliest cycle where its
+//! partition interval is free and every producer has already resolved
+//! (strictly earlier cycle, preserving the read-previous-cycle rule).
+//! Cycles the hoist empties are dropped, shortening the program.
 
 use super::lower::OperandRegion;
 use super::place::{PlacedCircuit, Placement};
@@ -137,10 +145,61 @@ fn schedule_circuit(
             }
         }
         scheduled += this_cycle.len();
-        peak_parallel = peak_parallel.max(this_cycle.len() as u64);
         cycles.push(this_cycle);
     }
-    ScheduledCircuit { cycles, peak_parallel, busy_partition_cycles }
+
+    // Slack compaction. Greedy packing defers an op when its interval
+    // conflicts with a same-cycle winner, but never reconsiders earlier
+    // cycles once the conflicting op lands elsewhere. One pass in
+    // (cycle, index) order re-places each op at the earliest cycle that
+    // is (a) at least one past every producer's (already compacted)
+    // cycle and (b) interval-free. Producers are processed before their
+    // consumers — the input schedule keeps producers strictly earlier —
+    // so bound (a) always reads final positions. Interval sums are
+    // move-invariant, so `busy_partition_cycles` is untouched.
+    let n_cycles = cycles.len();
+    let mut cycle_of: Vec<usize> = vec![0; n];
+    for (t, cy) in cycles.iter().enumerate() {
+        for &i in cy {
+            cycle_of[i] = t;
+        }
+    }
+    let mut occ: Vec<Vec<bool>> = vec![vec![false; total_lanes]; n_cycles];
+    for (i, &(lo, hi)) in intervals.iter().enumerate() {
+        for l in lo..=hi {
+            occ[cycle_of[i]][l] = true;
+        }
+    }
+    let mut producers_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, cons) in consumers.iter().enumerate() {
+        for &c in cons {
+            producers_of[c].push(i);
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_unstable_by_key(|&i| (cycle_of[i], i));
+    for &i in &order {
+        let cur = cycle_of[i];
+        let earliest =
+            producers_of[i].iter().map(|&p| cycle_of[p] + 1).max().unwrap_or(0);
+        let (lo, hi) = intervals[i];
+        if let Some(t) = (earliest..cur).find(|&t| (lo..=hi).all(|l| !occ[t][l])) {
+            for l in lo..=hi {
+                occ[cur][l] = false;
+                occ[t][l] = true;
+            }
+            cycle_of[i] = t;
+        }
+    }
+    let mut compacted: Vec<Vec<usize>> = vec![Vec::new(); n_cycles];
+    for i in 0..n {
+        compacted[cycle_of[i]].push(i);
+    }
+    compacted.retain(|cy| !cy.is_empty());
+    for cy in &compacted {
+        peak_parallel = peak_parallel.max(cy.len() as u64);
+    }
+    ScheduledCircuit { cycles: compacted, peak_parallel, busy_partition_cycles }
 }
 
 #[cfg(test)]
@@ -193,6 +252,44 @@ mod tests {
         assert_eq!(sched.cycles.len(), 5);
         assert!(sched.cycles.iter().all(|cy| cy.len() == 1));
         assert_eq!(sched.peak_parallel, 1);
+    }
+
+    /// The slack pass hoists an op the greedy failure budget starved.
+    /// 38 serialized operand readers exhaust `max_failures` every cycle,
+    /// so a low-priority constant-input gate — whose single-lane interval
+    /// is free from cycle 0 on — never reaches the front of the ready
+    /// heap until the readers thin out. Compaction must pull it back to
+    /// cycle 0.
+    #[test]
+    fn slack_pass_hoists_budget_starved_ops() {
+        let readers = 38usize;
+        let region = OperandRegion::new(vec![0], readers as u32);
+        let mut c = Circuit::new(readers as u32);
+        for i in 0..readers {
+            let r = c.not(i as u32);
+            let _ = c.not(r); // consumer: readers get height 2
+        }
+        let (zero, one) = (c.zero(), c.one());
+        let indep = c.or(zero, one); // height 1, constant interval
+        let chain = vec![("starved".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let indep_idx = ops
+            .iter()
+            .position(|p| p.op.output == indep)
+            .expect("constant-input op placed");
+        let sched = &schedule_chain(&placement, &region)[0];
+        assert!(
+            sched.cycles[0].contains(&indep_idx),
+            "constant-interval op must be compacted into cycle 0, found in cycle {}",
+            sched
+                .cycles
+                .iter()
+                .position(|cy| cy.contains(&indep_idx))
+                .unwrap()
+        );
+        // The serialized readers still take one cycle each.
+        assert!(sched.cycles.len() >= readers);
     }
 
     /// Two gates that both read the same operand partition can never

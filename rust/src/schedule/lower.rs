@@ -46,6 +46,13 @@ pub enum ScheduleMode {
     /// The partition-parallel backend: placement, list scheduling,
     /// double-buffered lowering.
     Partitioned,
+    /// The hand-laid-out §IV/§VI emitters (`multpim.rs`,
+    /// `multpim_area.rs`, `matvec.rs`) — the fixed-point oracle path,
+    /// mirroring what [`Serial`](Self::Serial) is for the float chain.
+    /// Selected at the *engine* layer (the hand emitters build
+    /// [`Program`](crate::isa::Program)s directly); [`compile_chain`]
+    /// rejects it, because there is no circuit to compile.
+    Handwritten,
 }
 
 /// Compiler knobs.
@@ -180,6 +187,9 @@ impl CompiledChain {
                 (wire < self.width).then_some(wire)
             }
             ScheduleMode::Partitioned => self.wire_cols.get(&wire).copied(),
+            // Unreachable in practice — `compile_chain` never produces a
+            // handwritten-mode chain — but kept total for exhaustiveness.
+            ScheduleMode::Handwritten => None,
         }
     }
 
@@ -254,6 +264,13 @@ pub fn compile_chain(
     let chain = match mode {
         ScheduleMode::Serial => lower_serial(&circuits, &region)?,
         ScheduleMode::Partitioned => lower_partitioned(&circuits, &region, config)?,
+        ScheduleMode::Handwritten => {
+            return Err(Error::BadParameter(
+                "ScheduleMode::Handwritten selects the hand-laid emitters at the \
+                 engine layer; there is no circuit chain to compile"
+                    .into(),
+            ))
+        }
     };
     #[cfg(debug_assertions)]
     {
@@ -622,6 +639,21 @@ mod tests {
             let got = run_chain(&chain, &operands, &[a3]);
             assert_eq!(got[0], ((bits & 1) ^ (bits >> 1)) ^ 1, "bits={bits}");
         }
+    }
+
+    #[test]
+    fn handwritten_mode_has_no_compiler_path() {
+        let region = OperandRegion::new(vec![0], 2);
+        let mut c = Circuit::new(2);
+        let _ = c.not(0);
+        let err = compile_chain(
+            vec![("hand".into(), c)],
+            region,
+            ScheduleMode::Handwritten,
+            SchedulerConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("engine layer"), "{err}");
     }
 
     #[test]

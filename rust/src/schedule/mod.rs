@@ -3,13 +3,18 @@
 //!
 //! MultPIM's headline result — quadratic → linear-log multiplication
 //! latency — comes entirely from executing gates in *different memristive
-//! partitions in the same cycle* (§III, §V). The hand-written fixed-point
-//! engines already exploit that; this module is the general form: any
-//! circuit emitted in the SSA [`Circuit`] IR compiles to a legal,
-//! partition-parallel [`Program`](crate::isa::Program) schedule, so new
-//! pipelines (the full-precision float MAC chain today; mixed precision
-//! and float GEMM tomorrow) get a compiler instead of hand-laid-out
-//! circuits.
+//! partitions in the same cycle* (§III, §V). Any circuit emitted in the
+//! SSA [`Circuit`] IR compiles to a legal, partition-parallel
+//! [`Program`](crate::isa::Program) schedule, and *every* serving engine
+//! now compiles through this one backend by default: the §V fixed-point
+//! multipliers and the §VI fused MAC chain are re-emitted in the IR
+//! ([`schedmul`](crate::algorithms::schedmul)), alongside the
+//! full-precision float pipeline
+//! ([`floatvec`](crate::algorithms::floatvec)). The hand-laid emitters
+//! survive unchanged behind `ScheduleMode::Handwritten` as the
+//! bit-exactness and Table I/III latency oracle
+//! (`rust/tests/emitter_equivalence.rs` pins scheduled ≡ handwritten
+//! across the width sweep).
 //!
 //! ## The pass pipeline
 //!
@@ -43,7 +48,8 @@
 //! ≡ serial ≡ `float_mac_ref` across formats and random DAGs), and
 //! [`ScheduleStats`] reports cycles, critical path, and partition
 //! occupancy — the numbers `multpim schedule-stats` prints and CI's
-//! checked-in budget (`ci/schedule_budget_fp32x8.txt`) gates on.
+//! checked-in budgets (`ci/schedule_budget_{fp32x8,mult32,matvec32}.txt`)
+//! gate on.
 //!
 //! ## Example: compile and run a 6-bit ripple adder
 //!
@@ -87,6 +93,29 @@
 //!
 //! // The schedule realizes parallelism: fewer cycles than the serial
 //! // oracle, never fewer than the dependence DAG allows.
+//! let stats = chain.stats();
+//! assert!(stats.cycles < stats.serial_cycles);
+//! assert!(stats.cycles >= stats.critical_path_cycles);
+//! ```
+//!
+//! ## Example: the fixed-point engines ride the same backend
+//!
+//! The §V CSAS multiplier and the §VI fused MAC chain are circuits like
+//! any other — re-emitted in the IR, they compile through exactly the
+//! passes above and serve as the engine default:
+//!
+//! ```
+//! use multpim::algorithms::schedmul::{self, MulFlavor, ScheduledMul};
+//! use multpim::algorithms::Multiplier;
+//! use multpim::schedule::ScheduleMode;
+//!
+//! // The carry-select CSAS multiplier, compiled partition-parallel.
+//! let m = ScheduledMul::build(MulFlavor::Latency, 8, ScheduleMode::Partitioned).unwrap();
+//! assert_eq!(m.multiply(200, 100).unwrap(), 20_000);
+//!
+//! // The fused MAC chain (2 elements, 8-bit) through the same passes:
+//! // faster than the serial oracle, never below the DAG lower bound.
+//! let chain = schedmul::matvec_chain(8, 2, ScheduleMode::Partitioned).unwrap();
 //! let stats = chain.stats();
 //! assert!(stats.cycles < stats.serial_cycles);
 //! assert!(stats.cycles >= stats.critical_path_cycles);

@@ -13,6 +13,17 @@
 //! between the operand and its output for that cycle, so at most one such
 //! gate can run per cycle per operand partition.
 //!
+//! Hot values get the full §III-A *broadcast tree*: remote wires read
+//! ≥ [`REMOTE_TREE_MIN_USES`] times and locally produced wires read
+//! ≥ [`LOCAL_TREE_MIN_USES`] times fan out through `ceil(uses / 4)`
+//! replicas arranged heap-style (replica `i` reads replica
+//! `(i - 1) / 2`), and consumers round-robin across the replicas —
+//! log-depth distribution instead of one serialized read per consumer,
+//! exactly the recursive-doubling NOT-tree of the paper realized as
+//! identity copies. The float pipeline's mux selects and the fixed
+//! emitters' partial-product multiplicand bits are the wires this
+//! rescues from serialization.
+//!
 //! The pass also performs the chain's static semantic checks (they are
 //! cheaper here, in wire space, than after lowering):
 //!
@@ -35,6 +46,23 @@ use super::lower::OperandRegion;
 use crate::isa::{Gate, GateOp};
 use crate::{Error, Result};
 use std::collections::{HashMap, HashSet};
+
+/// Remote wires read at least this many times are localized behind a
+/// §III-A replica *tree* instead of a single copy (2..=4 uses keep the
+/// single copy: one replica already serves that fanout).
+const REMOTE_TREE_MIN_USES: u32 = 5;
+
+/// Consumers served per replica. `ceil(uses / 4)` replicas keep each
+/// replica's partition from becoming the new serialization point while
+/// the heap-shaped tree keeps replica depth logarithmic.
+const FANOUT_PER_REPLICA: usize = 4;
+
+/// Locally produced wires with at least this many readers also get a
+/// tree. The threshold is higher than the remote one because a local
+/// producer already sits in a work lane (its readers serialize through
+/// one partition, not through a shared operand partition), so small
+/// fanouts are cheaper to serialize than to replicate.
+const LOCAL_TREE_MIN_USES: u32 = 6;
 
 /// One gate with its placement and schedule metadata.
 #[derive(Debug, Clone)]
@@ -143,14 +171,19 @@ pub(crate) fn place_chain(
         };
 
         // Pass 1: validate single assignment and defined reads; count the
-        // uses of every remote (operand or predecessor) wire.
+        // uses of every remote (operand or predecessor) wire and the
+        // local fanout of every produced wire.
         let mut local: HashMap<Wire, usize> = HashMap::new();
         let mut remote_uses: HashMap<Wire, u32> = HashMap::new();
         let mut remote_order: Vec<Wire> = Vec::new();
+        let mut local_uses: HashMap<Wire, u32> = HashMap::new();
         for (i, op) in circuit.ops().iter().enumerate() {
             for &w in &op.inputs[..op.gate.arity()] {
                 match classify(w, &local)? {
-                    Use::Const | Use::Local => {}
+                    Use::Const => {}
+                    Use::Local => {
+                        *local_uses.entry(w).or_insert(0) += 1;
+                    }
                     Use::Operand | Use::Prev => {
                         let n = remote_uses.entry(w).or_insert(0);
                         if *n == 0 {
@@ -174,32 +207,86 @@ pub(crate) fn place_chain(
             local.insert(out, i);
         }
 
-        // Pass 2: localize every remote wire used more than once behind a
-        // §III-A copy gate, rewriting its consumers.
-        let mut rewrites: HashMap<Wire, Wire> = HashMap::new();
+        // Pass 2: localize hot wires behind §III-A copy gates, rewriting
+        // their consumers. Remote wires read 2..=4 times get one copy;
+        // hotter remote wires and high-fanout *local* wires get a
+        // heap-shaped replica tree (replica `i > 0` reads replica
+        // `(i - 1) / 2`), so fanning out to k consumers costs log-depth
+        // instead of serializing k reads through one partition.
+        // Consumers round-robin across the replicas so no single replica
+        // becomes the new bottleneck.
+        let mut rewrites: HashMap<Wire, Vec<Wire>> = HashMap::new();
+        let mut use_rotation: HashMap<Wire, usize> = HashMap::new();
         let mut ops: Vec<GateOp> = Vec::new();
         let mut is_copy: Vec<bool> = Vec::new();
+        let mut emit_tree = |w: Wire,
+                             uses: u32,
+                             tree_min: u32,
+                             next_wire: &mut Wire,
+                             ops: &mut Vec<GateOp>,
+                             is_copy: &mut Vec<bool>|
+         -> Vec<Wire> {
+            let replicas = if uses >= tree_min {
+                (uses as usize).div_ceil(FANOUT_PER_REPLICA)
+            } else {
+                1
+            };
+            let mut reps: Vec<Wire> = Vec::with_capacity(replicas);
+            for i in 0..replicas {
+                let copy = *next_wire;
+                *next_wire += 1;
+                let src = if i == 0 { w } else { reps[(i - 1) / 2] };
+                ops.push(GateOp::new(Gate::Or2, &[src, src], copy));
+                is_copy.push(true);
+                reps.push(copy);
+            }
+            reps
+        };
         if insert_copies {
             for &w in &remote_order {
-                if remote_uses[&w] >= 2 {
-                    let copy = next_wire;
-                    next_wire += 1;
-                    rewrites.insert(w, copy);
-                    ops.push(GateOp::new(Gate::Or2, &[w, w], copy));
-                    is_copy.push(true);
+                let uses = remote_uses[&w];
+                if uses >= 2 {
+                    let reps = emit_tree(
+                        w,
+                        uses,
+                        REMOTE_TREE_MIN_USES,
+                        &mut next_wire,
+                        &mut ops,
+                        &mut is_copy,
+                    );
+                    rewrites.insert(w, reps);
                 }
             }
         }
-        let copies = ops.len();
         for op in circuit.ops() {
             let mut rewritten = op.clone();
             for slot in rewritten.inputs[..op.gate.arity()].iter_mut() {
-                if let Some(&c) = rewrites.get(slot) {
-                    *slot = c;
+                if let Some(reps) = rewrites.get(slot) {
+                    let rot = use_rotation.entry(*slot).or_insert(0);
+                    *slot = reps[*rot % reps.len()];
+                    *rot += 1;
                 }
             }
+            let out = rewritten.output;
             ops.push(rewritten);
             is_copy.push(false);
+            if insert_copies {
+                if let Some(&uses) = local_uses.get(&out) {
+                    if uses >= LOCAL_TREE_MIN_USES {
+                        // Tree rooted right after the producer; later
+                        // iterations rewrite this wire's consumers.
+                        let reps = emit_tree(
+                            out,
+                            uses,
+                            LOCAL_TREE_MIN_USES,
+                            &mut next_wire,
+                            &mut ops,
+                            &mut is_copy,
+                        );
+                        rewrites.insert(out, reps);
+                    }
+                }
+            }
         }
         // Local producer index over the final op list.
         let producer: HashMap<Wire, usize> =
@@ -268,7 +355,7 @@ pub(crate) fn place_chain(
                 lane: global,
                 level,
                 height: heights[i],
-                is_copy: i < copies,
+                is_copy: is_copy[i],
             });
         }
         for op in circuit.ops() {
@@ -382,6 +469,78 @@ mod tests {
         assert!(ops
             .iter()
             .any(|p| p.op.inputs[..p.op.gate.arity()].contains(&copy_wire)));
+    }
+
+    #[test]
+    fn hot_remote_wires_get_replica_trees() {
+        let mut c = Circuit::new(4);
+        // Operand wire 0 is read 8 times: enough for a tree of
+        // ceil(8 / 4) = 2 replicas.
+        let mut acc = c.not(1);
+        for _ in 0..8 {
+            acc = c.or(0, acc);
+        }
+        let chain = vec![("tree".to_string(), c)];
+        let placement = place_chain(&chain, &tiny_region(), 4, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let copies: Vec<_> = ops.iter().filter(|p| p.is_copy).collect();
+        assert_eq!(copies.len(), 2, "ceil(8/4) replicas");
+        // Replica 0 reads the source; replica 1 reads replica 0.
+        assert_eq!(copies[0].op.inputs[0], 0);
+        assert_eq!(copies[1].op.inputs[0], copies[0].op.output);
+        // No non-copy op still reads the raw operand wire, and both
+        // replicas actually serve consumers (round-robin).
+        let mut served = [0usize; 2];
+        for p in ops.iter().filter(|p| !p.is_copy) {
+            for &w in &p.op.inputs[..p.op.gate.arity()] {
+                assert_ne!(w, 0, "raw hot operand read survived rewriting");
+                for (r, c) in copies.iter().enumerate() {
+                    if w == c.op.output {
+                        served[r] += 1;
+                    }
+                }
+            }
+        }
+        assert!(served.iter().all(|&s| s > 0), "replicas share the fanout: {served:?}");
+    }
+
+    #[test]
+    fn hot_local_wires_get_replica_trees() {
+        let region = OperandRegion::new(vec![0], 1);
+        let mut c = Circuit::new(1);
+        // One locally produced wire fanning out to 8 consumers.
+        let hot = c.not(0);
+        for _ in 0..8 {
+            let _ = c.not(hot);
+        }
+        let chain = vec![("localtree".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        let ops = &placement.circuits[0].ops;
+        let copies: Vec<_> = ops.iter().filter(|p| p.is_copy).collect();
+        assert_eq!(copies.len(), 2, "ceil(8/4) replicas for the local wire");
+        // The tree is rooted at the producer's output...
+        let hot_producer = ops.iter().find(|p| !p.is_copy).unwrap();
+        assert_eq!(copies[0].op.inputs[0], hot_producer.op.output);
+        // ...and no consumer reads the producer directly any more.
+        for p in ops.iter().filter(|p| !p.is_copy).skip(1) {
+            assert_ne!(p.op.inputs[0], hot_producer.op.output);
+        }
+    }
+
+    #[test]
+    fn small_local_fanout_stays_untreed() {
+        let region = OperandRegion::new(vec![0], 1);
+        let mut c = Circuit::new(1);
+        let warm = c.not(0);
+        for _ in 0..5 {
+            let _ = c.not(warm); // 5 < LOCAL_TREE_MIN_USES
+        }
+        let chain = vec![("warm".to_string(), c)];
+        let placement = place_chain(&chain, &region, 8, true).unwrap();
+        assert!(
+            placement.circuits[0].ops.iter().all(|p| !p.is_copy),
+            "below-threshold local fanout must not pay for replicas"
+        );
     }
 
     #[test]

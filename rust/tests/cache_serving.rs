@@ -10,13 +10,14 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use multpim::cache::ProgramCache;
+use multpim::cache::{CacheContext, ProgramCache};
 use multpim::coordinator::{
-    Coordinator, DeploymentSpec, EngineConfig, FloatVecDeployment, MatMulDeployment,
-    MatVecDeployment, MultiplyDeployment,
+    ChainEngine, Coordinator, DeploymentSpec, EngineConfig, FloatVecDeployment, MatMulDeployment,
+    MatVecDeployment, MultiplyDeployment, MultiplyEngine,
 };
 use multpim::device::{DeviceConfig, Topology};
 use multpim::fixedpoint::inner_product_mod;
+use multpim::schedule::ScheduleMode;
 use multpim::util::SplitMix64;
 
 /// A process- and test-unique scratch cache directory.
@@ -203,6 +204,109 @@ fn changed_geometry_is_a_miss_not_a_stale_hit() {
 
     let files = std::fs::read_dir(&dir).unwrap().count();
     assert_eq!(files, 8, "both geometries' artifacts coexist");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scheduled fixed-point artifacts round-trip the disk cache: a warm
+/// (cache-hit) engine must deploy the *same cycle-for-cycle program* as
+/// the cold compile that stored it — for the scheduled multiply and the
+/// scheduled §VI chain — and serve identical bits.
+#[test]
+fn scheduled_fixed_artifacts_round_trip_bit_identically() {
+    let dir = scratch_dir("cache-sched-roundtrip");
+    let cache = Arc::new(ProgramCache::new(&dir));
+    let ctx = CacheContext::new(Arc::clone(&cache), &Topology::flat(4));
+
+    // Multiply: cold compiles through the scheduled default and stores.
+    let cold = MultiplyEngine::with_cache(EngineConfig::MultPim, 8, 16, Some(&ctx)).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.misses, s.stores), (1, 1), "cold scheduled multiply: miss + store");
+    let warm = MultiplyEngine::with_cache(EngineConfig::MultPim, 8, 16, Some(&ctx)).unwrap();
+    assert_eq!(cache.stats().hits, 1, "warm scheduled multiply must hit");
+    assert_eq!(
+        cold.multiplier().program().cycles,
+        warm.multiplier().program().cycles,
+        "warm deploys the stored schedule cycle for cycle"
+    );
+    let mut rng = SplitMix64::new(0x5EED);
+    let pairs: Vec<(u64, u64)> = (0..16).map(|_| (rng.bits(8), rng.bits(8))).collect();
+    assert_eq!(
+        cold.shard().execute(&pairs),
+        warm.shard().execute(&pairs),
+        "warm and cold scheduled multiply serve identical bits"
+    );
+
+    // Chain: same contract for the scheduled §VI engine.
+    let cold_mv = ChainEngine::with_cache(8, 4, 8, Some(&ctx), "matvec").unwrap();
+    let warm_mv = ChainEngine::with_cache(8, 4, 8, Some(&ctx), "matvec").unwrap();
+    assert_eq!(cache.stats().hits, 2, "warm scheduled chain must hit");
+    assert_eq!(warm_mv.cycles(), cold_mv.cycles());
+    let rows: Vec<Vec<u64>> = (0..8).map(|_| (0..4).map(|_| rng.bits(8)).collect()).collect();
+    let x: Vec<u64> = (0..4).map(|_| rng.bits(8)).collect();
+    assert_eq!(
+        cold_mv.shard().execute(&rows, &x),
+        warm_mv.shard().execute(&rows, &x),
+        "warm and cold scheduled chain serve identical bits"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A handwritten-era cache key (the legacy shape, no schedule-mode word)
+/// must never satisfy a scheduled request: the scheduled launch is a
+/// clean *miss* (no stale hit, no invalidation) that compiles and stores
+/// under its own key, and both artifacts coexist.
+#[test]
+fn handwritten_era_key_misses_cleanly_for_scheduled_requests() {
+    let dir = scratch_dir("cache-mode-isolation");
+    let cache = Arc::new(ProgramCache::new(&dir));
+    let ctx = CacheContext::new(Arc::clone(&cache), &Topology::flat(4));
+
+    // A handwritten-era store: legacy key shape, hand-laid program.
+    let oracle = MultiplyEngine::with_cache_mode(
+        EngineConfig::MultPim,
+        8,
+        16,
+        Some(&ctx),
+        ScheduleMode::Handwritten,
+    )
+    .unwrap();
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.stores), (0, 1, 1));
+
+    // The scheduled default must key elsewhere: a miss, never a stale
+    // hit against the handwritten artifact (and never an invalidation —
+    // the key simply differs).
+    let scheduled = MultiplyEngine::with_cache(EngineConfig::MultPim, 8, 16, Some(&ctx)).unwrap();
+    let s = cache.stats();
+    assert_eq!(
+        (s.hits, s.misses, s.invalidations, s.stores),
+        (0, 2, 0, 2),
+        "scheduled request misses the handwritten-era key cleanly"
+    );
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2, "both artifacts coexist");
+
+    // Warm launches hit their own keys and both serve exact products.
+    let warm_oracle = MultiplyEngine::with_cache_mode(
+        EngineConfig::MultPim,
+        8,
+        16,
+        Some(&ctx),
+        ScheduleMode::Handwritten,
+    )
+    .unwrap();
+    let warm_scheduled =
+        MultiplyEngine::with_cache(EngineConfig::MultPim, 8, 16, Some(&ctx)).unwrap();
+    assert_eq!(cache.stats().hits, 2, "each mode hits its own artifact");
+    assert_eq!(
+        warm_oracle.multiplier().program().cycles,
+        oracle.multiplier().program().cycles
+    );
+    let mut rng = SplitMix64::new(0x15_0A7E);
+    let pairs: Vec<(u64, u64)> = (0..16).map(|_| (rng.bits(8), rng.bits(8))).collect();
+    let want: Vec<u64> = pairs.iter().map(|&(a, b)| a * b).collect();
+    assert_eq!(warm_oracle.shard().execute(&pairs), want);
+    assert_eq!(warm_scheduled.shard().execute(&pairs), want);
+    assert_eq!(scheduled.shard().execute(&pairs), want);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

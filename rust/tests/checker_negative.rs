@@ -4,7 +4,9 @@
 //! pin the error contract the serving layer's launch-time validation
 //! relies on.
 
-use multpim::isa::{Col, Gate, GateOp, GateSet, PartitionMap, ProgramBuilder};
+use multpim::algorithms::schedmul;
+use multpim::isa::{Col, Cycle, Gate, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
+use multpim::schedule::ScheduleMode;
 use multpim::sim::{validate, validate_chain};
 use multpim::Error;
 
@@ -137,6 +139,84 @@ fn no_init_gate_onto_unknown_cell_is_illegal_op() {
         Error::IllegalOp { cycle, ref reason } => {
             assert_eq!(cycle, 0);
             assert!(reason.contains("undefined column 3"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// A *scheduled* program with a tampered copy tree — one replica gate
+/// duplicated into a partition interval already occupied that cycle —
+/// must be rejected by the checker with `IllegalOp` naming the overlap.
+/// This is the invariant the placement pass's §III-A copy-tree insertion
+/// relies on: one gate per partition interval per cycle.
+#[test]
+fn tampered_copy_tree_interval_overlap_is_rejected() {
+    let chain = schedmul::mult_chain(8, ScheduleMode::Partitioned).unwrap();
+    let mut program = chain.programs()[0].clone();
+    let input_cols: Vec<Col> = (0..16).collect();
+    validate(&program, &input_cols).expect("the untampered schedule is legal");
+    // Duplicate the first gate of the first compute cycle: two gates now
+    // claim the same partition interval in the same cycle.
+    let cycle = program
+        .cycles
+        .iter_mut()
+        .find_map(|c| match c {
+            Cycle::Gates(ops) if !ops.is_empty() => Some(ops),
+            _ => None,
+        })
+        .expect("a scheduled multiply has compute cycles");
+    let dup = cycle[0].clone();
+    cycle.push(dup);
+    match validate(&program, &input_cols).unwrap_err() {
+        Error::IllegalOp { ref reason, .. } => {
+            assert!(reason.contains("overlap"), "{reason}");
+        }
+        other => panic!("expected IllegalOp, got {other:?}"),
+    }
+}
+
+/// A *scheduled chain* with a dependent gate reordered ahead of its
+/// producer — the corruption a broken slack-compaction pass would emit —
+/// must be rejected by `validate_chain` with `IllegalOp`: hoisted before
+/// the cycle that defines its operands (and initializes its output), the
+/// gate violates a MAGIC precondition.
+#[test]
+fn reordered_dependent_gate_in_scheduled_chain_is_rejected() {
+    let chain = schedmul::matvec_chain(4, 2, ScheduleMode::Partitioned).unwrap();
+    let mut programs: Vec<Program> = chain.programs().to_vec();
+    let input_cols: Vec<Col> = (0..chain.width()).collect();
+    validate_chain(&programs, &input_cols).expect("the untampered chain is legal");
+    // Find a gate that reads a work-lane column (produced inside the
+    // program, not staged from outside) and hoist it to the very first
+    // cycle — before the producer ran and before any init defined it.
+    let operand_width = 2 * 2 * 4; // 2 words per element, 2 elements, 4 bits
+    let program = &mut programs[0];
+    let (cyc_idx, op_idx) = program
+        .cycles
+        .iter()
+        .enumerate()
+        .find_map(|(i, c)| match c {
+            Cycle::Gates(ops) => ops
+                .iter()
+                .position(|op| {
+                    op.inputs[..op.gate.arity()].iter().any(|&c| c >= operand_width)
+                })
+                .map(|j| (i, j)),
+            _ => None,
+        })
+        .expect("the schedule has gates consuming produced values");
+    let moved = match &mut program.cycles[cyc_idx] {
+        Cycle::Gates(ops) => ops.remove(op_idx),
+        _ => unreachable!(),
+    };
+    program.cycles.insert(0, Cycle::Gates(vec![moved]));
+    match validate_chain(&programs, &input_cols).unwrap_err() {
+        Error::IllegalOp { cycle, ref reason } => {
+            assert_eq!(cycle, 0, "the hoisted gate is the offender");
+            assert!(
+                reason.contains("undefined column") || reason.contains("not initialized to 1"),
+                "{reason}"
+            );
         }
         other => panic!("expected IllegalOp, got {other:?}"),
     }

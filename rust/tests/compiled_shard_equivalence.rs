@@ -5,14 +5,14 @@
 //! tail-mask edge of the 64-row word packing — including after the shard's
 //! crossbar has been reused by earlier batches.
 
-use multpim::algorithms::multpim::MultPim;
 use multpim::algorithms::Multiplier;
 use multpim::coordinator::{EngineConfig, MultiplyEngine};
 use multpim::sim::Simulator;
 use multpim::util::SplitMix64;
 
-/// Reference path: fresh crossbar, per-bit staging, interpreted run.
-fn interpreted_reference(mult: &MultPim, rows: usize, pairs: &[(u64, u64)]) -> Simulator {
+/// Reference path: fresh crossbar, per-bit staging, interpreted run of
+/// the *same* program the engine deployed (scheduled by default).
+fn interpreted_reference(mult: &dyn Multiplier, rows: usize, pairs: &[(u64, u64)]) -> Simulator {
     let layout = mult.layout();
     let mut sim = Simulator::new_single_row_batch(mult.program(), rows);
     for (row, &(a, b)) in pairs.iter().enumerate() {
@@ -29,22 +29,21 @@ fn interpreted_reference(mult: &MultPim, rows: usize, pairs: &[(u64, u64)]) -> S
 fn shard_path_matches_interpreter_at_tail_mask_edges() {
     for &rows in &[1usize, 63, 64, 65, 4096] {
         let n = 32u32;
-        let mult = MultPim::new(n);
-        let layout = mult.layout();
-        let cols = mult.program().partitions.num_cols();
         let engine = MultiplyEngine::new(EngineConfig::MultPim, n, rows).unwrap();
+        let mult = engine.multiplier();
+        let cols = mult.program().partitions.num_cols();
         let mut shard = engine.shard();
         let mut rng = SplitMix64::new(0xE0 + rows as u64);
 
         // Batch 1 fills every row: full-state agreement, every cell.
         let pairs: Vec<(u64, u64)> = (0..rows).map(|_| (rng.bits(n), rng.bits(n))).collect();
-        let reference = interpreted_reference(&mult, rows, &pairs);
+        let reference = interpreted_reference(mult, rows, &pairs);
         let products = shard.execute(&pairs);
         for (row, &(a, b)) in pairs.iter().enumerate() {
             assert_eq!(products[row], a * b, "rows={rows} row={row}");
             assert_eq!(
                 products[row],
-                reference.read_output(row, &layout),
+                mult.read_result(&reference, row),
                 "rows={rows} row={row}"
             );
         }
@@ -64,7 +63,7 @@ fn shard_path_matches_interpreter_at_tail_mask_edges() {
         let occupied = rows / 3 + 1;
         let pairs2: Vec<(u64, u64)> =
             (0..occupied).map(|_| (rng.bits(n), rng.bits(n))).collect();
-        let reference2 = interpreted_reference(&mult, rows, &pairs2);
+        let reference2 = interpreted_reference(mult, rows, &pairs2);
         let products2 = shard.execute(&pairs2);
         for (row, &(a, b)) in pairs2.iter().enumerate() {
             assert_eq!(products2[row], a * b, "reuse rows={rows} row={row}");

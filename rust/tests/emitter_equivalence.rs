@@ -1,0 +1,171 @@
+//! The differential wall between the two program backends: every
+//! fixed-point engine that now compiles through the unified `schedule/`
+//! IR path by default must agree **bit-for-bit** with the hand-laid
+//! emitters it replaced (`ScheduleMode::Handwritten`, the oracle the
+//! paper's Table I/III numbers are pinned on) — across the width sweep,
+//! on seeded fuzz operands, and through the serving tile path.
+//!
+//! Seeds are derived deterministically from `(subject, width)` and
+//! printed in every assertion message, so a failure reproduces with no
+//! further information (same scheme as `multiplier_fuzz.rs`).
+
+use multpim::algorithms::matvec::MultPimMatVec;
+use multpim::algorithms::multpim::MultPim;
+use multpim::algorithms::multpim_area::MultPimArea;
+use multpim::algorithms::schedmul::{self, MulFlavor, ScheduledMul};
+use multpim::algorithms::Multiplier;
+use multpim::coordinator::ChainEngine;
+use multpim::schedule::ScheduleMode;
+use multpim::util::SplitMix64;
+
+/// Widths under differential fuzz: the power-of-two sweep up to the full
+/// 32-bit serving width.
+const WIDTHS: &[u32] = &[2, 4, 8, 16, 32];
+
+/// Random cases per (subject, width) — batched row-parallel, one program
+/// execution per backend.
+const RANDOM_CASES: usize = 128;
+
+/// Stable per-(subject, width) seed so every failure message reproduces.
+fn seed_for(subject_id: u64, n: u32) -> u64 {
+    0x5CED_F00D_0000 ^ (subject_id << 8) ^ n as u64
+}
+
+fn max_operand(n: u32) -> u64 {
+    (1u64 << n) - 1
+}
+
+/// Edge pairs plus the seeded random sweep.
+fn operand_pairs(n: u32, seed: u64) -> Vec<(u64, u64)> {
+    let max = max_operand(n);
+    let mid = max >> (n / 2);
+    let mut pairs = vec![
+        (0, 0),
+        (0, max),
+        (max, 0),
+        (1, max),
+        (max, max),
+        (mid, mid),
+        (mid.wrapping_add(1) & max, max),
+    ];
+    let mut rng = SplitMix64::new(seed);
+    pairs.extend((0..RANDOM_CASES).map(|_| (rng.bits(n), rng.bits(n))));
+    pairs
+}
+
+/// Scheduled and handwritten multipliers over one shared operand batch:
+/// identical products, case by case.
+fn assert_multipliers_agree(
+    label: &str,
+    scheduled: &dyn Multiplier,
+    oracle: &dyn Multiplier,
+    n: u32,
+    seed: u64,
+) {
+    let pairs = operand_pairs(n, seed);
+    let got = scheduled
+        .multiply_batch(&pairs)
+        .unwrap_or_else(|e| panic!("{label} N={n} seed={seed:#x}: scheduled batch rejected: {e}"));
+    let want = oracle
+        .multiply_batch(&pairs)
+        .unwrap_or_else(|e| panic!("{label} N={n} seed={seed:#x}: oracle batch rejected: {e}"));
+    for (i, (&(a, b), (&g, &w))) in pairs.iter().zip(got.iter().zip(&want)).enumerate() {
+        assert_eq!(
+            g, w,
+            "{label} N={n} seed={seed:#x} case {i}: {a} * {b} — scheduled {g} != handwritten {w}"
+        );
+    }
+}
+
+/// The latency config: scheduled carry-select CSAS vs hand-laid MultPIM
+/// (Algorithm 1), both modes of the scheduler.
+#[test]
+fn scheduled_latency_multiplier_matches_handwritten() {
+    for &n in WIDTHS {
+        let oracle = MultPim::new(n);
+        for mode in [ScheduleMode::Partitioned, ScheduleMode::Serial] {
+            let scheduled = ScheduledMul::build(MulFlavor::Latency, n, mode).unwrap();
+            assert_multipliers_agree(
+                &format!("MultPIM vs scheduled({mode:?})"),
+                &scheduled,
+                &oracle,
+                n,
+                seed_for(1, n),
+            );
+        }
+    }
+}
+
+/// The area config: scheduled plain-ripple CSAS vs hand-laid
+/// MultPIM-Area (the extra-reuse variant with scattered outputs).
+#[test]
+fn scheduled_area_multiplier_matches_handwritten() {
+    for &n in WIDTHS {
+        let oracle = MultPimArea::new(n);
+        let scheduled = ScheduledMul::build(MulFlavor::Area, n, ScheduleMode::Partitioned).unwrap();
+        assert_multipliers_agree(
+            "MultPIM-Area vs scheduled",
+            &scheduled,
+            &oracle,
+            n,
+            seed_for(2, n),
+        );
+    }
+}
+
+/// The §VI fused MAC chain: scheduled chain vs hand-laid carry-save
+/// absorption, whole matvec results compared element-wise.
+#[test]
+fn scheduled_matvec_matches_handwritten() {
+    for &n in WIDTHS {
+        let n_elems = 3u32;
+        let seed = seed_for(3, n);
+        let mut rng = SplitMix64::new(seed);
+        let oracle = MultPimMatVec::new(n, n_elems);
+        let scheduled =
+            schedmul::build_scheduled_matvec(n, n_elems, ScheduleMode::Partitioned).unwrap();
+        let mut rows: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..n_elems).map(|_| rng.bits(n)).collect())
+            .collect();
+        // All-max rows force the 2N-bit accumulator wrap on both paths.
+        rows.push(vec![max_operand(n); n_elems as usize]);
+        let x: Vec<u64> = (0..n_elems).map(|_| rng.bits(n)).collect();
+        let got = scheduled.compute(&rows, &x).unwrap();
+        let want = oracle.compute(&rows, &x).unwrap();
+        for (r, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g, w,
+                "matvec N={n} n={n_elems} seed={seed:#x} row {r}: scheduled {g} != handwritten {w}"
+            );
+        }
+    }
+}
+
+/// Served-vs-direct for the scheduled fixed chain at every tile
+/// boundary: a shard's resident crossbar, re-tiled row-wise over a tall
+/// matrix, must reproduce the direct whole-matrix compute — single
+/// partial tile, just-under, exactly-full, one-row spill, multi-tile.
+#[test]
+fn served_scheduled_chain_matches_direct_at_tile_boundaries() {
+    const SHARD_ROWS: usize = 8;
+    let n = 8u32;
+    let n_elems = 4u32;
+    let seed = seed_for(4, n);
+    let mut rng = SplitMix64::new(seed);
+    let engine = ChainEngine::new(n, n_elems, SHARD_ROWS).unwrap();
+    let mut shard = engine.shard();
+    for m in [1usize, SHARD_ROWS - 1, SHARD_ROWS, SHARD_ROWS + 1, 3 * SHARD_ROWS] {
+        let rows: Vec<Vec<u64>> = (0..m)
+            .map(|_| (0..n_elems).map(|_| rng.bits(n)).collect())
+            .collect();
+        let x: Vec<u64> = (0..n_elems).map(|_| rng.bits(n)).collect();
+        let direct = engine.compute(&rows, &x).unwrap();
+        // Tile the matrix through the one resident shard, as the serving
+        // pool does, and splice the per-tile results back together.
+        let mut served = Vec::with_capacity(m);
+        for tile in rows.chunks(SHARD_ROWS) {
+            served.extend(shard.execute(tile, &x));
+        }
+        assert_eq!(served, direct, "m={m} seed={seed:#x}: served tiles vs direct compute");
+    }
+}

@@ -102,6 +102,23 @@ fn random_circuit(
         readable.push(out);
         outs.push(out);
     }
+    // Fan-out burst: the uniform picker above reuses a given wire only
+    // by coincidence (rarely 3+ consumers), so the placement pass's
+    // high-fanout copy-tree insertion went unexercised. Hammer one
+    // produced wire with enough consumers to cross both copy-tree
+    // thresholds (remote replicas at 5 uses, local trees at 6).
+    let hot = if outs.is_empty() {
+        readable[(rng.next_u64() % readable.len() as u64) as usize]
+    } else {
+        outs[(rng.next_u64() % outs.len() as u64) as usize]
+    };
+    let burst = 6 + (rng.next_u64() % 5) as usize;
+    for _ in 0..burst {
+        let other = readable[(rng.next_u64() % readable.len() as u64) as usize];
+        let out = c.emit(Gate::Nor2, &[hot, other]);
+        readable.push(out);
+        outs.push(out);
+    }
     (c, outs)
 }
 
@@ -198,6 +215,32 @@ fn random_dags_agree_across_backends() {
             .unwrap_or_else(|e| panic!("case {case}: serial chain rejected: {e}"));
         validate_chain(par.programs(), &inputs)
             .unwrap_or_else(|e| panic!("case {case}: scheduled chain rejected: {e}"));
+        // Every compiled chain reports coherent occupancy accounting —
+        // the same `ScheduleStats` the CI budget gate trusts.
+        for (chain, backend) in [(&serial, "serial"), (&par, "partitioned")] {
+            let s = chain.stats();
+            assert_eq!(
+                s.programs,
+                chain.per_program_stats().len(),
+                "case {case} {backend}: per-program stats cover every program"
+            );
+            assert!(s.gates > 0, "case {case} {backend}: gate count reported");
+            assert!(
+                s.busy_partition_cycles > 0,
+                "case {case} {backend}: busy-partition accounting reported"
+            );
+            assert!(
+                s.cycles >= s.critical_path_cycles,
+                "case {case} {backend}: {} cycles < critical path {}",
+                s.cycles,
+                s.critical_path_cycles
+            );
+            let occ = s.occupancy();
+            assert!(
+                occ > 0.0 && occ <= 1.0,
+                "case {case} {backend}: occupancy {occ} outside (0, 1]"
+            );
+        }
         assert_chains_agree(&serial, &par, &per_circuit_wires, operand_width, &mut rng);
     }
 }
