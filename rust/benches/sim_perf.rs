@@ -10,27 +10,33 @@
 //! matvec composition, topology-aware placement, the double-buffered
 //! staging overlap model, the compiled-program disk cache (cold vs warm
 //! launch of the FP32x8 float chain), and the bit-transposed wire format
-//! (row-major vs plane staging for the matvec tenant). These are the
-//! numbers tracked by EXPERIMENTS.md §Perf, §Matvec-Serving, §GEMM,
-//! §Topology, §Overlap, §Cold-start, and §Wire-format; the acceptance
-//! bars are >= 1.5x products/sec for the multiply shard path at N=32,
+//! (row-major vs plane staging for the matvec tenant), and the
+//! **observability overhead gate**: the same served burst with request
+//! tracing off (the default) vs on. These are the numbers tracked by
+//! EXPERIMENTS.md §Perf, §Matvec-Serving, §GEMM, §Topology, §Overlap,
+//! §Cold-start, §Wire-format, and §Observability; the acceptance bars
+//! are >= 1.5x products/sec for the multiply shard path at N=32,
 //! 4096 rows, >= 1.5x for served matvec at N=16, 64x64, >= 1.5x for
 //! served GEMM at N=16, 64x64x64, >= 2x fewer cross-channel restage
 //! words under locality placement, >= 1.3x modeled throughput from
 //! overlapped staging with bit-identical results, >= 10x faster warm
-//! (cache-hit) launches than cold compiles for FP32x8, and >= 1.5x
-//! fewer modeled staging words on the bit-transposed matvec wire.
+//! (cache-hit) launches than cold compiles for FP32x8, >= 1.5x
+//! fewer modeled staging words on the bit-transposed matvec wire, and
+//! <= 2% modeled-cycle overhead from the tracing hook (measured 0%:
+//! the modeled counters are asserted bit-identical off vs on).
 //!
 //! Sections run individually via `cargo bench --bench sim_perf -- <name>`
 //! where `<name>` is one of `gates`, `serving`, `matvec`, `gemm`,
-//! `topology`, `overlap`, `coldstart`, `wire`; with no argument every
-//! section runs. Each run also emits `BENCH_sim_perf.json` (hand-rolled
-//! JSON, no serde) holding every executed section's headline numbers so
-//! the perf trajectory is machine-trackable across PRs.
+//! `topology`, `overlap`, `coldstart`, `wire`, `obs`; with no argument
+//! every section runs. Each run also emits `BENCH_sim_perf.json`
+//! (hand-rolled JSON, no serde) holding every executed section's
+//! headline numbers — plus, from the `obs` section, the full
+//! `Metrics::to_json` snapshot — so the perf trajectory is
+//! machine-trackable across PRs.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use multpim::algorithms::matmul::{plan_tiles, MultPimMatMul};
 use multpim::algorithms::multpim::MultPim;
@@ -38,11 +44,13 @@ use multpim::algorithms::Multiplier;
 use multpim::cache::{CacheContext, ProgramCache};
 use multpim::coordinator::{
     staging_cost, ChainEngine, Coordinator, DeploymentSpec, EngineConfig, FloatVecEngine,
-    MatMulDeployment, MatVecDeployment, MultiplyEngine, StageKind, WireFormat, WorkloadKey,
+    MatMulDeployment, MatVecDeployment, MultiplyDeployment, MultiplyEngine, StageKind,
+    WireFormat, WorkloadKey,
 };
 use multpim::crossbar::PlaneMatrix;
 use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::inner_product_mod;
+use multpim::obs::{TraceSink, DEFAULT_RING_CAPACITY};
 use multpim::runtime::trace::program_to_trace;
 use multpim::sim::Simulator;
 use multpim::util::{SplitMix64, Stopwatch};
@@ -83,6 +91,9 @@ fn main() {
     if run_section("wire") {
         reports.push(wire_format());
     }
+    if run_section("obs") {
+        reports.push(obs_overhead());
+    }
     write_bench_json(&reports);
 }
 
@@ -90,15 +101,22 @@ fn main() {
 struct SectionReport {
     name: &'static str,
     fields: Vec<(String, f64)>,
+    /// Pre-rendered single-line JSON values spliced in verbatim after the
+    /// numeric fields (the `obs` section embeds `Metrics::to_json` here).
+    raw: Vec<(String, String)>,
 }
 
 impl SectionReport {
     fn new(name: &'static str) -> Self {
-        Self { name, fields: Vec::new() }
+        Self { name, fields: Vec::new(), raw: Vec::new() }
     }
 
     fn push(&mut self, key: impl Into<String>, value: f64) {
         self.fields.push((key.into(), value));
+    }
+
+    fn push_raw(&mut self, key: impl Into<String>, json: String) {
+        self.raw.push((key.into(), json));
     }
 }
 
@@ -118,9 +136,17 @@ fn write_bench_json(reports: &[SectionReport]) {
     let mut out = String::from("{\n  \"bench\": \"sim_perf\",\n  \"sections\": {\n");
     for (i, r) in reports.iter().enumerate() {
         out.push_str(&format!("    \"{}\": {{\n", r.name));
-        for (j, (k, v)) in r.fields.iter().enumerate() {
-            let sep = if j + 1 < r.fields.len() { "," } else { "" };
+        let total = r.fields.len() + r.raw.len();
+        let mut emitted = 0usize;
+        for (k, v) in &r.fields {
+            emitted += 1;
+            let sep = if emitted < total { "," } else { "" };
             out.push_str(&format!("      \"{k}\": {}{sep}\n", num(*v)));
+        }
+        for (k, json) in &r.raw {
+            emitted += 1;
+            let sep = if emitted < total { "," } else { "" };
+            out.push_str(&format!("      \"{k}\": {}{sep}\n", json.trim_end()));
         }
         let sep = if i + 1 < reports.len() { "," } else { "" };
         out.push_str(&format!("    }}{sep}\n"));
@@ -756,5 +782,152 @@ fn wire_format() -> SectionReport {
     rep.push("staged_words_rows", rows_staged as f64);
     rep.push("staged_words_transposed", planes_staged as f64);
     rep.push("staged_words_ratio", staged_ratio);
+    rep
+}
+
+/// Observability overhead: the same served mixed burst (multiply +
+/// matvec, single-shard pools, sequential clients so every modeled
+/// counter is deterministic) with request tracing off — the production
+/// default — vs on. The numbers tracked by EXPERIMENTS.md
+/// §Observability; the acceptance bar is <= 2% modeled-cycle overhead
+/// from the tracing hook, enforced the strong way: every modeled
+/// counter must be **bit-identical** between the two runs (the hook is
+/// one `Option` branch per tile when disabled, and tracing never feeds
+/// back into the model). The trace-off run's `Metrics::to_json`
+/// snapshot is embedded in `BENCH_sim_perf.json` verbatim.
+fn obs_overhead() -> SectionReport {
+    println!("\n=== observability: request tracing off (default) vs on ===");
+    let mut rep = SectionReport::new("obs");
+    let (n, elems, m) = (16u32, 8u32, 64usize);
+    let (mul_requests, mv_requests) = (64usize, 4usize);
+    let mut rng = SplitMix64::new(0x0B5E);
+    let mul_pairs: Vec<(u64, u64)> =
+        (0..mul_requests).map(|_| (rng.bits(32), rng.bits(32))).collect();
+    let mv_reqs: Vec<(Vec<Vec<u64>>, Vec<u64>)> = (0..mv_requests)
+        .map(|_| {
+            let rows: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..elems).map(|_| rng.bits(n)).collect()).collect();
+            let x: Vec<u64> = (0..elems).map(|_| rng.bits(n)).collect();
+            (rows, x)
+        })
+        .collect();
+
+    let mut outputs: Vec<Vec<Vec<u64>>> = Vec::new();
+    let mut counter_sets: Vec<Vec<(&str, u64)>> = Vec::new();
+    let mut metrics_json = None;
+    for traced in [false, true] {
+        let device = DeviceConfig::flat(2);
+        let device = if traced {
+            device.with_trace(TraceSink::new(DEFAULT_RING_CAPACITY))
+        } else {
+            device
+        };
+        let coord = Coordinator::launch_on(
+            device,
+            &[MultiplyDeployment {
+                n_bits: 32,
+                rows: 64,
+                max_wait: Duration::from_millis(1),
+                config: EngineConfig::MultPim,
+                spec: DeploymentSpec::new(1),
+            }],
+            &[MatVecDeployment {
+                n_bits: n,
+                n_elems: elems,
+                shard_rows: m,
+                spec: DeploymentSpec::new(1),
+            }],
+            &[],
+            &[],
+        )
+        .unwrap();
+        for &(a, b) in &mul_pairs {
+            assert_eq!(coord.multiply(32, a, b).unwrap(), a * b);
+        }
+        let outs: Vec<Vec<u64>> = mv_reqs
+            .iter()
+            .map(|(rows, x)| coord.matvec(n, rows.clone(), x.clone()).unwrap())
+            .collect();
+
+        let mtr = coord.metrics();
+        let wl = mtr
+            .workload(WorkloadKey::MatVec { n_bits: n, n_elems: elems })
+            .expect("matvec counters registered at launch");
+        let ld = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
+        let snap: Vec<(&str, u64)> = vec![
+            ("mul_products", ld(&mtr.products)),
+            ("mul_batches", ld(&mtr.batches)),
+            ("mul_sim_cycles", ld(&mtr.sim_cycles)),
+            ("mv_requests", ld(&wl.requests)),
+            ("mv_tiles", ld(&wl.tiles)),
+            ("mv_units", ld(&wl.units)),
+            ("mv_sim_cycles", ld(&wl.sim_cycles)),
+            ("mv_staged_words", ld(&wl.staged_words)),
+            ("mv_restage_words", ld(&wl.restage_words)),
+            ("mv_stage_cycles", ld(&wl.stage_cycles)),
+            ("mv_stall_cycles", ld(&wl.stall_cycles)),
+            ("mv_hidden_words", ld(&wl.hidden_words)),
+            ("mv_link_wait_cycles", ld(&wl.link_wait_cycles)),
+        ];
+        let modeled: u64 = ld(&wl.sim_cycles) + ld(&wl.stall_cycles);
+        println!(
+            "traced={:<3} modeled_cycles={modeled:<8} mul_batches={} mv_tiles={} staged_words={}",
+            if traced { "on" } else { "off" },
+            ld(&mtr.batches),
+            ld(&wl.tiles),
+            ld(&wl.staged_words),
+        );
+        if !traced {
+            metrics_json = Some(mtr.to_json());
+        }
+        let sink = coord.trace().cloned();
+        coord.shutdown();
+        match (traced, sink) {
+            (false, sink) => assert!(sink.is_none(), "tracing must default off"),
+            (true, sink) => {
+                // Workers are joined, so every ring is final: no drops,
+                // and every admitted request closed its span.
+                let sink = sink.expect("trace sink attached");
+                let events = sink.events().len();
+                let spans = sink.request_spans().len();
+                assert_eq!(sink.dropped(), 0, "ring must not overflow on this burst");
+                assert_eq!(
+                    spans,
+                    mul_requests + mv_requests,
+                    "every admitted request must have a complete admit -> reply span"
+                );
+                println!("traced=on  {events} events, {spans} complete request spans, 0 dropped");
+                rep.push("trace_events", events as f64);
+                rep.push("trace_request_spans", spans as f64);
+            }
+        }
+        outputs.push(outs);
+        counter_sets.push(snap);
+    }
+
+    assert_eq!(outputs[0], outputs[1], "tracing must never change served results");
+    assert_eq!(
+        counter_sets[0], counter_sets[1],
+        "tracing off vs on must keep every modeled counter bit-identical"
+    );
+    let modeled = |set: &[(&str, u64)]| {
+        set.iter()
+            .filter(|(k, _)| *k == "mv_sim_cycles" || *k == "mv_stall_cycles")
+            .map(|&(_, v)| v)
+            .sum::<u64>()
+    };
+    let (off_cycles, on_cycles) = (modeled(&counter_sets[0]), modeled(&counter_sets[1]));
+    let overhead_pct = 100.0 * (on_cycles as f64 - off_cycles as f64) / off_cycles as f64;
+    println!(
+        "\ntracing-hook modeled-cycle overhead: {overhead_pct:.2}% (acceptance bar: <= 2%)"
+    );
+    assert!(
+        on_cycles * 50 <= off_cycles * 51,
+        "tracing hook must cost <= 2% modeled cycles: off={off_cycles} on={on_cycles}"
+    );
+    rep.push("modeled_cycles_trace_off", off_cycles as f64);
+    rep.push("modeled_cycles_trace_on", on_cycles as f64);
+    rep.push("overhead_pct", overhead_pct);
+    rep.push_raw("metrics", metrics_json.expect("trace-off run captured"));
     rep
 }

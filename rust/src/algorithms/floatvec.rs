@@ -430,6 +430,13 @@ impl MultPimFloatVec {
         self.chain.per_program_stats()
     }
 
+    /// The cycle-level schedule timeline grid — what
+    /// `multpim schedule-stats --timeline` exports. Present whenever the
+    /// engine was built in [`ScheduleMode::Partitioned`] (the default).
+    pub fn timeline(&self) -> Option<&crate::schedule::ScheduleTimeline> {
+        self.chain.timeline()
+    }
+
     /// The program chain: one fused float multiply-accumulate program per
     /// vector element, executed back-to-back over one crossbar; lower
     /// with [`CompiledPipeline`](crate::sim::CompiledPipeline) for the

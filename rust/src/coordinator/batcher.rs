@@ -17,7 +17,10 @@ use std::time::{Duration, Instant};
 pub struct Pending<T> {
     /// The payload (e.g. an operand pair).
     pub item: T,
-    /// Ticket for response routing.
+    /// Ticket for response routing. Tickets are drawn from the
+    /// coordinator's global admission counter, so they double as the
+    /// request's trace **span id**: every [`crate::obs::Phase`] event a
+    /// batched item generates downstream carries this value.
     pub ticket: u64,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,

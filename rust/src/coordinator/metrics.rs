@@ -12,7 +12,9 @@
 
 use super::pool::{TileCost, WorkloadKey};
 use crate::device::{BankPath, CrossbarPath, RouteDecision};
+use crate::obs::{chrome, Hist};
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -100,6 +102,13 @@ pub struct WorkloadCounters {
     /// Operand words whose staging was hidden under the previous tile's
     /// compute window (zero with overlap off).
     pub hidden_words: AtomicU64,
+    /// Distribution of per-unit queue waits (nanoseconds): each executed
+    /// tile records its mean per-unit wait once. The sum counters above
+    /// stay authoritative for averages; this histogram adds the tail —
+    /// p50/p95/p99 in the snapshot and `Metrics::to_json`.
+    pub queue_wait_hist: Hist,
+    /// Distribution of wall-clock tile execution times (nanoseconds).
+    pub tile_wall_hist: Hist,
     /// Per-shard occupancy, keyed by shard index within the pool.
     shards: Mutex<BTreeMap<usize, ShardStats>>,
     /// The crossbar slots this workload's pool was placed on, in shard
@@ -317,6 +326,8 @@ impl Metrics {
         counters.stage_cycles.fetch_add(staging.stage_cycles, Ordering::Relaxed);
         counters.stall_cycles.fetch_add(staging.stall_cycles, Ordering::Relaxed);
         counters.hidden_words.fetch_add(staging.hidden_words, Ordering::Relaxed);
+        counters.queue_wait_hist.record(wait_ns / cost.units.max(1));
+        counters.tile_wall_hist.record(wall.as_nanos() as u64);
         let mut shards = counters.shards.lock().unwrap();
         let stats = shards.entry(shard_idx).or_default();
         stats.tiles += 1;
@@ -419,6 +430,18 @@ impl Metrics {
                     wl.link_wait_cycles.load(Ordering::Relaxed),
                 ));
             }
+            if tiles > 0 {
+                out.push_str(&format!(
+                    "\n    latency[{key}] queue_p50={}ns queue_p95={}ns queue_p99={}ns \
+                     tile_p50={}ns tile_p95={}ns tile_p99={}ns",
+                    wl.queue_wait_hist.p50(),
+                    wl.queue_wait_hist.p95(),
+                    wl.queue_wait_hist.p99(),
+                    wl.tile_wall_hist.p50(),
+                    wl.tile_wall_hist.p95(),
+                    wl.tile_wall_hist.p99(),
+                ));
+            }
             let stage_cycles = wl.stage_cycles.load(Ordering::Relaxed);
             if stage_cycles > 0 {
                 out.push_str(&format!(
@@ -457,6 +480,89 @@ impl Metrics {
                 ));
             }
         }
+        out
+    }
+
+    /// Machine-readable snapshot: one JSON object mirroring the counters
+    /// the text [`Metrics::snapshot`] renders, plus the per-workload
+    /// latency quantiles. Hand-rolled (the crate is dependency-free);
+    /// every value is an integer, every key a fixed literal except the
+    /// workload keys, which are escaped. Consumers: `sim_perf`'s
+    /// `BENCH_sim_perf.json` and the integration tests, which assert on
+    /// fields here instead of substring-matching the human snapshot.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let _ = write!(
+            out,
+            "{{\"requests\":{},\"products\":{},\"batches\":{},\"sim_cycles\":{},\
+             \"queue_wait_ns\":{},\"queued_units\":{},\"task_done_underflow\":{},\
+             \"cache\":{{\"hits\":{},\"misses\":{},\"invalidations\":{},\"stores\":{}}}",
+            self.requests.load(Ordering::Relaxed),
+            self.products.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.sim_cycles.load(Ordering::Relaxed),
+            self.queue_wait_ns.load(Ordering::Relaxed),
+            self.queued_units.load(Ordering::Relaxed),
+            self.task_done_underflow.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.cache_invalidations.load(Ordering::Relaxed),
+            self.cache_stores.load(Ordering::Relaxed),
+        );
+        out.push_str(",\"workloads\":{");
+        for (i, (key, wl)) in self.workloads().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\"{}\":{{\"requests\":{},\"admitted_units\":{},\"tiles\":{},\"units\":{},\
+                 \"sim_cycles\":{},\"queue_wait_ns\":{},\"queued_units\":{},\
+                 \"rejected_requests\":{},\"rejected_units\":{},\"staged_words\":{},\
+                 \"restage_words\":{},\"cross_channel_words\":{},\"transfer_cycles\":{},\
+                 \"locality_hits\":{},\"link_wait_cycles\":{},\"stage_cycles\":{},\
+                 \"stall_cycles\":{},\"hidden_words\":{},\"queue_p50_ns\":{},\
+                 \"queue_p95_ns\":{},\"queue_p99_ns\":{},\"tile_p50_ns\":{},\
+                 \"tile_p95_ns\":{},\"tile_p99_ns\":{},\"shards\":[",
+                chrome::escape(&key.to_string()),
+                wl.requests.load(Ordering::Relaxed),
+                wl.admitted_units.load(Ordering::Relaxed),
+                wl.tiles.load(Ordering::Relaxed),
+                wl.units.load(Ordering::Relaxed),
+                wl.sim_cycles.load(Ordering::Relaxed),
+                wl.queue_wait_ns.load(Ordering::Relaxed),
+                wl.queued_units.load(Ordering::Relaxed),
+                wl.rejected_requests.load(Ordering::Relaxed),
+                wl.rejected_units.load(Ordering::Relaxed),
+                wl.staged_words.load(Ordering::Relaxed),
+                wl.restage_words.load(Ordering::Relaxed),
+                wl.cross_channel_words.load(Ordering::Relaxed),
+                wl.transfer_cycles.load(Ordering::Relaxed),
+                wl.locality_hits.load(Ordering::Relaxed),
+                wl.link_wait_cycles.load(Ordering::Relaxed),
+                wl.stage_cycles.load(Ordering::Relaxed),
+                wl.stall_cycles.load(Ordering::Relaxed),
+                wl.hidden_words.load(Ordering::Relaxed),
+                wl.queue_wait_hist.p50(),
+                wl.queue_wait_hist.p95(),
+                wl.queue_wait_hist.p99(),
+                wl.tile_wall_hist.p50(),
+                wl.tile_wall_hist.p95(),
+                wl.tile_wall_hist.p99(),
+            );
+            for (j, (shard, s)) in wl.shard_stats().into_iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "{{\"shard\":{},\"tiles\":{},\"units\":{},\"busy_ns\":{}}}",
+                    shard, s.tiles, s.units, s.busy_ns
+                );
+            }
+            out.push_str("]}");
+        }
+        out.push_str("}}");
         out
     }
 }
@@ -729,6 +835,68 @@ mod tests {
             stores: 0,
         });
         assert!(m.snapshot().contains("cache[program] hits=4 misses=0"), "{}", m.snapshot());
+    }
+
+    #[test]
+    fn latency_quantiles_render_after_tiles() {
+        let m = Metrics::default();
+        let wl = m.register(WorkloadKey::Multiply { n_bits: 32 });
+        assert!(!m.snapshot().contains("latency["), "{}", m.snapshot());
+        // 100 units waiting 4us each -> per-unit wait 4096ns bucket
+        // (ceiling 8191); wall 1ms -> bucket ceiling 1048575.
+        m.record_tile(
+            &wl,
+            0,
+            &cost(100, 611, Duration::from_nanos(4096)),
+            Duration::from_nanos(1_000_000),
+            no_staging(),
+        );
+        assert_eq!(wl.queue_wait_hist.count(), 1);
+        assert_eq!(wl.tile_wall_hist.count(), 1);
+        let s = m.snapshot();
+        assert!(s.contains("latency[multiply N=32] queue_p50=8191ns"), "{s}");
+        assert!(s.contains("tile_p50=1048575ns"), "{s}");
+        // The p99 of a single sample is that sample's bucket.
+        assert!(s.contains("queue_p99=8191ns"), "{s}");
+    }
+
+    #[test]
+    fn to_json_mirrors_counters_and_quantiles() {
+        let m = Metrics::default();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        let wl = m.register(WorkloadKey::MatVec { n_bits: 32, n_elems: 8 });
+        wl.record_admission(100);
+        wl.record_rejection(10);
+        m.record_tile(
+            &wl,
+            3,
+            &cost(100, 4304, Duration::from_nanos(2048)),
+            Duration::from_micros(5),
+            TileStaging { stage_cycles: 448, stall_cycles: 64, hidden_words: 32 },
+        );
+        m.set_cache_stats(crate::cache::CacheStats {
+            hits: 4,
+            misses: 1,
+            invalidations: 0,
+            stores: 1,
+        });
+        let json = m.to_json();
+        // Globals.
+        assert!(json.starts_with("{\"requests\":2,"), "{json}");
+        assert!(json.contains("\"products\":100"), "{json}");
+        assert!(json.contains("\"cache\":{\"hits\":4,\"misses\":1,"), "{json}");
+        // The labeled workload object, keyed by its display key.
+        assert!(json.contains("\"matvec N=32 n=8\":{\"requests\":1,\"admitted_units\":100,"), "{json}");
+        assert!(json.contains("\"rejected_requests\":1,\"rejected_units\":10"), "{json}");
+        assert!(json.contains("\"stage_cycles\":448,\"stall_cycles\":64,\"hidden_words\":32"), "{json}");
+        // Quantiles: per-unit wait 2048ns lands in the [2048,4096) bucket.
+        assert!(json.contains("\"queue_p50_ns\":4095"), "{json}");
+        assert!(json.contains("\"queue_p99_ns\":4095"), "{json}");
+        // Per-shard breakdown.
+        assert!(json.contains("\"shards\":[{\"shard\":3,\"tiles\":1,\"units\":100,"), "{json}");
+        // Balanced braces/brackets — the document parses.
+        assert_eq!(json.matches('{').count(), json.matches('}').count(), "{json}");
+        assert_eq!(json.matches('[').count(), json.matches(']').count(), "{json}");
     }
 
     #[test]

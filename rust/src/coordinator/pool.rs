@@ -51,6 +51,7 @@
 use super::batcher::BatchQueue;
 use super::metrics::{Metrics, TileStaging, WorkloadCounters};
 use crate::device::{BankPath, CrossbarPath, Placement, Router, TileTraffic};
+use crate::obs::{Phase, TenantTrace, TraceEvent};
 use std::fmt;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -180,6 +181,21 @@ pub trait Workload: Send + Sync + 'static {
         tile: Self::Tile,
         record: &mut dyn FnMut(TileCost),
     );
+
+    /// The tenant's request-trace handle, when tracing was enabled for
+    /// this deployment at launch. The default — tracing off — is the
+    /// production hot path: the pool's only tracing cost is this `None`
+    /// check per tile.
+    fn trace(&self) -> Option<&TenantTrace> {
+        None
+    }
+
+    /// The request span id `tile` carries (its admission ticket; a
+    /// multiply batch reports its first pending request). Only consulted
+    /// when [`Workload::trace`] is `Some`.
+    fn tile_span(&self, _tile: &Self::Tile) -> u64 {
+        0
+    }
 }
 
 /// One bank's serving lane: the bank's tile queue plus its address.
@@ -300,6 +316,14 @@ impl<W: Workload> ShardPool<W> {
                 // The resident shard is created inside the worker thread
                 // and never leaves it.
                 let mut shard = workload.shard();
+                // With tracing on, each worker owns a bounded event ring
+                // (single-writer: the try_lock on the hot path is
+                // uncontended except while the exporter drains).
+                let worker_trace = workload.trace().map(|t| {
+                    let sink = Arc::clone(t.sink());
+                    let ring = sink.register_ring();
+                    (sink, ring, t.pid())
+                });
                 // Double-buffer state: gate cycles of the previous tile
                 // on this shard — the compute window the current tile's
                 // staging hid under. Zero for the first tile (a cold
@@ -320,6 +344,10 @@ impl<W: Workload> ShardPool<W> {
                     if overlap {
                         next = queue.try_pop();
                     }
+                    let span = match &worker_trace {
+                        Some(_) => workload.tile_span(&tile),
+                        None => 0,
+                    };
                     let t0 = Instant::now();
                     let mut record = |cost: TileCost| {
                         let stage_cycles = cost.stage_words.saturating_mul(stage_cpw);
@@ -335,7 +363,54 @@ impl<W: Workload> ShardPool<W> {
                         let hidden_words = (stage_cycles - stall_cycles) / stage_cpw;
                         prev_compute = cost.cycles;
                         let staging = TileStaging { stage_cycles, stall_cycles, hidden_words };
-                        metrics.record_tile(&counters, shard_idx, &cost, t0.elapsed(), staging);
+                        let wall = t0.elapsed();
+                        metrics.record_tile(&counters, shard_idx, &cost, wall, staging);
+                        if let Some((sink, ring, pid)) = &worker_trace {
+                            // Queue/execute are wall-clock; stage/stall
+                            // are modeled cycles mapped 1 cycle -> 1 ns.
+                            let wall_ns = wall.as_nanos() as u64;
+                            let start_ns = sink.now_ns().saturating_sub(wall_ns);
+                            let tid = shard_idx as u32;
+                            let wait_ns = cost.queue_wait_ns / cost.units.max(1);
+                            ring.record(TraceEvent {
+                                span,
+                                phase: Phase::Queue,
+                                pid: *pid,
+                                tid,
+                                start_ns: start_ns.saturating_sub(wait_ns),
+                                dur_ns: wait_ns,
+                                detail: cost.units,
+                            });
+                            ring.record(TraceEvent {
+                                span,
+                                phase: Phase::Stage,
+                                pid: *pid,
+                                tid,
+                                start_ns,
+                                dur_ns: stage_cycles,
+                                detail: cost.stage_words,
+                            });
+                            if stall_cycles > 0 {
+                                ring.record(TraceEvent {
+                                    span,
+                                    phase: Phase::Stall,
+                                    pid: *pid,
+                                    tid,
+                                    start_ns,
+                                    dur_ns: stall_cycles,
+                                    detail: hidden_words,
+                                });
+                            }
+                            ring.record(TraceEvent {
+                                span,
+                                phase: Phase::Execute,
+                                pid: *pid,
+                                tid,
+                                start_ns,
+                                dur_ns: wall_ns,
+                                detail: cost.cycles,
+                            });
+                        }
                     };
                     workload.execute(&mut shard, tile, &mut record);
                     // The tile leaves the lane's backlog only now, so
@@ -382,11 +457,29 @@ impl<W: Workload> ShardPool<W> {
     /// has been closed.
     pub fn push(&self, tile: W::Tile) -> bool {
         let traffic = self.workload.traffic(&tile);
+        let span = match self.workload.trace() {
+            Some(_) => self.workload.tile_span(&tile),
+            None => 0,
+        };
         let decision = self.router.route(&traffic);
         if !self.lanes[decision.lane].queue.push(tile) {
             return false;
         }
         self.counters.record_route(&decision);
+        if let Some(t) = self.workload.trace() {
+            // Attribute modeled link queuing (1 cycle -> 1 ns) to the
+            // request whose staging waited on a contended link.
+            if decision.link_wait_cycles > 0 {
+                t.event(
+                    Phase::LinkWait,
+                    span,
+                    decision.lane as u32,
+                    t.now_ns(),
+                    decision.link_wait_cycles,
+                    decision.staged_words,
+                );
+            }
+        }
         true
     }
 

@@ -60,6 +60,7 @@ use crate::cache::CacheContext;
 use crate::crossbar::PlaneMatrix;
 use crate::device::{Allocator, DeviceConfig, LinkContention, Placement, PlacementPolicy, Topology};
 use crate::fixedpoint::float::FloatFormat;
+use crate::obs::{Phase, TenantTrace, TraceSink};
 use crate::util::div_ceil;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -314,6 +315,11 @@ pub struct Coordinator {
     contention: Arc<LinkContention>,
     /// Whether shard staging is double-buffered behind compute.
     overlap: bool,
+    /// Request-trace collector, when the launch enabled tracing
+    /// ([`DeviceConfig::with_trace`]). `None` — the default — keeps the
+    /// serving hot path to one pointer-sized branch per tile and draws
+    /// exactly the same ticket sequence as a build without tracing.
+    trace: Option<Arc<TraceSink>>,
 }
 
 /// Configuration for one deployed multiply width.
@@ -434,6 +440,7 @@ impl Coordinator {
             .cache
             .as_ref()
             .map(|cache| CacheContext::new(Arc::clone(cache), &device.topology));
+        let trace = device.trace.clone();
 
         // Phase 1: validate every deployment and build every engine
         // *before* spawning any worker. A failure here must leave no
@@ -591,13 +598,42 @@ impl Coordinator {
         // Every engine build is done, so the cache's launch outcome is
         // final; copy it into the service counters once.
         if let Some(ctx) = &ctx {
-            metrics.set_cache_stats(ctx.cache().stats());
+            let stats = ctx.cache().stats();
+            metrics.set_cache_stats(stats);
+            // Attribute the launch's compile-cache outcome in the trace:
+            // aggregate hit/miss counts on the coordinator process
+            // (pid 0), not tied to any request span.
+            if let Some(sink) = &trace {
+                let ring = sink.register_ring();
+                let now = sink.now_ns();
+                for (phase, count) in
+                    [(Phase::CacheHit, stats.hits), (Phase::CacheMiss, stats.misses)]
+                {
+                    if count > 0 {
+                        ring.record(crate::obs::TraceEvent {
+                            span: 0,
+                            phase,
+                            pid: 0,
+                            tid: 0,
+                            start_ns: now,
+                            dur_ns: 0,
+                            detail: count,
+                        });
+                    }
+                }
+            }
         }
         let mut workers = Vec::new();
+        // Each tenant registers one trace process named after its
+        // workload key; `None` (tracing off) costs nothing anywhere.
+        let tenant_trace = |key: WorkloadKey| {
+            trace.as_ref().map(|sink| TenantTrace::register(sink, &key.to_string()))
+        };
         let mut multiply = HashMap::new();
         for ((dep, engine), slots) in multiply_engines.into_iter().zip(multiply_slots) {
             let pool = ShardPool::launch(
-                MultiplyWorkload::new(engine, dep.n_bits),
+                MultiplyWorkload::new(engine, dep.n_bits)
+                    .with_trace(tenant_trace(WorkloadKey::Multiply { n_bits: dep.n_bits })),
                 placement(slots),
                 &metrics,
                 &mut workers,
@@ -619,7 +655,10 @@ impl Coordinator {
         for ((dep, engine), slots) in matvec_engines.into_iter().zip(matvec_slots) {
             let shape = (dep.n_bits, dep.n_elems);
             let pool = ShardPool::launch(
-                MatVecWorkload::new(engine),
+                MatVecWorkload::new(engine).with_trace(tenant_trace(WorkloadKey::MatVec {
+                    n_bits: dep.n_bits,
+                    n_elems: dep.n_elems,
+                })),
                 placement(slots),
                 &metrics,
                 &mut workers,
@@ -630,7 +669,9 @@ impl Coordinator {
         for ((dep, engine), slots) in matmul_engines.into_iter().zip(matmul_slots) {
             let shape = (dep.n_bits, dep.k);
             let pool = ShardPool::launch(
-                MatMulWorkload::new(engine, dep.panel_cols),
+                MatMulWorkload::new(engine, dep.panel_cols).with_trace(tenant_trace(
+                    WorkloadKey::MatMul { n_bits: dep.n_bits, k: dep.k },
+                )),
                 placement(slots),
                 &metrics,
                 &mut workers,
@@ -641,7 +682,11 @@ impl Coordinator {
         for ((dep, engine), slots) in floatvec_engines.into_iter().zip(floatvec_slots) {
             let shape = (dep.exp_bits, dep.man_bits, dep.n_elems);
             let pool = ShardPool::launch(
-                FloatVecWorkload::new(engine),
+                FloatVecWorkload::new(engine).with_trace(tenant_trace(WorkloadKey::FloatVec {
+                    exp_bits: dep.exp_bits,
+                    man_bits: dep.man_bits,
+                    n_elems: dep.n_elems,
+                })),
                 placement(slots),
                 &metrics,
                 &mut workers,
@@ -661,12 +706,43 @@ impl Coordinator {
             allocated,
             contention,
             overlap,
+            trace,
         })
     }
 
     /// Service metrics.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The request-trace collector, when the launch enabled tracing.
+    /// Export with [`TraceSink::to_chrome_json`] (the CLI's
+    /// `serve --trace-out` path).
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// Admit against the tenant's queue-depth limit, attributing a
+    /// rejection in the trace. A rejection's span id is drawn only when
+    /// tracing is on, so a trace-off build's ticket sequence is
+    /// bit-identical to one compiled before tracing existed.
+    fn admit_traced<W: Workload>(
+        &self,
+        tenant: &TenantPool<W>,
+        key: WorkloadKey,
+        planned: usize,
+        units: u64,
+    ) -> Result<()> {
+        match tenant.admit(key, planned, units) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if let Some(t) = tenant.pool.workload().trace() {
+                    let span = self.tickets.fetch_add(1, Ordering::Relaxed);
+                    t.event(Phase::Reject, span, 0, t.now_ns(), 0, units);
+                }
+                Err(e)
+            }
+        }
     }
 
     /// The device topology every pool was placed on.
@@ -763,13 +839,14 @@ impl Coordinator {
                     .ok_or(Error::NoDeployment(WorkloadKey::Multiply { n_bits }))?;
                 // Admission control: a multiply enqueues (at most) one
                 // more flushed batch, measured against the batch queue.
-                front.tenant.admit(WorkloadKey::Multiply { n_bits }, 1, 1)?;
+                self.admit_traced(&front.tenant, WorkloadKey::Multiply { n_bits }, 1, 1)?;
                 // Count acceptance only after routing resolves, so the
                 // global counter stays the sum of the labeled per-workload
                 // counters even when submissions are rejected.
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 front.tenant.pool.counters().record_admission(1);
                 let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(front.tenant.pool.workload().trace(), ticket, 1);
                 // Stamp admission time here so the queue-wait metric also
                 // covers time spent in the submit->batcher channel.
                 let enqueued = Instant::now();
@@ -795,21 +872,24 @@ impl Coordinator {
                 // Admission control against the tile queue depth.
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let planned = div_ceil(rows.len(), shard_rows);
-                tenant.admit(key, planned, rows.len() as u64)?;
-                // Admission: draw a ticket and stamp the enqueue time the
-                // tile queue-wait metric measures from.
-                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.admit_traced(tenant, key, planned, rows.len() as u64)?;
+                // Admission: draw a ticket (the request's trace span) and
+                // stamp the enqueue time the tile queue-wait metric
+                // measures from.
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, rows.len() as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission(rows.len() as u64);
                 if rows.is_empty() {
                     let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
                 // Row-wise tiling: ceil(m / shard_rows) tiles scattered
                 // over the shard pool, gathered by the ScatterGather
                 // completion (one inner product per matrix row).
-                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
+                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
                         tenant.release(planned);
                         return Err(Error::Runtime("matvec shard pool shut down".into()));
@@ -840,18 +920,20 @@ impl Coordinator {
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let m = a.rows();
                 let planned = div_ceil(m, shard_rows);
-                tenant.admit(key, planned, m as u64)?;
-                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.admit_traced(tenant, key, planned, m as u64)?;
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, m as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission(m as u64);
                 if m == 0 {
                     let _ = reply_tx.send(Ok(Response::InnerProducts(Vec::new())));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
                 // Same row-wise tiling as the row-major wire; only the
                 // staging path (word memcpy) and its modeled cost differ.
-                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued) {
+                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
                         tenant.release(planned);
                         return Err(Error::Runtime("matvec shard pool shut down".into()));
@@ -886,16 +968,19 @@ impl Coordinator {
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let panel_cols = tenant.pool.workload().panel_cols();
                 let planned = div_ceil(a.len(), shard_rows) * div_ceil(p, panel_cols);
-                tenant.admit(key, planned, (a.len() * p) as u64)?;
+                self.admit_traced(tenant, key, planned, (a.len() * p) as u64)?;
                 // The ticket doubles as the request's staging-affinity
-                // seed: its row tiles share per-tile affinity keys, so
-                // the locality router keeps each A panel on one bank.
+                // seed and trace span: its row tiles share per-tile
+                // affinity keys, so the locality router keeps each A
+                // panel on one bank.
                 let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, (a.len() * p) as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission((a.len() * p) as u64);
                 // Degenerate outputs complete at admission.
                 if a.is_empty() || p == 0 {
                     let _ = reply_tx.send(Ok(Response::Matrix(vec![Vec::new(); a.len()])));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
@@ -938,12 +1023,14 @@ impl Coordinator {
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let panel_cols = tenant.pool.workload().panel_cols();
                 let planned = div_ceil(m, shard_rows) * div_ceil(p, panel_cols);
-                tenant.admit(key, planned, (m * p) as u64)?;
+                self.admit_traced(tenant, key, planned, (m * p) as u64)?;
                 let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, (m * p) as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission((m * p) as u64);
                 if m == 0 || p == 0 {
                     let _ = reply_tx.send(Ok(Response::Matrix(vec![Vec::new(); m])));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
@@ -995,21 +1082,24 @@ impl Coordinator {
                 // Admission control against the tile queue depth.
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let planned = div_ceil(rows.len(), shard_rows);
-                tenant.admit(key, planned, rows.len() as u64)?;
-                // Admission: draw a ticket and stamp the enqueue time the
-                // tile queue-wait metric measures from.
-                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.admit_traced(tenant, key, planned, rows.len() as u64)?;
+                // Admission: draw a ticket (the request's trace span) and
+                // stamp the enqueue time the tile queue-wait metric
+                // measures from.
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, rows.len() as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission(rows.len() as u64);
                 if rows.is_empty() {
                     let _ = reply_tx.send(Ok(Response::FloatVector(Vec::new())));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
                 // Row-wise tiling, identical to the fixed-point matvec
                 // tenant; the gathered result is bit-exact against the
                 // float_dot_ref composition.
-                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued) {
+                for tile in tenant.pool.workload().plan(rows, x, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
                         tenant.release(planned);
                         return Err(Error::Runtime("floatvec shard pool shut down".into()));
@@ -1055,17 +1145,19 @@ impl Coordinator {
                 let shard_rows = tenant.pool.workload().engine().shard_rows();
                 let m = a.rows();
                 let planned = div_ceil(m, shard_rows);
-                tenant.admit(key, planned, m as u64)?;
-                let _ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                self.admit_traced(tenant, key, planned, m as u64)?;
+                let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+                admit_event(tenant.pool.workload().trace(), ticket, m as u64);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 tenant.pool.counters().record_admission(m as u64);
                 if m == 0 {
                     let _ = reply_tx.send(Ok(Response::FloatVector(Vec::new())));
+                    degenerate_reply_event(tenant.pool.workload().trace(), ticket);
                     return Ok(reply_rx);
                 }
                 let enqueued = Instant::now();
                 // Same row-wise tiling as the row-major wire.
-                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued) {
+                for tile in tenant.pool.workload().plan_planes(a, x, reply_tx, enqueued, ticket) {
                     if !tenant.pool.push(tile) {
                         tenant.release(planned);
                         return Err(Error::Runtime("floatvec shard pool shut down".into()));
@@ -1192,6 +1284,23 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Emit the admit event opening a request's trace span (no-op with
+/// tracing off). `detail` carries the planned work units.
+fn admit_event(trace: Option<&TenantTrace>, span: u64, units: u64) {
+    if let Some(t) = trace {
+        t.event(Phase::Admit, span, 0, t.now_ns(), 0, units);
+    }
+}
+
+/// Close the span of a request answered at admission (empty/degenerate
+/// shapes that never reach the pool), so every admit still pairs with a
+/// reply in the exported trace.
+fn degenerate_reply_event(trace: Option<&TenantTrace>, span: u64) {
+    if let Some(t) = trace {
+        t.event(Phase::Reply, span, 0, t.now_ns(), 0, 0);
     }
 }
 

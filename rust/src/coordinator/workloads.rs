@@ -31,6 +31,7 @@ use super::server::Response;
 use crate::algorithms::matmul::plan_tiles;
 use crate::crossbar::PlaneMatrix;
 use crate::device::TileTraffic;
+use crate::obs::{Phase, TenantTrace};
 use crate::Result;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -175,12 +176,19 @@ pub type MultiplyTile = Vec<Pending<MultiplyJob>>;
 pub struct MultiplyWorkload {
     engine: MultiplyEngine,
     n_bits: u32,
+    trace: Option<TenantTrace>,
 }
 
 impl MultiplyWorkload {
     /// Wrap a launch-time-built engine.
     pub fn new(engine: MultiplyEngine, n_bits: u32) -> Self {
-        Self { engine, n_bits }
+        Self { engine, n_bits, trace: None }
+    }
+
+    /// Enable request tracing for this tenant (off by default).
+    pub fn with_trace(mut self, trace: Option<TenantTrace>) -> Self {
+        self.trace = trace;
+        self
     }
 }
 
@@ -229,7 +237,19 @@ impl Workload for MultiplyWorkload {
         });
         for (pending, product) in batch.into_iter().zip(products) {
             let _ = pending.item.2.send(Ok(Response::Product(product)));
+            if let Some(t) = &self.trace {
+                // Each batched request is its own span: its ticket.
+                t.event(Phase::Reply, pending.ticket, 0, t.now_ns(), 0, 1);
+            }
         }
+    }
+
+    fn trace(&self) -> Option<&TenantTrace> {
+        self.trace.as_ref()
+    }
+
+    fn tile_span(&self, batch: &MultiplyTile) -> u64 {
+        batch.first().map_or(0, |p| p.ticket)
     }
 }
 
@@ -247,17 +267,26 @@ pub struct MatVecTile {
     reply: ReplySender,
     /// Admission timestamp of the parent request (queue-wait accounting).
     enqueued: Instant,
+    /// Request span id (the admission ticket; 0 with tracing off).
+    span: u64,
 }
 
 /// The §VI matvec tenant for one deployed `(n_bits, n_elems)` shape.
 pub struct MatVecWorkload {
     engine: ChainEngine,
+    trace: Option<TenantTrace>,
 }
 
 impl MatVecWorkload {
     /// Wrap a launch-time-built chain engine.
     pub fn new(engine: ChainEngine) -> Self {
-        Self { engine }
+        Self { engine, trace: None }
+    }
+
+    /// Enable request tracing for this tenant (off by default).
+    pub fn with_trace(mut self, trace: Option<TenantTrace>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// The wrapped chain engine.
@@ -267,15 +296,17 @@ impl MatVecWorkload {
 
     /// Plan an admitted row-major request into row tiles sharing one
     /// gather. `rows` must be non-empty (empty requests are answered at
-    /// admission).
+    /// admission). `span` is the request's admission ticket — the trace
+    /// span id every tile carries.
     pub fn plan(
         &self,
         rows: Vec<Vec<u64>>,
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<MatVecTile> {
-        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued)
+        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued, span)
     }
 
     /// Plan an admitted bit-transposed request ([`PlaneMatrix`] wire
@@ -288,8 +319,9 @@ impl MatVecWorkload {
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<MatVecTile> {
-        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued)
+        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued, span)
     }
 
     fn plan_matrix(
@@ -298,6 +330,7 @@ impl MatVecWorkload {
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<MatVecTile> {
         let m = matrix.rows();
         let shard_rows = self.engine.shard_rows();
@@ -316,6 +349,7 @@ impl MatVecWorkload {
                 gather: Arc::clone(&gather),
                 reply: reply.clone(),
                 enqueued,
+                span,
             });
             start += len;
         }
@@ -379,8 +413,22 @@ impl Workload for MatVecWorkload {
             ),
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
+            let n_results = full.len() as u64;
             let _ = tile.reply.send(Ok(Response::InnerProducts(full)));
+            if let Some(t) = &self.trace {
+                let now = t.now_ns();
+                t.event(Phase::Gather, tile.span, 0, now, 0, n_results);
+                t.event(Phase::Reply, tile.span, 0, now, 0, n_results);
+            }
         }
+    }
+
+    fn trace(&self) -> Option<&TenantTrace> {
+        self.trace.as_ref()
+    }
+
+    fn tile_span(&self, tile: &MatVecTile) -> u64 {
+        tile.span
     }
 }
 
@@ -407,6 +455,8 @@ pub struct MatMulTile {
     /// locality router lands them on the bank where the tile's A rows are
     /// already resident and only the fresh B panel moves.
     affinity: u64,
+    /// Request span id (the admission ticket the affinity derives from).
+    span: u64,
 }
 
 /// The GEMM tenant for one deployed `(n_bits, k)` shape: computes
@@ -416,6 +466,7 @@ pub struct MatMulTile {
 pub struct MatMulWorkload {
     engine: ChainEngine,
     panel_cols: usize,
+    trace: Option<TenantTrace>,
 }
 
 impl MatMulWorkload {
@@ -423,7 +474,13 @@ impl MatMulWorkload {
     /// `panel_cols` output columns each.
     pub fn new(engine: ChainEngine, panel_cols: usize) -> Self {
         assert!(panel_cols > 0, "a matmul tile needs at least one panel column");
-        Self { engine, panel_cols }
+        Self { engine, panel_cols, trace: None }
+    }
+
+    /// Enable request tracing for this tenant (off by default).
+    pub fn with_trace(mut self, trace: Option<TenantTrace>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// The wrapped chain engine.
@@ -528,6 +585,8 @@ impl MatMulWorkload {
                     // Golden-ratio mix keeps per-request keys distinct
                     // while every panel of one row tile shares the key.
                     affinity: ticket.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ rect.row0 as u64,
+                    // The raw ticket doubles as the trace span id.
+                    span: ticket,
                 }
             })
             .collect()
@@ -548,18 +607,27 @@ pub struct FloatVecTile {
     reply: ReplySender,
     /// Admission timestamp of the parent request (queue-wait accounting).
     enqueued: Instant,
+    /// Request span id (the admission ticket; 0 with tracing off).
+    span: u64,
 }
 
 /// The full-precision float matvec tenant for one deployed
 /// `(format, n_elems)` shape.
 pub struct FloatVecWorkload {
     engine: FloatVecEngine,
+    trace: Option<TenantTrace>,
 }
 
 impl FloatVecWorkload {
     /// Wrap a launch-time-built float chain engine.
     pub fn new(engine: FloatVecEngine) -> Self {
-        Self { engine }
+        Self { engine, trace: None }
+    }
+
+    /// Enable request tracing for this tenant (off by default).
+    pub fn with_trace(mut self, trace: Option<TenantTrace>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// The wrapped float chain engine.
@@ -569,15 +637,17 @@ impl FloatVecWorkload {
 
     /// Plan an admitted row-major request into row tiles sharing one
     /// gather. `rows` must be non-empty (empty requests are answered at
-    /// admission).
+    /// admission). `span` is the request's admission ticket — the trace
+    /// span id every tile carries.
     pub fn plan(
         &self,
         rows: Vec<Vec<u64>>,
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<FloatVecTile> {
-        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued)
+        self.plan_matrix(TileMatrix::Rows(Arc::new(rows)), x, reply, enqueued, span)
     }
 
     /// Plan an admitted bit-transposed request ([`PlaneMatrix`] of
@@ -590,8 +660,9 @@ impl FloatVecWorkload {
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<FloatVecTile> {
-        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued)
+        self.plan_matrix(TileMatrix::Planes(Arc::new(planes)), x, reply, enqueued, span)
     }
 
     fn plan_matrix(
@@ -600,6 +671,7 @@ impl FloatVecWorkload {
         x: Vec<u64>,
         reply: ReplySender,
         enqueued: Instant,
+        span: u64,
     ) -> Vec<FloatVecTile> {
         let m = matrix.rows();
         let shard_rows = self.engine.shard_rows();
@@ -618,6 +690,7 @@ impl FloatVecWorkload {
                 gather: Arc::clone(&gather),
                 reply: reply.clone(),
                 enqueued,
+                span,
             });
             start += len;
         }
@@ -690,8 +763,22 @@ impl Workload for FloatVecWorkload {
             ),
         });
         if let Some(full) = tile.gather.complete(tile.start, &out) {
+            let n_results = full.len() as u64;
             let _ = tile.reply.send(Ok(Response::FloatVector(full)));
+            if let Some(t) = &self.trace {
+                let now = t.now_ns();
+                t.event(Phase::Gather, tile.span, 0, now, 0, n_results);
+                t.event(Phase::Reply, tile.span, 0, now, 0, n_results);
+            }
         }
+    }
+
+    fn trace(&self) -> Option<&TenantTrace> {
+        self.trace.as_ref()
+    }
+
+    fn tile_span(&self, tile: &FloatVecTile) -> u64 {
+        tile.span
     }
 }
 
@@ -766,9 +853,23 @@ impl Workload for MatMulWorkload {
             }
         });
         if let Some(flat) = done {
+            let n_results = flat.len() as u64;
             let matrix: Vec<Vec<u64>> = flat.chunks(tile.p).map(<[u64]>::to_vec).collect();
             let _ = tile.reply.send(Ok(Response::Matrix(matrix)));
+            if let Some(t) = &self.trace {
+                let now = t.now_ns();
+                t.event(Phase::Gather, tile.span, 0, now, 0, n_results);
+                t.event(Phase::Reply, tile.span, 0, now, 0, n_results);
+            }
         }
+    }
+
+    fn trace(&self) -> Option<&TenantTrace> {
+        self.trace.as_ref()
+    }
+
+    fn tile_span(&self, tile: &MatMulTile) -> u64 {
+        tile.span
     }
 }
 

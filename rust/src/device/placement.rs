@@ -70,24 +70,30 @@ pub struct DeviceConfig {
     /// validate → lower → schedule path at launch (see [`crate::cache`]).
     /// `None` (the default) compiles every engine from scratch.
     pub cache: Option<Arc<crate::cache::ProgramCache>>,
+    /// Request-trace collector ([`crate::obs::TraceSink`]). `None` (the
+    /// default) disables tracing: the serving hot path pays one
+    /// pointer-sized branch per tile and the coordinator's ticket
+    /// sequence is bit-identical to a launch without the field.
+    pub trace: Option<Arc<crate::obs::TraceSink>>,
 }
 
 impl DeviceConfig {
     /// The degenerate single-bank device holding `n` crossbars —
     /// bit-identical serving to the flat pre-hierarchy pool.
     pub fn flat(n: usize) -> Self {
+        Self::new(Topology::flat(n))
+    }
+
+    /// A device with the given topology, the default locality policy,
+    /// double-buffered staging on, and tracing off.
+    pub fn new(topology: Topology) -> Self {
         Self {
-            topology: Topology::flat(n),
+            topology,
             policy: PlacementPolicy::Locality,
             overlap: true,
             cache: None,
+            trace: None,
         }
-    }
-
-    /// A device with the given topology, the default locality policy, and
-    /// double-buffered staging on.
-    pub fn new(topology: Topology) -> Self {
-        Self { topology, policy: PlacementPolicy::Locality, overlap: true, cache: None }
     }
 
     /// The same device with double-buffered staging switched on or off.
@@ -99,6 +105,12 @@ impl DeviceConfig {
     /// The same device with a compiled-program cache attached.
     pub fn with_cache(mut self, cache: Arc<crate::cache::ProgramCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// The same device with request tracing collected into `trace`.
+    pub fn with_trace(mut self, trace: Arc<crate::obs::TraceSink>) -> Self {
+        self.trace = Some(trace);
         self
     }
 }

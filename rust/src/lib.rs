@@ -45,6 +45,11 @@
 //!   geometry, schedule mode, crate version), so relaunching a fleet of
 //!   known shapes skips compilation entirely. Legality is never trusted
 //!   from disk — hits are re-validated before serving.
+//! * [`obs`] — observability: request-level tracing with span ids and
+//!   bounded per-worker event rings, fixed-boundary log-bucket latency
+//!   histograms behind the per-workload p50/p95/p99 figures, and the
+//!   shared Chrome-trace/Perfetto JSON writer both `serve --trace-out`
+//!   and `schedule-stats --timeline` export through.
 //! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
 //!   (built once from `python/compile`) and is used as the golden model on
 //!   the verification path.
@@ -78,6 +83,7 @@ pub mod crossbar;
 pub mod device;
 pub mod fixedpoint;
 pub mod isa;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod schedule;

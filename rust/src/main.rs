@@ -15,6 +15,7 @@
 //!                  [--fv-format fp32|bf16|fp16]
 //!                  [--topology CxGxBxX] [--placement locality|random]
 //!                  [--overlap on|off] [--cache-dir PATH] [--wire rows|transposed]
+//!                  [--trace-out PATH]
 //!                                     # multiply + matvec + matmul + float-matvec
 //!                                     # shard-pool demo with per-workload metrics;
 //!                                     # --topology places the pools on a
@@ -26,7 +27,10 @@
 //!                                     # launch skips lowering/scheduling; the
 //!                                     # snapshot's cache[program] line counts
 //!                                     # hits/misses); --wire transposed ships
-//!                                     # matrices as pre-transposed bit-planes
+//!                                     # matrices as pre-transposed bit-planes;
+//!                                     # --trace-out attaches the request tracer
+//!                                     # and writes the run's spans as
+//!                                     # Chrome-trace JSON (perfetto-loadable)
 //! multpim topology [--topology 2x2x2x4] [--placement locality|random] [--shards 4]
 //!                  [--overlap on|off]
 //!                                     # launch the serve tenants on a hierarchical
@@ -34,13 +38,20 @@
 //!                                     # the placement report (per-level capacity,
 //!                                     # lane occupancy, modeled restage traffic)
 //! multpim schedule-stats [--chain fp32x8|mult32|matvec32] [--exp 8] [--man 23]
-//!                  [--elems 8] [--n 32] [--budget FILE]
+//!                  [--elems 8] [--n 32] [--budget FILE] [--timeline PATH]
 //!                                     # partition-parallel schedule stats for
 //!                                     # the float MAC chain (fp32x8) or the
 //!                                     # scheduled fixed-point chains (mult32,
 //!                                     # matvec32); with --budget, fail when
-//!                                     # the checked-in cycle ceilings regress
+//!                                     # the checked-in cycle ceilings regress;
+//!                                     # --timeline writes the per-cycle x
+//!                                     # per-partition occupancy grid as
+//!                                     # Chrome-trace JSON (1 cycle = 1 us)
 //! multpim trace    --n 8 [--limit 40] # dump a compiled program
+//! multpim trace    --serve [--requests 64] [--out PATH]
+//!                                     # run a small traced serving burst and
+//!                                     # export its request spans as
+//!                                     # Chrome-trace JSON (stdout by default)
 //! ```
 
 use multpim::algorithms::floatvec::MultPimFloatVec;
@@ -56,6 +67,7 @@ use multpim::coordinator::{Coordinator, DeploymentSpec, EngineConfig, Request, R
 use multpim::crossbar::PlaneMatrix;
 use multpim::device::{DeviceConfig, PlacementPolicy, Topology};
 use multpim::fixedpoint::float::{float_dot_ref, FloatFormat};
+use multpim::obs::{TraceSink, DEFAULT_RING_CAPACITY};
 use multpim::runtime::{golden, ArtifactSet, PjrtRuntime};
 use multpim::schedule::ScheduleMode;
 use multpim::util::SplitMix64;
@@ -365,6 +377,15 @@ fn run(args: &[String]) -> Result<()> {
                     )))
                 }
             };
+            // --trace-out: attach a request tracer and export the run's
+            // spans as Chrome-trace JSON (open in ui.perfetto.dev or
+            // chrome://tracing). Without it tracing stays off and the hot
+            // path pays one branch per tile.
+            let trace_out = opt(args, "--trace-out");
+            let device = match &trace_out {
+                Some(_) => device.with_trace(TraceSink::new(DEFAULT_RING_CAPACITY)),
+                None => device,
+            };
             let coord =
                 Coordinator::launch_on(device, &multiplies, &matvecs, &matmuls, &floatvecs)?;
             let mut rng = SplitMix64::new(0xE0);
@@ -515,7 +536,19 @@ fn run(args: &[String]) -> Result<()> {
             if opt(args, "--topology").is_some() {
                 println!("placement: {}", coord.placement_report());
             }
+            // Export after shutdown so the workers' last reply events are
+            // in the rings before the document is rendered.
+            let sink = coord.trace().cloned();
             coord.shutdown();
+            if let Some(path) = &trace_out {
+                let sink = sink.expect("trace sink attached when --trace-out is given");
+                std::fs::write(path, sink.to_chrome_json())?;
+                println!(
+                    "trace: {} events ({} dropped) -> {path}",
+                    sink.events().len(),
+                    sink.dropped()
+                );
+            }
             Ok(())
         }
         Some("topology") => {
@@ -579,7 +612,7 @@ fn run(args: &[String]) -> Result<()> {
             // chain or one of the scheduled fixed-point chains (all of
             // them compile through the same partition-parallel backend).
             let subject = opt(args, "--chain").unwrap_or_else(|| "fp32x8".into());
-            let (stats, per_program, quoted) = match subject.as_str() {
+            let (stats, per_program, quoted, timeline) = match subject.as_str() {
                 "fp32x8" => {
                     let exp = opt_u64(args, "--exp", 8) as u32;
                     let man = opt_u64(args, "--man", 23) as u32;
@@ -594,6 +627,7 @@ fn run(args: &[String]) -> Result<()> {
                         sched.schedule_stats().clone(),
                         sched.per_program_stats().to_vec(),
                         Some(sched.expected_latency()),
+                        sched.timeline().cloned(),
                     )
                 }
                 "mult32" => {
@@ -603,7 +637,12 @@ fn run(args: &[String]) -> Result<()> {
                         "schedule-stats: scheduled fixed multiply, N={n} \
                          (partition-parallel backend)"
                     );
-                    (chain.stats().clone(), chain.per_program_stats().to_vec(), None)
+                    (
+                        chain.stats().clone(),
+                        chain.per_program_stats().to_vec(),
+                        None,
+                        chain.timeline().cloned(),
+                    )
                 }
                 "matvec32" => {
                     let n = opt_u64(args, "--n", 32) as u32;
@@ -613,7 +652,12 @@ fn run(args: &[String]) -> Result<()> {
                         "schedule-stats: scheduled fixed MAC chain, N={n} n={elems} \
                          (partition-parallel backend)"
                     );
-                    (chain.stats().clone(), chain.per_program_stats().to_vec(), None)
+                    (
+                        chain.stats().clone(),
+                        chain.per_program_stats().to_vec(),
+                        None,
+                        chain.timeline().cloned(),
+                    )
                 }
                 other => {
                     return Err(multpim::Error::BadParameter(format!(
@@ -631,6 +675,23 @@ fn run(args: &[String]) -> Result<()> {
                     ps.critical_path_cycles,
                     ps.peak_parallel_gates,
                     100.0 * ps.occupancy(),
+                );
+            }
+            // --timeline: export the per-cycle x per-partition occupancy
+            // grid as Chrome-trace JSON (1 cycle = 1 us, one process per
+            // program, one thread per work lane).
+            if let Some(path) = opt(args, "--timeline") {
+                let tl = timeline.ok_or_else(|| {
+                    multpim::Error::BadParameter(
+                        "--timeline needs a partitioned chain (serial chains carry no grid)"
+                            .into(),
+                    )
+                })?;
+                std::fs::write(&path, tl.to_chrome_json())?;
+                println!(
+                    "  timeline: {} cycles, {} occupied slots -> {path}",
+                    tl.total_cycles(),
+                    tl.total_slots()
                 );
             }
             if let Some(quoted) = quoted {
@@ -703,6 +764,54 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Some("trace") => {
+            if flag(args, "--serve") {
+                // Request-level tracing demo: a small traced mixed burst
+                // through the shard pool, exported as Chrome-trace JSON.
+                let requests = opt_u64(args, "--requests", 64);
+                let sink = TraceSink::new(DEFAULT_RING_CAPACITY);
+                let device = DeviceConfig::flat(2).with_trace(sink.clone());
+                let coord = Coordinator::launch_on(
+                    device,
+                    &[MultiplyDeployment {
+                        n_bits: 32,
+                        rows: 64,
+                        max_wait: Duration::from_millis(1),
+                        config: EngineConfig::MultPim,
+                        spec: DeploymentSpec::new(1),
+                    }],
+                    &[MatVecDeployment {
+                        n_bits: 32,
+                        n_elems: 8,
+                        shard_rows: 16,
+                        spec: DeploymentSpec::new(1),
+                    }],
+                    &[],
+                    &[],
+                )?;
+                let mut rng = SplitMix64::new(0x7AC3);
+                for _ in 0..requests {
+                    let (a, b) = (rng.bits(32), rng.bits(32));
+                    assert_eq!(coord.multiply(32, a, b)?, a * b);
+                }
+                let rows: Vec<Vec<u64>> =
+                    (0..32).map(|_| (0..8).map(|_| rng.bits(32)).collect()).collect();
+                let x: Vec<u64> = (0..8).map(|_| rng.bits(32)).collect();
+                coord.matvec(32, rows, x)?;
+                coord.shutdown();
+                let json = sink.to_chrome_json();
+                match opt(args, "--out") {
+                    Some(path) => {
+                        std::fs::write(&path, json)?;
+                        println!(
+                            "trace: {} events ({} dropped) -> {path}",
+                            sink.events().len(),
+                            sink.dropped()
+                        );
+                    }
+                    None => print!("{json}"),
+                }
+                return Ok(());
+            }
             let n = opt_u64(args, "--n", 8) as u32;
             let limit = opt_u64(args, "--limit", 40) as usize;
             let m = MultPim::new(n);

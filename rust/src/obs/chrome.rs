@@ -1,0 +1,163 @@
+//! Minimal Chrome-trace (a.k.a. Trace Event Format / Perfetto JSON)
+//! emission.
+//!
+//! Both trace surfaces — the serving request tracer
+//! ([`trace`](super::trace)) and the schedule timeline profiler
+//! ([`ScheduleTimeline`](crate::schedule::ScheduleTimeline)) — emit the
+//! same on-disk format: a JSON array of *complete* events
+//! (`"ph": "X"`) plus metadata events naming processes and threads, so
+//! one viewer (`chrome://tracing`, <https://ui.perfetto.dev>) opens
+//! either file. Timestamps and durations are microseconds; callers hand
+//! this module nanoseconds and it renders fractional microseconds with
+//! nanosecond precision — the schedule timeline maps 1 cycle to 1 µs so
+//! cycle numbers read directly off the viewer's time axis.
+//!
+//! Everything is hand-rolled string building (the crate is offline and
+//! dependency-free), so the only JSON we emit is the subset we write:
+//! object keys are fixed literals and values are integers or escaped
+//! strings.
+
+use std::fmt::Write as _;
+
+/// Escape a string for embedding inside a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render nanoseconds as a microsecond decimal (`1234567` → `1234.567`).
+fn us(ns: u64) -> String {
+    if ns % 1000 == 0 {
+        format!("{}", ns / 1000)
+    } else {
+        format!("{}.{:03}", ns / 1000, ns % 1000)
+    }
+}
+
+/// One complete (`"ph": "X"`) event. `ts_ns`/`dur_ns` are nanoseconds;
+/// `args` are rendered as integer-valued fields.
+pub fn complete_event(
+    name: &str,
+    pid: u32,
+    tid: u32,
+    ts_ns: u64,
+    dur_ns: u64,
+    args: &[(&str, u64)],
+) -> String {
+    let mut s = format!(
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}",
+        escape(name),
+        us(ts_ns),
+        us(dur_ns),
+        pid,
+        tid
+    );
+    if !args.is_empty() {
+        s.push_str(",\"args\":{");
+        for (i, (k, v)) in args.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{}\":{}", escape(k), v);
+        }
+        s.push('}');
+    }
+    s.push('}');
+    s
+}
+
+/// Metadata event naming a process (one per pid).
+pub fn process_name_event(pid: u32, name: &str) -> String {
+    format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":\"{}\"}}}}",
+        pid,
+        escape(name)
+    )
+}
+
+/// Metadata event naming a thread (one per pid/tid pair).
+pub fn thread_name_event(pid: u32, tid: u32, name: &str) -> String {
+    format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+        pid,
+        tid,
+        escape(name)
+    )
+}
+
+/// Counter event (`"ph": "C"`) — used for the ring-drop counter so lost
+/// events are visible in the viewer, never silent.
+pub fn counter_event(name: &str, pid: u32, ts_ns: u64, key: &str, value: u64) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":{},\"tid\":0,\"args\":{{\"{}\":{}}}}}",
+        escape(name),
+        us(ts_ns),
+        pid,
+        escape(key),
+        value
+    )
+}
+
+/// Join rendered events into the final Chrome-trace JSON document.
+pub fn document(events: &[String]) -> String {
+    let mut out = String::with_capacity(events.iter().map(|e| e.len() + 2).sum::<usize>() + 4);
+    out.push_str("[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_event_renders_fractional_microseconds() {
+        let e = complete_event("stage", 1, 2, 1_234_567, 500, &[("span", 7)]);
+        assert_eq!(
+            e,
+            "{\"name\":\"stage\",\"ph\":\"X\",\"ts\":1234.567,\"dur\":0.500,\
+             \"pid\":1,\"tid\":2,\"args\":{\"span\":7}}"
+        );
+    }
+
+    #[test]
+    fn whole_microseconds_render_without_decimals() {
+        let e = complete_event("execute", 0, 0, 2_000, 1_000, &[]);
+        assert!(e.contains("\"ts\":2,\"dur\":1,"));
+    }
+
+    #[test]
+    fn escape_handles_quotes_and_control_chars() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn document_is_a_json_array() {
+        let doc = document(&[process_name_event(0, "coordinator"), counter_event("drops", 0, 0, "dropped", 3)]);
+        assert!(doc.starts_with("[\n"));
+        assert!(doc.ends_with("]\n"));
+        assert_eq!(doc.matches('\n').count(), 4);
+    }
+}

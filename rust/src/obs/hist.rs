@@ -1,0 +1,179 @@
+//! Fixed-boundary log-bucket latency histograms.
+//!
+//! The serving metrics historically kept only *sums* (total queue-wait
+//! nanoseconds, total tile cycles), which answer "how much in aggregate"
+//! but not "how bad is the tail". [`Hist`] is the smallest histogram that
+//! fixes that: 64 power-of-two buckets with **fixed** boundaries, so two
+//! histograms recorded on different workers or different runs are always
+//! mergeable bucket-by-bucket and quantiles are deterministic — no
+//! adaptive resizing, no locks, one relaxed atomic increment per sample.
+//!
+//! Bucket layout: bucket 0 counts exact zeros; bucket `k` for
+//! `1 <= k < 63` counts values in `[2^(k-1), 2^k)`; bucket 63 absorbs
+//! everything from `2^62` up. Quantiles report the *ceiling* of the
+//! bucket containing the requested rank — a conservative (never
+//! under-reported) bound with at most 2x resolution error, which is
+//! exactly the trade the fixed log boundaries buy.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Number of fixed log buckets in a [`Hist`].
+pub const HIST_BUCKETS: usize = 64;
+
+/// A fixed-boundary log-bucket histogram over `u64` samples
+/// (nanoseconds, cycles, words — any non-negative magnitude).
+///
+/// Writers call [`Hist::record`] (one relaxed atomic add, no locking);
+/// readers take quantiles at any time. Reads concurrent with writes see
+/// a consistent-enough snapshot for reporting: each bucket is read once,
+/// and quantile ranks are computed against the same snapshot.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// The bucket index a value lands in: 0 for zero, otherwise
+    /// `floor(log2(v)) + 1`, clamped into the overflow bucket.
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of a bucket, as reported by quantiles.
+    pub fn bucket_ceil(bucket: usize) -> u64 {
+        if bucket == 0 {
+            0
+        } else if bucket >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << bucket) - 1
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Relaxed);
+    }
+
+    /// Snapshot of all bucket counts.
+    pub fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Relaxed))
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// The `num/den` quantile as the ceiling of the bucket holding that
+    /// rank (rank = `ceil(total * num / den)`, 1-based). Returns 0 for an
+    /// empty histogram.
+    pub fn quantile(&self, num: u32, den: u32) -> u64 {
+        debug_assert!(den > 0 && num <= den);
+        let counts = self.counts();
+        let total: u128 = counts.iter().map(|&c| c as u128).sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (total * num as u128).div_ceil(den as u128).max(1);
+        let mut seen: u128 = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c as u128;
+            if seen >= rank {
+                return Self::bucket_ceil(i);
+            }
+        }
+        Self::bucket_ceil(HIST_BUCKETS - 1)
+    }
+
+    /// Median (conservative bucket ceiling).
+    pub fn p50(&self) -> u64 {
+        self.quantile(50, 100)
+    }
+
+    /// 95th percentile (conservative bucket ceiling).
+    pub fn p95(&self) -> u64 {
+        self.quantile(95, 100)
+    }
+
+    /// 99th percentile (conservative bucket ceiling).
+    pub fn p99(&self) -> u64 {
+        self.quantile(99, 100)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_fixed_powers_of_two() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(1023), 10);
+        assert_eq!(Hist::bucket_of(1024), 11);
+        assert_eq!(Hist::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(Hist::bucket_ceil(0), 0);
+        assert_eq!(Hist::bucket_ceil(1), 1);
+        assert_eq!(Hist::bucket_ceil(10), 1023);
+        assert_eq!(Hist::bucket_ceil(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let h = Hist::new();
+        // 90 samples at 1, 9 samples around 1000, 1 sample near 1M.
+        for _ in 0..90 {
+            h.record(1);
+        }
+        for _ in 0..9 {
+            h.record(1000);
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 1);
+        // rank 95 lands in the [512, 1024) bucket -> ceiling 1023.
+        assert_eq!(h.p95(), 1023);
+        // rank 99 still in the 1000s bucket; rank 100 is the outlier.
+        assert_eq!(h.p99(), 1023);
+        assert_eq!(h.quantile(1, 1), Hist::bucket_ceil(Hist::bucket_of(1_000_000)));
+    }
+
+    #[test]
+    fn zero_samples_count_in_bucket_zero() {
+        let h = Hist::new();
+        h.record(0);
+        h.record(0);
+        h.record(8);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.counts()[0], 2);
+    }
+}

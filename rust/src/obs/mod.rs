@@ -1,0 +1,33 @@
+//! Observability for the serving stack and the schedule compiler.
+//!
+//! Three windows into a system that previously only exposed cumulative
+//! counters:
+//!
+//! - **Request tracing** ([`trace`]): every admitted request carries a
+//!   span id (its admission ticket) through batcher tickets → pool lanes
+//!   → shard execute → gather, and each phase (admit, queue, stage,
+//!   stall, execute, gather, reply — plus rejection, cache, and
+//!   link-wait attributions) lands in a bounded per-writer ring with a
+//!   drop counter. `serve --trace-out PATH` and `trace --serve` export
+//!   Chrome-trace JSON.
+//! - **Latency histograms** ([`hist`]): fixed-boundary log-bucket
+//!   [`Hist`]s back the per-workload p50/p95/p99 queue-wait and
+//!   tile-wall figures in `Metrics::snapshot` and the machine-readable
+//!   `Metrics::to_json`.
+//! - **Chrome-trace emission** ([`chrome`]): the shared writer both the
+//!   request tracer and the schedule timeline profiler
+//!   (`schedule-stats --timeline`) use, so every artifact opens in the
+//!   same viewer.
+//!
+//! Tracing is compiled in but **off by default**; a deployment without a
+//! [`TraceSink`] pays one branch per tile (the `sim_perf -- obs` section
+//! gates that the modeled counters are bit-identical with tracing off).
+
+pub mod chrome;
+mod hist;
+mod trace;
+
+pub use hist::{Hist, HIST_BUCKETS};
+pub use trace::{
+    Phase, TenantTrace, TraceEvent, TraceRing, TraceSink, DEFAULT_RING_CAPACITY,
+};

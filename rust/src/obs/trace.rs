@@ -1,0 +1,412 @@
+//! Request-level tracing for the serving stack.
+//!
+//! Every admitted request gets a **span id** — the coordinator's global
+//! admission ticket, the same number the batcher already threads through
+//! [`Pending`](crate::coordinator::batcher) and the GEMM staging
+//! affinity. Phase events (admit, queue, stage, stall, execute, gather,
+//! reply, plus rejection, cache hit/miss and link-wait attributions) are
+//! recorded against that span from wherever the phase happens: the
+//! submit path writes to a per-tenant ring, each pool worker registers
+//! its own ring at spawn. Rings are **bounded**: a full ring (or a ring
+//! briefly contended by the exporter) drops the event and increments a
+//! drop counter — loss is possible under overload, *silence* is not.
+//!
+//! The writer path is lock-free-ish by construction: every ring is a
+//! pre-sized `Vec` behind a mutex that writers only ever `try_lock`.
+//! Per-worker rings are single-writer, so the lock is uncontended on the
+//! hot path (one CAS); the only time `try_lock` fails is while the
+//! exporter holds the lock draining events, and that failure is counted,
+//! not waited on. Tracing is **off by default**: a disabled deployment
+//! carries `None` and the hot path's entire cost is one pointer-sized
+//! branch per tile.
+//!
+//! Export is Chrome-trace JSON ([`chrome`](super::chrome)): phase events
+//! become complete events on `pid` = workload, `tid` = lane/worker, and
+//! for every span with both an admit and a reply the exporter
+//! synthesizes a `request` event spanning admit→reply — the wall time
+//! the request spent in the system, by the same clock that stamped both
+//! endpoints.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, TryLockError};
+use std::time::Instant;
+
+use super::chrome;
+
+/// Default per-ring event capacity (events, not bytes).
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 14;
+
+/// A request-lifecycle phase. `LinkWait`, `CacheHit`/`CacheMiss` are
+/// attributions rather than strict phases: they explain *where* modeled
+/// latency came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Request admitted (span begins).
+    Admit,
+    /// Time spent queued on a lane before a worker picked the tile up.
+    Queue,
+    /// Modeled staging cycles for the tile's fresh words.
+    Stage,
+    /// Modeled stall cycles (staging not hidden behind prior compute).
+    Stall,
+    /// Wall-clock tile execution on a shard worker.
+    Execute,
+    /// Scatter-gather assembly completed for the request.
+    Gather,
+    /// Reply sent (span ends).
+    Reply,
+    /// Request rejected at admission (span ends without an admit).
+    Reject,
+    /// Compiled-program cache hit at launch.
+    CacheHit,
+    /// Compiled-program cache miss at launch.
+    CacheMiss,
+    /// Modeled cycles a staging transfer waited on a contended link.
+    LinkWait,
+}
+
+impl Phase {
+    /// Stable event name used in the exported trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Admit => "admit",
+            Phase::Queue => "queue",
+            Phase::Stage => "stage",
+            Phase::Stall => "stall",
+            Phase::Execute => "execute",
+            Phase::Gather => "gather",
+            Phase::Reply => "reply",
+            Phase::Reject => "reject",
+            Phase::CacheHit => "cache_hit",
+            Phase::CacheMiss => "cache_miss",
+            Phase::LinkWait => "link_wait",
+        }
+    }
+}
+
+/// One recorded phase event. Timestamps are nanoseconds since the
+/// owning [`TraceSink`]'s epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Request span id (admission ticket); 0 when the event is not tied
+    /// to a single request (cache attributions).
+    pub span: u64,
+    /// Which phase this event records.
+    pub phase: Phase,
+    /// Process id in the exported trace: the workload's registration.
+    pub pid: u32,
+    /// Thread id in the exported trace: lane / worker index.
+    pub tid: u32,
+    /// Event start, ns since the sink epoch.
+    pub start_ns: u64,
+    /// Event duration in ns (modeled phases map 1 cycle to 1 ns).
+    pub dur_ns: u64,
+    /// Phase-dependent magnitude: units, words, or cycles.
+    pub detail: u64,
+}
+
+/// A bounded event ring. Writers `try_lock` and never block; a full or
+/// contended ring counts the loss in `dropped`.
+#[derive(Debug)]
+pub struct TraceRing {
+    events: Mutex<Vec<TraceEvent>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    fn new(capacity: usize) -> Self {
+        Self {
+            events: Mutex::new(Vec::with_capacity(capacity.min(DEFAULT_RING_CAPACITY))),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event. Never blocks: a full ring or exporter-held lock
+    /// increments the drop counter instead. Earlier events are never
+    /// overwritten — the ring keeps the oldest `capacity` events so the
+    /// head of an overloaded trace stays intact.
+    pub fn record(&self, ev: TraceEvent) {
+        match self.events.try_lock() {
+            Ok(mut v) => {
+                if v.len() < self.capacity {
+                    v.push(ev);
+                } else {
+                    self.dropped.fetch_add(1, Relaxed);
+                }
+            }
+            Err(TryLockError::WouldBlock) | Err(TryLockError::Poisoned(_)) => {
+                self.dropped.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    /// Events dropped by this ring (overflow + writer contention).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Relaxed)
+    }
+
+    /// Snapshot the ring's events.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().map(|v| v.clone()).unwrap_or_default()
+    }
+}
+
+/// The per-deployment trace collector: owns the epoch clock, the ring
+/// registry, and the pid registry, and renders the Chrome-trace export.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    ring_capacity: usize,
+    rings: Mutex<Vec<Arc<TraceRing>>>,
+    processes: Mutex<Vec<String>>,
+}
+
+impl TraceSink {
+    /// A sink whose rings hold `ring_capacity` events each.
+    pub fn new(ring_capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            epoch: Instant::now(),
+            ring_capacity: ring_capacity.max(1),
+            rings: Mutex::new(Vec::new()),
+            processes: Mutex::new(vec!["coordinator".to_string()]),
+        })
+    }
+
+    /// Nanoseconds since the sink epoch — the clock every event uses.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Register a new bounded ring (one per writer: tenant or worker).
+    pub fn register_ring(&self) -> Arc<TraceRing> {
+        let ring = Arc::new(TraceRing::new(self.ring_capacity));
+        self.rings.lock().unwrap().push(ring.clone());
+        ring
+    }
+
+    /// Register a process (workload) name; returns its pid. Pid 0 is the
+    /// coordinator itself (cache attributions, rejections without a
+    /// tenant).
+    pub fn register_process(&self, name: &str) -> u32 {
+        let mut procs = self.processes.lock().unwrap();
+        if let Some(i) = procs.iter().position(|p| p == name) {
+            return i as u32;
+        }
+        procs.push(name.to_string());
+        (procs.len() - 1) as u32
+    }
+
+    /// Total events dropped across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.rings.lock().unwrap().iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Snapshot all recorded events, ordered by start time.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let rings: Vec<Arc<TraceRing>> = self.rings.lock().unwrap().clone();
+        let mut evs: Vec<TraceEvent> = rings.iter().flat_map(|r| r.events()).collect();
+        evs.sort_by_key(|e| (e.start_ns, e.span, e.phase));
+        evs
+    }
+
+    /// Complete request spans: for every span with an admit and at least
+    /// one reply, `(span, admit_start_ns, last_reply_end_ns)`.
+    pub fn request_spans(&self) -> Vec<(u64, u64, u64)> {
+        let evs = self.events();
+        let mut admits: BTreeMap<u64, &TraceEvent> = BTreeMap::new();
+        let mut reply_end: BTreeMap<u64, u64> = BTreeMap::new();
+        for e in &evs {
+            match e.phase {
+                Phase::Admit => {
+                    admits.entry(e.span).or_insert(e);
+                }
+                Phase::Reply => {
+                    let end = e.start_ns.saturating_add(e.dur_ns);
+                    let slot = reply_end.entry(e.span).or_insert(end);
+                    *slot = (*slot).max(end);
+                }
+                _ => {}
+            }
+        }
+        admits
+            .iter()
+            .filter_map(|(span, admit)| {
+                reply_end
+                    .get(span)
+                    .map(|&end| (*span, admit.start_ns, end.max(admit.start_ns)))
+            })
+            .collect()
+    }
+
+    /// Render the full Chrome-trace JSON document: process metadata,
+    /// synthesized `request` spans (admit→reply wall time), every phase
+    /// event, and the drop counter.
+    pub fn to_chrome_json(&self) -> String {
+        let evs = self.events();
+        let mut out: Vec<String> = Vec::with_capacity(evs.len() + 8);
+        let procs: Vec<String> = self.processes.lock().unwrap().clone();
+        for (pid, name) in procs.iter().enumerate() {
+            out.push(chrome::process_name_event(pid as u32, name));
+        }
+        let mut admit_meta: BTreeMap<u64, (u32, u32)> = BTreeMap::new();
+        for e in &evs {
+            if e.phase == Phase::Admit {
+                admit_meta.entry(e.span).or_insert((e.pid, e.tid));
+            }
+        }
+        for (span, start, end) in self.request_spans() {
+            let (pid, tid) = admit_meta.get(&span).copied().unwrap_or((0, 0));
+            out.push(chrome::complete_event(
+                "request",
+                pid,
+                tid,
+                start,
+                end - start,
+                &[("span", span)],
+            ));
+        }
+        for e in &evs {
+            out.push(chrome::complete_event(
+                e.phase.name(),
+                e.pid,
+                e.tid,
+                e.start_ns,
+                e.dur_ns,
+                &[("span", e.span), ("detail", e.detail)],
+            ));
+        }
+        out.push(chrome::counter_event(
+            "trace_drops",
+            0,
+            self.now_ns(),
+            "dropped",
+            self.dropped(),
+        ));
+        chrome::document(&out)
+    }
+}
+
+/// A tenant's handle into the sink: its pid plus a dedicated ring for
+/// events written outside the pool workers (admit/reject on the submit
+/// path, gather/reply at scatter-gather completion, link-wait at route
+/// time). Cloned into each workload at launch; `None` everywhere means
+/// tracing is off.
+#[derive(Clone, Debug)]
+pub struct TenantTrace {
+    sink: Arc<TraceSink>,
+    ring: Arc<TraceRing>,
+    pid: u32,
+}
+
+impl TenantTrace {
+    /// Register a tenant named `name` (usually the workload key) on
+    /// `sink`.
+    pub fn register(sink: &Arc<TraceSink>, name: &str) -> Self {
+        Self {
+            sink: sink.clone(),
+            ring: sink.register_ring(),
+            pid: sink.register_process(name),
+        }
+    }
+
+    /// The sink this tenant reports into.
+    pub fn sink(&self) -> &Arc<TraceSink> {
+        &self.sink
+    }
+
+    /// The tenant's exported pid.
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// Nanoseconds since the sink epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.sink.now_ns()
+    }
+
+    /// Record a phase event on the tenant ring.
+    pub fn event(&self, phase: Phase, span: u64, tid: u32, start_ns: u64, dur_ns: u64, detail: u64) {
+        self.ring.record(TraceEvent {
+            span,
+            phase,
+            pid: self.pid,
+            tid,
+            start_ns,
+            dur_ns,
+            detail,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(span: u64, phase: Phase, start: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            span,
+            phase,
+            pid: 1,
+            tid: 0,
+            start_ns: start,
+            dur_ns: dur,
+            detail: 0,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_counts_drops_and_keeps_earlier_events() {
+        let ring = TraceRing::new(2);
+        ring.record(ev(1, Phase::Admit, 10, 0));
+        ring.record(ev(2, Phase::Admit, 20, 0));
+        ring.record(ev(3, Phase::Admit, 30, 0));
+        ring.record(ev(4, Phase::Admit, 40, 0));
+        assert_eq!(ring.dropped(), 2);
+        let kept = ring.events();
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0], ev(1, Phase::Admit, 10, 0));
+        assert_eq!(kept[1], ev(2, Phase::Admit, 20, 0));
+    }
+
+    #[test]
+    fn request_spans_pair_admit_with_last_reply() {
+        let sink = TraceSink::new(64);
+        let t = TenantTrace::register(&sink, "w");
+        t.event(Phase::Admit, 7, 0, 100, 0, 0);
+        t.event(Phase::Reply, 7, 0, 500, 50, 0);
+        t.event(Phase::Reply, 7, 1, 400, 10, 0);
+        t.event(Phase::Admit, 8, 0, 200, 0, 0); // no reply: incomplete
+        t.event(Phase::Reject, 9, 0, 300, 0, 0); // rejected: no span
+        let spans = sink.request_spans();
+        assert_eq!(spans, vec![(7, 100, 550)]);
+    }
+
+    #[test]
+    fn chrome_export_contains_request_span_and_drop_counter() {
+        let sink = TraceSink::new(64);
+        let t = TenantTrace::register(&sink, "multiply N=16");
+        t.event(Phase::Admit, 3, 0, 1000, 0, 4);
+        t.event(Phase::Execute, 3, 2, 2000, 5000, 4);
+        t.event(Phase::Reply, 3, 0, 7000, 0, 4);
+        let json = sink.to_chrome_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.contains("\"name\":\"request\""));
+        assert!(json.contains("\"name\":\"multiply N=16\""));
+        assert!(json.contains("\"name\":\"trace_drops\""));
+        // admit at 1000ns, last reply ends 7000ns -> 6 us span.
+        assert!(json.contains("\"name\":\"request\",\"ph\":\"X\",\"ts\":1,\"dur\":6,"));
+    }
+
+    #[test]
+    fn register_process_dedupes_names() {
+        let sink = TraceSink::new(4);
+        let a = sink.register_process("matvec N=8 n=2");
+        let b = sink.register_process("matvec N=8 n=2");
+        let c = sink.register_process("multiply N=16");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -31,7 +31,7 @@
 use super::ir::{Circuit, Wire};
 use super::list::schedule_chain;
 use super::place::place_chain;
-use super::stats::ScheduleStats;
+use super::stats::{ProgramTimeline, ScheduleStats, ScheduleTimeline, TimelineSlot};
 use crate::isa::{Col, GateOp, GateSet, PartitionMap, Program, ProgramBuilder};
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -141,6 +141,12 @@ pub struct CompiledChain {
     /// compares every wire of every program in lockstep), at the cost of
     /// a few bytes per gate retained on the compiled artifact.
     wire_cols: HashMap<Wire, Col>,
+    /// The per-cycle × per-partition occupancy grid (partitioned mode
+    /// only; `None` for the serial oracle and cache-rehydrated chains).
+    /// One slot per scheduled gate — retained so `schedule-stats
+    /// --timeline` can render the profile without re-running the
+    /// scheduler.
+    timeline: Option<ScheduleTimeline>,
 }
 
 impl CompiledChain {
@@ -168,6 +174,13 @@ impl CompiledChain {
     /// `programs == 1`; the aggregate is their fold).
     pub fn per_program_stats(&self) -> &[ScheduleStats] {
         &self.per_program
+    }
+
+    /// The cycle-level occupancy grid, when this chain was compiled
+    /// through the partitioned backend (the serial oracle and
+    /// cache-rehydrated chains carry none).
+    pub fn timeline(&self) -> Option<&ScheduleTimeline> {
+        self.timeline.as_ref()
     }
 
     /// Physical column of `wire`: operand wires map to themselves, every
@@ -221,6 +234,7 @@ impl CompiledChain {
             operand_width,
             serial_const_wires: Vec::new(),
             wire_cols: HashMap::new(),
+            timeline: None,
         }
     }
 }
@@ -350,6 +364,7 @@ fn lower_serial(
         operand_width: region.width(),
         serial_const_wires,
         wire_cols: HashMap::new(),
+        timeline: None,
     })
 }
 
@@ -414,6 +429,8 @@ fn lower_partitioned(
     let all_one_cells: Vec<Col> = (0..work_lanes).map(one_col).collect();
     let all_zero_cells: Vec<Col> = (0..work_lanes).map(zero_col).collect();
     let mut per_program = Vec::with_capacity(circuits.len());
+    let mut timeline =
+        ScheduleTimeline { work_lanes, programs: Vec::with_capacity(circuits.len()) };
     for (placed, sched) in placement.circuits.iter().zip(&schedules) {
         let mut b = ProgramBuilder::new(
             format!("{}-sched", placed.name),
@@ -424,10 +441,17 @@ fn lower_partitioned(
         ones.extend_from_slice(&all_one_cells);
         b.init(true, ones);
         b.init(false, all_zero_cells.clone());
+        let mut tl_cycles: Vec<Vec<TimelineSlot>> = Vec::with_capacity(sched.cycles.len());
         for cycle in &sched.cycles {
+            let mut tl_slots = Vec::with_capacity(cycle.len());
             for &i in cycle {
                 let p = &placed.ops[i];
                 let lane = p.lane - operand_lanes;
+                tl_slots.push(TimelineSlot {
+                    lane,
+                    gate: p.op.gate.to_string(),
+                    is_copy: p.is_copy,
+                });
                 let mut inputs: [Col; 3] = [0; 3];
                 for (k, &w) in p.op.inputs[..p.op.gate.arity()].iter().enumerate() {
                     inputs[k] = if placement.const_zeros.contains(&w) {
@@ -447,7 +471,14 @@ fn lower_partitioned(
                 ));
             }
             b.commit();
+            tl_cycles.push(tl_slots);
         }
+        timeline.programs.push(ProgramTimeline {
+            name: placed.name.clone(),
+            // The two leading init cycles (outputs/ones, then zeros).
+            init_cycles: 2,
+            cycles: tl_cycles,
+        });
         let gates = placed.ops.len() as u64;
         let copies = placed.ops.iter().filter(|p| p.is_copy).count() as u64;
         let ps = ScheduleStats {
@@ -483,6 +514,7 @@ fn lower_partitioned(
         operand_width: region.width(),
         serial_const_wires: Vec::new(),
         wire_cols,
+        timeline: Some(timeline),
     })
 }
 
@@ -560,6 +592,24 @@ mod tests {
         // Per-program stats fold to the aggregate.
         assert_eq!(par.per_program_stats().len(), 1);
         assert_eq!(par.per_program_stats()[0].cycles, par.stats().cycles);
+        // The timeline grid is retained in partitioned mode only, and it
+        // accounts for exactly the scheduled cycles and gates.
+        assert!(serial.timeline().is_none(), "serial oracle carries no grid");
+        let tl = par.timeline().expect("partitioned chains retain the grid");
+        assert_eq!(tl.total_cycles(), par.stats().cycles);
+        assert_eq!(tl.total_slots(), par.stats().gates);
+        let copies: u64 = tl
+            .programs
+            .iter()
+            .flat_map(|p| &p.cycles)
+            .flatten()
+            .filter(|s| s.is_copy)
+            .count() as u64;
+        assert_eq!(copies, par.stats().copy_gates);
+        for slot in tl.programs.iter().flat_map(|p| &p.cycles).flatten() {
+            assert!(slot.lane < tl.work_lanes, "lane {} out of range", slot.lane);
+        }
+        assert!(tl.to_chrome_json().contains("\"name\":\"add\""));
         for _ in 0..16 {
             let a = rng.bits(width as u32);
             let b = rng.bits(width as u32);

@@ -129,4 +129,4 @@ mod stats;
 
 pub use ir::{Circuit, Wire};
 pub use lower::{compile_chain, CompiledChain, OperandRegion, ScheduleMode, SchedulerConfig};
-pub use stats::ScheduleStats;
+pub use stats::{ProgramTimeline, ScheduleStats, ScheduleTimeline, TimelineSlot};

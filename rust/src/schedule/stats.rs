@@ -1,4 +1,4 @@
-//! Per-chain schedule statistics.
+//! Per-chain schedule statistics and the cycle-level timeline profile.
 
 /// What a compiled chain's schedule cost — the numbers the
 /// `schedule-stats` CLI subcommand prints, the Table III float bench
@@ -103,9 +103,154 @@ impl ScheduleStats {
     }
 }
 
+/// One occupied cell of the schedule timeline grid: work lane `lane`
+/// fires a `gate`-kind gate this cycle. `is_copy` separates inserted
+/// §III-A copy-tree gates (operand localization) from compute proper.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineSlot {
+    /// Work-lane (compute partition) index, 0-based.
+    pub lane: usize,
+    /// Gate kind, e.g. `"NOR2"` / `"MIN3"`.
+    pub gate: String,
+    /// True for an inserted cross-partition copy gate.
+    pub is_copy: bool,
+}
+
+/// The cycle-level occupancy of one program of a compiled chain.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProgramTimeline {
+    /// Program (circuit) name.
+    pub name: String,
+    /// Leading initialization cycles (every lane busy re-initializing
+    /// outputs and constants before any gate fires).
+    pub init_cycles: u64,
+    /// Compute cycles in schedule order: `cycles[c]` holds the lanes
+    /// occupied on cycle `c` (after init). An absent lane is idle — a
+    /// drain bubble the viewer renders as a gap.
+    pub cycles: Vec<Vec<TimelineSlot>>,
+}
+
+/// The per-cycle × per-partition occupancy grid of a partitioned
+/// compiled chain — what `schedule-stats --timeline` exports. Retained
+/// by [`compile_chain`](super::compile_chain) in
+/// [`Partitioned`](super::ScheduleMode::Partitioned) mode only; the
+/// serial oracle (one gate per cycle, one lane) and cache-rehydrated
+/// chains carry no grid.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScheduleTimeline {
+    /// Compute partitions (work lanes) of the shared geometry.
+    pub work_lanes: usize,
+    /// Programs in chain order.
+    pub programs: Vec<ProgramTimeline>,
+}
+
+impl ScheduleTimeline {
+    /// Total cycles across the chain (init + compute of every program).
+    pub fn total_cycles(&self) -> u64 {
+        self.programs.iter().map(|p| p.init_cycles + p.cycles.len() as u64).sum()
+    }
+
+    /// Occupied slots across the chain (== scheduled gates).
+    pub fn total_slots(&self) -> u64 {
+        self.programs.iter().flat_map(|p| &p.cycles).map(|c| c.len() as u64).sum()
+    }
+
+    /// Render the grid as Chrome-trace JSON on the shared
+    /// [`chrome`](crate::obs::chrome) writer: **1 cycle = 1 µs**,
+    /// `pid` = program index (named after the circuit), `tid` = work
+    /// lane. Programs run back-to-back, so each one's events start at
+    /// the chain's running cycle offset; init cycles span every lane as
+    /// one `init` event, and each gate is a 1 µs event named by its
+    /// kind (`copy GATE` for copy-tree gates) with the absolute cycle
+    /// and copy flag in `args`.
+    pub fn to_chrome_json(&self) -> String {
+        use crate::obs::chrome;
+        let mut out: Vec<String> =
+            Vec::with_capacity(self.total_slots() as usize + 2 * self.programs.len());
+        let mut t0: u64 = 0;
+        for (pid, prog) in self.programs.iter().enumerate() {
+            let pid = pid as u32;
+            out.push(chrome::process_name_event(pid, &prog.name));
+            for lane in 0..self.work_lanes {
+                out.push(chrome::thread_name_event(pid, lane as u32, &format!("lane {lane}")));
+            }
+            if prog.init_cycles > 0 {
+                for lane in 0..self.work_lanes {
+                    out.push(chrome::complete_event(
+                        "init",
+                        pid,
+                        lane as u32,
+                        t0 * 1000,
+                        prog.init_cycles * 1000,
+                        &[("cycle", t0)],
+                    ));
+                }
+            }
+            for (c, slots) in prog.cycles.iter().enumerate() {
+                let cycle = t0 + prog.init_cycles + c as u64;
+                for s in slots {
+                    let name = if s.is_copy {
+                        format!("copy {}", s.gate)
+                    } else {
+                        s.gate.clone()
+                    };
+                    out.push(chrome::complete_event(
+                        &name,
+                        pid,
+                        s.lane as u32,
+                        cycle * 1000,
+                        1000,
+                        &[("cycle", cycle), ("copy", u64::from(s.is_copy))],
+                    ));
+                }
+            }
+            t0 += prog.init_cycles + prog.cycles.len() as u64;
+        }
+        chrome::document(&out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn timeline_counts_and_chrome_export() {
+        let tl = ScheduleTimeline {
+            work_lanes: 2,
+            programs: vec![ProgramTimeline {
+                name: "exp-align".into(),
+                init_cycles: 2,
+                cycles: vec![
+                    vec![
+                        TimelineSlot { lane: 0, gate: "NOR2".into(), is_copy: false },
+                        TimelineSlot { lane: 1, gate: "NOT".into(), is_copy: true },
+                    ],
+                    vec![TimelineSlot { lane: 0, gate: "MIN3".into(), is_copy: false }],
+                ],
+            }],
+        };
+        assert_eq!(tl.total_cycles(), 4);
+        assert_eq!(tl.total_slots(), 3);
+        let json = tl.to_chrome_json();
+        assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
+        assert!(json.contains("\"name\":\"exp-align\""), "{json}");
+        assert!(json.contains("\"name\":\"lane 1\""), "{json}");
+        // Init spans cycles 0-1 (2 us) on both lanes.
+        assert!(json.contains("\"name\":\"init\",\"ph\":\"X\",\"ts\":0,\"dur\":2,"), "{json}");
+        // The copy-tree gate is named and flagged.
+        assert!(json.contains("\"name\":\"copy NOT\""), "{json}");
+        assert!(json.contains("\"copy\":1"), "{json}");
+        // Compute cycle 3 (after 2 init cycles) lands at ts = 3 us.
+        assert!(json.contains("\"name\":\"MIN3\",\"ph\":\"X\",\"ts\":3,\"dur\":1,"), "{json}");
+    }
+
+    #[test]
+    fn empty_timeline_renders_an_empty_document() {
+        let tl = ScheduleTimeline::default();
+        assert_eq!(tl.total_cycles(), 0);
+        assert_eq!(tl.to_chrome_json(), "[\n]\n");
+    }
 
     #[test]
     fn derived_ratios() {

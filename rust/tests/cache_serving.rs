@@ -97,6 +97,20 @@ fn serve_all(coord: &Coordinator) -> (u64, Vec<u64>, Vec<Vec<u64>>, Vec<u64>) {
     (product, mv, mm, fv)
 }
 
+/// Pull the first integer value of `"key":` out of a `Metrics::to_json`
+/// document (a hand-rolled reader for a hand-rolled emitter; the keys
+/// asserted on here appear exactly once).
+fn json_u64(json: &str, key: &str) -> u64 {
+    let needle = format!("\"{key}\":");
+    let at = json.find(&needle).unwrap_or_else(|| panic!("`{key}` missing in:\n{json}"));
+    json[at + needle.len()..]
+        .chars()
+        .take_while(char::is_ascii_digit)
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("`{key}` is not an integer in:\n{json}"))
+}
+
 /// The launch-time cache counters copied into the coordinator metrics.
 fn cache_counters(coord: &Coordinator) -> (u64, u64, u64, u64) {
     let m = coord.metrics();
@@ -121,11 +135,12 @@ fn warm_launch_serves_bit_identically_for_all_tenants() {
 
     let warm = flat_cached(&dir);
     assert_eq!(cache_counters(&warm), (4, 0, 0, 0), "warm: every engine served from disk");
-    let snapshot = warm.metrics().snapshot();
-    assert!(
-        snapshot.contains("cache[program] hits=4"),
-        "cache counters must render in the snapshot:\n{snapshot}"
-    );
+    // The machine-readable mirror must carry the same counters (the
+    // `cache` object's keys appear exactly once in the document).
+    let json = warm.metrics().to_json();
+    assert_eq!(json_u64(&json, "hits"), 4, "cache hits must render in Metrics::to_json");
+    assert_eq!(json_u64(&json, "misses"), 0, "warm launch must record no misses");
+    assert_eq!(json_u64(&json, "stores"), 0, "warm launch must store nothing");
     let warm_out = serve_all(&warm);
     warm.shutdown();
 

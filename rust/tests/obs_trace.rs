@@ -1,0 +1,237 @@
+//! Request-tracing integration: span lifecycle completeness (every
+//! admitted request closes with a reply, rejections record reject
+//! events), bounded-ring overflow semantics end-to-end (drops are
+//! counted, earlier events and the export survive intact), and the
+//! off-by-default contract (a trace-less launch serves results and
+//! modeled counters identical to a traced one).
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use multpim::coordinator::{
+    Coordinator, DeploymentSpec, EngineConfig, MatVecDeployment, MultiplyDeployment, WorkloadKey,
+};
+use multpim::device::DeviceConfig;
+use multpim::fixedpoint::inner_product_mod;
+use multpim::obs::{Phase, TraceSink};
+use multpim::util::SplitMix64;
+use multpim::Error;
+
+const N: u32 = 8;
+const ELEMS: u32 = 4;
+const SHARD_ROWS: usize = 4;
+
+fn deployments() -> (MultiplyDeployment, MatVecDeployment) {
+    (
+        MultiplyDeployment {
+            n_bits: N,
+            rows: 16,
+            max_wait: Duration::from_millis(1),
+            config: EngineConfig::MultPim,
+            spec: DeploymentSpec::new(1),
+        },
+        MatVecDeployment {
+            n_bits: N,
+            n_elems: ELEMS,
+            shard_rows: SHARD_ROWS,
+            spec: DeploymentSpec::new(1),
+        },
+    )
+}
+
+/// Serve a fixed mixed burst; returns (products, matvec outputs).
+fn serve_burst(coord: &Coordinator) -> (Vec<u64>, Vec<Vec<u64>>) {
+    let mut rng = SplitMix64::new(0x0B5);
+    let mut products = Vec::new();
+    for _ in 0..8 {
+        let (a, b) = (rng.bits(N), rng.bits(N));
+        products.push(coord.multiply(N, a, b).unwrap());
+        assert_eq!(*products.last().unwrap(), a * b);
+    }
+    let mut outs = Vec::new();
+    for _ in 0..3 {
+        // 3 tiles per request (SHARD_ROWS * 2 + 2 rows).
+        let rows: Vec<Vec<u64>> = (0..SHARD_ROWS * 2 + 2)
+            .map(|_| (0..ELEMS).map(|_| rng.bits(N)).collect())
+            .collect();
+        let x: Vec<u64> = (0..ELEMS).map(|_| rng.bits(N)).collect();
+        let out = coord.matvec(N, rows.clone(), x.clone()).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], inner_product_mod(N, row, &x), "row {r}");
+        }
+        outs.push(out);
+    }
+    // A degenerate empty request is answered at admission and must still
+    // close its span.
+    let empty = coord.matvec(N, Vec::new(), vec![0; ELEMS as usize]).unwrap();
+    assert!(empty.is_empty());
+    (products, outs)
+}
+
+/// Every admitted request — including the degenerate empty one — has a
+/// complete admit → reply span, and the Chrome export renders them.
+#[test]
+fn every_admitted_request_closes_its_span() {
+    let sink = TraceSink::new(1 << 12);
+    let (mul, mv) = deployments();
+    let coord = Coordinator::launch_on(
+        DeviceConfig::flat(2).with_trace(sink.clone()),
+        &[mul],
+        &[mv],
+        &[],
+        &[],
+    )
+    .unwrap();
+    serve_burst(&coord);
+    coord.shutdown(); // joins the workers: all rings are final
+
+    assert_eq!(sink.dropped(), 0, "this burst must not overflow the rings");
+    let events = sink.events();
+    let admits: Vec<u64> =
+        events.iter().filter(|e| e.phase == Phase::Admit).map(|e| e.span).collect();
+    assert_eq!(admits.len(), 8 + 3 + 1, "one admit per submitted request");
+    let spans = sink.request_spans();
+    assert_eq!(spans.len(), admits.len(), "every admit must pair with a reply");
+    for &(span, start, end) in &spans {
+        assert!(admits.contains(&span), "span {span} admitted");
+        assert!(end >= start, "span {span} must not end before it starts");
+    }
+    // Tickets are the span ids: 12 consecutive values.
+    let (lo, hi) = (admits.iter().min().unwrap(), admits.iter().max().unwrap());
+    assert_eq!(hi - lo + 1, admits.len() as u64, "span ids are consecutive tickets");
+    // The matvec requests exercised the full pipeline.
+    for phase in [Phase::Queue, Phase::Execute, Phase::Gather, Phase::Reply] {
+        assert!(
+            events.iter().any(|e| e.phase == phase),
+            "burst must record at least one {} event",
+            phase.name()
+        );
+    }
+    let json = sink.to_chrome_json();
+    assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
+    assert!(json.contains("\"name\":\"request\""), "synthesized request spans render");
+    assert!(json.contains("\"name\":\"trace_drops\""), "drop counter renders");
+    assert!(json.matches("\"name\":\"request\"").count() >= 12, "one per complete span");
+}
+
+/// An over-limit submission is rejected with the typed overload error
+/// AND records a reject event; admitted traffic still closes cleanly.
+#[test]
+fn rejections_record_reject_events() {
+    let sink = TraceSink::new(1 << 12);
+    let (mul, mut mv) = deployments();
+    mv.spec = DeploymentSpec::with_queue_limit(1, 1);
+    let coord = Coordinator::launch_on(
+        DeviceConfig::flat(2).with_trace(sink.clone()),
+        &[mul],
+        &[mv],
+        &[],
+        &[],
+    )
+    .unwrap();
+
+    // 3 planned tiles against a 1-tile backlog limit: rejected before
+    // anything is queued.
+    let rows: Vec<Vec<u64>> = vec![vec![1; ELEMS as usize]; SHARD_ROWS * 3];
+    let x = vec![1u64; ELEMS as usize];
+    match coord.matvec(N, rows, x.clone()) {
+        Err(Error::Overloaded { key, retry_after_tiles }) => {
+            assert_eq!(key, WorkloadKey::MatVec { n_bits: N, n_elems: ELEMS });
+            assert!(retry_after_tiles > 0);
+        }
+        other => panic!("expected overload rejection, got {other:?}"),
+    }
+    // A small in-limit request still serves and closes its span.
+    let ok_rows: Vec<Vec<u64>> = vec![vec![2; ELEMS as usize]; 2];
+    let out = coord.matvec(N, ok_rows.clone(), x.clone()).unwrap();
+    assert_eq!(out[0], inner_product_mod(N, &ok_rows[0], &x));
+
+    let wl = coord.metrics().workload(WorkloadKey::MatVec { n_bits: N, n_elems: ELEMS }).unwrap();
+    assert_eq!(wl.rejected_requests.load(Ordering::Relaxed), 1);
+    coord.shutdown();
+
+    let events = sink.events();
+    let rejects: Vec<_> = events.iter().filter(|e| e.phase == Phase::Reject).collect();
+    assert_eq!(rejects.len(), 1, "one reject event for the overloaded submission");
+    assert_eq!(rejects[0].detail, (SHARD_ROWS * 3) as u64, "reject carries the unit count");
+    // The rejected span never admitted, so it forms no request span.
+    let spans = sink.request_spans();
+    assert_eq!(spans.len(), 1, "only the admitted request completes");
+    assert!(spans.iter().all(|&(s, _, _)| s != rejects[0].span));
+}
+
+/// Tiny rings end-to-end: a burst far past capacity counts drops,
+/// keeps each ring's earliest events intact, and still renders a valid
+/// export with the drop counter.
+#[test]
+fn ring_overflow_counts_drops_and_keeps_the_head() {
+    let sink = TraceSink::new(4); // 4 events per ring
+    let (mul, mv) = deployments();
+    let coord = Coordinator::launch_on(
+        DeviceConfig::flat(2).with_trace(sink.clone()),
+        &[mul],
+        &[mv],
+        &[],
+        &[],
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(0xF00D);
+    let x: Vec<u64> = (0..ELEMS).map(|_| rng.bits(N)).collect();
+    for _ in 0..16 {
+        let rows: Vec<Vec<u64>> = (0..SHARD_ROWS * 4)
+            .map(|_| (0..ELEMS).map(|_| rng.bits(N)).collect())
+            .collect();
+        let out = coord.matvec(N, rows.clone(), x.clone()).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(out[r], inner_product_mod(N, row, &x), "row {r}");
+        }
+    }
+    coord.shutdown();
+
+    assert!(sink.dropped() > 0, "a 16x16-tile burst must overflow 4-event rings");
+    let events = sink.events();
+    assert!(!events.is_empty(), "the head of the trace survives");
+    // The tenant ring's first admit is among the survivors (rings never
+    // overwrite: the oldest events are kept).
+    let first_admit =
+        events.iter().filter(|e| e.phase == Phase::Admit).map(|e| e.span).min().unwrap();
+    let all_spans: Vec<u64> = events.iter().map(|e| e.span).filter(|&s| s != 0).collect();
+    assert!(all_spans.iter().all(|&s| s >= first_admit), "no span precedes the kept head");
+    let json = sink.to_chrome_json();
+    assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
+    assert!(json.contains("\"name\":\"trace_drops\""));
+    assert!(!json.contains(",\n,"), "no malformed rows under overflow");
+}
+
+/// The off-by-default contract: with no sink attached, the same burst
+/// serves identical results and identical modeled counters (tracing can
+/// never feed back into the model or the ticket sequence).
+#[test]
+fn trace_off_serves_counter_identically_to_trace_on() {
+    let mut fingerprints = Vec::new();
+    for traced in [false, true] {
+        let device = DeviceConfig::flat(2);
+        let device =
+            if traced { device.with_trace(TraceSink::new(1 << 12)) } else { device };
+        let (mul, mv) = deployments();
+        let coord = Coordinator::launch_on(device, &[mul], &[mv], &[], &[]).unwrap();
+        let outputs = serve_burst(&coord);
+        assert_eq!(coord.trace().is_some(), traced, "tracing attaches only when asked");
+        let wl = coord
+            .metrics()
+            .workload(WorkloadKey::MatVec { n_bits: N, n_elems: ELEMS })
+            .unwrap();
+        let counters = [
+            wl.requests.load(Ordering::Relaxed),
+            wl.tiles.load(Ordering::Relaxed),
+            wl.units.load(Ordering::Relaxed),
+            wl.sim_cycles.load(Ordering::Relaxed),
+            wl.staged_words.load(Ordering::Relaxed),
+            wl.stage_cycles.load(Ordering::Relaxed),
+            wl.stall_cycles.load(Ordering::Relaxed),
+        ];
+        fingerprints.push((outputs, counters));
+        coord.shutdown();
+    }
+    assert_eq!(fingerprints[0], fingerprints[1], "tracing must be invisible to the model");
+}

@@ -65,6 +65,24 @@ fn random_matrix(rng: &mut SplitMix64, rows: usize, cols: usize) -> Vec<Vec<u64>
     (0..rows).map(|_| (0..cols).map(|_| rng.bits(N_BITS)).collect()).collect()
 }
 
+/// Pull the integer value of `"field":` inside workload `key`'s object in
+/// a `Metrics::to_json` document (every workload object carries every
+/// field, so the first match after the section header is the right one).
+fn wl_json_u64(json: &str, key: &WorkloadKey, field: &str) -> u64 {
+    let section = format!("\"{key}\":{{");
+    let at =
+        json.find(&section).unwrap_or_else(|| panic!("workload `{key}` missing in:\n{json}"));
+    let body = &json[at + section.len()..];
+    let needle = format!("\"{field}\":");
+    let f = body.find(&needle).unwrap_or_else(|| panic!("`{field}` missing for `{key}`"));
+    body[f + needle.len()..]
+        .chars()
+        .take_while(char::is_ascii_digit)
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("`{field}` is not an integer for `{key}`"))
+}
+
 /// C[r][j] by direct widening-mul composition under the 2N-bit wrap.
 fn reference(a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<Vec<u64>> {
     a.iter()
@@ -402,6 +420,12 @@ fn served_floatvec_bit_exact_at_tile_boundaries() {
     assert_eq!(wl.tiles.load(Ordering::Relaxed), total_tiles);
     let shard_units: u64 = wl.shard_stats().iter().map(|(_, st)| st.units).sum();
     assert_eq!(shard_units, total_rows);
+    // The machine-readable mirror reports the same accounting.
+    let json = coord.metrics().to_json();
+    let key = WorkloadKey::FloatVec { exp_bits: FV_EXP, man_bits: FV_MAN, n_elems: FV_ELEMS };
+    assert_eq!(wl_json_u64(&json, &key, "requests"), 5);
+    assert_eq!(wl_json_u64(&json, &key, "units"), total_rows);
+    assert_eq!(wl_json_u64(&json, &key, "tiles"), total_tiles);
     coord.shutdown();
 }
 
@@ -524,6 +548,29 @@ fn mixed_traffic_metrics_account_exactly() {
     assert_eq!(mm.admitted_units.load(Ordering::Relaxed), mm_units);
     assert_eq!(mm.units.load(Ordering::Relaxed), mm_units);
     assert_eq!(mm.tiles.load(Ordering::Relaxed), mm_tiles);
+
+    // The machine-readable mirror agrees with every labeled counter and
+    // carries the histogram-backed latency quantiles.
+    let json = m.to_json();
+    for (key, wl) in &workloads {
+        for (field, counter) in [
+            ("requests", &wl.requests),
+            ("units", &wl.units),
+            ("tiles", &wl.tiles),
+            ("sim_cycles", &wl.sim_cycles),
+            ("staged_words", &wl.staged_words),
+        ] {
+            assert_eq!(
+                wl_json_u64(&json, key, field),
+                counter.load(Ordering::Relaxed),
+                "{key}: to_json `{field}` mirrors the atomic counter"
+            );
+        }
+        assert!(
+            wl_json_u64(&json, key, "tile_p99_ns") >= wl_json_u64(&json, key, "tile_p50_ns"),
+            "{key}: latency quantiles must be ordered"
+        );
+    }
 
     // Per-shard occupancy splits each workload's totals exactly.
     for (key, wl) in &workloads {
